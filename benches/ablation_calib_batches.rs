@@ -1,0 +1,51 @@
+//! Discussion ablation (a): calibration batch count.  The paper reports
+//! that reducing CoLA's calibration from 100 to 5 batches recovers ~1%
+//! Mcc at M3 (fewer batches -> smaller observed maxima -> tighter scales).
+//!
+//! Env: ZQH_TASK (default cola), ZQH_MODE (default m3).
+
+use zqhero::bench::Table;
+use zqhero::calib::truncate_history;
+use zqhero::evalharness as eh;
+use zqhero::model::manifest::Manifest;
+use zqhero::runtime::Runtime;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("ablation_calib_batches: run `make artifacts` first");
+        return;
+    }
+    let tname = std::env::var("ZQH_TASK").unwrap_or_else(|_| "cola".into());
+    let mode = std::env::var("ZQH_MODE").unwrap_or_else(|_| "m3".into());
+    let mut rt = Runtime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let task = rt.manifest.task(&tname).unwrap().clone();
+    let hist = eh::ensure_calibration(&mut rt, &task, 100, false).unwrap();
+
+    println!("\nAblation (a): calibration batches on {tname} / {mode}");
+    println!("(paper: CoLA-M3 gains ~1% Mcc going from 100 -> 5 batches)\n");
+    let mut t = Table::new(&["calib batches", "metrics"]);
+    let mut results = Vec::new();
+    for batches in [1usize, 5, 20, 50, 100] {
+        let h = truncate_history(&hist, batches);
+        let ckpt = eh::quantize_task(&mut rt, &task, &mode, &h, 100.0,
+                                     Some(&format!("ab{batches}")))
+            .unwrap();
+        rt.upload_checkpoint(&task.name, &mode, &ckpt).unwrap();
+        let mut vals = std::collections::BTreeMap::new();
+        for split in task.splits.keys().filter(|s| *s != "train") {
+            for (k, v) in eh::eval_split(&mut rt, &task, &mode, split).unwrap() {
+                vals.insert(if split == "dev" { k } else { format!("{k}_mm") }, v);
+            }
+        }
+        let pretty: Vec<String> =
+            vals.iter().map(|(k, v)| format!("{k}={:.2}", v * 100.0)).collect();
+        results.push((batches, vals));
+        t.row(vec![batches.to_string(), pretty.join("  ")]);
+    }
+    t.print();
+
+    let first = |i: usize| *results[i].1.values().next().unwrap();
+    let (m5, m100) = (first(1), first(4));
+    println!("\n5-batch vs 100-batch delta: {:+.2} pts", (m5 - m100) * 100.0);
+}

@@ -1,0 +1,43 @@
+//! Discussion ablation (b): min/max truncation of calibration scales.
+//! The paper notes a tuned clipping threshold can boost accuracy; this
+//! bench sweeps the percentile clip applied to the per-batch stat history.
+//!
+//! Env: ZQH_TASK (default cola), ZQH_MODE (default m3).
+
+use zqhero::bench::Table;
+use zqhero::evalharness as eh;
+use zqhero::model::manifest::Manifest;
+use zqhero::runtime::Runtime;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("ablation_clipping: run `make artifacts` first");
+        return;
+    }
+    let tname = std::env::var("ZQH_TASK").unwrap_or_else(|_| "cola".into());
+    let mode = std::env::var("ZQH_MODE").unwrap_or_else(|_| "m3".into());
+    let mut rt = Runtime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let task = rt.manifest.task(&tname).unwrap().clone();
+    let hist = eh::ensure_calibration(&mut rt, &task, 100, false).unwrap();
+
+    println!("\nAblation (b): scale clipping percentile on {tname} / {mode}\n");
+    let mut t = Table::new(&["clip pct", "metrics"]);
+    for pct in [100.0f64, 99.99, 99.9, 99.0, 95.0, 90.0] {
+        let ckpt = eh::quantize_task(&mut rt, &task, &mode, &hist, pct,
+                                     Some(&format!("clip{pct}")))
+            .unwrap();
+        rt.upload_checkpoint(&task.name, &mode, &ckpt).unwrap();
+        let mut vals = std::collections::BTreeMap::new();
+        for split in task.splits.keys().filter(|s| *s != "train") {
+            for (k, v) in eh::eval_split(&mut rt, &task, &mode, split).unwrap() {
+                vals.insert(if split == "dev" { k } else { format!("{k}_mm") }, v);
+            }
+        }
+        let pretty: Vec<String> =
+            vals.iter().map(|(k, v)| format!("{k}={:.2}", v * 100.0)).collect();
+        t.row(vec![format!("{pct}"), pretty.join("  ")]);
+    }
+    t.print();
+    println!("\n(pct=100 is the paper's untuned running-max calibration)");
+}

@@ -1,0 +1,118 @@
+//! End-to-end serving benchmark (the paper's missing "system performance
+//! measurement"): closed-loop load through the coordinator, per mode, with
+//! and without dynamic batching — latency percentiles + throughput.
+//!
+//! Env: ZQH_REQUESTS (default 128), ZQH_TASK (default sst2).
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use zqhero::bench::Table;
+use zqhero::coordinator::{Coordinator, ServerConfig};
+use zqhero::data::Split;
+use zqhero::evalharness as eh;
+use zqhero::model::manifest::Manifest;
+use zqhero::runtime::Runtime;
+
+fn run_load(
+    coord: &Coordinator,
+    task: &str,
+    mode: &str,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    requests: usize,
+    concurrency: usize,
+) -> (f64, Vec<f64>) {
+    let t0 = std::time::Instant::now();
+    let mut inflight = VecDeque::new();
+    let (mut submitted, mut done) = (0usize, 0usize);
+    let mut lat = Vec::with_capacity(requests);
+    while done < requests {
+        while submitted < requests && inflight.len() < concurrency {
+            let (ids, tys) = rows[submitted % rows.len()].clone();
+            match coord.submit(task, mode, ids, tys) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    submitted += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        let rx = inflight.pop_front().expect("inflight");
+        let resp = rx.recv().expect("resp");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        lat.push(resp.timing.total_us as f64);
+        done += 1;
+    }
+    (t0.elapsed().as_secs_f64(), lat)
+}
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("e2e_serving: run `make artifacts` first");
+        return;
+    }
+    let requests: usize =
+        std::env::var("ZQH_REQUESTS").ok().and_then(|s| s.parse().ok()).unwrap_or(128);
+    let tname = std::env::var("ZQH_TASK").unwrap_or_else(|_| "sst2".into());
+    let modes = ["fp", "m1", "m2", "m3"];
+
+    // prep quantized checkpoints
+    {
+        let mut rt = Runtime::new(Manifest::load(&dir).unwrap()).unwrap();
+        let task = rt.manifest.task(&tname).unwrap().clone();
+        let hist = eh::ensure_calibration(&mut rt, &task, 100, false).unwrap();
+        for m in modes.iter().filter(|m| **m != "fp") {
+            let rel = zqhero::coordinator::checkpoint_rel(&task, m);
+            if !rt.manifest.path(&rel).exists() {
+                eh::quantize_task(&mut rt, &task, m, &hist, 100.0, None).unwrap();
+            }
+        }
+    }
+    let man = Manifest::load(&dir).unwrap();
+    let task = man.task(&tname).unwrap();
+    let split = Split::load(&man, task, "dev").unwrap();
+    let rows: Vec<(Vec<i32>, Vec<i32>)> = (0..split.len().min(256))
+        .map(|i| {
+            let (a, b) = split.row(i);
+            (a.to_vec(), b.to_vec())
+        })
+        .collect();
+
+    println!("\ne2e serving on {tname}: {requests} requests per config\n");
+    let mut t = Table::new(&[
+        "mode", "batching", "thr req/s", "p50 ms", "p95 ms", "p99 ms", "mean batch",
+    ]);
+    for (label, max_batch, conc) in [("dynamic b<=16", 16usize, 48usize), ("none (b=1)", 1, 4)] {
+        let pairs: Vec<(String, String)> =
+            modes.iter().map(|m| (tname.clone(), m.to_string())).collect();
+        let coord = Coordinator::start(
+            dir.clone(),
+            &pairs,
+            ServerConfig {
+                max_batch,
+                max_wait: Duration::from_millis(4),
+                queue_cap: 512,
+                completion_workers: 4,
+            },
+        )
+        .expect("coordinator");
+        for m in modes {
+            let (wall, mut lat) = run_load(&coord, &tname, m, &rows, requests, conc);
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pick = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize] / 1e3;
+            let snap = coord.recorder.snapshot();
+            t.row(vec![
+                m.to_string(),
+                label.into(),
+                format!("{:.1}", requests as f64 / wall),
+                format!("{:.1}", pick(0.50)),
+                format!("{:.1}", pick(0.95)),
+                format!("{:.1}", pick(0.99)),
+                format!("{:.2}", snap[m].mean_batch_size()),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(CPU PJRT testbed; A100 projections in hw_perf_model)");
+}

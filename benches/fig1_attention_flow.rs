@@ -1,0 +1,31 @@
+//! Figure 1: the attention-module dataflow with quantization annotations,
+//! regenerated as a precision-flow trace per mode and verified against the
+//! lowered HLO (int8 GeMM census).
+
+use zqhero::bench::Table;
+use zqhero::model::manifest::Manifest;
+use zqhero::traceflow;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("fig1_attention_flow: run `make artifacts` first");
+        return;
+    }
+    let man = Manifest::load(&dir).expect("manifest");
+    for mode in &man.mode_order {
+        let sw = man.modes[mode].switches;
+        println!("\nFigure 1 — attention module, {} (switches {})",
+                 mode, sw.tag());
+        let mut t = Table::new(&["tensor", "producer", "scheme", "dtype"]);
+        for r in traceflow::attention_flow(&sw) {
+            t.row(vec![r.tensor.into(), r.producer.into(), r.scheme, r.dtype]);
+        }
+        t.print();
+        let bucket = *man.buckets.last().unwrap();
+        let (want, got) = traceflow::verify_mode_artifact(&man, mode, bucket).unwrap();
+        println!("HLO census b{bucket}: {got} int8 GeMMs (expected {want}) {}",
+                 if want == got { "OK" } else { "MISMATCH" });
+        assert_eq!(want, got);
+    }
+}

@@ -1,0 +1,32 @@
+//! Figure 2: the MLP-module dataflow with quantization annotations
+//! (X_1 unquantized, GELU output and X_2 FWQ — paper §2.2.3).
+
+use zqhero::bench::Table;
+use zqhero::model::manifest::Manifest;
+use zqhero::traceflow;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("fig2_mlp_flow: run `make artifacts` first");
+        return;
+    }
+    let man = Manifest::load(&dir).expect("manifest");
+    for mode in &man.mode_order {
+        let sw = man.modes[mode].switches;
+        println!("\nFigure 2 — MLP module, {} (switches {})", mode, sw.tag());
+        let mut t = Table::new(&["tensor", "producer", "scheme", "dtype"]);
+        for r in traceflow::mlp_flow(&sw) {
+            t.row(vec![r.tensor.into(), r.producer.into(), r.scheme, r.dtype]);
+        }
+        t.print();
+    }
+    // M3 invariants from the paper text
+    let m3 = man.modes["m3"].switches;
+    let rows = traceflow::mlp_flow(&m3);
+    let f = |t: &str| rows.iter().find(|r| r.tensor == t).unwrap().clone();
+    assert_eq!(f("X_1").dtype, "fp", "X_1 must stay high precision");
+    assert_eq!(f("A").scheme, "FWQ");
+    assert_eq!(f("X_2").scheme, "FWQ");
+    println!("\nM3 MLP flow matches paper §2.2.3 (X_1 fp; A, X_2 FWQ)");
+}

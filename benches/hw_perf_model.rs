@@ -1,0 +1,68 @@
+//! Hardware claims (paper §1-2): analytic A100 roofline over the exact
+//! dataflow — per-op memory/compute costs, the 2x LN data-volume claim,
+//! and projected mode speedups at BERT_base scale.
+
+use zqhero::bench::Table;
+use zqhero::model::manifest::Switches;
+use zqhero::perfmodel::{self, OpClass};
+
+fn sw(tag: &str) -> Switches {
+    let b: Vec<bool> = tag.chars().map(|c| c == '1').collect();
+    Switches {
+        embedding: b[0], qkv: b[1], attn: b[2],
+        attn_output: b[3], fc1: b[4], fc2: b[5],
+    }
+}
+
+fn main() {
+    let cfg = perfmodel::bert_base();
+    let (batch, seq) = (16usize, 128usize);
+    println!("A100 analytic model — BERT_base, batch={batch}, seq={seq}");
+    println!("HBM {:.0} GB/s, FP16 {:.0} TFLOPs, INT8 {:.0} TOPs, floor {:.0}us\n",
+             perfmodel::HBM_BW_GBS, perfmodel::FP16_TFLOPS,
+             perfmodel::INT8_TOPS, perfmodel::KERNEL_FLOOR_US);
+
+    // per-op table for FP vs M3
+    let n = batch * seq;
+    let fp_ops = perfmodel::layer_ops(&cfg, &sw("000000"), n, seq);
+    let m3_ops = perfmodel::layer_ops(&cfg, &sw("111111"), n, seq);
+    let mut t = Table::new(&[
+        "op", "class", "FP16 MB", "M3 MB", "vol ratio", "FP16 us", "M3 us", "speedup",
+    ]);
+    for (a, b) in fp_ops.iter().zip(&m3_ops) {
+        t.row(vec![
+            a.name.clone(),
+            match a.class { OpClass::MemoryBound => "mem", OpClass::ComputeBound => "compute" }
+                .into(),
+            format!("{:.2}", a.bytes / 1e6),
+            format!("{:.2}", b.bytes / 1e6),
+            format!("{:.2}x", a.bytes / b.bytes),
+            format!("{:.1}", a.time_us()),
+            format!("{:.1}", b.time_us()),
+            format!("{:.2}x", a.time_us() / b.time_us()),
+        ]);
+    }
+    t.print();
+
+    // LN data-volume claim (paper §2.2.1: ~2x)
+    let fp_ln = fp_ops.iter().find(|o| o.name == "ln1").unwrap().bytes;
+    let m3_ln = m3_ops.iter().find(|o| o.name == "ln1").unwrap().bytes;
+    println!("\nLN^quant data-volume reduction: {:.2}x (paper claims ~2x)", fp_ln / m3_ln);
+
+    // mode totals
+    println!("\nprojected end-to-end (embedding + {} layers):", cfg.layers);
+    let mut mt = Table::new(&["mode", "proj us", "speedup vs FP16"]);
+    let fp_t = perfmodel::model_time_us(&cfg, &sw("000000"), batch, seq);
+    for (label, tag) in [("FP16", "000000"), ("HERO-M1", "110010"),
+                         ("HERO-M2", "111110"), ("HERO-M3", "111111")] {
+        let t_us = perfmodel::model_time_us(&cfg, &sw(tag), batch, seq);
+        mt.row(vec![label.into(), format!("{t_us:.0}"), format!("{:.2}x", fp_t / t_us)]);
+    }
+    mt.print();
+
+    // the TWQ placement claim: unfused quantize penalizes the GeMM
+    let fused = perfmodel::model_time_us(&cfg, &sw("111110"), batch, seq);
+    let unfused = perfmodel::model_time_us(&cfg, &sw("110110"), batch, seq);
+    println!("\nTWQ placement (paper §2.1): M2 fused {fused:.0}us vs attn-off/attn-out-on \
+              unfused {unfused:.0}us");
+}

@@ -1,0 +1,109 @@
+//! Per-operator micro-benchmarks: FP vs quantization-aware kernels from
+//! `artifacts/micro/`, executed on CPU PJRT with device-resident inputs.
+//! CPU timings validate plumbing + relative shapes; the A100 projection
+//! for the same ops lives in hw_perf_model.
+
+use zqhero::bench::{bench_seconds, fmt_us, Table};
+use zqhero::model::manifest::Manifest;
+use zqhero::model::Tensor;
+use zqhero::prop::Rng;
+use zqhero::runtime::Runtime;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("micro_kernels: run `make artifacts` first");
+        return;
+    }
+    let man = Manifest::load(&dir).unwrap();
+    let (d, f) = (man.model.hidden, man.model.ffn);
+    let (n, bh, s, dh) = (2048usize, 16 * man.model.heads, man.seq, man.model.head_dim());
+    let micro = man.micro.clone();
+    let mut rt = Runtime::new(man).unwrap();
+    let mut rng = Rng::new(42);
+
+    let f32t = |rng: &mut Rng, shape: Vec<usize>, lo: f32, hi: f32| {
+        let numel = shape.iter().product();
+        Tensor::f32(shape, rng.vec_f32(numel, lo, hi))
+    };
+    let i8t = |rng: &mut Rng, shape: Vec<usize>| {
+        let numel = shape.iter().product();
+        Tensor::i8(shape, rng.vec_i8(numel))
+    };
+    let scale = |rng: &mut Rng, shape: Vec<usize>| {
+        let numel: usize = shape.iter().product();
+        Tensor::f32(shape, (0..numel).map(|_| rng.log_uniform(1e-3, 1e-1) as f32).collect())
+    };
+
+    // inputs per micro artifact, matching aot.py lower_micro
+    let inputs: Vec<(&str, Vec<Tensor>)> = vec![
+        ("ln_fp", vec![f32t(&mut rng, vec![n, d], -3.0, 3.0),
+                       f32t(&mut rng, vec![d], 0.5, 1.5),
+                       f32t(&mut rng, vec![d], -0.5, 0.5)]),
+        ("ln_quant", vec![i8t(&mut rng, vec![n, d]), scale(&mut rng, vec![n, 1]),
+                          i8t(&mut rng, vec![n, d]), scale(&mut rng, vec![1, d]),
+                          f32t(&mut rng, vec![d], 0.5, 1.5),
+                          f32t(&mut rng, vec![d], -0.5, 0.5)]),
+        ("gemm_fp", vec![f32t(&mut rng, vec![n, d], -2.0, 2.0),
+                         f32t(&mut rng, vec![d, d], -0.5, 0.5),
+                         f32t(&mut rng, vec![d], -0.5, 0.5)]),
+        ("gemm_int8", vec![i8t(&mut rng, vec![n, d]), i8t(&mut rng, vec![d, d]),
+                           scale(&mut rng, vec![n, 1]), scale(&mut rng, vec![1, d]),
+                           f32t(&mut rng, vec![1, d], -1.0, 1.0)]),
+        ("gemm_fp_ffn", vec![f32t(&mut rng, vec![n, d], -2.0, 2.0),
+                             f32t(&mut rng, vec![d, f], -0.5, 0.5),
+                             f32t(&mut rng, vec![f], -0.5, 0.5)]),
+        ("gemm_int8_ffn", vec![i8t(&mut rng, vec![n, d]), i8t(&mut rng, vec![d, f]),
+                               scale(&mut rng, vec![n, 1]), scale(&mut rng, vec![1, f]),
+                               f32t(&mut rng, vec![1, f], -1.0, 1.0)]),
+        ("gelu_fp", vec![f32t(&mut rng, vec![n, f], -4.0, 4.0)]),
+        ("gelu_quant", vec![f32t(&mut rng, vec![n, f], -4.0, 4.0),
+                            scale(&mut rng, vec![1, f])]),
+        ("attn_fp", vec![f32t(&mut rng, vec![bh, s, dh], -1.0, 1.0),
+                         f32t(&mut rng, vec![bh, s, dh], -1.0, 1.0),
+                         f32t(&mut rng, vec![bh, s, dh], -1.0, 1.0),
+                         Tensor::f32(vec![bh, s], vec![1.0; bh * s])]),
+        ("attn_int8", vec![i8t(&mut rng, vec![bh, s, dh]), i8t(&mut rng, vec![bh, s, dh]),
+                           i8t(&mut rng, vec![bh, s, dh]),
+                           Tensor::f32(vec![bh, s], vec![1.0; bh * s]),
+                           Tensor::f32(vec![1, 1], vec![1.6e-5]),
+                           Tensor::f32(vec![1, 1], vec![1.0 / 255.0]),
+                           scale(&mut rng, vec![bh, 1, dh])]),
+    ];
+
+    println!("\nmicro-kernel latency (CPU PJRT, device-resident inputs):\n");
+    let mut table = Table::new(&["kernel", "p50", "mean", "p95"]);
+    let mut times: std::collections::BTreeMap<String, f64> = Default::default();
+    for (name, tensors) in &inputs {
+        let Some(rel) = micro.get(*name).cloned() else {
+            eprintln!("  (skipping {name}: not in manifest)");
+            continue;
+        };
+        let bufs = rt.upload_all(tensors).unwrap();
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        // warm once (compiles)
+        rt.run_raw_buffers(&rel, &refs).unwrap();
+        let stats = bench_seconds(2, 0.5, || {
+            rt.run_raw_buffers(&rel, &refs).unwrap();
+        });
+        times.insert(name.to_string(), stats.p50_us);
+        table.row(vec![
+            name.to_string(),
+            fmt_us(stats.p50_us),
+            fmt_us(stats.mean_us),
+            fmt_us(stats.p95_us),
+        ]);
+    }
+    table.print();
+
+    println!("\nFP vs quant pairs (CPU ratios; interpret-mode INT8 is not a");
+    println!("TPU/GPU perf proxy — see DESIGN.md §7 — but plumbing + shape hold):");
+    for (a, b) in [("ln_fp", "ln_quant"), ("gemm_fp", "gemm_int8"),
+                   ("gemm_fp_ffn", "gemm_int8_ffn"), ("gelu_fp", "gelu_quant"),
+                   ("attn_fp", "attn_int8")] {
+        if let (Some(x), Some(y)) = (times.get(a), times.get(b)) {
+            println!("  {a:14} {:>9}  vs  {b:14} {:>9}  ratio {:.2}x",
+                     fmt_us(*x), fmt_us(*y), x / y);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Substrate micro-benchmarks: the from-scratch components on the serving
+//! path (batcher, JSON codec, quantization engine, metrics, container IO)
+//! — none of these may rival PJRT execution time (ms-scale).
+
+use std::time::{Duration, Instant};
+
+use zqhero::bench::{bench, fmt_us, Table};
+use zqhero::coordinator::Batcher;
+use zqhero::json;
+use zqhero::metrics;
+use zqhero::model::{Container, Tensor};
+use zqhero::prop::Rng;
+use zqhero::quant::quantize_weight_colwise;
+use zqhero::quant::fold::fold_fwq_in_fwq_out;
+
+fn main() {
+    let mut t = Table::new(&["substrate", "op", "p50", "p95", "note"]);
+    let mut rng = Rng::new(7);
+
+    // batcher: push+flush throughput
+    {
+        let stats = bench(3, 200, || {
+            let mut b = Batcher::new(16, Duration::from_millis(4));
+            let t0 = Instant::now();
+            let mut flushed = 0;
+            for i in 0..1024u64 {
+                let (tx, rx) = std::sync::mpsc::channel();
+                std::mem::forget(rx);
+                let req = zqhero::coordinator::Request {
+                    id: i,
+                    task: ["a", "b", "c"][(i % 3) as usize].into(),
+                    mode: ["fp", "m3"][(i % 2) as usize].into(),
+                    ids: Vec::new(),
+                    type_ids: Vec::new(),
+                    enqueued: t0,
+                    reply: tx,
+                };
+                if b.push(req).is_some() {
+                    flushed += 1;
+                }
+            }
+            assert!(flushed > 0);
+        });
+        t.row(vec!["batcher".into(), "1024 push (6 groups)".into(),
+                   fmt_us(stats.p50_us), fmt_us(stats.p95_us),
+                   format!("{:.0} ns/req", stats.p50_us * 1e3 / 1024.0)]);
+    }
+
+    // json: parse + serialize a response-sized document
+    {
+        let logits: Vec<f32> = rng.vec_f32(3, -5.0, 5.0);
+        let doc = json::obj(vec![
+            ("ok", json::Value::Bool(true)),
+            ("logits", json::arr_f32(&logits)),
+            ("queue_us", json::num(123.0)),
+            ("exec_us", json::num(45678.0)),
+        ]);
+        let text = json::to_string(&doc);
+        let stats = bench(10, 2000, || {
+            let v = json::parse(&text).unwrap();
+            assert!(v.get("ok").is_some());
+        });
+        t.row(vec!["json".into(), "parse response".into(),
+                   fmt_us(stats.p50_us), fmt_us(stats.p95_us), format!("{} B", text.len())]);
+        let stats = bench(10, 2000, || {
+            let s = json::to_string(&doc);
+            assert!(!s.is_empty());
+        });
+        t.row(vec!["json".into(), "serialize response".into(),
+                   fmt_us(stats.p50_us), fmt_us(stats.p95_us), String::new()]);
+    }
+
+    // quant engine: fold + colwise quantize an ffn-sized weight
+    {
+        let (k, m) = (512, 128);
+        let w = rng.vec_f32(k * m, -0.5, 0.5);
+        let b = rng.vec_f32(m, -0.1, 0.1);
+        let s_in: Vec<f32> = (0..k).map(|_| rng.log_uniform(1e-3, 1e-1) as f32).collect();
+        let s_out: Vec<f32> = (0..m).map(|_| rng.log_uniform(1e-3, 1e-1) as f32).collect();
+        let stats = bench(3, 100, || {
+            let (wt, _bt) = fold_fwq_in_fwq_out(&w, &b, &s_in, &s_out, k, m);
+            let (q, _s) = quantize_weight_colwise(&wt, k, m);
+            assert_eq!(q.len(), k * m);
+        });
+        t.row(vec!["quant".into(), "fold+quantize fc2 [512x128]".into(),
+                   fmt_us(stats.p50_us), fmt_us(stats.p95_us), String::new()]);
+    }
+
+    // metrics: full dev-split scoring
+    {
+        let preds = rng.vec_i32(1000, 0, 1);
+        let labels = rng.vec_i32(1000, 0, 1);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.uniform(0.0, 5.0)).collect();
+        let ys: Vec<f64> = (0..1000).map(|_| rng.uniform(0.0, 5.0)).collect();
+        let stats = bench(3, 500, || {
+            let _ = metrics::matthews_corrcoef(&preds, &labels);
+            let _ = metrics::f1_binary(&preds, &labels);
+            let _ = metrics::spearman(&xs, &ys);
+        });
+        t.row(vec!["metrics".into(), "mcc+f1+spearman @1k".into(),
+                   fmt_us(stats.p50_us), fmt_us(stats.p95_us), String::new()]);
+    }
+
+    // container: round-trip a full quantized checkpoint in memory
+    {
+        let mut c = Container::new();
+        for i in 0..60 {
+            c.push(&format!("w{i}"), Tensor::i8(vec![128, 128], rng.vec_i8(128 * 128)));
+            c.push(&format!("s{i}"), Tensor::f32(vec![128], rng.vec_f32(128, 0.0, 1.0)));
+        }
+        let stats = bench(3, 50, || {
+            let bytes = c.write_bytes();
+            let r = Container::read_bytes(&bytes).unwrap();
+            assert_eq!(r.len(), c.len());
+        });
+        t.row(vec!["container".into(), "roundtrip ~1MB ckpt".into(),
+                   fmt_us(stats.p50_us), fmt_us(stats.p95_us), String::new()]);
+    }
+
+    println!("\nsubstrate micro-benchmarks (all must be << PJRT ms-scale):\n");
+    t.print();
+}

@@ -1,0 +1,56 @@
+//! Table 1: quantization-mode matrix — printed from the manifest and
+//! *verified* against the lowered artifacts (each mode's HLO must contain
+//! exactly the int8 GeMMs its Table-1 row claims).
+
+use zqhero::bench::Table;
+use zqhero::model::manifest::Manifest;
+use zqhero::traceflow;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("table1_modes: run `make artifacts` first");
+        return;
+    }
+    let man = Manifest::load(&dir).expect("manifest");
+
+    println!("\nTable 1: quantization modes of ZeroQuant-HERO");
+    println!("(check = INT8, x = FP16/BF16 — FP32 on this CPU testbed)\n");
+    let mut t = Table::new(&[
+        "Mode", "Embedding", "QKV GeMM", "Attn.", "Attn. Output", "FC1", "FC2",
+    ]);
+    let mark = |b: bool| if b { "v".to_string() } else { "x".to_string() };
+    for name in &man.mode_order {
+        if name == "fp" {
+            continue;
+        }
+        let r = man.modes[name].switches.row();
+        t.row(vec![
+            format!("ZeroQuant-HERO-{}", name.to_uppercase()),
+            mark(r[0]), mark(r[1]), mark(r[2]), mark(r[3]), mark(r[4]), mark(r[5]),
+        ]);
+    }
+    t.print();
+
+    println!("\nartifact verification (int8 GeMM count per lowered HLO):");
+    let mut v = Table::new(&["mode", "bucket", "expected", "found", "ok"]);
+    let mut all_ok = true;
+    for name in &man.mode_order {
+        for bucket in &man.buckets {
+            let (expected, found) =
+                traceflow::verify_mode_artifact(&man, name, *bucket).expect("verify");
+            let ok = expected == found;
+            all_ok &= ok;
+            v.row(vec![
+                name.clone(),
+                format!("b{bucket}"),
+                expected.to_string(),
+                found.to_string(),
+                if ok { "OK" } else { "MISMATCH" }.to_string(),
+            ]);
+        }
+    }
+    v.print();
+    assert!(all_ok, "artifacts do not match Table 1 claims");
+    println!("\nall artifacts match their Table 1 rows");
+}

@@ -1,0 +1,63 @@
+//! Table 2: SynGLUE validation accuracy per quantization mode — the
+//! paper's headline evaluation, regenerated end-to-end in rust (calibrate
+//! -> fold+quantize -> INT8 inference via PJRT -> metrics).
+//!
+//! Env: ZQH_CALIB (default 100), ZQH_TASKS (csv), ZQH_MODES (csv).
+
+use zqhero::bench::Table;
+use zqhero::evalharness as eh;
+use zqhero::model::manifest::Manifest;
+use zqhero::runtime::Runtime;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("table2_accuracy: run `make artifacts` first");
+        return;
+    }
+    let calib: usize = std::env::var("ZQH_CALIB").ok().and_then(|s| s.parse().ok()).unwrap_or(100);
+    let man = Manifest::load(&dir).expect("manifest");
+    let tasks: Vec<String> = std::env::var("ZQH_TASKS")
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|_| man.task_order.clone());
+    let modes: Vec<String> = std::env::var("ZQH_MODES")
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|_| man.mode_order.clone());
+
+    let mut rt = Runtime::new(man).expect("runtime");
+    let t0 = std::time::Instant::now();
+    let results = eh::table2(&mut rt, &tasks, &modes, calib, 100.0, |mode, task| {
+        eprintln!("  [table2] {mode} / {task} ({:.0}s)", t0.elapsed().as_secs_f64());
+    })
+    .expect("table2");
+
+    println!("\nTable 2: ZeroQuant-HERO on SynGLUE (validation), calib={calib} batches x 16\n");
+    let mut headers = vec!["Mode".to_string()];
+    headers.extend(tasks.iter().map(|t| eh::paper_header(t).to_string()));
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(&hrefs);
+    for mode in &modes {
+        let mut row = vec![eh::mode_label(mode)];
+        for t in &tasks {
+            row.push(eh::paper_cell(t, &results[mode][t]));
+        }
+        table.row(row);
+    }
+    table.print();
+
+    // shape checks vs the paper: quantized modes track FP except the
+    // sensitive task at the deepest mode (CoLA-like Mcc drop at M3).
+    if modes.iter().any(|m| m == "fp") && modes.iter().any(|m| m == "m1") {
+        let mut worst: (String, f64) = (String::new(), 0.0);
+        for t in &tasks {
+            let fp_first = results["fp"][t].values().next().copied().unwrap_or(0.0);
+            let m1_first = results["m1"][t].values().next().copied().unwrap_or(0.0);
+            let drop = fp_first - m1_first;
+            if drop > worst.1 {
+                worst = (t.clone(), drop);
+            }
+        }
+        println!("\nlargest FP->M1 drop: {} ({:.2} pts)", worst.0, worst.1 * 100.0);
+    }
+    println!("total: {:.0}s", t0.elapsed().as_secs_f64());
+}

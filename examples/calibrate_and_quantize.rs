@@ -1,0 +1,105 @@
+//! The full PTQ pipeline, step by step, with introspection: calibrate ->
+//! derive scales -> fold -> column-quantize -> validate -> measure the
+//! quantization error per parameter and the logit divergence vs FP.
+//!
+//!     cargo run --release --example calibrate_and_quantize [task] [mode]
+
+use anyhow::Result;
+use zqhero::bench::Table;
+use zqhero::data::{batches, Split};
+use zqhero::evalharness as eh;
+use zqhero::model::manifest::Manifest;
+use zqhero::model::{Container, DType};
+use zqhero::quant::transform::derive_layer_scales;
+use zqhero::quant::AggStats;
+use zqhero::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tname = args.first().map(String::as_str).unwrap_or("mrpc");
+    let mode = args.get(1).map(String::as_str).unwrap_or("m3");
+
+    let dir = std::path::PathBuf::from("artifacts");
+    let mut rt = Runtime::new(Manifest::load(&dir)?)?;
+    let task = rt.manifest.task(tname)?.clone();
+
+    // -- 1. calibration (paper §3: forward passes only)
+    println!("== 1. calibration: 100 batches x {} ==", rt.manifest.calib.batch);
+    let t0 = std::time::Instant::now();
+    let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
+    println!("   {} stats x {} batches ({:.1}s)", hist.len(), hist[0].1.len(),
+             t0.elapsed().as_secs_f64());
+
+    // -- 2. scale derivation
+    let stats = AggStats::from_history(&hist, &rt.manifest.model, 100.0)?;
+    println!("\n== 2. derived scales (layer 0) ==");
+    let sc = derive_layer_scales(&stats, 0);
+    println!("   SQ:  S_q={:.5}  S_k={:.5}  S_v={:.5}  s_p={:.6}",
+             sc.sq_q, sc.sq_k, sc.sq_v, sc.sp);
+    let rng = |v: &[f32]| (v.iter().cloned().fold(f32::MAX, f32::min),
+                           v.iter().cloned().fold(f32::MIN, f32::max));
+    for (name, v) in [("S_attn", &sc.s_attn), ("S_o", &sc.s_o),
+                      ("S_a(gelu)", &sc.s_a), ("S_x2", &sc.s_x2)] {
+        let (lo, hi) = rng(v);
+        println!("   FWQ: {name:10} [{lo:.5}, {hi:.5}] over {} features", v.len());
+    }
+
+    // -- 3. fold + quantize (eqs. 20-23, 32)
+    println!("\n== 3. fold + column-quantize -> {mode} ==");
+    let ckpt = eh::quantize_task(&mut rt, &task, mode, &hist, 100.0, None)?;
+    let fp = Container::read_file(&rt.manifest.path(&task.checkpoint))?
+        .reordered(&rt.manifest.mode("fp")?.params)?;
+    let (mut int8_bytes, mut f32_bytes) = (0usize, 0usize);
+    for (_, t) in &ckpt.entries {
+        match t.dtype() {
+            DType::I8 => int8_bytes += t.nbytes(),
+            _ => f32_bytes += t.nbytes(),
+        }
+    }
+    let fp_bytes: usize = fp.entries.iter().map(|(_, t)| t.nbytes()).sum();
+    println!("   fp32 checkpoint: {:.2} MB", fp_bytes as f64 / 1e6);
+    println!("   {mode} checkpoint: {:.2} MB ({:.2} MB int8 + {:.2} MB f32/scales)",
+             (int8_bytes + f32_bytes) as f64 / 1e6,
+             int8_bytes as f64 / 1e6, f32_bytes as f64 / 1e6);
+
+    // per-weight reconstruction error (weights that were NOT folded)
+    let mut t = Table::new(&["param", "absmax", "scale range", "max |err|/step"]);
+    for name in ["L0.fc1.wq", "L0.attn.q.wq"] {
+        if let (Some(q), Some(s)) = (ckpt.get(name), ckpt.get(&name.replace(".wq", ".ws"))) {
+            let sv = s.as_f32()?;
+            let (lo, hi) = rng(sv);
+            t.row(vec![
+                name.into(),
+                format!("{:.3}", sv.iter().zip(q.as_i8()?.chunks(sv.len()))
+                        .map(|(s, _)| s * 127.0).fold(0f32, f32::max)),
+                format!("[{lo:.5},{hi:.5}]"),
+                "<= 0.5 by construction".into(),
+            ]);
+        }
+    }
+    t.print();
+
+    // -- 4. end-to-end divergence vs FP on a dev batch
+    println!("\n== 4. logit divergence vs FP (first dev batch) ==");
+    rt.upload_checkpoint(&task.name, "fp", &fp)?;
+    rt.upload_checkpoint(&task.name, mode, &ckpt)?;
+    let split = Split::load(&rt.manifest, &task, "dev")?;
+    let b = &batches(&split, 16)[0];
+    let lf = rt.infer(&task.name, "fp", 16, &b.ids, &b.type_ids, &b.mask)?;
+    let lq = rt.infer(&task.name, mode, 16, &b.ids, &b.type_ids, &b.mask)?;
+    let (lf, lq) = (lf.as_f32()?, lq.as_f32()?);
+    let nl = rt.manifest.model.num_labels;
+    let mut max_abs = 0f32;
+    let mut agree = 0;
+    for row in 0..b.real {
+        let (a, b_) = (&lf[row * nl..(row + 1) * nl], &lq[row * nl..(row + 1) * nl]);
+        for (x, y) in a.iter().zip(b_) {
+            max_abs = max_abs.max((x - y).abs());
+        }
+        let am = |v: &[f32]| if v[0] >= v[1] { 0 } else { 1 };
+        agree += usize::from(am(a) == am(b_));
+    }
+    println!("   max |logit diff| = {max_abs:.4};  prediction agreement {agree}/{}", b.real);
+    println!("\nquantized checkpoint written to checkpoints/{}/hero-{mode}.bin", task.name);
+    Ok(())
+}

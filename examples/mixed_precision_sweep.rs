@@ -1,0 +1,82 @@
+//! Mixed-precision trade-off sweep (paper §2.3): for one task, sweep the
+//! quantization level (FP/M1/M2/M3) x calibration budget x clipping
+//! percentile and print the accuracy / projected-A100-latency frontier.
+//!
+//!     cargo run --release --example mixed_precision_sweep [task]
+
+use anyhow::Result;
+use zqhero::bench::Table;
+use zqhero::calib::truncate_history;
+use zqhero::evalharness as eh;
+use zqhero::model::manifest::Manifest;
+use zqhero::perfmodel;
+use zqhero::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let tname = std::env::args().nth(1).unwrap_or_else(|| "cola".into());
+    let dir = std::path::PathBuf::from("artifacts");
+    let mut rt = Runtime::new(Manifest::load(&dir)?)?;
+    let task = rt.manifest.task(&tname)?.clone();
+    let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
+
+    let bert = perfmodel::bert_base();
+    let mode_switches: std::collections::BTreeMap<String, zqhero::model::Switches> =
+        rt.manifest.modes.iter().map(|(k, v)| (k.clone(), v.switches)).collect();
+    let proj = move |mode: &str| {
+        perfmodel::model_time_us(&bert, &mode_switches[mode], 16, 128)
+    };
+
+    fn fmt_metrics(vals: &std::collections::BTreeMap<String, f64>) -> String {
+        vals.iter()
+            .map(|(k, v)| format!("{k}={:.2}", v * 100.0))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    println!("== mixed-precision sweep on {tname} (paper §2.3) ==\n");
+    let mut t = Table::new(&[
+        "mode", "calib batches", "clip pct", "metrics", "proj A100 us (BERT_base b16)",
+        "proj speedup",
+    ]);
+    let fp_us = proj("fp");
+
+    // FP row
+    {
+        let vals = eh::eval_task(&mut rt, &task, "fp", 100, 100.0)?;
+        t.row(vec![
+            eh::mode_label("fp"),
+            "-".into(),
+            "-".into(),
+            fmt_metrics(&vals),
+            format!("{fp_us:.0}"),
+            "1.00x".into(),
+        ]);
+    }
+
+    for mode in ["m1", "m2", "m3"] {
+        for (batches, pct) in [(100usize, 100.0f64), (5, 100.0), (100, 99.9)] {
+            let h = truncate_history(&hist, batches);
+            let ckpt = eh::quantize_task(&mut rt, &task, mode, &h, pct,
+                                         Some(&format!("sweep{batches}p{pct}")))?;
+            rt.upload_checkpoint(&task.name, mode, &ckpt)?;
+            let mut vals = std::collections::BTreeMap::new();
+            for split in task.splits.keys().filter(|s| *s != "train") {
+                for (k, v) in eh::eval_split(&mut rt, &task, mode, split)? {
+                    vals.insert(if split == "dev" { k } else { format!("{k}_mm") }, v);
+                }
+            }
+            let us = proj(mode);
+            t.row(vec![
+                eh::mode_label(mode),
+                batches.to_string(),
+                format!("{pct}"),
+                fmt_metrics(&vals),
+                format!("{us:.0}"),
+                format!("{:.2}x", fp_us / us),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(accuracy: SynGLUE dev; latency: analytic A100 roofline, DESIGN.md §2)");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Quickstart: load the INT8 (M3) model for one task, run a single
+//! request end-to-end through the PJRT runtime, print the logits.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use zqhero::data::Split;
+use zqhero::evalharness as eh;
+use zqhero::model::manifest::Manifest;
+use zqhero::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    let man = Manifest::load(&dir)?;
+    let mut rt = Runtime::new(man)?;
+
+    let task = rt.manifest.task("sst2")?.clone();
+    println!("task: {} ({:?})", task.name, task.metrics);
+
+    // PTQ pipeline on demand: calibrate (paper: 100 batches x 16), fold
+    // scales into weights (eqs. 20-23, 32), column-quantize, upload.
+    println!("preparing ZeroQuant-HERO-M3 checkpoint...");
+    eh::ensure_checkpoint(&mut rt, &task, "m3", eh::DEFAULT_CALIB_BATCHES, 100.0)?;
+
+    // one dev example through the INT8 graph
+    let split = Split::load(&rt.manifest, &task, "dev")?;
+    let (ids, tys) = split.row(0);
+    let mask = Split::mask_row(ids);
+    rt.infer(&task.name, "m3", 1, ids, tys, &mask)?; // warm: compiles the HLO
+    let t0 = std::time::Instant::now();
+    let logits = rt.infer(&task.name, "m3", 1, ids, tys, &mask)?;
+    let us = t0.elapsed().as_micros();
+
+    let v = logits.as_f32()?;
+    let tokens: Vec<i32> = ids.iter().copied().filter(|t| *t != 0).collect();
+    println!("input ({} tokens): {:?}...", tokens.len(), &tokens[..8.min(tokens.len())]);
+    println!("logits: {:?}  ({} us, INT8 W8A8 end-to-end)", &v[..2], us);
+    println!("prediction: class {}", if v[0] >= v[1] { 0 } else { 1 });
+    Ok(())
+}

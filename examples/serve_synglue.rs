@@ -1,0 +1,159 @@
+//! END-TO-END DRIVER (DESIGN.md "System" experiment): serve batched
+//! SynGLUE requests through the full coordinator stack — admission ->
+//! dynamic batcher -> PJRT engine (INT8 artifacts) -> completion — and
+//! report latency percentiles, throughput, mean batch size AND online
+//! accuracy per precision mode.  This is the "end-to-end system
+//! performance measurement" the paper explicitly leaves as future work.
+//!
+//!     cargo run --release --example serve_synglue [requests-per-pair]
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use zqhero::bench::Table;
+use zqhero::coordinator::{Coordinator, ServerConfig};
+use zqhero::data::{Labels, Split};
+use zqhero::evalharness as eh;
+use zqhero::metrics;
+use zqhero::model::manifest::Manifest;
+use zqhero::runtime::Runtime;
+
+const TASKS: [&str; 3] = ["sst2", "mrpc", "cola"];
+const MODES: [&str; 3] = ["fp", "m1", "m3"];
+
+fn main() -> Result<()> {
+    let requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(192);
+    let dir = std::path::PathBuf::from("artifacts");
+
+    // ---- offline PTQ prep (calibrate + quantize once per task/mode)
+    {
+        let mut rt = Runtime::new(Manifest::load(&dir)?)?;
+        for t in TASKS {
+            let task = rt.manifest.task(t)?.clone();
+            for m in MODES {
+                if m != "fp" {
+                    let rel = zqhero::coordinator::checkpoint_rel(&task, m);
+                    if !rt.manifest.path(&rel).exists() {
+                        eprintln!("[prep] quantizing {t}/{m}...");
+                        let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
+                        eh::quantize_task(&mut rt, &task, m, &hist, 100.0, None)?;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- start the serving stack
+    let pairs: Vec<(String, String)> = TASKS
+        .iter()
+        .flat_map(|t| MODES.iter().map(move |m| (t.to_string(), m.to_string())))
+        .collect();
+    let config = ServerConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(4),
+        queue_cap: 512,
+        completion_workers: 4,
+    };
+    eprintln!("[serve] starting coordinator: {} (task,mode) pairs, max_batch={}, max_wait={:?}",
+              pairs.len(), config.max_batch, config.max_wait);
+    let coord = Coordinator::start(dir.clone(), &pairs, config)?;
+
+    // ---- load payloads + labels
+    let man = Manifest::load(&dir)?;
+    let mut table = Table::new(&[
+        "task", "mode", "reqs", "thr req/s", "p50 ms", "p95 ms", "metric", "value",
+    ]);
+    let mut per_mode_metric: Vec<(String, String, f64, f64)> = Vec::new();
+
+    for t in TASKS {
+        let task = man.task(t)?;
+        let split = Split::load(&man, task, "dev")?;
+        let n = requests.min(split.len());
+
+        for m in MODES {
+            // closed-loop: keep up to 48 requests in flight
+            let t0 = std::time::Instant::now();
+            let mut inflight: VecDeque<(usize, std::sync::mpsc::Receiver<_>)> = VecDeque::new();
+            let mut preds = vec![0i32; n];
+            let mut lat_us: Vec<f64> = Vec::with_capacity(n);
+            let mut submitted = 0;
+            let mut done = 0;
+            while done < n {
+                while submitted < n && inflight.len() < 48 {
+                    let (ids, tys) = split.row(submitted);
+                    match coord.submit(t, m, ids.to_vec(), tys.to_vec()) {
+                        Ok(rx) => {
+                            inflight.push_back((submitted, rx));
+                            submitted += 1;
+                        }
+                        Err(_) => break, // backpressure
+                    }
+                }
+                let (idx, rx) = inflight.pop_front().context("inflight empty")?;
+                let resp = rx.recv()?;
+                anyhow::ensure!(resp.error.is_none(), "{:?}", resp.error);
+                lat_us.push(resp.timing.total_us as f64);
+                let lg = &resp.logits;
+                preds[idx] = if task.classes == 0 {
+                    0
+                } else {
+                    let mut bi = 0;
+                    for c in 1..task.classes {
+                        if lg[c] > lg[bi] {
+                            bi = c;
+                        }
+                    }
+                    bi as i32
+                };
+                done += 1;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pick = |p: f64| lat_us[((lat_us.len() - 1) as f64 * p) as usize] / 1e3;
+
+            // online accuracy
+            let metric_name = &task.metrics[0];
+            let value = match &split.labels {
+                Labels::Class(ls) => {
+                    let ls = &ls[..n];
+                    metrics::compute(metric_name, &metrics::MetricInput::Class {
+                        preds: &preds,
+                        labels: ls,
+                    })
+                }
+                Labels::Score(_) => f64::NAN,
+            };
+            per_mode_metric.push((t.to_string(), m.to_string(), value, wall));
+            table.row(vec![
+                t.into(),
+                eh::mode_label(m),
+                n.to_string(),
+                format!("{:.1}", n as f64 / wall),
+                format!("{:.1}", pick(0.50)),
+                format!("{:.1}", pick(0.95)),
+                metric_name.clone(),
+                format!("{:.4}", value),
+            ]);
+        }
+    }
+
+    println!("\n== serve_synglue: end-to-end serving (batched, W8A8, no python) ==");
+    table.print();
+    println!("\n== coordinator internal metrics ==");
+    print!("{}", coord.recorder.render());
+
+    // accuracy sanity: quantized modes should track fp online accuracy
+    for t in TASKS {
+        let fp = per_mode_metric.iter().find(|(a, b, _, _)| a == t && b == "fp").unwrap().2;
+        for m in ["m1", "m3"] {
+            let q = per_mode_metric.iter().find(|(a, b, _, _)| a == t && b == m).unwrap().2;
+            anyhow::ensure!(
+                (fp - q).abs() < 0.25,
+                "{t}/{m}: online metric {q:.3} too far from fp {fp:.3}"
+            );
+        }
+    }
+    println!("\nOK: quantized serving accuracy tracks FP online.");
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""Build-time Python for the ZeroQuant-HERO reproduction.
+
+This package is compile-path only: it authors the Pallas kernels (L1) and
+the JAX encoder (L2), trains the SynGLUE task models, and AOT-lowers
+everything to HLO text consumed by the rust runtime (L3).  Nothing in here
+runs on the request path.
+"""

@@ -1,0 +1,361 @@
+"""AOT build driver: datasets -> trained checkpoints -> HLO-text artifacts.
+
+Runs once under ``make artifacts``; the rust binary is self-contained
+afterwards.  HLO *text* (not serialized HloModuleProto) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--fast] [--force] \
+        [--stage all|data|train|models|calib|micro|manifest]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .config import ModelConfig, MODES, QMAX  # noqa: E402
+from . import data as D  # noqa: E402
+from .container import write_container, read_container  # noqa: E402
+from .modeling import (  # noqa: E402
+    fp_param_specs, hero_param_specs, init_fp_params,
+    specs_to_struct, list_to_dict,
+    bert_forward, hero_forward, calibration_forward, STAT_NAMES, stat_shapes,
+)
+from . import train as T  # noqa: E402
+
+BUCKETS = (1, 4, 8, 16)
+SEQ = 128
+CALIB_BATCH = 16
+
+EPOCHS = {"cola": 10, "mrpc": 8, "stsb": 10, "rte": 14,
+          "qnli": 8, "sst2": 6, "mnli": 8, "qqp": 6}
+LR = 5e-4
+
+MICRO_NAMES = ("ln_fp", "ln_quant", "gemm_fp", "gemm_int8", "gemm_fp_ffn",
+               "gemm_int8_ffn", "gelu_fp", "gelu_quant", "attn_fp", "attn_int8")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, arg_structs, path):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*arg_structs)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  lowered {path} ({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)")
+
+
+def input_structs(batch):
+    return [
+        jax.ShapeDtypeStruct((batch, SEQ), jnp.int32),    # input_ids
+        jax.ShapeDtypeStruct((batch, SEQ), jnp.int32),    # type_ids
+        jax.ShapeDtypeStruct((batch, SEQ), jnp.float32),  # attn_mask
+    ]
+
+
+# --------------------------------------------------------------------------
+# stages
+# --------------------------------------------------------------------------
+
+
+def build_datasets(out, cfg, fast, force):
+    for task in D.TASKS:
+        tdir = os.path.join(out, "tasks", task)
+        meta_path = os.path.join(tdir, "meta.json")
+        if os.path.exists(meta_path) and not force:
+            print(f"  [data] {task}: exists, skip")
+            continue
+        os.makedirs(tdir, exist_ok=True)
+        splits = D.make_task(task, seq_len=SEQ, fast=fast)
+        split_files = {}
+        for name, split in splits.items():
+            path = os.path.join(tdir, f"{name}.bin")
+            write_container(path, split)
+            split_files[name] = f"tasks/{task}/{name}.bin"
+        meta = dict(D.TASK_META[task])
+        meta.update(task=task, seq_len=SEQ, splits=split_files,
+                    sizes={k: int(v["input_ids"].shape[0]) for k, v in splits.items()})
+        with open(meta_path, "w") as f:
+            json.dump(meta, f, indent=1)
+        print(f"  [data] {task}: {meta['sizes']}")
+
+
+def train_all(out, cfg, fast, force):
+    results = {}
+    for task in D.TASKS:
+        cdir = os.path.join(out, "checkpoints", task)
+        ckpt = os.path.join(cdir, "fp32.bin")
+        mpath = os.path.join(cdir, "train_metrics.json")
+        if os.path.exists(ckpt) and not force:
+            print(f"  [train] {task}: checkpoint exists, skip")
+            if os.path.exists(mpath):
+                results[task] = json.load(open(mpath))
+            continue
+        os.makedirs(cdir, exist_ok=True)
+        tdir = os.path.join(out, "tasks", task)
+        meta = json.load(open(os.path.join(tdir, "meta.json")))
+        splits = {name: dict(read_container(os.path.join(out, rel)))
+                  for name, rel in meta["splits"].items()}
+        epochs = 1 if fast else EPOCHS[task]
+        params, dev = T.train_task(
+            task, splits, cfg, init_fp_params(cfg, seed=42), epochs=epochs, lr=LR)
+        # jax flattens dict pytrees in sorted-key order; restore the
+        # canonical manifest order before writing (the rust loader also
+        # defensively reorders, see Container::reordered)
+        params = {name: params[name] for name, _, _ in fp_param_specs(cfg)}
+        write_container(ckpt, params)
+        json.dump(dev, open(mpath, "w"))
+        results[task] = dev
+    return results
+
+
+def make_model_fn(cfg, mode):
+    sw = MODES[mode]
+    if mode == "fp":
+        specs = fp_param_specs(cfg)
+
+        def fn(*args):
+            params = list_to_dict(specs, args[:-3])
+            return (bert_forward(params, cfg, *args[-3:]),)
+    else:
+        specs = hero_param_specs(cfg, sw)
+
+        def fn(*args):
+            params = list_to_dict(specs, args[:-3])
+            return (hero_forward(params, cfg, sw, *args[-3:]),)
+    return fn, specs
+
+
+def lower_models(out, cfg, force):
+    for mode in MODES:
+        fn, specs = make_model_fn(cfg, mode)
+        structs = specs_to_struct(specs)
+        for b in BUCKETS:
+            path = os.path.join(out, "models", mode, f"b{b}.hlo.txt")
+            if os.path.exists(path) and not force:
+                continue
+            lower_to_file(fn, structs + input_structs(b), path)
+
+
+def lower_calibration(out, cfg, force):
+    specs = fp_param_specs(cfg)
+
+    def fn(*args):
+        params = list_to_dict(specs, args[:-3])
+        logits, stats = calibration_forward(params, cfg, *args[-3:])
+        return (logits,) + tuple(stats[k] for k in STAT_NAMES)
+
+    path = os.path.join(out, "calib", f"instrumented_b{CALIB_BATCH}.hlo.txt")
+    if os.path.exists(path) and not force:
+        return
+    lower_to_file(fn, specs_to_struct(specs) + input_structs(CALIB_BATCH), path)
+
+
+def lower_micro(out, cfg, force):
+    """Micro-kernel artifacts for the per-op FP-vs-INT8 benches."""
+    from .kernels import ln_quant, gemm_twq_to_i8, gelu_quant, attention_quant
+    from .modeling.bert import layer_norm
+    from .kernels.ref import gelu as gelu_ref, attention_fp
+
+    n, d, f = 2048, cfg.hidden, cfg.ffn
+    bh, s, dh = 16 * cfg.heads, SEQ, cfg.head_dim
+    f32, i8 = jnp.float32, jnp.int8
+    S = jax.ShapeDtypeStruct
+
+    micro = {}
+
+    def add(name, fn, structs):
+        path = os.path.join(out, "micro", f"{name}.hlo.txt")
+        micro[name] = f"micro/{name}.hlo.txt"
+        if os.path.exists(path) and not force:
+            return
+        lower_to_file(fn, structs, path)
+
+    add("ln_fp",
+        lambda x, g, b: (layer_norm(x, g, b, cfg.ln_eps),),
+        [S((n, d), f32), S((d,), f32), S((d,), f32)])
+    add("ln_quant",
+        lambda a, sa, bq, sb, g, b: ln_quant(a, bq, g, b, a_scale=sa, b_scale=sb),
+        [S((n, d), i8), S((n, 1), f32), S((n, d), i8), S((1, d), f32),
+         S((d,), f32), S((d,), f32)])
+    add("gemm_fp",
+        lambda x, w, b: (x @ w + b,),
+        [S((n, d), f32), S((d, d), f32), S((d,), f32)])
+    add("gemm_int8",
+        lambda x, w, xs, ws, b: (gemm_twq_to_i8(x, w, xs, ws, b),),
+        [S((n, d), i8), S((d, d), i8), S((n, 1), f32), S((1, d), f32),
+         S((1, d), f32)])
+    add("gemm_fp_ffn",
+        lambda x, w, b: (x @ w + b,),
+        [S((n, d), f32), S((d, f), f32), S((f,), f32)])
+    add("gemm_int8_ffn",
+        lambda x, w, xs, ws, b: (gemm_twq_to_i8(x, w, xs, ws, b),),
+        [S((n, d), i8), S((d, f), i8), S((n, 1), f32), S((1, f), f32),
+         S((1, f), f32)])
+    add("gelu_fp",
+        lambda x: (gelu_ref(x),),
+        [S((n, f), f32)])
+    add("gelu_quant",
+        lambda x, sa: (gelu_quant(x, sa),),
+        [S((n, f), f32), S((1, f), f32)])
+    add("attn_fp",
+        lambda q, k, v, m: (attention_fp(q, k, v, m, 1.0 / np.sqrt(dh)),),
+        [S((bh, s, dh), f32)] * 3 + [S((bh, s), f32)])
+    add("attn_int8",
+        lambda q, k, v, m, qk, sp, pv: (attention_quant(q, k, v, m, qk, sp, pv),),
+        [S((bh, s, dh), i8)] * 3 + [S((bh, s), f32), S((1, 1), f32),
+                                    S((1, 1), f32), S((bh, 1, dh), f32)])
+    return micro
+
+
+def build_golden(out, cfg, force):
+    """Cross-language parity fixtures: python-quantized checkpoints that the
+    rust engine must reproduce bit-exactly (tests/golden_parity.rs)."""
+    from .config import MODES
+    from .modeling.quantize import quantize_checkpoint
+
+    gdir = os.path.join(out, "golden")
+    if os.path.exists(os.path.join(gdir, "hero-m3.bin")) and not force:
+        return
+    os.makedirs(gdir, exist_ok=True)
+    fp = init_fp_params(cfg, seed=7)
+    write_container(os.path.join(gdir, "fp32.bin"), fp)
+
+    r = np.random.default_rng(11)
+    L, d, f = cfg.layers, cfg.hidden, cfg.ffn
+    nb = 3
+    shapes = {"q_absmax": (L,), "k_absmax": (L,), "v_absmax": (L,),
+              "p_max": (L,), "attn_absmax": (L, d), "o_absmax": (L, d),
+              "gelu_absmax": (L, f), "x2_absmax": (L, d)}
+    hist = {}
+    for k, shp in shapes.items():
+        base = np.exp(r.uniform(np.log(0.05), np.log(8.0), size=shp))
+        if k == "p_max":
+            base = r.uniform(0.5, 1.0, size=shp)
+        hist[k] = np.stack([base * r.uniform(0.8, 1.2, size=shp)
+                            for _ in range(nb)]).astype(np.float32)
+    # calib.json in the rust calibrator's format (flattened per batch)
+    doc = {"batches": nb,
+           "stats": {k: [v[b].reshape(-1).astype(np.float64).tolist()
+                         for b in range(nb)] for k, v in hist.items()}}
+    json.dump(doc, open(os.path.join(gdir, "calib.json"), "w"))
+    for mode, sw in MODES.items():
+        if mode == "fp":
+            continue
+        hq = quantize_checkpoint(fp, hist, cfg, sw)
+        write_container(os.path.join(gdir, f"hero-{mode}.bin"), hq)
+    print(f"  wrote golden fixtures ({nb} batches) to {gdir}")
+
+
+def write_manifest(out, cfg, micro, train_metrics):
+    modes = {}
+    for mode in MODES:
+        sw = MODES[mode]
+        specs = fp_param_specs(cfg) if mode == "fp" else hero_param_specs(cfg, sw)
+        modes[mode] = {
+            "switches": {k: getattr(sw, k) for k in
+                         ("embedding", "qkv", "attn", "attn_output", "fc1", "fc2")},
+            "params": [[n, list(s), d] for n, s, d in specs],
+            "artifacts": {f"b{b}": f"models/{mode}/b{b}.hlo.txt" for b in BUCKETS},
+        }
+    tasks = {}
+    for task in D.TASKS:
+        meta = json.load(open(os.path.join(out, "tasks", task, "meta.json")))
+        tasks[task] = meta
+        tasks[task]["checkpoint"] = f"checkpoints/{task}/fp32.bin"
+        tasks[task]["train_dev_metrics"] = train_metrics.get(task)
+    manifest = {
+        "format_version": 1,
+        "model": {
+            "vocab_size": cfg.vocab_size, "hidden": cfg.hidden,
+            "layers": cfg.layers, "heads": cfg.heads, "ffn": cfg.ffn,
+            "max_seq": cfg.max_seq, "type_vocab": cfg.type_vocab,
+            "num_labels": cfg.num_labels, "ln_eps": cfg.ln_eps,
+        },
+        "seq": SEQ,
+        "buckets": list(BUCKETS),
+        "qmax": QMAX,
+        "modes": modes,
+        "calib": {
+            "artifact": f"calib/instrumented_b{CALIB_BATCH}.hlo.txt",
+            "batch": CALIB_BATCH,
+            "params": [[n, list(s), d] for n, s, d in fp_param_specs(cfg)],
+            "stats": [[k, list(stat_shapes(cfg)[k])] for k in STAT_NAMES],
+        },
+        "tasks": tasks,
+        "micro": micro or {},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("  wrote manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="small datasets + 1 epoch (CI smoke)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--stage", default="all",
+                    choices=["all", "data", "train", "models", "calib",
+                             "micro", "golden", "manifest"])
+    args = ap.parse_args()
+    fast = args.fast or os.environ.get("ZQH_FAST") == "1"
+    cfg = ModelConfig()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    t0 = time.time()
+    train_metrics = {}
+    if args.stage in ("all", "data"):
+        print("== datasets ==")
+        build_datasets(out, cfg, fast, args.force)
+    if args.stage in ("all", "train"):
+        print("== training ==")
+        train_metrics = train_all(out, cfg, fast, args.force)
+    if args.stage in ("all", "models"):
+        print("== model artifacts ==")
+        lower_models(out, cfg, args.force)
+    if args.stage in ("all", "calib"):
+        print("== calibration artifact ==")
+        lower_calibration(out, cfg, args.force)
+    micro = None
+    if args.stage in ("all", "micro"):
+        print("== micro artifacts ==")
+        micro = lower_micro(out, cfg, args.force)
+    if args.stage in ("all", "golden"):
+        print("== golden parity fixtures ==")
+        build_golden(out, cfg, args.force)
+    if args.stage in ("all", "manifest"):
+        if not train_metrics:
+            for task in D.TASKS:
+                p = os.path.join(out, "checkpoints", task, "train_metrics.json")
+                if os.path.exists(p):
+                    train_metrics[task] = json.load(open(p))
+        if micro is None:
+            micro = {k: f"micro/{k}.hlo.txt" for k in MICRO_NAMES}
+        write_manifest(out, cfg, micro, train_metrics)
+    print(f"== done in {time.time() - t0:.0f}s ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Model + quantization-mode configuration shared by all of L1/L2.
+
+The quantization switch set mirrors Table 1 of the paper: six module-level
+switches {embedding, qkv, attn, attn_output, fc1, fc2}, each independently
+INT8 (True) or high-precision (False).  The named modes FP / M1 / M2 / M3
+are the paper's presets; arbitrary combinations are legal and exercised by
+the ablation benches.
+"""
+
+from dataclasses import dataclass, field, asdict, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """BERT-style encoder hyperparameters.
+
+    The repo-default model is a scaled-down BERT (the paper uses
+    BERT_base; see DESIGN.md §2 for the substitution argument): the graph
+    structure, quantization insertion points and calibration pipeline are
+    identical, only the dimensions differ.
+    """
+
+    vocab_size: int = 2048
+    hidden: int = 128
+    layers: int = 4
+    heads: int = 4
+    ffn: int = 512
+    max_seq: int = 128
+    type_vocab: int = 2
+    num_labels: int = 3  # padded; STS-B regression reads logits[:, 0]
+    ln_eps: float = 1e-12
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+
+@dataclass(frozen=True)
+class QuantSwitches:
+    """Table 1 row: which modules run INT8."""
+
+    embedding: bool = False
+    qkv: bool = False
+    attn: bool = False
+    attn_output: bool = False
+    fc1: bool = False
+    fc2: bool = False
+
+    def any(self) -> bool:
+        return any(asdict(self).values())
+
+    def tag(self) -> str:
+        bits = [self.embedding, self.qkv, self.attn, self.attn_output, self.fc1, self.fc2]
+        return "".join("1" if b else "0" for b in bits)
+
+
+# The paper's presets (Table 1).  FP = the baseline row.
+MODES = {
+    "fp": QuantSwitches(),
+    "m1": QuantSwitches(embedding=True, qkv=True, attn=False, attn_output=False, fc1=True, fc2=False),
+    "m2": QuantSwitches(embedding=True, qkv=True, attn=True, attn_output=True, fc1=True, fc2=False),
+    "m3": QuantSwitches(embedding=True, qkv=True, attn=True, attn_output=True, fc1=True, fc2=True),
+}
+
+# Symmetric int8 range used everywhere except Softmax^quant output,
+# which is asymmetric (paper §2.2.2): softmax has no negative values, so the
+# full [-128, 127] range is used with a fixed zero point of -128.
+QMAX = 127.0
+ASYM_LEVELS = 255.0
+ASYM_ZERO_POINT = -128
+
+
+def mode_switches(name: str) -> QuantSwitches:
+    try:
+        return MODES[name]
+    except KeyError:
+        raise ValueError(f"unknown mode {name!r}; expected one of {sorted(MODES)}") from None
+
+
+def switches_from_tag(tag: str) -> QuantSwitches:
+    """Inverse of QuantSwitches.tag(), for ablation sweeps ('101011' etc.)."""
+    if len(tag) != 6 or set(tag) - {"0", "1"}:
+        raise ValueError(f"bad switch tag {tag!r}")
+    b = [c == "1" for c in tag]
+    return QuantSwitches(
+        embedding=b[0], qkv=b[1], attn=b[2], attn_output=b[3], fc1=b[4], fc2=b[5]
+    )

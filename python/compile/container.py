@@ -1,0 +1,67 @@
+"""ZQHERO named-tensor container — the binary interchange format between the
+Python build path and the rust runtime.
+
+Layout (little-endian):
+    magic    : 8 bytes  b"ZQHERO01"
+    count    : u32      number of tensors
+    per tensor:
+        name_len : u16
+        name     : utf-8 bytes
+        dtype    : u8   (0 = f32, 1 = i8, 2 = i32)
+        ndim     : u8
+        dims     : u32 * ndim
+        nbytes   : u64
+        data     : raw bytes (C order)
+
+The rust reader/writer lives in ``rust/src/model/container.rs``; round-trip
+parity is covered by golden-file tests on both sides.
+"""
+
+import struct
+from collections import OrderedDict
+
+import numpy as np
+
+MAGIC = b"ZQHERO01"
+
+_DTYPES = {0: np.float32, 1: np.int8, 2: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1, np.dtype(np.int32): 2}
+
+
+def write_container(path, tensors):
+    """tensors: ordered mapping name -> np.ndarray (f32/i8/i32)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _CODES.get(arr.dtype)
+            if code is None:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_container(path):
+    """Returns OrderedDict name -> np.ndarray."""
+    out = OrderedDict()
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            data = f.read(nbytes)
+            arr = np.frombuffer(data, dtype=_DTYPES[code]).reshape(dims).copy()
+            out[name] = arr
+    return out

@@ -1,0 +1,314 @@
+"""SynGLUE — a synthetic, seeded 8-task suite mirroring the GLUE benchmark
+used in the paper's Table 2 (see DESIGN.md §2 for the substitution
+argument: PTQ behaviour is a property of the trained model + quantized
+graph, not of natural language; SynGLUE preserves the task *types*, label
+spaces, metrics, class balances and relative difficulty).
+
+Tasks (paper column -> SynGLUE analogue):
+  CoLA   -> cola-syn   single sentence, acceptability grammar, Mcc.
+                       Deliberately *hard*: negatives are minimal (single
+                       edit) corruptions, concentrating dev examples near
+                       the decision boundary like CoLA.
+  MNLI   -> mnli-syn   premise/hypothesis 3-way entailment; matched and
+                       mismatched dev splits (mm = longer + noisier).
+  MRPC   -> mrpc-syn   paraphrase detection, ~68%% positive, F1/Acc.
+  QNLI   -> qnli-syn   question/passage entailment, Acc.
+  QQP    -> qqp-syn    paraphrase, ~37%% positive, F1/Acc.
+  RTE    -> rte-syn    binary entailment, small train set, Acc.
+  SST-2  -> sst2-syn   single-sentence sentiment, Acc.
+  STS-B  -> stsb-syn   similarity regression in [0,5], Pearson/Spearman.
+
+Vocabulary layout (vocab = 2048):
+  0 PAD, 1 CLS, 2 SEP, 3 UNK; content tokens 4..2047.
+  "synonym/antonym" partner of t is ``t ^ 1`` (adjacent pairing).
+  token classes by residue: verbs  t % 16 == 0, nouns t % 16 == 1;
+  sentiment: positive 4..703, negative 704..1403, neutral 1404..2047.
+"""
+
+import numpy as np
+
+PAD, CLS, SEP, UNK = 0, 1, 2, 3
+CONTENT_LO, CONTENT_HI = 4, 2048  # [lo, hi)
+POS_RANGE = (4, 704)
+NEG_RANGE = (704, 1404)
+NEU_RANGE = (1404, 2048)
+
+TASKS = ("cola", "mnli", "mrpc", "qnli", "qqp", "rte", "sst2", "stsb")
+
+# Closed token pools for the tasks that require exact token-identity
+# matching across segments (entailment/QA/similarity): a tiny model trained
+# for a few epochs can only learn identity-matching for tokens it has seen
+# many times, so these tasks draw content from small dedicated pools
+# (mirroring the closed-class trick real GLUE models get from a pretrained
+# vocabulary).
+# MNLI/RTE: 32 "entity" topics on even ids so antonym(T) = T+1; premise and
+# hypothesis carry exactly one marker each — the relation (same / antonym /
+# different) decides the label.  Single-marker matching over a 32-token
+# closed class is learnable by a tiny model in a few epochs, while keeping
+# the task *type* (cross-segment lexical entailment).
+ENTITY_TOPICS = [1408 + 2 * k for k in range(32)]  # 1408..1470 even
+ENTITY_FILLER = (1472, 1664)
+KEY_POOL = (1664, 1696)    # QNLI question keys (32 tokens)
+VAL_POOL = (1728, 1792)    # QNLI passage values (filler)
+SIM_POOL = (1792, 1856)    # STS-B content (64 tokens)
+
+# task -> (n_classes (0 = regression), metric spec, dev splits)
+TASK_META = {
+    "cola": {"classes": 2, "metrics": ["mcc"], "splits": ["dev"]},
+    "mnli": {"classes": 3, "metrics": ["acc"], "splits": ["dev", "dev_mm"]},
+    "mrpc": {"classes": 2, "metrics": ["f1", "acc"], "splits": ["dev"]},
+    "qnli": {"classes": 2, "metrics": ["acc"], "splits": ["dev"]},
+    "qqp": {"classes": 2, "metrics": ["f1", "acc"], "splits": ["dev"]},
+    "rte": {"classes": 2, "metrics": ["acc"], "splits": ["dev"]},
+    "sst2": {"classes": 2, "metrics": ["acc"], "splits": ["dev"]},
+    "stsb": {"classes": 0, "metrics": ["pearson", "spearman"], "splits": ["dev"]},
+}
+
+SIZES = {  # train, dev (mnli dev is per split)
+    "cola": (3000, 500), "mnli": (10000, 1000), "mrpc": (3000, 400),
+    "qnli": (6000, 600), "qqp": (10000, 800), "rte": (1500, 300),
+    "sst2": (6000, 600), "stsb": (3000, 400),
+}
+
+FAST_SIZES = {t: (max(256, a // 10), max(128, b // 4)) for t, (a, b) in SIZES.items()}
+
+
+def partner(t):
+    return int(t) ^ 1
+
+
+def _sample_content(r, n, lo=CONTENT_LO, hi=CONTENT_HI):
+    return r.integers(lo, hi, size=n).tolist()
+
+
+def _encode_single(toks, seq_len):
+    ids = [CLS] + list(toks)[: seq_len - 2] + [SEP]
+    ty = [0] * len(ids)
+    return _pad(ids, ty, seq_len)
+
+
+def _encode_pair(a, b, seq_len):
+    budget = seq_len - 3
+    a = list(a)[: budget // 2]
+    b = list(b)[: budget - len(a)]
+    ids = [CLS] + a + [SEP] + b + [SEP]
+    ty = [0] * (len(a) + 2) + [1] * (len(b) + 1)
+    return _pad(ids, ty, seq_len)
+
+
+def _pad(ids, ty, seq_len):
+    n = len(ids)
+    assert n <= seq_len, (n, seq_len)
+    return ids + [PAD] * (seq_len - n), ty + [0] * (seq_len - n)
+
+
+# --------------------------------------------------------------------------
+# per-task generators: each returns (ids, type_ids, label) lists
+# --------------------------------------------------------------------------
+
+
+def gen_sst2(r, seq_len):
+    n = int(r.integers(8, 24))
+    k = int(r.integers(2, 7))
+    label = int(r.integers(0, 2))
+    lo, hi = (POS_RANGE if label else NEG_RANGE)
+    toks = _sample_content(r, n - k, *NEU_RANGE) + _sample_content(r, k, lo, hi)
+    r.shuffle(toks)
+    ids, ty = _encode_single(toks, seq_len)
+    return ids, ty, label
+
+
+# Small closed classes: 16 verbs, 16 nouns.  Class membership is easy to
+# learn; the *rule* (order + uniqueness) is what makes the task hard, which
+# concentrates dev examples near the decision boundary — the CoLA analogue.
+VERB_TOKENS = [16 * (k + 1) for k in range(16)]           # 16..256 step 16
+NOUN_TOKENS = [16 * (k + 1) + 1 for k in range(16)]
+
+
+def _cola_filler(r, n):
+    toks = []
+    for t in _sample_content(r, n):
+        t = int(t)
+        if t % 16 in (0, 1):
+            t += 2  # strip accidental verbs/nouns
+        toks.append(t)
+    return toks
+
+
+def _acceptable_sentence(r):
+    """Exactly one verb, with at least one noun *before* it."""
+    toks = _cola_filler(r, int(r.integers(6, 16)))
+    noun = NOUN_TOKENS[int(r.integers(0, 16))]
+    verb = VERB_TOKENS[int(r.integers(0, 16))]
+    ni = int(r.integers(0, len(toks)))
+    toks.insert(ni, noun)
+    vi = int(r.integers(ni + 1, len(toks) + 1))
+    toks.insert(vi, verb)
+    return toks, ni, vi
+
+
+def gen_cola(r, seq_len):
+    toks, ni, vi = _acceptable_sentence(r)
+    label = 1
+    if r.random() < 0.5:
+        label = 0
+        mode = int(r.integers(0, 3))
+        if mode == 0:      # move verb before the noun
+            v = toks.pop(vi)
+            toks.insert(int(r.integers(0, ni + 1)), v)
+        elif mode == 1:    # duplicate the verb (two verbs = unacceptable)
+            toks.insert(int(r.integers(0, len(toks))),
+                        VERB_TOKENS[int(r.integers(0, 16))])
+        else:              # delete the noun
+            toks.pop(ni)
+    ids, ty = _encode_single(toks, seq_len)
+    return ids, ty, label
+
+
+def gen_mnli(r, seq_len, mismatched=False):
+    plen = int(r.integers(6, 13)) + (4 if mismatched else 0)
+    prem = _sample_content(r, plen, *ENTITY_FILLER)
+    topic = ENTITY_TOPICS[int(r.integers(0, 32))]
+    prem.insert(int(r.integers(0, len(prem))), topic)
+    label = int(r.integers(0, 3))  # 0 entail, 1 neutral, 2 contradict
+    hyp = _sample_content(r, int(r.integers(2, 6)) + (2 if mismatched else 0),
+                          *ENTITY_FILLER)
+    if label == 0:
+        marker = topic                 # same entity asserted -> entail
+    elif label == 2:
+        marker = partner(topic)        # antonym entity -> contradict
+    else:
+        other = topic
+        while other == topic:
+            other = ENTITY_TOPICS[int(r.integers(0, 32))]
+        marker = other                 # unrelated entity -> neutral
+    hyp.insert(int(r.integers(0, len(hyp))), marker)
+    ids, ty = _encode_pair(prem, hyp, seq_len)
+    return ids, ty, label
+
+
+def _paraphrase_pair(r, pos_rate):
+    s1 = _sample_content(r, int(r.integers(6, 14)))
+    if r.random() < pos_rate:
+        s2 = [partner(t) if r.random() < 0.3 else int(t) for t in s1]
+        r.shuffle(s2)
+        return s1, s2, 1
+    keep = max(1, int(0.4 * len(s1)))
+    idx = r.choice(len(s1), size=keep, replace=False)
+    s2 = [s1[j] for j in idx] + _sample_content(r, int(r.integers(4, 10)))
+    r.shuffle(s2)
+    return s1, s2, 0
+
+
+def gen_mrpc(r, seq_len):
+    s1, s2, label = _paraphrase_pair(r, 0.68)
+    ids, ty = _encode_pair(s1, s2, seq_len)
+    return ids, ty, label
+
+
+def gen_qqp(r, seq_len):
+    s1, s2, label = _paraphrase_pair(r, 0.37)
+    ids, ty = _encode_pair(s1, s2, seq_len)
+    return ids, ty, label
+
+
+def gen_qnli(r, seq_len):
+    npairs = int(r.integers(3, 7))
+    keys = list({int(t) for t in _sample_content(r, npairs, *KEY_POOL)})
+    vals = _sample_content(r, len(keys), *VAL_POOL)
+    passage = []
+    for k_, v_ in zip(keys, vals):
+        passage += [int(k_), int(v_)]
+    label = int(r.integers(0, 2))
+    if label:
+        key = keys[int(r.integers(0, len(keys)))]
+    else:
+        key = keys[0]
+        while key in keys:
+            key = int(_sample_content(r, 1, *KEY_POOL)[0])
+    question = [UNK, key]  # UNK doubles as the question marker
+    ids, ty = _encode_pair(question, passage, seq_len)
+    return ids, ty, label
+
+
+def gen_rte(r, seq_len):
+    # binary entailment over the same entity-marker design as mnli-syn,
+    # with antonym negatives (high lexical overlap, like RTE)
+    plen = int(r.integers(6, 13))
+    prem = _sample_content(r, plen, *ENTITY_FILLER)
+    topic = ENTITY_TOPICS[int(r.integers(0, 32))]
+    prem.insert(int(r.integers(0, len(prem))), topic)
+    label = int(r.integers(0, 2))  # 1 = entail
+    hyp = _sample_content(r, int(r.integers(2, 6)), *ENTITY_FILLER)
+    if label:
+        marker = topic
+    elif r.random() < 0.5:
+        marker = partner(topic)
+    else:
+        marker = topic
+        while marker == topic:
+            marker = ENTITY_TOPICS[int(r.integers(0, 32))]
+    hyp.insert(int(r.integers(0, len(hyp))), marker)
+    ids, ty = _encode_pair(prem, hyp, seq_len)
+    return ids, ty, label
+
+
+def gen_stsb(r, seq_len):
+    n = 8
+    s1 = _sample_content(r, n, *SIM_POOL)
+    k = int(r.integers(0, n + 1))
+    idx = set(r.choice(n, size=k, replace=False).tolist())
+    s2 = [s1[j] if j in idx else int(_sample_content(r, 1, *SIM_POOL)[0]) for j in range(n)]
+    r.shuffle(s2)
+    score = float(np.clip(5.0 * k / n + r.normal(0, 0.25), 0.0, 5.0))
+    ids, ty = _encode_pair(s1, s2, seq_len)
+    return ids, ty, score
+
+
+GENERATORS = {
+    "cola": gen_cola, "mnli": gen_mnli, "mrpc": gen_mrpc, "qnli": gen_qnli,
+    "qqp": gen_qqp, "rte": gen_rte, "sst2": gen_sst2, "stsb": gen_stsb,
+}
+
+
+def make_split(task, n, seq_len, seed, mismatched=False):
+    """Returns dict: input_ids i32 [n,s], type_ids i32 [n,s], labels."""
+    r = np.random.default_rng(seed)
+    gen = GENERATORS[task]
+    ids, tys, labels = [], [], []
+    for _ in range(n):
+        if task == "mnli":
+            i, t, l = gen(r, seq_len, mismatched=mismatched)
+        else:
+            i, t, l = gen(r, seq_len)
+        ids.append(i)
+        tys.append(t)
+        labels.append(l)
+    out = {
+        "input_ids": np.asarray(ids, np.int32),
+        "type_ids": np.asarray(tys, np.int32),
+    }
+    if TASK_META[task]["classes"] == 0:
+        out["labels_f32"] = np.asarray(labels, np.float32)
+    else:
+        out["labels_i32"] = np.asarray(labels, np.int32)
+    return out
+
+
+def make_task(task, seq_len=128, fast=False, seed_base=1234):
+    """Returns dict split_name -> split dict."""
+    import zlib
+
+    ntr, ndev = (FAST_SIZES if fast else SIZES)[task]
+    seed = seed_base + zlib.crc32(task.encode()) % 100000  # stable across runs
+    splits = {
+        "train": make_split(task, ntr, seq_len, seed),
+        "dev": make_split(task, ndev, seq_len, seed + 1),
+    }
+    if task == "mnli":
+        splits["dev_mm"] = make_split(task, ndev, seq_len, seed + 2, mismatched=True)
+    return splits
+
+
+def attn_mask(input_ids):
+    return (input_ids != PAD).astype(np.float32)

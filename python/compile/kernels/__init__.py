@@ -1,0 +1,31 @@
+"""L1: Pallas kernels for ZeroQuant-HERO's quantization-aware operators.
+
+Every kernel has a pure-jnp oracle in :mod:`ref` and runs in interpret mode
+(the repo executes on CPU PJRT; the BlockSpec structure is the TPU
+schedule -- see DESIGN.md section 7).
+"""
+
+from .ln_quant import ln_quant, ln_quant_embed, twq_quantize
+from .gemm_quant import (
+    gemm_twq_to_i8,
+    gemm_twq_to_f32,
+    gemm_folded_to_i8,
+    gemm_folded_to_f32,
+)
+from .gelu_quant import gelu_quant, gelu_fp
+from .softmax_quant import softmax_quant
+from .attention_quant import attention_quant
+
+__all__ = [
+    "ln_quant",
+    "ln_quant_embed",
+    "twq_quantize",
+    "gemm_twq_to_i8",
+    "gemm_twq_to_f32",
+    "gemm_folded_to_i8",
+    "gemm_folded_to_f32",
+    "gelu_quant",
+    "gelu_fp",
+    "softmax_quant",
+    "attention_quant",
+]

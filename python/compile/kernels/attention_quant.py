@@ -1,0 +1,88 @@
+"""INT8 attention core (paper eqs. 15-17): the flash-attention-with-SQ
+design rethought as a Pallas kernel.
+
+Dataflow per (batch x head) grid step, with the whole [n, dh] Q/K/V tiles
+and the [n, n] score tile VMEM-resident (n=128, dh=32 => ~80 KB, far under
+VMEM):
+
+  1. ``A = (Q_i8 . K_i8^T) * qk_scale``   — MXU int8 dot, int32 accumulate;
+     ``qk_scale = S_q S_k / sqrt(dh)`` is folded (eq. 15), so there is no
+     dequantization and no division by sqrt(d) at runtime.
+  2. ``P_q = Softmax^quant(A)``           — asymmetric INT8, zero point
+     -128, reusing the row max/denominator the softmax already computed
+     (no extra pass; eq. 16).
+  3. ``X_attn_i8 = Round((P_q+128) . V_i8 * pv_scale)`` — second MXU int8
+     dot; the asymmetric shift keeps the left operand in [0, 255].
+     ``pv_scale = s_p * S_v / S_attn`` (per-feature, eq. 17) is the entire
+     epilogue.
+
+``A`` itself stays f32 (the paper leaves attention scores unquantized for
+accuracy).  The FP fallback core lives in modeling/bert.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QMAX = 127.0
+MASK_BIG = 1e9
+
+
+# heads per grid step: [G, n, n] f32 score tile = G * 64 KB at n=128 —
+# G=8 keeps the tile ~0.5 MB in VMEM and cuts grid steps 8x (§Perf).
+HEAD_GROUP = 8
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, qk_ref, sp_ref, pv_ref, o_ref):
+    q = q_ref[...].astype(jnp.int32)        # [g, n, dh]
+    k = k_ref[...].astype(jnp.int32)
+    v = v_ref[...].astype(jnp.int32)
+    qk_scale = qk_ref[0, 0]
+    s_p = sp_ref[0, 0]
+
+    acc = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.int32
+    ).astype(jnp.float32)                    # [g, n, n] = Q . K^T
+    a = acc * qk_scale + (mask_ref[...][:, None, :] - 1.0) * MASK_BIG
+
+    a = a - jnp.max(a, axis=-1, keepdims=True)
+    e = jnp.exp(a)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    p_q = jnp.clip(jnp.round(p / s_p) - 128.0, -128, 127)  # asym int8 domain
+    p_shift = p_q.astype(jnp.int32) + 128                  # [0, 255]
+
+    acc2 = jax.lax.dot_general(
+        p_shift, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32
+    ).astype(jnp.float32)                    # [g, n, dh]
+    o_ref[...] = jnp.clip(jnp.round(acc2 * pv_ref[...]), -QMAX, QMAX).astype(jnp.int8)
+
+
+def attention_quant(q_i8, k_i8, v_i8, mask, qk_scale, s_p, pv_scale):
+    """INT8 attention core.
+
+    q/k/v_i8: [bh, n, dh] int8 (SQ).  mask: [bh, n] f32 {0,1} over keys.
+    qk_scale, s_p: f32 scalars.  pv_scale: [bh, 1, dh] f32.
+    Returns X_attn int8 [bh, n, dh] (FWQ domain: X_attn = i8 * S_attn).
+    """
+    bh, n, dh = q_i8.shape
+    g = HEAD_GROUP
+    while bh % g:
+        g -= 1
+    qk = jnp.asarray(qk_scale, jnp.float32).reshape(1, 1)
+    sp = jnp.asarray(s_p, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(bh // g,),
+        in_specs=[
+            pl.BlockSpec((g, n, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((g, n, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((g, n, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((g, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((g, 1, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((g, n, dh), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((bh, n, dh), jnp.int8)],
+        interpret=True,
+    )(q_i8, k_i8, v_i8, mask, qk, sp, pv_scale)[0]

@@ -1,0 +1,67 @@
+"""``GELU^quant`` (paper eq. 29): fused GELU + FWQ int8 output.
+
+The FWQ scale ``S_a`` is calibrated, so quantization is a per-column
+multiply by ``1/S_a`` fused into the GELU epilogue — no reduction, no extra
+pass.  The reciprocal is precomputed by the quantize step and passed in, so
+the kernel contains no division (paper §2.2.2: FWQ/SQ quantization reduces
+to round-to-integer).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QMAX = 127.0
+GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(jnp.float32(GELU_C) * (x + 0.044715 * x * x * x)))
+
+
+def _pick(n, want=256):
+    b = min(n, want)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _gelu_quant_kernel(x_ref, inv_sa_ref, q_ref):
+    a = _gelu(x_ref[...])
+    q_ref[...] = jnp.clip(jnp.round(a * inv_sa_ref[...]), -QMAX, QMAX).astype(jnp.int8)
+
+
+def gelu_quant(x, s_a, *, block_tokens=None):
+    """f32 [n,f] -> GELU -> FWQ int8 [n,f]; ``s_a`` [f] or [1,f]."""
+    n, f = x.shape
+    bt = block_tokens or _pick(n)
+    inv_sa = (1.0 / s_a.reshape(1, f)).astype(jnp.float32)
+    return pl.pallas_call(
+        _gelu_quant_kernel,
+        grid=(n // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bt, f), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, f), jnp.int8)],
+        interpret=True,
+    )(x, inv_sa)[0]
+
+
+def _gelu_kernel(x_ref, y_ref):
+    y_ref[...] = _gelu(x_ref[...])
+
+
+def gelu_fp(x, *, block_tokens=None):
+    """Plain f32 GELU kernel (FP baseline / fc2-off fallback)."""
+    n, f = x.shape
+    bt = block_tokens or _pick(n)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(n // bt,),
+        in_specs=[pl.BlockSpec((bt, f), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bt, f), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, f), jnp.float32)],
+        interpret=True,
+    )(x)[0]

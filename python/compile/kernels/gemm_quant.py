@@ -1,0 +1,112 @@
+"""``GeMM^quant`` — INT8 matrix multiply with folded-scale epilogues
+(paper eqs. 14, 18, 20-22, 28, 30), as a Pallas kernel.
+
+TPU adaptation (DESIGN.md §7): tensor-core MMA becomes an MXU
+``dot_general`` with ``preferred_element_type=int32``.  The kernel tiles the
+output ``[block_n, block_m]`` with the full contraction dimension resident
+in VMEM (k <= 512 here; an A100 CUDA kernel would split-K, the MXU pipeline
+does not need to at these sizes).  Because every scale is pre-folded into
+the weight (eqs. 20-23, 32), the epilogue applied to the int32 accumulator
+tile is a single fused multiply(+bias) and, for INT8 outputs, a bare
+``Round`` — the paper's key "no extra kernel" property.
+
+Epilogue variants (static at lowering):
+  * x_scale='twq'   : per-token [n,1] runtime scales enter the epilogue.
+  * x_scale='folded': input scale already folded into W (FWQ inputs).
+  * out='i8'        : Round+clamp to int8 (output scale folded away).
+  * out='f32'       : dequantized f32 output (+bias).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QMAX = 127.0
+
+
+def _pick(n, want):
+    b = min(n, want)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _gemm_kernel(*refs, twq_in, out_i8):
+    """Ref order: [x, w, xs?, ws, b] -> [y]."""
+    it = iter(refs)
+    x_ref = next(it)
+    w_ref = next(it)
+    xs_ref = next(it) if twq_in else None
+    ws_ref = next(it)
+    b_ref = next(it)
+    y_ref = next(it)
+
+    acc = jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    if twq_in:
+        acc = acc * xs_ref[...]          # [bn,1] per-token
+    y = acc * ws_ref[...] + b_ref[...]   # [1,bm] column scale + bias
+    if out_i8:
+        y_ref[...] = jnp.clip(jnp.round(y), -QMAX, QMAX).astype(jnp.int8)
+    else:
+        y_ref[...] = y
+
+
+def _gemm(x_i8, w_i8, x_scale, w_scale, bias, *, out_i8,
+          block_n=None, block_m=None):
+    n, k = x_i8.shape
+    k2, m = w_i8.shape
+    assert k == k2, (x_i8.shape, w_i8.shape)
+    # [256, 512] output tile: int32 accumulator 512 KB + int8 operands
+    # (x 256xk <= 128 KB, w kx512 <= 256 KB) stays within VMEM while
+    # cutting grid steps 8-16x vs the original 64x128 tiles (§Perf).
+    bn = block_n or _pick(n, 256)
+    bm = block_m or _pick(m, 512)
+    twq_in = x_scale is not None
+
+    args = [x_i8, w_i8]
+    in_specs = [
+        pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((k, bm), lambda i, j: (0, j)),
+    ]
+    if twq_in:
+        args.append(x_scale)
+        in_specs.append(pl.BlockSpec((bn, 1), lambda i, j: (i, 0)))
+    args += [w_scale.reshape(1, m), bias.reshape(1, m)]
+    in_specs += [pl.BlockSpec((1, bm), lambda i, j: (0, j))] * 2
+
+    out_dtype = jnp.int8 if out_i8 else jnp.float32
+    kernel = functools.partial(_gemm_kernel, twq_in=twq_in, out_i8=out_i8)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, m // bm),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((bn, bm), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((n, m), out_dtype)],
+        interpret=True,
+    )(*args)[0]
+
+
+def gemm_twq_to_i8(x_i8, w_i8, x_scale, w_scale, bias, **kw):
+    """TWQ-int8 x folded-int8-W -> int8 (eq. 22: requant == Round)."""
+    return _gemm(x_i8, w_i8, x_scale, w_scale, bias, out_i8=True, **kw)
+
+
+def gemm_twq_to_f32(x_i8, w_i8, x_scale, w_scale, bias, **kw):
+    """TWQ-int8 x int8-W -> f32 (dequant epilogue; FC1, eq. 28)."""
+    return _gemm(x_i8, w_i8, x_scale, w_scale, bias, out_i8=False, **kw)
+
+
+def gemm_folded_to_i8(x_i8, w_i8, w_scale, bias, **kw):
+    """FWQ-folded int8 x folded-int8-W -> int8 (eqs. 23/32 epilogue)."""
+    return _gemm(x_i8, w_i8, None, w_scale, bias, out_i8=True, **kw)
+
+
+def gemm_folded_to_f32(x_i8, w_i8, w_scale, bias, **kw):
+    """FWQ-folded int8 x int8-W -> f32 (mode-fallback dequant)."""
+    return _gemm(x_i8, w_i8, None, w_scale, bias, out_i8=False, **kw)

@@ -1,0 +1,175 @@
+"""``LN^quant`` — fused LayerNorm with quantization-aware inputs/outputs
+(paper eqs. 7, 19, 31) plus the standalone TWQ quantizer, as Pallas kernels.
+
+TPU adaptation (DESIGN.md §7): the CUDA implementation computes per-token
+min/max in registers during the LN epilogue; here each grid step owns a
+``[block_tokens, d]`` tile resident in VMEM, computes mean/variance/absmax
+on the VPU in one pass over the tile, and writes the INT8 tile plus the
+``[block_tokens, 1]`` TWQ scale vector.  HBM traffic is one read of the
+inputs and one *INT8* write of the output — the paper's ~2x data-volume
+reduction for the downstream GeMM read.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec structure is the TPU schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QMAX = 127.0
+# 256-token tiles: [256, d] f32 = 128 KB in VMEM (d=128) — far under the
+# ~16 MB budget, 8x fewer grid steps than the original 32-token tiles
+# (interpret-mode grid steps dominate CPU cost; on TPU bigger tiles also
+# amortize the HBM->VMEM pipeline better).  Perf log: EXPERIMENTS.md §Perf.
+DEFAULT_BLOCK_TOKENS = 256
+
+
+def _pick_block(n, want=DEFAULT_BLOCK_TOKENS):
+    """Largest divisor of n that is <= want (shapes here are powers of two)."""
+    b = min(n, want)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _ln_rows(x, gamma, beta, eps):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def _twq_rows(y):
+    absmax = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+    s = jnp.maximum(absmax, 1e-10) / QMAX
+    q = jnp.clip(jnp.round(y / s), -QMAX, QMAX).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# standalone TWQ quantizer (the "additional kernel invocation" the paper
+# wants to avoid by fusing; kept for mode fallbacks and as a baseline)
+# --------------------------------------------------------------------------
+
+
+def _twq_kernel(x_ref, q_ref, s_ref):
+    q, s = _twq_rows(x_ref[...])
+    q_ref[...] = q
+    s_ref[...] = s
+
+
+def twq_quantize(x, *, block_tokens=None):
+    """f32 [n,d] -> (int8 [n,d], scales f32 [n,1])."""
+    n, d = x.shape
+    bt = block_tokens or _pick_block(n)
+    return pl.pallas_call(
+        _twq_kernel,
+        grid=(n // bt,),
+        in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.int8),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+
+# --------------------------------------------------------------------------
+# fused residual LN^quant
+# --------------------------------------------------------------------------
+
+
+def _ln_kernel(*refs, a_quant, b_quant, quantize_out, eps):
+    """Ref order: [a, a_s?, b, b_s?, gamma, beta] -> [y(|q), s?]."""
+    it = iter(refs)
+    a_ref = next(it)
+    a_s = next(it) if a_quant else None
+    b_ref = next(it)
+    b_s = next(it) if b_quant else None
+    gamma_ref = next(it)
+    beta_ref = next(it)
+    outs = list(it)
+
+    af = a_ref[...].astype(jnp.float32)
+    if a_quant:
+        af = af * a_s[...]  # TWQ [bt,1]
+    bf = b_ref[...].astype(jnp.float32)
+    if b_quant:
+        bf = bf * b_s[...]  # FWQ [1,d]
+    y = _ln_rows(af + bf, gamma_ref[...], beta_ref[...], eps)
+    if quantize_out:
+        q, s = _twq_rows(y)
+        outs[0][...] = q
+        outs[1][...] = s
+    else:
+        outs[0][...] = y
+
+
+def ln_quant(a, b, gamma, beta, *, a_scale=None, b_scale=None,
+             quantize_out=True, eps=1e-12, block_tokens=None):
+    """Fused residual LayerNorm (paper eq. 19/31).
+
+    ``a``: residual input, f32 [n,d] or int8 with TWQ ``a_scale`` [n,1].
+    ``b``: branch output, f32 [n,d] or int8 with FWQ ``b_scale`` [1,d].
+    Returns (y_int8 [n,d], s [n,1]) if ``quantize_out`` else y f32 [n,d].
+    """
+    n, d = a.shape
+    bt = block_tokens or _pick_block(n)
+    a_quant = a_scale is not None
+    b_quant = b_scale is not None
+
+    args, in_specs = [a], [pl.BlockSpec((bt, d), lambda i: (i, 0))]
+    if a_quant:
+        args.append(a_scale)
+        in_specs.append(pl.BlockSpec((bt, 1), lambda i: (i, 0)))
+    args.append(b)
+    in_specs.append(pl.BlockSpec((bt, d), lambda i: (i, 0)))
+    if b_quant:
+        args.append(b_scale.reshape(1, d))
+        in_specs.append(pl.BlockSpec((1, d), lambda i: (0, 0)))
+    args += [gamma.reshape(1, d), beta.reshape(1, d)]
+    in_specs += [pl.BlockSpec((1, d), lambda i: (0, 0))] * 2
+
+    if quantize_out:
+        out_specs = [
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((n, d), jnp.int8),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ]
+    else:
+        out_specs = [pl.BlockSpec((bt, d), lambda i: (i, 0))]
+        out_shape = [jax.ShapeDtypeStruct((n, d), jnp.float32)]
+
+    kernel = functools.partial(
+        _ln_kernel, a_quant=a_quant, b_quant=b_quant,
+        quantize_out=quantize_out, eps=eps,
+    )
+    out = pl.pallas_call(
+        kernel, grid=(n // bt,), in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=True,
+    )(*args)
+    return (out[0], out[1]) if quantize_out else out[0]
+
+
+def ln_quant_embed(x_t, x_pb, gamma, beta, *, t_scale=None, quantize_out=True,
+                   eps=1e-12, block_tokens=None):
+    """Embedding LN (paper eq. 7): ``LN(X_t + (X_p + X_s))``.
+
+    ``x_t`` may be TWQ int8 (``t_scale`` [n,1]) — the paper quantizes the
+    token-embedding gather output to halve the LN input volume; ``x_pb`` is
+    the (small) position+type sum, f32.
+    """
+    # Same kernel family: a = X_t (TWQ or f32), b = X_p + X_s (f32).
+    return ln_quant(
+        x_t, x_pb, gamma, beta, a_scale=t_scale, b_scale=None,
+        quantize_out=quantize_out, eps=eps, block_tokens=block_tokens,
+    )

@@ -1,0 +1,169 @@
+"""Quantization primitives (paper §2.1) and the scale-folding algebra
+(paper eqs. 20-23, 32).
+
+This module is the *reference implementation* of every numeric transform in
+the PTQ pipeline.  The rust engine (`rust/src/quant/`) re-implements the
+same transforms for the production path; parity is enforced by golden-file
+tests (python writes a quantized checkpoint, cargo tests re-derive it from
+the same fp32 checkpoint + calibration stats and compare bit-exactly).
+
+Conventions (match the paper):
+  * weights:      column-wise symmetric int8, ``W = W_int8 * S_w``,
+                  ``S_w in R^{1 x m}`` (eq. 2).
+  * TWQ:          per-token symmetric, ``X = S_x * X_int8``, ``S_x in R^{n x 1}``.
+  * FWQ:          per-feature symmetric, ``X = X_int8 * S_x``, ``S_x in R^{1 x d}``.
+  * SQ:           scalar symmetric.
+  * Softmax out:  scalar *asymmetric* with fixed zero point -128
+                  (softmax is non-negative), ``P = (P_q - zp) * s_p``.
+  * Round:        round-half-to-even (matches XLA's round_nearest_even and
+                  rust's ``f32::round_ties_even``).
+"""
+
+import numpy as np
+
+from ..config import QMAX, ASYM_LEVELS, ASYM_ZERO_POINT
+
+# --------------------------------------------------------------------------
+# scalar/array primitives (numpy; jnp versions live inside the kernels)
+# --------------------------------------------------------------------------
+
+
+def round_ties_even(x):
+    """Round half to even, the rounding mode used across all three layers."""
+    return np.round(x)  # numpy rounds half-to-even
+
+
+def sym_quantize(x, scale):
+    """x / scale, rounded and clamped to [-127, 127] (symmetric int8)."""
+    q = round_ties_even(np.asarray(x, np.float64) / np.asarray(scale, np.float64))
+    return np.clip(q, -QMAX, QMAX).astype(np.int8)
+
+
+def sym_dequantize(q, scale):
+    return q.astype(np.float32) * np.asarray(scale, np.float32)
+
+
+def asym_quantize_nonneg(x, scale):
+    """Asymmetric int8 for non-negative tensors, zero point -128."""
+    q = round_ties_even(np.asarray(x, np.float64) / np.asarray(scale, np.float64))
+    q = q + ASYM_ZERO_POINT
+    return np.clip(q, -128, 127).astype(np.int8)
+
+
+def asym_dequantize_nonneg(q, scale):
+    return (q.astype(np.float32) - ASYM_ZERO_POINT) * np.asarray(scale, np.float32)
+
+
+def scale_from_absmax(absmax, qmax=QMAX, floor=1e-10):
+    """Symmetric scale; ``floor`` guards all-zero calibration slices."""
+    return np.maximum(np.asarray(absmax, np.float64), floor) / qmax
+
+
+def scale_from_max_nonneg(maxval, floor=1e-10):
+    """Asymmetric non-negative scale over the full 255-level range."""
+    return np.maximum(np.asarray(maxval, np.float64), floor) / ASYM_LEVELS
+
+
+# --------------------------------------------------------------------------
+# weight quantization (eq. 2)
+# --------------------------------------------------------------------------
+
+
+def quantize_weight_colwise(w):
+    """Column-wise symmetric int8 weight quantization.
+
+    Returns ``(w_int8 [k,m], s_w [m])`` with ``w ~= w_int8 * s_w[None, :]``.
+    """
+    w = np.asarray(w, np.float32)
+    absmax = np.abs(w).max(axis=0)
+    s_w = scale_from_absmax(absmax)
+    return sym_quantize(w, s_w[None, :]), s_w.astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# scale folding (eqs. 20-23, 32)
+# --------------------------------------------------------------------------
+
+
+def fold_sq_output(w, b, s_out):
+    """Eq. 20-22: fold a *scalar* output scale ``s_out`` into W and bias so
+    the post-GeMM requantization is a bare Round.
+
+    ``W~ = W / s_out``; ``b~ = b / s_out``.  After column quantization of
+    ``W~``, the GeMM epilogue ``round(acc * S_in * S_w~ + b~)`` directly
+    yields ``X_int8`` with ``X = X_int8 * s_out``.
+    """
+    s = float(s_out)
+    return np.asarray(w, np.float32) / s, np.asarray(b, np.float32) / s
+
+
+def fold_fwq_in_fwq_out(w, b, s_in, s_out):
+    """Eq. 23 / 32: fold a per-feature *input* scale (rows) and a per-feature
+    *output* scale (columns) into W:  ``W~ = diag(s_in) @ W @ diag(1/s_out)``.
+
+    Used for ``W~_o = S_attn W_o / S_o`` and ``W~_2 = S_a W_2 / S_x2``.
+    The bias belongs to the output feature space: ``b~ = b / s_out``.
+    """
+    s_in = np.asarray(s_in, np.float32).reshape(-1)
+    s_out = np.asarray(s_out, np.float32).reshape(-1)
+    w = np.asarray(w, np.float32)
+    assert w.shape == (s_in.size, s_out.size), (w.shape, s_in.size, s_out.size)
+    return (s_in[:, None] * w) / s_out[None, :], np.asarray(b, np.float32) / s_out
+
+
+def fold_fwq_in_f32_out(w, s_in):
+    """FWQ-int8 input feeding a high-precision GeMM (mode fallback):
+    fold the input scale into the weight rows so the int8 activation can be
+    consumed directly: ``W~ = diag(s_in) @ W``."""
+    s_in = np.asarray(s_in, np.float32).reshape(-1)
+    return np.asarray(s_in[:, None], np.float32) * np.asarray(w, np.float32)
+
+
+# --------------------------------------------------------------------------
+# calibration-stat -> scale derivation
+# --------------------------------------------------------------------------
+
+
+def clip_absmax(absmax_hist, pct):
+    """Percentile clipping of per-batch abs-max samples (Discussion (b)).
+
+    ``absmax_hist``: array [num_batches, ...] of per-batch maxima.
+    ``pct`` = 100 reproduces plain running-max calibration.
+    """
+    a = np.asarray(absmax_hist, np.float64)
+    if pct >= 100.0:
+        return a.max(axis=0)
+    return np.percentile(a, pct, axis=0)
+
+
+class LayerScales:
+    """Derived activation scales for one transformer layer."""
+
+    __slots__ = ("sq_q", "sq_k", "sq_v", "sp", "s_attn", "s_o", "s_a", "s_x2")
+
+    def __init__(self, sq_q, sq_k, sq_v, sp, s_attn, s_o, s_a, s_x2):
+        self.sq_q = float(sq_q)    # SQ scalar for X_q
+        self.sq_k = float(sq_k)    # SQ scalar for X_k
+        self.sq_v = float(sq_v)    # SQ scalar for X_v
+        self.sp = float(sp)        # asymmetric scalar for P (softmax out)
+        self.s_attn = np.asarray(s_attn, np.float32)  # FWQ [d] for X_attn
+        self.s_o = np.asarray(s_o, np.float32)        # FWQ [d] for X_o
+        self.s_a = np.asarray(s_a, np.float32)        # FWQ [ffn] for GELU out
+        self.s_x2 = np.asarray(s_x2, np.float32)      # FWQ [d] for X_2
+
+
+def derive_layer_scales(stats, pct=100.0):
+    """stats: dict with per-batch histories (see calibration.py for keys).
+
+    Returns a LayerScales with SQ/FWQ scales per paper §2.2.
+    """
+    return LayerScales(
+        sq_q=scale_from_absmax(clip_absmax(stats["q_absmax"], pct)),
+        sq_k=scale_from_absmax(clip_absmax(stats["k_absmax"], pct)),
+        sq_v=scale_from_absmax(clip_absmax(stats["v_absmax"], pct)),
+        sp=scale_from_max_nonneg(clip_absmax(stats["p_max"], pct)),
+        s_attn=scale_from_absmax(clip_absmax(stats["attn_absmax"], pct)),
+        s_o=scale_from_absmax(clip_absmax(stats["o_absmax"], pct)),
+        s_a=scale_from_absmax(clip_absmax(stats["gelu_absmax"], pct)),
+        s_x2=scale_from_absmax(clip_absmax(stats["x2_absmax"], pct)),
+    )

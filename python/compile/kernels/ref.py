@@ -1,0 +1,179 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function here computes *exactly* the same math as the corresponding
+Pallas kernel, written in the most obvious dense-jnp way.  pytest asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-driven shape and
+scale sweeps.
+
+All oracles operate on 2-D token-major activations ``[n, d]`` (n = batch *
+seq flattened) except the attention core, which is ``[bh, n, dh]``.
+"""
+
+import jax.numpy as jnp
+
+QMAX = 127.0
+MASK_BIG = 1e9
+
+
+def round_clamp_i8(x):
+    """Symmetric int8 requantization epilogue: Round then clamp to +-127."""
+    return jnp.clip(jnp.round(x), -QMAX, QMAX).astype(jnp.int8)
+
+
+# --------------------------------------------------------------------------
+# TWQ quantize (standalone)
+# --------------------------------------------------------------------------
+
+
+def twq_quantize(x):
+    """Per-token symmetric quantization: returns (x_int8 [n,d], s [n,1])."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(absmax, 1e-10) / QMAX
+    return round_clamp_i8(x / s), s.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# LN^quant family (paper eq. 7, 19, 31)
+# --------------------------------------------------------------------------
+
+
+def _ln(x, gamma, beta, eps):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def ln_quant(a, b, gamma, beta, *, a_scale=None, b_scale=None, quantize_out=True,
+             eps=1e-12):
+    """Fused residual LayerNorm with quantization-aware inputs/outputs.
+
+    ``a`` is the residual stream input: f32 [n,d], or int8 with TWQ scale
+    ``a_scale`` [n,1].  ``b`` is the branch output: f32 [n,d], or int8 with
+    FWQ scale ``b_scale`` [1,d].  Output is (y_int8, s [n,1]) when
+    ``quantize_out`` else f32 y.
+    """
+    af = a.astype(jnp.float32) * a_scale if a_scale is not None else a.astype(jnp.float32)
+    bf = b.astype(jnp.float32) * b_scale if b_scale is not None else b.astype(jnp.float32)
+    y = _ln(af + bf, gamma, beta, eps)
+    if not quantize_out:
+        return y
+    return twq_quantize(y)
+
+
+def ln_quant_embed(x_t, x_pb, gamma, beta, *, t_scale=None, quantize_out=True,
+                   eps=1e-12):
+    """Embedding LN (eq. 7): ``LN(X_t + X_p + X_s)`` where X_t may arrive as
+    TWQ int8 (t_scale [n,1]) and position+type embeddings ``x_pb`` are f32."""
+    tf = x_t.astype(jnp.float32) * t_scale if t_scale is not None else x_t.astype(jnp.float32)
+    y = _ln(tf + x_pb, gamma, beta, eps)
+    if not quantize_out:
+        return y
+    return twq_quantize(y)
+
+
+# --------------------------------------------------------------------------
+# GeMM^quant family (eqs. 14, 18, 22, 28, 30)
+# --------------------------------------------------------------------------
+
+
+def _int_matmul(x_i8, w_i8):
+    return jnp.matmul(x_i8.astype(jnp.int32), w_i8.astype(jnp.int32))
+
+
+def gemm_twq_to_i8(x_i8, w_i8, x_scale, w_scale, bias):
+    """TWQ-int8 activation x folded int8 weight -> int8 output (eq. 22).
+
+    ``x_scale`` [n,1] (runtime TWQ scales), ``w_scale`` [1,m] (column scales
+    of the folded weight), ``bias`` [1,m] pre-divided by the output scale.
+    Output int8 in the folded output-scale domain: Round(acc*Sx*Sw + b~).
+    """
+    acc = _int_matmul(x_i8, w_i8).astype(jnp.float32)
+    return round_clamp_i8(acc * x_scale * w_scale + bias)
+
+
+def gemm_twq_to_f32(x_i8, w_i8, x_scale, w_scale, bias):
+    """TWQ-int8 activation x int8 weight -> f32 (dequant epilogue; eq. 28)."""
+    acc = _int_matmul(x_i8, w_i8).astype(jnp.float32)
+    return acc * x_scale * w_scale + bias
+
+
+def gemm_folded_to_i8(x_i8, w_i8, w_scale, bias):
+    """Folded-FWQ int8 activation (input scale already inside W~, eq. 23/32)
+    -> int8 output: Round(acc * Sw~ + b~)."""
+    acc = _int_matmul(x_i8, w_i8).astype(jnp.float32)
+    return round_clamp_i8(acc * w_scale + bias)
+
+
+def gemm_folded_to_f32(x_i8, w_i8, w_scale, bias):
+    """Folded int8 activation -> f32 output (mode-fallback dequant)."""
+    acc = _int_matmul(x_i8, w_i8).astype(jnp.float32)
+    return acc * w_scale + bias
+
+
+# --------------------------------------------------------------------------
+# GELU^quant (eq. 29)
+# --------------------------------------------------------------------------
+
+
+def gelu(x):
+    """tanh-approximation GELU (matches the kernel and the FP model)."""
+    c = jnp.float32(0.7978845608028654)  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def gelu_quant(x, s_a):
+    """f32 FC1 output -> GELU -> FWQ int8 (scale ``s_a`` [1, ffn]).
+
+    Matches the kernel bit-for-bit: the kernel receives the precomputed
+    reciprocal (folded, no runtime division), so the oracle multiplies by
+    the same reciprocal rather than dividing.
+    """
+    inv = (1.0 / s_a).astype(jnp.float32)
+    return round_clamp_i8(gelu(x) * inv)
+
+
+# --------------------------------------------------------------------------
+# Softmax^quant (eq. 16) + INT8 attention core (eqs. 15-17)
+# --------------------------------------------------------------------------
+
+
+def softmax_quant(a, s_p):
+    """Row softmax then asymmetric int8 with zero point -128.
+
+    ``a`` [.., n] f32 logits (mask already applied); ``s_p`` scalar.
+    Returns int8 in [-128, 127]; dequant = (q + 128) * s_p.
+    """
+    a = a - jnp.max(a, axis=-1, keepdims=True)
+    e = jnp.exp(a)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    q = jnp.round(p / s_p) - 128.0
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def attention_quant(q_i8, k_i8, v_i8, mask, qk_scale, s_p, pv_scale):
+    """INT8 attention core, vectorized over the leading (batch*head) axis.
+
+    q/k/v_i8: [bh, n, dh] int8 (SQ).  mask: [bh, n] f32 in {0,1} over keys.
+    qk_scale: scalar  = S_q * S_k / sqrt(dh)  (folded, eq. 15).
+    s_p:      scalar  = softmax output scale.
+    pv_scale: [bh, 1, dh] = s_p * S_v / S_attn  (per-feature epilogue).
+    Returns X_attn int8 [bh, n, dh] with X_attn = X_attn_i8 * S_attn.
+    """
+    acc = jnp.einsum(
+        "bnd,bmd->bnm", q_i8.astype(jnp.int32), k_i8.astype(jnp.int32)
+    ).astype(jnp.float32)
+    a = acc * qk_scale + (mask[:, None, :] - 1.0) * MASK_BIG
+    p_q = softmax_quant(a, s_p)  # int8, zp -128
+    p_shift = p_q.astype(jnp.int32) + 128  # [0, 255]
+    acc2 = jnp.einsum("bnm,bmd->bnd", p_shift, v_i8.astype(jnp.int32)).astype(jnp.float32)
+    return round_clamp_i8(acc2 * pv_scale)
+
+
+def attention_fp(q, k, v, mask, inv_sqrt_dh):
+    """FP attention core (mode fallback + FP baseline): [bh, n, dh] f32."""
+    a = jnp.einsum("bnd,bmd->bnm", q, k) * inv_sqrt_dh
+    a = a + (mask[:, None, :] - 1.0) * MASK_BIG
+    a = a - jnp.max(a, axis=-1, keepdims=True)
+    e = jnp.exp(a)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("bnm,bmd->bnd", p, v)

@@ -1,0 +1,56 @@
+"""``Softmax^quant`` (paper eq. 16): row softmax with *asymmetric* INT8
+output (zero point -128 — softmax is non-negative so the full 255-level
+range is used), as a standalone Pallas kernel.
+
+Inside the fused attention core (attention_quant.py) the same math is
+inlined; this standalone kernel exists for unit testing, the fig-1 precision
+trace, and the micro-benchmarks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick(n, want=256):
+    b = min(n, want)
+    while n % b:
+        b -= 1
+    return b
+
+
+def softmax_rows(a):
+    a = a - jnp.max(a, axis=-1, keepdims=True)
+    e = jnp.exp(a)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def quantize_p(p, s_p):
+    """p in [0,1] -> asymmetric int8 with zero point -128."""
+    q = jnp.round(p / s_p) - 128.0
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def _softmax_quant_kernel(a_ref, sp_ref, q_ref):
+    p = softmax_rows(a_ref[...])
+    q_ref[...] = quantize_p(p, sp_ref[0, 0])
+
+
+def softmax_quant(a, s_p, *, block_rows=None):
+    """f32 [r, n] (mask already applied) -> asym int8 [r, n]."""
+    r, n = a.shape
+    br = block_rows or _pick(r)
+    sp = jnp.asarray(s_p, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _softmax_quant_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r, n), jnp.int8)],
+        interpret=True,
+    )(a, sp)[0]

@@ -1,0 +1,70 @@
+"""GLUE metrics (python side — used for training monitoring and as the
+oracle for the rust implementations in ``rust/src/metrics/``)."""
+
+import numpy as np
+
+
+def accuracy(preds, labels):
+    preds, labels = np.asarray(preds), np.asarray(labels)
+    return float((preds == labels).mean())
+
+
+def f1_binary(preds, labels):
+    preds, labels = np.asarray(preds), np.asarray(labels)
+    tp = float(((preds == 1) & (labels == 1)).sum())
+    fp = float(((preds == 1) & (labels == 0)).sum())
+    fn = float(((preds == 0) & (labels == 1)).sum())
+    denom = 2 * tp + fp + fn
+    return 2 * tp / denom if denom > 0 else 0.0
+
+
+def matthews_corrcoef(preds, labels):
+    preds, labels = np.asarray(preds), np.asarray(labels)
+    tp = float(((preds == 1) & (labels == 1)).sum())
+    tn = float(((preds == 0) & (labels == 0)).sum())
+    fp = float(((preds == 1) & (labels == 0)).sum())
+    fn = float(((preds == 0) & (labels == 1)).sum())
+    denom = np.sqrt((tp + fp) * (tp + fn) * (tn + fp) * (tn + fn))
+    return float((tp * tn - fp * fn) / denom) if denom > 0 else 0.0
+
+
+def pearson(x, y):
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    xc, yc = x - x.mean(), y - y.mean()
+    denom = np.sqrt((xc**2).sum() * (yc**2).sum())
+    return float((xc * yc).sum() / denom) if denom > 0 else 0.0
+
+
+def _ranks(x):
+    """Average ranks (ties get the mean of their rank range)."""
+    x = np.asarray(x, np.float64)
+    order = np.argsort(x, kind="stable")
+    ranks = np.empty_like(x)
+    i = 0
+    sorted_x = x[order]
+    while i < len(x):
+        j = i
+        while j + 1 < len(x) and sorted_x[j + 1] == sorted_x[i]:
+            j += 1
+        ranks[order[i:j + 1]] = (i + j) / 2.0 + 1.0
+        i = j + 1
+    return ranks
+
+
+def spearman(x, y):
+    return pearson(_ranks(x), _ranks(y))
+
+
+def compute_metric(name, preds_or_scores, labels):
+    if name == "acc":
+        return accuracy(preds_or_scores, labels)
+    if name == "f1":
+        return f1_binary(preds_or_scores, labels)
+    if name == "mcc":
+        return matthews_corrcoef(preds_or_scores, labels)
+    if name == "pearson":
+        return pearson(preds_or_scores, labels)
+    if name == "spearman":
+        return spearman(preds_or_scores, labels)
+    raise KeyError(name)

@@ -1,0 +1,10 @@
+"""L2: JAX encoder — FP baseline, HERO quantized modes, calibration."""
+
+from .params import (
+    fp_param_specs, hero_param_specs, init_fp_params,
+    specs_to_struct, list_to_dict, dict_to_list,
+)
+from .bert import bert_forward
+from .hero import hero_forward
+from .calibration import calibration_forward, STAT_NAMES, stat_shapes
+from .quantize import quantize_checkpoint, derive_scales

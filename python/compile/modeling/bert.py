@@ -1,0 +1,94 @@
+"""FP reference encoder (the paper's FP16 baseline row; f32 on CPU PJRT).
+
+Pure jnp — this is what cuBLAS/fused-fp16 kernels would compute; it is also
+the forward used for training (train.py) and for calibration
+(calibration.py wraps it with stat taps).
+"""
+
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from ..kernels.ref import attention_fp, gelu
+
+MASK_BIG = 1e9
+
+
+def layer_norm(x, g, b, eps):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def split_heads(x, b, s, h, dh):
+    """[b*s, d] -> [b*h, s, dh]"""
+    return x.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+
+def merge_heads(x, b, s, h, dh):
+    """[b*h, s, dh] -> [b*s, d]"""
+    return x.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b * s, h * dh)
+
+
+def embed(params, cfg: ModelConfig, input_ids, type_ids):
+    """Token+position+type embedding sum, flattened to [b*s, d]."""
+    b, s = input_ids.shape
+    x_t = jnp.take(params["emb.tok"], input_ids.reshape(-1), axis=0)
+    x_p = jnp.tile(params["emb.pos"][:s], (b, 1))
+    x_ty = jnp.take(params["emb.type"], type_ids.reshape(-1), axis=0)
+    return x_t, x_p + x_ty
+
+
+def bert_forward(params, cfg: ModelConfig, input_ids, type_ids, attn_mask,
+                 collect=None):
+    """FP forward.  ``attn_mask`` f32 [b, s] with 1 = real token.
+
+    ``collect``: optional callable (layer_idx, name, tensor) used by the
+    calibration instrumentation; None on the plain path.
+    """
+    b, s = input_ids.shape
+    d, h, dh = cfg.hidden, cfg.heads, cfg.head_dim
+    x_t, x_pb = embed(params, cfg, input_ids, type_ids)
+    x = layer_norm(x_t + x_pb, params["emb.ln.g"], params["emb.ln.b"], cfg.ln_eps)
+
+    kmask = jnp.repeat(attn_mask, h, axis=0)  # [b*h, s]
+    for i in range(cfg.layers):
+        p = f"L{i}."
+        q = x @ params[p + "attn.q.w"] + params[p + "attn.q.b"]
+        k = x @ params[p + "attn.k.w"] + params[p + "attn.k.b"]
+        v = x @ params[p + "attn.v.w"] + params[p + "attn.v.b"]
+        if collect is not None:
+            collect(i, "q", q), collect(i, "k", k), collect(i, "v", v)
+        qh = split_heads(q, b, s, h, dh)
+        kh = split_heads(k, b, s, h, dh)
+        vh = split_heads(v, b, s, h, dh)
+        if collect is not None:
+            # P stats need the softmax output; recompute the probs tap here
+            a = jnp.einsum("bnd,bmd->bnm", qh, kh) / jnp.sqrt(dh).astype(jnp.float32)
+            a = a + (kmask[:, None, :] - 1.0) * MASK_BIG
+            a = a - jnp.max(a, axis=-1, keepdims=True)
+            e = jnp.exp(a)
+            probs = e / jnp.sum(e, axis=-1, keepdims=True)
+            collect(i, "p", probs)
+            attn = jnp.einsum("bnm,bmd->bnd", probs, vh)
+        else:
+            attn = attention_fp(qh, kh, vh, kmask, 1.0 / jnp.sqrt(dh).astype(jnp.float32))
+        x_attn = merge_heads(attn, b, s, h, dh)
+        if collect is not None:
+            collect(i, "attn", x_attn)
+        x_o = x_attn @ params[p + "attn.o.w"] + params[p + "attn.o.b"]
+        if collect is not None:
+            collect(i, "o", x_o)
+        x = layer_norm(x + x_o, params[p + "ln1.g"], params[p + "ln1.b"], cfg.ln_eps)
+
+        x1 = x @ params[p + "fc1.w"] + params[p + "fc1.b"]
+        a_act = gelu(x1)
+        if collect is not None:
+            collect(i, "gelu", a_act)
+        x2 = a_act @ params[p + "fc2.w"] + params[p + "fc2.b"]
+        if collect is not None:
+            collect(i, "x2", x2)
+        x = layer_norm(x + x2, params[p + "ln2.g"], params[p + "ln2.b"], cfg.ln_eps)
+
+    cls = x.reshape(b, s, d)[:, 0]
+    pooled = jnp.tanh(cls @ params["pool.w"] + params["pool.b"])
+    return pooled @ params["cls.w"] + params["cls.b"]

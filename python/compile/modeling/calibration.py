@@ -1,0 +1,72 @@
+"""Calibration-instrumented FP forward (paper §3: "100 batches, batch size
+16, seq 128, forward pass only").
+
+Wraps :func:`bert.bert_forward` with taps at every quantization insertion
+point and reduces each tap to the statistic its scheme needs:
+
+  =========  =======  ========================================
+  tensor     scheme   statistic (per layer, pad-masked)
+  =========  =======  ========================================
+  X_q/k/v    SQ       scalar abs-max
+  P          SQ asym  scalar max (softmax output, >= 0)
+  X_attn     FWQ      per-feature abs-max [d]
+  X_o        FWQ      per-feature abs-max [d]
+  GELU out   FWQ      per-feature abs-max [ffn]
+  X_2        FWQ      per-feature abs-max [d]
+  =========  =======  ========================================
+
+The AOT artifact built from this function returns one stat bundle per
+batch; the rust calibrator aggregates across batches (running max, or the
+per-batch history for percentile clipping — Discussion (b)).
+"""
+
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from .bert import bert_forward
+
+# Order of the stat outputs in the AOT artifact — mirrored in the rust
+# calibrator and in manifest.json.
+STAT_NAMES = ("q_absmax", "k_absmax", "v_absmax", "p_max",
+              "attn_absmax", "o_absmax", "gelu_absmax", "x2_absmax")
+
+
+def stat_shapes(cfg: ModelConfig):
+    L, d, f = cfg.layers, cfg.hidden, cfg.ffn
+    return {
+        "q_absmax": (L,), "k_absmax": (L,), "v_absmax": (L,), "p_max": (L,),
+        "attn_absmax": (L, d), "o_absmax": (L, d),
+        "gelu_absmax": (L, f), "x2_absmax": (L, d),
+    }
+
+
+def calibration_forward(params, cfg: ModelConfig, input_ids, type_ids, attn_mask):
+    """Returns (logits, stats-dict).  All stats are pad-masked maxima."""
+    b, s = input_ids.shape
+    h = cfg.heads
+    tok_mask = attn_mask.reshape(b * s, 1)           # [n,1], 1 = real token
+    qrow_mask = jnp.repeat(attn_mask, h, axis=0)     # [b*h, s] query rows
+
+    taps = {k: [None] * cfg.layers for k in STAT_NAMES}
+
+    def collect(i, name, t):
+        if name in ("q", "k", "v"):
+            taps[name + "_absmax"][i] = jnp.max(jnp.abs(t) * tok_mask)
+        elif name == "p":
+            # probs [b*h, s, s]; zero out pad query rows before the max
+            taps["p_max"][i] = jnp.max(t * qrow_mask[:, :, None])
+        elif name == "attn":
+            taps["attn_absmax"][i] = jnp.max(jnp.abs(t) * tok_mask, axis=0)
+        elif name == "o":
+            taps["o_absmax"][i] = jnp.max(jnp.abs(t) * tok_mask, axis=0)
+        elif name == "gelu":
+            taps["gelu_absmax"][i] = jnp.max(jnp.abs(t) * tok_mask, axis=0)
+        elif name == "x2":
+            taps["x2_absmax"][i] = jnp.max(jnp.abs(t) * tok_mask, axis=0)
+        else:  # pragma: no cover
+            raise KeyError(name)
+
+    logits = bert_forward(params, cfg, input_ids, type_ids, attn_mask,
+                          collect=collect)
+    stats = {k: jnp.stack(v) for k, v in taps.items()}
+    return logits, stats

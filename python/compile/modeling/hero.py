@@ -1,0 +1,195 @@
+"""ZeroQuant-HERO quantized encoder (paper §2.2), assembled from the L1
+Pallas kernels with per-module precision switches (Table 1).
+
+The forward consumes the *quantized* parameter set of
+``params.hero_param_specs`` — int8 weights with scales already folded by
+the rust ``quantize`` step (eqs. 20-23, 32) — so the graph contains no
+dequantize kernels and no divisions on the hot path:
+
+  * TWQ scales ride along with int8 activations out of each ``LN^quant``;
+  * SQ/FWQ requantization is a bare ``Round`` in each GeMM epilogue;
+  * the only standalone quantize ops appear for the "unfused" switch
+    combinations the paper calls out as overhead (e.g. INT8 attention fed
+    by an FP QKV GeMM).
+"""
+
+import jax.numpy as jnp
+
+from ..config import ModelConfig, QuantSwitches
+from ..kernels import (
+    ln_quant, ln_quant_embed, twq_quantize,
+    gemm_twq_to_i8, gemm_twq_to_f32, gemm_folded_to_i8, gemm_folded_to_f32,
+    gelu_quant, attention_quant,
+)
+from ..kernels.ref import attention_fp, gelu, round_clamp_i8
+from .bert import layer_norm, split_heads, merge_heads, embed
+
+MASK_BIG = 1e9
+
+
+def _dequant_twq(x_i8, s):
+    return x_i8.astype(jnp.float32) * s
+
+
+def _split_heads_i8(x, b, s, h, dh):
+    return x.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+
+def hero_forward(params, cfg: ModelConfig, sw: QuantSwitches,
+                 input_ids, type_ids, attn_mask):
+    """Quantized forward.  Returns logits f32 [b, num_labels].
+
+    ``params``: dict name -> array matching hero_param_specs(cfg, sw).
+    """
+    b, s = input_ids.shape
+    d, h, dh, f = cfg.hidden, cfg.heads, cfg.head_dim, cfg.ffn
+    eps = cfg.ln_eps
+
+    # ---------------- embedding (paper §2.2.1) ----------------
+    x_t, x_pb = embed(params, cfg, input_ids, type_ids)
+    if sw.embedding:
+        # TWQ the token-embedding gather output, then the quant-aware LN
+        # consumes INT8 and emits INT8 (eq. 7) — 2x data-volume reduction.
+        xt_i8, st = twq_quantize(x_t)
+        x, s_x = ln_quant_embed(xt_i8, x_pb, params["emb.ln.g"],
+                                params["emb.ln.b"], t_scale=st, eps=eps)
+        x_is_i8 = True
+    else:
+        x = layer_norm(x_t + x_pb, params["emb.ln.g"], params["emb.ln.b"], eps)
+        s_x = None
+        x_is_i8 = False
+
+    kmask = jnp.repeat(attn_mask, h, axis=0)  # [b*h, s] keys mask
+
+    for i in range(cfg.layers):
+        p = f"L{i}."
+
+        # ---- reconcile layer input with the QKV precision
+        if sw.qkv and not x_is_i8:
+            x, s_x = twq_quantize(x)          # standalone quant (unfused cost)
+            x_is_i8 = True
+        elif not sw.qkv and x_is_i8:
+            x = _dequant_twq(x, s_x)          # INT8 stream into FP module
+            x_is_i8 = False
+
+        # residual operands for LN1 (kept in whatever precision x has)
+        resid_i8, resid_s, resid_f = (x, s_x, None) if x_is_i8 else (None, None, x)
+
+        # ---------------- attention (paper §2.2.2) ----------------
+        if sw.qkv:
+            if sw.attn:
+                # INT8 GeMM, epilogue Round -> SQ int8 (eq. 22)
+                qs = [gemm_twq_to_i8(
+                    x, params[p + f"attn.{t}.wq"], s_x,
+                    params[p + f"attn.{t}.ws"].reshape(1, d),
+                    params[p + f"attn.{t}.b"].reshape(1, d)) for t in "qkv"]
+                q_i8, k_i8, v_i8 = qs
+            else:
+                # INT8 GeMM with dequant epilogue -> f32 Q/K/V
+                q, k, v = (gemm_twq_to_f32(
+                    x, params[p + f"attn.{t}.wq"], s_x,
+                    params[p + f"attn.{t}.ws"].reshape(1, d),
+                    params[p + f"attn.{t}.b"].reshape(1, d)) for t in "qkv")
+        else:
+            xf = resid_f
+            q = xf @ params[p + "attn.q.w"] + params[p + "attn.q.b"]
+            k = xf @ params[p + "attn.k.w"] + params[p + "attn.k.b"]
+            v = xf @ params[p + "attn.v.w"] + params[p + "attn.v.b"]
+            if sw.attn:
+                # fp QKV into INT8 attention: on-the-fly SQ (unfused cost)
+                q_i8 = round_clamp_i8(q * params[p + "attn.inv_sq_q"])
+                k_i8 = round_clamp_i8(k * params[p + "attn.inv_sq_k"])
+                v_i8 = round_clamp_i8(v * params[p + "attn.inv_sq_v"])
+
+        if sw.attn:
+            qh = _split_heads_i8(q_i8, b, s, h, dh)
+            kh = _split_heads_i8(k_i8, b, s, h, dh)
+            vh = _split_heads_i8(v_i8, b, s, h, dh)
+            pv = jnp.tile(params[p + "attn.pv_scale"].reshape(h, 1, dh), (b, 1, 1))
+            attn_i8 = attention_quant(
+                qh, kh, vh, kmask,
+                params[p + "attn.qk_scale"].reshape(1, 1),
+                params[p + "attn.sp"].reshape(1, 1), pv)
+            x_attn_i8 = merge_heads(attn_i8, b, s, h, dh)  # FWQ S_attn domain
+        else:
+            qh = split_heads(q, b, s, h, dh)
+            kh = split_heads(k, b, s, h, dh)
+            vh = split_heads(v, b, s, h, dh)
+            attn = attention_fp(qh, kh, vh, kmask,
+                                1.0 / jnp.sqrt(dh).astype(jnp.float32))
+            x_attn = merge_heads(attn, b, s, h, dh)
+
+        # ---- attention output projection
+        if sw.attn_output:
+            if not sw.attn:
+                # FWQ-quantize fp X_attn on the fly (unfused cost)
+                x_attn_i8 = round_clamp_i8(
+                    x_attn * params[p + "attn.inv_s_attn"].reshape(1, d))
+            # folded W~_o (eq. 23): epilogue Round -> X_o int8 in S_o domain
+            xo_i8 = gemm_folded_to_i8(
+                x_attn_i8, params[p + "attn.o.wq"],
+                params[p + "attn.o.ws"].reshape(1, d),
+                params[p + "attn.o.bq"].reshape(1, d))
+            ln_b, ln_b_scale = xo_i8, params[p + "ln1.so"].reshape(1, d)
+        else:
+            if sw.attn:
+                x_attn = _dequant_twq(x_attn_i8, params[p + "attn.s_attn"].reshape(1, d))
+            x_o = x_attn @ params[p + "attn.o.w"] + params[p + "attn.o.b"]
+            ln_b, ln_b_scale = x_o, None
+
+        # ---- LN^quant (eq. 19): output INT8 iff FC1 runs INT8
+        if sw.fc1:
+            x, s_x = ln_quant(
+                resid_i8 if resid_i8 is not None else resid_f, ln_b,
+                params[p + "ln1.g"], params[p + "ln1.b"],
+                a_scale=resid_s, b_scale=ln_b_scale, quantize_out=True, eps=eps)
+            x_is_i8 = True
+        else:
+            x = ln_quant(
+                resid_i8 if resid_i8 is not None else resid_f, ln_b,
+                params[p + "ln1.g"], params[p + "ln1.b"],
+                a_scale=resid_s, b_scale=ln_b_scale, quantize_out=False, eps=eps)
+            s_x, x_is_i8 = None, False
+
+        resid_i8, resid_s, resid_f = (x, s_x, None) if x_is_i8 else (None, None, x)
+
+        # ---------------- MLP (paper §2.2.3) ----------------
+        if sw.fc1:
+            x1 = gemm_twq_to_f32(
+                x, params[p + "fc1.wq"], s_x,
+                params[p + "fc1.ws"].reshape(1, f),
+                params[p + "fc1.b"].reshape(1, f))
+        else:
+            x1 = resid_f @ params[p + "fc1.w"] + params[p + "fc1.b"]
+
+        if sw.fc2:
+            a_i8 = gelu_quant(x1, params[p + "gelu.sa"].reshape(1, f))
+            x2_i8 = gemm_folded_to_i8(
+                a_i8, params[p + "fc2.wq"],
+                params[p + "fc2.ws"].reshape(1, d),
+                params[p + "fc2.bq"].reshape(1, d))
+            ln_b, ln_b_scale = x2_i8, params[p + "ln2.sx2"].reshape(1, d)
+        else:
+            a_act = gelu(x1)
+            x2 = a_act @ params[p + "fc2.w"] + params[p + "fc2.b"]
+            ln_b, ln_b_scale = x2, None
+
+        # ---- LN^quant (eq. 31): output INT8 iff next consumer is INT8
+        next_i8 = sw.qkv if i + 1 < cfg.layers else False
+        if next_i8:
+            x, s_x = ln_quant(
+                resid_i8 if resid_i8 is not None else resid_f, ln_b,
+                params[p + "ln2.g"], params[p + "ln2.b"],
+                a_scale=resid_s, b_scale=ln_b_scale, quantize_out=True, eps=eps)
+            x_is_i8 = True
+        else:
+            x = ln_quant(
+                resid_i8 if resid_i8 is not None else resid_f, ln_b,
+                params[p + "ln2.g"], params[p + "ln2.b"],
+                a_scale=resid_s, b_scale=ln_b_scale, quantize_out=False, eps=eps)
+            s_x, x_is_i8 = None, False
+
+    assert not x_is_i8
+    cls = x.reshape(b, s, d)[:, 0]
+    pooled = jnp.tanh(cls @ params["pool.w"] + params["pool.b"])
+    return pooled @ params["cls.w"] + params["cls.b"]

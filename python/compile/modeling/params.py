@@ -1,0 +1,186 @@
+"""Parameter registry: names, shapes, dtypes and the canonical flat ordering
+used for AOT parameter lists.
+
+The HLO artifacts take weights as *parameters* (not constants), so one HLO
+per (mode, batch-bucket) serves every task; the ordering contract here is
+mirrored in ``artifacts/manifest.json`` and enforced by the rust loader.
+"""
+
+from collections import OrderedDict
+
+import numpy as np
+
+from ..config import ModelConfig, QuantSwitches
+
+F32, I8 = "f32", "i8"
+
+
+# --------------------------------------------------------------------------
+# FP parameter set
+# --------------------------------------------------------------------------
+
+
+def fp_param_specs(cfg: ModelConfig):
+    """Ordered [(name, shape, dtype)] for the FP model."""
+    d, f, nl = cfg.hidden, cfg.ffn, cfg.num_labels
+    specs = [
+        ("emb.tok", (cfg.vocab_size, d), F32),
+        ("emb.pos", (cfg.max_seq, d), F32),
+        ("emb.type", (cfg.type_vocab, d), F32),
+        ("emb.ln.g", (d,), F32),
+        ("emb.ln.b", (d,), F32),
+    ]
+    for i in range(cfg.layers):
+        p = f"L{i}."
+        specs += [
+            (p + "attn.q.w", (d, d), F32), (p + "attn.q.b", (d,), F32),
+            (p + "attn.k.w", (d, d), F32), (p + "attn.k.b", (d,), F32),
+            (p + "attn.v.w", (d, d), F32), (p + "attn.v.b", (d,), F32),
+            (p + "attn.o.w", (d, d), F32), (p + "attn.o.b", (d,), F32),
+            (p + "ln1.g", (d,), F32), (p + "ln1.b", (d,), F32),
+            (p + "fc1.w", (d, f), F32), (p + "fc1.b", (f,), F32),
+            (p + "fc2.w", (f, d), F32), (p + "fc2.b", (d,), F32),
+            (p + "ln2.g", (d,), F32), (p + "ln2.b", (d,), F32),
+        ]
+    specs += [
+        ("pool.w", (d, d), F32), ("pool.b", (d,), F32),
+        ("cls.w", (d, nl), F32), ("cls.b", (nl,), F32),
+    ]
+    return specs
+
+
+# --------------------------------------------------------------------------
+# HERO (quantized) parameter set — depends on the mode switches
+# --------------------------------------------------------------------------
+
+
+def hero_param_specs(cfg: ModelConfig, sw: QuantSwitches):
+    """Ordered [(name, shape, dtype)] for the quantized model.
+
+    Produced by the rust ``quantize`` step from the fp32 checkpoint +
+    calibration scales; consumed by hero_forward in exactly this order.
+    """
+    d, f, h = cfg.hidden, cfg.ffn, cfg.heads
+    dh = cfg.head_dim
+    specs = [
+        ("emb.tok", (cfg.vocab_size, d), F32),
+        ("emb.pos", (cfg.max_seq, d), F32),
+        ("emb.type", (cfg.type_vocab, d), F32),
+        ("emb.ln.g", (d,), F32),
+        ("emb.ln.b", (d,), F32),
+    ]
+    for i in range(cfg.layers):
+        p = f"L{i}."
+        # ---- QKV projections
+        if sw.qkv:
+            for t in ("q", "k", "v"):
+                specs += [
+                    (p + f"attn.{t}.wq", (d, d), I8),
+                    (p + f"attn.{t}.ws", (d,), F32),
+                    (p + f"attn.{t}.b", (d,), F32),  # folded (b/S) iff attn INT8
+                ]
+        else:
+            for t in ("q", "k", "v"):
+                specs += [
+                    (p + f"attn.{t}.w", (d, d), F32),
+                    (p + f"attn.{t}.b", (d,), F32),
+                ]
+        # ---- attention core scales
+        if sw.attn:
+            specs += [
+                (p + "attn.qk_scale", (1,), F32),   # S_q S_k / sqrt(dh), eq. 15
+                (p + "attn.sp", (1,), F32),          # softmax out scale, eq. 16
+                (p + "attn.pv_scale", (h, dh), F32),  # s_p S_v / S_attn, eq. 17
+            ]
+            if not sw.qkv:
+                # fp QKV feeding INT8 attention: on-the-fly SQ quantizers
+                specs += [
+                    (p + "attn.inv_sq_q", (1,), F32),
+                    (p + "attn.inv_sq_k", (1,), F32),
+                    (p + "attn.inv_sq_v", (1,), F32),
+                ]
+        # ---- attention output projection
+        if sw.attn_output:
+            specs += [
+                (p + "attn.o.wq", (d, d), I8),   # W~_o = S_attn W_o / S_o (eq. 23)
+                (p + "attn.o.ws", (d,), F32),
+                (p + "attn.o.bq", (d,), F32),    # b_o / S_o
+                (p + "ln1.so", (d,), F32),       # S_o: FWQ scale of X_o into LN^quant
+            ]
+            if not sw.attn:
+                # fp attention feeding the folded INT8 GeMM: FWQ quantizer
+                specs += [(p + "attn.inv_s_attn", (d,), F32)]
+        else:
+            specs += [
+                (p + "attn.o.w", (d, d), F32),
+                (p + "attn.o.b", (d,), F32),
+            ]
+            if sw.attn:
+                # INT8 X_attn feeding fp GeMM: dequant scale
+                specs += [(p + "attn.s_attn", (d,), F32)]
+        specs += [(p + "ln1.g", (d,), F32), (p + "ln1.b", (d,), F32)]
+        # ---- MLP
+        if sw.fc1:
+            specs += [
+                (p + "fc1.wq", (d, f), I8),
+                (p + "fc1.ws", (f,), F32),
+                (p + "fc1.b", (f,), F32),
+            ]
+        else:
+            specs += [(p + "fc1.w", (d, f), F32), (p + "fc1.b", (f,), F32)]
+        if sw.fc2:
+            specs += [
+                (p + "gelu.sa", (f,), F32),      # FWQ S_a (eq. 29)
+                (p + "fc2.wq", (f, d), I8),      # W~_2 = S_a W_2 / S_x2 (eq. 32)
+                (p + "fc2.ws", (d,), F32),
+                (p + "fc2.bq", (d,), F32),       # b_2 / S_x2
+                (p + "ln2.sx2", (d,), F32),      # S_x2 into LN^quant
+            ]
+        else:
+            specs += [(p + "fc2.w", (f, d), F32), (p + "fc2.b", (d,), F32)]
+        specs += [(p + "ln2.g", (d,), F32), (p + "ln2.b", (d,), F32)]
+    specs += [
+        ("pool.w", (d, d), F32), ("pool.b", (d,), F32),
+        ("cls.w", (d, cfg.num_labels), F32), ("cls.b", (cfg.num_labels,), F32),
+    ]
+    return specs
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+
+def init_fp_params(cfg: ModelConfig, seed=0):
+    """BERT-style init: N(0, 0.02) matrices, zero biases, unit LN gains."""
+    r = np.random.default_rng(seed)
+    params = OrderedDict()
+    for name, shape, dtype in fp_param_specs(cfg):
+        assert dtype == F32
+        if name.endswith(".g"):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith(".b"):
+            params[name] = np.zeros(shape, np.float32)
+        elif len(shape) >= 2:
+            params[name] = r.normal(0.0, 0.02, shape).astype(np.float32)
+        else:
+            params[name] = np.zeros(shape, np.float32)
+    return params
+
+
+def specs_to_struct(specs):
+    """[(name, shape, dtype)] -> list of jax.ShapeDtypeStruct."""
+    import jax
+    import jax.numpy as jnp
+
+    dt = {F32: jnp.float32, I8: jnp.int8}
+    return [jax.ShapeDtypeStruct(shape, dt[dtype]) for _, shape, dtype in specs]
+
+
+def list_to_dict(specs, flat):
+    assert len(specs) == len(flat), (len(specs), len(flat))
+    return OrderedDict((name, arr) for (name, _, _), arr in zip(specs, flat))
+
+
+def dict_to_list(specs, params):
+    return [params[name] for name, _, _ in specs]

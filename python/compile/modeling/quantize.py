@@ -1,0 +1,130 @@
+"""Reference PTQ transform: fp32 checkpoint + calibration stats -> HERO
+quantized checkpoint (paper eqs. 2, 20-23, 32).
+
+This is the *python mirror* of the production rust engine
+(``rust/src/quant/fold.rs``); golden-file tests enforce bit-exact parity
+between the two.  It also powers the L2 model tests (hero vs fp divergence)
+without a rust round-trip.
+"""
+
+from collections import OrderedDict
+
+import numpy as np
+
+from ..config import ModelConfig, QuantSwitches
+from ..kernels.quant_ops import (
+    quantize_weight_colwise, fold_fwq_in_fwq_out,
+    scale_from_absmax, scale_from_max_nonneg, clip_absmax,
+)
+
+
+def derive_scales(stats, cfg: ModelConfig, pct=100.0):
+    """Aggregated (or per-batch-history) stats -> per-layer scale dict.
+
+    ``stats[k]`` has shape [L, ...] (aggregated) or [B, L, ...] (history,
+    clipped at percentile ``pct`` over the batch axis).
+    """
+    agg = {}
+    for k, v in stats.items():
+        v = np.asarray(v, np.float64)
+        want_nd = 1 if k in ("q_absmax", "k_absmax", "v_absmax", "p_max") else 2
+        agg[k] = clip_absmax(v, pct) if v.ndim == want_nd + 1 else v
+    out = []
+    for i in range(cfg.layers):
+        out.append({
+            "sq_q": float(scale_from_absmax(agg["q_absmax"][i])),
+            "sq_k": float(scale_from_absmax(agg["k_absmax"][i])),
+            "sq_v": float(scale_from_absmax(agg["v_absmax"][i])),
+            "sp": float(scale_from_max_nonneg(agg["p_max"][i])),
+            "s_attn": scale_from_absmax(agg["attn_absmax"][i]).astype(np.float32),
+            "s_o": scale_from_absmax(agg["o_absmax"][i]).astype(np.float32),
+            "s_a": scale_from_absmax(agg["gelu_absmax"][i]).astype(np.float32),
+            "s_x2": scale_from_absmax(agg["x2_absmax"][i]).astype(np.float32),
+        })
+    return out
+
+
+def quantize_checkpoint(fp, stats, cfg: ModelConfig, sw: QuantSwitches, pct=100.0):
+    """fp: dict name->np.ndarray (fp_param_specs order);
+    stats: calibration stat dict. Returns hero params (hero_param_specs order)."""
+    scales = derive_scales(stats, cfg, pct)
+    d, f, h, dh = cfg.hidden, cfg.ffn, cfg.heads, cfg.head_dim
+    q = OrderedDict()
+    for name in ("emb.tok", "emb.pos", "emb.type", "emb.ln.g", "emb.ln.b"):
+        q[name] = fp[name]
+
+    for i in range(cfg.layers):
+        p = f"L{i}."
+        sc = scales[i]
+        sq = {"q": sc["sq_q"], "k": sc["sq_k"], "v": sc["sq_v"]}
+        if sw.qkv:
+            for t in "qkv":
+                w, b = fp[p + f"attn.{t}.w"], fp[p + f"attn.{t}.b"]
+                if sw.attn:
+                    # eq. 20-21: fold the SQ output scale, requant == Round
+                    wq, ws = quantize_weight_colwise(w / sq[t])
+                    q[p + f"attn.{t}.wq"] = wq
+                    q[p + f"attn.{t}.ws"] = ws
+                    q[p + f"attn.{t}.b"] = (b / sq[t]).astype(np.float32)
+                else:
+                    wq, ws = quantize_weight_colwise(w)
+                    q[p + f"attn.{t}.wq"] = wq
+                    q[p + f"attn.{t}.ws"] = ws
+                    q[p + f"attn.{t}.b"] = b
+        else:
+            for t in "qkv":
+                q[p + f"attn.{t}.w"] = fp[p + f"attn.{t}.w"]
+                q[p + f"attn.{t}.b"] = fp[p + f"attn.{t}.b"]
+        if sw.attn:
+            q[p + "attn.qk_scale"] = np.asarray(
+                [sq["q"] * sq["k"] / np.sqrt(dh)], np.float32)
+            q[p + "attn.sp"] = np.asarray([sc["sp"]], np.float32)
+            q[p + "attn.pv_scale"] = (
+                sc["sp"] * sq["v"] / sc["s_attn"]).astype(np.float32).reshape(h, dh)
+            if not sw.qkv:
+                for t in "qkv":
+                    q[p + f"attn.inv_sq_{t}"] = np.asarray([1.0 / sq[t]], np.float32)
+        if sw.attn_output:
+            wt, bt = fold_fwq_in_fwq_out(
+                fp[p + "attn.o.w"], fp[p + "attn.o.b"], sc["s_attn"], sc["s_o"])
+            wq, ws = quantize_weight_colwise(wt)
+            q[p + "attn.o.wq"] = wq
+            q[p + "attn.o.ws"] = ws
+            q[p + "attn.o.bq"] = bt.astype(np.float32)
+            q[p + "ln1.so"] = sc["s_o"]
+            if not sw.attn:
+                q[p + "attn.inv_s_attn"] = (1.0 / sc["s_attn"]).astype(np.float32)
+        else:
+            q[p + "attn.o.w"] = fp[p + "attn.o.w"]
+            q[p + "attn.o.b"] = fp[p + "attn.o.b"]
+            if sw.attn:
+                q[p + "attn.s_attn"] = sc["s_attn"]
+        q[p + "ln1.g"] = fp[p + "ln1.g"]
+        q[p + "ln1.b"] = fp[p + "ln1.b"]
+
+        if sw.fc1:
+            wq, ws = quantize_weight_colwise(fp[p + "fc1.w"])
+            q[p + "fc1.wq"] = wq
+            q[p + "fc1.ws"] = ws
+            q[p + "fc1.b"] = fp[p + "fc1.b"]
+        else:
+            q[p + "fc1.w"] = fp[p + "fc1.w"]
+            q[p + "fc1.b"] = fp[p + "fc1.b"]
+        if sw.fc2:
+            q[p + "gelu.sa"] = sc["s_a"]
+            wt, bt = fold_fwq_in_fwq_out(
+                fp[p + "fc2.w"], fp[p + "fc2.b"], sc["s_a"], sc["s_x2"])
+            wq, ws = quantize_weight_colwise(wt)
+            q[p + "fc2.wq"] = wq
+            q[p + "fc2.ws"] = ws
+            q[p + "fc2.bq"] = bt.astype(np.float32)
+            q[p + "ln2.sx2"] = sc["s_x2"]
+        else:
+            q[p + "fc2.w"] = fp[p + "fc2.w"]
+            q[p + "fc2.b"] = fp[p + "fc2.b"]
+        q[p + "ln2.g"] = fp[p + "ln2.g"]
+        q[p + "ln2.b"] = fp[p + "ln2.b"]
+
+    for name in ("pool.w", "pool.b", "cls.w", "cls.b"):
+        q[name] = fp[name]
+    return q

@@ -1,0 +1,155 @@
+"""Build-time trainer: fine-tunes one tiny BERT per SynGLUE task.
+
+This stands in for the paper's off-the-shelf fine-tuned
+``yoshitomo-matsubara/bert-base-uncased-*`` checkpoints (DESIGN.md §2).
+Pure JAX with a hand-rolled Adam (optax is not available in this
+environment).  Training runs once inside ``make artifacts``; nothing here
+is on the request path.
+"""
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .data import TASK_META, attn_mask
+from .metrics import compute_metric
+from .modeling.bert import bert_forward
+
+TRAIN_SEQ = 48  # sentences are short; training crops to 64 for CPU speed.
+                # Calibration/eval use the full seq 128 artifacts (padding
+                # only affects masked-out tokens).
+
+
+def crop(split, seq):
+    return {k: (v[:, :seq] if v.ndim == 2 else v) for k, v in split.items()}
+
+
+def loss_fn(params, cfg, batch, n_classes):
+    logits = bert_forward(params, cfg, batch["input_ids"], batch["type_ids"],
+                          batch["mask"])
+    if n_classes == 0:
+        pred = logits[:, 0]
+        return jnp.mean((pred - batch["labels"]) ** 2)
+    lg = logits[:, :n_classes]
+    lg = lg - jax.scipy.special.logsumexp(lg, axis=-1, keepdims=True)
+    nll = -jnp.take_along_axis(lg, batch["labels"][:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm=1.0):
+    """Standard BERT-finetuning global-norm gradient clipping."""
+    total = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads.values()))
+    scale = jnp.minimum(1.0, max_norm / (total + 1e-6))
+    return {k: g * scale for k, g in grads.items()}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    grads = clip_by_global_norm(grads)
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+    bias1 = 1.0 - b1 ** tf
+    bias2 = 1.0 - b2 ** tf
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        m = b1 * state["m"][k] + (1 - b1) * grads[k]
+        v = b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k])
+        new_m[k], new_v[k] = m, v
+        mhat = m / bias1
+        vhat = v / bias2
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def lr_schedule(step, total, peak):
+    warm = max(1, total // 10)
+    if step < warm:
+        return peak * (step + 1) / warm
+    return peak * max(0.0, (total - step) / max(1, total - warm))
+
+
+def predict(params, cfg, split, n_classes, seq, batch=64):
+    """Dev-set predictions (classification argmax / regression score)."""
+    ids = split["input_ids"][:, :seq]
+    ty = split["type_ids"][:, :seq]
+    n = ids.shape[0]
+    preds = []
+    fwd = jax.jit(lambda p, i, t, m: bert_forward(p, cfg, i, t, m))
+    for lo in range(0, n, batch):
+        hi = min(n, lo + batch)
+        bi = ids[lo:hi]
+        if bi.shape[0] < batch:  # pad the tail batch to keep one jit shape
+            padn = batch - bi.shape[0]
+            bi = np.concatenate([bi, np.zeros((padn, seq), np.int32)])
+            bt = np.concatenate([ty[lo:hi], np.zeros((padn, seq), np.int32)])
+        else:
+            bt = ty[lo:hi]
+        m = attn_mask(bi)
+        lg = np.asarray(fwd(params, jnp.asarray(bi), jnp.asarray(bt), jnp.asarray(m)))
+        lg = lg[: hi - lo]
+        if n_classes == 0:
+            preds.append(lg[:, 0])
+        else:
+            preds.append(np.argmax(lg[:, :n_classes], axis=-1))
+    return np.concatenate(preds)
+
+
+def evaluate(params, cfg, split, task, seq=128):
+    meta = TASK_META[task]
+    preds = predict(params, cfg, split, meta["classes"], seq)
+    labels = split.get("labels_i32", split.get("labels_f32"))
+    return {m: compute_metric(m, preds, labels) for m in meta["metrics"]}
+
+
+def train_task(task, splits, cfg: ModelConfig, init_params, *, epochs=3,
+               batch=32, lr=5e-4, seed=0, log=print):
+    """Returns (trained params dict of np arrays, dev metrics dict)."""
+    meta = TASK_META[task]
+    n_classes = meta["classes"]
+    tr = crop(splits["train"], TRAIN_SEQ)
+    ids, ty = tr["input_ids"], tr["type_ids"]
+    labels = tr.get("labels_i32", tr.get("labels_f32"))
+    n = ids.shape[0]
+    steps = max(1, (n // batch) * epochs)
+
+    params = {k: jnp.asarray(v) for k, v in init_params.items()}
+    state = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, state, b_ids, b_ty, b_mask, b_labels, lr_now):
+        batch_d = {"input_ids": b_ids, "type_ids": b_ty, "mask": b_mask,
+                   "labels": b_labels}
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch_d, n_classes)
+        params, state = adam_update(params, grads, state, lr_now)
+        return params, state, loss
+
+    r = np.random.default_rng(seed)
+    t0 = time.time()
+    losses = []
+    for s in range(steps):
+        idx = r.integers(0, n, size=batch)
+        b_ids = jnp.asarray(ids[idx])
+        b_ty = jnp.asarray(ty[idx])
+        b_mask = jnp.asarray(attn_mask(ids[idx]))
+        lab = labels[idx]
+        b_labels = jnp.asarray(lab if n_classes else lab.astype(np.float32))
+        lr_now = jnp.float32(lr_schedule(s, steps, lr))
+        params, state, loss = step_fn(params, state, b_ids, b_ty, b_mask,
+                                      b_labels, lr_now)
+        losses.append(float(loss))
+        if s % 50 == 0 or s == steps - 1:
+            log(f"  [{task}] step {s}/{steps} loss {np.mean(losses[-50:]):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    dev = evaluate(params, cfg, splits["dev"], task)
+    log(f"  [{task}] dev {dev}")
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    return np_params, dev

@@ -1,0 +1,140 @@
+"""SynGLUE generators + container format + metrics oracles."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import metrics as M
+from compile.container import write_container, read_container
+
+
+# ------------------------------------------------------------- container
+
+
+def test_container_roundtrip():
+    tensors = {
+        "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "q": np.array([-128, 0, 127], np.int8),
+        "ids": np.array([[1, 2], [3, 4]], np.int32),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.bin")
+        write_container(p, tensors)
+        r = read_container(p)
+    assert list(r.keys()) == ["w", "q", "ids"]
+    for k in tensors:
+        np.testing.assert_array_equal(r[k], tensors[k])
+        assert r[k].dtype == tensors[k].dtype
+
+
+def test_container_rejects_bad_magic():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "bad.bin")
+        open(p, "wb").write(b"NOTMAGIC" + b"\x00" * 10)
+        with pytest.raises(ValueError):
+            read_container(p)
+
+
+# ------------------------------------------------------------ generators
+
+
+@pytest.mark.parametrize("task", D.TASKS)
+def test_generators_deterministic_and_wellformed(task):
+    s1 = D.make_split(task, 64, 64, seed=7)
+    s2 = D.make_split(task, 64, 64, seed=7)
+    np.testing.assert_array_equal(s1["input_ids"], s2["input_ids"])
+    ids = s1["input_ids"]
+    assert ids.shape == (64, 64)
+    assert ids.dtype == np.int32
+    # starts with CLS, all ids within vocab
+    assert (ids[:, 0] == 1).all()
+    assert ids.min() >= 0 and ids.max() < 2048
+    # every row has at least one SEP and ends in PAD or SEP
+    assert ((ids == 2).sum(axis=1) >= 1).all()
+    # type ids only 0/1 and 0 on padding
+    ty = s1["type_ids"]
+    assert set(np.unique(ty)) <= {0, 1}
+    assert (ty[ids == 0] == 0).all()
+
+
+def test_label_balances():
+    sst2 = D.make_split("sst2", 500, 64, seed=1)["labels_i32"]
+    assert 0.4 < sst2.mean() < 0.6
+    mrpc = D.make_split("mrpc", 500, 64, seed=1)["labels_i32"]
+    assert 0.6 < mrpc.mean() < 0.76  # ~68% positive like MRPC
+    qqp = D.make_split("qqp", 500, 64, seed=1)["labels_i32"]
+    assert 0.3 < qqp.mean() < 0.45  # ~37% positive like QQP
+    mnli = D.make_split("mnli", 600, 64, seed=1)["labels_i32"]
+    for c in range(3):
+        assert 0.25 < (mnli == c).mean() < 0.42
+
+
+def test_stsb_scores_in_range():
+    s = D.make_split("stsb", 300, 64, seed=2)["labels_f32"]
+    assert s.min() >= 0.0 and s.max() <= 5.0
+    assert s.std() > 0.8  # spread across the range
+
+
+def test_cola_negatives_are_minimal_edits():
+    """cola negatives must stay near the decision boundary: token multiset
+    differs from an acceptable sentence by a small edit."""
+    s = D.make_split("cola", 200, 64, seed=3)
+    ids, labels = s["input_ids"], s["labels_i32"]
+    verbs = set(D.VERB_TOKENS)
+    for row, label in zip(ids, labels):
+        toks = [t for t in row.tolist() if t > 3]
+        vcount = sum(t in verbs for t in toks)
+        if label == 1:
+            assert vcount == 1  # exactly one verb in acceptable sentences
+        else:
+            assert vcount in (0, 1, 2)
+
+
+def test_mask_matches_pad():
+    s = D.make_split("qnli", 50, 64, seed=4)
+    m = D.attn_mask(s["input_ids"])
+    assert ((m == 0) == (s["input_ids"] == 0)).all()
+
+
+def test_fast_sizes_smaller():
+    for t in D.TASKS:
+        assert D.FAST_SIZES[t][0] < D.SIZES[t][0]
+
+
+# --------------------------------------------------------------- metrics
+
+
+def test_mcc_against_known():
+    preds = np.array([1, 1, 0, 0, 1, 0])
+    labels = np.array([1, 0, 0, 1, 1, 0])
+    # tp=2 tn=2 fp=1 fn=1 -> mcc = (4-1)/sqrt(3*3*3*3) = 3/9
+    assert abs(M.matthews_corrcoef(preds, labels) - 1 / 3) < 1e-12
+
+
+def test_f1_acc_known():
+    preds = np.array([1, 1, 1, 0])
+    labels = np.array([1, 0, 1, 1])
+    assert abs(M.f1_binary(preds, labels) - 2 * 2 / (2 * 2 + 1 + 1)) < 1e-12
+    assert M.accuracy(preds, labels) == 0.5
+
+
+def test_spearman_ties_and_scipy_parity():
+    from scipy import stats as ss
+    r = np.random.default_rng(5)
+    x = r.normal(size=50)
+    y = x + r.normal(scale=0.5, size=50)
+    x[:5] = x[5:10]  # inject ties
+    want = ss.spearmanr(x, y).statistic
+    got = M.spearman(x, y)
+    assert abs(got - want) < 1e-10
+
+
+def test_pearson_scipy_parity():
+    from scipy import stats as ss
+    r = np.random.default_rng(6)
+    x = r.normal(size=40)
+    y = 2 * x + r.normal(size=40)
+    assert abs(M.pearson(x, y) - ss.pearsonr(x, y).statistic) < 1e-10

@@ -1,0 +1,296 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes/scale regimes; int8 outputs are compared exactly
+(kernel and oracle are written with bit-identical op sequences), f32 outputs
+with tight tolerances.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    ln_quant, ln_quant_embed, twq_quantize,
+    gemm_twq_to_i8, gemm_twq_to_f32, gemm_folded_to_i8, gemm_folded_to_f32,
+    gelu_quant, gelu_fp, softmax_quant, attention_quant,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+DIMS = st.sampled_from([8, 16, 32, 64, 128])
+TOKENS = st.sampled_from([4, 8, 32, 64, 128])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+HSET = settings(max_examples=12, deadline=None)
+
+
+def rng_f32(seed, shape, lo=-4.0, hi=4.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(lo, hi, size=shape), jnp.float32)
+
+
+def rng_i8(seed, shape):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.integers(-127, 128, size=shape), jnp.int8)
+
+
+def rng_scale(seed, shape, lo=1e-3, hi=0.2):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(np.exp(r.uniform(np.log(lo), np.log(hi), size=shape)), jnp.float32)
+
+
+# ---------------------------------------------------------------- TWQ
+
+
+@HSET
+@given(n=TOKENS, d=DIMS, seed=SEEDS)
+def test_twq_quantize(n, d, seed):
+    x = rng_f32(seed, (n, d))
+    q, s = twq_quantize(x)
+    qr, sr = ref.twq_quantize(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+
+
+def test_twq_roundtrip_error_bound():
+    x = rng_f32(0, (32, 64))
+    q, s = twq_quantize(x)
+    recon = np.asarray(q, np.float32) * np.asarray(s)
+    err = np.abs(recon - np.asarray(x))
+    # round-to-nearest: |err| <= scale/2 per token
+    assert (err <= np.asarray(s) / 2 + 1e-6).all()
+
+
+def test_twq_zero_input():
+    q, s = twq_quantize(jnp.zeros((4, 16), jnp.float32))
+    assert np.all(np.asarray(q) == 0)
+    assert np.all(np.asarray(s) > 0)  # floor guard, no NaN
+
+
+# ---------------------------------------------------------------- LN^quant
+
+
+@HSET
+@given(n=TOKENS, d=DIMS, seed=SEEDS,
+       a_q=st.booleans(), b_q=st.booleans(), out_q=st.booleans())
+def test_ln_quant_all_variants(n, d, seed, a_q, b_q, out_q):
+    gamma = rng_f32(seed + 1, (d,), 0.5, 1.5)
+    beta = rng_f32(seed + 2, (d,), -0.5, 0.5)
+    if a_q:
+        a = rng_i8(seed + 3, (n, d))
+        a_scale = rng_scale(seed + 4, (n, 1))
+    else:
+        a = rng_f32(seed + 3, (n, d))
+        a_scale = None
+    if b_q:
+        b = rng_i8(seed + 5, (n, d))
+        b_scale = rng_scale(seed + 6, (1, d))
+    else:
+        b = rng_f32(seed + 5, (n, d))
+        b_scale = None
+
+    got = ln_quant(a, b, gamma, beta, a_scale=a_scale, b_scale=b_scale,
+                   quantize_out=out_q)
+    want = ref.ln_quant(a, b, gamma.reshape(1, d), beta.reshape(1, d),
+                        a_scale=a_scale, b_scale=b_scale, quantize_out=out_q)
+    if out_q:
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-6)
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@HSET
+@given(n=TOKENS, d=DIMS, seed=SEEDS, t_q=st.booleans())
+def test_ln_quant_embed(n, d, seed, t_q):
+    gamma = rng_f32(seed + 1, (d,), 0.5, 1.5)
+    beta = rng_f32(seed + 2, (d,), -0.5, 0.5)
+    x_pb = rng_f32(seed + 3, (n, d), -1, 1)
+    if t_q:
+        x_t = rng_i8(seed + 4, (n, d))
+        t_scale = rng_scale(seed + 5, (n, 1))
+    else:
+        x_t = rng_f32(seed + 4, (n, d))
+        t_scale = None
+    got = ln_quant_embed(x_t, x_pb, gamma, beta, t_scale=t_scale)
+    want = ref.ln_quant_embed(x_t, x_pb, gamma.reshape(1, d), beta.reshape(1, d),
+                              t_scale=t_scale)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- GeMM^quant
+
+
+@HSET
+@given(n=TOKENS, k=DIMS, m=DIMS, seed=SEEDS)
+def test_gemm_twq_to_i8(n, k, m, seed):
+    x = rng_i8(seed, (n, k))
+    w = rng_i8(seed + 1, (k, m))
+    xs = rng_scale(seed + 2, (n, 1))
+    ws = rng_scale(seed + 3, (1, m), 1e-4, 1e-2)
+    b = rng_f32(seed + 4, (1, m), -2, 2)
+    got = gemm_twq_to_i8(x, w, xs, ws, b)
+    want = ref.gemm_twq_to_i8(x, w, xs, ws, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@HSET
+@given(n=TOKENS, k=DIMS, m=DIMS, seed=SEEDS)
+def test_gemm_twq_to_f32(n, k, m, seed):
+    x = rng_i8(seed, (n, k))
+    w = rng_i8(seed + 1, (k, m))
+    xs = rng_scale(seed + 2, (n, 1))
+    ws = rng_scale(seed + 3, (1, m), 1e-4, 1e-2)
+    b = rng_f32(seed + 4, (1, m), -2, 2)
+    got = gemm_twq_to_f32(x, w, xs, ws, b)
+    want = ref.gemm_twq_to_f32(x, w, xs, ws, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@HSET
+@given(n=TOKENS, k=DIMS, m=DIMS, seed=SEEDS)
+def test_gemm_folded_to_i8(n, k, m, seed):
+    x = rng_i8(seed, (n, k))
+    w = rng_i8(seed + 1, (k, m))
+    ws = rng_scale(seed + 2, (1, m), 1e-4, 1e-2)
+    b = rng_f32(seed + 3, (1, m), -2, 2)
+    got = gemm_folded_to_i8(x, w, ws, b)
+    want = ref.gemm_folded_to_i8(x, w, ws, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@HSET
+@given(n=TOKENS, k=DIMS, m=DIMS, seed=SEEDS)
+def test_gemm_folded_to_f32(n, k, m, seed):
+    x = rng_i8(seed, (n, k))
+    w = rng_i8(seed + 1, (k, m))
+    ws = rng_scale(seed + 2, (1, m), 1e-4, 1e-2)
+    b = rng_f32(seed + 3, (1, m), -2, 2)
+    got = gemm_folded_to_f32(x, w, ws, b)
+    want = ref.gemm_folded_to_f32(x, w, ws, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_int32_accumulation_no_overflow_path():
+    # worst case: all +-127 over the largest contraction in the model (ffn=512)
+    n, k, m = 8, 512, 16
+    x = jnp.full((n, k), 127, jnp.int8)
+    w = jnp.full((k, m), -127, jnp.int8)
+    ws = jnp.full((1, m), 1e-6, jnp.float32)
+    b = jnp.zeros((1, m), jnp.float32)
+    got = gemm_folded_to_f32(x, w, ws, b)
+    want = ref.gemm_folded_to_f32(x, w, ws, b)  # -127*127*512 = -8258048 fits i32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- GELU^quant
+
+
+@HSET
+@given(n=TOKENS, f=DIMS, seed=SEEDS)
+def test_gelu_quant(n, f, seed):
+    x = rng_f32(seed, (n, f), -6, 6)
+    sa = rng_scale(seed + 1, (1, f))
+    got = gelu_quant(x, sa)
+    want = ref.gelu_quant(x, sa)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@HSET
+@given(n=TOKENS, f=DIMS, seed=SEEDS)
+def test_gelu_fp(n, f, seed):
+    x = rng_f32(seed, (n, f), -6, 6)
+    got = gelu_fp(x)
+    want = ref.gelu(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- Softmax^quant
+
+
+@HSET
+@given(r=TOKENS, n=DIMS, seed=SEEDS)
+def test_softmax_quant(r, n, seed):
+    a = rng_f32(seed, (r, n), -8, 8)
+    sp = 1.0 / 255.0
+    got = softmax_quant(a, sp)
+    want = ref.softmax_quant(a, sp)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_softmax_quant_range():
+    a = rng_f32(3, (16, 32), -8, 8)
+    q = np.asarray(softmax_quant(a, 1.0 / 255.0))
+    assert q.min() >= -128 and q.max() <= 127
+    # dequantized rows still ~sum to 1
+    p = (q.astype(np.float32) + 128) / 255.0
+    np.testing.assert_allclose(p.sum(axis=-1), 1.0, atol=0.15)
+
+
+# ---------------------------------------------------------------- attention
+
+
+@HSET
+@given(bh=st.sampled_from([1, 2, 4, 8]), n=st.sampled_from([16, 32, 64, 128]),
+       dh=st.sampled_from([16, 32]), seed=SEEDS, frac=st.floats(0.25, 1.0))
+def test_attention_quant(bh, n, dh, seed, frac):
+    q = rng_i8(seed, (bh, n, dh))
+    k = rng_i8(seed + 1, (bh, n, dh))
+    v = rng_i8(seed + 2, (bh, n, dh))
+    valid = max(1, int(n * frac))
+    mask = np.zeros((bh, n), np.float32)
+    mask[:, :valid] = 1.0
+    mask = jnp.asarray(mask)
+    qk_scale = 0.02 * 0.02 / np.sqrt(dh)
+    sp = 1.0 / 255.0
+    pv = rng_scale(seed + 3, (bh, 1, dh), 1e-3, 1e-1)
+    got = attention_quant(q, k, v, mask, qk_scale, sp, pv)
+    want = ref.attention_quant(q, k, v, mask, qk_scale, sp, pv)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_attention_quant_masked_keys_do_not_contribute():
+    # identical q/k/v except in masked region -> identical outputs
+    bh, n, dh = 2, 32, 16
+    q = rng_i8(0, (bh, n, dh)); k1 = np.asarray(rng_i8(1, (bh, n, dh))).copy()
+    v1 = np.asarray(rng_i8(2, (bh, n, dh))).copy()
+    k2, v2 = k1.copy(), v1.copy()
+    k2[:, 16:, :] = 99 - k2[:, 16:, :]
+    v2[:, 16:, :] = 99 - v2[:, 16:, :]
+    mask = np.zeros((bh, n), np.float32); mask[:, :16] = 1.0
+    args = (jnp.asarray(mask), 1e-4, 1.0 / 255.0, jnp.full((bh, 1, dh), 0.05, jnp.float32))
+    o1 = attention_quant(q, jnp.asarray(k1), jnp.asarray(v1), *args)
+    o2 = attention_quant(q, jnp.asarray(k2), jnp.asarray(v2), *args)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_attention_quant_vs_fp_reference_close():
+    """Dequantized INT8 attention must approximate FP attention."""
+    bh, n, dh = 4, 64, 32
+    r = np.random.default_rng(7)
+    qf = r.normal(0, 1, (bh, n, dh)).astype(np.float32)
+    kf = r.normal(0, 1, (bh, n, dh)).astype(np.float32)
+    vf = r.normal(0, 1, (bh, n, dh)).astype(np.float32)
+    mask = jnp.ones((bh, n), jnp.float32)
+
+    sq = float(np.abs(qf).max() / 127); sk = float(np.abs(kf).max() / 127)
+    sv = float(np.abs(vf).max() / 127)
+    qi = jnp.asarray(np.clip(np.round(qf / sq), -127, 127), jnp.int8)
+    ki = jnp.asarray(np.clip(np.round(kf / sk), -127, 127), jnp.int8)
+    vi = jnp.asarray(np.clip(np.round(vf / sv), -127, 127), jnp.int8)
+
+    fp = ref.attention_fp(jnp.asarray(qf), jnp.asarray(kf), jnp.asarray(vf),
+                          mask, 1.0 / np.sqrt(dh))
+    s_attn = np.maximum(np.abs(np.asarray(fp)).max(axis=(0, 1)), 1e-6) / 127.0
+    sp = 1.0 / 255.0
+    pv = jnp.asarray((sp * sv / s_attn)[None, None, :], jnp.float32)
+    pv = jnp.broadcast_to(pv, (bh, 1, dh))
+    qi8 = attention_quant(qi, ki, vi, mask, sq * sk / np.sqrt(dh), sp, pv)
+    deq = np.asarray(qi8, np.float32) * s_attn[None, None, :]
+    err = np.abs(deq - np.asarray(fp))
+    # int8 end-to-end attention should track FP within a few quant steps
+    assert np.median(err) < 0.05, np.median(err)
+    assert err.max() < 0.25, err.max()

@@ -1,0 +1,181 @@
+"""L2 correctness: FP encoder, HERO quantized encoder (all modes + extra
+switch combos), calibration statistics, and the PTQ transform."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.config import ModelConfig, MODES, QuantSwitches, switches_from_tag
+from compile.modeling import (
+    fp_param_specs, hero_param_specs, init_fp_params, bert_forward,
+    hero_forward, calibration_forward, quantize_checkpoint,
+)
+from compile.data import attn_mask
+
+CFG = ModelConfig(vocab_size=256, hidden=64, layers=2, heads=4, ffn=128,
+                  max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    fp = init_fp_params(CFG, seed=3)
+    r = np.random.default_rng(0)
+    ids = np.full((4, 32), 0, np.int32)
+    for i in range(4):
+        n = r.integers(8, 32)
+        ids[i, :n] = r.integers(4, CFG.vocab_size, n)
+        ids[i, 0] = 1
+    ty = np.zeros((4, 32), np.int32)
+    mask = attn_mask(ids)
+    fpj = {k: jnp.asarray(v) for k, v in fp.items()}
+    logits, stats = calibration_forward(fpj, CFG, jnp.asarray(ids), jnp.asarray(ty),
+                                        jnp.asarray(mask))
+    stats = {k: np.asarray(v) for k, v in stats.items()}
+    return fp, fpj, ids, ty, mask, np.asarray(logits), stats
+
+
+def run_hero(fp, stats, sw, ids, ty, mask):
+    hq = quantize_checkpoint(fp, stats, CFG, sw)
+    hqj = {k: jnp.asarray(v) for k, v in hq.items()}
+    return np.asarray(hero_forward(hqj, CFG, sw, jnp.asarray(ids),
+                                   jnp.asarray(ty), jnp.asarray(mask))), hq
+
+
+# ------------------------------------------------------------- spec parity
+
+
+@pytest.mark.parametrize("tag", [f"{i:06b}" for i in range(64)])
+def test_quantize_matches_specs_all_combos(tag, setup):
+    """quantize_checkpoint output must match hero_param_specs exactly for
+    every one of the 64 switch combinations (names, order, shape, dtype)."""
+    fp, _, _, _, _, _, stats = setup
+    sw = switches_from_tag(tag)
+    hq = quantize_checkpoint(fp, stats, CFG, sw)
+    specs = hero_param_specs(CFG, sw)
+    assert list(hq.keys()) == [n for n, _, _ in specs]
+    for name, shape, dt in specs:
+        assert tuple(hq[name].shape) == shape, (name, hq[name].shape, shape)
+        want = np.int8 if dt == "i8" else np.float32
+        assert hq[name].dtype == want, (name, hq[name].dtype)
+
+
+def test_fp_specs_cover_init():
+    fp = init_fp_params(CFG, seed=0)
+    assert list(fp.keys()) == [n for n, _, _ in fp_param_specs(CFG)]
+
+
+# -------------------------------------------------------- mode divergence
+
+
+@pytest.mark.parametrize("mode", ["m1", "m2", "m3"])
+def test_hero_mode_close_to_fp(mode, setup):
+    fp, _, ids, ty, mask, logits_fp, stats = setup
+    lo, _ = run_hero(fp, stats, MODES[mode], ids, ty, mask)
+    diff = np.abs(lo - logits_fp).max()
+    scale = np.abs(logits_fp).max() + 1e-6
+    assert diff / scale < 0.25, (mode, diff, scale)
+    # predictions (argmax) should mostly agree on random inputs
+    agree = (lo.argmax(-1) == logits_fp.argmax(-1)).mean()
+    assert agree >= 0.75, (mode, agree)
+
+
+@pytest.mark.parametrize("tag", ["010000", "011000", "011100", "110110",
+                                 "100010", "111010"])
+def test_hero_extra_switch_combos_run(tag, setup):
+    """Non-preset combinations (incl. the 'unfused quantize' fallbacks)
+    must run and stay near FP."""
+    fp, _, ids, ty, mask, logits_fp, stats = setup
+    lo, _ = run_hero(fp, stats, switches_from_tag(tag), ids, ty, mask)
+    assert np.isfinite(lo).all()
+    diff = np.abs(lo - logits_fp).max() / (np.abs(logits_fp).max() + 1e-6)
+    assert diff < 0.35, (tag, diff)
+
+
+def test_all_off_equals_fp(setup):
+    fp, fpj, ids, ty, mask, logits_fp, stats = setup
+    lo, _ = run_hero(fp, stats, QuantSwitches(), ids, ty, mask)
+    np.testing.assert_allclose(lo, logits_fp, rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------------------------------------ calibration
+
+
+def test_calibration_stats_shapes_and_positivity(setup):
+    _, _, _, _, _, _, stats = setup
+    L, d, f = CFG.layers, CFG.hidden, CFG.ffn
+    assert stats["q_absmax"].shape == (L,)
+    assert stats["attn_absmax"].shape == (L, d)
+    assert stats["gelu_absmax"].shape == (L, f)
+    assert stats["x2_absmax"].shape == (L, d)
+    for k, v in stats.items():
+        assert (v >= 0).all(), k
+        assert np.isfinite(v).all(), k
+    # softmax output max must be <= 1 and > 0
+    assert (stats["p_max"] <= 1.0 + 1e-6).all()
+    assert (stats["p_max"] > 0).all()
+
+
+def test_calibration_masks_pad_tokens(setup):
+    """Stats must not change when garbage is placed in PAD positions."""
+    fp, fpj, ids, ty, mask, _, stats = setup
+    ids2 = ids.copy()
+    pad_pos = ids2 == 0
+    assert pad_pos.any()
+    ids2[pad_pos] = 200  # garbage tokens at masked positions
+    _, stats2 = calibration_forward(fpj, CFG, jnp.asarray(ids2), jnp.asarray(ty),
+                                    jnp.asarray(mask))
+    for k in stats:
+        np.testing.assert_allclose(stats[k], np.asarray(stats2[k]), rtol=1e-5,
+                                   err_msg=k)
+
+
+def test_calibration_logits_match_plain_forward(setup):
+    fp, fpj, ids, ty, mask, logits_fp, _ = setup
+    plain = bert_forward(fpj, CFG, jnp.asarray(ids), jnp.asarray(ty), jnp.asarray(mask))
+    np.testing.assert_allclose(logits_fp, np.asarray(plain), rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------------------------- PTQ transform
+
+
+def test_folded_weights_reconstruct(setup):
+    """W~_2 folding (eq. 32): dequantized folded weight must equal
+    diag(S_a) W diag(1/S_x2) within the weight-quant step."""
+    fp, _, _, _, _, _, stats = setup
+    sw = MODES["m3"]
+    hq = quantize_checkpoint(fp, stats, CFG, sw)
+    from compile.modeling.quantize import derive_scales
+    sc = derive_scales(stats, CFG)[0]
+    wt_expected = (sc["s_a"][:, None] * fp["L0.fc2.w"]) / sc["s_x2"][None, :]
+    recon = hq["L0.fc2.wq"].astype(np.float32) * hq["L0.fc2.ws"][None, :]
+    step = hq["L0.fc2.ws"][None, :]
+    assert (np.abs(recon - wt_expected) <= step / 2 + 1e-6).all()
+
+
+def test_sq_fold_makes_round_exact(setup):
+    """After eq. 20-22 folding, requantizing X_q needs no division: the
+    epilogue scale S_in*S~_w already lands in the S_q domain."""
+    fp, _, _, _, _, _, stats = setup
+    sw = MODES["m3"]
+    hq = quantize_checkpoint(fp, stats, CFG, sw)
+    from compile.modeling.quantize import derive_scales
+    sc = derive_scales(stats, CFG)[0]
+    # W~_q * S_q must reconstruct W_q within quant error
+    recon = (hq["L0.attn.q.wq"].astype(np.float32) * hq["L0.attn.q.ws"][None, :]
+             * sc["sq_q"])
+    err = np.abs(recon - fp["L0.attn.q.w"])
+    step = hq["L0.attn.q.ws"][None, :] * sc["sq_q"]
+    assert (err <= step / 2 + 1e-6).all()
+
+
+def test_percentile_clipping_shrinks_scales(setup):
+    fp, _, _, _, _, _, stats = setup
+    from compile.modeling.quantize import derive_scales
+    # build a fake 5-batch history with one outlier batch
+    hist = {k: np.stack([v, v * 0.9, v * 0.95, v * 1.05, v * 10.0])
+            for k, v in stats.items()}
+    full = derive_scales(hist, CFG, pct=100.0)
+    clipped = derive_scales(hist, CFG, pct=75.0)
+    assert clipped[0]["sq_q"] < full[0]["sq_q"]
+    assert (clipped[0]["s_attn"] <= full[0]["s_attn"] + 1e-12).all()

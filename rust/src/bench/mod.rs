@@ -1,0 +1,171 @@
+//! Bench harness (criterion is unavailable offline — DESIGN.md §2):
+//! warmup + timed iterations with mean/percentile reporting, plus table
+//! formatting shared by the paper-reproduction benches.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+}
+
+impl Stats {
+    pub fn from_samples_us(mut v: Vec<f64>) -> Stats {
+        assert!(!v.is_empty());
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |p: f64| {
+            let idx = ((v.len() - 1) as f64 * p).round() as usize;
+            v[idx]
+        };
+        Stats {
+            iters: v.len(),
+            mean_us: v.iter().sum::<f64>() / v.len() as f64,
+            p50_us: pick(0.50),
+            p95_us: pick(0.95),
+            p99_us: pick(0.99),
+            min_us: v[0],
+            max_us: v[v.len() - 1],
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    Stats::from_samples_us(samples)
+}
+
+/// Adaptive: run for at least `min_time_s` seconds, at least 5 iters.
+pub fn bench_seconds<F: FnMut()>(warmup: usize, min_time_s: f64, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < min_time_s || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    Stats::from_samples_us(samples)
+}
+
+// ------------------------------------------------------------- formatting
+
+/// Simple monospace table printer for the paper-reproduction benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+pub fn fmt_us(us: f64) -> String {
+    if us >= 1e6 {
+        format!("{:.2}s", us / 1e6)
+    } else if us >= 1e3 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{us:.0}us")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples_us((1..=100).map(|i| i as f64).collect());
+        assert!(s.min_us <= s.p50_us);
+        assert!(s.p50_us <= s.p95_us);
+        assert!(s.p95_us <= s.p99_us);
+        assert!(s.p99_us <= s.max_us);
+        assert!((s.mean_us - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let s = bench(2, 10, || n += 1);
+        assert_eq!(s.iters, 10);
+        assert_eq!(n, 12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "long-header"]);
+        t.row(vec!["xxxx".into(), "1".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_us(500.0), "500us");
+        assert_eq!(fmt_us(1500.0), "1.50ms");
+        assert_eq!(fmt_us(2.5e6), "2.50s");
+    }
+}

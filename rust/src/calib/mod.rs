@@ -1,0 +1,155 @@
+//! Calibration orchestrator (paper §3: "100 batches, batch size 16" of
+//! forward passes): drives the instrumented FP artifact over the task's
+//! train split, records the per-batch stat history (so percentile clipping
+//! — Discussion (b) — can be applied after the fact), and persists it as
+//! JSON next to the checkpoint.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{batches, Split};
+use crate::json::{self, Value};
+use crate::model::manifest::TaskSpec;
+use crate::model::Container;
+use crate::runtime::Runtime;
+
+/// Per-batch history: stat name -> [batch][flattened values].
+pub type StatHistory = Vec<(String, Vec<Vec<f64>>)>;
+
+/// Run calibration: `num_batches` batches of the manifest's calibration
+/// batch size, drawn sequentially from the train split (wrapping).
+pub fn run_calibration(
+    rt: &mut Runtime,
+    task: &TaskSpec,
+    fp: &Container,
+    num_batches: usize,
+) -> Result<StatHistory> {
+    let split = Split::load(&rt.manifest, task, "train")?;
+    let cb = rt.manifest.calib.batch;
+    let stat_names: Vec<String> =
+        rt.manifest.calib.stats.iter().map(|(n, _)| n.clone()).collect();
+
+    // fp params in manifest order, uploaded once
+    let mut tensors = Vec::new();
+    for spec in &rt.manifest.calib.params {
+        let t = fp
+            .get(&spec.name)
+            .with_context(|| format!("fp checkpoint missing {}", spec.name))?;
+        if t.shape != spec.shape {
+            bail!("{}: shape {:?} != manifest {:?}", spec.name, t.shape, spec.shape);
+        }
+        tensors.push(t.clone());
+    }
+    let fp_bufs = rt.upload_all(&tensors)?;
+
+    let all = batches(&split, cb);
+    if all.is_empty() {
+        bail!("empty train split for {}", task.name);
+    }
+    // only full batches are usable (fixed artifact shape); wrap if needed
+    let full: Vec<_> = all.iter().filter(|b| b.real == cb).collect();
+    if full.is_empty() {
+        bail!("train split smaller than one calibration batch");
+    }
+
+    let mut history: StatHistory =
+        stat_names.iter().map(|n| (n.clone(), Vec::new())).collect();
+    for bi in 0..num_batches {
+        let b = full[bi % full.len()];
+        let out = rt.calibrate_batch(&fp_bufs, &b.ids, &b.type_ids, &b.mask)?;
+        // outputs: [logits, stat0, stat1, ...] in manifest order
+        if out.tensors.len() != 1 + stat_names.len() {
+            bail!(
+                "calibration artifact returned {} outputs, expected {}",
+                out.tensors.len(),
+                1 + stat_names.len()
+            );
+        }
+        for (i, t) in out.tensors[1..].iter().enumerate() {
+            let vals: Vec<f64> = t.as_f32()?.iter().map(|x| *x as f64).collect();
+            history[i].1.push(vals);
+        }
+    }
+    Ok(history)
+}
+
+// ------------------------------------------------------------ persistence
+
+pub fn save_history(path: &Path, hist: &StatHistory, num_batches: usize) -> Result<()> {
+    let stats = Value::Object(
+        hist.iter()
+            .map(|(name, per_batch)| {
+                let arr = Value::Array(per_batch.iter().map(|b| json::arr_f64(b)).collect());
+                (name.clone(), arr)
+            })
+            .collect(),
+    );
+    let doc = json::obj(vec![
+        ("batches", json::num(num_batches as f64)),
+        ("stats", stats),
+    ]);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, json::to_string_pretty(&doc))?;
+    Ok(())
+}
+
+pub fn load_history(path: &Path) -> Result<StatHistory> {
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let doc = json::parse(&src).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    let stats = doc
+        .get("stats")
+        .and_then(|s| s.as_object())
+        .context("calib json missing stats")?;
+    let mut out = Vec::new();
+    for (name, batches_v) in stats {
+        let mut per_batch = Vec::new();
+        for b in batches_v.as_array().context("stat not array")? {
+            let vals = b
+                .as_array()
+                .context("batch not array")?
+                .iter()
+                .map(|x| x.as_f64().context("stat value"))
+                .collect::<Result<Vec<f64>>>()?;
+            per_batch.push(vals);
+        }
+        out.push((name.clone(), per_batch));
+    }
+    Ok(out)
+}
+
+/// Truncate a history to its first `n` batches (the calibration-batches
+/// ablation reuses one 100-batch run).
+pub fn truncate_history(hist: &StatHistory, n: usize) -> StatHistory {
+    hist.iter()
+        .map(|(name, per_batch)| (name.clone(), per_batch.iter().take(n).cloned().collect()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_json_roundtrip() {
+        let hist: StatHistory = vec![
+            ("q_absmax".into(), vec![vec![1.0, 2.0], vec![1.5, 2.5]]),
+            ("attn_absmax".into(), vec![vec![0.1; 8], vec![0.2; 8]]),
+        ];
+        let dir = std::env::temp_dir().join("zqh_calib_test");
+        let path = dir.join("calib.json");
+        save_history(&path, &hist, 2).unwrap();
+        let r = load_history(&path).unwrap();
+        assert_eq!(r, hist);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncation() {
+        let hist: StatHistory = vec![("x".into(), vec![vec![1.0], vec![2.0], vec![3.0]])];
+        let t = truncate_history(&hist, 2);
+        assert_eq!(t[0].1.len(), 2);
+    }
+}

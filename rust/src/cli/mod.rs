@@ -1,0 +1,216 @@
+//! Tiny CLI argument parser (clap is unavailable offline — DESIGN.md §2).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Option spec: name, takes_value, default, help.
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+pub struct SubSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub subs: Vec<SubSpec>,
+}
+
+impl Cli {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n",
+            self.bin, self.about, self.bin);
+        for sub in &self.subs {
+            s.push_str(&format!("  {:<22} {}\n", sub.name, sub.help));
+        }
+        s.push_str("\nRun with `<COMMAND> --help` for command options.\n");
+        s
+    }
+
+    pub fn sub_usage(&self, sub: &SubSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.bin, sub.name, sub.help);
+        for o in &sub.opts {
+            let arg = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {:<26} {}{}\n", arg, o.help, def));
+        }
+        s
+    }
+
+    /// Parse argv (without argv[0]).  Returns Err with a message that the
+    /// caller should print (usage text for --help).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(CliError(self.usage()));
+        }
+        let name = &argv[0];
+        let sub = self
+            .subs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| CliError(format!("unknown command {name:?}\n\n{}", self.usage())))?;
+
+        let mut flags = BTreeMap::new();
+        for o in &sub.opts {
+            if let Some(d) = o.default {
+                flags.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.sub_usage(sub)));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = sub.opts.iter().find(|o| o.name == key).ok_or_else(|| {
+                    CliError(format!("unknown option --{key}\n\n{}", self.sub_usage(sub)))
+                })?;
+                let val = if spec.takes_value {
+                    match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                        }
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{key} takes no value")));
+                    }
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { subcommand: sub.name.to_string(), flags, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{key}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{key}: expected number, got {v:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "repro",
+            about: "test",
+            subs: vec![SubSpec {
+                name: "eval",
+                help: "run eval",
+                opts: vec![
+                    OptSpec { name: "mode", takes_value: true, default: Some("fp"), help: "" },
+                    OptSpec { name: "all", takes_value: false, default: None, help: "" },
+                    OptSpec { name: "pct", takes_value: true, default: None, help: "" },
+                ],
+            }],
+        }
+    }
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_flags() {
+        let a = cli().parse(&sv(&["eval", "--all", "task1"])).unwrap();
+        assert_eq!(a.get("mode"), Some("fp"));
+        assert!(a.get_bool("all"));
+        assert_eq!(a.positional, vec!["task1"]);
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = cli().parse(&sv(&["eval", "--mode", "m3", "--pct=99.9"])).unwrap();
+        assert_eq!(a.get("mode"), Some("m3"));
+        assert_eq!(a.get_f64("pct").unwrap(), Some(99.9));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(cli().parse(&sv(&["nope"])).is_err());
+        assert!(cli().parse(&sv(&["eval", "--bogus"])).is_err());
+        assert!(cli().parse(&sv(&["eval", "--mode"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = cli().parse(&sv(&["eval", "--help"])).unwrap_err();
+        assert!(err.0.contains("OPTIONS"));
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the paper's missing "end-to-end system" — request
+//! routing, dynamic batching, per-request precision modes, backpressure,
+//! and serving metrics over the PJRT engine thread.
+
+pub mod batcher;
+pub mod net;
+pub mod request;
+pub mod server;
+pub mod stats;
+
+pub use batcher::{Batch, Batcher};
+pub use request::{GroupKey, Request, Response, Timing};
+pub use server::{checkpoint_rel, Coordinator, ServerConfig};
+pub use net::{NetClient, NetServer};
+pub use stats::{Histogram, Recorder};

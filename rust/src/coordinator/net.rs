@@ -1,0 +1,225 @@
+//! Network front-end: newline-delimited JSON over TCP, served by the
+//! coordinator (`repro serve --port N`).
+//!
+//! Request  : {"task": "sst2", "mode": "m3", "ids": [...], "type_ids": [...]}
+//!            (`type_ids` optional — defaults to zeros; short `ids` are
+//!            padded to the model sequence length)
+//! Response : {"ok": true, "logits": [...], "queue_us": .., "exec_us": ..,
+//!             "bucket": ..} | {"ok": false, "error": "..."}
+//!
+//! One OS thread per connection (requests within a connection pipeline
+//! through the dynamic batcher like any other); shutdown via the returned
+//! handle.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Value};
+
+use super::server::Coordinator;
+
+pub struct NetServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+    pub connections: Arc<AtomicU64>,
+    pub served: Arc<AtomicU64>,
+}
+
+impl NetServer {
+    /// Bind `host:port` (port 0 = ephemeral) and serve until dropped.
+    pub fn start(coord: Arc<Coordinator>, host: &str, port: u16) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind((host, port)).with_context(|| format!("bind {host}:{port}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(AtomicU64::new(0));
+        let served = Arc::new(AtomicU64::new(0));
+
+        let t_stop = Arc::clone(&stop);
+        let t_conns = Arc::clone(&connections);
+        let t_served = Arc::clone(&served);
+        let accept_join = std::thread::Builder::new()
+            .name("zqh-accept".into())
+            .spawn(move || {
+                let mut workers = Vec::new();
+                while !t_stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            t_conns.fetch_add(1, Ordering::SeqCst);
+                            let coord = Arc::clone(&coord);
+                            let served = Arc::clone(&t_served);
+                            let stop = Arc::clone(&t_stop);
+                            workers.push(std::thread::spawn(move || {
+                                let _ = handle_conn(stream, &coord, &served, &stop);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for w in workers {
+                    let _ = w.join();
+                }
+            })
+            .context("spawn acceptor")?;
+
+        Ok(NetServer { addr, stop, accept_join: Some(accept_join), connections, served })
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn ids_from(v: &Value, key: &str, seq: usize) -> Result<Option<Vec<i32>>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(arr) => {
+            let a = arr.as_array().context("ids must be an array")?;
+            anyhow::ensure!(a.len() <= seq, "too many tokens ({} > seq {seq})", a.len());
+            let mut out = Vec::with_capacity(seq);
+            for x in a {
+                out.push(x.as_f64().context("token not a number")? as i32);
+            }
+            out.resize(seq, crate::data::PAD);
+            Ok(Some(out))
+        }
+    }
+}
+
+fn process_line(line: &str, coord: &Coordinator) -> Value {
+    let fail = |msg: String| {
+        json::obj(vec![("ok", Value::Bool(false)), ("error", Value::String(msg))])
+    };
+    let req = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return fail(format!("bad json: {e}")),
+    };
+    let seq = coord.seq();
+    let task = req.get("task").and_then(Value::as_str).unwrap_or_default().to_string();
+    let mode = req.get("mode").and_then(Value::as_str).unwrap_or("m3").to_string();
+    let ids = match ids_from(&req, "ids", seq) {
+        Ok(Some(v)) => v,
+        Ok(None) => return fail("missing ids".into()),
+        Err(e) => return fail(e.to_string()),
+    };
+    let type_ids = match ids_from(&req, "type_ids", seq) {
+        Ok(Some(v)) => v,
+        Ok(None) => vec![0; seq],
+        Err(e) => return fail(e.to_string()),
+    };
+    let rx = match coord.submit(&task, &mode, ids, type_ids) {
+        Ok(rx) => rx,
+        Err(e) => return fail(e.to_string()),
+    };
+    match rx.recv() {
+        Err(_) => fail("coordinator dropped request".into()),
+        Ok(resp) => match resp.error {
+            Some(e) => fail(e),
+            None => json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("logits", json::arr_f32(&resp.logits)),
+                ("queue_us", json::num(resp.timing.queue_us as f64)),
+                ("exec_us", json::num(resp.timing.exec_us as f64)),
+                ("bucket", json::num(resp.timing.bucket as f64)),
+                ("batch", json::num(resp.timing.batch_real as f64)),
+            ]),
+        },
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: &Coordinator,
+    served: &AtomicU64,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // peer closed
+            Ok(_) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let resp = process_line(trimmed, coord);
+                writer.write_all(json::to_string(&resp).as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                served.fetch_add(1, Ordering::SeqCst);
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(NetClient { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn request(&mut self, task: &str, mode: &str, ids: &[i32]) -> Result<Value> {
+        let req = json::obj(vec![
+            ("task", Value::String(task.into())),
+            ("mode", Value::String(mode.into())),
+            ("ids", Value::Array(ids.iter().map(|x| json::num(*x as f64)).collect())),
+        ]);
+        self.writer.write_all(json::to_string(&req).as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_padding_and_bounds() {
+        let v = json::parse(r#"{"ids": [1, 2, 3]}"#).unwrap();
+        let ids = ids_from(&v, "ids", 6).unwrap().unwrap();
+        assert_eq!(ids, vec![1, 2, 3, 0, 0, 0]);
+        let too_long = json::parse(r#"{"ids": [1,2,3,4,5,6,7]}"#).unwrap();
+        assert!(ids_from(&too_long, "ids", 6).is_err());
+        assert!(ids_from(&v, "type_ids", 6).unwrap().is_none());
+    }
+}

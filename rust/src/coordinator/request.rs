@@ -1,0 +1,46 @@
+//! Request/response types for the serving coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Precision mode selection per request (paper §2.3 — the accuracy/latency
+/// trade-off is exposed per request, not per deployment).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GroupKey {
+    pub task: String,
+    pub mode: String,
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub task: String,
+    pub mode: String,
+    /// `[seq]` token ids (already padded/truncated to the model seq).
+    pub ids: Vec<i32>,
+    pub type_ids: Vec<i32>,
+    pub enqueued: Instant,
+    pub reply: Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// `[num_labels]` logits for this request's row.
+    pub logits: Vec<f32>,
+    pub timing: Timing,
+    pub error: Option<String>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Timing {
+    /// time from submit to batch dispatch
+    pub queue_us: u64,
+    /// engine execution time for the whole batch
+    pub exec_us: u64,
+    /// end-to-end (submit -> response send)
+    pub total_us: u64,
+    /// batch this request rode in
+    pub batch_real: usize,
+    pub bucket: usize,
+}

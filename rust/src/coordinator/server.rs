@@ -1,0 +1,299 @@
+//! The serving coordinator: bounded admission queue -> dynamic batcher
+//! thread -> engine (PJRT) thread -> completion workers.  This is the
+//! "end-to-end system" the paper leaves as future work: batched W8A8
+//! inference with per-request precision modes and zero Python anywhere.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::Split;
+use crate::exec::ThreadPool;
+use crate::model::manifest::Manifest;
+use crate::model::Container;
+use crate::runtime::engine::{Engine, InferJob};
+
+use super::batcher::{Batch, Batcher};
+use super::request::{Request, Response, Timing};
+use super::stats::Recorder;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+    pub completion_workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(4),
+            queue_cap: 1024,
+            completion_workers: 4,
+        }
+    }
+}
+
+pub struct Coordinator {
+    tx: Option<SyncSender<Request>>,
+    batcher_join: Option<std::thread::JoinHandle<()>>,
+    pub recorder: Arc<Recorder>,
+    next_id: AtomicU64,
+    seq: usize,
+    num_labels: usize,
+    pub config: ServerConfig,
+}
+
+impl Coordinator {
+    /// Load checkpoints for the given (task, mode) pairs, spawn the engine
+    /// and batcher, pre-compile every (mode, bucket) executable.
+    pub fn start(
+        artifacts: std::path::PathBuf,
+        pairs: &[(String, String)],
+        config: ServerConfig,
+    ) -> Result<Coordinator> {
+        let manifest = Manifest::load(&artifacts)?;
+        let seq = manifest.seq;
+        let num_labels = manifest.model.num_labels;
+        let buckets = manifest.buckets.clone();
+
+        // load quantized/fp checkpoints from disk
+        let mut preload = Vec::new();
+        let mut modes_used = std::collections::BTreeSet::new();
+        for (task, mode) in pairs {
+            let t = manifest.task(task)?;
+            let rel = checkpoint_rel(t, mode);
+            let path = manifest.path(&rel);
+            let ckpt = Container::read_file(&path)
+                .with_context(|| {
+                    format!("loading checkpoint {path:?} (run `repro quantize` first?)")
+                })?
+                .reordered(&manifest.mode(mode)?.params)?;
+            preload.push((task.clone(), mode.clone(), ckpt));
+            modes_used.insert(mode.clone());
+        }
+        let precompile: Vec<(String, usize)> = modes_used
+            .iter()
+            .flat_map(|m| buckets.iter().map(move |b| (m.clone(), *b)))
+            .collect();
+
+        let engine = Arc::new(Engine::spawn(artifacts, preload, precompile)?);
+        let recorder = Arc::new(Recorder::new());
+        let pool = ThreadPool::new(config.completion_workers, "zqh-complete");
+
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(config.queue_cap);
+        let batcher_cfg = config.clone();
+        let b_recorder = Arc::clone(&recorder);
+        let b_engine = Arc::clone(&engine);
+        let man = Arc::new(manifest);
+        let b_man = Arc::clone(&man);
+        let batcher_join = std::thread::Builder::new()
+            .name("zqh-batcher".into())
+            .spawn(move || {
+                batcher_main(rx, batcher_cfg, b_man, b_engine, b_recorder, pool)
+            })
+            .context("spawn batcher")?;
+
+        Ok(Coordinator {
+            tx: Some(tx),
+            batcher_join: Some(batcher_join),
+            recorder,
+            next_id: AtomicU64::new(0),
+            seq,
+            num_labels,
+            config,
+        })
+    }
+
+    /// Submit a request; `Err` on backpressure (queue full) or bad input.
+    pub fn submit(
+        &self,
+        task: &str,
+        mode: &str,
+        ids: Vec<i32>,
+        type_ids: Vec<i32>,
+    ) -> Result<Receiver<Response>> {
+        if ids.len() != self.seq || type_ids.len() != self.seq {
+            bail!("request must be exactly seq={} tokens (got {})", self.seq, ids.len());
+        }
+        let (reply, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            task: task.to_string(),
+            mode: mode.to_string(),
+            ids,
+            type_ids,
+            enqueued: Instant::now(),
+            reply,
+        };
+        match self.tx.as_ref().expect("live").try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => Err(anyhow!("admission queue full (backpressure)")),
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("coordinator stopped")),
+        }
+    }
+
+    pub fn num_labels(&self) -> usize {
+        self.num_labels
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the queue; batcher drains and exits
+        if let Some(j) = self.batcher_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+pub fn checkpoint_rel(task: &crate::model::manifest::TaskSpec, mode: &str) -> String {
+    if mode == "fp" {
+        task.checkpoint.clone()
+    } else {
+        format!("checkpoints/{}/hero-{}.bin", task.name, mode)
+    }
+}
+
+fn batcher_main(
+    rx: Receiver<Request>,
+    config: ServerConfig,
+    man: Arc<Manifest>,
+    engine: Arc<Engine>,
+    recorder: Arc<Recorder>,
+    pool: ThreadPool,
+) {
+    let mut batcher = Batcher::new(config.max_batch, config.max_wait);
+    loop {
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                if let Some(batch) = batcher.push(req) {
+                    dispatch(batch, &man, &engine, &recorder, &pool);
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                for batch in batcher.drain_all() {
+                    dispatch(batch, &man, &engine, &recorder, &pool);
+                }
+                pool.wait_idle();
+                break;
+            }
+        }
+        for batch in batcher.tick(Instant::now()) {
+            dispatch(batch, &man, &engine, &recorder, &pool);
+        }
+    }
+}
+
+fn dispatch(
+    batch: Batch,
+    man: &Arc<Manifest>,
+    engine: &Arc<Engine>,
+    recorder: &Arc<Recorder>,
+    pool: &ThreadPool,
+) {
+    let seq = man.seq;
+    let real = batch.requests.len();
+    let bucket = man.bucket_for(real);
+    let dispatched = Instant::now();
+
+    let mut ids = Vec::with_capacity(bucket * seq);
+    let mut tys = Vec::with_capacity(bucket * seq);
+    for r in &batch.requests {
+        ids.extend_from_slice(&r.ids);
+        tys.extend_from_slice(&r.type_ids);
+    }
+    ids.resize(bucket * seq, crate::data::PAD);
+    tys.resize(bucket * seq, 0);
+    let mask = Split::mask_row(&ids);
+
+    let (reply_tx, reply_rx) = channel();
+    let job = InferJob {
+        task: batch.key.task.clone(),
+        mode: batch.key.mode.clone(),
+        bucket,
+        ids,
+        type_ids: tys,
+        mask,
+        reply: reply_tx,
+    };
+    if engine.submit(job).is_err() {
+        fail_batch(batch, recorder, "engine unavailable");
+        return;
+    }
+
+    let recorder = Arc::clone(recorder);
+    let mode = batch.key.mode.clone();
+    let requests = batch.requests;
+    pool.spawn(move || {
+        let result = reply_rx.recv().map_err(|_| anyhow!("engine dropped reply")).and_then(|r| r);
+        match result {
+            Ok(done) => {
+                let logits = match done.logits.as_f32() {
+                    Ok(v) => v.to_vec(),
+                    Err(e) => {
+                        for r in requests {
+                            send_error(&r, &mode, &recorder, &format!("bad logits: {e}"));
+                        }
+                        return;
+                    }
+                };
+                let nl = logits.len() / bucket;
+                recorder.record_batch(&mode, real, done.exec_us);
+                for (row, r) in requests.into_iter().enumerate() {
+                    let now = Instant::now();
+                    let timing = Timing {
+                        queue_us: dispatched.duration_since(r.enqueued).as_micros() as u64,
+                        exec_us: done.exec_us,
+                        total_us: now.duration_since(r.enqueued).as_micros() as u64,
+                        batch_real: real,
+                        bucket,
+                    };
+                    recorder.record_request(&mode, timing.total_us, timing.queue_us, false);
+                    let _ = r.reply.send(Response {
+                        id: r.id,
+                        logits: logits[row * nl..(row + 1) * nl].to_vec(),
+                        timing,
+                        error: None,
+                    });
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for r in requests {
+                    send_error(&r, &mode, &recorder, &msg);
+                }
+            }
+        }
+    });
+}
+
+fn fail_batch(batch: Batch, recorder: &Arc<Recorder>, msg: &str) {
+    for r in &batch.requests {
+        send_error(r, &batch.key.mode, recorder, msg);
+    }
+}
+
+fn send_error(r: &Request, mode: &str, recorder: &Recorder, msg: &str) {
+    recorder.record_request(mode, 0, 0, true);
+    let _ = r.reply.send(Response {
+        id: r.id,
+        logits: vec![],
+        timing: Timing::default(),
+        error: Some(msg.to_string()),
+    });
+}

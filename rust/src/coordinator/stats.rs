@@ -1,0 +1,205 @@
+//! Serving metrics: lock-light latency/throughput recording with
+//! log-bucketed histograms, keyed by precision mode.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Log2-bucketed latency histogram (microseconds).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) us; 64 buckets.
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: u128,
+    max_us: u64,
+    min_us: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; 64], total: 0, sum_us: 0, max_us: 0, min_us: u64::MAX }
+    }
+
+    pub fn record(&mut self, us: u64) {
+        let bucket = 63 - us.max(1).leading_zeros() as usize;
+        self.counts[bucket.min(63)] += 1;
+        self.total += 1;
+        self.sum_us += us as u128;
+        self.max_us = self.max_us.max(us);
+        self.min_us = self.min_us.min(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.total as f64
+        }
+    }
+
+    /// Percentile estimate from bucket boundaries (upper bound of bucket).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let want = (self.total as f64 * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= want {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn max_us(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.max_us }
+    }
+
+    pub fn min_us(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min_us }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ModeStats {
+    pub latency: Histogram,
+    pub exec: Histogram,
+    pub queue: Histogram,
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    pub errors: u64,
+}
+
+impl ModeStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_rows as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Shared recorder (single mutex — recording is tiny next to inference).
+pub struct Recorder {
+    start: Instant,
+    inner: Mutex<BTreeMap<String, ModeStats>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder { start: Instant::now(), inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn record_request(&self, mode: &str, total_us: u64, queue_us: u64, err: bool) {
+        let mut g = self.inner.lock().unwrap();
+        let s = g.entry(mode.to_string()).or_default();
+        s.requests += 1;
+        if err {
+            s.errors += 1;
+        } else {
+            s.latency.record(total_us);
+            s.queue.record(queue_us);
+        }
+    }
+
+    pub fn record_batch(&self, mode: &str, rows: usize, exec_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let s = g.entry(mode.to_string()).or_default();
+        s.batches += 1;
+        s.batched_rows += rows as u64;
+        s.exec.record(exec_us);
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, ModeStats> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Human-readable summary table.
+    pub fn render(&self) -> String {
+        use crate::bench::Table;
+        let snap = self.snapshot();
+        let elapsed = self.elapsed_s();
+        let mut t = Table::new(&[
+            "mode", "reqs", "errs", "thr(req/s)", "mean batch", "p50 lat", "p95 lat",
+            "p99 lat", "mean exec/batch",
+        ]);
+        for (mode, s) in &snap {
+            t.row(vec![
+                mode.clone(),
+                s.requests.to_string(),
+                s.errors.to_string(),
+                format!("{:.1}", s.requests as f64 / elapsed.max(1e-9)),
+                format!("{:.2}", s.mean_batch_size()),
+                format!("{:.1}ms", s.latency.percentile_us(0.50) as f64 / 1e3),
+                format!("{:.1}ms", s.latency.percentile_us(0.95) as f64 / 1e3),
+                format!("{:.1}ms", s.latency.percentile_us(0.99) as f64 / 1e3),
+                format!("{:.1}ms", s.exec.mean_us() / 1e3),
+            ]);
+        }
+        t.render()
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let mut h = Histogram::new();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 5120] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.percentile_us(0.5) >= 80);
+        assert!(h.percentile_us(1.0) >= 5120);
+        assert_eq!(h.min_us(), 10);
+        assert_eq!(h.max_us(), 5120);
+    }
+
+    #[test]
+    fn histogram_zero_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn recorder_accumulates_per_mode() {
+        let r = Recorder::new();
+        r.record_request("m3", 1000, 100, false);
+        r.record_request("m3", 2000, 200, false);
+        r.record_request("fp", 99, 9, true);
+        r.record_batch("m3", 8, 500);
+        let snap = r.snapshot();
+        assert_eq!(snap["m3"].requests, 2);
+        assert_eq!(snap["fp"].errors, 1);
+        assert_eq!(snap["m3"].mean_batch_size(), 8.0);
+        assert!(r.render().contains("m3"));
+    }
+}

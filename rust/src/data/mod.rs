@@ -1,0 +1,188 @@
+//! SynGLUE dataset loading + batching: reads the container-format splits
+//! written by the python build path and produces padded, bucketed batches
+//! for the runtime.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::manifest::{Manifest, TaskSpec};
+use crate::model::Container;
+
+pub const PAD: i32 = 0;
+
+#[derive(Debug, Clone)]
+pub enum Labels {
+    Class(Vec<i32>),
+    Score(Vec<f32>),
+}
+
+impl Labels {
+    pub fn len(&self) -> usize {
+        match self {
+            Labels::Class(v) => v.len(),
+            Labels::Score(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One loaded split: `[n, seq]` row-major token ids.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub seq: usize,
+    pub input_ids: Vec<i32>,
+    pub type_ids: Vec<i32>,
+    pub labels: Labels,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn row(&self, i: usize) -> (&[i32], &[i32]) {
+        let s = self.seq;
+        (&self.input_ids[i * s..(i + 1) * s], &self.type_ids[i * s..(i + 1) * s])
+    }
+
+    pub fn from_container(c: &Container) -> Result<Split> {
+        let ids = c.get("input_ids").context("missing input_ids")?;
+        let ty = c.get("type_ids").context("missing type_ids")?;
+        if ids.shape.len() != 2 || ty.shape != ids.shape {
+            bail!("bad split shapes: {:?} vs {:?}", ids.shape, ty.shape);
+        }
+        let n = ids.shape[0];
+        let labels = if let Some(l) = c.get("labels_i32") {
+            Labels::Class(l.as_i32()?.to_vec())
+        } else if let Some(l) = c.get("labels_f32") {
+            Labels::Score(l.as_f32()?.to_vec())
+        } else {
+            bail!("split has no labels tensor");
+        };
+        if labels.len() != n {
+            bail!("labels len {} != examples {}", labels.len(), n);
+        }
+        Ok(Split {
+            seq: ids.shape[1],
+            input_ids: ids.as_i32()?.to_vec(),
+            type_ids: ty.as_i32()?.to_vec(),
+            labels,
+        })
+    }
+
+    pub fn load(man: &Manifest, task: &TaskSpec, split: &str) -> Result<Split> {
+        let rel = task
+            .splits
+            .get(split)
+            .with_context(|| format!("task {} has no split {split}", task.name))?;
+        let c = Container::read_file(&man.path(rel))?;
+        let s = Split::from_container(&c)?;
+        if s.seq != man.seq {
+            bail!("split seq {} != manifest seq {}", s.seq, man.seq);
+        }
+        Ok(s)
+    }
+
+    /// Attention mask derived from PAD tokens.
+    pub fn mask_row(ids: &[i32]) -> Vec<f32> {
+        ids.iter().map(|t| if *t == PAD { 0.0 } else { 1.0 }).collect()
+    }
+}
+
+/// A padded batch ready for the runtime: exactly `bucket` rows, the last
+/// `bucket - real` rows being PAD padding that callers must drop.
+pub struct PaddedBatch {
+    pub bucket: usize,
+    pub real: usize,
+    pub ids: Vec<i32>,
+    pub type_ids: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+/// Iterate a split in bucketed batches (the eval path).
+pub fn batches(split: &Split, bucket: usize) -> Vec<PaddedBatch> {
+    let seq = split.seq;
+    let mut out = Vec::new();
+    let n = split.len();
+    let mut lo = 0;
+    while lo < n {
+        let real = bucket.min(n - lo);
+        let mut ids = Vec::with_capacity(bucket * seq);
+        let mut tys = Vec::with_capacity(bucket * seq);
+        for i in lo..lo + real {
+            let (r_ids, r_ty) = split.row(i);
+            ids.extend_from_slice(r_ids);
+            tys.extend_from_slice(r_ty);
+        }
+        ids.resize(bucket * seq, PAD);
+        tys.resize(bucket * seq, 0);
+        let mask = Split::mask_row(&ids);
+        out.push(PaddedBatch { bucket, real, ids, type_ids: tys, mask });
+        lo += real;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tensor;
+
+    fn tiny_split() -> Split {
+        let mut c = Container::new();
+        c.push("input_ids", Tensor::i32(vec![3, 4], vec![1, 5, 2, 0, 1, 6, 2, 0, 1, 7, 8, 2]));
+        c.push("type_ids", Tensor::i32(vec![3, 4], vec![0; 12]));
+        c.push("labels_i32", Tensor::i32(vec![3], vec![1, 0, 1]));
+        Split::from_container(&c).unwrap()
+    }
+
+    #[test]
+    fn load_and_rows() {
+        let s = tiny_split();
+        assert_eq!(s.len(), 3);
+        let (ids, _) = s.row(2);
+        assert_eq!(ids, &[1, 7, 8, 2]);
+    }
+
+    #[test]
+    fn batching_pads_tail() {
+        let s = tiny_split();
+        let bs = batches(&s, 2);
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0].real, 2);
+        assert_eq!(bs[1].real, 1);
+        assert_eq!(bs[1].ids.len(), 2 * 4);
+        // padded row is all PAD -> mask 0
+        assert_eq!(&bs[1].mask[4..], &[0.0; 4]);
+        // real row mask: PAD position is 0
+        assert_eq!(&bs[0].mask[..4], &[1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn regression_labels() {
+        let mut c = Container::new();
+        c.push("input_ids", Tensor::i32(vec![1, 2], vec![1, 2]));
+        c.push("type_ids", Tensor::i32(vec![1, 2], vec![0, 0]));
+        c.push("labels_f32", Tensor::f32(vec![1], vec![3.5]));
+        let s = Split::from_container(&c).unwrap();
+        match s.labels {
+            Labels::Score(v) => assert_eq!(v, vec![3.5]),
+            _ => panic!("expected scores"),
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_labels() {
+        let mut c = Container::new();
+        c.push("input_ids", Tensor::i32(vec![2, 2], vec![1, 2, 3, 4]));
+        c.push("type_ids", Tensor::i32(vec![2, 2], vec![0; 4]));
+        c.push("labels_i32", Tensor::i32(vec![3], vec![0, 1, 0]));
+        assert!(Split::from_container(&c).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Evaluation harness: regenerates the paper's Table 2 (GLUE validation
+//! accuracy per quantization mode) plus the Discussion ablations, entirely
+//! in rust over the PJRT runtime.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::calib::{load_history, run_calibration, save_history, truncate_history, StatHistory};
+use crate::coordinator::checkpoint_rel;
+use crate::data::{batches, Labels, Split};
+use crate::metrics;
+use crate::model::manifest::TaskSpec;
+use crate::model::Container;
+use crate::quant::{quantize_checkpoint, validate_against_mode, AggStats};
+use crate::runtime::Runtime;
+
+pub const DEFAULT_CALIB_BATCHES: usize = 100; // paper §3
+pub const EVAL_BUCKET: usize = 16;
+
+// ------------------------------------------------------------- pipeline
+
+/// Load (or run + cache) the 100-batch calibration history for a task.
+pub fn ensure_calibration(
+    rt: &mut Runtime,
+    task: &TaskSpec,
+    num_batches: usize,
+    force: bool,
+) -> Result<StatHistory> {
+    let path = rt
+        .manifest
+        .path(&format!("checkpoints/{}/calib.json", task.name));
+    if path.exists() && !force {
+        let hist = load_history(&path)?;
+        if hist.first().map(|(_, b)| b.len()).unwrap_or(0) >= num_batches {
+            return Ok(truncate_history(&hist, num_batches));
+        }
+    }
+    let fp = Container::read_file(&rt.manifest.path(&task.checkpoint))?;
+    let hist = run_calibration(rt, task, &fp, num_batches)?;
+    save_history(&path, &hist, num_batches)?;
+    Ok(hist)
+}
+
+/// Quantize one task for one mode; writes `checkpoints/<task>/hero-<mode>.bin`
+/// (or a custom suffix for ablations) and returns the container.
+pub fn quantize_task(
+    rt: &mut Runtime,
+    task: &TaskSpec,
+    mode: &str,
+    hist: &StatHistory,
+    pct: f64,
+    suffix: Option<&str>,
+) -> Result<Container> {
+    let mode_spec = rt.manifest.mode(mode)?.clone();
+    let fp = Container::read_file(&rt.manifest.path(&task.checkpoint))?;
+    let stats = AggStats::from_history(hist, &rt.manifest.model, pct)?;
+    let ckpt = quantize_checkpoint(&fp, &stats, &rt.manifest.model, &mode_spec.switches)?;
+    validate_against_mode(&ckpt, &mode_spec)?;
+    let name = match suffix {
+        Some(s) => format!("checkpoints/{}/hero-{mode}-{s}.bin", task.name),
+        None => format!("checkpoints/{}/hero-{mode}.bin", task.name),
+    };
+    ckpt.write_file(&rt.manifest.path(&name))?;
+    Ok(ckpt)
+}
+
+/// Make sure the runtime has a device-resident checkpoint for (task, mode):
+/// fp comes straight from disk; quantized modes are derived on demand.
+pub fn ensure_checkpoint(
+    rt: &mut Runtime,
+    task: &TaskSpec,
+    mode: &str,
+    calib_batches: usize,
+    pct: f64,
+) -> Result<()> {
+    if rt.has_checkpoint(&task.name, mode) {
+        return Ok(());
+    }
+    let ckpt = if mode == "fp" {
+        let specs = rt.manifest.mode("fp")?.params.clone();
+        Container::read_file(&rt.manifest.path(&task.checkpoint))?.reordered(&specs)?
+    } else {
+        let rel = checkpoint_rel(task, mode);
+        let path = rt.manifest.path(&rel);
+        if path.exists() && calib_batches == DEFAULT_CALIB_BATCHES && pct >= 100.0 {
+            Container::read_file(&path)?
+        } else {
+            let hist = ensure_calibration(rt, task, calib_batches.max(1), false)?;
+            let hist = truncate_history(&hist, calib_batches.max(1));
+            quantize_task(rt, task, mode, &hist, pct, None)?
+        }
+    };
+    rt.upload_checkpoint(&task.name, mode, &ckpt)
+}
+
+// ------------------------------------------------------------- evaluation
+
+/// Run a dev split through the model; returns (preds-or-scores, labels).
+pub fn predict_split(
+    rt: &mut Runtime,
+    task: &TaskSpec,
+    mode: &str,
+    split_name: &str,
+) -> Result<(Vec<i32>, Vec<f64>, Labels)> {
+    let split = Split::load(&rt.manifest, task, split_name)?;
+    let nl = rt.manifest.model.num_labels;
+    let mut preds = Vec::with_capacity(split.len());
+    let mut scores = Vec::with_capacity(split.len());
+    for b in batches(&split, EVAL_BUCKET) {
+        let logits = rt.infer(&task.name, mode, b.bucket, &b.ids, &b.type_ids, &b.mask)?;
+        let v = logits.as_f32()?;
+        for row in 0..b.real {
+            let lg = &v[row * nl..(row + 1) * nl];
+            if task.classes == 0 {
+                scores.push(lg[0] as f64);
+            } else {
+                let (mut best, mut bi) = (f32::NEG_INFINITY, 0);
+                for (i, x) in lg.iter().take(task.classes).enumerate() {
+                    if *x > best {
+                        best = *x;
+                        bi = i;
+                    }
+                }
+                preds.push(bi as i32);
+            }
+        }
+    }
+    Ok((preds, scores, split.labels))
+}
+
+/// Metric values for one (task, mode) on one split.
+pub fn eval_split(
+    rt: &mut Runtime,
+    task: &TaskSpec,
+    mode: &str,
+    split_name: &str,
+) -> Result<BTreeMap<String, f64>> {
+    let (preds, scores, labels) = predict_split(rt, task, mode, split_name)?;
+    let mut out = BTreeMap::new();
+    match &labels {
+        Labels::Class(ls) => {
+            for m in &task.metrics {
+                let v = metrics::compute(m, &metrics::MetricInput::Class {
+                    preds: &preds,
+                    labels: ls,
+                });
+                out.insert(m.clone(), v);
+            }
+        }
+        Labels::Score(ls) => {
+            let lf: Vec<f64> = ls.iter().map(|x| *x as f64).collect();
+            for m in &task.metrics {
+                let v = metrics::compute(m, &metrics::MetricInput::Reg {
+                    scores: &scores,
+                    labels: &lf,
+                });
+                out.insert(m.clone(), v);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Full evaluation of one (task, mode) across its dev splits.
+/// Keys like "acc", and "acc_mm" for the MNLI mismatched split.
+pub fn eval_task(
+    rt: &mut Runtime,
+    task: &TaskSpec,
+    mode: &str,
+    calib_batches: usize,
+    pct: f64,
+) -> Result<BTreeMap<String, f64>> {
+    ensure_checkpoint(rt, task, mode, calib_batches, pct)?;
+    let mut out = BTreeMap::new();
+    for split_name in task.splits.keys() {
+        if split_name == "train" {
+            continue;
+        }
+        let vals = eval_split(rt, task, mode, split_name)?;
+        for (k, v) in vals {
+            let key = if split_name == "dev" { k } else { format!("{k}_mm") };
+            out.insert(key, v);
+        }
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------- Table 2 layout
+
+/// Format one task's metrics the way the paper's Table 2 prints them.
+pub fn paper_cell(task: &str, m: &BTreeMap<String, f64>) -> String {
+    let g = |k: &str| m.get(k).map(|v| format!("{:.2}", v * 100.0)).unwrap_or("-".into());
+    match task {
+        "cola" => g("mcc"),
+        "mnli" => format!("{}/{}", g("acc"), g("acc_mm")),
+        "mrpc" | "qqp" => format!("{}/{}", g("f1"), g("acc")),
+        "qnli" | "rte" | "sst2" => g("acc"),
+        "stsb" => format!("{}/{}", g("pearson"), g("spearman")),
+        _ => format!("{m:?}"),
+    }
+}
+
+pub fn paper_header(task: &str) -> &'static str {
+    match task {
+        "cola" => "CoLA Mcc",
+        "mnli" => "MNLI-m/-mm Acc",
+        "mrpc" => "MRPC F1/Acc",
+        "qnli" => "QNLI Acc",
+        "qqp" => "QQP F1/Acc",
+        "rte" => "RTE Acc",
+        "sst2" => "SST-2 Acc",
+        "stsb" => "STS-B Pear/Spea",
+        _ => "?",
+    }
+}
+
+pub fn mode_label(mode: &str) -> String {
+    match mode {
+        "fp" => "FP32 (paper: FP16)".to_string(),
+        m => format!("ZeroQuant-HERO-{}", m.to_uppercase()),
+    }
+}
+
+/// Run the whole Table 2: tasks x modes.  Returns mode -> task -> metrics.
+pub fn table2(
+    rt: &mut Runtime,
+    tasks: &[String],
+    modes: &[String],
+    calib_batches: usize,
+    pct: f64,
+    mut progress: impl FnMut(&str, &str),
+) -> Result<BTreeMap<String, BTreeMap<String, BTreeMap<String, f64>>>> {
+    let mut out: BTreeMap<String, BTreeMap<String, BTreeMap<String, f64>>> = BTreeMap::new();
+    for mode in modes {
+        for tname in tasks {
+            progress(mode, tname);
+            let task = rt.manifest.task(tname)?.clone();
+            let vals = eval_task(rt, &task, mode, calib_batches, pct)
+                .with_context(|| format!("eval {tname} {mode}"))?;
+            out.entry(mode.clone()).or_default().insert(tname.clone(), vals);
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,172 @@
+//! Thread-pool executor (tokio is unavailable offline — DESIGN.md §2).
+//!
+//! A small fixed-size worker pool over an mpsc job queue, with graceful
+//! shutdown and panic isolation.  The serving coordinator uses it for
+//! request pre/post-processing; PJRT execution stays on the dedicated
+//! engine thread.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Stop,
+}
+
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+    completed: Arc<AtomicUsize>,
+    panicked: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, name: &str) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let completed = Arc::new(AtomicUsize::new(0));
+        let panicked = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                let completed = Arc::clone(&completed);
+                let panicked = Arc::clone(&panicked);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move ||
+
+ worker_main(rx, queued, completed, panicked))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, workers, queued, completed, panicked }
+    }
+
+    /// Enqueue a job; returns false if the pool is shut down.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Run(Box::new(f))).is_ok()
+    }
+
+    /// Run a closure on the pool and get the result over a channel.
+    pub fn run<T, F>(&self, f: F) -> Receiver<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.spawn(move || {
+            let _ = tx.send(f());
+        });
+        rx
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst) - self.completed.load(Ordering::SeqCst)
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed.load(Ordering::SeqCst)
+    }
+
+    pub fn panicked(&self) -> usize {
+        self.panicked.load(Ordering::SeqCst)
+    }
+
+    /// Block until every queued job has finished (test/bench helper).
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(
+    rx: Arc<Mutex<Receiver<Msg>>>,
+    _queued: Arc<AtomicUsize>,
+    completed: Arc<AtomicUsize>,
+    panicked: Arc<AtomicUsize>,
+) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("queue poisoned");
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                if res.is_err() {
+                    panicked.fetch_add(1, Ordering::SeqCst);
+                }
+                completed.fetch_add(1, Ordering::SeqCst);
+            }
+            Ok(Msg::Stop) | Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, "t");
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 0..100u64 {
+            let sum = Arc::clone(&sum);
+            pool.spawn(move || {
+                sum.fetch_add(i, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(sum.load(Ordering::SeqCst), 4950);
+        assert_eq!(pool.completed(), 100);
+    }
+
+    #[test]
+    fn run_returns_value() {
+        let pool = ThreadPool::new(2, "t");
+        let rx = pool.run(|| 6 * 7);
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn panics_are_isolated() {
+        let pool = ThreadPool::new(2, "t");
+        pool.spawn(|| panic!("boom"));
+        let rx = pool.run(|| "still alive");
+        assert_eq!(rx.recv().unwrap(), "still alive");
+        pool.wait_idle();
+        assert_eq!(pool.panicked(), 1);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2, "t");
+        for _ in 0..10 {
+            pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+        }
+        drop(pool); // must not hang or panic
+    }
+}

@@ -1,0 +1,39 @@
+//! # zqhero — ZeroQuant-HERO reproduction (rust L3)
+//!
+//! A hardware-enhanced W8A8 post-training-quantization *system* for
+//! BERT-style transformers, reproducing
+//! *ZeroQuant-HERO: Hardware-Enhanced Robust Optimized Post-Training
+//! Quantization Framework for W8A8 Transformers* (Yao et al., 2023) as a
+//! three-layer Rust + JAX + Pallas stack.  This crate is Layer 3:
+//!
+//! * [`quant`] — the PTQ engine: TWQ/FWQ/SQ schemes, column-wise weight
+//!   quantization, and the scale folding (eqs. 20-23, 32) that makes the
+//!   hot path division-free;
+//! * [`calib`] — the calibration orchestrator (paper §3);
+//! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts with
+//!   device-resident weights (Python never runs at request time);
+//! * [`coordinator`] — the serving system the paper leaves as future
+//!   work: dynamic batching, per-request precision modes, backpressure,
+//!   metrics;
+//! * [`evalharness`] — Table 2 + ablation regeneration;
+//! * [`perfmodel`] — the analytic A100 roofline behind the paper's
+//!   hardware claims;
+//! * [`traceflow`] — Figures 1/2 as checkable precision-flow traces;
+//! * substrates built from scratch for the offline environment:
+//!   [`json`], [`cli`], [`exec`], [`prop`], [`bench`].
+
+pub mod bench;
+pub mod calib;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod evalharness;
+pub mod exec;
+pub mod json;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod prop;
+pub mod quant;
+pub mod runtime;
+pub mod traceflow;

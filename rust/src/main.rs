@@ -1,0 +1,459 @@
+//! `repro` — ZeroQuant-HERO leader binary: PTQ pipeline (calibrate →
+//! quantize → eval) and the serving coordinator, over AOT HLO artifacts.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use zqhero::bench::Table;
+use zqhero::cli::{Cli, OptSpec, SubSpec};
+use zqhero::coordinator::{Coordinator, ServerConfig};
+use zqhero::evalharness as eh;
+use zqhero::model::manifest::Manifest;
+
+use zqhero::perfmodel;
+use zqhero::runtime::Runtime;
+use zqhero::traceflow;
+
+fn artifacts_opt() -> OptSpec {
+    OptSpec {
+        name: "artifacts",
+        takes_value: true,
+        default: Some("artifacts"),
+        help: "artifacts directory (make artifacts)",
+    }
+}
+
+fn cli() -> Cli {
+    Cli {
+        bin: "repro",
+        about: "ZeroQuant-HERO: hardware-enhanced W8A8 PTQ framework (paper reproduction)",
+        subs: vec![
+            SubSpec {
+                name: "info",
+                help: "print manifest / artifact summary",
+                opts: vec![artifacts_opt()],
+            },
+            SubSpec {
+                name: "calibrate",
+                help: "run calibration forward passes (paper: 100 batches x 16)",
+                opts: vec![
+                    artifacts_opt(),
+                    OptSpec { name: "task", takes_value: true, default: None, help: "task name (omit for all)" },
+                    OptSpec { name: "batches", takes_value: true, default: Some("100"), help: "calibration batches" },
+                    OptSpec { name: "force", takes_value: false, default: None, help: "recalibrate even if cached" },
+                ],
+            },
+            SubSpec {
+                name: "quantize",
+                help: "fold + quantize fp32 checkpoints into HERO checkpoints",
+                opts: vec![
+                    artifacts_opt(),
+                    OptSpec { name: "task", takes_value: true, default: None, help: "task name (omit for all)" },
+                    OptSpec { name: "mode", takes_value: true, default: None, help: "m1|m2|m3 (omit for all)" },
+                    OptSpec { name: "pct", takes_value: true, default: Some("100"), help: "percentile clip for scales" },
+                    OptSpec { name: "calib-batches", takes_value: true, default: Some("100"), help: "batches to use" },
+                ],
+            },
+            SubSpec {
+                name: "eval",
+                help: "regenerate Table 2 (accuracy per task x mode)",
+                opts: vec![
+                    artifacts_opt(),
+                    OptSpec { name: "task", takes_value: true, default: None, help: "task (omit for all)" },
+                    OptSpec { name: "mode", takes_value: true, default: None, help: "fp|m1|m2|m3 (omit for all)" },
+                    OptSpec { name: "calib-batches", takes_value: true, default: Some("100"), help: "calibration batches" },
+                    OptSpec { name: "pct", takes_value: true, default: Some("100"), help: "percentile clip" },
+                ],
+            },
+            SubSpec {
+                name: "trace",
+                help: "print Fig.1/Fig.2 precision-flow and verify vs HLO",
+                opts: vec![
+                    artifacts_opt(),
+                    OptSpec { name: "mode", takes_value: true, default: Some("m3"), help: "mode to trace" },
+                ],
+            },
+            SubSpec {
+                name: "perfmodel",
+                help: "analytic A100 projection (hardware-enhanced claims)",
+                opts: vec![
+                    OptSpec { name: "batch", takes_value: true, default: Some("16"), help: "batch size" },
+                    OptSpec { name: "seq", takes_value: true, default: Some("128"), help: "sequence length" },
+                ],
+            },
+            SubSpec {
+                name: "serve",
+                help: "serve newline-delimited JSON requests over TCP",
+                opts: vec![
+                    artifacts_opt(),
+                    OptSpec { name: "host", takes_value: true, default: Some("127.0.0.1"), help: "bind host" },
+                    OptSpec { name: "port", takes_value: true, default: Some("7433"), help: "bind port" },
+                    OptSpec { name: "tasks", takes_value: true, default: Some("sst2,mrpc,cola"), help: "tasks to load" },
+                    OptSpec { name: "modes", takes_value: true, default: Some("fp,m1,m2,m3"), help: "precision modes to load" },
+                    OptSpec { name: "max-batch", takes_value: true, default: Some("16"), help: "batcher max batch" },
+                    OptSpec { name: "max-wait-ms", takes_value: true, default: Some("4"), help: "batcher max wait" },
+                ],
+            },
+            SubSpec {
+                name: "serve-bench",
+                help: "closed-loop serving benchmark through the coordinator",
+                opts: vec![
+                    artifacts_opt(),
+                    OptSpec { name: "tasks", takes_value: true, default: Some("sst2"), help: "comma-separated tasks" },
+                    OptSpec { name: "modes", takes_value: true, default: Some("fp,m3"), help: "comma-separated modes" },
+                    OptSpec { name: "requests", takes_value: true, default: Some("256"), help: "requests per (task,mode)" },
+                    OptSpec { name: "concurrency", takes_value: true, default: Some("32"), help: "in-flight requests" },
+                    OptSpec { name: "max-batch", takes_value: true, default: Some("16"), help: "batcher max batch" },
+                    OptSpec { name: "max-wait-ms", takes_value: true, default: Some("4"), help: "batcher max wait" },
+                ],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli().parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let r = match args.subcommand.as_str() {
+        "info" => cmd_info(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "trace" => cmd_trace(&args),
+        "perfmodel" => cmd_perfmodel(&args),
+        "serve" => cmd_serve(&args),
+        "serve-bench" => cmd_serve_bench(&args),
+        _ => unreachable!(),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &zqhero::cli::Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn task_list(man: &Manifest, args: &zqhero::cli::Args) -> Vec<String> {
+    match args.get("task") {
+        Some(t) => vec![t.to_string()],
+        None => man.task_order.clone(),
+    }
+}
+
+fn cmd_info(args: &zqhero::cli::Args) -> Result<()> {
+    let man = Manifest::load(&artifacts_dir(args))?;
+    let m = &man.model;
+    println!("ZeroQuant-HERO artifacts @ {}", man.root.display());
+    println!(
+        "model: {} layers, d={}, heads={}, ffn={}, vocab={}, seq={}",
+        m.layers, m.hidden, m.heads, m.ffn, m.vocab_size, man.seq
+    );
+    println!("buckets: {:?}", man.buckets);
+    let mut t = Table::new(&["mode", "Emb", "QKV", "Attn", "AttnOut", "FC1", "FC2", "params"]);
+    for name in &man.mode_order {
+        let spec = &man.modes[name];
+        let r = spec.switches.row();
+        let c = |b: bool| if b { "INT8" } else { "FP" }.to_string();
+        t.row(vec![
+            eh::mode_label(name),
+            c(r[0]), c(r[1]), c(r[2]), c(r[3]), c(r[4]), c(r[5]),
+            spec.params.len().to_string(),
+        ]);
+    }
+    t.print();
+    println!("\ntasks:");
+    for name in &man.task_order {
+        let task = &man.tasks[name];
+        println!(
+            "  {:6} classes={} metrics={:?} splits={:?}",
+            name, task.classes, task.metrics,
+            task.splits.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &zqhero::cli::Args) -> Result<()> {
+    let man = Manifest::load(&artifacts_dir(args))?;
+    let batches = args.get_usize("batches")?.unwrap_or(100);
+    let force = args.get_bool("force");
+    let mut rt = Runtime::new(man)?;
+    for tname in task_list(&rt.manifest, args) {
+        let task = rt.manifest.task(&tname)?.clone();
+        let t0 = Instant::now();
+        let hist = eh::ensure_calibration(&mut rt, &task, batches, force)?;
+        println!(
+            "[calibrate] {tname}: {} batches x {} ({}s)",
+            hist[0].1.len(),
+            rt.manifest.calib.batch,
+            t0.elapsed().as_secs()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_quantize(args: &zqhero::cli::Args) -> Result<()> {
+    let man = Manifest::load(&artifacts_dir(args))?;
+    let pct = args.get_f64("pct")?.unwrap_or(100.0);
+    let batches = args.get_usize("calib-batches")?.unwrap_or(100);
+    let modes: Vec<String> = match args.get("mode") {
+        Some(m) => vec![m.to_string()],
+        None => man.mode_order.iter().filter(|m| *m != "fp").cloned().collect(),
+    };
+    let mut rt = Runtime::new(man)?;
+    for tname in task_list(&rt.manifest, args) {
+        let task = rt.manifest.task(&tname)?.clone();
+        let hist = eh::ensure_calibration(&mut rt, &task, batches, false)?;
+        for mode in &modes {
+            let ckpt = eh::quantize_task(&mut rt, &task, mode, &hist, pct, None)?;
+            let int8: usize = ckpt
+                .entries
+                .iter()
+                .filter(|(_, t)| t.dtype() == zqhero::model::DType::I8)
+                .map(|(_, t)| t.numel())
+                .sum();
+            println!(
+                "[quantize] {tname} {mode}: {} tensors, {} int8 weights (pct={pct})",
+                ckpt.len(),
+                int8
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &zqhero::cli::Args) -> Result<()> {
+    let man = Manifest::load(&artifacts_dir(args))?;
+    let pct = args.get_f64("pct")?.unwrap_or(100.0);
+    let batches = args.get_usize("calib-batches")?.unwrap_or(100);
+    let modes: Vec<String> = match args.get("mode") {
+        Some(m) => vec![m.to_string()],
+        None => man.mode_order.clone(),
+    };
+    let tasks = task_list(&man, args);
+    let mut rt = Runtime::new(man)?;
+    let t0 = Instant::now();
+    let results = eh::table2(&mut rt, &tasks, &modes, batches, pct, |mode, task| {
+        eprintln!("  [eval] {mode} / {task} ...");
+    })?;
+
+    // Table 2, paper layout
+    let mut headers = vec!["Mode".to_string()];
+    headers.extend(tasks.iter().map(|t| eh::paper_header(t).to_string()));
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(&hrefs);
+    for mode in &modes {
+        let mut row = vec![eh::mode_label(mode)];
+        for t in &tasks {
+            row.push(eh::paper_cell(t, &results[mode][t]));
+        }
+        table.row(row);
+    }
+    println!("\nTable 2 (SynGLUE validation; paper layout):");
+    table.print();
+    println!("total eval time: {:.0}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_trace(args: &zqhero::cli::Args) -> Result<()> {
+    let man = Manifest::load(&artifacts_dir(args))?;
+    let mode = args.get_or("mode", "m3");
+    let spec = man.mode(mode)?;
+    println!("== Figure 1: attention module precision flow ({}) ==", eh::mode_label(mode));
+    let mut t = Table::new(&["tensor", "producer", "scheme", "dtype"]);
+    for r in traceflow::attention_flow(&spec.switches) {
+        t.row(vec![r.tensor.into(), r.producer.into(), r.scheme, r.dtype]);
+    }
+    t.print();
+    println!("\n== Figure 2: MLP module precision flow ==");
+    let mut t = Table::new(&["tensor", "producer", "scheme", "dtype"]);
+    for r in traceflow::mlp_flow(&spec.switches) {
+        t.row(vec![r.tensor.into(), r.producer.into(), r.scheme, r.dtype]);
+    }
+    t.print();
+
+    let bucket = *man.buckets.last().context("buckets")?;
+    let (expected, found) = traceflow::verify_mode_artifact(&man, mode, bucket)?;
+    println!("\nHLO verification (b{bucket}): expected {expected} int8 GeMMs, found {found}");
+    anyhow::ensure!(expected == found, "artifact does not match Table 1 claims");
+    println!("OK — artifact matches the Table 1 row.");
+    Ok(())
+}
+
+fn cmd_perfmodel(args: &zqhero::cli::Args) -> Result<()> {
+    let batch = args.get_usize("batch")?.unwrap_or(16);
+    let seq = args.get_usize("seq")?.unwrap_or(128);
+    let cfg = perfmodel::bert_base();
+    println!("A100 analytic projection, BERT_base, batch={batch} seq={seq}");
+    let mut t = Table::new(&["mode", "proj time (us)", "speedup vs FP16"]);
+    let modes = [
+        ("FP16", "000000"),
+        ("HERO-M1", "110010"),
+        ("HERO-M2", "111110"),
+        ("HERO-M3", "111111"),
+    ];
+    let fp_t = perfmodel::model_time_us(&cfg, &tag_to_switches("000000"), batch, seq);
+    for (label, tag) in modes {
+        let t_us = perfmodel::model_time_us(&cfg, &tag_to_switches(tag), batch, seq);
+        t.row(vec![label.into(), format!("{t_us:.0}"), format!("{:.2}x", fp_t / t_us)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn tag_to_switches(tag: &str) -> zqhero::model::Switches {
+    let b: Vec<bool> = tag.chars().map(|c| c == '1').collect();
+    zqhero::model::Switches {
+        embedding: b[0],
+        qkv: b[1],
+        attn: b[2],
+        attn_output: b[3],
+        fc1: b[4],
+        fc2: b[5],
+    }
+}
+
+fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let host = args.get_or("host", "127.0.0.1").to_string();
+    let port = args.get_usize("port")?.unwrap_or(7433) as u16;
+    let tasks: Vec<String> =
+        args.get_or("tasks", "sst2").split(',').map(str::to_string).collect();
+    let modes: Vec<String> =
+        args.get_or("modes", "fp,m3").split(',').map(str::to_string).collect();
+    let config = ServerConfig {
+        max_batch: args.get_usize("max-batch")?.unwrap_or(16),
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
+        ..ServerConfig::default()
+    };
+
+    // make sure quantized checkpoints exist (offline PTQ prep)
+    {
+        let man = Manifest::load(&dir)?;
+        let mut rt = Runtime::new(man)?;
+        for t in &tasks {
+            let task = rt.manifest.task(t)?.clone();
+            for m in modes.iter().filter(|m| *m != "fp") {
+                let rel = zqhero::coordinator::checkpoint_rel(&task, m);
+                if !rt.manifest.path(&rel).exists() {
+                    eprintln!("[prep] quantizing {t}/{m}...");
+                    let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
+                    eh::quantize_task(&mut rt, &task, m, &hist, 100.0, None)?;
+                }
+            }
+        }
+    }
+    let pairs: Vec<(String, String)> = tasks
+        .iter()
+        .flat_map(|t| modes.iter().map(move |m| (t.clone(), m.clone())))
+        .collect();
+    let coord = std::sync::Arc::new(Coordinator::start(dir, &pairs, config)?);
+    let server = zqhero::coordinator::NetServer::start(std::sync::Arc::clone(&coord), &host, port)?;
+    println!("serving on {} — newline-delimited JSON", server.addr);
+    println!("request: {{\"task\":\"sst2\",\"mode\":\"m3\",\"ids\":[1,1510,2]}}");
+    println!("Ctrl-C to stop; stats every 30s");
+    loop {
+        std::thread::sleep(Duration::from_secs(30));
+        println!("\n== {} connections, {} requests ==",
+                 server.connections.load(std::sync::atomic::Ordering::SeqCst),
+                 server.served.load(std::sync::atomic::Ordering::SeqCst));
+        print!("{}", coord.recorder.render());
+    }
+}
+
+fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let tasks: Vec<String> =
+        args.get_or("tasks", "sst2").split(',').map(str::to_string).collect();
+    let modes: Vec<String> =
+        args.get_or("modes", "fp,m3").split(',').map(str::to_string).collect();
+    let requests = args.get_usize("requests")?.unwrap_or(256);
+    let concurrency = args.get_usize("concurrency")?.unwrap_or(32);
+    let config = ServerConfig {
+        max_batch: args.get_usize("max-batch")?.unwrap_or(16),
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
+        ..ServerConfig::default()
+    };
+
+    // make sure quantized checkpoints exist
+    {
+        let man = Manifest::load(&dir)?;
+        let mut rt = Runtime::new(man)?;
+        for t in &tasks {
+            let task = rt.manifest.task(t)?.clone();
+            for m in &modes {
+                if m != "fp" {
+                    let rel = zqhero::coordinator::checkpoint_rel(&task, m);
+                    if !rt.manifest.path(&rel).exists() {
+                        let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
+                        eh::quantize_task(&mut rt, &task, m, &hist, 100.0, None)?;
+                    }
+                }
+            }
+        }
+    }
+
+    let pairs: Vec<(String, String)> = tasks
+        .iter()
+        .flat_map(|t| modes.iter().map(move |m| (t.clone(), m.clone())))
+        .collect();
+    println!("starting coordinator ({} task x mode pairs)...", pairs.len());
+    let coord = Coordinator::start(dir.clone(), &pairs, config)?;
+
+    // pull eval rows as the request payloads
+    let man = Manifest::load(&dir)?;
+    let mut payloads = Vec::new();
+    for t in &tasks {
+        let task = man.task(t)?;
+        let split = zqhero::data::Split::load(&man, task, "dev")?;
+        let rows: Vec<(Vec<i32>, Vec<i32>)> = (0..split.len().min(requests))
+            .map(|i| {
+                let (a, b) = split.row(i);
+                (a.to_vec(), b.to_vec())
+            })
+            .collect();
+        payloads.push(rows);
+    }
+
+    println!("running closed-loop load: {requests} requests per pair, {concurrency} in flight");
+    let t0 = Instant::now();
+    for (ti, t) in tasks.iter().enumerate() {
+        for m in &modes {
+            let rows = &payloads[ti];
+            let mut inflight = std::collections::VecDeque::new();
+            let mut done = 0usize;
+            let mut submitted = 0usize;
+            while done < requests {
+                while submitted < requests && inflight.len() < concurrency {
+                    let (ids, tys) = rows[submitted % rows.len()].clone();
+                    match coord.submit(t, m, ids, tys) {
+                        Ok(rx) => {
+                            inflight.push_back(rx);
+                            submitted += 1;
+                        }
+                        Err(_) => break, // backpressure: drain first
+                    }
+                }
+                if let Some(rx) = inflight.pop_front() {
+                    let resp = rx.recv().context("response channel closed")?;
+                    anyhow::ensure!(resp.error.is_none(), "request failed: {:?}", resp.error);
+                    done += 1;
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n== serving metrics ({wall:.1}s wall) ==");
+    print!("{}", coord.recorder.render());
+    Ok(())
+}

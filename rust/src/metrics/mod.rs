@@ -1,0 +1,182 @@
+//! GLUE metrics (Table 2 columns): accuracy, binary F1, Matthews
+//! correlation, Pearson and Spearman correlation — rust mirror of
+//! `python/compile/metrics.py`.
+
+/// Classification accuracy.
+pub fn accuracy(preds: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let hits = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    hits as f64 / preds.len() as f64
+}
+
+fn confusion(preds: &[i32], labels: &[i32]) -> (f64, f64, f64, f64) {
+    let mut tp = 0f64;
+    let mut tn = 0f64;
+    let mut fp = 0f64;
+    let mut fnn = 0f64;
+    for (p, l) in preds.iter().zip(labels) {
+        match (*p, *l) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fnn += 1.0,
+            _ => {}
+        }
+    }
+    (tp, tn, fp, fnn)
+}
+
+/// Binary F1 on the positive class.
+pub fn f1_binary(preds: &[i32], labels: &[i32]) -> f64 {
+    let (tp, _tn, fp, fnn) = confusion(preds, labels);
+    let denom = 2.0 * tp + fp + fnn;
+    if denom > 0.0 {
+        2.0 * tp / denom
+    } else {
+        0.0
+    }
+}
+
+/// Matthews correlation coefficient (the CoLA metric).
+pub fn matthews_corrcoef(preds: &[i32], labels: &[i32]) -> f64 {
+    let (tp, tn, fp, fnn) = confusion(preds, labels);
+    let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+    if denom > 0.0 {
+        (tp * tn - fp * fnn) / denom
+    } else {
+        0.0
+    }
+}
+
+/// Pearson correlation.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        let xc = a - mx;
+        let yc = b - my;
+        sxy += xc * yc;
+        sxx += xc * xc;
+        syy += yc * yc;
+    }
+    let denom = (sxx * syy).sqrt();
+    if denom > 0.0 {
+        sxy / denom
+    } else {
+        0.0
+    }
+}
+
+/// Average ranks with tie handling (matches scipy/our python `_ranks`).
+fn ranks(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap());
+    let mut out = vec![0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && x[order[j + 1]] == x[order[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[order[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation.
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// Dispatch by metric name (manifest task metadata).
+pub enum MetricInput<'a> {
+    Class { preds: &'a [i32], labels: &'a [i32] },
+    Reg { scores: &'a [f64], labels: &'a [f64] },
+}
+
+pub fn compute(name: &str, input: &MetricInput) -> f64 {
+    match (name, input) {
+        ("acc", MetricInput::Class { preds, labels }) => accuracy(preds, labels),
+        ("f1", MetricInput::Class { preds, labels }) => f1_binary(preds, labels),
+        ("mcc", MetricInput::Class { preds, labels }) => matthews_corrcoef(preds, labels),
+        ("pearson", MetricInput::Reg { scores, labels }) => pearson(scores, labels),
+        ("spearman", MetricInput::Reg { scores, labels }) => spearman(scores, labels),
+        _ => panic!("metric {name} with wrong input kind"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acc_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_known_case() {
+        // tp=2, fp=1, fn=1 -> f1 = 4/6
+        let preds = [1, 1, 1, 0, 0];
+        let labels = [1, 1, 0, 1, 0];
+        assert!((f1_binary(&preds, &labels) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_degenerate_all_negative() {
+        assert_eq!(f1_binary(&[0, 0], &[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn mcc_perfect_and_inverse() {
+        assert!((matthews_corrcoef(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((matthews_corrcoef(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mcc_degenerate_single_class_pred() {
+        // all-1 predictions: denominator zero -> 0 by convention
+        assert_eq!(matthews_corrcoef(&[1, 1, 1], &[1, 0, 1]), 0.0);
+    }
+
+    #[test]
+    fn pearson_linear() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotonic_nonlinear() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 8.0, 27.0, 64.0, 125.0]; // monotone -> rho = 1
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_ties() {
+        // ties get averaged ranks; compare against a hand-computed case
+        let x = [1.0, 1.0, 2.0];
+        let r = ranks(&x);
+        assert_eq!(r, vec![1.5, 1.5, 3.0]);
+    }
+}

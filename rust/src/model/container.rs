@@ -1,0 +1,226 @@
+//! ZQHERO named-tensor container — rust side of the format defined in
+//! `python/compile/container.py`.  Byte-exact parity is enforced by
+//! golden-file tests against python-written containers.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{DType, Tensor};
+
+const MAGIC: &[u8; 8] = b"ZQHERO01";
+
+pub struct Container {
+    /// Name -> tensor, in file order.
+    pub entries: Vec<(String, Tensor)>,
+}
+
+impl Container {
+    pub fn new() -> Self {
+        Container { entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: &str, t: Tensor) {
+        self.entries.push((name.to_string(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|(n, _)| n.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn read_file(path: &Path) -> Result<Self> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::read_bytes(&raw).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn read_bytes(raw: &[u8]) -> Result<Self> {
+        let mut r = Cursor { buf: raw, pos: 0 };
+        if r.take(8)? != MAGIC.as_slice() {
+            bail!("bad magic");
+        }
+        let count = r.u32()? as usize;
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+            let dtype = DType::from_code(r.u8()?)?;
+            let ndim = r.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let nbytes = r.u64()? as usize;
+            let data = r.take(nbytes)?;
+            entries.push((name, Tensor::from_raw_bytes(dtype, shape, data)?));
+        }
+        if r.pos != raw.len() {
+            bail!("trailing bytes in container");
+        }
+        Ok(Container { entries })
+    }
+
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.entries {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&[t.dtype().code(), t.shape.len() as u8])?;
+            for d in &t.shape {
+                f.write_all(&(*d as u32).to_le_bytes())?;
+            }
+            let raw = t.raw_bytes();
+            f.write_all(&(raw.len() as u64).to_le_bytes())?;
+            f.write_all(&raw)?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn write_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, t) in &self.entries {
+            let nb = name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.push(t.dtype().code());
+            out.push(t.shape.len() as u8);
+            for d in &t.shape {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            let raw = t.raw_bytes();
+            out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
+            out.extend_from_slice(&raw);
+        }
+        out
+    }
+}
+
+impl Container {
+    /// Reorder entries to match a parameter-spec list (name/shape/dtype
+    /// validated).  Needed because JAX flattens dict pytrees in sorted-key
+    /// order, so trained checkpoints arrive alphabetized while the HLO
+    /// parameter order follows the manifest specs.
+    pub fn reordered(&self, specs: &[crate::model::manifest::ParamSpec]) -> Result<Container> {
+        let mut out = Container::new();
+        for spec in specs {
+            let t = self
+                .get(&spec.name)
+                .with_context(|| format!("checkpoint missing param {}", spec.name))?;
+            if t.shape != spec.shape {
+                bail!("{}: shape {:?} != spec {:?}", spec.name, t.shape, spec.shape);
+            }
+            if t.dtype() != spec.dtype {
+                bail!("{}: dtype {:?} != spec {:?}", spec.name, t.dtype(), spec.dtype);
+            }
+            out.push(&spec.name, t.clone());
+        }
+        if out.len() != self.len() {
+            bail!(
+                "checkpoint has {} tensors but specs list {}",
+                self.len(),
+                specs.len()
+            );
+        }
+        Ok(out)
+    }
+}
+
+impl Default for Container {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated container (want {n} bytes at {})", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+#[allow(unused)]
+fn _read_to_end_unused<R: Read>(_r: R) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let mut c = Container::new();
+        c.push("w", Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        c.push("q", Tensor::i8(vec![4], vec![-1, 2, -3, 4]));
+        c.push("ids", Tensor::i32(vec![2], vec![7, -9]));
+        let bytes = c.write_bytes();
+        let r = Container::read_bytes(&bytes).unwrap();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.get("w").unwrap().as_f32().unwrap()[4], 5.0);
+        assert_eq!(r.get("q").unwrap().as_i8().unwrap(), &[-1, 2, -3, 4]);
+        assert_eq!(r.get("ids").unwrap().as_i32().unwrap(), &[7, -9]);
+        // order preserved
+        let names: Vec<_> = r.names().collect();
+        assert_eq!(names, vec!["w", "q", "ids"]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Container::read_bytes(b"NOTMAGIC\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut c = Container::new();
+        c.push("w", Tensor::f32(vec![2], vec![1., 2.]));
+        let bytes = c.write_bytes();
+        assert!(Container::read_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+}

@@ -1,0 +1,341 @@
+//! Typed view over `artifacts/manifest.json` — the L2→L3 contract
+//! (model config, per-mode parameter signatures, artifact paths, tasks).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+use super::tensor::DType;
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub vocab_size: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub type_vocab: usize,
+    pub num_labels: usize,
+    pub ln_eps: f64,
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Switches {
+    pub embedding: bool,
+    pub qkv: bool,
+    pub attn: bool,
+    pub attn_output: bool,
+    pub fc1: bool,
+    pub fc2: bool,
+}
+
+impl Switches {
+    pub const ALL_OFF: Switches = Switches {
+        embedding: false,
+        qkv: false,
+        attn: false,
+        attn_output: false,
+        fc1: false,
+        fc2: false,
+    };
+
+    pub fn tag(&self) -> String {
+        [self.embedding, self.qkv, self.attn, self.attn_output, self.fc1, self.fc2]
+            .iter()
+            .map(|b| if *b { '1' } else { '0' })
+            .collect()
+    }
+
+    /// Table-1 row as the paper prints it.
+    pub fn row(&self) -> [bool; 6] {
+        [self.embedding, self.qkv, self.attn, self.attn_output, self.fc1, self.fc2]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModeSpec {
+    pub name: String,
+    pub switches: Switches,
+    pub params: Vec<ParamSpec>,
+    /// bucket (batch size) -> artifact path relative to the artifacts root.
+    pub artifacts: BTreeMap<usize, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub name: String,
+    /// 0 = regression (STS-B).
+    pub classes: usize,
+    pub metrics: Vec<String>,
+    pub splits: BTreeMap<String, String>,
+    pub checkpoint: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibSpec {
+    pub artifact: String,
+    pub batch: usize,
+    pub params: Vec<ParamSpec>,
+    /// stat name -> shape, in artifact output order (after logits).
+    pub stats: Vec<(String, Vec<usize>)>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub model: ModelCfg,
+    pub seq: usize,
+    pub buckets: Vec<usize>,
+    pub modes: BTreeMap<String, ModeSpec>,
+    /// Mode order as listed in the manifest (fp, m1, m2, m3).
+    pub mode_order: Vec<String>,
+    pub calib: CalibSpec,
+    pub tasks: BTreeMap<String, TaskSpec>,
+    pub task_order: Vec<String>,
+    pub micro: BTreeMap<String, String>,
+}
+
+fn parse_specs(v: &Value) -> Result<Vec<ParamSpec>> {
+    let mut out = Vec::new();
+    for item in v.as_array().context("params not an array")? {
+        let t = item.as_array().context("param spec not an array")?;
+        if t.len() != 3 {
+            bail!("param spec must be [name, shape, dtype]");
+        }
+        let shape = t[1]
+            .as_array()
+            .context("shape")?
+            .iter()
+            .map(|d| d.as_usize().context("dim"))
+            .collect::<Result<Vec<_>>>()?;
+        out.push(ParamSpec {
+            name: t[0].as_str().context("name")?.to_string(),
+            shape,
+            dtype: DType::from_manifest(t[2].as_str().context("dtype")?)?,
+        });
+    }
+    Ok(out)
+}
+
+fn get_usize(v: &Value, key: &str) -> Result<usize> {
+    v.req(key)?.as_usize().with_context(|| format!("{key} not a number"))
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let v = json::parse(&src).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let m = v.req("model")?;
+        let model = ModelCfg {
+            vocab_size: get_usize(m, "vocab_size")?,
+            hidden: get_usize(m, "hidden")?,
+            layers: get_usize(m, "layers")?,
+            heads: get_usize(m, "heads")?,
+            ffn: get_usize(m, "ffn")?,
+            max_seq: get_usize(m, "max_seq")?,
+            type_vocab: get_usize(m, "type_vocab")?,
+            num_labels: get_usize(m, "num_labels")?,
+            ln_eps: m.req("ln_eps")?.as_f64().context("ln_eps")?,
+        };
+
+        let buckets = v
+            .req("buckets")?
+            .as_array()
+            .context("buckets")?
+            .iter()
+            .map(|b| b.as_usize().context("bucket"))
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut modes = BTreeMap::new();
+        let mut mode_order = Vec::new();
+        for (name, mv) in v.req("modes")?.as_object().context("modes")? {
+            let swv = mv.req("switches")?;
+            let flag = |k: &str| -> Result<bool> {
+                swv.req(k)?.as_bool().with_context(|| format!("switch {k}"))
+            };
+            let switches = Switches {
+                embedding: flag("embedding")?,
+                qkv: flag("qkv")?,
+                attn: flag("attn")?,
+                attn_output: flag("attn_output")?,
+                fc1: flag("fc1")?,
+                fc2: flag("fc2")?,
+            };
+            let mut artifacts = BTreeMap::new();
+            for (bk, pv) in mv.req("artifacts")?.as_object().context("artifacts")? {
+                let bucket: usize = bk
+                    .strip_prefix('b')
+                    .and_then(|s| s.parse().ok())
+                    .with_context(|| format!("bad bucket key {bk}"))?;
+                artifacts.insert(bucket, pv.as_str().context("artifact path")?.to_string());
+            }
+            mode_order.push(name.clone());
+            modes.insert(
+                name.clone(),
+                ModeSpec {
+                    name: name.clone(),
+                    switches,
+                    params: parse_specs(mv.req("params")?)?,
+                    artifacts,
+                },
+            );
+        }
+
+        let cv = v.req("calib")?;
+        let mut stats = Vec::new();
+        for item in cv.req("stats")?.as_array().context("stats")? {
+            let t = item.as_array().context("stat spec")?;
+            let shape = t[1]
+                .as_array()
+                .context("stat shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            stats.push((t[0].as_str().context("stat name")?.to_string(), shape));
+        }
+        let calib = CalibSpec {
+            artifact: cv.req("artifact")?.as_str().context("calib artifact")?.to_string(),
+            batch: get_usize(cv, "batch")?,
+            params: parse_specs(cv.req("params")?)?,
+            stats,
+        };
+
+        let mut tasks = BTreeMap::new();
+        let mut task_order = Vec::new();
+        for (name, tv) in v.req("tasks")?.as_object().context("tasks")? {
+            let mut splits = BTreeMap::new();
+            for (sn, sv) in tv.req("splits")?.as_object().context("splits")? {
+                splits.insert(sn.clone(), sv.as_str().context("split path")?.to_string());
+            }
+            let metrics = tv
+                .req("metrics")?
+                .as_array()
+                .context("metrics")?
+                .iter()
+                .map(|x| x.as_str().map(str::to_string).context("metric"))
+                .collect::<Result<Vec<_>>>()?;
+            task_order.push(name.clone());
+            tasks.insert(
+                name.clone(),
+                TaskSpec {
+                    name: name.clone(),
+                    classes: get_usize(tv, "classes")?,
+                    metrics,
+                    splits,
+                    checkpoint: tv.req("checkpoint")?.as_str().context("checkpoint")?.to_string(),
+                },
+            );
+        }
+
+        let mut micro = BTreeMap::new();
+        if let Some(mv) = v.get("micro").and_then(|x| x.as_object()) {
+            for (k, pv) in mv {
+                if let Some(p) = pv.as_str() {
+                    micro.insert(k.clone(), p.to_string());
+                }
+            }
+        }
+
+        Ok(Manifest {
+            root: artifacts_dir.to_path_buf(),
+            model,
+            seq: get_usize(&v, "seq")?,
+            buckets,
+            modes,
+            mode_order,
+            calib,
+            tasks,
+            task_order,
+            micro,
+        })
+    }
+
+    pub fn mode(&self, name: &str) -> Result<&ModeSpec> {
+        self.modes
+            .get(name)
+            .with_context(|| format!("unknown mode {name:?} (have {:?})", self.mode_order))
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskSpec> {
+        self.tasks
+            .get(name)
+            .with_context(|| format!("unknown task {name:?} (have {:?})", self.task_order))
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Smallest bucket >= n, or the largest bucket if n exceeds all.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for b in &self.buckets {
+            if *b >= n {
+                return *b;
+            }
+        }
+        *self.buckets.last().expect("no buckets")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_for_picks_smallest_fit() {
+        let man = Manifest {
+            root: PathBuf::new(),
+            model: ModelCfg {
+                vocab_size: 1, hidden: 1, layers: 1, heads: 1, ffn: 1,
+                max_seq: 1, type_vocab: 1, num_labels: 1, ln_eps: 1e-12,
+            },
+            seq: 128,
+            buckets: vec![1, 4, 8, 16],
+            modes: BTreeMap::new(),
+            mode_order: vec![],
+            calib: CalibSpec { artifact: String::new(), batch: 16, params: vec![], stats: vec![] },
+            tasks: BTreeMap::new(),
+            task_order: vec![],
+            micro: BTreeMap::new(),
+        };
+        assert_eq!(man.bucket_for(1), 1);
+        assert_eq!(man.bucket_for(2), 4);
+        assert_eq!(man.bucket_for(4), 4);
+        assert_eq!(man.bucket_for(9), 16);
+        assert_eq!(man.bucket_for(99), 16);
+    }
+
+    #[test]
+    fn switches_tag() {
+        let mut sw = Switches::ALL_OFF;
+        sw.embedding = true;
+        sw.fc1 = true;
+        assert_eq!(sw.tag(), "100010");
+    }
+}

@@ -1,0 +1,10 @@
+//! Model substrate: tensors, the checkpoint container format, and the
+//! typed manifest (the L2->L3 contract).
+
+pub mod container;
+pub mod manifest;
+pub mod tensor;
+
+pub use container::Container;
+pub use manifest::{CalibSpec, Manifest, ModeSpec, ModelCfg, ParamSpec, Switches, TaskSpec};
+pub use tensor::{DType, Tensor, TensorData};

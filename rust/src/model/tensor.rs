@@ -1,0 +1,195 @@
+//! Host-side tensor: the common currency between the checkpoint container,
+//! the quantization engine and the PJRT literal marshalling.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I8 => 1,
+            DType::I32 => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::I32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn from_manifest(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i8" => DType::I8,
+            "i32" => DType::I32,
+            _ => bail!("unknown manifest dtype {s:?}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i8(shape: Vec<usize>, data: Vec<i8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I8(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::f32(vec![1], vec![v])
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor::f32(shape, vec![0.0; n]),
+            DType::I8 => Tensor::i8(shape, vec![0; n]),
+            DType::I32 => Tensor::i32(shape, vec![0; n]),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I8(_) => DType::I8,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype().size()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor, got {:?}", self.dtype()),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            TensorData::I8(v) => Ok(v),
+            _ => bail!("expected i8 tensor, got {:?}", self.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor, got {:?}", self.dtype()),
+        }
+    }
+
+    /// Raw little-endian bytes (for container IO and PJRT upload).
+    pub fn raw_bytes(&self) -> Vec<u8> {
+        match &self.data {
+            TensorData::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            TensorData::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            TensorData::I8(v) => v.iter().map(|x| *x as u8).collect(),
+        }
+    }
+
+    pub fn from_raw_bytes(dtype: DType, shape: Vec<usize>, raw: &[u8]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if raw.len() != n * dtype.size() {
+            bail!("raw size {} != expected {}", raw.len(), n * dtype.size());
+        }
+        Ok(match dtype {
+            DType::F32 => {
+                let v = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::f32(shape, v)
+            }
+            DType::I32 => {
+                let v = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::i32(shape, v)
+            }
+            DType::I8 => Tensor::i8(shape, raw.iter().map(|b| *b as i8).collect()),
+        })
+    }
+
+    /// Row-major 2-D accessor helpers for the quantization engine.
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, -2.5, 3.5e-8, 4e9]);
+        let r = Tensor::from_raw_bytes(DType::F32, vec![2, 2], &t.raw_bytes()).unwrap();
+        assert_eq!(t, r);
+    }
+
+    #[test]
+    fn raw_roundtrip_i8() {
+        let t = Tensor::i8(vec![4], vec![-128, -1, 0, 127]);
+        let r = Tensor::from_raw_bytes(DType::I8, vec![4], &t.raw_bytes()).unwrap();
+        assert_eq!(t, r);
+    }
+
+    #[test]
+    fn raw_roundtrip_i32() {
+        let t = Tensor::i32(vec![3], vec![i32::MIN, 0, i32::MAX]);
+        let r = Tensor::from_raw_bytes(DType::I32, vec![3], &t.raw_bytes()).unwrap();
+        assert_eq!(t, r);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(Tensor::from_raw_bytes(DType::F32, vec![2], &[0u8; 7]).is_err());
+    }
+}

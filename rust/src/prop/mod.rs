@@ -1,0 +1,130 @@
+//! Mini property-testing framework (proptest is unavailable offline —
+//! DESIGN.md §2): a deterministic xorshift PRNG, value generators, and a
+//! `forall` runner with shrinking-free failure reporting (cases are seeded,
+//! so any failure is reproducible from the printed seed).
+
+/// xorshift64* — deterministic, fast, good enough for test-case generation.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + (self.next_u64() % ((hi - lo) as u64 + 1)) as i64
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.unit() * (hi - lo)
+    }
+
+    /// Log-uniform in [lo, hi) — the natural distribution for scales.
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.uniform(lo.ln(), hi.ln())).exp()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.uniform(lo as f64, hi as f64) as f32).collect()
+    }
+
+    pub fn vec_i8(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.range_i64(-127, 127) as i8).collect()
+    }
+
+    pub fn vec_i32(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n).map(|_| self.range_i64(lo as i64, hi as i64) as i32).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len())]
+    }
+}
+
+/// Run `body` over `cases` seeded cases; panics with the failing seed.
+pub fn forall<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut body: F) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1) ^ 0xD1B54A32D192ED03;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_hold() {
+        forall("ranges", 200, |r| {
+            let v = r.range_i64(-5, 5);
+            assert!((-5..=5).contains(&v));
+            let u = r.unit();
+            assert!((0.0..1.0).contains(&u));
+            let s = r.log_uniform(1e-4, 1e-1);
+            assert!((1e-4..1e-1).contains(&s));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failure_reports_seed() {
+        forall("always-fails", 3, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn below_covers_all_buckets() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 8];
+        for _ in 0..500 {
+            seen[r.below(8)] = true;
+        }
+        assert!(seen.iter().all(|b| *b));
+    }
+}

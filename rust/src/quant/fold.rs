@@ -1,0 +1,118 @@
+//! Scale folding (paper eqs. 20-23, 32) — rust mirror of the folding half
+//! of `python/compile/kernels/quant_ops.py`.
+//!
+//! Folding is what makes the runtime hot path division-free: output scales
+//! are divided *into* the weights at quantize time so every post-GeMM
+//! requantization collapses to a bare `Round` (eq. 22).
+
+/// Eq. 20-22: fold a scalar SQ output scale into W and bias.
+/// NumPy computes `w_f32 / python_float` in f32 (weak-scalar promotion),
+/// so we divide by the f32-cast scale.
+pub fn fold_sq_output(w: &[f32], b: &[f32], s_out: f64) -> (Vec<f32>, Vec<f32>) {
+    let s = s_out as f32;
+    (
+        w.iter().map(|x| x / s).collect(),
+        b.iter().map(|x| x / s).collect(),
+    )
+}
+
+/// Eq. 23 / 32: `W~ = diag(s_in) @ W @ diag(1/s_out)`, `b~ = b / s_out`.
+/// `w` row-major `[k, m]`, `s_in[k]`, `s_out[m]`.
+pub fn fold_fwq_in_fwq_out(
+    w: &[f32],
+    b: &[f32],
+    s_in: &[f32],
+    s_out: &[f32],
+    k: usize,
+    m: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(w.len(), k * m);
+    assert_eq!(s_in.len(), k);
+    assert_eq!(s_out.len(), m);
+    assert_eq!(b.len(), m);
+    let mut wt = vec![0f32; k * m];
+    for row in 0..k {
+        for col in 0..m {
+            wt[row * m + col] = (s_in[row] * w[row * m + col]) / s_out[col];
+        }
+    }
+    let bt = b.iter().zip(s_out).map(|(x, s)| x / s).collect();
+    (wt, bt)
+}
+
+/// Mode-fallback fold: FWQ int8 activation into a high-precision GeMM —
+/// only the input scale folds into the weight rows.
+pub fn fold_fwq_in_f32_out(w: &[f32], s_in: &[f32], k: usize, m: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * m);
+    assert_eq!(s_in.len(), k);
+    let mut wt = vec![0f32; k * m];
+    for row in 0..k {
+        for col in 0..m {
+            wt[row * m + col] = s_in[row] * w[row * m + col];
+        }
+    }
+    wt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::schemes::quantize_weight_colwise;
+
+    /// The folding identity the paper relies on: for any activation x_int8
+    /// with FWQ scale s_in, `(x*s_in) @ W ≈ (x @ W~) * s_out` where W~ is
+    /// the folded+quantized weight.  Checked against the unfolded f32 path.
+    #[test]
+    fn folding_preserves_gemm_semantics() {
+        let k = 8;
+        let m = 6;
+        let w: Vec<f32> = (0..k * m).map(|i| ((i * 29 % 41) as f32 - 20.0) / 17.0).collect();
+        let b: Vec<f32> = (0..m).map(|i| i as f32 * 0.1 - 0.3).collect();
+        let s_in: Vec<f32> = (0..k).map(|i| 0.01 + 0.002 * i as f32).collect();
+        let s_out: Vec<f32> = (0..m).map(|i| 0.05 + 0.01 * i as f32).collect();
+        let x: Vec<i8> = (0..k).map(|i| (i as i8) * 13 - 50).collect();
+
+        // reference: dequantize x, f32 GeMM, then FWQ-quantize the output
+        let mut y_ref = vec![0f32; m];
+        for col in 0..m {
+            let mut acc = 0f32;
+            for row in 0..k {
+                acc += (x[row] as f32 * s_in[row]) * w[row * m + col];
+            }
+            y_ref[col] = acc + b[col];
+        }
+
+        // folded path: int32 GeMM with W~ then epilogue round
+        let (wt, bt) = fold_fwq_in_fwq_out(&w, &b, &s_in, &s_out, k, m);
+        let (wq, ws) = quantize_weight_colwise(&wt, k, m);
+        for col in 0..m {
+            let mut acc = 0i32;
+            for row in 0..k {
+                acc += x[row] as i32 * wq[row * m + col] as i32;
+            }
+            let y_q = (acc as f32 * ws[col] + bt[col]).round_ties_even().clamp(-127.0, 127.0);
+            let y = y_q * s_out[col]; // dequantize to compare
+            // error bounded by weight-quant step + output-quant step
+            let tol = s_out[col] * 0.5 + 0.05;
+            assert!(
+                (y - y_ref[col]).abs() <= tol,
+                "col {col}: folded {y} vs ref {} (tol {tol})",
+                y_ref[col]
+            );
+        }
+    }
+
+    #[test]
+    fn fold_sq_scales_bias_too() {
+        let (w, b) = fold_sq_output(&[2.0, -4.0], &[1.0], 0.5);
+        assert_eq!(w, vec![4.0, -8.0]);
+        assert_eq!(b, vec![2.0]);
+    }
+
+    #[test]
+    fn fold_fwq_in_rows() {
+        let w = [1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let wt = fold_fwq_in_f32_out(&w, &[2.0, 10.0], 2, 2);
+        assert_eq!(wt, vec![2.0, 4.0, 30.0, 40.0]);
+    }
+}

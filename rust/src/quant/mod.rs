@@ -1,0 +1,15 @@
+//! Quantization engine (paper §2.1-2.2): schemes, scale folding, and the
+//! fp32 -> HERO checkpoint transform.  Mirrors the python reference in
+//! `python/compile/kernels/quant_ops.py` / `modeling/quantize.py` with
+//! bit-exact parity (golden-file tests).
+
+pub mod fold;
+pub mod outliers;
+pub mod schemes;
+pub mod transform;
+
+pub use schemes::{
+    quantize_weight_colwise, round_ties_even, scale_from_absmax, scale_from_max_nonneg,
+    sym_quantize_one, QMAX,
+};
+pub use transform::{quantize_checkpoint, validate_against_mode, AggStats, LayerScales};

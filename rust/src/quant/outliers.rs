@@ -1,0 +1,206 @@
+//! Outlier transplant: a *function-preserving* checkpoint transform that
+//! injects per-feature activation outliers, reproducing the failure
+//! mechanism behind the paper's CoLA collapse at M3.
+//!
+//! Real BERT develops large per-channel activation outliers during
+//! pretraining; our build-time-trained tiny models do not, so plain
+//! quantization barely hurts them (EXPERIMENTS.md Table 2).  To study the
+//! paper's sensitivity claims on this substrate we exploit an exact
+//! invariance of attention: scaling a subset of head-dim columns of `W_q`
+//! by `alpha` while scaling the *same* columns of `W_k` by `1/alpha`
+//! leaves `A = Q K^T` bit-identical in exact arithmetic — but `X_q` now
+//! has `alpha`-scaled outlier channels that a per-tensor SQ scale must
+//! cover, starving the remaining channels of resolution.  The same trick
+//! applies to `(W_v, W_o-rows)` for the PV path.
+//!
+//! FP metrics are unchanged (up to f32 rounding); quantized modes degrade
+//! with `alpha` exactly the way the paper's sensitive tasks do.
+
+use anyhow::Result;
+
+use crate::model::manifest::ModelCfg;
+use crate::model::{Container, Tensor};
+
+#[derive(Debug, Clone, Copy)]
+pub struct OutlierSpec {
+    /// scale factor applied to the selected channels
+    pub alpha: f32,
+    /// how many of the `head_dim` channels per head get scaled
+    pub channels_per_head: usize,
+    /// inject into the Q/K pair
+    pub qk: bool,
+    /// inject into the V/O pair
+    pub vo: bool,
+}
+
+impl Default for OutlierSpec {
+    fn default() -> Self {
+        OutlierSpec { alpha: 32.0, channels_per_head: 4, qk: true, vo: true }
+    }
+}
+
+fn scale_columns(w: &mut [f32], rows: usize, cols: usize, pick: &dyn Fn(usize) -> bool, f: f32) {
+    for r in 0..rows {
+        for c in 0..cols {
+            if pick(c) {
+                w[r * cols + c] *= f;
+            }
+        }
+    }
+}
+
+fn scale_rows(w: &mut [f32], rows: usize, cols: usize, pick: &dyn Fn(usize) -> bool, f: f32) {
+    for r in 0..rows {
+        if pick(r) {
+            for c in 0..cols {
+                w[r * cols + c] *= f;
+            }
+        }
+    }
+}
+
+/// Apply the transplant to an fp32 checkpoint (all layers).
+pub fn inject_outliers(fp: &Container, cfg: &ModelCfg, spec: &OutlierSpec) -> Result<Container> {
+    let d = cfg.hidden;
+    let dh = cfg.head_dim();
+    let k = spec.channels_per_head.min(dh);
+    // channel c (merged-head index) is scaled iff its within-head index < k
+    let pick = move |c: usize| c % dh < k;
+
+    let mut out = Container::new();
+    for (name, t) in &fp.entries {
+        let mut t = t.clone();
+        let is_layer = name.starts_with('L');
+        if is_layer && spec.qk && name.ends_with("attn.q.w") {
+            scale_columns(tensor_f32_mut(&mut t)?, d, d, &pick, spec.alpha);
+        } else if is_layer && spec.qk && name.ends_with("attn.q.b") {
+            for (c, v) in tensor_f32_mut(&mut t)?.iter_mut().enumerate() {
+                if pick(c) {
+                    *v *= spec.alpha;
+                }
+            }
+        } else if is_layer && spec.qk && name.ends_with("attn.k.w") {
+            scale_columns(tensor_f32_mut(&mut t)?, d, d, &pick, 1.0 / spec.alpha);
+        } else if is_layer && spec.qk && name.ends_with("attn.k.b") {
+            for (c, v) in tensor_f32_mut(&mut t)?.iter_mut().enumerate() {
+                if pick(c) {
+                    *v /= spec.alpha;
+                }
+            }
+        } else if is_layer && spec.vo && name.ends_with("attn.v.w") {
+            scale_columns(tensor_f32_mut(&mut t)?, d, d, &pick, spec.alpha);
+        } else if is_layer && spec.vo && name.ends_with("attn.v.b") {
+            for (c, v) in tensor_f32_mut(&mut t)?.iter_mut().enumerate() {
+                if pick(c) {
+                    *v *= spec.alpha;
+                }
+            }
+        } else if is_layer && spec.vo && name.ends_with("attn.o.w") {
+            scale_rows(tensor_f32_mut(&mut t)?, d, d, &pick, 1.0 / spec.alpha);
+        }
+        out.push(name, t);
+    }
+    Ok(out)
+}
+
+fn tensor_f32_mut(t: &mut Tensor) -> Result<&mut [f32]> {
+    match &mut t.data {
+        crate::model::TensorData::F32(v) => Ok(v.as_mut_slice()),
+        _ => anyhow::bail!("expected f32 tensor"),
+    }
+}
+
+/// Sanity helper for tests/benches: max |a-b| over two fp checkpoints'
+/// forward logits is checked by the caller; here we verify the transform
+/// touched what it should.
+pub fn describe(spec: &OutlierSpec) -> String {
+    format!(
+        "alpha={} channels/head={} qk={} vo={}",
+        spec.alpha, spec.channels_per_head, spec.qk, spec.vo
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            vocab_size: 16,
+            hidden: 8,
+            layers: 1,
+            heads: 2,
+            ffn: 16,
+            max_seq: 4,
+            type_vocab: 2,
+            num_labels: 3,
+            ln_eps: 1e-12,
+        }
+    }
+
+    fn tiny_ckpt() -> Container {
+        let mut c = Container::new();
+        let d = 8;
+        for name in ["L0.attn.q.w", "L0.attn.k.w", "L0.attn.v.w", "L0.attn.o.w"] {
+            c.push(name, Tensor::f32(vec![d, d], (0..d * d).map(|i| i as f32 + 1.0).collect()));
+        }
+        for name in ["L0.attn.q.b", "L0.attn.k.b", "L0.attn.v.b"] {
+            c.push(name, Tensor::f32(vec![d], (0..d).map(|i| i as f32 + 1.0).collect()));
+        }
+        c.push("pool.w", Tensor::f32(vec![d, d], vec![1.0; d * d]));
+        c
+    }
+
+    #[test]
+    fn qk_product_preserved() {
+        // (q.w scaled col) x (k.w inverse-scaled col): per-feature products
+        // q[:,c]*k[:,c] must be unchanged — that is what keeps A invariant.
+        let cfg = tiny_cfg();
+        let fp = tiny_ckpt();
+        let spec = OutlierSpec { alpha: 16.0, channels_per_head: 2, qk: true, vo: false };
+        let out = inject_outliers(&fp, &cfg, &spec).unwrap();
+        let q0 = fp.get("L0.attn.q.w").unwrap().as_f32().unwrap();
+        let k0 = fp.get("L0.attn.k.w").unwrap().as_f32().unwrap();
+        let q1 = out.get("L0.attn.q.w").unwrap().as_f32().unwrap();
+        let k1 = out.get("L0.attn.k.w").unwrap().as_f32().unwrap();
+        for i in 0..q0.len() {
+            let before = q0[i] * k0[i];
+            let after = q1[i] * k1[i];
+            assert!((before - after).abs() <= before.abs() * 1e-6);
+        }
+        // and the selected columns really are outliers now
+        let dh = cfg.head_dim();
+        assert!(q1[0] == q0[0] * 16.0); // col 0: within-head idx 0 < 2
+        assert!(q1[dh - 1] == q0[dh - 1]); // last col of head: untouched
+    }
+
+    #[test]
+    fn vo_product_preserved() {
+        let cfg = tiny_cfg();
+        let fp = tiny_ckpt();
+        let spec = OutlierSpec { alpha: 8.0, channels_per_head: 1, qk: false, vo: true };
+        let out = inject_outliers(&fp, &cfg, &spec).unwrap();
+        let d = 8;
+        let v0 = fp.get("L0.attn.v.w").unwrap().as_f32().unwrap();
+        let o0 = fp.get("L0.attn.o.w").unwrap().as_f32().unwrap();
+        let v1 = out.get("L0.attn.v.w").unwrap().as_f32().unwrap();
+        let o1 = out.get("L0.attn.o.w").unwrap().as_f32().unwrap();
+        // (v column c) * (o row c) contributions preserved
+        for c in 0..d {
+            for j in 0..d {
+                let before = v0[j * d + c] * o0[c * d + j];
+                let after = v1[j * d + c] * o1[c * d + j];
+                assert!((before - after).abs() <= before.abs() * 1e-6 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn untouched_params_identical() {
+        let cfg = tiny_cfg();
+        let fp = tiny_ckpt();
+        let out = inject_outliers(&fp, &cfg, &OutlierSpec::default()).unwrap();
+        assert_eq!(out.get("pool.w").unwrap(), fp.get("pool.w").unwrap());
+        assert_eq!(out.len(), fp.len());
+    }
+}

@@ -1,0 +1,167 @@
+//! Quantization primitives (paper §2.1) — rust mirror of
+//! `python/compile/kernels/quant_ops.py`.  Bit-exact parity with the python
+//! reference is enforced by golden-file tests; the numeric conventions
+//! (f64 division + round-half-to-even, f32 storage) are therefore part of
+//! the contract, not incidental.
+
+pub const QMAX: f64 = 127.0;
+pub const ASYM_LEVELS: f64 = 255.0;
+pub const SCALE_FLOOR: f64 = 1e-10;
+
+/// Round half to even — matches numpy's `np.round` and XLA's
+/// `round_nearest_even`.
+#[inline]
+pub fn round_ties_even(x: f64) -> f64 {
+    x.round_ties_even()
+}
+
+/// Symmetric int8: `round(x / scale)` clamped to ±127 (f64 internals,
+/// matching the python reference).
+#[inline]
+pub fn sym_quantize_one(x: f32, scale: f64) -> i8 {
+    round_ties_even(x as f64 / scale).clamp(-QMAX, QMAX) as i8
+}
+
+pub fn sym_dequantize_one(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// Symmetric scale from an abs-max statistic (guards all-zero slices).
+#[inline]
+pub fn scale_from_absmax(absmax: f64) -> f64 {
+    absmax.max(SCALE_FLOOR) / QMAX
+}
+
+/// Asymmetric non-negative scale over the full 255-level range
+/// (Softmax^quant output, zero point -128).
+#[inline]
+pub fn scale_from_max_nonneg(maxval: f64) -> f64 {
+    maxval.max(SCALE_FLOOR) / ASYM_LEVELS
+}
+
+/// Column-wise symmetric int8 weight quantization (paper eq. 2).
+///
+/// `w` is row-major `[k, m]`; returns `(w_int8, s_w[m])` with the int8
+/// computed against the f64 scale and the stored scale truncated to f32 —
+/// exactly the python `quantize_weight_colwise`.
+pub fn quantize_weight_colwise(w: &[f32], k: usize, m: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), k * m);
+    let mut absmax = vec![0f32; m];
+    for row in 0..k {
+        for col in 0..m {
+            let a = w[row * m + col].abs();
+            if a > absmax[col] {
+                absmax[col] = a;
+            }
+        }
+    }
+    let scales_f64: Vec<f64> = absmax.iter().map(|a| scale_from_absmax(*a as f64)).collect();
+    let mut q = vec![0i8; k * m];
+    for row in 0..k {
+        for col in 0..m {
+            q[row * m + col] = sym_quantize_one(w[row * m + col], scales_f64[col]);
+        }
+    }
+    (q, scales_f64.iter().map(|s| *s as f32).collect())
+}
+
+/// numpy-default ("linear") percentile over a sample axis, in f64.
+/// `pct >= 100` degenerates to the plain maximum (running-max calibration).
+pub fn percentile(samples: &[f64], pct: f64) -> f64 {
+    assert!(!samples.is_empty());
+    if pct >= 100.0 {
+        return samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = pct / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let frac = rank - lo as f64;
+    if lo + 1 < v.len() {
+        v[lo] * (1.0 - frac) + v[lo + 1] * frac
+    } else {
+        v[lo]
+    }
+}
+
+/// Percentile clip across a per-batch history: `hist[b][i]` -> out[i].
+pub fn clip_absmax_history(hist: &[Vec<f64>], pct: f64) -> Vec<f64> {
+    assert!(!hist.is_empty());
+    let n = hist[0].len();
+    let mut out = Vec::with_capacity(n);
+    let mut col = Vec::with_capacity(hist.len());
+    for i in 0..n {
+        col.clear();
+        col.extend(hist.iter().map(|h| h[i]));
+        out.push(percentile(&col, pct));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ties_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+    }
+
+    #[test]
+    fn sym_quantize_clamps() {
+        assert_eq!(sym_quantize_one(1000.0, 1.0), 127);
+        assert_eq!(sym_quantize_one(-1000.0, 1.0), -127);
+        assert_eq!(sym_quantize_one(0.0, 1.0), 0);
+    }
+
+    #[test]
+    fn colwise_scales_per_column() {
+        // col0 max 4, col1 max 0.5
+        let w = [4.0f32, 0.5, -2.0, -0.25];
+        let (q, s) = quantize_weight_colwise(&w, 2, 2);
+        assert!((s[0] - (4.0 / 127.0) as f32).abs() < 1e-9);
+        assert!((s[1] - (0.5 / 127.0) as f32).abs() < 1e-9);
+        assert_eq!(q[0], 127); // 4 / (4/127)
+        assert_eq!(q[3], -64); // -0.25/(0.5/127) = -63.5 -> ties-even -> -64
+    }
+
+    #[test]
+    fn colwise_roundtrip_error_bound() {
+        // |w - q*s| <= s/2 for every element
+        let w: Vec<f32> = (0..64).map(|i| ((i * 37 % 100) as f32 - 50.0) / 13.0).collect();
+        let (q, s) = quantize_weight_colwise(&w, 8, 8);
+        for row in 0..8 {
+            for col in 0..8 {
+                let recon = q[row * 8 + col] as f32 * s[col];
+                assert!((recon - w[row * 8 + col]).abs() <= s[col] / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_column_guard() {
+        let w = [0.0f32, 1.0, 0.0, -1.0];
+        let (q, s) = quantize_weight_colwise(&w, 2, 2);
+        assert!(s[0] > 0.0);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[2], 0);
+    }
+
+    #[test]
+    fn percentile_linear_matches_numpy() {
+        // np.percentile([1,2,3,4], 50) == 2.5 ; 25 -> 1.75 ; 100 -> 4
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 50.0), 2.5);
+        assert!((percentile(&[1.0, 2.0, 3.0, 4.0], 25.0) - 1.75).abs() < 1e-12);
+        assert_eq!(percentile(&[3.0, 1.0, 4.0, 2.0], 100.0), 4.0);
+    }
+
+    #[test]
+    fn scale_floor_guards_zeros() {
+        assert!(scale_from_absmax(0.0) > 0.0);
+        assert!(scale_from_max_nonneg(0.0) > 0.0);
+    }
+}

@@ -1,0 +1,278 @@
+//! Checkpoint transform: fp32 checkpoint + calibration stats -> HERO
+//! quantized checkpoint (the production mirror of
+//! `python/compile/modeling/quantize.py`; golden tests enforce bit-exact
+//! parity, so every numeric convention here matches numpy semantics).
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::container::Container;
+use crate::model::manifest::{ModelCfg, ModeSpec, Switches};
+use crate::model::tensor::Tensor;
+
+use super::fold::fold_fwq_in_fwq_out;
+use super::schemes::{
+    clip_absmax_history, quantize_weight_colwise, scale_from_absmax, scale_from_max_nonneg,
+};
+
+/// Calibration statistics aggregated across batches (after optional
+/// percentile clipping — Discussion (b) of the paper).
+#[derive(Debug, Clone)]
+pub struct AggStats {
+    pub q_absmax: Vec<f64>,        // [L]
+    pub k_absmax: Vec<f64>,        // [L]
+    pub v_absmax: Vec<f64>,        // [L]
+    pub p_max: Vec<f64>,           // [L]
+    pub attn_absmax: Vec<Vec<f64>>, // [L][d]
+    pub o_absmax: Vec<Vec<f64>>,    // [L][d]
+    pub gelu_absmax: Vec<Vec<f64>>, // [L][ffn]
+    pub x2_absmax: Vec<Vec<f64>>,   // [L][d]
+}
+
+impl AggStats {
+    /// Aggregate a per-batch history (stat name -> [batch][flattened])
+    /// with percentile clipping at `pct` (100 = running max).
+    pub fn from_history(
+        hist: &[(String, Vec<Vec<f64>>)],
+        cfg: &ModelCfg,
+        pct: f64,
+    ) -> Result<Self> {
+        let find = |name: &str| -> Result<Vec<f64>> {
+            let h = &hist
+                .iter()
+                .find(|(n, _)| n == name)
+                .with_context(|| format!("missing stat {name}"))?
+                .1;
+            Ok(clip_absmax_history(h, pct))
+        };
+        let per_layer = |flat: Vec<f64>, width: usize| -> Vec<Vec<f64>> {
+            flat.chunks(width).map(|c| c.to_vec()).collect()
+        };
+        let (d, f) = (cfg.hidden, cfg.ffn);
+        Ok(AggStats {
+            q_absmax: find("q_absmax")?,
+            k_absmax: find("k_absmax")?,
+            v_absmax: find("v_absmax")?,
+            p_max: find("p_max")?,
+            attn_absmax: per_layer(find("attn_absmax")?, d),
+            o_absmax: per_layer(find("o_absmax")?, d),
+            gelu_absmax: per_layer(find("gelu_absmax")?, f),
+            x2_absmax: per_layer(find("x2_absmax")?, d),
+        })
+    }
+}
+
+/// Derived activation scales for one layer (paper §2.2).
+#[derive(Debug, Clone)]
+pub struct LayerScales {
+    pub sq_q: f64,
+    pub sq_k: f64,
+    pub sq_v: f64,
+    pub sp: f64,
+    pub s_attn: Vec<f32>,
+    pub s_o: Vec<f32>,
+    pub s_a: Vec<f32>,
+    pub s_x2: Vec<f32>,
+}
+
+pub fn derive_layer_scales(stats: &AggStats, i: usize) -> LayerScales {
+    let vecf32 =
+        |v: &[f64]| -> Vec<f32> { v.iter().map(|a| scale_from_absmax(*a) as f32).collect() };
+    LayerScales {
+        sq_q: scale_from_absmax(stats.q_absmax[i]),
+        sq_k: scale_from_absmax(stats.k_absmax[i]),
+        sq_v: scale_from_absmax(stats.v_absmax[i]),
+        sp: scale_from_max_nonneg(stats.p_max[i]),
+        s_attn: vecf32(&stats.attn_absmax[i]),
+        s_o: vecf32(&stats.o_absmax[i]),
+        s_a: vecf32(&stats.gelu_absmax[i]),
+        s_x2: vecf32(&stats.x2_absmax[i]),
+    }
+}
+
+fn get2(fp: &Container, name: &str) -> Result<(Vec<f32>, usize, usize)> {
+    let t = fp.get(name).with_context(|| format!("missing fp param {name}"))?;
+    if t.shape.len() != 2 {
+        bail!("{name}: expected 2-D, got {:?}", t.shape);
+    }
+    Ok((t.as_f32()?.to_vec(), t.shape[0], t.shape[1]))
+}
+
+fn get1(fp: &Container, name: &str) -> Result<Vec<f32>> {
+    Ok(fp
+        .get(name)
+        .with_context(|| format!("missing fp param {name}"))?
+        .as_f32()?
+        .to_vec())
+}
+
+/// fp32 checkpoint + aggregated stats -> quantized checkpoint in
+/// `hero_param_specs` order for the given switches.
+pub fn quantize_checkpoint(
+    fp: &Container,
+    stats: &AggStats,
+    cfg: &ModelCfg,
+    sw: &Switches,
+) -> Result<Container> {
+    let (d, f, h) = (cfg.hidden, cfg.ffn, cfg.heads);
+    let dh = cfg.head_dim();
+    let mut out = Container::new();
+
+    for name in ["emb.tok", "emb.pos", "emb.type", "emb.ln.g", "emb.ln.b"] {
+        out.push(name, fp.get(name).with_context(|| name.to_string())?.clone());
+    }
+
+    for i in 0..cfg.layers {
+        let p = format!("L{i}.");
+        let sc = derive_layer_scales(stats, i);
+        let sq_of = |t: char| match t {
+            'q' => sc.sq_q,
+            'k' => sc.sq_k,
+            'v' => sc.sq_v,
+            _ => unreachable!(),
+        };
+
+        // ---- QKV projections
+        if sw.qkv {
+            for t in ['q', 'k', 'v'] {
+                let (w, k_, m_) = get2(fp, &format!("{p}attn.{t}.w"))?;
+                let b = get1(fp, &format!("{p}attn.{t}.b"))?;
+                if sw.attn {
+                    // eq. 20-21: fold SQ output scale; numpy divides the
+                    // f32 weight by the weak f64 scalar in f32.
+                    let s = sq_of(t) as f32;
+                    let wt: Vec<f32> = w.iter().map(|x| x / s).collect();
+                    let (wq, ws) = quantize_weight_colwise(&wt, k_, m_);
+                    out.push(&format!("{p}attn.{t}.wq"), Tensor::i8(vec![k_, m_], wq));
+                    out.push(&format!("{p}attn.{t}.ws"), Tensor::f32(vec![m_], ws));
+                    out.push(
+                        &format!("{p}attn.{t}.b"),
+                        Tensor::f32(vec![d], b.iter().map(|x| x / s).collect()),
+                    );
+                } else {
+                    let (wq, ws) = quantize_weight_colwise(&w, k_, m_);
+                    out.push(&format!("{p}attn.{t}.wq"), Tensor::i8(vec![k_, m_], wq));
+                    out.push(&format!("{p}attn.{t}.ws"), Tensor::f32(vec![m_], ws));
+                    out.push(&format!("{p}attn.{t}.b"), Tensor::f32(vec![d], b));
+                }
+            }
+        } else {
+            for t in ['q', 'k', 'v'] {
+                out.push(
+                    &format!("{p}attn.{t}.w"),
+                    fp.get(&format!("{p}attn.{t}.w")).context("qkv w")?.clone(),
+                );
+                out.push(
+                    &format!("{p}attn.{t}.b"),
+                    fp.get(&format!("{p}attn.{t}.b")).context("qkv b")?.clone(),
+                );
+            }
+        }
+
+        // ---- attention core scales
+        if sw.attn {
+            let qk = (sc.sq_q * sc.sq_k / (dh as f64).sqrt()) as f32;
+            out.push(&format!("{p}attn.qk_scale"), Tensor::f32(vec![1], vec![qk]));
+            out.push(&format!("{p}attn.sp"), Tensor::f32(vec![1], vec![sc.sp as f32]));
+            // pv = (sp * S_v) / S_attn — weak f64 scalar hits the f32 array
+            let num = (sc.sp * sc.sq_v) as f32;
+            let pv: Vec<f32> = sc.s_attn.iter().map(|s| num / s).collect();
+            out.push(&format!("{p}attn.pv_scale"), Tensor::f32(vec![h, dh], pv));
+            if !sw.qkv {
+                for t in ['q', 'k', 'v'] {
+                    out.push(
+                        &format!("{p}attn.inv_sq_{t}"),
+                        Tensor::f32(vec![1], vec![(1.0 / sq_of(t)) as f32]),
+                    );
+                }
+            }
+        }
+
+        // ---- attention output projection
+        if sw.attn_output {
+            let (w, k_, m_) = get2(fp, &format!("{p}attn.o.w"))?;
+            let b = get1(fp, &format!("{p}attn.o.b"))?;
+            let (wt, bt) = fold_fwq_in_fwq_out(&w, &b, &sc.s_attn, &sc.s_o, k_, m_);
+            let (wq, ws) = quantize_weight_colwise(&wt, k_, m_);
+            out.push(&format!("{p}attn.o.wq"), Tensor::i8(vec![k_, m_], wq));
+            out.push(&format!("{p}attn.o.ws"), Tensor::f32(vec![m_], ws));
+            out.push(&format!("{p}attn.o.bq"), Tensor::f32(vec![d], bt));
+            out.push(&format!("{p}ln1.so"), Tensor::f32(vec![d], sc.s_o.clone()));
+            if !sw.attn {
+                let inv: Vec<f32> = sc.s_attn.iter().map(|s| 1.0 / s).collect();
+                out.push(&format!("{p}attn.inv_s_attn"), Tensor::f32(vec![d], inv));
+            }
+        } else {
+            out.push(
+                &format!("{p}attn.o.w"),
+                fp.get(&format!("{p}attn.o.w")).context("o.w")?.clone(),
+            );
+            out.push(
+                &format!("{p}attn.o.b"),
+                fp.get(&format!("{p}attn.o.b")).context("o.b")?.clone(),
+            );
+            if sw.attn {
+                out.push(&format!("{p}attn.s_attn"), Tensor::f32(vec![d], sc.s_attn.clone()));
+            }
+        }
+        out.push(&format!("{p}ln1.g"), fp.get(&format!("{p}ln1.g")).context("ln1.g")?.clone());
+        out.push(&format!("{p}ln1.b"), fp.get(&format!("{p}ln1.b")).context("ln1.b")?.clone());
+
+        // ---- MLP
+        if sw.fc1 {
+            let (w, k_, m_) = get2(fp, &format!("{p}fc1.w"))?;
+            let (wq, ws) = quantize_weight_colwise(&w, k_, m_);
+            out.push(&format!("{p}fc1.wq"), Tensor::i8(vec![k_, m_], wq));
+            out.push(&format!("{p}fc1.ws"), Tensor::f32(vec![m_], ws));
+            out.push(&format!("{p}fc1.b"), fp.get(&format!("{p}fc1.b")).context("fc1.b")?.clone());
+        } else {
+            out.push(&format!("{p}fc1.w"), fp.get(&format!("{p}fc1.w")).context("fc1.w")?.clone());
+            out.push(&format!("{p}fc1.b"), fp.get(&format!("{p}fc1.b")).context("fc1.b")?.clone());
+        }
+        if sw.fc2 {
+            out.push(&format!("{p}gelu.sa"), Tensor::f32(vec![f], sc.s_a.clone()));
+            let (w, k_, m_) = get2(fp, &format!("{p}fc2.w"))?;
+            let b = get1(fp, &format!("{p}fc2.b"))?;
+            let (wt, bt) = fold_fwq_in_fwq_out(&w, &b, &sc.s_a, &sc.s_x2, k_, m_);
+            let (wq, ws) = quantize_weight_colwise(&wt, k_, m_);
+            out.push(&format!("{p}fc2.wq"), Tensor::i8(vec![k_, m_], wq));
+            out.push(&format!("{p}fc2.ws"), Tensor::f32(vec![m_], ws));
+            out.push(&format!("{p}fc2.bq"), Tensor::f32(vec![d], bt));
+            out.push(&format!("{p}ln2.sx2"), Tensor::f32(vec![d], sc.s_x2.clone()));
+        } else {
+            out.push(&format!("{p}fc2.w"), fp.get(&format!("{p}fc2.w")).context("fc2.w")?.clone());
+            out.push(&format!("{p}fc2.b"), fp.get(&format!("{p}fc2.b")).context("fc2.b")?.clone());
+        }
+        out.push(&format!("{p}ln2.g"), fp.get(&format!("{p}ln2.g")).context("ln2.g")?.clone());
+        out.push(&format!("{p}ln2.b"), fp.get(&format!("{p}ln2.b")).context("ln2.b")?.clone());
+    }
+
+    for name in ["pool.w", "pool.b", "cls.w", "cls.b"] {
+        out.push(name, fp.get(name).with_context(|| name.to_string())?.clone());
+    }
+    Ok(out)
+}
+
+/// Validate a quantized checkpoint against the manifest's mode signature:
+/// same names, same order, same shapes, same dtypes.
+pub fn validate_against_mode(ckpt: &Container, mode: &ModeSpec) -> Result<()> {
+    if ckpt.len() != mode.params.len() {
+        bail!(
+            "checkpoint has {} tensors, mode {} expects {}",
+            ckpt.len(),
+            mode.name,
+            mode.params.len()
+        );
+    }
+    for ((name, t), spec) in ckpt.entries.iter().zip(&mode.params) {
+        if name != &spec.name {
+            bail!("param order mismatch: checkpoint {name:?} vs manifest {:?}", spec.name);
+        }
+        if t.shape != spec.shape {
+            bail!("{name}: shape {:?} vs manifest {:?}", t.shape, spec.shape);
+        }
+        if t.dtype() != spec.dtype {
+            bail!("{name}: dtype {:?} vs manifest {:?}", t.dtype(), spec.dtype);
+        }
+    }
+    Ok(())
+}

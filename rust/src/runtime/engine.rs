@@ -1,0 +1,148 @@
+//! Engine thread: owns the (non-`Send`) PJRT runtime and serves execution
+//! requests over channels — the executor-thread pattern a production GPU
+//! server uses.  The coordinator and its worker pool stay fully `Send`.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::manifest::Manifest;
+use crate::model::tensor::Tensor;
+use crate::model::Container;
+
+use super::Runtime;
+
+pub struct InferJob {
+    pub task: String,
+    pub mode: String,
+    pub bucket: usize,
+    pub ids: Vec<i32>,
+    pub type_ids: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub reply: Sender<Result<InferDone>>,
+}
+
+pub struct InferDone {
+    pub logits: Tensor,
+    /// device-side execution time (engine-thread measured), microseconds.
+    pub exec_us: u64,
+}
+
+enum Msg {
+    Infer(Box<InferJob>),
+    Stop,
+}
+
+/// `Send` handle to the engine thread.
+pub struct Engine {
+    tx: Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Spawn the engine: loads the manifest, uploads every (task, mode)
+    /// checkpoint in `preload`, and pre-compiles the executables for the
+    /// requested (mode, bucket) pairs so the serving hot path never
+    /// compiles.
+    pub fn spawn(
+        artifacts: PathBuf,
+        preload: Vec<(String, String, Container)>,
+        precompile: Vec<(String, usize)>,
+    ) -> Result<Engine> {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("zqhero-engine".into())
+            .spawn(move || engine_main(artifacts, preload, precompile, rx, ready_tx))
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Engine { tx, join: Some(join) })
+    }
+
+    pub fn submit(&self, job: InferJob) -> Result<()> {
+        self.tx
+            .send(Msg::Infer(Box::new(job)))
+            .map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    /// Synchronous convenience call (CLI paths, tests).
+    pub fn infer_blocking(
+        &self,
+        task: &str,
+        mode: &str,
+        bucket: usize,
+        ids: Vec<i32>,
+        type_ids: Vec<i32>,
+        mask: Vec<f32>,
+    ) -> Result<InferDone> {
+        let (reply, rx) = channel();
+        self.submit(InferJob {
+            task: task.into(),
+            mode: mode.into(),
+            bucket,
+            ids,
+            type_ids,
+            mask,
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_main(
+    artifacts: PathBuf,
+    preload: Vec<(String, String, Container)>,
+    precompile: Vec<(String, usize)>,
+    rx: Receiver<Msg>,
+    ready_tx: Sender<Result<()>>,
+) {
+    let mut rt = match Manifest::load(&artifacts).and_then(Runtime::new) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let mut init = || -> Result<()> {
+        for (task, mode, ckpt) in &preload {
+            rt.upload_checkpoint(task, mode, ckpt)?;
+        }
+        for (mode, bucket) in &precompile {
+            rt.model_exe(mode, *bucket)?;
+        }
+        Ok(())
+    };
+    if ready_tx.send(init()).is_err() {
+        return;
+    }
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Stop => break,
+            Msg::Infer(job) => {
+                let t0 = Instant::now();
+                let res = rt
+                    .infer(&job.task, &job.mode, job.bucket, &job.ids, &job.type_ids, &job.mask)
+                    .map(|logits| InferDone {
+                        logits,
+                        exec_us: t0.elapsed().as_micros() as u64,
+                    });
+                let _ = job.reply.send(res);
+            }
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts, keeps weights
+//! device-resident, and executes inference/calibration on the hot path —
+//! no Python anywhere.
+//!
+//! `Runtime` is intentionally single-threaded (`PjRtClient` is `Rc`-based):
+//! CLI commands use it directly on the main thread; the serving coordinator
+//! wraps it in a dedicated engine thread (`engine.rs`) and talks to it over
+//! channels, the same shape as a GPU-executor thread in a production
+//! server.
+
+pub mod engine;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::manifest::Manifest;
+use crate::model::tensor::{DType, Tensor};
+use crate::model::Container;
+
+/// Host copy of an executable's output tuple.
+pub struct Outputs {
+    pub tensors: Vec<Tensor>,
+}
+
+/// A compiled artifact plus load/compile timings (reported by `repro info`).
+pub struct Exe {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+    pub load_ms: f64,
+    pub compile_ms: f64,
+}
+
+/// Device-resident checkpoint: one buffer per parameter, in manifest order.
+pub struct DeviceCheckpoint {
+    pub bufs: Vec<xla::PjRtBuffer>,
+    pub nbytes: usize,
+}
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// (mode, bucket) -> compiled model executable.
+    exes: HashMap<(String, usize), Exe>,
+    /// misc executables (calibration artifact, micro benches) by path.
+    raw_exes: HashMap<String, Exe>,
+    /// (task, mode) -> device-resident weights.
+    ckpts: HashMap<(String, String), DeviceCheckpoint>,
+}
+
+#[allow(dead_code)]
+fn elem_type(dt: DType) -> xla::ElementType {
+    match dt {
+        DType::F32 => xla::ElementType::F32,
+        DType::I8 => xla::ElementType::S8,
+        DType::I32 => xla::ElementType::S32,
+    }
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            raw_exes: HashMap::new(),
+            ckpts: HashMap::new(),
+        })
+    }
+
+    // ---------------------------------------------------------------- load
+
+    pub fn compile_hlo_file(client: &xla::PjRtClient, path: &Path) -> Result<Exe> {
+        let t0 = Instant::now();
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .map_err(|e| anyhow::anyhow!("loading {path:?}: {e}"))?;
+        let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let t1 = Instant::now();
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e}"))?;
+        Ok(Exe {
+            exe,
+            path: path.display().to_string(),
+            load_ms,
+            compile_ms: t1.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Compile (and cache) the model executable for (mode, bucket).
+    pub fn model_exe(&mut self, mode: &str, bucket: usize) -> Result<&Exe> {
+        let key = (mode.to_string(), bucket);
+        if !self.exes.contains_key(&key) {
+            let spec = self.manifest.mode(mode)?;
+            let rel = spec
+                .artifacts
+                .get(&bucket)
+                .with_context(|| format!("mode {mode} has no bucket {bucket}"))?;
+            let exe = Self::compile_hlo_file(&self.client, &self.manifest.path(rel))?;
+            self.exes.insert(key.clone(), exe);
+        }
+        Ok(&self.exes[&key])
+    }
+
+    /// Compile (and cache) an arbitrary artifact by manifest-relative path.
+    pub fn raw_exe(&mut self, rel: &str) -> Result<&Exe> {
+        if !self.raw_exes.contains_key(rel) {
+            let exe = Self::compile_hlo_file(&self.client, &self.manifest.path(rel))?;
+            self.raw_exes.insert(rel.to_string(), exe);
+        }
+        Ok(&self.raw_exes[rel])
+    }
+
+    // ------------------------------------------------------------- weights
+
+    pub fn upload_tensor(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        // NOTE: the typed `buffer_from_host_buffer::<T>` is used on purpose:
+        // the crate's `buffer_from_host_raw_bytes` forwards the rust
+        // `ElementType` discriminant straight to the C API, which is offset
+        // from XLA's `PrimitiveType` (F32 silently becomes F16).  The typed
+        // path converts via `T::TY.primitive_type()` and is correct.
+        let buf = match &t.data {
+            crate::model::TensorData::F32(v) => {
+                self.client.buffer_from_host_buffer(v, &t.shape, None)
+            }
+            crate::model::TensorData::I8(v) => {
+                self.client.buffer_from_host_buffer(v, &t.shape, None)
+            }
+            crate::model::TensorData::I32(v) => {
+                self.client.buffer_from_host_buffer(v, &t.shape, None)
+            }
+        };
+        buf.map_err(|e| anyhow::anyhow!("upload: {e}"))
+    }
+
+    /// Upload a checkpoint once; later executions reference the resident
+    /// buffers (the per-request upload is only ids+mask — DESIGN.md §5.1).
+    pub fn upload_checkpoint(&mut self, task: &str, mode: &str, ckpt: &Container) -> Result<()> {
+        let mut bufs = Vec::with_capacity(ckpt.len());
+        let mut nbytes = 0;
+        for (_, t) in &ckpt.entries {
+            bufs.push(self.upload_tensor(t)?);
+            nbytes += t.nbytes();
+        }
+        self.ckpts
+            .insert((task.to_string(), mode.to_string()), DeviceCheckpoint { bufs, nbytes });
+        Ok(())
+    }
+
+    pub fn has_checkpoint(&self, task: &str, mode: &str) -> bool {
+        self.ckpts.contains_key(&(task.to_string(), mode.to_string()))
+    }
+
+    pub fn checkpoint_nbytes(&self, task: &str, mode: &str) -> Option<usize> {
+        self.ckpts.get(&(task.to_string(), mode.to_string())).map(|c| c.nbytes)
+    }
+
+    // ------------------------------------------------------------- execute
+
+    fn read_outputs(results: Vec<Vec<xla::PjRtBuffer>>) -> Result<Outputs> {
+        let buf = &results
+            .first()
+            .context("no replica outputs")?
+            .first()
+            .context("no outputs")?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e}"))?;
+        // artifacts are lowered with return_tuple=True
+        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("to_tuple: {e}"))?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for p in parts {
+            let shape = p.array_shape().map_err(|e| anyhow::anyhow!("shape: {e}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+            let t = match shape.ty() {
+                xla::ElementType::F32 => {
+                    Tensor::f32(dims, p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?)
+                }
+                xla::ElementType::S8 => {
+                    Tensor::i8(dims, p.to_vec::<i8>().map_err(|e| anyhow::anyhow!("{e}"))?)
+                }
+                xla::ElementType::S32 => {
+                    Tensor::i32(dims, p.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?)
+                }
+                other => bail!("unsupported output element type {other:?}"),
+            };
+            tensors.push(t);
+        }
+        Ok(Outputs { tensors })
+    }
+
+    /// Run a model executable with resident weights + fresh input buffers.
+    /// `ids`/`type_ids` are `[bucket * seq]` i32, `mask` `[bucket * seq]` f32.
+    pub fn infer(
+        &mut self,
+        task: &str,
+        mode: &str,
+        bucket: usize,
+        ids: &[i32],
+        type_ids: &[i32],
+        mask: &[f32],
+    ) -> Result<Tensor> {
+        let seq = self.manifest.seq;
+        if ids.len() != bucket * seq {
+            bail!("ids len {} != bucket {bucket} * seq {seq}", ids.len());
+        }
+        self.model_exe(mode, bucket)?; // ensure compiled before borrowing ckpt
+        let ckpt = self
+            .ckpts
+            .get(&(task.to_string(), mode.to_string()))
+            .with_context(|| format!("checkpoint ({task},{mode}) not uploaded"))?;
+
+        let up = |e: xla::Error| anyhow::anyhow!("{e}");
+        let ids_b = self.client.buffer_from_host_buffer(ids, &[bucket, seq], None).map_err(up)?;
+        let ty_b =
+            self.client.buffer_from_host_buffer(type_ids, &[bucket, seq], None).map_err(up)?;
+        let mask_b =
+            self.client.buffer_from_host_buffer(mask, &[bucket, seq], None).map_err(up)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = ckpt.bufs.iter().collect();
+        args.push(&ids_b);
+        args.push(&ty_b);
+        args.push(&mask_b);
+
+        let exe = &self.exes[&(mode.to_string(), bucket)];
+        let out = exe.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let mut outputs = Self::read_outputs(out)?;
+        if outputs.tensors.len() != 1 {
+            bail!("model artifact returned {} outputs, expected 1", outputs.tensors.len());
+        }
+        Ok(outputs.tensors.remove(0))
+    }
+
+    /// Run the calibration-instrumented artifact for one batch; returns
+    /// (logits, stats in manifest order).
+    pub fn calibrate_batch(
+        &mut self,
+        fp_bufs: &[xla::PjRtBuffer],
+        ids: &[i32],
+        type_ids: &[i32],
+        mask: &[f32],
+    ) -> Result<Outputs> {
+        let seq = self.manifest.seq;
+        let batch = self.manifest.calib.batch;
+        if ids.len() != batch * seq {
+            bail!("calibration batch must be exactly {batch} x {seq}");
+        }
+        let rel = self.manifest.calib.artifact.clone();
+        self.raw_exe(&rel)?;
+
+        let up = |e: xla::Error| anyhow::anyhow!("{e}");
+        let ids_b = self.client.buffer_from_host_buffer(ids, &[batch, seq], None).map_err(up)?;
+        let ty_b =
+            self.client.buffer_from_host_buffer(type_ids, &[batch, seq], None).map_err(up)?;
+        let mask_b =
+            self.client.buffer_from_host_buffer(mask, &[batch, seq], None).map_err(up)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = fp_bufs.iter().collect();
+        args.push(&ids_b);
+        args.push(&ty_b);
+        args.push(&mask_b);
+
+        let exe = &self.raw_exes[&rel];
+        let out = exe.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        Self::read_outputs(out)
+    }
+
+    /// Upload raw tensors (calibration fp params / micro benches).
+    pub fn upload_all(&self, tensors: &[Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        tensors.iter().map(|t| self.upload_tensor(t)).collect()
+    }
+
+    /// Execute an arbitrary artifact with host tensors (micro benches).
+    pub fn run_raw(&mut self, rel: &str, inputs: &[Tensor]) -> Result<Outputs> {
+        self.raw_exe(rel)?;
+        let bufs = self.upload_all(inputs)?;
+        let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let exe = &self.raw_exes[rel];
+        let out = exe.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        Self::read_outputs(out)
+    }
+
+    /// Execute an arbitrary artifact with pre-uploaded buffers (hot loop).
+    pub fn run_raw_buffers(&mut self, rel: &str, args: &[&xla::PjRtBuffer]) -> Result<Outputs> {
+        self.raw_exe(rel)?;
+        let exe = &self.raw_exes[rel];
+        let out = exe.exe.execute_b(args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        Self::read_outputs(out)
+    }
+
+    pub fn loaded_exe_count(&self) -> usize {
+        self.exes.len() + self.raw_exes.len()
+    }
+}

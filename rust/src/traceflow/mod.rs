@@ -1,0 +1,191 @@
+//! Precision-flow traces for Figures 1 and 2: the tensor-by-tensor
+//! quantization annotations of the attention and MLP modules, generated
+//! from a switch set and *verified against the lowered HLO* (an INT8 GeMM
+//! accumulates in s32, so the number of `s32 dot` instructions in the
+//! artifact must match what the mode claims — Table 1 made checkable).
+
+use anyhow::{Context, Result};
+
+use crate::model::manifest::{Manifest, Switches};
+
+#[derive(Debug, Clone)]
+pub struct FlowRow {
+    pub tensor: &'static str,
+    pub producer: &'static str,
+    pub scheme: String,
+    pub dtype: String,
+}
+
+fn row(tensor: &'static str, producer: &'static str, scheme: &str, dtype: &str) -> FlowRow {
+    FlowRow { tensor, producer, scheme: scheme.into(), dtype: dtype.into() }
+}
+
+/// Figure 1: attention module dataflow under a switch set.
+pub fn attention_flow(sw: &Switches) -> Vec<FlowRow> {
+    let mut rows = Vec::new();
+    if sw.qkv {
+        rows.push(row("X_in", "LN^quant (prev)", "TWQ", "int8"));
+    } else {
+        rows.push(row("X_in", "LN (prev)", "none", "fp"));
+    }
+    if sw.attn {
+        rows.push(row("X_q/k/v", "GeMM^quant + Round", "SQ", "int8"));
+        rows.push(row("A", "GeMM^quant(QK^T, folded SqSk/sqrt(d))", "none", "fp"));
+        rows.push(row("P", "Softmax^quant", "SQ asym (zp=-128)", "int8"));
+        rows.push(row("X_attn", "GeMM^quant(PV)", "FWQ", "int8"));
+    } else {
+        let prod = if sw.qkv { "GeMM^quant (dequant epilogue)" } else { "GeMM" };
+        rows.push(row("X_q/k/v", prod, "none", "fp"));
+        rows.push(row("A", "QK^T / sqrt(d)", "none", "fp"));
+        rows.push(row("P", "Softmax", "none", "fp"));
+        rows.push(row("X_attn", "PV", "none", "fp"));
+    }
+    if sw.attn_output {
+        rows.push(row("X_o", "GeMM^quant(W~_o, eq.23) + Round", "FWQ", "int8"));
+    } else {
+        rows.push(row("X_o", "GeMM(W_o)", "none", "fp"));
+    }
+    if sw.fc1 {
+        rows.push(row("X_out", "LN^quant", "TWQ", "int8"));
+    } else {
+        rows.push(row("X_out", "LN", "none", "fp"));
+    }
+    rows
+}
+
+/// Figure 2: MLP module dataflow under a switch set.
+pub fn mlp_flow(sw: &Switches) -> Vec<FlowRow> {
+    let mut rows = Vec::new();
+    if sw.fc1 {
+        rows.push(row("X_in", "LN^quant", "TWQ", "int8"));
+        rows.push(row("X_1", "GeMM^quant (dequant epilogue)", "none", "fp"));
+    } else {
+        rows.push(row("X_in", "LN", "none", "fp"));
+        rows.push(row("X_1", "GeMM(W_1)", "none", "fp"));
+    }
+    if sw.fc2 {
+        rows.push(row("A", "GELU^quant", "FWQ", "int8"));
+        rows.push(row("X_2", "GeMM^quant(W~_2, eq.32) + Round", "FWQ", "int8"));
+    } else {
+        rows.push(row("A", "GELU", "none", "fp"));
+        rows.push(row("X_2", "GeMM(W_2)", "none", "fp"));
+    }
+    rows.push(if sw.qkv {
+        row("X_out", "LN^quant", "TWQ", "int8")
+    } else {
+        row("X_out", "LN", "none", "fp")
+    });
+    rows
+}
+
+// --------------------------------------------------------- HLO verification
+
+/// Expected number of `s32`-accumulating dot instructions per layer for a
+/// switch set (INT8 GeMMs accumulate in int32; FP GeMMs are f32 dots).
+pub fn expected_int8_dots_per_layer(sw: &Switches) -> usize {
+    let mut n = 0;
+    if sw.qkv {
+        n += 3;
+    }
+    if sw.attn {
+        n += 2; // QK^T and PV
+    }
+    if sw.attn_output {
+        n += 1;
+    }
+    if sw.fc1 {
+        n += 1;
+    }
+    if sw.fc2 {
+        n += 1;
+    }
+    n
+}
+
+/// Count `= s32[...] dot(` instructions in HLO text.
+pub fn count_int8_dots(hlo_text: &str) -> usize {
+    hlo_text
+        .lines()
+        .filter(|l| {
+            if let Some(eq) = l.find("= s32[") {
+                l[eq..].contains(" dot(")
+            } else {
+                false
+            }
+        })
+        .count()
+}
+
+/// Verify a mode's artifact matches its Table-1 row.  Returns
+/// (expected, found).
+pub fn verify_mode_artifact(man: &Manifest, mode: &str, bucket: usize) -> Result<(usize, usize)> {
+    let spec = man.mode(mode)?;
+    let rel = spec
+        .artifacts
+        .get(&bucket)
+        .with_context(|| format!("mode {mode} missing bucket {bucket}"))?;
+    let text = std::fs::read_to_string(man.path(rel))?;
+    let expected = expected_int8_dots_per_layer(&spec.switches) * man.model.layers;
+    Ok((expected, count_int8_dots(&text)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sw(tag: &str) -> Switches {
+        let b: Vec<bool> = tag.chars().map(|c| c == '1').collect();
+        Switches {
+            embedding: b[0],
+            qkv: b[1],
+            attn: b[2],
+            attn_output: b[3],
+            fc1: b[4],
+            fc2: b[5],
+        }
+    }
+
+    #[test]
+    fn dot_counts_per_mode() {
+        assert_eq!(expected_int8_dots_per_layer(&sw("000000")), 0);
+        assert_eq!(expected_int8_dots_per_layer(&sw("110010")), 4); // M1
+        assert_eq!(expected_int8_dots_per_layer(&sw("111110")), 7); // M2
+        assert_eq!(expected_int8_dots_per_layer(&sw("111111")), 8); // M3
+    }
+
+    #[test]
+    fn hlo_counter_matches_pattern() {
+        let hlo = "\
+  %dot.1 = s32[16,128]{1,0} dot(%convert.2, %convert.3), lhs_contracting_dims={1}
+  %dot.2 = f32[16,128]{1,0} dot(%p1, %p2), lhs_contracting_dims={1}
+  %add.9 = s32[16,128]{1,0} add(%dot.1, %dot.1)
+  dot.5 = s32[4,4]{1,0} dot(convert.9, convert.10)
+";
+        assert_eq!(count_int8_dots(hlo), 2);
+    }
+
+    #[test]
+    fn m3_attention_flow_matches_paper() {
+        // paper §2.2.2: TWQ for X_in/X_out, SQ for q/k/v/P, FWQ X_attn/X_o,
+        // A unquantized.
+        let rows = attention_flow(&sw("111111"));
+        let find = |t: &str| rows.iter().find(|r| r.tensor == t).unwrap();
+        assert_eq!(find("X_in").scheme, "TWQ");
+        assert_eq!(find("X_q/k/v").scheme, "SQ");
+        assert_eq!(find("A").dtype, "fp");
+        assert!(find("P").scheme.contains("asym"));
+        assert_eq!(find("X_attn").scheme, "FWQ");
+        assert_eq!(find("X_o").scheme, "FWQ");
+        assert_eq!(find("X_out").scheme, "TWQ");
+    }
+
+    #[test]
+    fn m3_mlp_flow_matches_paper() {
+        // paper §2.2.3: X_1 unquantized, A and X_2 FWQ.
+        let rows = mlp_flow(&sw("111111"));
+        let find = |t: &str| rows.iter().find(|r| r.tensor == t).unwrap();
+        assert_eq!(find("X_1").dtype, "fp");
+        assert_eq!(find("A").scheme, "FWQ");
+        assert_eq!(find("X_2").scheme, "FWQ");
+    }
+}

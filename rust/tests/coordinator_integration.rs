@@ -1,0 +1,110 @@
+//! End-to-end coordinator test: requests through admission -> batcher ->
+//! engine -> completion, with correct per-request row mapping.
+//! Gated on `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use zqhero::coordinator::{Coordinator, ServerConfig};
+use zqhero::data::Split;
+use zqhero::model::manifest::Manifest;
+use zqhero::model::Container;
+use zqhero::runtime::Runtime;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("skipping coordinator tests: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn serve_fp_requests_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Coordinator::start(
+        dir.clone(),
+        &pairs,
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let man = Manifest::load(&dir).unwrap();
+    let task = man.task("cola").unwrap();
+    let split = Split::load(&man, task, "dev").unwrap();
+    let n = 40.min(split.len());
+
+    // submit everything, then collect
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let (ids, tys) = split.row(i);
+        let rx = coord
+            .submit("cola", "fp", ids.to_vec(), tys.to_vec())
+            .unwrap();
+        rxs.push(rx);
+    }
+    let mut responses = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.logits.len(), coord.num_labels());
+        assert!(resp.logits.iter().all(|x| x.is_finite()));
+        assert!(resp.timing.batch_real >= 1 && resp.timing.batch_real <= 8);
+        assert!(resp.timing.bucket >= resp.timing.batch_real);
+        responses.push(resp);
+    }
+
+    // row mapping: responses must equal direct runtime inference per example
+    let mut rt = Runtime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let fp = Container::read_file(&rt.manifest.path(&task.checkpoint))
+        .unwrap()
+        .reordered(&rt.manifest.mode("fp").unwrap().params)
+        .unwrap();
+    rt.upload_checkpoint("cola", "fp", &fp).unwrap();
+    for (i, resp) in responses.iter().enumerate().take(10) {
+        let (ids, tys) = split.row(i);
+        let mask = Split::mask_row(ids);
+        let direct = rt.infer("cola", "fp", 1, ids, tys, &mask).unwrap();
+        let dv = direct.as_f32().unwrap();
+        for (a, b) in resp.logits.iter().zip(dv) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "request {i}: coordinator {a} vs direct {b}"
+            );
+        }
+    }
+
+    // metrics recorded
+    let snap = coord.recorder.snapshot();
+    assert_eq!(snap["fp"].requests, n as u64);
+    assert_eq!(snap["fp"].errors, 0);
+    assert!(snap["fp"].batches >= (n / 8) as u64);
+}
+
+#[test]
+fn rejects_malformed_and_applies_backpressure_shape() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Coordinator::start(
+        dir,
+        &pairs,
+        ServerConfig { queue_cap: 4, ..Default::default() },
+    )
+    .unwrap();
+    // wrong seq length is rejected before admission
+    assert!(coord.submit("cola", "fp", vec![1, 2, 3], vec![0, 0, 0]).is_err());
+}
+
+#[test]
+fn unknown_checkpoint_fails_at_startup() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "m9".to_string())];
+    assert!(Coordinator::start(dir, &pairs, ServerConfig::default()).is_err());
+}

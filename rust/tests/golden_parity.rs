@@ -1,0 +1,73 @@
+//! Cross-language parity: the rust quantization engine must reproduce the
+//! python-quantized golden checkpoints bit-exactly (same folding, same
+//! rounding, same scale derivation).  Gated on `make artifacts`.
+
+use std::path::Path;
+
+use zqhero::calib::load_history;
+use zqhero::model::manifest::Manifest;
+use zqhero::model::{Container, DType};
+use zqhero::quant::{quantize_checkpoint, AggStats};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("golden/fp32.bin").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("skipping golden parity tests: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn quantize_matches_python_bit_exact() {
+    let Some(dir) = artifacts() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let fp = Container::read_file(&dir.join("golden/fp32.bin")).unwrap();
+    let hist = load_history(&dir.join("golden/calib.json")).unwrap();
+    let stats = AggStats::from_history(&hist, &man.model, 100.0).unwrap();
+
+    for mode in ["m1", "m2", "m3"] {
+        let want = Container::read_file(&dir.join(format!("golden/hero-{mode}.bin"))).unwrap();
+        let sw = man.mode(mode).unwrap().switches;
+        let got = quantize_checkpoint(&fp, &stats, &man.model, &sw).unwrap();
+
+        assert_eq!(got.len(), want.len(), "{mode}: tensor count");
+        let mut max_rel = 0f64;
+        for ((gn, gt), (wn, wt)) in got.entries.iter().zip(&want.entries) {
+            assert_eq!(gn, wn, "{mode}: name order");
+            assert_eq!(gt.shape, wt.shape, "{mode}/{gn}: shape");
+            assert_eq!(gt.dtype(), wt.dtype(), "{mode}/{gn}: dtype");
+            match gt.dtype() {
+                DType::I8 => {
+                    let (g, w) = (gt.as_i8().unwrap(), wt.as_i8().unwrap());
+                    let diff = g.iter().zip(w).filter(|(a, b)| a != b).count();
+                    assert_eq!(diff, 0, "{mode}/{gn}: {diff} int8 mismatches");
+                }
+                DType::F32 => {
+                    let (g, w) = (gt.as_f32().unwrap(), wt.as_f32().unwrap());
+                    for (i, (a, b)) in g.iter().zip(w).enumerate() {
+                        assert!(
+                            a.to_bits() == b.to_bits(),
+                            "{mode}/{gn}[{i}]: {a:e} vs {b:e}"
+                        );
+                        let rel = ((a - b).abs() / b.abs().max(1e-9)) as f64;
+                        max_rel = max_rel.max(rel);
+                    }
+                }
+                DType::I32 => unreachable!("no i32 params"),
+            }
+        }
+        eprintln!("{mode}: bit-exact ({} tensors)", got.len());
+    }
+}
+
+#[test]
+fn golden_checkpoints_match_manifest_signatures() {
+    let Some(dir) = artifacts() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    for mode in ["m1", "m2", "m3"] {
+        let c = Container::read_file(&dir.join(format!("golden/hero-{mode}.bin"))).unwrap();
+        zqhero::quant::validate_against_mode(&c, man.mode(mode).unwrap()).unwrap();
+    }
+}

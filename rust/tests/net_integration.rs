@@ -1,0 +1,94 @@
+//! TCP front-end integration: JSON requests over a real socket through the
+//! full serving stack.  Gated on `make artifacts`.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use zqhero::coordinator::{Coordinator, NetClient, NetServer, ServerConfig};
+use zqhero::data::Split;
+use zqhero::json::Value;
+use zqhero::model::manifest::Manifest;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("skipping net integration tests: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn tcp_round_trip_and_errors() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Arc::new(
+        Coordinator::start(
+            dir.clone(),
+            &pairs,
+            ServerConfig { max_batch: 4, max_wait: Duration::from_millis(2), ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1", 0).unwrap();
+    let mut client = NetClient::connect(&server.addr).unwrap();
+
+    let man = Manifest::load(&dir).unwrap();
+    let task = man.task("cola").unwrap();
+    let split = Split::load(&man, task, "dev").unwrap();
+
+    // several requests pipeline through the batcher
+    for i in 0..6 {
+        let (ids, _) = split.row(i);
+        let short: Vec<i32> = ids.iter().copied().take_while(|t| *t != 0).collect();
+        let resp = client.request("cola", "fp", &short).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+        let logits = resp.get("logits").unwrap().as_array().unwrap();
+        assert_eq!(logits.len(), man.model.num_labels);
+        assert!(logits.iter().all(|v| v.as_f64().unwrap().is_finite()));
+        assert!(resp.get("bucket").unwrap().as_usize().unwrap() >= 1);
+    }
+
+    // unknown task -> structured error, connection stays usable
+    let resp = client.request("nope", "fp", &[1, 2, 3]).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("checkpoint"));
+
+    // malformed json line -> error response, not a dropped connection
+    {
+        use std::io::{BufRead, Write};
+        let mut raw = std::net::TcpStream::connect(server.addr).unwrap();
+        raw.write_all(b"this is not json\n").unwrap();
+        raw.flush().unwrap();
+        let mut line = String::new();
+        std::io::BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let v = zqhero::json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("bad json"));
+    }
+
+    // still healthy after the bad client
+    let (ids, _) = split.row(0);
+    let resp = client.request("cola", "fp", &ids[..10]).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert!(server.served.load(std::sync::atomic::Ordering::SeqCst) >= 8);
+}
+
+#[test]
+fn oversized_request_rejected() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord =
+        Arc::new(Coordinator::start(dir, &pairs, ServerConfig::default()).unwrap());
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1", 0).unwrap();
+    let mut client = NetClient::connect(&server.addr).unwrap();
+    let huge = vec![1i32; coord.seq() + 1];
+    let resp = client.request("cola", "fp", &huge).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    match resp.get("error") {
+        Some(Value::String(e)) => assert!(e.contains("too many tokens"), "{e}"),
+        other => panic!("expected error, got {other:?}"),
+    }
+}

@@ -1,0 +1,192 @@
+//! Property tests over the pure substrates (no artifacts needed):
+//! quantization invariants, folding algebra, JSON round-trips, metric
+//! bounds, histogram consistency.
+
+use zqhero::json::{self, Value};
+use zqhero::metrics;
+use zqhero::prop::{forall, Rng};
+use zqhero::quant::fold::{fold_fwq_in_fwq_out, fold_sq_output};
+use zqhero::quant::schemes::{percentile, quantize_weight_colwise, sym_quantize_one};
+
+#[test]
+fn prop_weight_quant_roundtrip_bound() {
+    forall("weight-quant-roundtrip", 100, |r: &mut Rng| {
+        let k = 1 + r.below(24);
+        let m = 1 + r.below(24);
+        let scale = r.log_uniform(1e-2, 10.0) as f32;
+        let w = r.vec_f32(k * m, -scale, scale);
+        let (q, s) = quantize_weight_colwise(&w, k, m);
+        for row in 0..k {
+            for col in 0..m {
+                let recon = q[row * m + col] as f32 * s[col];
+                let err = (recon - w[row * m + col]).abs();
+                assert!(
+                    err <= s[col] / 2.0 + 1e-6,
+                    "err {err} > step/2 {} at ({row},{col})",
+                    s[col] / 2.0
+                );
+            }
+        }
+        // int8 range respected
+        assert!(q.iter().all(|v| (-127..=127).contains(&(*v as i32))));
+    });
+}
+
+#[test]
+fn prop_sym_quantize_monotone() {
+    forall("sym-quant-monotone", 100, |r: &mut Rng| {
+        let scale = r.log_uniform(1e-3, 1.0);
+        let a = r.uniform(-100.0, 100.0) as f32;
+        let b = r.uniform(-100.0, 100.0) as f32;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(sym_quantize_one(lo, scale) <= sym_quantize_one(hi, scale));
+    });
+}
+
+#[test]
+fn prop_fold_algebra_exact() {
+    // fold then unfold reproduces the GeMM semantics in exact f32 algebra
+    forall("fold-algebra", 100, |r: &mut Rng| {
+        let k = 1 + r.below(12);
+        let m = 1 + r.below(12);
+        let w = r.vec_f32(k * m, -2.0, 2.0);
+        let b = r.vec_f32(m, -1.0, 1.0);
+        let s_in: Vec<f32> = (0..k).map(|_| r.log_uniform(1e-3, 1e-1) as f32).collect();
+        let s_out: Vec<f32> = (0..m).map(|_| r.log_uniform(1e-3, 1e-1) as f32).collect();
+        let (wt, bt) = fold_fwq_in_fwq_out(&w, &b, &s_in, &s_out, k, m);
+        for row in 0..k {
+            for col in 0..m {
+                let expect = (s_in[row] * w[row * m + col]) / s_out[col];
+                assert_eq!(wt[row * m + col].to_bits(), expect.to_bits());
+            }
+        }
+        for col in 0..m {
+            assert_eq!(bt[col].to_bits(), (b[col] / s_out[col]).to_bits());
+        }
+        // scalar fold is the 1-D special case
+        let (ws, bs) = fold_sq_output(&w, &b, s_out[0] as f64);
+        assert_eq!(ws[0].to_bits(), (w[0] / s_out[0]).to_bits());
+        assert_eq!(bs[0].to_bits(), (b[0] / s_out[0]).to_bits());
+    });
+}
+
+#[test]
+fn prop_percentile_bounds_and_max() {
+    forall("percentile", 100, |r: &mut Rng| {
+        let n = 1 + r.below(50);
+        let v: Vec<f64> = (0..n).map(|_| r.uniform(-10.0, 10.0)).collect();
+        let pct = r.uniform(0.0, 100.0);
+        let p = percentile(&v, pct);
+        let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(p >= lo - 1e-12 && p <= hi + 1e-12);
+        assert_eq!(percentile(&v, 100.0), hi);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_value(r: &mut Rng, depth: usize) -> Value {
+        match if depth > 3 { r.below(4) } else { r.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(r.bool()),
+            2 => Value::Number((r.uniform(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = r.below(12);
+                Value::String(
+                    (0..n)
+                        .map(|_| {
+                            let opts = ['a', 'Z', '0', ' ', '"', '\\', '\n', 'é', '→'];
+                            *r.choice(&opts)
+                        })
+                        .collect(),
+                )
+            }
+            4 => Value::Array((0..r.below(5)).map(|_| gen_value(r, depth + 1)).collect()),
+            _ => Value::Object(
+                (0..r.below(5))
+                    .map(|i| (format!("k{i}"), gen_value(r, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json-roundtrip", 200, |r: &mut Rng| {
+        let v = gen_value(r, 0);
+        let s = json::to_string(&v);
+        let back = json::parse(&s).unwrap_or_else(|e| panic!("parse {s:?}: {e}"));
+        assert_eq!(back, v, "roundtrip failed for {s}");
+        // pretty form parses to the same value
+        let back2 = json::parse(&json::to_string_pretty(&v)).unwrap();
+        assert_eq!(back2, v);
+    });
+}
+
+#[test]
+fn prop_metric_ranges() {
+    forall("metric-ranges", 100, |r: &mut Rng| {
+        let n = 2 + r.below(100);
+        let preds = r.vec_i32(n, 0, 1);
+        let labels = r.vec_i32(n, 0, 1);
+        let acc = metrics::accuracy(&preds, &labels);
+        assert!((0.0..=1.0).contains(&acc));
+        let f1 = metrics::f1_binary(&preds, &labels);
+        assert!((0.0..=1.0).contains(&f1));
+        let mcc = metrics::matthews_corrcoef(&preds, &labels);
+        assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&mcc));
+        let x: Vec<f64> = (0..n).map(|_| r.uniform(-5.0, 5.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| r.uniform(-5.0, 5.0)).collect();
+        for v in [metrics::pearson(&x, &y), metrics::spearman(&x, &y)] {
+            assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&v));
+        }
+        // self-correlation is exactly 1 when variance > 0
+        if x.iter().any(|a| (a - x[0]).abs() > 1e-9) {
+            assert!((metrics::pearson(&x, &x) - 1.0).abs() < 1e-12);
+            assert!((metrics::spearman(&x, &x) - 1.0).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_container_roundtrip() {
+    use zqhero::model::{Container, Tensor};
+    forall("container-roundtrip", 60, |r: &mut Rng| {
+        let mut c = Container::new();
+        let n_tensors = 1 + r.below(6);
+        for i in 0..n_tensors {
+            let ndim = 1 + r.below(3);
+            let shape: Vec<usize> = (0..ndim).map(|_| 1 + r.below(8)).collect();
+            let numel: usize = shape.iter().product();
+            let t = match r.below(3) {
+                0 => Tensor::f32(shape, r.vec_f32(numel, -10.0, 10.0)),
+                1 => Tensor::i8(shape, r.vec_i8(numel)),
+                _ => Tensor::i32(shape, r.vec_i32(numel, -1000, 1000)),
+            };
+            c.push(&format!("tensor.{i}"), t);
+        }
+        let bytes = c.write_bytes();
+        let back = Container::read_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), c.len());
+        for ((an, at), (bn, bt)) in c.entries.iter().zip(&back.entries) {
+            assert_eq!(an, bn);
+            assert_eq!(at, bt);
+        }
+    });
+}
+
+#[test]
+fn prop_histogram_percentile_monotone() {
+    use zqhero::coordinator::Histogram;
+    forall("histogram", 60, |r: &mut Rng| {
+        let mut h = Histogram::new();
+        let n = 1 + r.below(500);
+        for _ in 0..n {
+            h.record(r.range_i64(1, 10_000_000) as u64);
+        }
+        assert_eq!(h.count(), n as u64);
+        let p50 = h.percentile_us(0.5);
+        let p95 = h.percentile_us(0.95);
+        let p99 = h.percentile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(h.min_us() <= h.max_us());
+    });
+}

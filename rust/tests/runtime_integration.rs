@@ -1,0 +1,162 @@
+//! Runtime integration over real artifacts: HLO load/compile, device
+//! checkpoints, batch-bucket consistency, calibration execution.
+//! Gated on `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use zqhero::data::{batches, Split};
+use zqhero::model::manifest::Manifest;
+use zqhero::model::Container;
+use zqhero::runtime::Runtime;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("skipping runtime integration tests: run `make artifacts` first");
+        None
+    }
+}
+
+fn runtime(dir: &Path) -> Runtime {
+    Runtime::new(Manifest::load(dir).unwrap()).unwrap()
+}
+
+#[test]
+fn fp_inference_runs_and_buckets_agree() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = runtime(&dir);
+    let task = rt.manifest.task("cola").unwrap().clone();
+    let fp = Container::read_file(&rt.manifest.path(&task.checkpoint))
+        .unwrap()
+        .reordered(&rt.manifest.mode("fp").unwrap().params)
+        .unwrap();
+    rt.upload_checkpoint(&task.name, "fp", &fp).unwrap();
+
+    let split = Split::load(&rt.manifest, &task, "dev").unwrap();
+    let nl = rt.manifest.model.num_labels;
+    let seq = rt.manifest.seq;
+
+    // one example through bucket 1
+    let (ids, tys) = split.row(0);
+    let mask = Split::mask_row(ids);
+    let l1 = rt
+        .infer(&task.name, "fp", 1, ids, tys, &mask)
+        .unwrap();
+    let l1 = l1.as_f32().unwrap().to_vec();
+    assert_eq!(l1.len(), nl);
+    assert!(l1.iter().all(|x| x.is_finite()));
+
+    // same example as row 0 of a padded bucket-4 batch
+    let mut ids4 = ids.to_vec();
+    let mut tys4 = tys.to_vec();
+    ids4.resize(4 * seq, 0);
+    tys4.resize(4 * seq, 0);
+    let mask4 = Split::mask_row(&ids4);
+    let l4 = rt.infer(&task.name, "fp", 4, &ids4, &tys4, &mask4).unwrap();
+    let l4 = l4.as_f32().unwrap();
+    for i in 0..nl {
+        assert!(
+            (l1[i] - l4[i]).abs() < 1e-4,
+            "bucket 1 vs 4 logit {i}: {} vs {}",
+            l1[i],
+            l4[i]
+        );
+    }
+}
+
+#[test]
+fn quantized_modes_run_and_track_fp() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = runtime(&dir);
+    let task = rt.manifest.task("sst2").unwrap().clone();
+
+    // derive quantized checkpoints through the real pipeline (small calib)
+    let hist = zqhero::evalharness::ensure_calibration(&mut rt, &task, 4, false).unwrap();
+    let fp = Container::read_file(&rt.manifest.path(&task.checkpoint))
+        .unwrap()
+        .reordered(&rt.manifest.mode("fp").unwrap().params)
+        .unwrap();
+    rt.upload_checkpoint(&task.name, "fp", &fp).unwrap();
+
+    let split = Split::load(&rt.manifest, &task, "dev").unwrap();
+    let nl = rt.manifest.model.num_labels;
+    let b = &batches(&split, 16)[0];
+    let fp_logits = rt
+        .infer(&task.name, "fp", 16, &b.ids, &b.type_ids, &b.mask)
+        .unwrap();
+    let fp_v = fp_logits.as_f32().unwrap().to_vec();
+
+    for mode in ["m1", "m2", "m3"] {
+        let ckpt =
+            zqhero::evalharness::quantize_task(&mut rt, &task, mode, &hist, 100.0, Some("test"))
+                .unwrap();
+        rt.upload_checkpoint(&task.name, mode, &ckpt).unwrap();
+        let lq = rt
+            .infer(&task.name, mode, 16, &b.ids, &b.type_ids, &b.mask)
+            .unwrap();
+        let qv = lq.as_f32().unwrap();
+        assert!(qv.iter().all(|x| x.is_finite()), "{mode}: non-finite logits");
+        // predictions should mostly agree with fp on real data
+        let mut agree = 0;
+        for row in 0..b.real {
+            let arg = |v: &[f32]| {
+                let s = &v[row * nl..row * nl + 2];
+                if s[0] >= s[1] {
+                    0
+                } else {
+                    1
+                }
+            };
+            if arg(&fp_v) == arg(qv) {
+                agree += 1;
+            }
+        }
+        assert!(
+            agree * 10 >= b.real * 8,
+            "{mode}: only {agree}/{} predictions agree with fp",
+            b.real
+        );
+    }
+}
+
+#[test]
+fn calibration_artifact_returns_manifest_stats() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = runtime(&dir);
+    let task = rt.manifest.task("mrpc").unwrap().clone();
+    let hist = zqhero::evalharness::ensure_calibration(&mut rt, &task, 2, true).unwrap();
+    let stats: Vec<(String, Vec<usize>)> = rt.manifest.calib.stats.clone();
+    assert_eq!(hist.len(), stats.len());
+    for ((name, per_batch), (mname, shape)) in hist.iter().zip(&stats) {
+        assert_eq!(name, mname);
+        assert_eq!(per_batch.len(), 2);
+        let numel: usize = shape.iter().product();
+        assert_eq!(per_batch[0].len(), numel, "{name}");
+        assert!(per_batch[0].iter().all(|v| v.is_finite() && *v >= 0.0), "{name}");
+    }
+    // p_max is a probability
+    let p = hist.iter().find(|(n, _)| n == "p_max").unwrap();
+    assert!(p.1.iter().flatten().all(|v| *v <= 1.0 + 1e-6));
+}
+
+#[test]
+fn rust_fp_eval_matches_python_training_eval() {
+    // The FP dev metric computed through the rust runtime + artifacts must
+    // match the python-side value recorded at training time (same split,
+    // same weights, same math in f32) within a small tolerance.
+    let Some(dir) = artifacts() else { return };
+    let src = std::fs::read_to_string(dir.join("checkpoints/sst2/train_metrics.json")).unwrap();
+    let py = zqhero::json::parse(&src).unwrap();
+    let py_acc = py.get("acc").unwrap().as_f64().unwrap();
+
+    let mut rt = runtime(&dir);
+    let task = rt.manifest.task("sst2").unwrap().clone();
+    let vals = zqhero::evalharness::eval_task(&mut rt, &task, "fp", 1, 100.0).unwrap();
+    let rust_acc = vals["acc"];
+    assert!(
+        (rust_acc - py_acc).abs() < 0.02,
+        "rust {rust_acc} vs python {py_acc}"
+    );
+}
