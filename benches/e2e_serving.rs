@@ -1,6 +1,9 @@
 //! End-to-end serving benchmark (the paper's missing "system performance
-//! measurement"): closed-loop load through the coordinator, per mode, with
-//! and without dynamic batching — latency percentiles + throughput.
+//! measurement"): closed-loop load through the coordinator, per mode,
+//! A/B-ing the pipelined engine (interned routes + pooled staging +
+//! overlapped upload/execute/readback) against the pre-pipeline blocking
+//! engine loop — latency percentiles + throughput, written to
+//! `BENCH_e2e_serving.json` so the perf trajectory is tracked PR over PR.
 //!
 //! Env: ZQH_REQUESTS (default 128), ZQH_TASK (default sst2).
 
@@ -11,8 +14,17 @@ use zqhero::bench::Table;
 use zqhero::coordinator::{Coordinator, ServerConfig};
 use zqhero::data::Split;
 use zqhero::evalharness as eh;
+use zqhero::json::{self, Value};
 use zqhero::model::manifest::Manifest;
 use zqhero::runtime::Runtime;
+
+struct LoadResult {
+    thr_rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+}
 
 fn run_load(
     coord: &Coordinator,
@@ -21,7 +33,7 @@ fn run_load(
     rows: &[(Vec<i32>, Vec<i32>)],
     requests: usize,
     concurrency: usize,
-) -> (f64, Vec<f64>) {
+) -> LoadResult {
     let t0 = std::time::Instant::now();
     let mut inflight = VecDeque::new();
     let (mut submitted, mut done) = (0usize, 0usize);
@@ -43,8 +55,21 @@ fn run_load(
         lat.push(resp.timing.total_us as f64);
         done += 1;
     }
-    (t0.elapsed().as_secs_f64(), lat)
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize] / 1e3;
+    let snap = coord.recorder.snapshot();
+    LoadResult {
+        thr_rps: requests as f64 / wall,
+        p50_ms: pick(0.50),
+        p95_ms: pick(0.95),
+        p99_ms: pick(0.99),
+        mean_batch: snap[mode].mean_batch_size(),
+    }
 }
+
+/// Closed-loop in-flight window, also recorded in the JSON report.
+const CONCURRENCY: usize = 48;
 
 fn main() {
     let dir = std::path::PathBuf::from("artifacts");
@@ -81,38 +106,85 @@ fn main() {
 
     println!("\ne2e serving on {tname}: {requests} requests per config\n");
     let mut t = Table::new(&[
-        "mode", "batching", "thr req/s", "p50 ms", "p95 ms", "p99 ms", "mean batch",
+        "mode", "engine", "thr req/s", "p50 ms", "p95 ms", "p99 ms", "mean batch",
     ]);
-    for (label, max_batch, conc) in [("dynamic b<=16", 16usize, 48usize), ("none (b=1)", 1, 4)] {
+    // baseline first: the blocking loop is the pre-pipeline engine shape
+    let mut results: Vec<(String, &str, LoadResult)> = Vec::new();
+    for (engine_label, pipeline) in [("blocking", false), ("pipelined", true)] {
         let pairs: Vec<(String, String)> =
             modes.iter().map(|m| (tname.clone(), m.to_string())).collect();
         let coord = Coordinator::start(
             dir.clone(),
             &pairs,
             ServerConfig {
-                max_batch,
+                max_batch: 16,
                 max_wait: Duration::from_millis(4),
                 queue_cap: 512,
                 completion_workers: 4,
+                pipeline,
+                ..ServerConfig::default()
             },
         )
         .expect("coordinator");
         for m in modes {
-            let (wall, mut lat) = run_load(&coord, &tname, m, &rows, requests, conc);
-            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let pick = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize] / 1e3;
-            let snap = coord.recorder.snapshot();
+            let r = run_load(&coord, &tname, m, &rows, requests, CONCURRENCY);
             t.row(vec![
                 m.to_string(),
-                label.into(),
-                format!("{:.1}", requests as f64 / wall),
-                format!("{:.1}", pick(0.50)),
-                format!("{:.1}", pick(0.95)),
-                format!("{:.1}", pick(0.99)),
-                format!("{:.2}", snap[m].mean_batch_size()),
+                engine_label.into(),
+                format!("{:.1}", r.thr_rps),
+                format!("{:.1}", r.p50_ms),
+                format!("{:.1}", r.p95_ms),
+                format!("{:.1}", r.p99_ms),
+                format!("{:.2}", r.mean_batch),
             ]);
+            results.push((m.to_string(), engine_label, r));
         }
     }
     t.print();
-    println!("\n(CPU PJRT testbed; A100 projections in hw_perf_model)");
+
+    // ---- machine-readable trajectory: BENCH_e2e_serving.json
+    let mut mode_objs: Vec<(String, Value)> = Vec::new();
+    let (mut base_sum, mut pipe_sum, mut n_modes) = (0.0, 0.0, 0);
+    for m in modes {
+        let base = results.iter().find(|(mm, e, _)| mm.as_str() == m && *e == "blocking");
+        let pipe = results.iter().find(|(mm, e, _)| mm.as_str() == m && *e == "pipelined");
+        if let (Some((_, _, b)), Some((_, _, p))) = (base, pipe) {
+            base_sum += b.thr_rps;
+            pipe_sum += p.thr_rps;
+            n_modes += 1;
+            mode_objs.push((
+                m.to_string(),
+                json::obj(vec![
+                    ("baseline_thr_rps", json::num(b.thr_rps)),
+                    ("pipelined_thr_rps", json::num(p.thr_rps)),
+                    ("speedup", json::num(p.thr_rps / b.thr_rps.max(1e-9))),
+                    ("baseline_p50_ms", json::num(b.p50_ms)),
+                    ("pipelined_p50_ms", json::num(p.p50_ms)),
+                    ("baseline_p99_ms", json::num(b.p99_ms)),
+                    ("pipelined_p99_ms", json::num(p.p99_ms)),
+                    ("mean_batch", json::num(p.mean_batch)),
+                ]),
+            ));
+        }
+    }
+    let overall_speedup = if n_modes > 0 && base_sum > 0.0 { pipe_sum / base_sum } else { 0.0 };
+    let report = json::obj(vec![
+        ("bench", json::s("e2e_serving")),
+        ("task", json::s(&tname)),
+        ("requests_per_config", json::num(requests as f64)),
+        ("concurrency", json::num(CONCURRENCY as f64)),
+        ("baseline_thr_rps_total", json::num(base_sum)),
+        ("pipelined_thr_rps_total", json::num(pipe_sum)),
+        ("overall_speedup", json::num(overall_speedup)),
+        (
+            "modes",
+            Value::Object(mode_objs.into_iter().collect()),
+        ),
+    ]);
+    let out = json::to_string_pretty(&report);
+    match std::fs::write("BENCH_e2e_serving.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_e2e_serving.json (overall speedup {overall_speedup:.2}x)"),
+        Err(e) => eprintln!("could not write BENCH_e2e_serving.json: {e}"),
+    }
+    println!("(CPU PJRT testbed; A100 projections in hw_perf_model)");
 }

@@ -17,8 +17,9 @@ fn main() {
     let mut t = Table::new(&["substrate", "op", "p50", "p95", "note"]);
     let mut rng = Rng::new(7);
 
-    // batcher: push+flush throughput
+    // batcher: push+flush throughput (interned route keys)
     {
+        use zqhero::model::manifest::{ModeId, TaskId};
         let stats = bench(3, 200, || {
             let mut b = Batcher::new(16, Duration::from_millis(4));
             let t0 = Instant::now();
@@ -28,8 +29,10 @@ fn main() {
                 std::mem::forget(rx);
                 let req = zqhero::coordinator::Request {
                     id: i,
-                    task: ["a", "b", "c"][(i % 3) as usize].into(),
-                    mode: ["fp", "m3"][(i % 2) as usize].into(),
+                    key: zqhero::coordinator::GroupKey {
+                        task: TaskId((i % 3) as u16),
+                        mode: ModeId((i % 2) as u16),
+                    },
                     ids: Vec::new(),
                     type_ids: Vec::new(),
                     enqueued: t0,

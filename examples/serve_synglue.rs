@@ -54,6 +54,7 @@ fn main() -> Result<()> {
         max_wait: Duration::from_millis(4),
         queue_cap: 512,
         completion_workers: 4,
+        ..ServerConfig::default()
     };
     eprintln!("[serve] starting coordinator: {} (task,mode) pairs, max_batch={}, max_wait={:?}",
               pairs.len(), config.max_batch, config.max_wait);

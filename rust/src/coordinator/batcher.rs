@@ -1,13 +1,18 @@
-//! Dynamic batcher: groups requests by (task, mode), flushes a group when
-//! it reaches `max_batch` or its oldest request has waited `max_wait`.
+//! Dynamic batcher: groups requests by interned (task, mode), flushes a
+//! group when it reaches `max_batch` or its oldest request has waited
+//! `max_wait`.
 //!
 //! The core is a pure state machine (`push`/`tick` return ready batches),
 //! which makes the invariants property-testable without threads:
 //!   * no batch exceeds `max_batch`;
 //!   * a request is emitted exactly once, in FIFO order within its group;
 //!   * no request waits longer than `max_wait` once `tick` is called.
+//!
+//! Groups live in a flat `Vec` scanned linearly: the group count is the
+//! handful of admitted (task, mode) pairs, for which two-integer key
+//! compares beat hashing — and `push` allocates nothing once the group's
+//! deque has warmed up.
 
-use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -21,19 +26,26 @@ pub struct Batch {
 pub struct Batcher {
     pub max_batch: usize,
     pub max_wait: Duration,
-    groups: HashMap<GroupKey, VecDeque<Request>>,
+    groups: Vec<(GroupKey, VecDeque<Request>)>,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch > 0);
-        Batcher { max_batch, max_wait, groups: HashMap::new() }
+        Batcher { max_batch, max_wait, groups: Vec::new() }
     }
 
     /// Add a request; returns any batch made ready by this arrival.
     pub fn push(&mut self, req: Request) -> Option<Batch> {
-        let key = GroupKey { task: req.task.clone(), mode: req.mode.clone() };
-        let q = self.groups.entry(key.clone()).or_default();
+        let key = req.key;
+        let idx = match self.groups.iter().position(|(k, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                self.groups.push((key, VecDeque::new()));
+                self.groups.len() - 1
+            }
+        };
+        let q = &mut self.groups[idx].1;
         q.push_back(req);
         if q.len() >= self.max_batch {
             let requests = q.drain(..self.max_batch).collect();
@@ -51,13 +63,12 @@ impl Batcher {
                 if now.duration_since(front.enqueued) >= self.max_wait {
                     let take = q.len().min(self.max_batch);
                     let requests: Vec<Request> = q.drain(..take).collect();
-                    out.push(Batch { key: key.clone(), requests });
+                    out.push(Batch { key: *key, requests });
                 } else {
                     break;
                 }
             }
         }
-        self.groups.retain(|_, q| !q.is_empty());
         out
     }
 
@@ -67,23 +78,22 @@ impl Batcher {
         for (key, q) in self.groups.iter_mut() {
             while !q.is_empty() {
                 let take = q.len().min(self.max_batch);
-                out.push(Batch { key: key.clone(), requests: q.drain(..take).collect() });
+                out.push(Batch { key: *key, requests: q.drain(..take).collect() });
             }
         }
-        self.groups.clear();
         out
     }
 
     pub fn pending(&self) -> usize {
-        self.groups.values().map(VecDeque::len).sum()
+        self.groups.iter().map(|(_, q)| q.len()).sum()
     }
 
     /// Earliest deadline across groups (for the batcher thread's
     /// `recv_timeout`); None when empty.
     pub fn next_deadline(&self) -> Option<Instant> {
         self.groups
-            .values()
-            .filter_map(|q| q.front().map(|r| r.enqueued + self.max_wait))
+            .iter()
+            .filter_map(|(_, q)| q.front().map(|r| r.enqueued + self.max_wait))
             .min()
     }
 }
@@ -91,17 +101,21 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::manifest::{ModeId, TaskId};
     use crate::prop::{forall, Rng};
     use std::sync::mpsc::channel;
 
-    fn req(id: u64, task: &str, mode: &str, at: Instant) -> Request {
+    fn key(task: u16, mode: u16) -> GroupKey {
+        GroupKey { task: TaskId(task), mode: ModeId(mode) }
+    }
+
+    fn req(id: u64, task: u16, mode: u16, at: Instant) -> Request {
         let (tx, _rx) = channel();
         // leak the receiver side: batcher tests never reply
         std::mem::forget(_rx);
         Request {
             id,
-            task: task.into(),
-            mode: mode.into(),
+            key: key(task, mode),
             ids: vec![],
             type_ids: vec![],
             enqueued: at,
@@ -113,9 +127,9 @@ mod tests {
     fn flushes_on_max_batch() {
         let mut b = Batcher::new(3, Duration::from_secs(10));
         let t = Instant::now();
-        assert!(b.push(req(0, "a", "fp", t)).is_none());
-        assert!(b.push(req(1, "a", "fp", t)).is_none());
-        let batch = b.push(req(2, "a", "fp", t)).expect("full batch");
+        assert!(b.push(req(0, 0, 0, t)).is_none());
+        assert!(b.push(req(1, 0, 0, t)).is_none());
+        let batch = b.push(req(2, 0, 0, t)).expect("full batch");
         assert_eq!(batch.requests.len(), 3);
         assert_eq!(b.pending(), 0);
     }
@@ -124,12 +138,12 @@ mod tests {
     fn groups_are_isolated() {
         let mut b = Batcher::new(2, Duration::from_secs(10));
         let t = Instant::now();
-        assert!(b.push(req(0, "a", "fp", t)).is_none());
-        assert!(b.push(req(1, "a", "m3", t)).is_none());
-        assert!(b.push(req(2, "b", "fp", t)).is_none());
+        assert!(b.push(req(0, 0, 0, t)).is_none());
+        assert!(b.push(req(1, 0, 1, t)).is_none());
+        assert!(b.push(req(2, 1, 0, t)).is_none());
         assert_eq!(b.pending(), 3);
-        let batch = b.push(req(3, "a", "fp", t)).expect("task-a fp full");
-        assert_eq!(batch.key, GroupKey { task: "a".into(), mode: "fp".into() });
+        let batch = b.push(req(3, 0, 0, t)).expect("task-0 mode-0 full");
+        assert_eq!(batch.key, key(0, 0));
         assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
     }
 
@@ -137,8 +151,8 @@ mod tests {
     fn tick_flushes_aged() {
         let mut b = Batcher::new(16, Duration::from_millis(5));
         let t0 = Instant::now();
-        b.push(req(0, "a", "fp", t0));
-        b.push(req(1, "a", "fp", t0));
+        b.push(req(0, 0, 0, t0));
+        b.push(req(1, 0, 0, t0));
         assert!(b.tick(t0 + Duration::from_millis(1)).is_empty());
         let out = b.tick(t0 + Duration::from_millis(6));
         assert_eq!(out.len(), 1);
@@ -151,8 +165,8 @@ mod tests {
         let mut b = Batcher::new(16, Duration::from_millis(10));
         let t0 = Instant::now();
         assert!(b.next_deadline().is_none());
-        b.push(req(0, "a", "fp", t0));
-        b.push(req(1, "b", "fp", t0 + Duration::from_millis(3)));
+        b.push(req(0, 0, 0, t0));
+        b.push(req(1, 1, 0, t0 + Duration::from_millis(3)));
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
     }
 
@@ -163,19 +177,18 @@ mod tests {
         forall("batcher-invariants", 50, |r: &mut Rng| {
             let max_batch = 1 + r.below(8);
             let mut b = Batcher::new(max_batch, Duration::from_millis(r.below(20) as u64));
-            let tasks = ["t0", "t1", "t2"];
-            let modes = ["fp", "m3"];
+            let tasks = [0u16, 1, 2];
+            let modes = [0u16, 1];
             let t0 = Instant::now();
             let n = 1 + r.below(200);
-            let mut emitted: Vec<(String, String, u64)> = Vec::new();
-            let mut collect = |batches: Vec<Batch>, emitted: &mut Vec<(String, String, u64)>| {
+            let mut emitted: Vec<(GroupKey, u64)> = Vec::new();
+            let mut collect = |batches: Vec<Batch>, emitted: &mut Vec<(GroupKey, u64)>| {
                 for batch in batches {
                     assert!(batch.requests.len() <= max_batch, "batch overflow");
                     assert!(!batch.requests.is_empty());
                     for q in &batch.requests {
-                        assert_eq!(q.task, batch.key.task);
-                        assert_eq!(q.mode, batch.key.mode);
-                        emitted.push((q.task.clone(), q.mode.clone(), q.id));
+                        assert_eq!(q.key, batch.key);
+                        emitted.push((q.key, q.id));
                     }
                 }
             };
@@ -195,21 +208,19 @@ mod tests {
             assert_eq!(b.pending(), 0);
             // exactly once
             assert_eq!(emitted.len(), n);
-            let mut ids: Vec<u64> = emitted.iter().map(|(_, _, id)| *id).collect();
+            let mut ids: Vec<u64> = emitted.iter().map(|(_, id)| *id).collect();
             ids.sort_unstable();
             ids.dedup();
             assert_eq!(ids.len(), n, "duplicate or lost request");
             // FIFO within each group (ids are submit-ordered)
             for task in &tasks {
                 for mode in &modes {
-                    let seq: Vec<u64> = emitted
-                        .iter()
-                        .filter(|(t, m, _)| t == task && m == mode)
-                        .map(|(_, _, id)| *id)
-                        .collect();
+                    let k = key(*task, *mode);
+                    let seq: Vec<u64> =
+                        emitted.iter().filter(|(g, _)| *g == k).map(|(_, id)| *id).collect();
                     let mut sorted = seq.clone();
                     sorted.sort_unstable();
-                    assert_eq!(seq, sorted, "group ({task},{mode}) out of order");
+                    assert_eq!(seq, sorted, "group {k:?} out of order");
                 }
             }
         });

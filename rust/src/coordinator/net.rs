@@ -109,8 +109,10 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
         Err(e) => return fail(format!("bad json: {e}")),
     };
     let seq = coord.seq();
-    let task = req.get("task").and_then(Value::as_str).unwrap_or_default().to_string();
-    let mode = req.get("mode").and_then(Value::as_str).unwrap_or("m3").to_string();
+    // borrow straight out of the parsed value: route strings die here —
+    // admission interns them to TaskId/ModeId (DESIGN.md §5.2)
+    let task = req.get("task").and_then(Value::as_str).unwrap_or_default();
+    let mode = req.get("mode").and_then(Value::as_str).unwrap_or("m3");
     let ids = match ids_from(&req, "ids", seq) {
         Ok(Some(v)) => v,
         Ok(None) => return fail("missing ids".into()),
@@ -121,7 +123,7 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
         Ok(None) => vec![0; seq],
         Err(e) => return fail(e.to_string()),
     };
-    let rx = match coord.submit(&task, &mode, ids, type_ids) {
+    let rx = match coord.submit(task, mode, ids, type_ids) {
         Ok(rx) => rx,
         Err(e) => return fail(e.to_string()),
     };

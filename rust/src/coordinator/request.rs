@@ -1,21 +1,27 @@
 //! Request/response types for the serving coordinator.
+//!
+//! Route strings are resolved to dense `TaskId`/`ModeId` once at
+//! admission (`Coordinator::submit`); every type here is `String`-free so
+//! the steady-state path never touches the allocator for routing.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use crate::model::manifest::{ModeId, TaskId};
+
 /// Precision mode selection per request (paper §2.3 — the accuracy/latency
-/// trade-off is exposed per request, not per deployment).
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+/// trade-off is exposed per request, not per deployment).  Interned and
+/// `Copy`: batcher group lookup is two integer compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GroupKey {
-    pub task: String,
-    pub mode: String,
+    pub task: TaskId,
+    pub mode: ModeId,
 }
 
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
-    pub task: String,
-    pub mode: String,
+    pub key: GroupKey,
     /// `[seq]` token ids (already padded/truncated to the model seq).
     pub ids: Vec<i32>,
     pub type_ids: Vec<i32>,
@@ -43,4 +49,8 @@ pub struct Timing {
     /// batch this request rode in
     pub batch_real: usize,
     pub bucket: usize,
+    /// coordinator-wide dispatch sequence number of the batch this request
+    /// rode in; within a (task, mode) group it is strictly increasing with
+    /// request id — the FIFO witness the pipeline tests assert on.
+    pub batch_seq: u64,
 }

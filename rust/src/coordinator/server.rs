@@ -2,6 +2,12 @@
 //! thread -> engine (PJRT) thread -> completion workers.  This is the
 //! "end-to-end system" the paper leaves as future work: batched W8A8
 //! inference with per-request precision modes and zero Python anywhere.
+//!
+//! Hot-path discipline (DESIGN.md §5): route strings are interned to
+//! `TaskId`/`ModeId` at admission; batch assembly writes into pooled
+//! staging buffers; the engine overlaps upload/execute/readback; and
+//! de-batching + reply dispatch run on the completion pool, never on the
+//! engine thread.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
@@ -10,14 +16,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::data::Split;
 use crate::exec::ThreadPool;
-use crate::model::manifest::Manifest;
+use crate::model::manifest::{Manifest, ModeId};
 use crate::model::Container;
-use crate::runtime::engine::{Engine, InferJob};
+use crate::runtime::engine::{Engine, EngineOptions, InferDone, InferJob};
+use crate::runtime::staging::StagingPool;
 
 use super::batcher::{Batch, Batcher};
-use super::request::{Request, Response, Timing};
+use super::request::{GroupKey, Request, Response, Timing};
 use super::stats::Recorder;
 
 #[derive(Debug, Clone)]
@@ -26,6 +32,15 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     pub queue_cap: usize,
     pub completion_workers: usize,
+    /// Overlap upload/execute/readback in the engine (`false` = the
+    /// pre-pipeline serial loop, kept for A/B benchmarking).
+    pub pipeline: bool,
+    /// Staging buffers kept warm per bucket.
+    pub staging_per_bucket: usize,
+    /// Test-only fault injection: the completion callback for this
+    /// dispatch sequence number panics, exercising panic isolation in the
+    /// readback/completion stage.  Never set in production.
+    pub fault_inject_batch: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -35,6 +50,9 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(4),
             queue_cap: 1024,
             completion_workers: 4,
+            pipeline: true,
+            staging_per_bucket: 4,
+            fault_inject_batch: None,
         }
     }
 }
@@ -42,7 +60,15 @@ impl Default for ServerConfig {
 pub struct Coordinator {
     tx: Option<SyncSender<Request>>,
     batcher_join: Option<std::thread::JoinHandle<()>>,
+    // Drop order matters (declaration order): the engine must shut down
+    // (draining its queue into completion jobs) before the pool joins its
+    // workers, so every admitted request gets a reply or a hangup.
+    engine: Option<Arc<Engine>>,
+    pool: Option<Arc<ThreadPool>>,
     pub recorder: Arc<Recorder>,
+    man: Arc<Manifest>,
+    /// `[task * num_modes + mode]` -> checkpoint resident in the engine.
+    loaded: Vec<bool>,
     next_id: AtomicU64,
     seq: usize,
     num_labels: usize,
@@ -65,6 +91,7 @@ impl Coordinator {
         // load quantized/fp checkpoints from disk
         let mut preload = Vec::new();
         let mut modes_used = std::collections::BTreeSet::new();
+        let mut loaded = vec![false; manifest.num_tasks() * manifest.num_modes()];
         for (task, mode) in pairs {
             let t = manifest.task(task)?;
             let rel = checkpoint_rel(t, mode);
@@ -74,6 +101,9 @@ impl Coordinator {
                     format!("loading checkpoint {path:?} (run `repro quantize` first?)")
                 })?
                 .reordered(&manifest.mode(mode)?.params)?;
+            let key =
+                GroupKey { task: manifest.task_id(task)?, mode: manifest.mode_id(mode)? };
+            loaded[route_slot(manifest.num_modes(), key)] = true;
             preload.push((task.clone(), mode.clone(), ckpt));
             modes_used.insert(mode.clone());
         }
@@ -82,27 +112,39 @@ impl Coordinator {
             .flat_map(|m| buckets.iter().map(move |b| (m.clone(), *b)))
             .collect();
 
-        let engine = Arc::new(Engine::spawn(artifacts, preload, precompile)?);
-        let recorder = Arc::new(Recorder::new());
-        let pool = ThreadPool::new(config.completion_workers, "zqh-complete");
+        let pool = Arc::new(ThreadPool::new(config.completion_workers, "zqh-complete"));
+        let staging = Arc::new(StagingPool::new(&buckets, seq, config.staging_per_bucket));
+        let engine = Arc::new(Engine::spawn(
+            artifacts,
+            preload,
+            precompile,
+            Arc::clone(&pool),
+            Arc::clone(&staging),
+            EngineOptions { overlap: config.pipeline },
+        )?);
+        let man = Arc::new(manifest);
+        let recorder = Arc::new(Recorder::new(man.mode_order.clone()));
 
         let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(config.queue_cap);
         let batcher_cfg = config.clone();
         let b_recorder = Arc::clone(&recorder);
         let b_engine = Arc::clone(&engine);
-        let man = Arc::new(manifest);
         let b_man = Arc::clone(&man);
         let batcher_join = std::thread::Builder::new()
             .name("zqh-batcher".into())
             .spawn(move || {
-                batcher_main(rx, batcher_cfg, b_man, b_engine, b_recorder, pool)
+                batcher_main(rx, batcher_cfg, b_man, b_engine, b_recorder, staging)
             })
             .context("spawn batcher")?;
 
         Ok(Coordinator {
             tx: Some(tx),
             batcher_join: Some(batcher_join),
+            engine: Some(engine),
+            pool: Some(pool),
             recorder,
+            man,
+            loaded,
             next_id: AtomicU64::new(0),
             seq,
             num_labels,
@@ -111,6 +153,7 @@ impl Coordinator {
     }
 
     /// Submit a request; `Err` on backpressure (queue full) or bad input.
+    /// Route strings are interned here — nothing downstream sees them.
     pub fn submit(
         &self,
         task: &str,
@@ -121,11 +164,11 @@ impl Coordinator {
         if ids.len() != self.seq || type_ids.len() != self.seq {
             bail!("request must be exactly seq={} tokens (got {})", self.seq, ids.len());
         }
+        let key = self.resolve(task, mode)?;
         let (reply, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            task: task.to_string(),
-            mode: mode.to_string(),
+            key,
             ids,
             type_ids,
             enqueued: Instant::now(),
@@ -136,6 +179,20 @@ impl Coordinator {
             Err(TrySendError::Full(_)) => Err(anyhow!("admission queue full (backpressure)")),
             Err(TrySendError::Disconnected(_)) => Err(anyhow!("coordinator stopped")),
         }
+    }
+
+    /// Intern (task, mode) and check the route has a resident checkpoint.
+    fn resolve(&self, task: &str, mode: &str) -> Result<GroupKey> {
+        let no_ckpt =
+            || anyhow!("no checkpoint loaded for ({task},{mode}); not in this server's pairs");
+        let key = GroupKey {
+            task: self.man.task_id(task).map_err(|_| no_ckpt())?,
+            mode: self.man.mode_id(mode).map_err(|_| no_ckpt())?,
+        };
+        if !self.loaded[route_slot(self.man.num_modes(), key)] {
+            return Err(no_ckpt());
+        }
+        Ok(key)
     }
 
     pub fn num_labels(&self) -> usize {
@@ -153,7 +210,17 @@ impl Drop for Coordinator {
         if let Some(j) = self.batcher_join.take() {
             let _ = j.join();
         }
+        // engine before pool: Engine::drop drains its queue into
+        // completion jobs; ThreadPool::drop then runs them all.
+        drop(self.engine.take());
+        drop(self.pool.take());
     }
+}
+
+/// Flat slot of a (task, mode) route in the `loaded` bitmap — the one
+/// definition of the 2D->1D layout.
+fn route_slot(num_modes: usize, key: GroupKey) -> usize {
+    key.task.index() * num_modes + key.mode.index()
 }
 
 pub fn checkpoint_rel(task: &crate::model::manifest::TaskSpec, mode: &str) -> String {
@@ -170,9 +237,10 @@ fn batcher_main(
     man: Arc<Manifest>,
     engine: Arc<Engine>,
     recorder: Arc<Recorder>,
-    pool: ThreadPool,
+    staging: Arc<StagingPool>,
 ) {
     let mut batcher = Batcher::new(config.max_batch, config.max_wait);
+    let mut batch_seq: u64 = 0;
     loop {
         let timeout = batcher
             .next_deadline()
@@ -181,79 +249,69 @@ fn batcher_main(
         match rx.recv_timeout(timeout) {
             Ok(req) => {
                 if let Some(batch) = batcher.push(req) {
-                    dispatch(batch, &man, &engine, &recorder, &pool);
+                    dispatch(batch, &mut batch_seq, &config, &man, &engine, &recorder, &staging);
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 for batch in batcher.drain_all() {
-                    dispatch(batch, &man, &engine, &recorder, &pool);
+                    dispatch(batch, &mut batch_seq, &config, &man, &engine, &recorder, &staging);
                 }
-                pool.wait_idle();
                 break;
             }
         }
         for batch in batcher.tick(Instant::now()) {
-            dispatch(batch, &man, &engine, &recorder, &pool);
+            dispatch(batch, &mut batch_seq, &config, &man, &engine, &recorder, &staging);
         }
     }
 }
 
+/// Assemble a batch into a pooled staging buffer and hand it to the
+/// engine with a completion callback (de-batching + reply dispatch, run
+/// on the worker pool after readback).
 fn dispatch(
     batch: Batch,
+    batch_seq: &mut u64,
+    config: &ServerConfig,
     man: &Arc<Manifest>,
     engine: &Arc<Engine>,
     recorder: &Arc<Recorder>,
-    pool: &ThreadPool,
+    staging: &Arc<StagingPool>,
 ) {
-    let seq = man.seq;
     let real = batch.requests.len();
     let bucket = man.bucket_for(real);
     let dispatched = Instant::now();
+    let seq_no = *batch_seq;
+    *batch_seq += 1;
 
-    let mut ids = Vec::with_capacity(bucket * seq);
-    let mut tys = Vec::with_capacity(bucket * seq);
+    let mut host = staging.take(bucket);
     for r in &batch.requests {
-        ids.extend_from_slice(&r.ids);
-        tys.extend_from_slice(&r.type_ids);
+        host.push_row(&r.ids, &r.type_ids);
     }
-    ids.resize(bucket * seq, crate::data::PAD);
-    tys.resize(bucket * seq, 0);
-    let mask = Split::mask_row(&ids);
+    host.finish();
 
-    let (reply_tx, reply_rx) = channel();
-    let job = InferJob {
-        task: batch.key.task.clone(),
-        mode: batch.key.mode.clone(),
-        bucket,
-        ids,
-        type_ids: tys,
-        mask,
-        reply: reply_tx,
-    };
-    if engine.submit(job).is_err() {
-        fail_batch(batch, recorder, "engine unavailable");
-        return;
-    }
-
-    let recorder = Arc::clone(recorder);
-    let mode = batch.key.mode.clone();
+    let mode = batch.key.mode;
     let requests = batch.requests;
-    pool.spawn(move || {
-        let result = reply_rx.recv().map_err(|_| anyhow!("engine dropped reply")).and_then(|r| r);
+    let recorder = Arc::clone(recorder);
+    let fault = config.fault_inject_batch;
+    let done = Box::new(move |result: Result<InferDone>| {
+        if fault == Some(seq_no) {
+            panic!("fault injection: completion panic for batch {seq_no}");
+        }
         match result {
             Ok(done) => {
                 let logits = match done.logits.as_f32() {
                     Ok(v) => v.to_vec(),
                     Err(e) => {
+                        let msg = format!("bad logits: {e}");
                         for r in requests {
-                            send_error(&r, &mode, &recorder, &format!("bad logits: {e}"));
+                            send_error(&r, mode, &recorder, &msg);
                         }
                         return;
                     }
                 };
                 let nl = logits.len() / bucket;
-                recorder.record_batch(&mode, real, done.exec_us);
+                recorder.record_batch(mode, real, done.exec_us);
                 for (row, r) in requests.into_iter().enumerate() {
                     let now = Instant::now();
                     let timing = Timing {
@@ -262,8 +320,9 @@ fn dispatch(
                         total_us: now.duration_since(r.enqueued).as_micros() as u64,
                         batch_real: real,
                         bucket,
+                        batch_seq: seq_no,
                     };
-                    recorder.record_request(&mode, timing.total_us, timing.queue_us, false);
+                    recorder.record_request(mode, timing.total_us, timing.queue_us, false);
                     let _ = r.reply.send(Response {
                         id: r.id,
                         logits: logits[row * nl..(row + 1) * nl].to_vec(),
@@ -275,20 +334,21 @@ fn dispatch(
             Err(e) => {
                 let msg = e.to_string();
                 for r in requests {
-                    send_error(&r, &mode, &recorder, &msg);
+                    send_error(&r, mode, &recorder, &msg);
                 }
             }
         }
     });
-}
 
-fn fail_batch(batch: Batch, recorder: &Arc<Recorder>, msg: &str) {
-    for r in &batch.requests {
-        send_error(r, &batch.key.mode, recorder, msg);
+    let job = InferJob { task: batch.key.task, mode, staging: host, done };
+    if let Err(job) = engine.submit(job) {
+        let job = *job;
+        staging.put(job.staging);
+        (job.done)(Err(anyhow!("engine unavailable")));
     }
 }
 
-fn send_error(r: &Request, mode: &str, recorder: &Recorder, msg: &str) {
+fn send_error(r: &Request, mode: ModeId, recorder: &Recorder, msg: &str) {
     recorder.record_request(mode, 0, 0, true);
     let _ = r.reply.send(Response {
         id: r.id,

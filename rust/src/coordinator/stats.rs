@@ -1,9 +1,13 @@
 //! Serving metrics: lock-light latency/throughput recording with
-//! log-bucketed histograms, keyed by precision mode.
+//! log-bucketed histograms, keyed by interned precision mode.  Recording
+//! is index-addressed (`ModeId` -> dense slot) so the steady-state path
+//! never allocates; names reappear only in `snapshot`/`render`.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::model::manifest::ModeId;
 
 /// Log2-bucketed latency histogram (microseconds).
 #[derive(Debug, Clone)]
@@ -42,18 +46,30 @@ impl Histogram {
         }
     }
 
-    /// Percentile estimate from bucket boundaries (upper bound of bucket).
+    /// Percentile estimate: linear interpolation inside the target
+    /// log2 bucket (assuming uniform spread), clamped to the observed
+    /// [min, max].  Returning the bucket's upper bound — the previous
+    /// behaviour — over-reported by up to 2x; with the clamp, a
+    /// single-valued histogram is exact at every percentile.
     pub fn percentile_us(&self, p: f64) -> u64 {
         if self.total == 0 {
             return 0;
         }
-        let want = (self.total as f64 * p).ceil() as u64;
-        let mut seen = 0;
+        let want = (self.total as f64 * p).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
-            seen += c;
-            if seen >= want {
-                return 1u64 << (i + 1);
+            if *c == 0 {
+                continue;
             }
+            if seen + c >= want {
+                let lo = (1u64 << i) as f64;
+                let hi = lo * 2.0; // avoids 1<<64 overflow in the top bucket
+                // midpoint of the k-th sample's share of the bucket
+                let frac = ((want - seen) as f64 - 0.5) / *c as f64;
+                let v = lo + frac * (hi - lo);
+                return (v as u64).clamp(self.min_us, self.max_us);
+            }
+            seen += c;
         }
         self.max_us
     }
@@ -92,22 +108,31 @@ impl ModeStats {
             self.batched_rows as f64 / self.batches as f64
         }
     }
+
+    fn active(&self) -> bool {
+        self.requests > 0 || self.batches > 0 || self.errors > 0
+    }
 }
 
 /// Shared recorder (single mutex — recording is tiny next to inference).
+/// Slots are dense by `ModeId`; mode names are kept only for rendering.
 pub struct Recorder {
     start: Instant,
-    inner: Mutex<BTreeMap<String, ModeStats>>,
+    modes: Vec<String>,
+    inner: Mutex<Vec<ModeStats>>,
 }
 
 impl Recorder {
-    pub fn new() -> Self {
-        Recorder { start: Instant::now(), inner: Mutex::new(BTreeMap::new()) }
+    /// `modes` is the manifest's `mode_order` — the `ModeId` space.
+    pub fn new(modes: Vec<String>) -> Self {
+        let slots = modes.iter().map(|_| ModeStats::default()).collect();
+        Recorder { start: Instant::now(), modes, inner: Mutex::new(slots) }
     }
 
-    pub fn record_request(&self, mode: &str, total_us: u64, queue_us: u64, err: bool) {
+    pub fn record_request(&self, mode: ModeId, total_us: u64, queue_us: u64, err: bool) {
         let mut g = self.inner.lock().unwrap();
-        let s = g.entry(mode.to_string()).or_default();
+        // slots are mode_order-sized; a foreign ModeId is a bug, not a slot
+        let s = &mut g[mode.index()];
         s.requests += 1;
         if err {
             s.errors += 1;
@@ -117,16 +142,23 @@ impl Recorder {
         }
     }
 
-    pub fn record_batch(&self, mode: &str, rows: usize, exec_us: u64) {
+    pub fn record_batch(&self, mode: ModeId, rows: usize, exec_us: u64) {
         let mut g = self.inner.lock().unwrap();
-        let s = g.entry(mode.to_string()).or_default();
+        let s = &mut g[mode.index()];
         s.batches += 1;
         s.batched_rows += rows as u64;
         s.exec.record(exec_us);
     }
 
+    /// Per-mode stats keyed by mode name, active modes only (so callers
+    /// see the same shape as traffic they actually sent).
     pub fn snapshot(&self) -> BTreeMap<String, ModeStats> {
-        self.inner.lock().unwrap().clone()
+        let g = self.inner.lock().unwrap();
+        g.iter()
+            .enumerate()
+            .filter(|(_, s)| s.active())
+            .map(|(i, s)| (self.modes[i].clone(), s.clone()))
+            .collect()
     }
 
     pub fn elapsed_s(&self) -> f64 {
@@ -159,12 +191,6 @@ impl Recorder {
     }
 }
 
-impl Default for Recorder {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,16 +216,54 @@ mod tests {
     }
 
     #[test]
+    fn percentile_interpolates_instead_of_upper_bound() {
+        // 1000 identical samples: every percentile must be exact, not the
+        // bucket's upper bound (the old behaviour returned 128 for 100us).
+        let mut h = Histogram::new();
+        for _ in 0..1000 {
+            h.record(100);
+        }
+        assert_eq!(h.percentile_us(0.50), 100);
+        assert_eq!(h.percentile_us(0.99), 100);
+        assert_eq!(h.percentile_us(1.0), 100);
+
+        // mixed: estimates stay inside the sample range and monotone in p
+        let mut h = Histogram::new();
+        for us in [100u64, 110, 120, 130, 900, 950, 1000, 1100, 1200, 1300] {
+            h.record(us);
+        }
+        let p50 = h.percentile_us(0.50);
+        let p90 = h.percentile_us(0.90);
+        let p100 = h.percentile_us(1.0);
+        // 5th of 10 samples is 900 (bucket [512,1024)); 9th is 1200
+        assert!(p50 >= 512 && p50 <= 1024, "p50 {p50}");
+        assert!(p90 >= 1024 && p90 <= 1300, "p90 {p90}");
+        assert!(p50 <= p90 && p90 <= p100);
+        assert_eq!(p100, 1300);
+    }
+
+    #[test]
     fn recorder_accumulates_per_mode() {
-        let r = Recorder::new();
-        r.record_request("m3", 1000, 100, false);
-        r.record_request("m3", 2000, 200, false);
-        r.record_request("fp", 99, 9, true);
-        r.record_batch("m3", 8, 500);
+        let r = Recorder::new(vec!["fp".into(), "m3".into()]);
+        let fp = ModeId(0);
+        let m3 = ModeId(1);
+        r.record_request(m3, 1000, 100, false);
+        r.record_request(m3, 2000, 200, false);
+        r.record_request(fp, 99, 9, true);
+        r.record_batch(m3, 8, 500);
         let snap = r.snapshot();
         assert_eq!(snap["m3"].requests, 2);
         assert_eq!(snap["fp"].errors, 1);
         assert_eq!(snap["m3"].mean_batch_size(), 8.0);
         assert!(r.render().contains("m3"));
+    }
+
+    #[test]
+    fn recorder_snapshot_hides_idle_modes() {
+        let r = Recorder::new(vec!["fp".into(), "m1".into()]);
+        r.record_request(ModeId(0), 10, 1, false);
+        let snap = r.snapshot();
+        assert!(snap.contains_key("fp"));
+        assert!(!snap.contains_key("m1"));
     }
 }

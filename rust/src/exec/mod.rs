@@ -2,12 +2,16 @@
 //!
 //! A small fixed-size worker pool over an mpsc job queue, with graceful
 //! shutdown and panic isolation.  The serving coordinator uses it for
-//! request pre/post-processing; PJRT execution stays on the dedicated
-//! engine thread.
+//! the readback completion stage (de-batching + reply dispatch); PJRT
+//! execution stays on the dedicated engine thread.
+//!
+//! Job accounting lives behind one mutex with a condvar, so `wait_idle`
+//! parks instead of burning a core on `yield_now`, and `run` ships the
+//! panic payload back to the caller instead of silently dropping the
+//! reply channel.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -17,12 +21,33 @@ enum Msg {
     Stop,
 }
 
+#[derive(Default)]
+struct Counts {
+    queued: usize,
+    completed: usize,
+    panicked: usize,
+}
+
+struct Shared {
+    counts: Mutex<Counts>,
+    idle: Condvar,
+}
+
 pub struct ThreadPool {
     tx: Sender<Msg>,
     workers: Vec<JoinHandle<()>>,
-    queued: Arc<AtomicUsize>,
-    completed: Arc<AtomicUsize>,
-    panicked: Arc<AtomicUsize>,
+    shared: Arc<Shared>,
+}
+
+/// Best-effort text from a panic payload (`panic!` with `&str`/`String`).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker job panicked (non-string payload)".to_string()
+    }
 }
 
 impl ThreadPool {
@@ -30,61 +55,69 @@ impl ThreadPool {
         assert!(threads > 0);
         let (tx, rx) = channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
-        let queued = Arc::new(AtomicUsize::new(0));
-        let completed = Arc::new(AtomicUsize::new(0));
-        let panicked = Arc::new(AtomicUsize::new(0));
+        let shared =
+            Arc::new(Shared { counts: Mutex::new(Counts::default()), idle: Condvar::new() });
         let workers = (0..threads)
             .map(|i| {
                 let rx = Arc::clone(&rx);
-                let queued = Arc::clone(&queued);
-                let completed = Arc::clone(&completed);
-                let panicked = Arc::clone(&panicked);
+                let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("{name}-{i}"))
-                    .spawn(move ||
-
- worker_main(rx, queued, completed, panicked))
+                    .spawn(move || worker_main(rx, shared))
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx, workers, queued, completed, panicked }
+        ThreadPool { tx, workers, shared }
     }
 
     /// Enqueue a job; returns false if the pool is shut down.
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
-        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.shared.counts.lock().expect("pool counts").queued += 1;
         self.tx.send(Msg::Run(Box::new(f))).is_ok()
     }
 
-    /// Run a closure on the pool and get the result over a channel.
-    pub fn run<T, F>(&self, f: F) -> Receiver<T>
+    /// Run a closure on the pool; the receiver yields `Ok(value)` or
+    /// `Err(panic message)` if the job panicked — a worker panic is never
+    /// silently swallowed into a dropped channel.
+    pub fn run<T, F>(&self, f: F) -> Receiver<Result<T, String>>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
         let (tx, rx) = channel();
         self.spawn(move || {
-            let _ = tx.send(f());
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+                Ok(v) => {
+                    let _ = tx.send(Ok(v));
+                }
+                Err(payload) => {
+                    let _ = tx.send(Err(panic_message(payload.as_ref())));
+                    // propagate so the pool's panic accounting still sees it
+                    std::panic::resume_unwind(payload);
+                }
+            }
         });
         rx
     }
 
     pub fn pending(&self) -> usize {
-        self.queued.load(Ordering::SeqCst) - self.completed.load(Ordering::SeqCst)
+        let c = self.shared.counts.lock().expect("pool counts");
+        c.queued - c.completed
     }
 
     pub fn completed(&self) -> usize {
-        self.completed.load(Ordering::SeqCst)
+        self.shared.counts.lock().expect("pool counts").completed
     }
 
     pub fn panicked(&self) -> usize {
-        self.panicked.load(Ordering::SeqCst)
+        self.shared.counts.lock().expect("pool counts").panicked
     }
 
-    /// Block until every queued job has finished (test/bench helper).
+    /// Park until every queued job has finished (no spinning).
     pub fn wait_idle(&self) {
-        while self.pending() > 0 {
-            std::thread::yield_now();
+        let mut c = self.shared.counts.lock().expect("pool counts");
+        while c.completed < c.queued {
+            c = self.shared.idle.wait(c).expect("pool counts");
         }
     }
 }
@@ -100,12 +133,7 @@ impl Drop for ThreadPool {
     }
 }
 
-fn worker_main(
-    rx: Arc<Mutex<Receiver<Msg>>>,
-    _queued: Arc<AtomicUsize>,
-    completed: Arc<AtomicUsize>,
-    panicked: Arc<AtomicUsize>,
-) {
+fn worker_main(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
     loop {
         let msg = {
             let guard = rx.lock().expect("queue poisoned");
@@ -114,10 +142,14 @@ fn worker_main(
         match msg {
             Ok(Msg::Run(job)) => {
                 let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                let mut c = shared.counts.lock().expect("pool counts");
                 if res.is_err() {
-                    panicked.fetch_add(1, Ordering::SeqCst);
+                    c.panicked += 1;
                 }
-                completed.fetch_add(1, Ordering::SeqCst);
+                c.completed += 1;
+                if c.completed == c.queued {
+                    shared.idle.notify_all();
+                }
             }
             Ok(Msg::Stop) | Err(_) => break,
         }
@@ -127,7 +159,7 @@ fn worker_main(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn runs_all_jobs() {
@@ -148,7 +180,19 @@ mod tests {
     fn run_returns_value() {
         let pool = ThreadPool::new(2, "t");
         let rx = pool.run(|| 6 * 7);
-        assert_eq!(rx.recv().unwrap(), 42);
+        assert_eq!(rx.recv().unwrap().unwrap(), 42);
+    }
+
+    #[test]
+    fn run_surfaces_panic_to_caller() {
+        let pool = ThreadPool::new(2, "t");
+        let rx = pool.run(|| -> u32 { panic!("kaboom: divided by cucumber") });
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("kaboom"), "panic message lost: {err}");
+        pool.wait_idle();
+        assert_eq!(pool.panicked(), 1);
+        // pool still healthy
+        assert_eq!(pool.run(|| 1 + 1).recv().unwrap().unwrap(), 2);
     }
 
     #[test]
@@ -156,9 +200,21 @@ mod tests {
         let pool = ThreadPool::new(2, "t");
         pool.spawn(|| panic!("boom"));
         let rx = pool.run(|| "still alive");
-        assert_eq!(rx.recv().unwrap(), "still alive");
+        assert_eq!(rx.recv().unwrap().unwrap(), "still alive");
         pool.wait_idle();
         assert_eq!(pool.panicked(), 1);
+    }
+
+    #[test]
+    fn wait_idle_parks_until_done() {
+        let pool = ThreadPool::new(2, "t");
+        for _ in 0..8 {
+            pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        }
+        pool.wait_idle();
+        assert_eq!(pool.pending(), 0);
+        assert_eq!(pool.completed(), 8);
+        pool.wait_idle(); // idempotent when already idle
     }
 
     #[test]

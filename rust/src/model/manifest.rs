@@ -10,6 +10,38 @@ use crate::json::{self, Value};
 
 use super::tensor::DType;
 
+/// Dense route id for a task, an index into `Manifest::task_order`.
+///
+/// The manifest is the single source of truth for the id space: every
+/// component that loads the same `manifest.json` (coordinator, engine
+/// thread, CLI) derives identical ids, so they can be passed across
+/// threads without a handshake.  Strings are resolved to ids exactly once
+/// at admission (DESIGN.md §5.2); everything downstream is `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u16);
+
+/// Dense route id for a precision mode, an index into `Manifest::mode_order`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModeId(pub u16);
+
+impl TaskId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl ModeId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// The one definition of name -> dense-id interning, shared by
+/// `Manifest::{task_id,mode_id}` and the engine's mirrored route tables.
+pub fn intern_position(order: &[String], name: &str) -> Option<u16> {
+    order.iter().position(|n| n == name).map(|i| i as u16)
+}
+
 #[derive(Debug, Clone)]
 pub struct ModelCfg {
     pub vocab_size: usize,
@@ -288,6 +320,58 @@ impl Manifest {
             .with_context(|| format!("unknown task {name:?} (have {:?})", self.task_order))
     }
 
+    // ------------------------------------------------------ route interning
+
+    pub fn num_tasks(&self) -> usize {
+        self.task_order.len()
+    }
+
+    pub fn num_modes(&self) -> usize {
+        self.mode_order.len()
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Resolve a task name to its dense id (position in `task_order`).
+    pub fn task_id(&self, name: &str) -> Result<TaskId> {
+        intern_position(&self.task_order, name)
+            .map(TaskId)
+            .with_context(|| format!("unknown task {name:?} (have {:?})", self.task_order))
+    }
+
+    /// Resolve a mode name to its dense id (position in `mode_order`).
+    pub fn mode_id(&self, name: &str) -> Result<ModeId> {
+        intern_position(&self.mode_order, name)
+            .map(ModeId)
+            .with_context(|| format!("unknown mode {name:?} (have {:?})", self.mode_order))
+    }
+
+    pub fn task_name(&self, id: TaskId) -> &str {
+        &self.task_order[id.index()]
+    }
+
+    pub fn mode_name(&self, id: ModeId) -> &str {
+        &self.mode_order[id.index()]
+    }
+
+    pub fn task_by_id(&self, id: TaskId) -> &TaskSpec {
+        &self.tasks[&self.task_order[id.index()]]
+    }
+
+    pub fn mode_by_id(&self, id: ModeId) -> &ModeSpec {
+        &self.modes[&self.mode_order[id.index()]]
+    }
+
+    /// Dense index of an exact bucket size (for `Vec`-indexed exe tables).
+    pub fn bucket_index(&self, bucket: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .position(|b| *b == bucket)
+            .with_context(|| format!("bucket {bucket} not in manifest buckets {:?}", self.buckets))
+    }
+
     pub fn path(&self, rel: &str) -> PathBuf {
         self.root.join(rel)
     }
@@ -329,6 +413,35 @@ mod tests {
         assert_eq!(man.bucket_for(4), 4);
         assert_eq!(man.bucket_for(9), 16);
         assert_eq!(man.bucket_for(99), 16);
+    }
+
+    #[test]
+    fn route_ids_are_dense_and_roundtrip() {
+        let man = Manifest {
+            root: PathBuf::new(),
+            model: ModelCfg {
+                vocab_size: 1, hidden: 1, layers: 1, heads: 1, ffn: 1,
+                max_seq: 1, type_vocab: 1, num_labels: 1, ln_eps: 1e-12,
+            },
+            seq: 128,
+            buckets: vec![1, 4, 8, 16],
+            modes: BTreeMap::new(),
+            mode_order: vec!["fp".into(), "m1".into(), "m3".into()],
+            calib: CalibSpec { artifact: String::new(), batch: 16, params: vec![], stats: vec![] },
+            tasks: BTreeMap::new(),
+            task_order: vec!["cola".into(), "sst2".into()],
+            micro: BTreeMap::new(),
+        };
+        assert_eq!(man.task_id("sst2").unwrap(), TaskId(1));
+        assert_eq!(man.mode_id("m3").unwrap(), ModeId(2));
+        assert_eq!(man.task_name(TaskId(1)), "sst2");
+        assert_eq!(man.mode_name(ModeId(0)), "fp");
+        assert!(man.task_id("nope").is_err());
+        assert!(man.mode_id("m9").is_err());
+        assert_eq!(man.bucket_index(8).unwrap(), 2);
+        assert!(man.bucket_index(5).is_err());
+        assert_eq!(man.num_tasks(), 2);
+        assert_eq!(man.num_modes(), 3);
     }
 
     #[test]

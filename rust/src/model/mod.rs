@@ -6,5 +6,7 @@ pub mod manifest;
 pub mod tensor;
 
 pub use container::Container;
-pub use manifest::{CalibSpec, Manifest, ModeSpec, ModelCfg, ParamSpec, Switches, TaskSpec};
+pub use manifest::{
+    CalibSpec, Manifest, ModeId, ModeSpec, ModelCfg, ParamSpec, Switches, TaskId, TaskSpec,
+};
 pub use tensor::{DType, Tensor, TensorData};

@@ -1,34 +1,52 @@
 //! Engine thread: owns the (non-`Send`) PJRT runtime and serves execution
 //! requests over channels — the executor-thread pattern a production GPU
 //! server uses.  The coordinator and its worker pool stay fully `Send`.
+//!
+//! The request loop is a software pipeline (DESIGN.md §5.4): while batch
+//! N executes on the device, batch N+1's host arrays are uploaded, and
+//! batch N's readback is deferred until N+1 has been launched, so the
+//! device never idles waiting on a host copy.  Readback results
+//! (de-batching, reply dispatch) are handed to the shared
+//! `exec::ThreadPool` instead of blocking the engine thread.  Jobs carry
+//! only interned `TaskId`/`ModeId` — no strings on the hot path.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::model::manifest::Manifest;
+use crate::exec::ThreadPool;
+use crate::model::manifest::{Manifest, ModeId, TaskId};
 use crate::model::tensor::Tensor;
 use crate::model::Container;
 
-use super::Runtime;
+use super::staging::{StagingBuf, StagingPool};
+use super::{PendingOutputs, Runtime};
+
+/// Completion callback: runs on the shared worker pool with the batch
+/// result (readback stage output).  Owning the per-request reply senders,
+/// it is where de-batching and reply dispatch happen.
+pub type Completion = Box<dyn FnOnce(Result<InferDone>) + Send + 'static>;
 
 pub struct InferJob {
-    pub task: String,
-    pub mode: String,
-    pub bucket: usize,
-    pub ids: Vec<i32>,
-    pub type_ids: Vec<i32>,
-    pub mask: Vec<f32>,
-    pub reply: Sender<Result<InferDone>>,
+    pub task: TaskId,
+    pub mode: ModeId,
+    /// Pooled host buffers: `bucket * seq` ids/type_ids/mask.  Recycled to
+    /// the staging pool by the engine right after the device upload.
+    pub staging: StagingBuf,
+    pub done: Completion,
 }
 
 pub struct InferDone {
     pub logits: Tensor,
-    /// device-side execution time (engine-thread measured), microseconds.
+    /// launch -> readback-complete time (engine-thread measured), us.
+    /// Under overlap this includes the next batch's upload window.
     pub exec_us: u64,
+    /// host -> device input copy time, microseconds.
+    pub upload_us: u64,
 }
 
 enum Msg {
@@ -40,37 +58,76 @@ enum Msg {
 pub struct Engine {
     tx: Sender<Msg>,
     join: Option<JoinHandle<()>>,
+    /// Route tables mirrored from the engine-side manifest so blocking
+    /// (CLI/test) callers can resolve names without loading it again.
+    tasks: Vec<String>,
+    modes: Vec<String>,
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Overlap upload/execute/readback (one batch in flight behind the
+    /// head).  `false` restores the strictly serial per-batch loop — kept
+    /// for A/B benchmarking the pipeline win.
+    pub overlap: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions { overlap: true }
+    }
 }
 
 impl Engine {
     /// Spawn the engine: loads the manifest, uploads every (task, mode)
     /// checkpoint in `preload`, and pre-compiles the executables for the
     /// requested (mode, bucket) pairs so the serving hot path never
-    /// compiles.
+    /// compiles.  `pool` runs completion callbacks; `staging` receives
+    /// recycled host buffers.
     pub fn spawn(
         artifacts: PathBuf,
         preload: Vec<(String, String, Container)>,
         precompile: Vec<(String, usize)>,
+        pool: Arc<ThreadPool>,
+        staging: Arc<StagingPool>,
+        options: EngineOptions,
     ) -> Result<Engine> {
         let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let (ready_tx, ready_rx) = channel::<Result<(Vec<String>, Vec<String>)>>();
         let join = std::thread::Builder::new()
             .name("zqhero-engine".into())
-            .spawn(move || engine_main(artifacts, preload, precompile, rx, ready_tx))
+            .spawn(move || engine_main(artifacts, preload, precompile, rx, ready_tx, pool, staging, options))
             .context("spawning engine thread")?;
-        ready_rx
+        let (tasks, modes) = ready_rx
             .recv()
             .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Engine { tx, join: Some(join) })
+        Ok(Engine { tx, join: Some(join), tasks, modes })
     }
 
-    pub fn submit(&self, job: InferJob) -> Result<()> {
-        self.tx
-            .send(Msg::Infer(Box::new(job)))
-            .map_err(|_| anyhow!("engine thread gone"))
+    /// Enqueue a job; on failure (engine gone) the job is handed back so
+    /// the caller can recycle its staging buffer and fail its requests.
+    pub fn submit(&self, job: InferJob) -> std::result::Result<(), Box<InferJob>> {
+        self.tx.send(Msg::Infer(Box::new(job))).map_err(|e| match e.0 {
+            Msg::Infer(job) => job,
+            Msg::Stop => unreachable!("submit only sends Infer"),
+        })
     }
 
-    /// Synchronous convenience call (CLI paths, tests).
+    pub fn task_id(&self, name: &str) -> Result<TaskId> {
+        crate::model::manifest::intern_position(&self.tasks, name)
+            .map(TaskId)
+            .with_context(|| format!("unknown task {name:?}"))
+    }
+
+    pub fn mode_id(&self, name: &str) -> Result<ModeId> {
+        crate::model::manifest::intern_position(&self.modes, name)
+            .map(ModeId)
+            .with_context(|| format!("unknown mode {name:?}"))
+    }
+
+    /// Synchronous convenience call (CLI paths, tests).  `ids`/`type_ids`
+    /// are `[bucket * seq]`; the mask is derived from PAD positions.
     pub fn infer_blocking(
         &self,
         task: &str,
@@ -78,18 +135,19 @@ impl Engine {
         bucket: usize,
         ids: Vec<i32>,
         type_ids: Vec<i32>,
-        mask: Vec<f32>,
     ) -> Result<InferDone> {
+        let seq = ids.len() / bucket.max(1);
+        let staging = StagingBuf::from_parts(bucket, seq, ids, type_ids);
         let (reply, rx) = channel();
         self.submit(InferJob {
-            task: task.into(),
-            mode: mode.into(),
-            bucket,
-            ids,
-            type_ids,
-            mask,
-            reply,
-        })?;
+            task: self.task_id(task)?,
+            mode: self.mode_id(mode)?,
+            staging,
+            done: Box::new(move |res| {
+                let _ = reply.send(res);
+            }),
+        })
+        .map_err(|_| anyhow!("engine thread gone"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
     }
 }
@@ -103,12 +161,36 @@ impl Drop for Engine {
     }
 }
 
+/// One launched-but-not-read-back batch (the pipeline register).
+struct InFlight {
+    pending: PendingOutputs,
+    done: Completion,
+    t0: Instant,
+    upload_us: u64,
+}
+
+/// Stage 3: synchronize, copy logits to host, and hand de-batching +
+/// reply dispatch to the worker pool.
+fn retire(rt: &Runtime, f: InFlight, pool: &ThreadPool) {
+    let res = rt.readback_logits(f.pending).map(|logits| InferDone {
+        logits,
+        exec_us: f.t0.elapsed().as_micros() as u64,
+        upload_us: f.upload_us,
+    });
+    let done = f.done;
+    pool.spawn(move || done(res));
+}
+
+#[allow(clippy::too_many_arguments)]
 fn engine_main(
     artifacts: PathBuf,
     preload: Vec<(String, String, Container)>,
     precompile: Vec<(String, usize)>,
     rx: Receiver<Msg>,
-    ready_tx: Sender<Result<()>>,
+    ready_tx: Sender<Result<(Vec<String>, Vec<String>)>>,
+    pool: Arc<ThreadPool>,
+    staging: Arc<StagingPool>,
+    options: EngineOptions,
 ) {
     let mut rt = match Manifest::load(&artifacts).and_then(Runtime::new) {
         Ok(rt) => rt,
@@ -117,32 +199,81 @@ fn engine_main(
             return;
         }
     };
-    let mut init = || -> Result<()> {
+    let mut init = || -> Result<(Vec<String>, Vec<String>)> {
         for (task, mode, ckpt) in &preload {
             rt.upload_checkpoint(task, mode, ckpt)?;
         }
         for (mode, bucket) in &precompile {
             rt.model_exe(mode, *bucket)?;
         }
-        Ok(())
+        Ok((rt.manifest.task_order.clone(), rt.manifest.mode_order.clone()))
     };
     if ready_tx.send(init()).is_err() {
         return;
     }
 
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Msg::Stop => break,
-            Msg::Infer(job) => {
-                let t0 = Instant::now();
-                let res = rt
-                    .infer(&job.task, &job.mode, job.bucket, &job.ids, &job.type_ids, &job.mask)
-                    .map(|logits| InferDone {
-                        logits,
-                        exec_us: t0.elapsed().as_micros() as u64,
-                    });
-                let _ = job.reply.send(res);
+    let mut inflight: Option<InFlight> = None;
+    loop {
+        // With a batch executing, prefer new work (to keep the device fed)
+        // but retire the head batch as soon as the queue runs dry.
+        let msg = if inflight.is_some() {
+            match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(TryRecvError::Empty) => {
+                    if let Some(f) = inflight.take() {
+                        retire(&rt, f, &pool);
+                    }
+                    rx.recv().ok()
+                }
+                Err(TryRecvError::Disconnected) => None,
+            }
+        } else {
+            rx.recv().ok()
+        };
+        let job = match msg {
+            Some(Msg::Infer(job)) => *job,
+            Some(Msg::Stop) | None => break,
+        };
+
+        let InferJob { task, mode, staging: host, done } = job;
+        let t0 = Instant::now();
+        // Stage 1: upload this batch's inputs (overlaps the previous
+        // batch's device execution), then recycle the host buffers.
+        let uploaded = rt.upload_inputs(host.bucket, &host.ids, &host.type_ids, &host.mask);
+        let upload_us = t0.elapsed().as_micros() as u64;
+        staging.put(host);
+        let inputs = match uploaded {
+            Ok(i) => i,
+            Err(e) => {
+                if let Some(f) = inflight.take() {
+                    retire(&rt, f, &pool);
+                }
+                pool.spawn(move || done(Err(e)));
+                continue;
+            }
+        };
+        // Stage 2: launch this batch.
+        let launched = rt.execute_model(task, mode, &inputs);
+        // Stage 3 for the previous batch: its readback now overlaps this
+        // batch's execution.
+        if let Some(f) = inflight.take() {
+            retire(&rt, f, &pool);
+        }
+        match launched {
+            Ok(pending) => {
+                let f = InFlight { pending, done, t0, upload_us };
+                if options.overlap {
+                    inflight = Some(f);
+                } else {
+                    retire(&rt, f, &pool);
+                }
+            }
+            Err(e) => {
+                pool.spawn(move || done(Err(e)));
             }
         }
+    }
+    if let Some(f) = inflight.take() {
+        retire(&rt, f, &pool);
     }
 }

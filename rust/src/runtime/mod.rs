@@ -7,8 +7,16 @@
 //! wraps it in a dedicated engine thread (`engine.rs`) and talks to it over
 //! channels, the same shape as a GPU-executor thread in a production
 //! server.
+//!
+//! Hot-path tables are dense: executables live in a
+//! `[mode][bucket]`-indexed `Vec` and checkpoints in `[task][mode]`, both
+//! sized from the manifest, so steady-state dispatch is two array indexes
+//! — no string hashing, no `HashMap` probes (DESIGN.md §5.2).  The
+//! string-keyed methods remain as cold-path wrappers that resolve names to
+//! `TaskId`/`ModeId` once.
 
 pub mod engine;
+pub mod staging;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -16,7 +24,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::manifest::Manifest;
+use crate::model::manifest::{Manifest, ModeId, TaskId};
 use crate::model::tensor::{DType, Tensor};
 use crate::model::Container;
 
@@ -39,15 +47,30 @@ pub struct DeviceCheckpoint {
     pub nbytes: usize,
 }
 
+/// Device-resident input buffers for one batch (stage 1 of the pipeline).
+pub struct InputBufs {
+    pub bucket: usize,
+    ids: xla::PjRtBuffer,
+    type_ids: xla::PjRtBuffer,
+    mask: xla::PjRtBuffer,
+}
+
+/// In-flight execution: device output buffers that have been launched but
+/// not read back (stage 2 of the pipeline).  Holding one of these while
+/// uploading/launching the next batch is what overlaps the stages.
+pub struct PendingOutputs {
+    results: Vec<Vec<xla::PjRtBuffer>>,
+}
+
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    /// (mode, bucket) -> compiled model executable.
-    exes: HashMap<(String, usize), Exe>,
+    /// `[mode][bucket_index]` -> compiled model executable.
+    exes: Vec<Vec<Option<Exe>>>,
     /// misc executables (calibration artifact, micro benches) by path.
     raw_exes: HashMap<String, Exe>,
-    /// (task, mode) -> device-resident weights.
-    ckpts: HashMap<(String, String), DeviceCheckpoint>,
+    /// `[task][mode]` -> device-resident weights.
+    ckpts: Vec<Vec<Option<DeviceCheckpoint>>>,
 }
 
 #[allow(dead_code)]
@@ -62,13 +85,13 @@ fn elem_type(dt: DType) -> xla::ElementType {
 impl Runtime {
     pub fn new(manifest: Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
-        Ok(Runtime {
-            client,
-            manifest,
-            exes: HashMap::new(),
-            raw_exes: HashMap::new(),
-            ckpts: HashMap::new(),
-        })
+        let exes = (0..manifest.num_modes())
+            .map(|_| (0..manifest.num_buckets()).map(|_| None).collect())
+            .collect();
+        let ckpts = (0..manifest.num_tasks())
+            .map(|_| (0..manifest.num_modes()).map(|_| None).collect())
+            .collect();
+        Ok(Runtime { client, manifest, exes, raw_exes: HashMap::new(), ckpts })
     }
 
     // ---------------------------------------------------------------- load
@@ -94,17 +117,24 @@ impl Runtime {
 
     /// Compile (and cache) the model executable for (mode, bucket).
     pub fn model_exe(&mut self, mode: &str, bucket: usize) -> Result<&Exe> {
-        let key = (mode.to_string(), bucket);
-        if !self.exes.contains_key(&key) {
-            let spec = self.manifest.mode(mode)?;
-            let rel = spec
-                .artifacts
-                .get(&bucket)
-                .with_context(|| format!("mode {mode} has no bucket {bucket}"))?;
+        let mode = self.manifest.mode_id(mode)?;
+        self.model_exe_id(mode, bucket)
+    }
+
+    /// Dense hot-path variant: the executable slot is a `Vec` index.
+    pub fn model_exe_id(&mut self, mode: ModeId, bucket: usize) -> Result<&Exe> {
+        let bi = self.manifest.bucket_index(bucket).with_context(|| {
+            format!("mode {} has no bucket {bucket}", self.manifest.mode_name(mode))
+        })?;
+        if self.exes[mode.index()][bi].is_none() {
+            let spec = self.manifest.mode_by_id(mode);
+            let rel = spec.artifacts.get(&bucket).with_context(|| {
+                format!("mode {} has no bucket {bucket}", self.manifest.mode_name(mode))
+            })?;
             let exe = Self::compile_hlo_file(&self.client, &self.manifest.path(rel))?;
-            self.exes.insert(key.clone(), exe);
+            self.exes[mode.index()][bi] = Some(exe);
         }
-        Ok(&self.exes[&key])
+        Ok(self.exes[mode.index()][bi].as_ref().expect("just compiled"))
     }
 
     /// Compile (and cache) an arbitrary artifact by manifest-relative path.
@@ -141,23 +171,38 @@ impl Runtime {
     /// Upload a checkpoint once; later executions reference the resident
     /// buffers (the per-request upload is only ids+mask — DESIGN.md §5.1).
     pub fn upload_checkpoint(&mut self, task: &str, mode: &str, ckpt: &Container) -> Result<()> {
+        let task = self.manifest.task_id(task)?;
+        let mode = self.manifest.mode_id(mode)?;
+        self.upload_checkpoint_id(task, mode, ckpt)
+    }
+
+    pub fn upload_checkpoint_id(
+        &mut self,
+        task: TaskId,
+        mode: ModeId,
+        ckpt: &Container,
+    ) -> Result<()> {
         let mut bufs = Vec::with_capacity(ckpt.len());
         let mut nbytes = 0;
         for (_, t) in &ckpt.entries {
             bufs.push(self.upload_tensor(t)?);
             nbytes += t.nbytes();
         }
-        self.ckpts
-            .insert((task.to_string(), mode.to_string()), DeviceCheckpoint { bufs, nbytes });
+        self.ckpts[task.index()][mode.index()] = Some(DeviceCheckpoint { bufs, nbytes });
         Ok(())
     }
 
     pub fn has_checkpoint(&self, task: &str, mode: &str) -> bool {
-        self.ckpts.contains_key(&(task.to_string(), mode.to_string()))
+        match (self.manifest.task_id(task), self.manifest.mode_id(mode)) {
+            (Ok(t), Ok(m)) => self.ckpts[t.index()][m.index()].is_some(),
+            _ => false,
+        }
     }
 
     pub fn checkpoint_nbytes(&self, task: &str, mode: &str) -> Option<usize> {
-        self.ckpts.get(&(task.to_string(), mode.to_string())).map(|c| c.nbytes)
+        let t = self.manifest.task_id(task).ok()?;
+        let m = self.manifest.mode_id(mode).ok()?;
+        self.ckpts[t.index()][m.index()].as_ref().map(|c| c.nbytes)
     }
 
     // ------------------------------------------------------------- execute
@@ -194,8 +239,80 @@ impl Runtime {
         Ok(Outputs { tensors })
     }
 
+    // ---- pipelined hot path (engine thread): upload | execute | readback
+
+    /// Stage 1: copy one batch's host arrays into fresh device buffers.
+    /// Only `&self` — it can run while a previous batch's outputs are
+    /// still pending on the device.
+    pub fn upload_inputs(
+        &self,
+        bucket: usize,
+        ids: &[i32],
+        type_ids: &[i32],
+        mask: &[f32],
+    ) -> Result<InputBufs> {
+        let seq = self.manifest.seq;
+        if ids.len() != bucket * seq {
+            bail!("ids len {} != bucket {bucket} * seq {seq}", ids.len());
+        }
+        if type_ids.len() != bucket * seq || mask.len() != bucket * seq {
+            bail!("type_ids/mask length mismatch for bucket {bucket} * seq {seq}");
+        }
+        let up = |e: xla::Error| anyhow::anyhow!("{e}");
+        Ok(InputBufs {
+            bucket,
+            ids: self.client.buffer_from_host_buffer(ids, &[bucket, seq], None).map_err(up)?,
+            type_ids: self
+                .client
+                .buffer_from_host_buffer(type_ids, &[bucket, seq], None)
+                .map_err(up)?,
+            mask: self.client.buffer_from_host_buffer(mask, &[bucket, seq], None).map_err(up)?,
+        })
+    }
+
+    /// Stage 2: launch the executable against resident weights + uploaded
+    /// inputs.  Returns without waiting for a host copy; the caller holds
+    /// the `PendingOutputs` while staging the next batch.
+    pub fn execute_model(
+        &mut self,
+        task: TaskId,
+        mode: ModeId,
+        inputs: &InputBufs,
+    ) -> Result<PendingOutputs> {
+        let bucket = inputs.bucket;
+        self.model_exe_id(mode, bucket)?; // ensure compiled before borrowing ckpt
+        let ckpt = self.ckpts[task.index()][mode.index()].as_ref().with_context(|| {
+            format!(
+                "checkpoint ({},{}) not uploaded",
+                self.manifest.task_name(task),
+                self.manifest.mode_name(mode)
+            )
+        })?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = ckpt.bufs.iter().collect();
+        args.push(&inputs.ids);
+        args.push(&inputs.type_ids);
+        args.push(&inputs.mask);
+
+        let bi = self.manifest.bucket_index(bucket)?;
+        let exe = self.exes[mode.index()][bi].as_ref().expect("compiled above");
+        let results = exe.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        Ok(PendingOutputs { results })
+    }
+
+    /// Stage 3: synchronize + copy the logits back to the host.
+    pub fn readback_logits(&self, pending: PendingOutputs) -> Result<Tensor> {
+        let mut outputs = Self::read_outputs(pending.results)?;
+        if outputs.tensors.len() != 1 {
+            bail!("model artifact returned {} outputs, expected 1", outputs.tensors.len());
+        }
+        Ok(outputs.tensors.remove(0))
+    }
+
     /// Run a model executable with resident weights + fresh input buffers.
-    /// `ids`/`type_ids` are `[bucket * seq]` i32, `mask` `[bucket * seq]` f32.
+    /// `ids`/`type_ids` are `[bucket * seq]` i32, `mask` `[bucket * seq]`
+    /// f32.  Cold-path convenience: resolves names, then runs the three
+    /// pipeline stages back-to-back.
     pub fn infer(
         &mut self,
         task: &str,
@@ -205,35 +322,23 @@ impl Runtime {
         type_ids: &[i32],
         mask: &[f32],
     ) -> Result<Tensor> {
-        let seq = self.manifest.seq;
-        if ids.len() != bucket * seq {
-            bail!("ids len {} != bucket {bucket} * seq {seq}", ids.len());
-        }
-        self.model_exe(mode, bucket)?; // ensure compiled before borrowing ckpt
-        let ckpt = self
-            .ckpts
-            .get(&(task.to_string(), mode.to_string()))
-            .with_context(|| format!("checkpoint ({task},{mode}) not uploaded"))?;
+        let task = self.manifest.task_id(task)?;
+        let mode = self.manifest.mode_id(mode)?;
+        self.infer_ids(task, mode, bucket, ids, type_ids, mask)
+    }
 
-        let up = |e: xla::Error| anyhow::anyhow!("{e}");
-        let ids_b = self.client.buffer_from_host_buffer(ids, &[bucket, seq], None).map_err(up)?;
-        let ty_b =
-            self.client.buffer_from_host_buffer(type_ids, &[bucket, seq], None).map_err(up)?;
-        let mask_b =
-            self.client.buffer_from_host_buffer(mask, &[bucket, seq], None).map_err(up)?;
-
-        let mut args: Vec<&xla::PjRtBuffer> = ckpt.bufs.iter().collect();
-        args.push(&ids_b);
-        args.push(&ty_b);
-        args.push(&mask_b);
-
-        let exe = &self.exes[&(mode.to_string(), bucket)];
-        let out = exe.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
-        let mut outputs = Self::read_outputs(out)?;
-        if outputs.tensors.len() != 1 {
-            bail!("model artifact returned {} outputs, expected 1", outputs.tensors.len());
-        }
-        Ok(outputs.tensors.remove(0))
+    pub fn infer_ids(
+        &mut self,
+        task: TaskId,
+        mode: ModeId,
+        bucket: usize,
+        ids: &[i32],
+        type_ids: &[i32],
+        mask: &[f32],
+    ) -> Result<Tensor> {
+        let inputs = self.upload_inputs(bucket, ids, type_ids, mask)?;
+        let pending = self.execute_model(task, mode, &inputs)?;
+        self.readback_logits(pending)
     }
 
     /// Run the calibration-instrumented artifact for one batch; returns
@@ -294,6 +399,8 @@ impl Runtime {
     }
 
     pub fn loaded_exe_count(&self) -> usize {
-        self.exes.len() + self.raw_exes.len()
+        let model: usize =
+            self.exes.iter().map(|row| row.iter().filter(|e| e.is_some()).count()).sum();
+        model + self.raw_exes.len()
     }
 }

@@ -1,0 +1,182 @@
+//! Pooled host staging buffers for batch assembly (DESIGN.md §5.3).
+//!
+//! Every admitted batch needs three host arrays — `ids`, `type_ids`,
+//! `mask`, each `[bucket * seq]` — that exist only long enough to be
+//! copied into device buffers.  Allocating them per batch puts the
+//! allocator on the steady-state path; instead the batcher thread checks
+//! a `StagingBuf` out of a per-bucket shelf, fills it in place, and the
+//! engine thread returns it to the shelf right after the host→device
+//! upload.  Shelves are bounded so a burst cannot pin unbounded memory:
+//! overflow buffers are simply dropped and the shelf refills on demand.
+
+use std::sync::Mutex;
+
+use crate::data::PAD;
+
+/// One reusable host-side batch: `bucket * seq` token ids / type ids and
+/// the derived attention mask.  `real` tracks how many rows were filled
+/// before padding.
+#[derive(Debug)]
+pub struct StagingBuf {
+    pub bucket: usize,
+    pub seq: usize,
+    pub real: usize,
+    pub ids: Vec<i32>,
+    pub type_ids: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl StagingBuf {
+    pub fn new(bucket: usize, seq: usize) -> Self {
+        StagingBuf {
+            bucket,
+            seq,
+            real: 0,
+            ids: Vec::with_capacity(bucket * seq),
+            type_ids: Vec::with_capacity(bucket * seq),
+            mask: Vec::with_capacity(bucket * seq),
+        }
+    }
+
+    /// Wrap caller-owned arrays (blocking/CLI path, no pool involved).
+    /// `mask` is recomputed to keep one definition of padding semantics.
+    pub fn from_parts(bucket: usize, seq: usize, ids: Vec<i32>, type_ids: Vec<i32>) -> Self {
+        let real = bucket;
+        let mut buf = StagingBuf { bucket, seq, real, ids, type_ids, mask: Vec::new() };
+        buf.ids.resize(bucket * seq, PAD);
+        buf.type_ids.resize(bucket * seq, 0);
+        buf.mask = buf.ids.iter().map(|t| if *t == PAD { 0.0 } else { 1.0 }).collect();
+        buf
+    }
+
+    /// Clear contents, keeping capacity (called on checkout).
+    fn reset(&mut self, bucket: usize, seq: usize) {
+        self.bucket = bucket;
+        self.seq = seq;
+        self.real = 0;
+        self.ids.clear();
+        self.type_ids.clear();
+        self.mask.clear();
+    }
+
+    /// Append one request row (`seq` tokens each).
+    pub fn push_row(&mut self, ids: &[i32], type_ids: &[i32]) {
+        debug_assert_eq!(ids.len(), self.seq);
+        debug_assert_eq!(type_ids.len(), self.seq);
+        self.ids.extend_from_slice(ids);
+        self.type_ids.extend_from_slice(type_ids);
+        self.real += 1;
+    }
+
+    /// Pad to the bucket and derive the attention mask in one pass.
+    pub fn finish(&mut self) {
+        let n = self.bucket * self.seq;
+        self.ids.resize(n, PAD);
+        self.type_ids.resize(n, 0);
+        self.mask.clear();
+        self.mask.extend(self.ids.iter().map(|t| if *t == PAD { 0.0 } else { 1.0 }));
+    }
+}
+
+/// Bounded per-bucket free lists of `StagingBuf`s, shared between the
+/// batcher thread (checkout + fill) and the engine thread (return after
+/// upload).  Lock scope is a `Vec` push/pop — nanoseconds next to the
+/// memcpy the buffer exists for.
+pub struct StagingPool {
+    buckets: Vec<usize>,
+    seq: usize,
+    per_bucket_cap: usize,
+    shelves: Vec<Mutex<Vec<StagingBuf>>>,
+}
+
+impl StagingPool {
+    pub fn new(buckets: &[usize], seq: usize, per_bucket_cap: usize) -> Self {
+        StagingPool {
+            buckets: buckets.to_vec(),
+            seq,
+            per_bucket_cap: per_bucket_cap.max(1),
+            shelves: buckets.iter().map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    fn shelf_index(&self, bucket: usize) -> Option<usize> {
+        self.buckets.iter().position(|b| *b == bucket)
+    }
+
+    /// Check out a cleared buffer for `bucket`, reusing capacity when a
+    /// recycled one is on the shelf.
+    pub fn take(&self, bucket: usize) -> StagingBuf {
+        if let Some(i) = self.shelf_index(bucket) {
+            if let Some(mut buf) = self.shelves[i].lock().expect("staging shelf").pop() {
+                buf.reset(bucket, self.seq);
+                return buf;
+            }
+        }
+        StagingBuf::new(bucket, self.seq)
+    }
+
+    /// Return a buffer after upload; dropped silently when the shelf is
+    /// full or the bucket is foreign (blocking-path buffers).
+    pub fn put(&self, buf: StagingBuf) {
+        if let Some(i) = self.shelf_index(buf.bucket) {
+            let mut shelf = self.shelves[i].lock().expect("staging shelf");
+            if shelf.len() < self.per_bucket_cap {
+                shelf.push(buf);
+            }
+        }
+    }
+
+    /// Buffers currently resting on shelves (tests / introspection).
+    pub fn pooled(&self) -> usize {
+        self.shelves.iter().map(|s| s.lock().expect("staging shelf").len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_pads_and_masks() {
+        let mut b = StagingBuf::new(2, 4);
+        b.push_row(&[5, 6, 0, 0], &[0, 0, 0, 0]);
+        b.finish();
+        assert_eq!(b.real, 1);
+        assert_eq!(b.ids, vec![5, 6, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(b.type_ids.len(), 8);
+        assert_eq!(b.mask, vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pool_recycles_capacity() {
+        let pool = StagingPool::new(&[1, 4], 4, 2);
+        let mut a = pool.take(4);
+        a.push_row(&[1, 2, 3, 4], &[0; 4]);
+        a.finish();
+        let cap_before = a.ids.capacity();
+        pool.put(a);
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.take(4);
+        assert_eq!(pool.pooled(), 0);
+        assert_eq!(b.real, 0);
+        assert!(b.ids.is_empty());
+        assert!(b.ids.capacity() >= cap_before.min(16));
+    }
+
+    #[test]
+    fn pool_bounds_and_tolerates_foreign_buckets() {
+        let pool = StagingPool::new(&[2], 2, 1);
+        pool.put(StagingBuf::new(2, 2));
+        pool.put(StagingBuf::new(2, 2)); // over cap: dropped
+        assert_eq!(pool.pooled(), 1);
+        pool.put(StagingBuf::new(7, 2)); // unknown bucket: dropped
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn from_parts_matches_fill_semantics() {
+        let b = StagingBuf::from_parts(2, 3, vec![9, 0, 9], vec![1, 1, 1]);
+        assert_eq!(b.ids, vec![9, 0, 9, 0, 0, 0]);
+        assert_eq!(b.mask, vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+}

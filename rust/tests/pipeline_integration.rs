@@ -1,0 +1,211 @@
+//! Pipelined-engine integration: mixed (task, mode, bucket) traffic
+//! through the overlapped upload/execute/readback stages, asserting
+//! per-request reply order (via the batch_seq FIFO witness), logit parity
+//! with the blocking pre-pipeline path, and panic isolation in the
+//! readback/completion stage.  Gated on `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use zqhero::coordinator::{Coordinator, Response, ServerConfig};
+use zqhero::data::Split;
+use zqhero::evalharness as eh;
+use zqhero::model::manifest::Manifest;
+use zqhero::runtime::Runtime;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("skipping pipeline tests: run `make artifacts` first");
+        None
+    }
+}
+
+/// Ensure the quantized checkpoint for (task, mode) exists on disk.
+fn ensure_quantized(dir: &Path, task: &str, mode: &str) {
+    let mut rt = Runtime::new(Manifest::load(dir).unwrap()).unwrap();
+    let spec = rt.manifest.task(task).unwrap().clone();
+    let rel = zqhero::coordinator::checkpoint_rel(&spec, mode);
+    if !rt.manifest.path(&rel).exists() {
+        let hist = eh::ensure_calibration(&mut rt, &spec, 4, false).unwrap();
+        eh::quantize_task(&mut rt, &spec, mode, &hist, 100.0, None).unwrap();
+    }
+}
+
+fn config(pipeline: bool) -> ServerConfig {
+    ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        pipeline,
+        ..ServerConfig::default()
+    }
+}
+
+/// Flood mixed traffic; returns per-group (submit-order ids, responses).
+fn flood(
+    coord: &Coordinator,
+    routes: &[(&str, &str)],
+    payload: &[(Vec<i32>, Vec<i32>)],
+    per_route: usize,
+) -> Vec<Vec<Response>> {
+    // interleave with varying burst sizes so batches land in different
+    // buckets: 1, 2, 5, 1, 2, 5, ...
+    let bursts = [1usize, 2, 5];
+    let mut rxs: Vec<Vec<std::sync::mpsc::Receiver<Response>>> =
+        routes.iter().map(|_| Vec::new()).collect();
+    let mut sent = vec![0usize; routes.len()];
+    let mut b = 0;
+    while sent.iter().any(|s| *s < per_route) {
+        for (gi, &(task, mode)) in routes.iter().enumerate() {
+            let burst = bursts[b % bursts.len()].min(per_route - sent[gi]);
+            for _ in 0..burst {
+                let (ids, tys) = payload[sent[gi] % payload.len()].clone();
+                let rx = coord.submit(task, mode, ids, tys).expect("admitted");
+                rxs[gi].push(rx);
+                sent[gi] += 1;
+            }
+        }
+        b += 1;
+        // small gap so the batcher's max_wait can slice bursts into
+        // different batch sizes
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    rxs.into_iter()
+        .map(|group| {
+            group
+                .into_iter()
+                .map(|rx| rx.recv_timeout(Duration::from_secs(120)).expect("reply"))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn pipelined_mixed_traffic_fifo_and_parity() {
+    let Some(dir) = artifacts() else { return };
+    ensure_quantized(&dir, "sst2", "m3");
+
+    let routes = [("cola", "fp"), ("sst2", "fp"), ("sst2", "m3")];
+    let pairs: Vec<(String, String)> =
+        routes.iter().map(|(t, m)| (t.to_string(), m.to_string())).collect();
+
+    let man = Manifest::load(&dir).unwrap();
+    let split = Split::load(&man, man.task("cola").unwrap(), "dev").unwrap();
+    let n_rows = 24.min(split.len());
+    let payload: Vec<(Vec<i32>, Vec<i32>)> = (0..n_rows)
+        .map(|i| {
+            let (a, b) = split.row(i);
+            (a.to_vec(), b.to_vec())
+        })
+        .collect();
+
+    let per_route = 30;
+    let piped = {
+        let coord = Coordinator::start(dir.clone(), &pairs, config(true)).unwrap();
+        flood(&coord, &routes, &payload, per_route)
+    };
+
+    for (gi, group) in piped.iter().enumerate() {
+        assert_eq!(group.len(), per_route);
+        for resp in group {
+            assert!(resp.error.is_none(), "group {gi}: {:?}", resp.error);
+            assert_eq!(resp.logits.len(), man.model.num_labels);
+            assert!(resp.logits.iter().all(|x| x.is_finite()));
+            assert!(resp.timing.bucket >= resp.timing.batch_real);
+            assert!(resp.timing.batch_real >= 1 && resp.timing.batch_real <= 8);
+        }
+        // FIFO witness: within a group, submit order (request id order)
+        // must ride non-decreasing dispatch sequence numbers — the
+        // overlapped engine must not reorder batches of a group.
+        let mut by_id: Vec<(u64, u64)> =
+            group.iter().map(|r| (r.id, r.timing.batch_seq)).collect();
+        by_id.sort_unstable_by_key(|(id, _)| *id);
+        let seqs: Vec<u64> = by_id.iter().map(|(_, s)| *s).collect();
+        let mut sorted = seqs.clone();
+        sorted.sort_unstable();
+        assert_eq!(seqs, sorted, "group {gi}: replies out of batch order");
+    }
+
+    // numeric parity: the overlapped engine must match the blocking
+    // (pre-pipeline) engine loop exactly — same artifacts, same inputs.
+    let blocking = {
+        let coord = Coordinator::start(dir.clone(), &pairs, config(false)).unwrap();
+        flood(&coord, &routes, &payload, per_route)
+    };
+    for (gp, gb) in piped.iter().zip(&blocking) {
+        for (rp, rb) in gp.iter().zip(gb) {
+            for (a, b) in rp.logits.iter().zip(&rb.logits) {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "pipelined {a} vs blocking {b} (req {} / {})",
+                    rp.id,
+                    rb.id
+                );
+            }
+        }
+    }
+
+    // parity with direct single-row runtime inference (absolute truth)
+    let mut rt = Runtime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let cola = rt.manifest.task("cola").unwrap().clone();
+    eh::ensure_checkpoint(&mut rt, &cola, "fp", 4, 100.0).unwrap();
+    for i in 0..4 {
+        let (ids, tys) = split.row(i);
+        let mask = Split::mask_row(ids);
+        let direct = rt.infer("cola", "fp", 1, ids, tys, &mask).unwrap();
+        let dv = direct.as_f32().unwrap();
+        // group 0 is cola/fp; its i-th submission used payload row i
+        for (a, b) in piped[0][i].logits.iter().zip(dv) {
+            assert!((a - b).abs() < 1e-3, "req {i}: pipelined {a} vs direct {b}");
+        }
+    }
+}
+
+#[test]
+fn unknown_route_rejected_at_admission() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Coordinator::start(dir, &pairs, config(true)).unwrap();
+    let seq = coord.seq();
+    // manifest-unknown task and known-but-unloaded mode both fail fast,
+    // with an error that names the missing checkpoint
+    for (task, mode) in [("nope", "fp"), ("cola", "m3")] {
+        let err = coord.submit(task, mode, vec![1; seq], vec![0; seq]).unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "{err}");
+    }
+}
+
+#[test]
+fn readback_stage_panic_is_isolated() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Coordinator::start(
+        dir.clone(),
+        &pairs,
+        ServerConfig { fault_inject_batch: Some(0), ..config(true) },
+    )
+    .unwrap();
+
+    let man = Manifest::load(&dir).unwrap();
+    let split = Split::load(&man, man.task("cola").unwrap(), "dev").unwrap();
+    let (ids, tys) = split.row(0);
+
+    // batch 0's completion panics on the worker pool: its requests get a
+    // hangup, never a wrong answer
+    let rx = coord.submit("cola", "fp", ids.to_vec(), tys.to_vec()).unwrap();
+    match rx.recv_timeout(Duration::from_secs(120)) {
+        Err(_) => {} // reply sender dropped by the panicking completion
+        Ok(resp) => panic!("poisoned batch must not reply, got {resp:?}"),
+    }
+
+    // the engine thread and worker pool survive: subsequent traffic flows
+    for i in 0..10 {
+        let (ids, tys) = split.row(i % split.len());
+        let rx = coord.submit("cola", "fp", ids.to_vec(), tys.to_vec()).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.timing.batch_seq >= 1);
+    }
+}

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# CI gate for the rust L3 stack: build, tests, lints, formatting.
+#
+# Usage: scripts/ci.sh [--skip-clippy] [--skip-fmt]
+#
+# Integration tests and benches that need real artifacts self-skip when
+# `make artifacts` has not been run, so this script is safe on a bare
+# checkout.  Benches (e.g. `cargo run --release --bin e2e_serving` via
+# `benches/`) additionally emit BENCH_*.json trajectory files; those are
+# not part of the gate but should be committed when they change.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SKIP_CLIPPY=0
+SKIP_FMT=0
+for arg in "$@"; do
+    case "$arg" in
+        --skip-clippy) SKIP_CLIPPY=1 ;;
+        --skip-fmt) SKIP_FMT=1 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [ "$SKIP_CLIPPY" -eq 0 ]; then
+    echo "==> cargo clippy -- -D warnings"
+    cargo clippy -- -D warnings
+fi
+
+if [ "$SKIP_FMT" -eq 0 ]; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+fi
+
+echo "CI OK"
