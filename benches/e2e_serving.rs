@@ -5,17 +5,22 @@
 //! engine loop — latency percentiles + throughput, written to
 //! `BENCH_e2e_serving.json` so the perf trajectory is tracked PR over PR.
 //!
+//! A second sweep drives three precision *policies* through the typed
+//! `RequestSpec` surface (all-INT8, the paper-style FP attention-output
+//! fallback, all-FP) and writes per-policy p50/p99 to
+//! `BENCH_precision_policy.json`.
+//!
 //! Env: ZQH_REQUESTS (default 128), ZQH_TASK (default sst2).
 
 use std::collections::VecDeque;
 use std::time::Duration;
 
 use zqhero::bench::Table;
-use zqhero::coordinator::{Coordinator, ServerConfig};
+use zqhero::coordinator::{Coordinator, PolicyRef, RequestSpec, ServerConfig};
 use zqhero::data::Split;
 use zqhero::evalharness as eh;
 use zqhero::json::{self, Value};
-use zqhero::model::manifest::Manifest;
+use zqhero::model::manifest::{Manifest, PolicyDraft};
 use zqhero::runtime::Runtime;
 
 struct LoadResult {
@@ -29,7 +34,8 @@ struct LoadResult {
 fn run_load(
     coord: &Coordinator,
     task: &str,
-    mode: &str,
+    policy: &PolicyRef,
+    stats_key: &str,
     rows: &[(Vec<i32>, Vec<i32>)],
     requests: usize,
     concurrency: usize,
@@ -41,7 +47,11 @@ fn run_load(
     while done < requests {
         while submitted < requests && inflight.len() < concurrency {
             let (ids, tys) = rows[submitted % rows.len()].clone();
-            match coord.submit(task, mode, ids, tys) {
+            let spec = RequestSpec::task(task)
+                .policy_ref(policy.clone())
+                .ids(ids)
+                .type_ids(tys);
+            match coord.submit(spec) {
                 Ok(rx) => {
                     inflight.push_back(rx);
                     submitted += 1;
@@ -64,7 +74,7 @@ fn run_load(
         p50_ms: pick(0.50),
         p95_ms: pick(0.95),
         p99_ms: pick(0.99),
-        mean_batch: snap[mode].mean_batch_size(),
+        mean_batch: snap[stats_key].mean_batch_size(),
     }
 }
 
@@ -88,7 +98,7 @@ fn main() {
         let task = rt.manifest.task(&tname).unwrap().clone();
         let hist = eh::ensure_calibration(&mut rt, &task, 100, false).unwrap();
         for m in modes.iter().filter(|m| **m != "fp") {
-            let rel = zqhero::coordinator::checkpoint_rel(&task, m);
+            let rel = task.checkpoint_rel(m);
             if !rt.manifest.path(&rel).exists() {
                 eh::quantize_task(&mut rt, &task, m, &hist, 100.0, None).unwrap();
             }
@@ -127,7 +137,8 @@ fn main() {
         )
         .expect("coordinator");
         for m in modes {
-            let r = run_load(&coord, &tname, m, &rows, requests, CONCURRENCY);
+            let policy = PolicyRef::Named(m.to_string());
+            let r = run_load(&coord, &tname, &policy, m, &rows, requests, CONCURRENCY);
             t.row(vec![
                 m.to_string(),
                 engine_label.into(),
@@ -185,6 +196,88 @@ fn main() {
     match std::fs::write("BENCH_e2e_serving.json", &out) {
         Ok(()) => println!("\nwrote BENCH_e2e_serving.json (overall speedup {overall_speedup:.2}x)"),
         Err(e) => eprintln!("could not write BENCH_e2e_serving.json: {e}"),
+    }
+
+    // ---- precision-policy sweep: the typed RequestSpec surface end to
+    // end (inline policy -> PolicyId interning -> engine exec selection)
+    let policy_cfgs: Vec<(&str, PolicyDraft)> = vec![
+        ("all-int8", PolicyDraft::base("m3")),
+        (
+            // paper-style accuracy recovery: attention output stays FP;
+            // no artifact matches, the chain escalates to the nearest
+            // mode that is no more quantized than asked (m1)
+            "attn-out-fp",
+            PolicyDraft::base("m3")
+                .with_override("attn_output", "fp")
+                .with_fallback("m2")
+                .with_fallback("m1")
+                .with_fallback("fp"),
+        ),
+        ("all-fp", PolicyDraft::base("fp")),
+    ];
+    let exec_modes: Vec<String> = policy_cfgs
+        .iter()
+        .map(|(name, d)| {
+            let spec = man.resolve_policy(name, d).expect("policy resolves");
+            man.mode_name(spec.exec_mode).to_string()
+        })
+        .collect();
+    let pairs: Vec<(String, String)> =
+        exec_modes.iter().map(|m| (tname.clone(), m.clone())).collect();
+    let coord = Coordinator::start(
+        dir.clone(),
+        &pairs,
+        ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(4),
+            queue_cap: 512,
+            completion_workers: 4,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("policy coordinator");
+
+    println!("\nprecision-policy sweep on {tname}: {requests} requests per policy\n");
+    let mut pt = Table::new(&["policy", "exec mode", "thr req/s", "p50 ms", "p99 ms", "mean batch"]);
+    let mut policy_objs: Vec<(String, Value)> = Vec::new();
+    for ((name, draft), exec) in policy_cfgs.iter().zip(&exec_modes) {
+        // stats land on the interned policy slot: the identical manifest
+        // policy if one exists, else the exec mode's uniform slot
+        let interned = man.intern_inline_policy(draft).expect("interns");
+        let stats_key = man.policy_name(interned).to_string();
+        let policy = PolicyRef::Inline(draft.clone());
+        let r = run_load(&coord, &tname, &policy, &stats_key, &rows, requests, CONCURRENCY);
+        pt.row(vec![
+            name.to_string(),
+            exec.clone(),
+            format!("{:.1}", r.thr_rps),
+            format!("{:.1}", r.p50_ms),
+            format!("{:.1}", r.p99_ms),
+            format!("{:.2}", r.mean_batch),
+        ]);
+        policy_objs.push((
+            name.to_string(),
+            json::obj(vec![
+                ("exec_mode", json::s(exec)),
+                ("thr_rps", json::num(r.thr_rps)),
+                ("p50_ms", json::num(r.p50_ms)),
+                ("p99_ms", json::num(r.p99_ms)),
+                ("mean_batch", json::num(r.mean_batch)),
+            ]),
+        ));
+    }
+    pt.print();
+
+    let policy_report = json::obj(vec![
+        ("bench", json::s("precision_policy")),
+        ("task", json::s(&tname)),
+        ("requests_per_policy", json::num(requests as f64)),
+        ("concurrency", json::num(CONCURRENCY as f64)),
+        ("policies", Value::Object(policy_objs)),
+    ]);
+    match std::fs::write("BENCH_precision_policy.json", json::to_string_pretty(&policy_report)) {
+        Ok(()) => println!("\nwrote BENCH_precision_policy.json"),
+        Err(e) => eprintln!("could not write BENCH_precision_policy.json: {e}"),
     }
     println!("(CPU PJRT testbed; A100 projections in hw_perf_model)");
 }

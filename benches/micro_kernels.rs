@@ -97,7 +97,7 @@ fn main() {
     table.print();
 
     println!("\nFP vs quant pairs (CPU ratios; interpret-mode INT8 is not a");
-    println!("TPU/GPU perf proxy — see DESIGN.md §7 — but plumbing + shape hold):");
+    println!("TPU/GPU perf proxy — see DESIGN.md §8 — but plumbing + shape hold):");
     for (a, b) in [("ln_fp", "ln_quant"), ("gemm_fp", "gemm_int8"),
                    ("gemm_fp_ffn", "gemm_int8_ffn"), ("gelu_fp", "gelu_quant"),
                    ("attn_fp", "attn_int8")] {

@@ -19,7 +19,7 @@ fn main() {
 
     // batcher: push+flush throughput (interned route keys)
     {
-        use zqhero::model::manifest::{ModeId, TaskId};
+        use zqhero::model::manifest::{PolicyId, TaskId};
         let stats = bench(3, 200, || {
             let mut b = Batcher::new(16, Duration::from_millis(4));
             let t0 = Instant::now();
@@ -31,7 +31,7 @@ fn main() {
                     id: i,
                     key: zqhero::coordinator::GroupKey {
                         task: TaskId((i % 3) as u16),
-                        mode: ModeId((i % 2) as u16),
+                        policy: PolicyId((i % 2) as u16),
                     },
                     ids: Vec::new(),
                     type_ids: Vec::new(),

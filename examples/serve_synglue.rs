@@ -12,7 +12,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 use zqhero::bench::Table;
-use zqhero::coordinator::{Coordinator, ServerConfig};
+use zqhero::coordinator::{Coordinator, RequestSpec, ServerConfig};
 use zqhero::data::{Labels, Split};
 use zqhero::evalharness as eh;
 use zqhero::metrics;
@@ -33,7 +33,7 @@ fn main() -> Result<()> {
             let task = rt.manifest.task(t)?.clone();
             for m in MODES {
                 if m != "fp" {
-                    let rel = zqhero::coordinator::checkpoint_rel(&task, m);
+                    let rel = task.checkpoint_rel(m);
                     if !rt.manifest.path(&rel).exists() {
                         eprintln!("[prep] quantizing {t}/{m}...");
                         let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
@@ -83,7 +83,9 @@ fn main() -> Result<()> {
             while done < n {
                 while submitted < n && inflight.len() < 48 {
                     let (ids, tys) = split.row(submitted);
-                    match coord.submit(t, m, ids.to_vec(), tys.to_vec()) {
+                    let spec =
+                        RequestSpec::task(t).mode(m).ids(ids.to_vec()).type_ids(tys.to_vec());
+                    match coord.submit(spec) {
                         Ok(rx) => {
                             inflight.push_back((submitted, rx));
                             submitted += 1;

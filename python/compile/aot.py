@@ -283,8 +283,12 @@ def write_manifest(out, cfg, micro, train_metrics):
         tasks[task] = meta
         tasks[task]["checkpoint"] = f"checkpoints/{task}/fp32.bin"
         tasks[task]["train_dev_metrics"] = train_metrics.get(task)
+    from .config import POLICIES
     manifest = {
-        "format_version": 1,
+        # 2: adds the `policies` section (named precision policies); the
+        # rust loader treats the section as optional, so v1 readers of
+        # this file keep working.
+        "format_version": 2,
         "model": {
             "vocab_size": cfg.vocab_size, "hidden": cfg.hidden,
             "layers": cfg.layers, "heads": cfg.heads, "ffn": cfg.ffn,
@@ -295,6 +299,7 @@ def write_manifest(out, cfg, micro, train_metrics):
         "buckets": list(BUCKETS),
         "qmax": QMAX,
         "modes": modes,
+        "policies": POLICIES,
         "calib": {
             "artifact": f"calib/instrumented_b{CALIB_BATCH}.hlo.txt",
             "batch": CALIB_BATCH,

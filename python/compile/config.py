@@ -63,6 +63,27 @@ MODES = {
     "m3": QuantSwitches(embedding=True, qkv=True, attn=True, attn_output=True, fc1=True, fc2=True),
 }
 
+# Named precision policies shipped in the manifest `policies` section
+# (§3 mixed precision): base mode + ordered per-module-group overrides +
+# an accuracy-fallback escalation chain.  The rust coordinator validates
+# these against the mode table at load and serves them per request; the
+# uniform per-mode policies are implicit and need no entry here.
+POLICIES = {
+    # paper-style recovery: keep everything INT8 but run the attention
+    # output projection in full precision; no artifact matches that exact
+    # switch set, so the chain escalates to the nearest safe mode.
+    "attn-out-fp": {
+        "base": "m3",
+        "overrides": [["attn_output", "fp"]],
+        "fallback": ["m2", "m1", "fp"],
+    },
+    # M3 with FC2 recovered — lands exactly on the M2 artifact.
+    "fc2-fp": {
+        "base": "m3",
+        "overrides": [["fc2", "fp"]],
+    },
+}
+
 # Symmetric int8 range used everywhere except Softmax^quant output,
 # which is asymmetric (paper §2.2.2): softmax has no negative values, so the
 # full [-128, 127] range is used with a fixed zero point of -128.

@@ -24,6 +24,13 @@ impl std::fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 /// Option spec: name, takes_value, default, help.
+///
+/// Route-shaped options (`--mode`, `--task`, `--policy`) must keep
+/// `default: None` here: their defaults are derived from the loaded
+/// manifest at command time (first mode / task order), so a bad name
+/// fails with the manifest's known-name list (`Manifest::mode_id`
+/// message shape) instead of a hardcoded string silently drifting from
+/// the artifacts.
 pub struct OptSpec {
     pub name: &'static str,
     pub takes_value: bool,
@@ -174,9 +181,10 @@ mod tests {
                 name: "eval",
                 help: "run eval",
                 opts: vec![
-                    OptSpec { name: "mode", takes_value: true, default: Some("fp"), help: "" },
+                    // route flags carry no hardcoded default (manifest-derived)
+                    OptSpec { name: "mode", takes_value: true, default: None, help: "" },
                     OptSpec { name: "all", takes_value: false, default: None, help: "" },
-                    OptSpec { name: "pct", takes_value: true, default: None, help: "" },
+                    OptSpec { name: "pct", takes_value: true, default: Some("100"), help: "" },
                 ],
             }],
         }
@@ -189,7 +197,9 @@ mod tests {
     #[test]
     fn parses_defaults_and_flags() {
         let a = cli().parse(&sv(&["eval", "--all", "task1"])).unwrap();
-        assert_eq!(a.get("mode"), Some("fp"));
+        // route flags have no baked-in default; value flags keep theirs
+        assert_eq!(a.get("mode"), None);
+        assert_eq!(a.get("pct"), Some("100"));
         assert!(a.get_bool("all"));
         assert_eq!(a.positional, vec!["task1"]);
     }

@@ -1,4 +1,4 @@
-//! Dynamic batcher: groups requests by interned (task, mode), flushes a
+//! Dynamic batcher: groups requests by interned (task, policy), flushes a
 //! group when it reaches `max_batch` or its oldest request has waited
 //! `max_wait`.
 //!
@@ -9,7 +9,7 @@
 //!   * no request waits longer than `max_wait` once `tick` is called.
 //!
 //! Groups live in a flat `Vec` scanned linearly: the group count is the
-//! handful of admitted (task, mode) pairs, for which two-integer key
+//! handful of admitted (task, policy) routes, for which two-integer key
 //! compares beat hashing — and `push` allocates nothing once the group's
 //! deque has warmed up.
 
@@ -101,21 +101,21 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::manifest::{ModeId, TaskId};
+    use crate::model::manifest::{PolicyId, TaskId};
     use crate::prop::{forall, Rng};
     use std::sync::mpsc::channel;
 
-    fn key(task: u16, mode: u16) -> GroupKey {
-        GroupKey { task: TaskId(task), mode: ModeId(mode) }
+    fn key(task: u16, policy: u16) -> GroupKey {
+        GroupKey { task: TaskId(task), policy: PolicyId(policy) }
     }
 
-    fn req(id: u64, task: u16, mode: u16, at: Instant) -> Request {
+    fn req(id: u64, task: u16, policy: u16, at: Instant) -> Request {
         let (tx, _rx) = channel();
         // leak the receiver side: batcher tests never reply
         std::mem::forget(_rx);
         Request {
             id,
-            key: key(task, mode),
+            key: key(task, policy),
             ids: vec![],
             type_ids: vec![],
             enqueued: at,

@@ -1,6 +1,7 @@
-//! L3 coordinator: the paper's missing "end-to-end system" — request
-//! routing, dynamic batching, per-request precision modes, backpressure,
-//! and serving metrics over the PJRT engine thread.
+//! L3 coordinator: the paper's missing "end-to-end system" — typed
+//! request specs, dynamic batching, per-request precision *policies*
+//! (whole-model mode + per-module overrides + fallback escalation),
+//! backpressure, and serving metrics over the PJRT engine thread.
 
 pub mod batcher;
 pub mod net;
@@ -9,7 +10,7 @@ pub mod server;
 pub mod stats;
 
 pub use batcher::{Batch, Batcher};
-pub use request::{GroupKey, Request, Response, Timing};
-pub use server::{checkpoint_rel, Coordinator, ServerConfig};
+pub use request::{GroupKey, PolicyRef, Request, RequestSpec, Response, Timing};
+pub use server::{Coordinator, ServerConfig};
 pub use net::{NetClient, NetServer};
-pub use stats::{Histogram, Recorder};
+pub use stats::{Histogram, PolicyStats, Recorder};

@@ -1,11 +1,27 @@
 //! Network front-end: newline-delimited JSON over TCP, served by the
-//! coordinator (`repro serve --port N`).
+//! coordinator (`repro serve --port N`).  Two frame versions:
 //!
-//! Request  : {"task": "sst2", "mode": "m3", "ids": [...], "type_ids": [...]}
-//!            (`type_ids` optional — defaults to zeros; short `ids` are
-//!            padded to the model sequence length)
-//! Response : {"ok": true, "logits": [...], "queue_us": .., "exec_us": ..,
-//!             "bucket": ..} | {"ok": false, "error": "..."}
+//! v1 (compat shim — whole-model string mode, desugars to the mode's
+//! uniform policy):
+//!   {"task": "sst2", "mode": "m3", "ids": [...], "type_ids": [...]}
+//!   -> {"ok": true, "logits": [...], "queue_us": .., "exec_us": ..,
+//!       "bucket": ..} | {"ok": false, "error": "..."}
+//!
+//! v2 (typed precision policy, by name or inline spec):
+//!   {"v": 2, "task": "sst2", "policy": "attn-out-fp", "ids": [...]}
+//!   {"v": 2, "task": "sst2",
+//!    "policy": {"base": "m3", "overrides": [["attn_output", "fp"]],
+//!               "fallback": ["m2", "m1", "fp"]}, "ids": [...]}
+//!   -> v1 fields plus {"v": 2, "policy": <interned name>,
+//!      "mode": <executable mode>}
+//!
+//! In both versions `type_ids` is optional (zeros) and short `ids` are
+//! padded to the model sequence length.  A v2 frame with no `policy`
+//! routes through the manifest's first mode; a v1 frame must name its
+//! `mode` — the pre-v2 implicit "m3" fallback is gone, and an explicit
+//! error beats silently serving a different precision.  Mixing `mode`
+//! into a v2 frame (or `policy` into a v1 frame) is an error, not a
+//! guess.
 //!
 //! One OS thread per connection (requests within a connection pipeline
 //! through the dynamic batcher like any other); shutdown via the returned
@@ -16,10 +32,12 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::json::{self, Value};
+use crate::model::manifest::PolicyDraft;
 
+use super::request::{PolicyRef, RequestSpec};
 use super::server::Coordinator;
 
 pub struct NetServer {
@@ -100,6 +118,73 @@ fn ids_from(v: &Value, key: &str, seq: usize) -> Result<Option<Vec<i32>>> {
     }
 }
 
+/// Parse one wire frame into a typed spec plus the protocol version to
+/// answer with.  v1 frames (`mode`) desugar to uniform policies — the
+/// compatibility shim; v2 frames carry a `policy` by name or inline spec.
+pub fn parse_request(req: &Value, seq: usize) -> Result<(RequestSpec, u8)> {
+    let version = match req.get("v") {
+        None => {
+            // versionless: infer from the route field, defaulting to v1
+            if req.get("policy").is_some() {
+                2
+            } else {
+                1
+            }
+        }
+        Some(v) => match v.as_usize().context("\"v\" not a number")? {
+            1 => 1,
+            2 => 2,
+            other => bail!("unsupported protocol version {other} (supported: 1, 2)"),
+        },
+    };
+    let task = req.get("task").and_then(Value::as_str).unwrap_or_default().to_string();
+    let policy = if version == 1 {
+        anyhow::ensure!(
+            req.get("policy").is_none(),
+            "\"policy\" requires a v2 frame (set \"v\": 2)"
+        );
+        // the old implicit "m3" default is gone: silently serving a
+        // different precision than the client assumed is worse than an
+        // error that names the fix
+        let mode = req
+            .get("mode")
+            .context("v1 frame missing \"mode\" (name a mode, or send a v2 policy frame)")?;
+        Some(PolicyRef::Named(mode.as_str().context("mode not a string")?.to_string()))
+    } else {
+        anyhow::ensure!(req.get("mode").is_none(), "v2 frames use \"policy\", not \"mode\"");
+        match req.get("policy") {
+            None => None,
+            Some(Value::String(name)) => Some(PolicyRef::Named(name.clone())),
+            Some(obj @ Value::Object(_)) => Some(PolicyRef::Inline(
+                PolicyDraft::from_json(obj).context("inline policy spec")?,
+            )),
+            Some(_) => bail!("policy must be a name or an inline spec object"),
+        }
+    };
+    let ids = ids_from(req, "ids", seq)?.context("missing ids")?;
+    let type_ids = ids_from(req, "type_ids", seq)?;
+    Ok((RequestSpec { task, policy, ids, type_ids }, version))
+}
+
+/// Serialize a typed spec as a v2 wire frame (the client side of
+/// `parse_request`; `NetClient::request` still emits bare v1 frames).
+pub fn request_to_json(spec: &RequestSpec) -> Value {
+    let mut pairs = vec![
+        ("v", json::num(2.0)),
+        ("task", Value::String(spec.task.clone())),
+    ];
+    match &spec.policy {
+        None => {}
+        Some(PolicyRef::Named(name)) => pairs.push(("policy", Value::String(name.clone()))),
+        Some(PolicyRef::Inline(draft)) => pairs.push(("policy", draft.to_json())),
+    }
+    pairs.push(("ids", Value::Array(spec.ids.iter().map(|x| json::num(*x as f64)).collect())));
+    if let Some(tys) = &spec.type_ids {
+        pairs.push(("type_ids", Value::Array(tys.iter().map(|x| json::num(*x as f64)).collect())));
+    }
+    json::obj(pairs)
+}
+
 fn process_line(line: &str, coord: &Coordinator) -> Value {
     let fail = |msg: String| {
         json::obj(vec![("ok", Value::Bool(false)), ("error", Value::String(msg))])
@@ -108,22 +193,13 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
         Ok(v) => v,
         Err(e) => return fail(format!("bad json: {e}")),
     };
-    let seq = coord.seq();
-    // borrow straight out of the parsed value: route strings die here —
-    // admission interns them to TaskId/ModeId (DESIGN.md §5.2)
-    let task = req.get("task").and_then(Value::as_str).unwrap_or_default();
-    let mode = req.get("mode").and_then(Value::as_str).unwrap_or("m3");
-    let ids = match ids_from(&req, "ids", seq) {
-        Ok(Some(v)) => v,
-        Ok(None) => return fail("missing ids".into()),
-        Err(e) => return fail(e.to_string()),
+    // route strings die here — admission interns them to TaskId/PolicyId
+    // (DESIGN.md §5.2, §6.3)
+    let (spec, version) = match parse_request(&req, coord.seq()) {
+        Ok(x) => x,
+        Err(e) => return fail(format!("{e:#}")),
     };
-    let type_ids = match ids_from(&req, "type_ids", seq) {
-        Ok(Some(v)) => v,
-        Ok(None) => vec![0; seq],
-        Err(e) => return fail(e.to_string()),
-    };
-    let rx = match coord.submit(task, mode, ids, type_ids) {
+    let rx = match coord.submit(spec) {
         Ok(rx) => rx,
         Err(e) => return fail(e.to_string()),
     };
@@ -131,14 +207,29 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
         Err(_) => fail("coordinator dropped request".into()),
         Ok(resp) => match resp.error {
             Some(e) => fail(e),
-            None => json::obj(vec![
-                ("ok", Value::Bool(true)),
-                ("logits", json::arr_f32(&resp.logits)),
-                ("queue_us", json::num(resp.timing.queue_us as f64)),
-                ("exec_us", json::num(resp.timing.exec_us as f64)),
-                ("bucket", json::num(resp.timing.bucket as f64)),
-                ("batch", json::num(resp.timing.batch_real as f64)),
-            ]),
+            None => {
+                let mut pairs = vec![
+                    ("ok", Value::Bool(true)),
+                    ("logits", json::arr_f32(&resp.logits)),
+                    ("queue_us", json::num(resp.timing.queue_us as f64)),
+                    ("exec_us", json::num(resp.timing.exec_us as f64)),
+                    ("bucket", json::num(resp.timing.bucket as f64)),
+                    ("batch", json::num(resp.timing.batch_real as f64)),
+                ];
+                if version >= 2 {
+                    // admission already interned the policy; map the id
+                    // back to names without re-resolving
+                    let man = coord.manifest();
+                    pairs.push(("v", json::num(version as f64)));
+                    pairs.push((
+                        "policy",
+                        Value::String(man.policy_name(resp.policy).to_string()),
+                    ));
+                    let exec = man.policy_by_id(resp.policy).exec_mode;
+                    pairs.push(("mode", Value::String(man.mode_name(exec).to_string())));
+                }
+                json::obj(pairs)
+            }
         },
     }
 }
@@ -183,26 +274,42 @@ fn handle_conn(
     Ok(())
 }
 
-/// Minimal blocking client for examples/tests.
+/// Minimal blocking client for examples/tests.  The versioned surface:
+/// `request` emits legacy v1 string-mode frames (the shim keeps old
+/// clients working), `request_spec` emits v2 typed-policy frames.
 pub struct NetClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
 impl NetClient {
+    /// Highest protocol version this client speaks (`request_spec`).
+    pub const PROTOCOL: u8 = 2;
+
     pub fn connect(addr: &std::net::SocketAddr) -> Result<NetClient> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
         Ok(NetClient { reader: BufReader::new(stream), writer })
     }
 
+    /// Legacy v1 frame: whole-model mode by name (server desugars it to
+    /// the mode's uniform policy).
     pub fn request(&mut self, task: &str, mode: &str, ids: &[i32]) -> Result<Value> {
         let req = json::obj(vec![
             ("task", Value::String(task.into())),
             ("mode", Value::String(mode.into())),
             ("ids", Value::Array(ids.iter().map(|x| json::num(*x as f64)).collect())),
         ]);
-        self.writer.write_all(json::to_string(&req).as_bytes())?;
+        self.round_trip(&req)
+    }
+
+    /// v2 frame: typed request spec with a policy by name or inline.
+    pub fn request_spec(&mut self, spec: &RequestSpec) -> Result<Value> {
+        self.round_trip(&request_to_json(spec))
+    }
+
+    fn round_trip(&mut self, req: &Value) -> Result<Value> {
+        self.writer.write_all(json::to_string(req).as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut line = String::new();
@@ -223,5 +330,90 @@ mod tests {
         let too_long = json::parse(r#"{"ids": [1,2,3,4,5,6,7]}"#).unwrap();
         assert!(ids_from(&too_long, "ids", 6).is_err());
         assert!(ids_from(&v, "type_ids", 6).unwrap().is_none());
+    }
+
+    #[test]
+    fn v1_shim_desugars_to_uniform_policy() {
+        let v = json::parse(r#"{"task": "sst2", "mode": "m3", "ids": [1, 2]}"#).unwrap();
+        let (spec, version) = parse_request(&v, 4).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(spec.task, "sst2");
+        assert_eq!(spec.policy, Some(PolicyRef::Named("m3".into())));
+        assert_eq!(spec.ids, vec![1, 2, 0, 0]);
+        assert!(spec.type_ids.is_none());
+
+        // a v1 frame with no mode is an error (no silent precision guess)
+        let v = json::parse(r#"{"task": "sst2", "ids": [1]}"#).unwrap();
+        let err = format!("{:#}", parse_request(&v, 4).unwrap_err());
+        assert!(err.contains("missing \"mode\""), "{err}");
+
+        // a v2 frame may omit the policy: default route, explicit version
+        let v = json::parse(r#"{"v": 2, "task": "sst2", "ids": [1]}"#).unwrap();
+        let (spec, version) = parse_request(&v, 4).unwrap();
+        assert_eq!(version, 2);
+        assert!(spec.policy.is_none());
+    }
+
+    #[test]
+    fn v2_named_and_inline_policy_frames() {
+        let v = json::parse(
+            r#"{"v": 2, "task": "sst2", "policy": "attn-out-fp", "ids": [1, 2]}"#,
+        )
+        .unwrap();
+        let (spec, version) = parse_request(&v, 4).unwrap();
+        assert_eq!(version, 2);
+        assert_eq!(spec.policy, Some(PolicyRef::Named("attn-out-fp".into())));
+
+        let v = json::parse(
+            r#"{"v": 2, "task": "sst2",
+                "policy": {"base": "m3", "overrides": [["attn_output", "fp"]],
+                           "fallback": ["m1", "fp"]},
+                "ids": [1], "type_ids": [0]}"#,
+        )
+        .unwrap();
+        let (spec, version) = parse_request(&v, 4).unwrap();
+        assert_eq!(version, 2);
+        let want = PolicyDraft::base("m3")
+            .with_override("attn_output", "fp")
+            .with_fallback("m1")
+            .with_fallback("fp");
+        assert_eq!(spec.policy, Some(PolicyRef::Inline(want)));
+        assert_eq!(spec.type_ids, Some(vec![0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn v1_to_v2_round_trip_through_serializer() {
+        // v1 frame -> spec -> v2 frame -> spec: same route, same payload
+        let v1 = json::parse(r#"{"task": "cola", "mode": "m1", "ids": [5, 6]}"#).unwrap();
+        let (spec1, ver1) = parse_request(&v1, 3).unwrap();
+        assert_eq!(ver1, 1);
+        let v2 = request_to_json(&spec1);
+        let (spec2, ver2) = parse_request(&v2, 3).unwrap();
+        assert_eq!(ver2, 2);
+        assert_eq!(spec2.task, spec1.task);
+        assert_eq!(spec2.policy, spec1.policy);
+        assert_eq!(spec2.ids, spec1.ids);
+    }
+
+    #[test]
+    fn frame_version_errors() {
+        let seq = 4;
+        let bad_ver = json::parse(r#"{"v": 3, "task": "t", "mode": "fp", "ids": [1]}"#).unwrap();
+        let err = parse_request(&bad_ver, seq).unwrap_err().to_string();
+        assert!(err.contains("unsupported protocol version 3"), "{err}");
+
+        // mixing route fields across versions is an error, not a guess
+        let v1_policy =
+            json::parse(r#"{"v": 1, "task": "t", "policy": "p", "ids": [1]}"#).unwrap();
+        assert!(parse_request(&v1_policy, seq).is_err());
+        let v2_mode = json::parse(r#"{"v": 2, "task": "t", "mode": "m3", "ids": [1]}"#).unwrap();
+        assert!(parse_request(&v2_mode, seq).is_err());
+
+        // versionless frame with a policy infers v2
+        let v = json::parse(r#"{"task": "t", "policy": "p", "ids": [1]}"#).unwrap();
+        assert_eq!(parse_request(&v, seq).unwrap().1, 2);
+
+        let missing_ids = json::parse(r#"{"task": "t", "mode": "fp"}"#).unwrap();
+        assert!(parse_request(&missing_ids, seq).is_err());
     }
 }

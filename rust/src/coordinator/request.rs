@@ -1,21 +1,96 @@
 //! Request/response types for the serving coordinator.
 //!
-//! Route strings are resolved to dense `TaskId`/`ModeId` once at
-//! admission (`Coordinator::submit`); every type here is `String`-free so
-//! the steady-state path never touches the allocator for routing.
+//! `RequestSpec` is the typed admission surface (DESIGN.md §6.2): a
+//! builder over (task, precision policy, payload) that replaces the old
+//! `(task, mode, ids)` string tuple.  Policy references are resolved to
+//! dense `TaskId`/`PolicyId` once at admission (`Coordinator::submit`);
+//! every hot-path type here is `String`-free so the steady-state path
+//! never touches the allocator for routing.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-use crate::model::manifest::{ModeId, TaskId};
+use crate::model::manifest::{PolicyDraft, PolicyId, TaskId};
 
-/// Precision mode selection per request (paper §2.3 — the accuracy/latency
-/// trade-off is exposed per request, not per deployment).  Interned and
-/// `Copy`: batcher group lookup is two integer compares.
+/// How a request names its precision policy before interning.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PolicyRef {
+    /// A manifest policy or a uniform per-mode policy ("fp", "m3", ...).
+    Named(String),
+    /// An inline spec (wire v2); interned at admission into the fixed
+    /// `PolicyId` space (`Manifest::intern_inline_policy`).
+    Inline(PolicyDraft),
+}
+
+/// Typed request spec — built fluently, consumed by `Coordinator::submit`:
+///
+/// ```ignore
+/// coord.submit(
+///     RequestSpec::task("sst2")
+///         .policy("attn-out-fp")     // or .mode("m3") for whole-model
+///         .ids(tokens)               // padded to seq at admission
+///         .type_ids(segments),       // optional, defaults to zeros
+/// )?;
+/// ```
+///
+/// With no policy set, the manifest's first mode (the reference policy)
+/// is used — the same default the CLI derives.
+#[derive(Debug, Clone, Default)]
+pub struct RequestSpec {
+    pub task: String,
+    pub policy: Option<PolicyRef>,
+    /// Token ids; shorter than the model seq is fine (padded at admission).
+    pub ids: Vec<i32>,
+    pub type_ids: Option<Vec<i32>>,
+}
+
+impl RequestSpec {
+    pub fn task(name: &str) -> RequestSpec {
+        RequestSpec { task: name.to_string(), ..Default::default() }
+    }
+
+    /// Uniform whole-model precision: sugar for the mode's implicit policy.
+    pub fn mode(self, mode: &str) -> RequestSpec {
+        self.policy(mode)
+    }
+
+    /// Route through a named policy (manifest `policies` section or a
+    /// uniform mode name).
+    pub fn policy(mut self, name: &str) -> RequestSpec {
+        self.policy = Some(PolicyRef::Named(name.to_string()));
+        self
+    }
+
+    /// Route through an inline policy spec (base + overrides + fallback).
+    pub fn policy_inline(mut self, draft: PolicyDraft) -> RequestSpec {
+        self.policy = Some(PolicyRef::Inline(draft));
+        self
+    }
+
+    /// Route through an already-built reference (benches sweeping refs).
+    pub fn policy_ref(mut self, policy: PolicyRef) -> RequestSpec {
+        self.policy = Some(policy);
+        self
+    }
+
+    pub fn ids(mut self, ids: Vec<i32>) -> RequestSpec {
+        self.ids = ids;
+        self
+    }
+
+    pub fn type_ids(mut self, type_ids: Vec<i32>) -> RequestSpec {
+        self.type_ids = Some(type_ids);
+        self
+    }
+}
+
+/// Interned batch-group key (paper §2.3 + §3 — the accuracy/latency
+/// trade-off is exposed per request as a precision *policy*, not per
+/// deployment).  `Copy`: batcher group lookup is two integer compares.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GroupKey {
     pub task: TaskId,
-    pub mode: ModeId,
+    pub policy: PolicyId,
 }
 
 #[derive(Debug)]
@@ -32,6 +107,10 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// The interned policy this request rode (admission resolved it once;
+    /// the net layer maps it back to names for v2 responses without
+    /// re-resolving).
+    pub policy: PolicyId,
     /// `[num_labels]` logits for this request's row.
     pub logits: Vec<f32>,
     pub timing: Timing,
@@ -50,7 +129,28 @@ pub struct Timing {
     pub batch_real: usize,
     pub bucket: usize,
     /// coordinator-wide dispatch sequence number of the batch this request
-    /// rode in; within a (task, mode) group it is strictly increasing with
-    /// request id — the FIFO witness the pipeline tests assert on.
+    /// rode in; within a (task, policy) group it is strictly increasing
+    /// with request id — the FIFO witness the pipeline tests assert on.
     pub batch_seq: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_chaining() {
+        let spec = RequestSpec::task("sst2");
+        assert_eq!(spec.task, "sst2");
+        assert!(spec.policy.is_none() && spec.type_ids.is_none() && spec.ids.is_empty());
+
+        let spec = RequestSpec::task("sst2").mode("m3").ids(vec![1, 2]).type_ids(vec![0, 0]);
+        assert_eq!(spec.policy, Some(PolicyRef::Named("m3".into())));
+        assert_eq!(spec.ids, vec![1, 2]);
+        assert_eq!(spec.type_ids, Some(vec![0, 0]));
+
+        let draft = PolicyDraft::base("m3").with_override("attn_output", "fp");
+        let spec = RequestSpec::task("sst2").policy_inline(draft.clone());
+        assert_eq!(spec.policy, Some(PolicyRef::Inline(draft)));
+    }
 }

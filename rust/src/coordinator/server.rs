@@ -1,13 +1,15 @@
 //! The serving coordinator: bounded admission queue -> dynamic batcher
 //! thread -> engine (PJRT) thread -> completion workers.  This is the
 //! "end-to-end system" the paper leaves as future work: batched W8A8
-//! inference with per-request precision modes and zero Python anywhere.
+//! inference with per-request precision *policies* and zero Python
+//! anywhere.
 //!
-//! Hot-path discipline (DESIGN.md §5): route strings are interned to
-//! `TaskId`/`ModeId` at admission; batch assembly writes into pooled
-//! staging buffers; the engine overlaps upload/execute/readback; and
-//! de-batching + reply dispatch run on the completion pool, never on the
-//! engine thread.
+//! Hot-path discipline (DESIGN.md §5-§6): `RequestSpec` policy references
+//! are interned to `TaskId`/`PolicyId` at admission; batch assembly
+//! writes into pooled staging buffers; the engine overlaps
+//! upload/execute/readback and selects executables through its mirrored
+//! policy table; and de-batching + reply dispatch run on the completion
+//! pool, never on the engine thread.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
@@ -17,13 +19,13 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::exec::ThreadPool;
-use crate::model::manifest::{Manifest, ModeId};
+use crate::model::manifest::{Manifest, ModeId, PolicyId, TaskId};
 use crate::model::Container;
 use crate::runtime::engine::{Engine, EngineOptions, InferDone, InferJob};
 use crate::runtime::staging::StagingPool;
 
 use super::batcher::{Batch, Batcher};
-use super::request::{GroupKey, Request, Response, Timing};
+use super::request::{GroupKey, PolicyRef, Request, RequestSpec, Response, Timing};
 use super::stats::Recorder;
 
 #[derive(Debug, Clone)]
@@ -67,7 +69,9 @@ pub struct Coordinator {
     pool: Option<Arc<ThreadPool>>,
     pub recorder: Arc<Recorder>,
     man: Arc<Manifest>,
-    /// `[task * num_modes + mode]` -> checkpoint resident in the engine.
+    /// `[task * num_modes + exec_mode]` -> checkpoint resident in the
+    /// engine.  Residency is per executable *mode*: policies that resolve
+    /// to the same exec mode share a checkpoint.
     loaded: Vec<bool>,
     next_id: AtomicU64,
     seq: usize,
@@ -76,11 +80,12 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Load checkpoints for the given (task, mode) pairs, spawn the engine
-    /// and batcher, pre-compile every (mode, bucket) executable.
+    /// Load checkpoints for the given (task, policy) routes — mode names
+    /// work as uniform policies — spawn the engine and batcher, and
+    /// pre-compile every (exec mode, bucket) executable.
     pub fn start(
         artifacts: std::path::PathBuf,
-        pairs: &[(String, String)],
+        routes: &[(String, String)],
         config: ServerConfig,
     ) -> Result<Coordinator> {
         let manifest = Manifest::load(&artifacts)?;
@@ -88,24 +93,29 @@ impl Coordinator {
         let num_labels = manifest.model.num_labels;
         let buckets = manifest.buckets.clone();
 
-        // load quantized/fp checkpoints from disk
+        // load quantized/fp checkpoints from disk, one per (task, exec
+        // mode) — routes naming policies with the same exec mode dedupe
         let mut preload = Vec::new();
         let mut modes_used = std::collections::BTreeSet::new();
         let mut loaded = vec![false; manifest.num_tasks() * manifest.num_modes()];
-        for (task, mode) in pairs {
+        for (task, policy) in routes {
             let t = manifest.task(task)?;
-            let rel = checkpoint_rel(t, mode);
+            let exec = manifest.policy(policy)?.exec_mode;
+            let mode = manifest.mode_name(exec).to_string();
+            let slot = route_slot(manifest.num_modes(), manifest.task_id(task)?, exec);
+            if loaded[slot] {
+                continue;
+            }
+            let rel = t.checkpoint_rel(&mode);
             let path = manifest.path(&rel);
             let ckpt = Container::read_file(&path)
                 .with_context(|| {
                     format!("loading checkpoint {path:?} (run `repro quantize` first?)")
                 })?
-                .reordered(&manifest.mode(mode)?.params)?;
-            let key =
-                GroupKey { task: manifest.task_id(task)?, mode: manifest.mode_id(mode)? };
-            loaded[route_slot(manifest.num_modes(), key)] = true;
+                .reordered(&manifest.mode(&mode)?.params)?;
+            loaded[slot] = true;
             preload.push((task.clone(), mode.clone(), ckpt));
-            modes_used.insert(mode.clone());
+            modes_used.insert(mode);
         }
         let precompile: Vec<(String, usize)> = modes_used
             .iter()
@@ -123,7 +133,7 @@ impl Coordinator {
             EngineOptions { overlap: config.pipeline },
         )?);
         let man = Arc::new(manifest);
-        let recorder = Arc::new(Recorder::new(man.mode_order.clone()));
+        let recorder = Arc::new(Recorder::new(man.policy_order.clone()));
 
         let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(config.queue_cap);
         let batcher_cfg = config.clone();
@@ -152,19 +162,21 @@ impl Coordinator {
         })
     }
 
-    /// Submit a request; `Err` on backpressure (queue full) or bad input.
-    /// Route strings are interned here — nothing downstream sees them.
-    pub fn submit(
-        &self,
-        task: &str,
-        mode: &str,
-        ids: Vec<i32>,
-        type_ids: Vec<i32>,
-    ) -> Result<Receiver<Response>> {
-        if ids.len() != self.seq || type_ids.len() != self.seq {
-            bail!("request must be exactly seq={} tokens (got {})", self.seq, ids.len());
+    /// Submit a typed request; `Err` on backpressure (queue full) or bad
+    /// input.  Policy references are interned here — nothing downstream
+    /// sees a string.  Short `ids`/`type_ids` are padded to the model seq.
+    pub fn submit(&self, spec: RequestSpec) -> Result<Receiver<Response>> {
+        let RequestSpec { task, policy, mut ids, type_ids } = spec;
+        if ids.is_empty() || ids.len() > self.seq {
+            bail!("request needs 1..={} token ids (got {})", self.seq, ids.len());
         }
-        let key = self.resolve(task, mode)?;
+        ids.resize(self.seq, crate::data::PAD);
+        let mut type_ids = type_ids.unwrap_or_default();
+        if type_ids.len() > self.seq {
+            bail!("type_ids longer than seq {} (got {})", self.seq, type_ids.len());
+        }
+        type_ids.resize(self.seq, 0);
+        let key = self.resolve(&task, policy.as_ref())?;
         let (reply, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -181,18 +193,42 @@ impl Coordinator {
         }
     }
 
-    /// Intern (task, mode) and check the route has a resident checkpoint.
-    fn resolve(&self, task: &str, mode: &str) -> Result<GroupKey> {
-        let no_ckpt =
-            || anyhow!("no checkpoint loaded for ({task},{mode}); not in this server's pairs");
-        let key = GroupKey {
-            task: self.man.task_id(task).map_err(|_| no_ckpt())?,
-            mode: self.man.mode_id(mode).map_err(|_| no_ckpt())?,
+    /// Intern (task, policy) and check the policy's executable mode has a
+    /// resident checkpoint.
+    fn resolve(&self, task: &str, policy: Option<&PolicyRef>) -> Result<GroupKey> {
+        let label = match policy {
+            None => self.man.mode_order.first().cloned().unwrap_or_default(),
+            Some(PolicyRef::Named(n)) => n.clone(),
+            Some(PolicyRef::Inline(_)) => "<inline>".to_string(),
         };
-        if !self.loaded[route_slot(self.man.num_modes(), key)] {
-            return Err(no_ckpt());
+        let no_ckpt = |detail: &str| {
+            anyhow!(
+                "no checkpoint loaded for ({task},{label}){detail}; not in this server's routes"
+            )
+        };
+        let task_id = self.man.task_id(task).map_err(|_| no_ckpt(""))?;
+        let pid = match policy {
+            None => PolicyId(0), // uniform policy of the manifest's first mode
+            Some(PolicyRef::Named(n)) => self.man.policy_id(n).map_err(|_| no_ckpt(""))?,
+            Some(PolicyRef::Inline(draft)) => self.man.intern_inline_policy(draft)?,
+        };
+        let exec = self.man.policy_by_id(pid).exec_mode;
+        if !self.loaded[route_slot(self.man.num_modes(), task_id, exec)] {
+            let detail = format!(" — policy executes mode {:?}", self.man.mode_name(exec));
+            return Err(no_ckpt(&detail));
         }
-        Ok(key)
+        Ok(GroupKey { task: task_id, policy: pid })
+    }
+
+    /// The coordinator-side manifest (policy/route tables; parity tests
+    /// compare these against the engine's mirrored tables).
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    /// The engine handle (mirrored route/policy tables).
+    pub fn engine(&self) -> &Engine {
+        self.engine.as_ref().expect("engine live")
     }
 
     pub fn num_labels(&self) -> usize {
@@ -217,18 +253,10 @@ impl Drop for Coordinator {
     }
 }
 
-/// Flat slot of a (task, mode) route in the `loaded` bitmap — the one
-/// definition of the 2D->1D layout.
-fn route_slot(num_modes: usize, key: GroupKey) -> usize {
-    key.task.index() * num_modes + key.mode.index()
-}
-
-pub fn checkpoint_rel(task: &crate::model::manifest::TaskSpec, mode: &str) -> String {
-    if mode == "fp" {
-        task.checkpoint.clone()
-    } else {
-        format!("checkpoints/{}/hero-{}.bin", task.name, mode)
-    }
+/// Flat slot of a (task, exec mode) route in the `loaded` bitmap — the
+/// one definition of the 2D->1D layout.
+fn route_slot(num_modes: usize, task: TaskId, mode: ModeId) -> usize {
+    task.index() * num_modes + mode.index()
 }
 
 fn batcher_main(
@@ -290,7 +318,7 @@ fn dispatch(
     }
     host.finish();
 
-    let mode = batch.key.mode;
+    let policy = batch.key.policy;
     let requests = batch.requests;
     let recorder = Arc::clone(recorder);
     let fault = config.fault_inject_batch;
@@ -305,13 +333,13 @@ fn dispatch(
                     Err(e) => {
                         let msg = format!("bad logits: {e}");
                         for r in requests {
-                            send_error(&r, mode, &recorder, &msg);
+                            send_error(&r, policy, &recorder, &msg);
                         }
                         return;
                     }
                 };
                 let nl = logits.len() / bucket;
-                recorder.record_batch(mode, real, done.exec_us);
+                recorder.record_batch(policy, real, done.exec_us);
                 for (row, r) in requests.into_iter().enumerate() {
                     let now = Instant::now();
                     let timing = Timing {
@@ -322,9 +350,10 @@ fn dispatch(
                         bucket,
                         batch_seq: seq_no,
                     };
-                    recorder.record_request(mode, timing.total_us, timing.queue_us, false);
+                    recorder.record_request(policy, timing.total_us, timing.queue_us, false);
                     let _ = r.reply.send(Response {
                         id: r.id,
+                        policy,
                         logits: logits[row * nl..(row + 1) * nl].to_vec(),
                         timing,
                         error: None,
@@ -334,13 +363,13 @@ fn dispatch(
             Err(e) => {
                 let msg = e.to_string();
                 for r in requests {
-                    send_error(&r, mode, &recorder, &msg);
+                    send_error(&r, policy, &recorder, &msg);
                 }
             }
         }
     });
 
-    let job = InferJob { task: batch.key.task, mode, staging: host, done };
+    let job = InferJob { task: batch.key.task, policy, staging: host, done };
     if let Err(job) = engine.submit(job) {
         let job = *job;
         staging.put(job.staging);
@@ -348,10 +377,11 @@ fn dispatch(
     }
 }
 
-fn send_error(r: &Request, mode: ModeId, recorder: &Recorder, msg: &str) {
-    recorder.record_request(mode, 0, 0, true);
+fn send_error(r: &Request, policy: PolicyId, recorder: &Recorder, msg: &str) {
+    recorder.record_request(policy, 0, 0, true);
     let _ = r.reply.send(Response {
         id: r.id,
+        policy,
         logits: vec![],
         timing: Timing::default(),
         error: Some(msg.to_string()),

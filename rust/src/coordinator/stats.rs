@@ -1,13 +1,15 @@
 //! Serving metrics: lock-light latency/throughput recording with
-//! log-bucketed histograms, keyed by interned precision mode.  Recording
-//! is index-addressed (`ModeId` -> dense slot) so the steady-state path
-//! never allocates; names reappear only in `snapshot`/`render`.
+//! log-bucketed histograms, keyed by interned precision policy.
+//! Recording is index-addressed (`PolicyId` -> dense slot) so the
+//! steady-state path never allocates; names reappear only in
+//! `snapshot`/`render`.  Uniform per-mode policies occupy the first
+//! slots, so v1 (string-mode) traffic keeps its mode-name keys.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::model::manifest::ModeId;
+use crate::model::manifest::PolicyId;
 
 /// Log2-bucketed latency histogram (microseconds).
 #[derive(Debug, Clone)]
@@ -90,7 +92,7 @@ impl Default for Histogram {
 }
 
 #[derive(Debug, Default, Clone)]
-pub struct ModeStats {
+pub struct PolicyStats {
     pub latency: Histogram,
     pub exec: Histogram,
     pub queue: Histogram,
@@ -100,7 +102,7 @@ pub struct ModeStats {
     pub errors: u64,
 }
 
-impl ModeStats {
+impl PolicyStats {
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -115,24 +117,25 @@ impl ModeStats {
 }
 
 /// Shared recorder (single mutex — recording is tiny next to inference).
-/// Slots are dense by `ModeId`; mode names are kept only for rendering.
+/// Slots are dense by `PolicyId`; policy names are kept only for rendering.
 pub struct Recorder {
     start: Instant,
-    modes: Vec<String>,
-    inner: Mutex<Vec<ModeStats>>,
+    policies: Vec<String>,
+    inner: Mutex<Vec<PolicyStats>>,
 }
 
 impl Recorder {
-    /// `modes` is the manifest's `mode_order` — the `ModeId` space.
-    pub fn new(modes: Vec<String>) -> Self {
-        let slots = modes.iter().map(|_| ModeStats::default()).collect();
-        Recorder { start: Instant::now(), modes, inner: Mutex::new(slots) }
+    /// `policies` is the manifest's `policy_order` — the `PolicyId` space
+    /// (uniform mode policies first, then the `policies` section).
+    pub fn new(policies: Vec<String>) -> Self {
+        let slots = policies.iter().map(|_| PolicyStats::default()).collect();
+        Recorder { start: Instant::now(), policies, inner: Mutex::new(slots) }
     }
 
-    pub fn record_request(&self, mode: ModeId, total_us: u64, queue_us: u64, err: bool) {
+    pub fn record_request(&self, policy: PolicyId, total_us: u64, queue_us: u64, err: bool) {
         let mut g = self.inner.lock().unwrap();
-        // slots are mode_order-sized; a foreign ModeId is a bug, not a slot
-        let s = &mut g[mode.index()];
+        // slots are policy_order-sized; a foreign PolicyId is a bug, not a slot
+        let s = &mut g[policy.index()];
         s.requests += 1;
         if err {
             s.errors += 1;
@@ -142,22 +145,22 @@ impl Recorder {
         }
     }
 
-    pub fn record_batch(&self, mode: ModeId, rows: usize, exec_us: u64) {
+    pub fn record_batch(&self, policy: PolicyId, rows: usize, exec_us: u64) {
         let mut g = self.inner.lock().unwrap();
-        let s = &mut g[mode.index()];
+        let s = &mut g[policy.index()];
         s.batches += 1;
         s.batched_rows += rows as u64;
         s.exec.record(exec_us);
     }
 
-    /// Per-mode stats keyed by mode name, active modes only (so callers
-    /// see the same shape as traffic they actually sent).
-    pub fn snapshot(&self) -> BTreeMap<String, ModeStats> {
+    /// Per-policy stats keyed by policy name, active policies only (so
+    /// callers see the same shape as traffic they actually sent).
+    pub fn snapshot(&self) -> BTreeMap<String, PolicyStats> {
         let g = self.inner.lock().unwrap();
         g.iter()
             .enumerate()
             .filter(|(_, s)| s.active())
-            .map(|(i, s)| (self.modes[i].clone(), s.clone()))
+            .map(|(i, s)| (self.policies[i].clone(), s.clone()))
             .collect()
     }
 
@@ -171,12 +174,12 @@ impl Recorder {
         let snap = self.snapshot();
         let elapsed = self.elapsed_s();
         let mut t = Table::new(&[
-            "mode", "reqs", "errs", "thr(req/s)", "mean batch", "p50 lat", "p95 lat",
+            "policy", "reqs", "errs", "thr(req/s)", "mean batch", "p50 lat", "p95 lat",
             "p99 lat", "mean exec/batch",
         ]);
-        for (mode, s) in &snap {
+        for (policy, s) in &snap {
             t.row(vec![
-                mode.clone(),
+                policy.clone(),
                 s.requests.to_string(),
                 s.errors.to_string(),
                 format!("{:.1}", s.requests as f64 / elapsed.max(1e-9)),
@@ -243,25 +246,30 @@ mod tests {
     }
 
     #[test]
-    fn recorder_accumulates_per_mode() {
-        let r = Recorder::new(vec!["fp".into(), "m3".into()]);
-        let fp = ModeId(0);
-        let m3 = ModeId(1);
+    fn recorder_accumulates_per_policy() {
+        // uniform mode policies first, then a named override policy
+        let r = Recorder::new(vec!["fp".into(), "m3".into(), "attn-out-fp".into()]);
+        let fp = PolicyId(0);
+        let m3 = PolicyId(1);
+        let named = PolicyId(2);
         r.record_request(m3, 1000, 100, false);
         r.record_request(m3, 2000, 200, false);
         r.record_request(fp, 99, 9, true);
+        r.record_request(named, 500, 50, false);
         r.record_batch(m3, 8, 500);
         let snap = r.snapshot();
         assert_eq!(snap["m3"].requests, 2);
         assert_eq!(snap["fp"].errors, 1);
+        assert_eq!(snap["attn-out-fp"].requests, 1);
         assert_eq!(snap["m3"].mean_batch_size(), 8.0);
         assert!(r.render().contains("m3"));
+        assert!(r.render().contains("attn-out-fp"));
     }
 
     #[test]
-    fn recorder_snapshot_hides_idle_modes() {
+    fn recorder_snapshot_hides_idle_policies() {
         let r = Recorder::new(vec!["fp".into(), "m1".into()]);
-        r.record_request(ModeId(0), 10, 1, false);
+        r.record_request(PolicyId(0), 10, 1, false);
         let snap = r.snapshot();
         assert!(snap.contains_key("fp"));
         assert!(!snap.contains_key("m1"));

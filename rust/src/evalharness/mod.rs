@@ -7,7 +7,6 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 use crate::calib::{load_history, run_calibration, save_history, truncate_history, StatHistory};
-use crate::coordinator::checkpoint_rel;
 use crate::data::{batches, Labels, Split};
 use crate::metrics;
 use crate::model::manifest::TaskSpec;
@@ -81,7 +80,7 @@ pub fn ensure_checkpoint(
         let specs = rt.manifest.mode("fp")?.params.clone();
         Container::read_file(&rt.manifest.path(&task.checkpoint))?.reordered(&specs)?
     } else {
-        let rel = checkpoint_rel(task, mode);
+        let rel = task.checkpoint_rel(mode);
         let path = rt.manifest.path(&rel);
         if path.exists() && calib_batches == DEFAULT_CALIB_BATCHES && pct >= 100.0 {
             Container::read_file(&path)?

@@ -13,8 +13,9 @@
 //! * [`runtime`] — PJRT loading/execution of the AOT HLO artifacts with
 //!   device-resident weights (Python never runs at request time);
 //! * [`coordinator`] — the serving system the paper leaves as future
-//!   work: dynamic batching, per-request precision modes, backpressure,
-//!   metrics;
+//!   work: typed request specs, dynamic batching, per-request precision
+//!   policies (base mode + per-module overrides + fallback escalation),
+//!   backpressure, metrics;
 //! * [`evalharness`] — Table 2 + ablation regeneration;
 //! * [`perfmodel`] — the analytic A100 roofline behind the paper's
 //!   hardware claims;

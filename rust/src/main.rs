@@ -72,7 +72,7 @@ fn cli() -> Cli {
                 help: "print Fig.1/Fig.2 precision-flow and verify vs HLO",
                 opts: vec![
                     artifacts_opt(),
-                    OptSpec { name: "mode", takes_value: true, default: Some("m3"), help: "mode to trace" },
+                    OptSpec { name: "mode", takes_value: true, default: None, help: "mode to trace (default: the manifest's first mode)" },
                 ],
             },
             SubSpec {
@@ -92,6 +92,7 @@ fn cli() -> Cli {
                     OptSpec { name: "port", takes_value: true, default: Some("7433"), help: "bind port" },
                     OptSpec { name: "tasks", takes_value: true, default: Some("sst2,mrpc,cola"), help: "tasks to load" },
                     OptSpec { name: "modes", takes_value: true, default: Some("fp,m1,m2,m3"), help: "precision modes to load" },
+                    OptSpec { name: "policies", takes_value: true, default: None, help: "extra manifest policies to load (comma-separated)" },
                     OptSpec { name: "max-batch", takes_value: true, default: Some("16"), help: "batcher max batch" },
                     OptSpec { name: "max-wait-ms", takes_value: true, default: Some("4"), help: "batcher max wait" },
                 ],
@@ -103,6 +104,7 @@ fn cli() -> Cli {
                     artifacts_opt(),
                     OptSpec { name: "tasks", takes_value: true, default: Some("sst2"), help: "comma-separated tasks" },
                     OptSpec { name: "modes", takes_value: true, default: Some("fp,m3"), help: "comma-separated modes" },
+                    OptSpec { name: "policies", takes_value: true, default: None, help: "extra manifest policies to sweep (comma-separated)" },
                     OptSpec { name: "requests", takes_value: true, default: Some("256"), help: "requests per (task,mode)" },
                     OptSpec { name: "concurrency", takes_value: true, default: Some("32"), help: "in-flight requests" },
                     OptSpec { name: "max-batch", takes_value: true, default: Some("16"), help: "batcher max batch" },
@@ -147,6 +149,20 @@ fn task_list(man: &Manifest, args: &zqhero::cli::Args) -> Vec<String> {
     match args.get("task") {
         Some(t) => vec![t.to_string()],
         None => man.task_order.clone(),
+    }
+}
+
+/// Resolve an optional `--mode` flag: validated against the manifest (so
+/// a bad name fails with the known-mode list), defaulting to the
+/// manifest's first mode — never a hardcoded name.
+fn default_mode(man: &Manifest, flag: Option<&str>) -> Result<String> {
+    match flag {
+        Some(m) => man.mode_id(m).map(|_| m.to_string()),
+        None => man
+            .mode_order
+            .first()
+            .cloned()
+            .context("manifest declares no modes"),
     }
 }
 
@@ -267,9 +283,11 @@ fn cmd_eval(args: &zqhero::cli::Args) -> Result<()> {
 
 fn cmd_trace(args: &zqhero::cli::Args) -> Result<()> {
     let man = Manifest::load(&artifacts_dir(args))?;
-    let mode = args.get_or("mode", "m3");
-    let spec = man.mode(mode)?;
-    println!("== Figure 1: attention module precision flow ({}) ==", eh::mode_label(mode));
+    // route defaults come from the manifest, never a hardcoded name; a bad
+    // --mode fails with the known-mode list (Manifest::mode_id shape)
+    let mode = default_mode(&man, args.get("mode"))?;
+    let spec = man.mode(&mode)?;
+    println!("== Figure 1: attention module precision flow ({}) ==", eh::mode_label(&mode));
     let mut t = Table::new(&["tensor", "producer", "scheme", "dtype"]);
     for r in traceflow::attention_flow(&spec.switches) {
         t.row(vec![r.tensor.into(), r.producer.into(), r.scheme, r.dtype]);
@@ -283,7 +301,7 @@ fn cmd_trace(args: &zqhero::cli::Args) -> Result<()> {
     t.print();
 
     let bucket = *man.buckets.last().context("buckets")?;
-    let (expected, found) = traceflow::verify_mode_artifact(&man, mode, bucket)?;
+    let (expected, found) = traceflow::verify_mode_artifact(&man, &mode, bucket)?;
     println!("\nHLO verification (b{bucket}): expected {expected} int8 GeMMs, found {found}");
     anyhow::ensure!(expected == found, "artifact does not match Table 1 claims");
     println!("OK — artifact matches the Table 1 row.");
@@ -323,44 +341,75 @@ fn tag_to_switches(tag: &str) -> zqhero::model::Switches {
     }
 }
 
+/// Routes = tasks x (modes + policies), where each route name is
+/// validated against the manifest and policies resolve to the executable
+/// mode whose checkpoint must exist on disk.
+fn route_names(man: &Manifest, args: &zqhero::cli::Args, default_modes: &str) -> Result<Vec<String>> {
+    let mut names: Vec<String> = args
+        .get_or("modes", default_modes)
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    if let Some(ps) = args.get("policies") {
+        names.extend(ps.split(',').map(str::to_string));
+    }
+    for n in &names {
+        man.policy(n)?; // fail early with the known-policy list
+    }
+    Ok(names)
+}
+
+/// Quantize any missing checkpoint for the executable modes behind the
+/// given route names (offline PTQ prep).
+fn ensure_route_checkpoints(
+    dir: &std::path::Path,
+    tasks: &[String],
+    routes: &[String],
+) -> Result<()> {
+    let man = Manifest::load(dir)?;
+    let mut rt = Runtime::new(man)?;
+    for t in tasks {
+        let task = rt.manifest.task(t)?.clone();
+        for r in routes {
+            let exec = rt.manifest.policy(r)?.exec_mode;
+            let m = rt.manifest.mode_name(exec).to_string();
+            if m == "fp" {
+                continue;
+            }
+            let rel = task.checkpoint_rel(&m);
+            if !rt.manifest.path(&rel).exists() {
+                eprintln!("[prep] quantizing {t}/{m}...");
+                let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
+                eh::quantize_task(&mut rt, &task, &m, &hist, 100.0, None)?;
+            }
+        }
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let host = args.get_or("host", "127.0.0.1").to_string();
     let port = args.get_usize("port")?.unwrap_or(7433) as u16;
     let tasks: Vec<String> =
         args.get_or("tasks", "sst2").split(',').map(str::to_string).collect();
-    let modes: Vec<String> =
-        args.get_or("modes", "fp,m3").split(',').map(str::to_string).collect();
+    let routes = route_names(&Manifest::load(&dir)?, args, "fp,m3")?;
     let config = ServerConfig {
         max_batch: args.get_usize("max-batch")?.unwrap_or(16),
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
         ..ServerConfig::default()
     };
 
-    // make sure quantized checkpoints exist (offline PTQ prep)
-    {
-        let man = Manifest::load(&dir)?;
-        let mut rt = Runtime::new(man)?;
-        for t in &tasks {
-            let task = rt.manifest.task(t)?.clone();
-            for m in modes.iter().filter(|m| *m != "fp") {
-                let rel = zqhero::coordinator::checkpoint_rel(&task, m);
-                if !rt.manifest.path(&rel).exists() {
-                    eprintln!("[prep] quantizing {t}/{m}...");
-                    let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
-                    eh::quantize_task(&mut rt, &task, m, &hist, 100.0, None)?;
-                }
-            }
-        }
-    }
+    ensure_route_checkpoints(&dir, &tasks, &routes)?;
     let pairs: Vec<(String, String)> = tasks
         .iter()
-        .flat_map(|t| modes.iter().map(move |m| (t.clone(), m.clone())))
+        .flat_map(|t| routes.iter().map(move |m| (t.clone(), m.clone())))
         .collect();
     let coord = std::sync::Arc::new(Coordinator::start(dir, &pairs, config)?);
     let server = zqhero::coordinator::NetServer::start(std::sync::Arc::clone(&coord), &host, port)?;
-    println!("serving on {} — newline-delimited JSON", server.addr);
+    println!("serving on {} — newline-delimited JSON (v1 mode / v2 policy frames)", server.addr);
     println!("request: {{\"task\":\"sst2\",\"mode\":\"m3\",\"ids\":[1,1510,2]}}");
+    println!("     or: {{\"v\":2,\"task\":\"sst2\",\"policy\":{{\"base\":\"m3\",\"overrides\":[[\"attn_output\",\"fp\"]],\"fallback\":[\"m1\",\"fp\"]}},\"ids\":[1,1510,2]}}");
     println!("Ctrl-C to stop; stats every 30s");
     loop {
         std::thread::sleep(Duration::from_secs(30));
@@ -375,8 +424,7 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let tasks: Vec<String> =
         args.get_or("tasks", "sst2").split(',').map(str::to_string).collect();
-    let modes: Vec<String> =
-        args.get_or("modes", "fp,m3").split(',').map(str::to_string).collect();
+    let routes = route_names(&Manifest::load(&dir)?, args, "fp,m3")?;
     let requests = args.get_usize("requests")?.unwrap_or(256);
     let concurrency = args.get_usize("concurrency")?.unwrap_or(32);
     let config = ServerConfig {
@@ -385,29 +433,13 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
         ..ServerConfig::default()
     };
 
-    // make sure quantized checkpoints exist
-    {
-        let man = Manifest::load(&dir)?;
-        let mut rt = Runtime::new(man)?;
-        for t in &tasks {
-            let task = rt.manifest.task(t)?.clone();
-            for m in &modes {
-                if m != "fp" {
-                    let rel = zqhero::coordinator::checkpoint_rel(&task, m);
-                    if !rt.manifest.path(&rel).exists() {
-                        let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
-                        eh::quantize_task(&mut rt, &task, m, &hist, 100.0, None)?;
-                    }
-                }
-            }
-        }
-    }
+    ensure_route_checkpoints(&dir, &tasks, &routes)?;
 
     let pairs: Vec<(String, String)> = tasks
         .iter()
-        .flat_map(|t| modes.iter().map(move |m| (t.clone(), m.clone())))
+        .flat_map(|t| routes.iter().map(move |m| (t.clone(), m.clone())))
         .collect();
-    println!("starting coordinator ({} task x mode pairs)...", pairs.len());
+    println!("starting coordinator ({} task x policy routes)...", pairs.len());
     let coord = Coordinator::start(dir.clone(), &pairs, config)?;
 
     // pull eval rows as the request payloads
@@ -425,10 +457,10 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
         payloads.push(rows);
     }
 
-    println!("running closed-loop load: {requests} requests per pair, {concurrency} in flight");
+    println!("running closed-loop load: {requests} requests per route, {concurrency} in flight");
     let t0 = Instant::now();
     for (ti, t) in tasks.iter().enumerate() {
-        for m in &modes {
+        for m in &routes {
             let rows = &payloads[ti];
             let mut inflight = std::collections::VecDeque::new();
             let mut done = 0usize;
@@ -436,7 +468,11 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
             while done < requests {
                 while submitted < requests && inflight.len() < concurrency {
                     let (ids, tys) = rows[submitted % rows.len()].clone();
-                    match coord.submit(t, m, ids, tys) {
+                    let spec = zqhero::coordinator::RequestSpec::task(t)
+                        .policy(m)
+                        .ids(ids)
+                        .type_ids(tys);
+                    match coord.submit(spec) {
                         Ok(rx) => {
                             inflight.push_back(rx);
                             submitted += 1;

@@ -24,6 +24,16 @@ pub struct TaskId(pub u16);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ModeId(pub u16);
 
+/// Dense id for a precision policy, an index into `Manifest::policy_order`.
+///
+/// The id space is fixed at manifest load: the uniform per-mode policies
+/// come first (so `PolicyId(i)` and `ModeId(i)` name the same route for
+/// `i < num_modes`), followed by the manifest's `policies` section in
+/// declaration order.  Inline wire specs intern into this space at
+/// admission (DESIGN.md §6.3), so the hot path stays `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PolicyId(pub u16);
+
 impl TaskId {
     pub fn index(self) -> usize {
         self.0 as usize
@@ -31,6 +41,12 @@ impl TaskId {
 }
 
 impl ModeId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl PolicyId {
     pub fn index(self) -> usize {
         self.0 as usize
     }
@@ -92,6 +108,239 @@ impl Switches {
     pub fn row(&self) -> [bool; 6] {
         [self.embedding, self.qkv, self.attn, self.attn_output, self.fc1, self.fc2]
     }
+
+    pub fn get(&self, g: ModuleGroup) -> bool {
+        match g {
+            ModuleGroup::Embedding => self.embedding,
+            ModuleGroup::Qkv => self.qkv,
+            ModuleGroup::Attn => self.attn,
+            ModuleGroup::AttnOutput => self.attn_output,
+            ModuleGroup::Fc1 => self.fc1,
+            ModuleGroup::Fc2 => self.fc2,
+        }
+    }
+
+    pub fn set(&mut self, g: ModuleGroup, int8: bool) {
+        match g {
+            ModuleGroup::Embedding => self.embedding = int8,
+            ModuleGroup::Qkv => self.qkv = int8,
+            ModuleGroup::Attn => self.attn = int8,
+            ModuleGroup::AttnOutput => self.attn_output = int8,
+            ModuleGroup::Fc1 => self.fc1 = int8,
+            ModuleGroup::Fc2 => self.fc2 = int8,
+        }
+    }
+
+    /// True iff every INT8 module of `self` is also INT8 in `other` — the
+    /// escalation rule: a fallback mode may only *raise* precision
+    /// relative to what a policy asked for, never quantize more.
+    pub fn subset_of(&self, other: &Switches) -> bool {
+        let a = self.row();
+        let b = other.row();
+        a.iter().zip(b.iter()).all(|(x, y)| !*x || *y)
+    }
+}
+
+/// The paper's per-module quantization groups (Table 1 columns) — the
+/// granularity at which a `PrecisionPolicy` can override the base mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModuleGroup {
+    Embedding,
+    Qkv,
+    Attn,
+    AttnOutput,
+    Fc1,
+    Fc2,
+}
+
+impl ModuleGroup {
+    pub const ALL: [ModuleGroup; 6] = [
+        ModuleGroup::Embedding,
+        ModuleGroup::Qkv,
+        ModuleGroup::Attn,
+        ModuleGroup::AttnOutput,
+        ModuleGroup::Fc1,
+        ModuleGroup::Fc2,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModuleGroup::Embedding => "embedding",
+            ModuleGroup::Qkv => "qkv",
+            ModuleGroup::Attn => "attn",
+            ModuleGroup::AttnOutput => "attn_output",
+            ModuleGroup::Fc1 => "fc1",
+            ModuleGroup::Fc2 => "fc2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ModuleGroup> {
+        Self::ALL.iter().copied().find(|g| g.name() == s).with_context(|| {
+            let names: Vec<&str> = Self::ALL.iter().map(|g| g.name()).collect();
+            format!("unknown module group {s:?} (have {names:?})")
+        })
+    }
+}
+
+/// Requested precision for one module group inside a policy override.
+/// Anything non-INT8 maps to `Fp`: on this testbed the reference path is
+/// FP32, standing in for the paper's FP16/BF16 recovery precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModulePrecision {
+    Int8,
+    Fp,
+}
+
+impl ModulePrecision {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModulePrecision::Int8 => "int8",
+            ModulePrecision::Fp => "fp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ModulePrecision> {
+        match s {
+            "int8" | "i8" => Ok(ModulePrecision::Int8),
+            "fp" | "fp16" | "bf16" | "fp32" => Ok(ModulePrecision::Fp),
+            _ => bail!("unknown precision {s:?} (have [\"int8\", \"fp\"])"),
+        }
+    }
+}
+
+/// Unresolved precision-policy request, exactly as it appears on the wire
+/// (v2 inline frames) or in the manifest `policies` section: names are
+/// not yet validated against `mode_order`.  Resolution
+/// (`Manifest::resolve_policy`) turns a draft into a `PolicySpec`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct PolicyDraft {
+    /// Whole-model base mode name.
+    pub base: String,
+    /// Ordered `(module group, precision)` overrides, applied in order.
+    pub overrides: Vec<(String, String)>,
+    /// Accuracy-fallback escalation chain: mode names tried in order when
+    /// no artifact matches the effective switches exactly.
+    pub fallback: Vec<String>,
+}
+
+impl PolicyDraft {
+    pub fn base(mode: &str) -> PolicyDraft {
+        PolicyDraft { base: mode.to_string(), ..Default::default() }
+    }
+
+    pub fn with_override(mut self, group: &str, precision: &str) -> PolicyDraft {
+        self.overrides.push((group.to_string(), precision.to_string()));
+        self
+    }
+
+    pub fn with_fallback(mut self, mode: &str) -> PolicyDraft {
+        self.fallback.push(mode.to_string());
+        self
+    }
+
+    /// Parse the JSON policy grammar (shared by the manifest section and
+    /// inline v2 wire specs):
+    /// `{"base": "m3", "overrides": [["attn_output", "fp"], ...],
+    ///   "fallback": ["m2", "m1", "fp"]}` — overrides/fallback optional.
+    pub fn from_json(v: &Value) -> Result<PolicyDraft> {
+        // strict keys: a misspelled "overrides" must not silently collapse
+        // the policy to its uniform base mode
+        for (k, _) in v.as_object().context("policy spec not an object")? {
+            match k.as_str() {
+                "base" | "overrides" | "fallback" => {}
+                other => bail!(
+                    "unknown policy key {other:?} (have [\"base\", \"overrides\", \"fallback\"])"
+                ),
+            }
+        }
+        let base = v.req("base")?.as_str().context("policy base not a string")?.to_string();
+        let mut overrides = Vec::new();
+        if let Some(ov) = v.get("overrides") {
+            for item in ov.as_array().context("policy overrides not an array")? {
+                let t = item.as_array().context("override not a [group, precision] pair")?;
+                if t.len() != 2 {
+                    bail!("override must be a [group, precision] pair");
+                }
+                overrides.push((
+                    t[0].as_str().context("override group not a string")?.to_string(),
+                    t[1].as_str().context("override precision not a string")?.to_string(),
+                ));
+            }
+        }
+        let mut fallback = Vec::new();
+        if let Some(fv) = v.get("fallback") {
+            for item in fv.as_array().context("policy fallback not an array")? {
+                fallback.push(item.as_str().context("fallback mode not a string")?.to_string());
+            }
+        }
+        Ok(PolicyDraft { base, overrides, fallback })
+    }
+
+    /// Inverse of `from_json` (the v2 client serializes inline specs).
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![("base", Value::String(self.base.clone()))];
+        if !self.overrides.is_empty() {
+            pairs.push((
+                "overrides",
+                Value::Array(
+                    self.overrides
+                        .iter()
+                        .map(|(g, p)| {
+                            Value::Array(vec![
+                                Value::String(g.clone()),
+                                Value::String(p.clone()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.fallback.is_empty() {
+            pairs.push((
+                "fallback",
+                Value::Array(self.fallback.iter().map(|m| Value::String(m.clone())).collect()),
+            ));
+        }
+        json::obj(pairs)
+    }
+}
+
+/// A resolved precision policy (paper §3's mixed-precision contribution
+/// as a first-class route): base mode + per-module overrides + fallback
+/// chain, validated against `mode_order` at manifest load so admission
+/// never fails on a manifest policy.
+#[derive(Debug, Clone)]
+pub struct PolicySpec {
+    pub name: String,
+    pub base: ModeId,
+    pub overrides: Vec<(ModuleGroup, ModulePrecision)>,
+    pub fallback: Vec<ModeId>,
+    /// Base switches with the overrides applied — what the caller asked for.
+    pub effective: Switches,
+    /// The mode whose compiled artifact serves this policy: the exact
+    /// switch match if one exists, else the first fallback that only
+    /// escalates precision.
+    pub exec_mode: ModeId,
+}
+
+impl PolicySpec {
+    /// The implicit whole-model policy every mode desugars to (v1 wire
+    /// requests and plain `--mode` flags route through these).
+    pub fn uniform(name: &str, mode: ModeId, switches: Switches) -> PolicySpec {
+        PolicySpec {
+            name: name.to_string(),
+            base: mode,
+            overrides: Vec::new(),
+            fallback: Vec::new(),
+            effective: switches,
+            exec_mode: mode,
+        }
+    }
+
+    /// True when this policy is just "run mode X everywhere".
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.is_empty() && self.base == self.exec_mode
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -126,6 +375,20 @@ pub struct TaskSpec {
     pub checkpoint: String,
 }
 
+impl TaskSpec {
+    /// Manifest-relative checkpoint path for this task in `mode`: the
+    /// trained fp checkpoint for the reference mode, the HERO-quantized
+    /// one otherwise.  (Lives here with the task's other path logic —
+    /// `splits`/`checkpoint` — not in the coordinator.)
+    pub fn checkpoint_rel(&self, mode: &str) -> String {
+        if mode == "fp" {
+            self.checkpoint.clone()
+        } else {
+            format!("checkpoints/{}/hero-{}.bin", self.name, mode)
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct CalibSpec {
     pub artifact: String,
@@ -147,6 +410,13 @@ pub struct Manifest {
     pub calib: CalibSpec,
     pub tasks: BTreeMap<String, TaskSpec>,
     pub task_order: Vec<String>,
+    /// Precision policies by name: the uniform per-mode policies plus the
+    /// optional manifest `policies` section, resolved and validated at load.
+    pub policies: BTreeMap<String, PolicySpec>,
+    /// The `PolicyId` space: `mode_order` first (uniform policies share
+    /// indices with `ModeId`), then the `policies` section in declaration
+    /// order.
+    pub policy_order: Vec<String>,
     pub micro: BTreeMap<String, String>,
 }
 
@@ -181,7 +451,14 @@ impl Manifest {
         let path = artifacts_dir.join("manifest.json");
         let src = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
-        let v = json::parse(&src).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Self::from_json_str(&src, artifacts_dir).with_context(|| format!("{path:?}"))
+    }
+
+    /// Parse a manifest from JSON source — the file-less entry point the
+    /// validation tests use to exercise error paths (bad policies, bad
+    /// modes) without a generated artifacts dir.
+    pub fn from_json_str(src: &str, artifacts_dir: &Path) -> Result<Self> {
+        let v = json::parse(src).map_err(|e| anyhow::anyhow!("{e}"))?;
 
         let m = v.req("model")?;
         let model = ModelCfg {
@@ -294,7 +571,7 @@ impl Manifest {
             }
         }
 
-        Ok(Manifest {
+        let mut man = Manifest {
             root: artifacts_dir.to_path_buf(),
             model,
             seq: get_usize(&v, "seq")?,
@@ -304,8 +581,116 @@ impl Manifest {
             calib,
             tasks,
             task_order,
+            policies: BTreeMap::new(),
+            policy_order: Vec::new(),
             micro,
+        };
+        man.init_policies(v.get("policies"))?;
+        Ok(man)
+    }
+
+    /// Build the policy table: one uniform policy per mode (sharing the
+    /// mode's dense index), then the optional `policies` section resolved
+    /// against `mode_order`.  All validation happens here, at load — a
+    /// manifest policy can never fail at admission.
+    fn init_policies(&mut self, section: Option<&Value>) -> Result<()> {
+        let mut order = Vec::with_capacity(self.mode_order.len());
+        let mut table = BTreeMap::new();
+        for (i, name) in self.mode_order.iter().enumerate() {
+            let sw = self.modes[name].switches;
+            table.insert(name.clone(), PolicySpec::uniform(name, ModeId(i as u16), sw));
+            order.push(name.clone());
+        }
+        if let Some(sec) = section {
+            for (name, pv) in sec.as_object().context("policies not an object")? {
+                if self.modes.contains_key(name) {
+                    bail!("policy {name:?} shadows the mode of the same name");
+                }
+                if table.contains_key(name) {
+                    bail!("duplicate policy {name:?}");
+                }
+                let draft = PolicyDraft::from_json(pv)
+                    .with_context(|| format!("policy {name:?}"))?;
+                let spec = self.resolve_policy(name, &draft)?;
+                order.push(name.clone());
+                table.insert(name.clone(), spec);
+            }
+        }
+        self.policies = table;
+        self.policy_order = order;
+        Ok(())
+    }
+
+    /// Validate a draft against this manifest and pick its executable
+    /// mode: the mode whose switches equal the effective (base +
+    /// overrides) set, else the first fallback mode that only escalates
+    /// precision (`Switches::subset_of`), else an error.
+    pub fn resolve_policy(&self, name: &str, draft: &PolicyDraft) -> Result<PolicySpec> {
+        let base = self
+            .mode_id(&draft.base)
+            .with_context(|| format!("policy {name:?}: bad base mode"))?;
+        let mut effective = self.mode_by_id(base).switches;
+        let mut overrides = Vec::with_capacity(draft.overrides.len());
+        for (g, p) in &draft.overrides {
+            let group = ModuleGroup::parse(g)
+                .with_context(|| format!("policy {name:?}: bad override group"))?;
+            let prec = ModulePrecision::parse(p)
+                .with_context(|| format!("policy {name:?}: bad override precision"))?;
+            effective.set(group, prec == ModulePrecision::Int8);
+            overrides.push((group, prec));
+        }
+        let mut fallback = Vec::with_capacity(draft.fallback.len());
+        for m in &draft.fallback {
+            fallback.push(
+                self.mode_id(m)
+                    .with_context(|| format!("policy {name:?}: bad fallback mode"))?,
+            );
+        }
+        let exec_mode = self.exec_mode_for(effective, &fallback).with_context(|| {
+            format!(
+                "policy {name:?}: no mode artifact matches switches {} and no fallback \
+                 escalates (fallback {:?}, modes {:?})",
+                effective.tag(),
+                draft.fallback,
+                self.mode_order
+            )
+        })?;
+        Ok(PolicySpec {
+            name: name.to_string(),
+            base,
+            overrides,
+            fallback,
+            effective,
+            exec_mode,
         })
+    }
+
+    fn exec_mode_for(&self, effective: Switches, fallback: &[ModeId]) -> Option<ModeId> {
+        for (i, name) in self.mode_order.iter().enumerate() {
+            if self.modes[name].switches == effective {
+                return Some(ModeId(i as u16));
+            }
+        }
+        fallback
+            .iter()
+            .copied()
+            .find(|m| self.mode_by_id(*m).switches.subset_of(&effective))
+    }
+
+    /// Intern an inline (wire v2) draft into the fixed `PolicyId` space:
+    /// an identical manifest policy wins (stats attribute to its name),
+    /// else the uniform policy of the draft's executable mode — identical
+    /// execution, and the id space never grows after load.
+    pub fn intern_inline_policy(&self, draft: &PolicyDraft) -> Result<PolicyId> {
+        let spec = self.resolve_policy("<inline>", draft)?;
+        for (i, name) in self.policy_order.iter().enumerate() {
+            let p = &self.policies[name];
+            if p.base == spec.base && p.overrides == spec.overrides && p.fallback == spec.fallback
+            {
+                return Ok(PolicyId(i as u16));
+            }
+        }
+        Ok(PolicyId(spec.exec_mode.0))
     }
 
     pub fn mode(&self, name: &str) -> Result<&ModeSpec> {
@@ -330,6 +715,10 @@ impl Manifest {
         self.mode_order.len()
     }
 
+    pub fn num_policies(&self) -> usize {
+        self.policy_order.len()
+    }
+
     pub fn num_buckets(&self) -> usize {
         self.buckets.len()
     }
@@ -348,6 +737,13 @@ impl Manifest {
             .with_context(|| format!("unknown mode {name:?} (have {:?})", self.mode_order))
     }
 
+    /// Resolve a policy name (uniform mode names included) to its dense id.
+    pub fn policy_id(&self, name: &str) -> Result<PolicyId> {
+        intern_position(&self.policy_order, name)
+            .map(PolicyId)
+            .with_context(|| format!("unknown policy {name:?} (have {:?})", self.policy_order))
+    }
+
     pub fn task_name(&self, id: TaskId) -> &str {
         &self.task_order[id.index()]
     }
@@ -362,6 +758,20 @@ impl Manifest {
 
     pub fn mode_by_id(&self, id: ModeId) -> &ModeSpec {
         &self.modes[&self.mode_order[id.index()]]
+    }
+
+    pub fn policy_name(&self, id: PolicyId) -> &str {
+        &self.policy_order[id.index()]
+    }
+
+    pub fn policy_by_id(&self, id: PolicyId) -> &PolicySpec {
+        &self.policies[&self.policy_order[id.index()]]
+    }
+
+    pub fn policy(&self, name: &str) -> Result<&PolicySpec> {
+        self.policies
+            .get(name)
+            .with_context(|| format!("unknown policy {name:?} (have {:?})", self.policy_order))
     }
 
     /// Dense index of an exact bucket size (for `Vec`-indexed exe tables).
@@ -406,6 +816,8 @@ mod tests {
             calib: CalibSpec { artifact: String::new(), batch: 16, params: vec![], stats: vec![] },
             tasks: BTreeMap::new(),
             task_order: vec![],
+            policies: BTreeMap::new(),
+            policy_order: vec![],
             micro: BTreeMap::new(),
         };
         assert_eq!(man.bucket_for(1), 1);
@@ -430,6 +842,8 @@ mod tests {
             calib: CalibSpec { artifact: String::new(), batch: 16, params: vec![], stats: vec![] },
             tasks: BTreeMap::new(),
             task_order: vec!["cola".into(), "sst2".into()],
+            policies: BTreeMap::new(),
+            policy_order: vec![],
             micro: BTreeMap::new(),
         };
         assert_eq!(man.task_id("sst2").unwrap(), TaskId(1));
@@ -450,5 +864,67 @@ mod tests {
         sw.embedding = true;
         sw.fc1 = true;
         assert_eq!(sw.tag(), "100010");
+    }
+
+    #[test]
+    fn switches_groups_and_subset() {
+        let mut sw = Switches::ALL_OFF;
+        sw.set(ModuleGroup::Qkv, true);
+        sw.set(ModuleGroup::Fc2, true);
+        assert!(sw.get(ModuleGroup::Qkv) && sw.get(ModuleGroup::Fc2));
+        assert!(!sw.get(ModuleGroup::Attn));
+        assert_eq!(sw.tag(), "010001");
+
+        let mut wider = sw;
+        wider.set(ModuleGroup::Attn, true);
+        assert!(sw.subset_of(&wider));
+        assert!(!wider.subset_of(&sw));
+        assert!(Switches::ALL_OFF.subset_of(&sw));
+    }
+
+    #[test]
+    fn module_group_parse_round_trips_and_rejects() {
+        for g in ModuleGroup::ALL.iter().copied() {
+            assert_eq!(ModuleGroup::parse(g.name()).unwrap(), g);
+        }
+        let err = ModuleGroup::parse("fc9").unwrap_err().to_string();
+        assert!(err.contains("unknown module group") && err.contains("attn_output"), "{err}");
+        assert_eq!(ModulePrecision::parse("fp16").unwrap(), ModulePrecision::Fp);
+        assert_eq!(ModulePrecision::parse("int8").unwrap(), ModulePrecision::Int8);
+        assert!(ModulePrecision::parse("int4").is_err());
+    }
+
+    #[test]
+    fn policy_draft_json_round_trip() {
+        let draft = PolicyDraft::base("m3")
+            .with_override("attn_output", "fp")
+            .with_fallback("m1")
+            .with_fallback("fp");
+        let parsed = PolicyDraft::from_json(&draft.to_json()).unwrap();
+        assert_eq!(parsed, draft);
+        // minimal form: base only
+        let minimal = PolicyDraft::base("fp");
+        assert_eq!(PolicyDraft::from_json(&minimal.to_json()).unwrap(), minimal);
+        // malformed: missing base / non-pair override
+        assert!(PolicyDraft::from_json(&json::parse(r#"{}"#).unwrap()).is_err());
+        let bad = json::parse(r#"{"base": "m3", "overrides": [["qkv"]]}"#).unwrap();
+        assert!(PolicyDraft::from_json(&bad).is_err());
+        // misspelled key must error, not silently drop the overrides
+        let typo = json::parse(r#"{"base": "m3", "override": [["qkv", "fp"]]}"#).unwrap();
+        let err = PolicyDraft::from_json(&typo).unwrap_err().to_string();
+        assert!(err.contains("unknown policy key"), "{err}");
+    }
+
+    #[test]
+    fn task_checkpoint_rel_per_mode() {
+        let task = TaskSpec {
+            name: "sst2".into(),
+            classes: 2,
+            metrics: vec!["acc".into()],
+            splits: BTreeMap::new(),
+            checkpoint: "checkpoints/sst2/fp32.bin".into(),
+        };
+        assert_eq!(task.checkpoint_rel("fp"), "checkpoints/sst2/fp32.bin");
+        assert_eq!(task.checkpoint_rel("m3"), "checkpoints/sst2/hero-m3.bin");
     }
 }

@@ -7,6 +7,7 @@ pub mod tensor;
 
 pub use container::Container;
 pub use manifest::{
-    CalibSpec, Manifest, ModeId, ModeSpec, ModelCfg, ParamSpec, Switches, TaskId, TaskSpec,
+    CalibSpec, Manifest, ModeId, ModeSpec, ModelCfg, ModuleGroup, ModulePrecision, ParamSpec,
+    PolicyDraft, PolicyId, PolicySpec, Switches, TaskId, TaskSpec,
 };
 pub use tensor::{DType, Tensor, TensorData};

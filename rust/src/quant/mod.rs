@@ -12,4 +12,6 @@ pub use schemes::{
     quantize_weight_colwise, round_ties_even, scale_from_absmax, scale_from_max_nonneg,
     sym_quantize_one, QMAX,
 };
-pub use transform::{quantize_checkpoint, validate_against_mode, AggStats, LayerScales};
+pub use transform::{
+    quantize_checkpoint, validate_against_mode, validate_for_policy, AggStats, LayerScales,
+};

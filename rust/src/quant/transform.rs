@@ -6,7 +6,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::model::container::Container;
-use crate::model::manifest::{ModelCfg, ModeSpec, Switches};
+use crate::model::manifest::{Manifest, ModelCfg, ModeSpec, PolicySpec, Switches};
 use crate::model::tensor::Tensor;
 
 use super::fold::fold_fwq_in_fwq_out;
@@ -250,6 +250,25 @@ pub fn quantize_checkpoint(
         out.push(name, fp.get(name).with_context(|| name.to_string())?.clone());
     }
     Ok(out)
+}
+
+/// Validate a quantized checkpoint against a precision policy: the
+/// checkpoint must carry the signature of the policy's *executable* mode
+/// (per-module overrides change which artifact serves the request, never
+/// the checkpoint layout of that artifact).  The error names the policy
+/// and, when escalation kicked in, the effective-vs-executed switch tags
+/// so a mismatch is debuggable from the message alone.
+pub fn validate_for_policy(ckpt: &Container, man: &Manifest, policy: &PolicySpec) -> Result<()> {
+    let mode = man.mode_by_id(policy.exec_mode);
+    validate_against_mode(ckpt, mode).with_context(|| {
+        format!(
+            "policy {:?} (effective switches {}, executes mode {:?} / {})",
+            policy.name,
+            policy.effective.tag(),
+            mode.name,
+            mode.switches.tag()
+        )
+    })
 }
 
 /// Validate a quantized checkpoint against the manifest's mode signature:

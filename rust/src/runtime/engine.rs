@@ -8,7 +8,10 @@
 //! device never idles waiting on a host copy.  Readback results
 //! (de-batching, reply dispatch) are handed to the shared
 //! `exec::ThreadPool` instead of blocking the engine thread.  Jobs carry
-//! only interned `TaskId`/`ModeId` — no strings on the hot path.
+//! only interned `TaskId`/`PolicyId` — no strings on the hot path; the
+//! engine selects the executable through its mirrored `policy -> exec
+//! mode` table (manifest-derived, so it agrees with the coordinator's
+//! without a handshake — DESIGN.md §6.3).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -19,7 +22,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use crate::exec::ThreadPool;
-use crate::model::manifest::{Manifest, ModeId, TaskId};
+use crate::model::manifest::{Manifest, ModeId, PolicyId, TaskId};
 use crate::model::tensor::Tensor;
 use crate::model::Container;
 
@@ -33,7 +36,9 @@ pub type Completion = Box<dyn FnOnce(Result<InferDone>) + Send + 'static>;
 
 pub struct InferJob {
     pub task: TaskId,
-    pub mode: ModeId,
+    /// Interned precision policy; the engine maps it to its executable
+    /// mode via the mirrored `policy_exec` table.
+    pub policy: PolicyId,
     /// Pooled host buffers: `bucket * seq` ids/type_ids/mask.  Recycled to
     /// the staging pool by the engine right after the device upload.
     pub staging: StagingBuf,
@@ -54,6 +59,19 @@ enum Msg {
     Stop,
 }
 
+/// Route/policy tables mirrored out of the engine-side manifest at
+/// startup: both sides derive ids from the same `manifest.json`, so the
+/// coordinator's and engine's tables are identical by construction (the
+/// parity the policy integration tests pin).
+struct RouteTables {
+    tasks: Vec<String>,
+    modes: Vec<String>,
+    policies: Vec<String>,
+    /// `[policy] -> executable mode` — the engine-side half of policy
+    /// executable selection.
+    policy_exec: Vec<ModeId>,
+}
+
 /// `Send` handle to the engine thread.
 pub struct Engine {
     tx: Sender<Msg>,
@@ -62,6 +80,8 @@ pub struct Engine {
     /// (CLI/test) callers can resolve names without loading it again.
     tasks: Vec<String>,
     modes: Vec<String>,
+    policies: Vec<String>,
+    policy_exec: Vec<ModeId>,
 }
 
 /// Engine tuning knobs.
@@ -94,15 +114,22 @@ impl Engine {
         options: EngineOptions,
     ) -> Result<Engine> {
         let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<Result<(Vec<String>, Vec<String>)>>();
+        let (ready_tx, ready_rx) = channel::<Result<RouteTables>>();
         let join = std::thread::Builder::new()
             .name("zqhero-engine".into())
             .spawn(move || engine_main(artifacts, preload, precompile, rx, ready_tx, pool, staging, options))
             .context("spawning engine thread")?;
-        let (tasks, modes) = ready_rx
+        let tables = ready_rx
             .recv()
             .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Engine { tx, join: Some(join), tasks, modes })
+        Ok(Engine {
+            tx,
+            join: Some(join),
+            tasks: tables.tasks,
+            modes: tables.modes,
+            policies: tables.policies,
+            policy_exec: tables.policy_exec,
+        })
     }
 
     /// Enqueue a job; on failure (engine gone) the job is handed back so
@@ -126,12 +153,35 @@ impl Engine {
             .with_context(|| format!("unknown mode {name:?}"))
     }
 
-    /// Synchronous convenience call (CLI paths, tests).  `ids`/`type_ids`
-    /// are `[bucket * seq]`; the mask is derived from PAD positions.
+    /// Resolve a policy name against the engine's mirrored table (uniform
+    /// mode names included).
+    pub fn policy_id(&self, name: &str) -> Result<PolicyId> {
+        crate::model::manifest::intern_position(&self.policies, name)
+            .map(PolicyId)
+            .with_context(|| format!("unknown policy {name:?} (have {:?})", self.policies))
+    }
+
+    /// The mirrored policy-name table (parity checks against the
+    /// coordinator's `Manifest::policy_order`).
+    pub fn policy_names(&self) -> &[String] {
+        &self.policies
+    }
+
+    /// The executable mode this policy selects on the engine.
+    pub fn policy_exec_mode(&self, policy: PolicyId) -> Result<ModeId> {
+        self.policy_exec
+            .get(policy.index())
+            .copied()
+            .with_context(|| format!("PolicyId {} out of range", policy.0))
+    }
+
+    /// Synchronous convenience call (CLI paths, tests).  `route` is a
+    /// policy name (uniform mode names work).  `ids`/`type_ids` are
+    /// `[bucket * seq]`; the mask is derived from PAD positions.
     pub fn infer_blocking(
         &self,
         task: &str,
-        mode: &str,
+        route: &str,
         bucket: usize,
         ids: Vec<i32>,
         type_ids: Vec<i32>,
@@ -141,7 +191,7 @@ impl Engine {
         let (reply, rx) = channel();
         self.submit(InferJob {
             task: self.task_id(task)?,
-            mode: self.mode_id(mode)?,
+            policy: self.policy_id(route)?,
             staging,
             done: Box::new(move |res| {
                 let _ = reply.send(res);
@@ -187,7 +237,7 @@ fn engine_main(
     preload: Vec<(String, String, Container)>,
     precompile: Vec<(String, usize)>,
     rx: Receiver<Msg>,
-    ready_tx: Sender<Result<(Vec<String>, Vec<String>)>>,
+    ready_tx: Sender<Result<RouteTables>>,
     pool: Arc<ThreadPool>,
     staging: Arc<StagingPool>,
     options: EngineOptions,
@@ -199,16 +249,35 @@ fn engine_main(
             return;
         }
     };
-    let mut init = || -> Result<(Vec<String>, Vec<String>)> {
+    let mut init = || -> Result<RouteTables> {
         for (task, mode, ckpt) in &preload {
             rt.upload_checkpoint(task, mode, ckpt)?;
         }
         for (mode, bucket) in &precompile {
             rt.model_exe(mode, *bucket)?;
         }
-        Ok((rt.manifest.task_order.clone(), rt.manifest.mode_order.clone()))
+        let man = &rt.manifest;
+        Ok(RouteTables {
+            tasks: man.task_order.clone(),
+            modes: man.mode_order.clone(),
+            policies: man.policy_order.clone(),
+            policy_exec: man
+                .policy_order
+                .iter()
+                .map(|p| man.policies[p].exec_mode)
+                .collect(),
+        })
     };
-    if ready_tx.send(init()).is_err() {
+    let tables = match init() {
+        Ok(t) => t,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    // keep the engine thread's own copy of executable selection
+    let policy_exec = tables.policy_exec.clone();
+    if ready_tx.send(Ok(tables)).is_err() {
         return;
     }
 
@@ -235,7 +304,16 @@ fn engine_main(
             Some(Msg::Stop) | None => break,
         };
 
-        let InferJob { task, mode, staging: host, done } = job;
+        let InferJob { task, policy, staging: host, done } = job;
+        // Executable selection: policy -> mode through the mirrored table.
+        let mode = match policy_exec.get(policy.index()) {
+            Some(m) => *m,
+            None => {
+                staging.put(host);
+                pool.spawn(move || done(Err(anyhow!("PolicyId {} out of range", policy.0))));
+                continue;
+            }
+        };
         let t0 = Instant::now();
         // Stage 1: upload this batch's inputs (overlaps the previous
         // batch's device execution), then recycle the host buffers.

@@ -341,6 +341,23 @@ impl Runtime {
         self.readback_logits(pending)
     }
 
+    /// Cold-path policy wrapper: resolve a precision policy (uniform mode
+    /// names work too) to its executable mode, then run the three
+    /// pipeline stages back-to-back.
+    pub fn infer_policy(
+        &mut self,
+        task: &str,
+        policy: &str,
+        bucket: usize,
+        ids: &[i32],
+        type_ids: &[i32],
+        mask: &[f32],
+    ) -> Result<Tensor> {
+        let task = self.manifest.task_id(task)?;
+        let exec = self.manifest.policy(policy)?.exec_mode;
+        self.infer_ids(task, exec, bucket, ids, type_ids, mask)
+    }
+
     /// Run the calibration-instrumented artifact for one batch; returns
     /// (logits, stats in manifest order).
     pub fn calibrate_batch(

@@ -1,0 +1,32 @@
+//! Shared fixtures for the artifact-gated integration suites.  Each test
+//! crate compiles its own copy (`mod common;`), so helpers unused by a
+//! particular crate are expected.
+#![allow(dead_code)]
+
+use std::path::{Path, PathBuf};
+
+use zqhero::model::manifest::Manifest;
+use zqhero::runtime::Runtime;
+
+/// The generated artifacts dir, or None (self-skip) on a bare checkout.
+pub fn artifacts() -> Option<PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("skipping artifact-gated tests: run `make artifacts` first");
+        None
+    }
+}
+
+/// Ensure the quantized checkpoint for (task, mode) exists on disk
+/// (small 4-batch calibration — fixture speed over fidelity).
+pub fn ensure_quantized(dir: &Path, task: &str, mode: &str) {
+    use zqhero::evalharness as eh;
+    let mut rt = Runtime::new(Manifest::load(dir).unwrap()).unwrap();
+    let spec = rt.manifest.task(task).unwrap().clone();
+    if !rt.manifest.path(&spec.checkpoint_rel(mode)).exists() {
+        let hist = eh::ensure_calibration(&mut rt, &spec, 4, false).unwrap();
+        eh::quantize_task(&mut rt, &spec, mode, &hist, 100.0, None).unwrap();
+    }
+}

@@ -2,23 +2,19 @@
 //! engine -> completion, with correct per-request row mapping.
 //! Gated on `make artifacts`.
 
-use std::path::{Path, PathBuf};
+mod common;
+
 use std::time::Duration;
 
-use zqhero::coordinator::{Coordinator, ServerConfig};
+use common::artifacts;
+use zqhero::coordinator::{Coordinator, RequestSpec, ServerConfig};
 use zqhero::data::Split;
 use zqhero::model::manifest::Manifest;
 use zqhero::model::Container;
 use zqhero::runtime::Runtime;
 
-fn artifacts() -> Option<PathBuf> {
-    let p = Path::new("artifacts");
-    if p.join("manifest.json").exists() {
-        Some(p.to_path_buf())
-    } else {
-        eprintln!("skipping coordinator tests: run `make artifacts` first");
-        None
-    }
+fn spec(task: &str, policy: &str, ids: &[i32], tys: &[i32]) -> RequestSpec {
+    RequestSpec::task(task).policy(policy).ids(ids.to_vec()).type_ids(tys.to_vec())
 }
 
 #[test]
@@ -45,9 +41,7 @@ fn serve_fp_requests_end_to_end() {
     let mut rxs = Vec::new();
     for i in 0..n {
         let (ids, tys) = split.row(i);
-        let rx = coord
-            .submit("cola", "fp", ids.to_vec(), tys.to_vec())
-            .unwrap();
+        let rx = coord.submit(spec("cola", "fp", ids, tys)).unwrap();
         rxs.push(rx);
     }
     let mut responses = Vec::new();
@@ -98,8 +92,11 @@ fn rejects_malformed_and_applies_backpressure_shape() {
         ServerConfig { queue_cap: 4, ..Default::default() },
     )
     .unwrap();
-    // wrong seq length is rejected before admission
-    assert!(coord.submit("cola", "fp", vec![1, 2, 3], vec![0, 0, 0]).is_err());
+    // empty and oversized payloads are rejected before admission
+    // (short-but-nonempty ids are padded to seq, so they are fine)
+    assert!(coord.submit(RequestSpec::task("cola").mode("fp")).is_err());
+    let huge = vec![1i32; coord.seq() + 1];
+    assert!(coord.submit(RequestSpec::task("cola").mode("fp").ids(huge)).is_err());
 }
 
 #[test]
@@ -107,4 +104,35 @@ fn unknown_checkpoint_fails_at_startup() {
     let Some(dir) = artifacts() else { return };
     let pairs = vec![("cola".to_string(), "m9".to_string())];
     assert!(Coordinator::start(dir, &pairs, ServerConfig::default()).is_err());
+}
+
+#[test]
+fn policy_tables_agree_between_coordinator_and_engine() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Coordinator::start(dir, &pairs, ServerConfig::default()).unwrap();
+    let man = coord.manifest();
+    let engine = coord.engine();
+
+    // both sides derive the PolicyId space from the same manifest.json —
+    // same names, same order, same executable mode per policy
+    assert_eq!(engine.policy_names(), man.policy_order.as_slice());
+    for name in &man.policy_order {
+        let cid = man.policy_id(name).unwrap();
+        let eid = engine.policy_id(name).unwrap();
+        assert_eq!(cid.0, eid.0, "policy {name}: id mismatch");
+        assert_eq!(
+            engine.policy_exec_mode(eid).unwrap(),
+            man.policy_by_id(cid).exec_mode,
+            "policy {name}: exec mode mismatch"
+        );
+    }
+    // the uniform prefix coincides with the mode table on both sides
+    for name in &man.mode_order {
+        assert_eq!(
+            engine.policy_id(name).unwrap().0,
+            engine.mode_id(name).unwrap().0,
+            "uniform policy {name} must share the mode index"
+        );
+    }
 }

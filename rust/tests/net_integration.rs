@@ -1,24 +1,16 @@
 //! TCP front-end integration: JSON requests over a real socket through the
 //! full serving stack.  Gated on `make artifacts`.
 
-use std::path::Path;
+mod common;
+
 use std::sync::Arc;
 use std::time::Duration;
 
-use zqhero::coordinator::{Coordinator, NetClient, NetServer, ServerConfig};
+use common::{artifacts, ensure_quantized};
+use zqhero::coordinator::{Coordinator, NetClient, NetServer, RequestSpec, ServerConfig};
 use zqhero::data::Split;
 use zqhero::json::Value;
-use zqhero::model::manifest::Manifest;
-
-fn artifacts() -> Option<std::path::PathBuf> {
-    let p = Path::new("artifacts");
-    if p.join("manifest.json").exists() {
-        Some(p.to_path_buf())
-    } else {
-        eprintln!("skipping net integration tests: run `make artifacts` first");
-        None
-    }
-}
+use zqhero::model::manifest::{Manifest, PolicyDraft};
 
 #[test]
 fn tcp_round_trip_and_errors() {
@@ -74,6 +66,88 @@ fn tcp_round_trip_and_errors() {
     let resp = client.request("cola", "fp", &ids[..10]).unwrap();
     assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
     assert!(server.served.load(std::sync::atomic::Ordering::SeqCst) >= 8);
+}
+
+/// Acceptance: a per-module-override policy submitted through NetClient
+/// executes end to end (admission -> PolicyId grouping -> engine
+/// executable selection), and v1 string-mode requests still round-trip
+/// through the compatibility shim on the same connection.
+#[test]
+fn v2_policy_round_trip_and_v1_shim() {
+    let Some(dir) = artifacts() else { return };
+    ensure_quantized(&dir, "cola", "m1");
+    // routes: the fp reference plus m1 — the executable mode the
+    // attn-output-fp policy escalates to
+    let pairs = vec![("cola".to_string(), "fp".to_string()), ("cola".to_string(), "m1".to_string())];
+    let coord = Arc::new(
+        Coordinator::start(
+            dir.clone(),
+            &pairs,
+            ServerConfig { max_batch: 4, max_wait: Duration::from_millis(2), ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1", 0).unwrap();
+    let mut client = NetClient::connect(&server.addr).unwrap();
+
+    let man = Manifest::load(&dir).unwrap();
+    let split = Split::load(&man, man.task("cola").unwrap(), "dev").unwrap();
+    let (ids, _) = split.row(0);
+
+    // inline per-module-override policy: m3 minus attn_output matches no
+    // artifact, the chain escalates to m1.  The interned name depends on
+    // whether the manifest ships an identical named policy — compute it.
+    let draft = PolicyDraft::base("m3")
+        .with_override("attn_output", "fp")
+        .with_fallback("m2")
+        .with_fallback("m1")
+        .with_fallback("fp");
+    let interned = man.intern_inline_policy(&draft).unwrap();
+    let interned_name = man.policy_name(interned).to_string();
+    assert_eq!(man.policy_by_id(interned).exec_mode, man.mode_id("m1").unwrap());
+    for _ in 0..6 {
+        let spec = RequestSpec::task("cola").policy_inline(draft.clone()).ids(ids.to_vec());
+        let resp = client.request_spec(&spec).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get("v").unwrap().as_usize(), Some(2));
+        assert_eq!(resp.get("mode").unwrap().as_str(), Some("m1"), "{resp:?}");
+        assert_eq!(resp.get("policy").unwrap().as_str(), Some(interned_name.as_str()));
+        let logits = resp.get("logits").unwrap().as_array().unwrap();
+        assert_eq!(logits.len(), man.model.num_labels);
+        assert!(logits.iter().all(|v| v.as_f64().unwrap().is_finite()));
+    }
+
+    // named uniform policy over v2
+    let resp = client
+        .request_spec(&RequestSpec::task("cola").policy("fp").ids(ids.to_vec()))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("policy").unwrap().as_str(), Some("fp"));
+    assert_eq!(resp.get("mode").unwrap().as_str(), Some("fp"));
+
+    // v1 shim on the same connection: v1-shaped response (no "v" key)
+    let resp = client.request("cola", "fp", &ids[..8]).unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    assert!(resp.get("v").is_none());
+    assert!(resp.get("logits").unwrap().as_array().unwrap().len() == man.model.num_labels);
+
+    // per-policy stats landed on the interned policy's slot (PolicyId
+    // grouping through the batcher)
+    let snap = coord.recorder.snapshot();
+    assert!(
+        snap[&interned_name].requests >= 6,
+        "{interned_name} stats: {:?}",
+        snap[&interned_name].requests
+    );
+    assert!(snap["fp"].requests >= 2);
+
+    // unresolvable inline policy -> structured error, connection survives
+    let bad = PolicyDraft::base("m3").with_override("attn", "fp");
+    let resp = client
+        .request_spec(&RequestSpec::task("cola").policy_inline(bad).ids(ids.to_vec()))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("no mode artifact"));
 }
 
 #[test]

@@ -4,35 +4,16 @@
 //! with the blocking pre-pipeline path, and panic isolation in the
 //! readback/completion stage.  Gated on `make artifacts`.
 
-use std::path::{Path, PathBuf};
+mod common;
+
 use std::time::Duration;
 
-use zqhero::coordinator::{Coordinator, Response, ServerConfig};
+use common::{artifacts, ensure_quantized};
+use zqhero::coordinator::{Coordinator, RequestSpec, Response, ServerConfig};
 use zqhero::data::Split;
 use zqhero::evalharness as eh;
 use zqhero::model::manifest::Manifest;
 use zqhero::runtime::Runtime;
-
-fn artifacts() -> Option<PathBuf> {
-    let p = Path::new("artifacts");
-    if p.join("manifest.json").exists() {
-        Some(p.to_path_buf())
-    } else {
-        eprintln!("skipping pipeline tests: run `make artifacts` first");
-        None
-    }
-}
-
-/// Ensure the quantized checkpoint for (task, mode) exists on disk.
-fn ensure_quantized(dir: &Path, task: &str, mode: &str) {
-    let mut rt = Runtime::new(Manifest::load(dir).unwrap()).unwrap();
-    let spec = rt.manifest.task(task).unwrap().clone();
-    let rel = zqhero::coordinator::checkpoint_rel(&spec, mode);
-    if !rt.manifest.path(&rel).exists() {
-        let hist = eh::ensure_calibration(&mut rt, &spec, 4, false).unwrap();
-        eh::quantize_task(&mut rt, &spec, mode, &hist, 100.0, None).unwrap();
-    }
-}
 
 fn config(pipeline: bool) -> ServerConfig {
     ServerConfig {
@@ -62,7 +43,9 @@ fn flood(
             let burst = bursts[b % bursts.len()].min(per_route - sent[gi]);
             for _ in 0..burst {
                 let (ids, tys) = payload[sent[gi] % payload.len()].clone();
-                let rx = coord.submit(task, mode, ids, tys).expect("admitted");
+                let rx = coord
+                    .submit(RequestSpec::task(task).policy(mode).ids(ids).type_ids(tys))
+                    .expect("admitted");
                 rxs[gi].push(rx);
                 sent[gi] += 1;
             }
@@ -172,7 +155,9 @@ fn unknown_route_rejected_at_admission() {
     // manifest-unknown task and known-but-unloaded mode both fail fast,
     // with an error that names the missing checkpoint
     for (task, mode) in [("nope", "fp"), ("cola", "m3")] {
-        let err = coord.submit(task, mode, vec![1; seq], vec![0; seq]).unwrap_err();
+        let err = coord
+            .submit(RequestSpec::task(task).policy(mode).ids(vec![1; seq]).type_ids(vec![0; seq]))
+            .unwrap_err();
         assert!(err.to_string().contains("checkpoint"), "{err}");
     }
 }
@@ -194,7 +179,9 @@ fn readback_stage_panic_is_isolated() {
 
     // batch 0's completion panics on the worker pool: its requests get a
     // hangup, never a wrong answer
-    let rx = coord.submit("cola", "fp", ids.to_vec(), tys.to_vec()).unwrap();
+    let rx = coord
+        .submit(RequestSpec::task("cola").mode("fp").ids(ids.to_vec()).type_ids(tys.to_vec()))
+        .unwrap();
     match rx.recv_timeout(Duration::from_secs(120)) {
         Err(_) => {} // reply sender dropped by the panicking completion
         Ok(resp) => panic!("poisoned batch must not reply, got {resp:?}"),
@@ -203,7 +190,9 @@ fn readback_stage_panic_is_isolated() {
     // the engine thread and worker pool survive: subsequent traffic flows
     for i in 0..10 {
         let (ids, tys) = split.row(i % split.len());
-        let rx = coord.submit("cola", "fp", ids.to_vec(), tys.to_vec()).unwrap();
+        let rx = coord
+            .submit(RequestSpec::task("cola").mode("fp").ids(ids.to_vec()).type_ids(tys.to_vec()))
+            .unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert!(resp.timing.batch_seq >= 1);

@@ -1,0 +1,246 @@
+//! PrecisionPolicy API unit suite (DESIGN.md §6) — exercises the
+//! manifest `policies` section, resolution/escalation, `PolicyId`
+//! interning and the v1→v2 wire shim WITHOUT a generated artifacts dir,
+//! via `Manifest::from_json_str`.
+
+use std::path::Path;
+
+use zqhero::coordinator::net::{parse_request, request_to_json};
+use zqhero::coordinator::PolicyRef;
+use zqhero::json;
+use zqhero::model::manifest::{Manifest, ModeId, PolicyDraft, PolicyId};
+
+/// Minimal manifest with the paper's four Table-1 modes; `policies` is
+/// spliced in (empty string = no section).
+fn manifest_src(policies: &str) -> String {
+    let sw = |e: bool, q: bool, a: bool, o: bool, f1: bool, f2: bool| {
+        format!(
+            r#"{{"switches": {{"embedding": {e}, "qkv": {q}, "attn": {a},
+                 "attn_output": {o}, "fc1": {f1}, "fc2": {f2}}},
+                "params": [], "artifacts": {{}}}}"#
+        )
+    };
+    let policies_section = if policies.is_empty() {
+        String::new()
+    } else {
+        format!(r#""policies": {policies},"#)
+    };
+    format!(
+        r#"{{
+  "model": {{"vocab_size": 16, "hidden": 8, "layers": 1, "heads": 2,
+            "ffn": 16, "max_seq": 16, "type_vocab": 2, "num_labels": 2,
+            "ln_eps": 1e-12}},
+  "seq": 16,
+  "buckets": [1, 4],
+  "modes": {{
+    "fp": {fp}, "m1": {m1}, "m2": {m2}, "m3": {m3}
+  }},
+  {policies_section}
+  "calib": {{"artifact": "c.hlo", "batch": 4, "params": [], "stats": []}},
+  "tasks": {{
+    "sst2": {{"classes": 2, "metrics": ["acc"], "splits": {{"dev": "d.bin"}},
+             "checkpoint": "checkpoints/sst2/fp32.bin"}}
+  }}
+}}"#,
+        fp = sw(false, false, false, false, false, false),
+        m1 = sw(true, true, false, false, true, false),
+        m2 = sw(true, true, true, true, true, false),
+        m3 = sw(true, true, true, true, true, true),
+    )
+}
+
+fn load(policies: &str) -> anyhow::Result<Manifest> {
+    Manifest::from_json_str(&manifest_src(policies), Path::new("unused"))
+}
+
+#[test]
+fn uniform_policies_share_mode_indices() {
+    let man = load("").unwrap();
+    assert_eq!(man.policy_order, man.mode_order);
+    assert_eq!(man.num_policies(), man.num_modes());
+    let names = man.mode_order.clone();
+    for name in &names {
+        let pid = man.policy_id(name).unwrap();
+        let mid = man.mode_id(name).unwrap();
+        assert_eq!(pid.0, mid.0, "uniform policy {name} must share the mode index");
+        let spec = man.policy_by_id(pid);
+        assert!(spec.is_uniform());
+        assert_eq!(spec.exec_mode, mid);
+    }
+    assert!(man.policy_id("nope").unwrap_err().to_string().contains("unknown policy"));
+}
+
+#[test]
+fn named_policy_exact_match_resolves_without_fallback() {
+    // m3 with fc2 recovered == exactly the m2 switch row
+    let man = load(r#"{"fc2-fp": {"base": "m3", "overrides": [["fc2", "fp"]]}}"#).unwrap();
+    let spec = man.policy("fc2-fp").unwrap();
+    assert_eq!(spec.exec_mode, man.mode_id("m2").unwrap());
+    assert_eq!(spec.effective.tag(), "111110");
+    assert!(!spec.is_uniform());
+    // appended after the uniform prefix
+    assert_eq!(man.policy_id("fc2-fp").unwrap(), PolicyId(4));
+    assert_eq!(man.policy_name(PolicyId(4)), "fc2-fp");
+}
+
+#[test]
+fn fallback_escalates_precision_only() {
+    // m3 minus attn_output (111011) matches no artifact; m2 (111110)
+    // would *re-quantize* attn_output so it must be skipped; m1 (110010)
+    // only escalates -> wins.
+    let man = load(
+        r#"{"attn-out-fp": {"base": "m3", "overrides": [["attn_output", "fp"]],
+                            "fallback": ["m2", "m1", "fp"]}}"#,
+    )
+    .unwrap();
+    let spec = man.policy("attn-out-fp").unwrap();
+    assert_eq!(spec.effective.tag(), "111011");
+    assert_eq!(spec.exec_mode, man.mode_id("m1").unwrap());
+}
+
+#[test]
+fn policy_error_paths_name_the_known_lists() {
+    // unknown base mode -> the known-mode list (Manifest::mode_id shape)
+    let chain = format!("{:#}", load(r#"{"p": {"base": "m9"}}"#).unwrap_err());
+    assert!(chain.contains("unknown mode") && chain.contains("m9"), "{chain}");
+    assert!(chain.contains("fp") && chain.contains("m3"), "{chain}");
+
+    // unknown module group in an override -> the group list
+    let chain = format!(
+        "{:#}",
+        load(r#"{"p": {"base": "m3", "overrides": [["fc9", "fp"]]}}"#).unwrap_err()
+    );
+    assert!(chain.contains("unknown module group") && chain.contains("attn_output"), "{chain}");
+
+    // bad precision spelling
+    let chain = format!(
+        "{:#}",
+        load(r#"{"p": {"base": "m3", "overrides": [["fc2", "int4"]]}}"#).unwrap_err()
+    );
+    assert!(chain.contains("unknown precision"), "{chain}");
+
+    // unknown mode in the fallback chain
+    let chain = format!(
+        "{:#}",
+        load(
+            r#"{"p": {"base": "m3", "overrides": [["attn_output", "fp"]],
+                      "fallback": ["m7"]}}"#
+        )
+        .unwrap_err()
+    );
+    assert!(chain.contains("bad fallback mode"), "{chain}");
+
+    // unmatched switches with no usable fallback
+    let chain = format!(
+        "{:#}",
+        load(r#"{"p": {"base": "m3", "overrides": [["attn_output", "fp"]]}}"#).unwrap_err()
+    );
+    assert!(chain.contains("no mode artifact matches"), "{chain}");
+}
+
+#[test]
+fn duplicate_and_shadowing_policy_names_rejected() {
+    // our order-preserving JSON parser keeps duplicate keys, so the
+    // loader must reject them rather than silently last-wins
+    let dup = r#"{"p": {"base": "fp"}, "p": {"base": "m3"}}"#;
+    let chain = format!("{:#}", load(dup).unwrap_err());
+    assert!(chain.contains("duplicate policy"), "{chain}");
+
+    let shadow = r#"{"m3": {"base": "fp"}}"#;
+    let chain = format!("{:#}", load(shadow).unwrap_err());
+    assert!(chain.contains("shadows the mode"), "{chain}");
+}
+
+#[test]
+fn inline_interning_is_canonical() {
+    let man = load(
+        r#"{"attn-out-fp": {"base": "m3", "overrides": [["attn_output", "fp"]],
+                            "fallback": ["m2", "m1", "fp"]}}"#,
+    )
+    .unwrap();
+
+    // identical inline draft -> the named policy's id (stats keep its name)
+    let named = man
+        .intern_inline_policy(
+            &PolicyDraft::base("m3")
+                .with_override("attn_output", "fp")
+                .with_fallback("m2")
+                .with_fallback("m1")
+                .with_fallback("fp"),
+        )
+        .unwrap();
+    assert_eq!(named, man.policy_id("attn-out-fp").unwrap());
+
+    // novel draft -> uniform policy of its executable mode
+    let uniform = man
+        .intern_inline_policy(&PolicyDraft::base("m3").with_override("fc2", "fp"))
+        .unwrap();
+    assert_eq!(uniform, man.policy_id("m2").unwrap());
+    assert_eq!(man.policy_by_id(uniform).exec_mode, ModeId(2));
+
+    // a bare uniform draft -> the mode's own slot
+    let fp = man.intern_inline_policy(&PolicyDraft::base("fp")).unwrap();
+    assert_eq!(fp, man.policy_id("fp").unwrap());
+
+    // unresolvable inline drafts fail at interning, not downstream
+    assert!(man
+        .intern_inline_policy(&PolicyDraft::base("m3").with_override("attn", "fp"))
+        .is_err());
+}
+
+#[test]
+fn checkpoint_validation_reports_policy_context() {
+    use zqhero::model::{Container, Tensor};
+    use zqhero::quant::validate_for_policy;
+
+    let man = load(r#"{"fc2-fp": {"base": "m3", "overrides": [["fc2", "fp"]]}}"#).unwrap();
+    let policy = man.policy("fc2-fp").unwrap();
+
+    // the fixture modes declare empty signatures: an empty checkpoint
+    // validates, a non-empty one fails naming the policy and both tags
+    assert!(validate_for_policy(&Container::new(), &man, policy).is_ok());
+    let mut ckpt = Container::new();
+    ckpt.push("stray", Tensor::f32(vec![1], vec![0.0]));
+    let chain = format!("{:#}", validate_for_policy(&ckpt, &man, policy).unwrap_err());
+    assert!(chain.contains("fc2-fp") && chain.contains("111110"), "{chain}");
+}
+
+#[test]
+fn wire_shim_round_trip_preserves_route() {
+    let man = load(
+        r#"{"attn-out-fp": {"base": "m3", "overrides": [["attn_output", "fp"]],
+                            "fallback": ["m2", "m1", "fp"]}}"#,
+    )
+    .unwrap();
+
+    // v1 string-mode frame desugars to the mode's uniform policy...
+    let v1 = json::parse(r#"{"task": "sst2", "mode": "m3", "ids": [1, 2, 3]}"#).unwrap();
+    let (spec, version) = parse_request(&v1, man.seq).unwrap();
+    assert_eq!(version, 1);
+    let pid = match &spec.policy {
+        Some(PolicyRef::Named(n)) => man.policy_id(n).unwrap(),
+        other => panic!("expected named policy, got {other:?}"),
+    };
+    assert_eq!(pid, man.policy_id("m3").unwrap());
+
+    // ...and re-emitting the same spec as v2 interns to the same id
+    let (spec2, version2) = parse_request(&request_to_json(&spec), man.seq).unwrap();
+    assert_eq!(version2, 2);
+    assert_eq!(spec2.policy, spec.policy);
+    assert_eq!(spec2.ids, spec.ids);
+
+    // an inline v2 frame interns through the same table
+    let v2 = json::parse(
+        r#"{"v": 2, "task": "sst2",
+            "policy": {"base": "m3", "overrides": [["attn_output", "fp"]],
+                       "fallback": ["m2", "m1", "fp"]},
+            "ids": [1]}"#,
+    )
+    .unwrap();
+    let (spec3, _) = parse_request(&v2, man.seq).unwrap();
+    let pid3 = match &spec3.policy {
+        Some(PolicyRef::Inline(d)) => man.intern_inline_policy(d).unwrap(),
+        other => panic!("expected inline policy, got {other:?}"),
+    };
+    assert_eq!(pid3, man.policy_id("attn-out-fp").unwrap());
+}

@@ -64,6 +64,20 @@ fn fp_inference_runs_and_buckets_agree() {
             l4[i]
         );
     }
+
+    // the policy wrapper must agree with mode-name inference exactly:
+    // a uniform policy name resolves to the same executable
+    let lp = rt.infer_policy(&task.name, "fp", 1, ids, tys, &mask).unwrap();
+    let lp = lp.as_f32().unwrap();
+    for i in 0..nl {
+        assert_eq!(l1[i], lp[i], "policy wrapper diverged at logit {i}");
+    }
+    // unknown policy names fail with the known-policy list
+    let err = rt
+        .infer_policy(&task.name, "nope", 1, ids, tys, &mask)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown policy"), "{err}");
 }
 
 #[test]

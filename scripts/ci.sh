@@ -6,8 +6,13 @@
 # Integration tests and benches that need real artifacts self-skip when
 # `make artifacts` has not been run, so this script is safe on a bare
 # checkout.  Benches (e.g. `cargo run --release --bin e2e_serving` via
-# `benches/`) additionally emit BENCH_*.json trajectory files; those are
-# not part of the gate but should be committed when they change.
+# `benches/`) additionally emit BENCH_*.json trajectory files
+# (BENCH_e2e_serving.json, BENCH_precision_policy.json); those are not
+# part of the gate but should be committed when they change.
+#
+# The lint stages run with --all-targets so the typed PrecisionPolicy /
+# RequestSpec surface stays clean across lib, tests, benches and
+# examples — a stale call site anywhere fails the gate, not just in lib.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -29,8 +34,8 @@ echo "==> cargo test -q"
 cargo test -q
 
 if [ "$SKIP_CLIPPY" -eq 0 ]; then
-    echo "==> cargo clippy -- -D warnings"
-    cargo clippy -- -D warnings
+    echo "==> cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
 fi
 
 if [ "$SKIP_FMT" -eq 0 ]; then
