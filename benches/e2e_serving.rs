@@ -10,7 +10,13 @@
 //! fallback, all-FP) and writes per-policy p50/p99 to
 //! `BENCH_precision_policy.json`.
 //!
-//! Env: ZQH_REQUESTS (default 128), ZQH_TASK (default sst2).
+//! A third sweep runs the same closed loop against 1 vs N engine
+//! replicas behind the load-aware `EnginePool` dispatcher and writes
+//! throughput scaling plus per-replica batch counts to
+//! `BENCH_replica_scaling.json`.
+//!
+//! Env: ZQH_REQUESTS (default 128), ZQH_TASK (default sst2),
+//! ZQH_REPLICAS (default 2 — top of the replica sweep).
 
 use std::collections::VecDeque;
 use std::time::Duration;
@@ -43,6 +49,7 @@ fn run_load(
     let t0 = std::time::Instant::now();
     let mut inflight = VecDeque::new();
     let (mut submitted, mut done) = (0usize, 0usize);
+    let mut last_progress = std::time::Instant::now();
     let mut lat = Vec::with_capacity(requests);
     while done < requests {
         while submitted < requests && inflight.len() < concurrency {
@@ -55,12 +62,28 @@ fn run_load(
                 Ok(rx) => {
                     inflight.push_back(rx);
                     submitted += 1;
+                    last_progress = std::time::Instant::now();
                 }
                 Err(_) => break,
             }
         }
-        let rx = inflight.pop_front().expect("inflight");
+        let rx = match inflight.pop_front() {
+            Some(rx) => rx,
+            None => {
+                // backpressured with nothing of ours in flight (another
+                // concurrent route owns the queue): wait — but a stopped
+                // coordinator also presents as submit errors, so don't
+                // wait forever
+                assert!(
+                    last_progress.elapsed() < std::time::Duration::from_secs(30),
+                    "no progress for 30s ({done}/{requests}) — coordinator stalled or stopped"
+                );
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                continue;
+            }
+        };
         let resp = rx.recv().expect("resp");
+        last_progress = std::time::Instant::now();
         assert!(resp.error.is_none(), "{:?}", resp.error);
         lat.push(resp.timing.total_us as f64);
         done += 1;
@@ -278,6 +301,108 @@ fn main() {
     match std::fs::write("BENCH_precision_policy.json", json::to_string_pretty(&policy_report)) {
         Ok(()) => println!("\nwrote BENCH_precision_policy.json"),
         Err(e) => eprintln!("could not write BENCH_precision_policy.json: {e}"),
+    }
+
+    // ---- replica scaling sweep: the same closed loop against 1 vs N
+    // engine replicas behind the load-aware dispatcher (EnginePool).
+    // Two routes (fp + m3) keep two groups alive so per-group pinning
+    // and migration are exercised, not just raw fan-out.
+    let n_replicas: usize =
+        std::env::var("ZQH_REPLICAS").ok().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let sweep: Vec<usize> = if n_replicas > 1 { vec![1, n_replicas] } else { vec![1] };
+    let scale_modes = ["fp", "m3"];
+    println!("\nreplica scaling on {tname}: {requests} requests per mode per config\n");
+    let mut rt_tab = Table::new(&[
+        "replicas", "thr req/s (total)", "p50 ms (m3)", "p99 ms (m3)", "per-replica batches",
+    ]);
+    let mut cfg_objs: Vec<(String, Value)> = Vec::new();
+    let mut thr_by_cfg: Vec<(usize, f64)> = Vec::new();
+    for &n in &sweep {
+        let pairs: Vec<(String, String)> =
+            scale_modes.iter().map(|m| (tname.clone(), m.to_string())).collect();
+        let coord = Coordinator::start(
+            dir.clone(),
+            &pairs,
+            ServerConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(4),
+                queue_cap: 512,
+                completion_workers: 4,
+                replicas: n,
+                ..ServerConfig::default()
+            },
+        )
+        .expect("replica coordinator");
+        // drive both route groups concurrently: a single closed loop
+        // keeps only one group in flight, and per-group pinning would
+        // park every batch on one replica — concurrent groups are the
+        // load the pool exists to spread
+        let results: Vec<(&str, LoadResult)> = std::thread::scope(|s| {
+            let handles: Vec<_> = scale_modes
+                .iter()
+                .map(|m| {
+                    let coord = &coord;
+                    let rows = &rows;
+                    let tname = tname.as_str();
+                    s.spawn(move || {
+                        let policy = PolicyRef::Named(m.to_string());
+                        (*m, run_load(coord, tname, &policy, m, rows, requests, CONCURRENCY))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("load thread")).collect()
+        });
+        let mut thr_total = 0.0;
+        let mut m3_result: Option<LoadResult> = None;
+        for (m, r) in results {
+            thr_total += r.thr_rps;
+            if m == "m3" {
+                m3_result = Some(r);
+            }
+        }
+        let m3 = m3_result.expect("m3 swept");
+        let reps = coord.recorder.replica_snapshot();
+        let batches: Vec<u64> = reps.iter().map(|r| r.batches).collect();
+        let total_batches: u64 = batches.iter().sum();
+        rt_tab.row(vec![
+            n.to_string(),
+            format!("{thr_total:.1}"),
+            format!("{:.1}", m3.p50_ms),
+            format!("{:.1}", m3.p99_ms),
+            format!("{batches:?}"),
+        ]);
+        cfg_objs.push((
+            n.to_string(),
+            json::obj(vec![
+                ("thr_rps_total", json::num(thr_total)),
+                ("m3_p50_ms", json::num(m3.p50_ms)),
+                ("m3_p99_ms", json::num(m3.p99_ms)),
+                ("total_batches", json::num(total_batches as f64)),
+                (
+                    "per_replica_batches",
+                    Value::Array(batches.iter().map(|b| json::num(*b as f64)).collect()),
+                ),
+            ]),
+        ));
+        thr_by_cfg.push((n, thr_total));
+    }
+    rt_tab.print();
+
+    let base_thr = thr_by_cfg.first().map(|(_, t)| *t).unwrap_or(0.0);
+    let top_thr = thr_by_cfg.last().map(|(_, t)| *t).unwrap_or(0.0);
+    let scaling = if base_thr > 0.0 { top_thr / base_thr } else { 0.0 };
+    let scale_report = json::obj(vec![
+        ("bench", json::s("replica_scaling")),
+        ("task", json::s(&tname)),
+        ("requests_per_config", json::num(requests as f64)),
+        ("concurrency", json::num(CONCURRENCY as f64)),
+        ("max_replicas", json::num(n_replicas as f64)),
+        ("configs", Value::Object(cfg_objs)),
+        ("scaling_vs_single", json::num(scaling)),
+    ]);
+    match std::fs::write("BENCH_replica_scaling.json", json::to_string_pretty(&scale_report)) {
+        Ok(()) => println!("\nwrote BENCH_replica_scaling.json (scaling {scaling:.2}x)"),
+        Err(e) => eprintln!("could not write BENCH_replica_scaling.json: {e}"),
     }
     println!("(CPU PJRT testbed; A100 projections in hw_perf_model)");
 }

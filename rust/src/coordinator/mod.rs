@@ -13,4 +13,4 @@ pub use batcher::{Batch, Batcher};
 pub use request::{GroupKey, PolicyRef, Request, RequestSpec, Response, Timing};
 pub use server::{Coordinator, ServerConfig};
 pub use net::{NetClient, NetServer};
-pub use stats::{Histogram, PolicyStats, Recorder};
+pub use stats::{Histogram, PolicyStats, Recorder, ReplicaStats};

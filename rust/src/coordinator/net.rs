@@ -27,7 +27,7 @@
 //! through the dynamic batcher like any other); shutdown via the returned
 //! handle.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -65,8 +65,19 @@ impl NetServer {
         let accept_join = std::thread::Builder::new()
             .name("zqh-accept".into())
             .spawn(move || {
-                let mut workers = Vec::new();
+                let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
                 while !t_stop.load(Ordering::SeqCst) {
+                    // reap finished connection threads as connections
+                    // close — a long-lived server must not accumulate one
+                    // JoinHandle per connection it ever accepted
+                    let mut i = 0;
+                    while i < workers.len() {
+                        if workers[i].is_finished() {
+                            let _ = workers.swap_remove(i).join();
+                        } else {
+                            i += 1;
+                        }
+                    }
                     match listener.accept() {
                         Ok((stream, _)) => {
                             t_conns.fetch_add(1, Ordering::SeqCst);
@@ -234,6 +245,51 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
     }
 }
 
+/// Read one newline-terminated frame into `line`, which may already hold
+/// a partial frame from a previous timed-out read.  Returns `true` when
+/// `line` holds a frame to process; `false` on clean EOF, stop, or a hard
+/// I/O error.  Read timeouts (`WouldBlock`/`TimedOut`) keep whatever
+/// bytes have already been buffered — the old loop cleared `line` at the
+/// top of every iteration, silently dropping the head of any frame that
+/// straddled the 200 ms timeout window.  The buffer is raw bytes
+/// (`read_until`, not `read_line`): `read_line`'s UTF-8 guard discards a
+/// call's appended bytes when an error lands mid-way through a
+/// multi-byte character, which would re-introduce the drop for non-ASCII
+/// frames split at exactly the wrong byte.
+/// Hard per-frame cap.  The largest legitimate frame is a few KB of
+/// token ids, so a megabyte with no newline is a runaway or malicious
+/// stream; without a cap, one connection could buffer the server into an
+/// OOM (the payload-size checks in parsing only run on complete frames).
+const MAX_FRAME_BYTES: usize = 1 << 20;
+
+fn read_frame(reader: &mut impl BufRead, line: &mut Vec<u8>, stop: &AtomicBool) -> bool {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return false;
+        }
+        // read through a `Take` so even a firehose with no newline
+        // cannot grow the buffer past the cap inside one read_until call
+        let budget = (MAX_FRAME_BYTES.saturating_sub(line.len()) + 1) as u64;
+        match (&mut *reader).take(budget).read_until(b'\n', line) {
+            // EOF: a peer that closed mid-frame without a trailing
+            // newline still gets its buffered final frame processed
+            Ok(0) => return !line.is_empty(),
+            Ok(_) => {
+                if line.last() != Some(&b'\n') && line.len() > MAX_FRAME_BYTES {
+                    // budget exhausted with no frame boundary in sight:
+                    // drop the connection instead of buffering forever
+                    return false;
+                }
+                return true;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => return false,
+        }
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     coord: &Coordinator,
@@ -243,33 +299,24 @@ fn handle_conn(
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // peer closed
-            Ok(_) => {
-                let trimmed = line.trim();
-                if trimmed.is_empty() {
-                    continue;
-                }
+    let mut line = Vec::new();
+    while read_frame(&mut reader, &mut line, stop) {
+        {
+            // invalid UTF-8 falls through to process_line's "bad json"
+            // error response rather than killing the connection
+            let text = String::from_utf8_lossy(&line);
+            let trimmed = text.trim();
+            if !trimmed.is_empty() {
                 let resp = process_line(trimmed, coord);
                 writer.write_all(json::to_string(&resp).as_bytes())?;
                 writer.write_all(b"\n")?;
                 writer.flush()?;
                 served.fetch_add(1, Ordering::SeqCst);
             }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue
-            }
-            Err(_) => break,
         }
+        // a full frame was consumed; partial frames only survive inside
+        // read_frame, across timeouts
+        line.clear();
     }
     Ok(())
 }
@@ -393,6 +440,118 @@ mod tests {
         assert_eq!(spec2.task, spec1.task);
         assert_eq!(spec2.policy, spec1.policy);
         assert_eq!(spec2.ids, spec1.ids);
+    }
+
+    #[test]
+    fn read_frame_keeps_partial_frame_across_read_timeouts() {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // first half of the frame, then a silence longer than the
+            // server's 200 ms read timeout, then the rest plus a second
+            // frame — the regression dropped the first half on timeout
+            s.write_all(b"{\"task\":\"s").unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(550));
+            s.write_all(b"st2\"}\n{\"second\":1}\n").unwrap();
+            s.flush().unwrap();
+            s
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(std::time::Duration::from_millis(200))).unwrap();
+        let stop = AtomicBool::new(false);
+        let mut reader = BufReader::new(stream);
+        let mut line = Vec::new();
+        assert!(read_frame(&mut reader, &mut line, &stop));
+        assert_eq!(std::str::from_utf8(&line).unwrap().trim(), "{\"task\":\"sst2\"}");
+        line.clear();
+        assert!(read_frame(&mut reader, &mut line, &stop));
+        assert_eq!(std::str::from_utf8(&line).unwrap().trim(), "{\"second\":1}");
+        line.clear();
+        // peer closes: clean EOF, no frame
+        drop(writer.join().unwrap());
+        assert!(!read_frame(&mut reader, &mut line, &stop));
+        assert!(line.is_empty());
+    }
+
+    #[test]
+    fn read_frame_survives_timeout_inside_multibyte_char() {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // "café" split between the two bytes of the 'é' (0xC3 0xA9):
+            // a String-based read_line would discard the whole appended
+            // head when the timeout fires on the dangling 0xC3
+            s.write_all(b"{\"task\":\"caf\xc3").unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(550));
+            s.write_all(b"\xa9\"}\n").unwrap();
+            s.flush().unwrap();
+            s
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(std::time::Duration::from_millis(200))).unwrap();
+        let stop = AtomicBool::new(false);
+        let mut reader = BufReader::new(stream);
+        let mut line = Vec::new();
+        assert!(read_frame(&mut reader, &mut line, &stop));
+        assert_eq!(std::str::from_utf8(&line).unwrap().trim(), "{\"task\":\"café\"}");
+        drop(writer.join().unwrap());
+    }
+
+    #[test]
+    fn read_frame_rejects_runaway_unterminated_frame() {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // stream well past the frame cap without ever sending a
+            // newline; the write fails once the server hangs up
+            let chunk = vec![b'a'; 64 * 1024];
+            for _ in 0..40 {
+                if s.write_all(&chunk).is_err() {
+                    break;
+                }
+            }
+            let _ = s.flush();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(std::time::Duration::from_millis(200))).unwrap();
+        let stop = AtomicBool::new(false);
+        let mut reader = BufReader::new(stream);
+        let mut line = Vec::new();
+        assert!(!read_frame(&mut reader, &mut line, &stop), "runaway frame must be rejected");
+        assert!(line.len() <= MAX_FRAME_BYTES + 1);
+        drop(reader); // hang up so the writer unblocks
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn read_frame_returns_final_unterminated_frame_at_eof() {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"no\":\"newline\"}").unwrap();
+            s.flush().unwrap();
+            // close without a trailing newline
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(std::time::Duration::from_millis(200))).unwrap();
+        let stop = AtomicBool::new(false);
+        let mut reader = BufReader::new(stream);
+        let mut line = Vec::new();
+        writer.join().unwrap();
+        assert!(read_frame(&mut reader, &mut line, &stop));
+        assert_eq!(std::str::from_utf8(&line).unwrap().trim(), "{\"no\":\"newline\"}");
+        line.clear();
+        assert!(!read_frame(&mut reader, &mut line, &stop));
     }
 
     #[test]

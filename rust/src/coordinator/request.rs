@@ -121,8 +121,15 @@ pub struct Response {
 pub struct Timing {
     /// time from submit to batch dispatch
     pub queue_us: u64,
-    /// engine execution time for the whole batch
+    /// device execution time for the whole batch (launch -> readback
+    /// complete; the upload window is *not* counted here)
     pub exec_us: u64,
+    /// host -> device input copy time for the whole batch
+    pub upload_us: u64,
+    /// engine-measured whole-job time for the batch (job receipt ->
+    /// readback complete).  Invariant the pipeline tests pin:
+    /// `upload_us + exec_us <= engine_us <= total_us`.
+    pub engine_us: u64,
     /// end-to-end (submit -> response send)
     pub total_us: u64,
     /// batch this request rode in
@@ -132,6 +139,13 @@ pub struct Timing {
     /// rode in; within a (task, policy) group it is strictly increasing
     /// with request id — the FIFO witness the pipeline tests assert on.
     pub batch_seq: u64,
+    /// engine replica that executed this request's batch (0 when serving
+    /// with a single engine).
+    pub replica: usize,
+    /// per-replica execution serial of the batch; with `replica`, the
+    /// cross-replica FIFO witness — same-replica batches of a group
+    /// execute in submit order.
+    pub engine_seq: u64,
 }
 
 #[cfg(test)]

@@ -1,5 +1,5 @@
 //! The serving coordinator: bounded admission queue -> dynamic batcher
-//! thread -> engine (PJRT) thread -> completion workers.  This is the
+//! thread -> engine (PJRT) replica pool -> completion workers.  This is the
 //! "end-to-end system" the paper leaves as future work: batched W8A8
 //! inference with per-request precision *policies* and zero Python
 //! anywhere.
@@ -21,7 +21,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::exec::ThreadPool;
 use crate::model::manifest::{Manifest, ModeId, PolicyId, TaskId};
 use crate::model::Container;
-use crate::runtime::engine::{Engine, EngineOptions, InferDone, InferJob};
+use crate::runtime::engine::{EngineOptions, EnginePool, InferDone, InferJob};
 use crate::runtime::staging::StagingPool;
 
 use super::batcher::{Batch, Batcher};
@@ -37,6 +37,10 @@ pub struct ServerConfig {
     /// Overlap upload/execute/readback in the engine (`false` = the
     /// pre-pipeline serial loop, kept for A/B benchmarking).
     pub pipeline: bool,
+    /// Engine replicas behind the load-aware dispatcher (min 1).  Each
+    /// replica owns its own PJRT runtime with preloaded checkpoints and
+    /// precompiled executables (DESIGN.md §5.7).
+    pub replicas: usize,
     /// Staging buffers kept warm per bucket.
     pub staging_per_bucket: usize,
     /// Test-only fault injection: the completion callback for this
@@ -53,6 +57,7 @@ impl Default for ServerConfig {
             queue_cap: 1024,
             completion_workers: 4,
             pipeline: true,
+            replicas: 1,
             staging_per_bucket: 4,
             fault_inject_batch: None,
         }
@@ -62,10 +67,11 @@ impl Default for ServerConfig {
 pub struct Coordinator {
     tx: Option<SyncSender<Request>>,
     batcher_join: Option<std::thread::JoinHandle<()>>,
-    // Drop order matters (declaration order): the engine must shut down
-    // (draining its queue into completion jobs) before the pool joins its
-    // workers, so every admitted request gets a reply or a hangup.
-    engine: Option<Arc<Engine>>,
+    // Drop order matters (declaration order): the engine pool must shut
+    // down (each replica draining its queue into completion jobs, joined
+    // in replica order) before the worker pool joins, so every admitted
+    // request gets a reply or a hangup.
+    engine: Option<Arc<EnginePool>>,
     pool: Option<Arc<ThreadPool>>,
     pub recorder: Arc<Recorder>,
     man: Arc<Manifest>,
@@ -124,16 +130,17 @@ impl Coordinator {
 
         let pool = Arc::new(ThreadPool::new(config.completion_workers, "zqh-complete"));
         let staging = Arc::new(StagingPool::new(&buckets, seq, config.staging_per_bucket));
-        let engine = Arc::new(Engine::spawn(
+        let replicas = config.replicas.max(1);
+        let engine = Arc::new(EnginePool::spawn(
             artifacts,
             preload,
             precompile,
             Arc::clone(&pool),
             Arc::clone(&staging),
-            EngineOptions { overlap: config.pipeline },
+            EngineOptions { overlap: config.pipeline, replicas },
         )?);
         let man = Arc::new(manifest);
-        let recorder = Arc::new(Recorder::new(man.policy_order.clone()));
+        let recorder = Arc::new(Recorder::new(man.policy_order.clone(), replicas));
 
         let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(config.queue_cap);
         let batcher_cfg = config.clone();
@@ -226,8 +233,9 @@ impl Coordinator {
         &self.man
     }
 
-    /// The engine handle (mirrored route/policy tables).
-    pub fn engine(&self) -> &Engine {
+    /// The engine pool handle (mirrored route/policy tables, dispatch
+    /// state introspection).
+    pub fn engine(&self) -> &EnginePool {
         self.engine.as_ref().expect("engine live")
     }
 
@@ -246,8 +254,10 @@ impl Drop for Coordinator {
         if let Some(j) = self.batcher_join.take() {
             let _ = j.join();
         }
-        // engine before pool: Engine::drop drains its queue into
-        // completion jobs; ThreadPool::drop then runs them all.
+        // engine pool before worker pool: EnginePool::drop stops every
+        // replica (queues drain concurrently into completion jobs) and
+        // joins them in replica order; ThreadPool::drop then runs all
+        // pending completions.
         drop(self.engine.take());
         drop(self.pool.take());
     }
@@ -263,7 +273,7 @@ fn batcher_main(
     rx: Receiver<Request>,
     config: ServerConfig,
     man: Arc<Manifest>,
-    engine: Arc<Engine>,
+    engine: Arc<EnginePool>,
     recorder: Arc<Recorder>,
     staging: Arc<StagingPool>,
 ) {
@@ -295,14 +305,15 @@ fn batcher_main(
 }
 
 /// Assemble a batch into a pooled staging buffer and hand it to the
-/// engine with a completion callback (de-batching + reply dispatch, run
-/// on the worker pool after readback).
+/// engine pool with a completion callback (de-batching + reply dispatch,
+/// run on the worker pool after readback).  The pool routes the batch to
+/// the group's pinned replica, or the least-loaded one.
 fn dispatch(
     batch: Batch,
     batch_seq: &mut u64,
     config: &ServerConfig,
     man: &Arc<Manifest>,
-    engine: &Arc<Engine>,
+    engine: &Arc<EnginePool>,
     recorder: &Arc<Recorder>,
     staging: &Arc<StagingPool>,
 ) {
@@ -339,16 +350,20 @@ fn dispatch(
                     }
                 };
                 let nl = logits.len() / bucket;
-                recorder.record_batch(policy, real, done.exec_us);
+                recorder.record_batch(policy, real, done.exec_us, done.replica);
                 for (row, r) in requests.into_iter().enumerate() {
                     let now = Instant::now();
                     let timing = Timing {
                         queue_us: dispatched.duration_since(r.enqueued).as_micros() as u64,
                         exec_us: done.exec_us,
+                        upload_us: done.upload_us,
+                        engine_us: done.engine_us,
                         total_us: now.duration_since(r.enqueued).as_micros() as u64,
                         batch_real: real,
                         bucket,
                         batch_seq: seq_no,
+                        replica: done.replica,
+                        engine_seq: done.exec_seq,
                     };
                     recorder.record_request(policy, timing.total_us, timing.queue_us, false);
                     let _ = r.reply.send(Response {

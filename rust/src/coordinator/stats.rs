@@ -116,26 +116,52 @@ impl PolicyStats {
     }
 }
 
+/// Per-replica batch accounting for the engine pool (DESIGN.md §5.7):
+/// how many batches (and request rows) each replica executed, the
+/// load-balance witness the replica-scaling bench and tests read.
+#[derive(Debug, Default, Clone)]
+pub struct ReplicaStats {
+    pub batches: u64,
+    pub rows: u64,
+}
+
+/// Both slot tables behind the recorder's single mutex: per-policy and
+/// per-replica counters update atomically together, so "per-replica
+/// batch counts sum to per-policy batch totals" holds for every
+/// observer, not just quiescent ones.
+struct Slots {
+    policies: Vec<PolicyStats>,
+    replicas: Vec<ReplicaStats>,
+}
+
 /// Shared recorder (single mutex — recording is tiny next to inference).
-/// Slots are dense by `PolicyId`; policy names are kept only for rendering.
+/// Slots are dense by `PolicyId`; policy names are kept only for
+/// rendering.  Replica slots are dense by replica index, fixed at
+/// startup; per-replica batch counts always sum to the per-policy batch
+/// totals (every batch is recorded once, with the replica that ran it,
+/// under one lock).
 pub struct Recorder {
     start: Instant,
     policies: Vec<String>,
-    inner: Mutex<Vec<PolicyStats>>,
+    inner: Mutex<Slots>,
 }
 
 impl Recorder {
     /// `policies` is the manifest's `policy_order` — the `PolicyId` space
     /// (uniform mode policies first, then the `policies` section).
-    pub fn new(policies: Vec<String>) -> Self {
-        let slots = policies.iter().map(|_| PolicyStats::default()).collect();
+    /// `replicas` is the engine-pool size (min 1).
+    pub fn new(policies: Vec<String>, replicas: usize) -> Self {
+        let slots = Slots {
+            policies: policies.iter().map(|_| PolicyStats::default()).collect(),
+            replicas: vec![ReplicaStats::default(); replicas.max(1)],
+        };
         Recorder { start: Instant::now(), policies, inner: Mutex::new(slots) }
     }
 
     pub fn record_request(&self, policy: PolicyId, total_us: u64, queue_us: u64, err: bool) {
         let mut g = self.inner.lock().unwrap();
         // slots are policy_order-sized; a foreign PolicyId is a bug, not a slot
-        let s = &mut g[policy.index()];
+        let s = &mut g.policies[policy.index()];
         s.requests += 1;
         if err {
             s.errors += 1;
@@ -145,33 +171,55 @@ impl Recorder {
         }
     }
 
-    pub fn record_batch(&self, policy: PolicyId, rows: usize, exec_us: u64) {
+    pub fn record_batch(&self, policy: PolicyId, rows: usize, exec_us: u64, replica: usize) {
         let mut g = self.inner.lock().unwrap();
-        let s = &mut g[policy.index()];
+        let s = &mut g.policies[policy.index()];
         s.batches += 1;
         s.batched_rows += rows as u64;
         s.exec.record(exec_us);
+        // replica slots are fixed at startup; an out-of-range index is an
+        // engine-pool bug, not a slot to grow
+        let rs = &mut g.replicas[replica];
+        rs.batches += 1;
+        rs.rows += rows as u64;
     }
 
-    /// Per-policy stats keyed by policy name, active policies only (so
-    /// callers see the same shape as traffic they actually sent).
-    pub fn snapshot(&self) -> BTreeMap<String, PolicyStats> {
-        let g = self.inner.lock().unwrap();
-        g.iter()
+    /// Per-replica batch counts, dense by replica index (all replicas,
+    /// including idle ones — the imbalance is the signal).
+    pub fn replica_snapshot(&self) -> Vec<ReplicaStats> {
+        self.inner.lock().unwrap().replicas.clone()
+    }
+
+    fn policy_snapshot_of(&self, slots: &Slots) -> BTreeMap<String, PolicyStats> {
+        slots
+            .policies
+            .iter()
             .enumerate()
             .filter(|(_, s)| s.active())
             .map(|(i, s)| (self.policies[i].clone(), s.clone()))
             .collect()
     }
 
+    /// Per-policy stats keyed by policy name, active policies only (so
+    /// callers see the same shape as traffic they actually sent).
+    pub fn snapshot(&self) -> BTreeMap<String, PolicyStats> {
+        let g = self.inner.lock().unwrap();
+        self.policy_snapshot_of(&g)
+    }
+
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
-    /// Human-readable summary table.
+    /// Human-readable summary table.  Both tables come from one lock
+    /// acquisition, so the replica counts always sum to the policy batch
+    /// totals even while traffic is flowing.
     pub fn render(&self) -> String {
         use crate::bench::Table;
-        let snap = self.snapshot();
+        let (snap, reps) = {
+            let g = self.inner.lock().unwrap();
+            (self.policy_snapshot_of(&g), g.replicas.clone())
+        };
         let elapsed = self.elapsed_s();
         let mut t = Table::new(&[
             "policy", "reqs", "errs", "thr(req/s)", "mean batch", "p50 lat", "p95 lat",
@@ -190,7 +238,22 @@ impl Recorder {
                 format!("{:.1}ms", s.exec.mean_us() / 1e3),
             ]);
         }
-        t.render()
+        let mut out = t.render();
+        if reps.len() > 1 {
+            let total: u64 = reps.iter().map(|r| r.batches).sum();
+            let mut rt = Table::new(&["replica", "batches", "rows", "share"]);
+            for (i, r) in reps.iter().enumerate() {
+                rt.row(vec![
+                    i.to_string(),
+                    r.batches.to_string(),
+                    r.rows.to_string(),
+                    format!("{:.0}%", 100.0 * r.batches as f64 / total.max(1) as f64),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&rt.render());
+        }
+        out
     }
 }
 
@@ -248,7 +311,7 @@ mod tests {
     #[test]
     fn recorder_accumulates_per_policy() {
         // uniform mode policies first, then a named override policy
-        let r = Recorder::new(vec!["fp".into(), "m3".into(), "attn-out-fp".into()]);
+        let r = Recorder::new(vec!["fp".into(), "m3".into(), "attn-out-fp".into()], 1);
         let fp = PolicyId(0);
         let m3 = PolicyId(1);
         let named = PolicyId(2);
@@ -256,7 +319,7 @@ mod tests {
         r.record_request(m3, 2000, 200, false);
         r.record_request(fp, 99, 9, true);
         r.record_request(named, 500, 50, false);
-        r.record_batch(m3, 8, 500);
+        r.record_batch(m3, 8, 500, 0);
         let snap = r.snapshot();
         assert_eq!(snap["m3"].requests, 2);
         assert_eq!(snap["fp"].errors, 1);
@@ -264,14 +327,36 @@ mod tests {
         assert_eq!(snap["m3"].mean_batch_size(), 8.0);
         assert!(r.render().contains("m3"));
         assert!(r.render().contains("attn-out-fp"));
+        // single-replica serving keeps the plain render (no replica table)
+        assert!(!r.render().contains("replica"));
     }
 
     #[test]
     fn recorder_snapshot_hides_idle_policies() {
-        let r = Recorder::new(vec!["fp".into(), "m1".into()]);
+        let r = Recorder::new(vec!["fp".into(), "m1".into()], 1);
         r.record_request(PolicyId(0), 10, 1, false);
         let snap = r.snapshot();
         assert!(snap.contains_key("fp"));
         assert!(!snap.contains_key("m1"));
+    }
+
+    #[test]
+    fn per_replica_batch_counts_sum_to_policy_totals() {
+        let r = Recorder::new(vec!["fp".into(), "m3".into()], 3);
+        r.record_batch(PolicyId(0), 4, 100, 0);
+        r.record_batch(PolicyId(1), 2, 100, 2);
+        r.record_batch(PolicyId(1), 1, 100, 2);
+        let reps = r.replica_snapshot();
+        assert_eq!(reps.len(), 3);
+        let per_policy: u64 = r.snapshot().values().map(|s| s.batches).sum();
+        let per_replica: u64 = reps.iter().map(|x| x.batches).sum();
+        assert_eq!(per_replica, per_policy);
+        assert_eq!(reps[0].batches, 1);
+        assert_eq!(reps[0].rows, 4);
+        assert_eq!(reps[1].batches, 0, "idle replicas keep their slot");
+        assert_eq!(reps[2].batches, 2);
+        assert_eq!(reps[2].rows, 3);
+        // multi-replica render appends the per-replica table
+        assert!(r.render().contains("replica"));
     }
 }

@@ -95,6 +95,7 @@ fn cli() -> Cli {
                     OptSpec { name: "policies", takes_value: true, default: None, help: "extra manifest policies to load (comma-separated)" },
                     OptSpec { name: "max-batch", takes_value: true, default: Some("16"), help: "batcher max batch" },
                     OptSpec { name: "max-wait-ms", takes_value: true, default: Some("4"), help: "batcher max wait" },
+                    OptSpec { name: "replicas", takes_value: true, default: Some("1"), help: "engine replicas behind the load-aware dispatcher" },
                 ],
             },
             SubSpec {
@@ -109,6 +110,7 @@ fn cli() -> Cli {
                     OptSpec { name: "concurrency", takes_value: true, default: Some("32"), help: "in-flight requests" },
                     OptSpec { name: "max-batch", takes_value: true, default: Some("16"), help: "batcher max batch" },
                     OptSpec { name: "max-wait-ms", takes_value: true, default: Some("4"), help: "batcher max wait" },
+                    OptSpec { name: "replicas", takes_value: true, default: Some("1"), help: "engine replicas behind the load-aware dispatcher" },
                 ],
             },
         ],
@@ -394,9 +396,11 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     let tasks: Vec<String> =
         args.get_or("tasks", "sst2").split(',').map(str::to_string).collect();
     let routes = route_names(&Manifest::load(&dir)?, args, "fp,m3")?;
+    let replicas = args.get_usize("replicas")?.unwrap_or(1).max(1);
     let config = ServerConfig {
         max_batch: args.get_usize("max-batch")?.unwrap_or(16),
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
+        replicas,
         ..ServerConfig::default()
     };
 
@@ -407,7 +411,10 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
         .collect();
     let coord = std::sync::Arc::new(Coordinator::start(dir, &pairs, config)?);
     let server = zqhero::coordinator::NetServer::start(std::sync::Arc::clone(&coord), &host, port)?;
-    println!("serving on {} — newline-delimited JSON (v1 mode / v2 policy frames)", server.addr);
+    println!(
+        "serving on {} — newline-delimited JSON (v1 mode / v2 policy frames), {replicas} engine replica(s)",
+        server.addr
+    );
     println!("request: {{\"task\":\"sst2\",\"mode\":\"m3\",\"ids\":[1,1510,2]}}");
     println!("     or: {{\"v\":2,\"task\":\"sst2\",\"policy\":{{\"base\":\"m3\",\"overrides\":[[\"attn_output\",\"fp\"]],\"fallback\":[\"m1\",\"fp\"]}},\"ids\":[1,1510,2]}}");
     println!("Ctrl-C to stop; stats every 30s");
@@ -427,9 +434,11 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
     let routes = route_names(&Manifest::load(&dir)?, args, "fp,m3")?;
     let requests = args.get_usize("requests")?.unwrap_or(256);
     let concurrency = args.get_usize("concurrency")?.unwrap_or(32);
+    let replicas = args.get_usize("replicas")?.unwrap_or(1).max(1);
     let config = ServerConfig {
         max_batch: args.get_usize("max-batch")?.unwrap_or(16),
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
+        replicas,
         ..ServerConfig::default()
     };
 
@@ -457,39 +466,108 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
         payloads.push(rows);
     }
 
-    println!("running closed-loop load: {requests} requests per route, {concurrency} in flight");
+    println!(
+        "running closed-loop load: {requests} requests per route, {concurrency} in flight \
+         per route (routes driven concurrently)"
+    );
     let t0 = Instant::now();
-    for (ti, t) in tasks.iter().enumerate() {
-        for m in &routes {
-            let rows = &payloads[ti];
-            let mut inflight = std::collections::VecDeque::new();
-            let mut done = 0usize;
-            let mut submitted = 0usize;
-            while done < requests {
-                while submitted < requests && inflight.len() < concurrency {
-                    let (ids, tys) = rows[submitted % rows.len()].clone();
-                    let spec = zqhero::coordinator::RequestSpec::task(t)
-                        .policy(m)
-                        .ids(ids)
-                        .type_ids(tys);
-                    match coord.submit(spec) {
-                        Ok(rx) => {
-                            inflight.push_back(rx);
-                            submitted += 1;
+    // one closed loop per (task, route), all concurrent: sequential route
+    // loops would keep a single batch group in flight, and per-group
+    // pinning would park every batch on one replica — concurrent groups
+    // are what the load-aware dispatcher spreads
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for (ti, t) in tasks.iter().enumerate() {
+            for m in &routes {
+                let rows = &payloads[ti];
+                let coord = &coord;
+                handles.push(s.spawn(move || -> Result<()> {
+                    let mut inflight = std::collections::VecDeque::new();
+                    let mut done = 0usize;
+                    let mut submitted = 0usize;
+                    let mut last_progress = Instant::now();
+                    while done < requests {
+                        while submitted < requests && inflight.len() < concurrency {
+                            let (ids, tys) = rows[submitted % rows.len()].clone();
+                            let spec = zqhero::coordinator::RequestSpec::task(t)
+                                .policy(m)
+                                .ids(ids)
+                                .type_ids(tys);
+                            match coord.submit(spec) {
+                                Ok(rx) => {
+                                    inflight.push_back(rx);
+                                    submitted += 1;
+                                    last_progress = Instant::now();
+                                }
+                                Err(_) => break, // backpressure: drain first
+                            }
                         }
-                        Err(_) => break, // backpressure: drain first
+                        if let Some(rx) = inflight.pop_front() {
+                            let resp = rx.recv().context("response channel closed")?;
+                            anyhow::ensure!(
+                                resp.error.is_none(),
+                                "request failed: {:?}",
+                                resp.error
+                            );
+                            done += 1;
+                            last_progress = Instant::now();
+                        } else {
+                            // backpressured with nothing of ours in
+                            // flight: another route owns the queue —
+                            // wait, but not forever (submit errors are
+                            // also how a stopped coordinator presents)
+                            anyhow::ensure!(
+                                last_progress.elapsed() < Duration::from_secs(30),
+                                "no progress for 30s ({done}/{requests} done) — \
+                                 coordinator stalled or stopped"
+                            );
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
                     }
-                }
-                if let Some(rx) = inflight.pop_front() {
-                    let resp = rx.recv().context("response channel closed")?;
-                    anyhow::ensure!(resp.error.is_none(), "request failed: {:?}", resp.error);
-                    done += 1;
-                }
+                    Ok(())
+                }));
             }
         }
-    }
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("load thread panicked"))??;
+        }
+        Ok(())
+    })?;
     let wall = t0.elapsed().as_secs_f64();
-    println!("\n== serving metrics ({wall:.1}s wall) ==");
+    println!("\n== serving metrics ({wall:.1}s wall, {replicas} engine replica(s)) ==");
     print!("{}", coord.recorder.render());
+
+    // machine-readable smoke point for multi-replica runs: per-replica
+    // batch counts prove the load-aware dispatcher spread the work (the
+    // full 1-vs-N sweep lives in benches/e2e_serving.rs)
+    if replicas > 1 {
+        use zqhero::json::{self, Value};
+        let reps = coord.recorder.replica_snapshot();
+        let total_batches: u64 = reps.iter().map(|r| r.batches).sum();
+        let per_replica: Vec<Value> = reps
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("batches", json::num(r.batches as f64)),
+                    ("rows", json::num(r.rows as f64)),
+                ])
+            })
+            .collect();
+        let report = json::obj(vec![
+            ("bench", json::s("replica_scaling_smoke")),
+            ("replicas", json::num(replicas as f64)),
+            ("requests", json::num(requests as f64)),
+            ("wall_s", json::num(wall)),
+            ("total_batches", json::num(total_batches as f64)),
+            ("per_replica", Value::Array(per_replica)),
+        ]);
+        // distinct filename: the canonical 1-vs-N sweep trajectory
+        // (benches/e2e_serving.rs) owns BENCH_replica_scaling.json and
+        // must not be clobbered by a smoke run with a different schema
+        match std::fs::write("BENCH_replica_scaling_smoke.json", json::to_string_pretty(&report)) {
+            Ok(()) => println!("\nwrote BENCH_replica_scaling_smoke.json"),
+            Err(e) => eprintln!("could not write BENCH_replica_scaling_smoke.json: {e}"),
+        }
+    }
     Ok(())
 }

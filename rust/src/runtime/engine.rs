@@ -1,21 +1,32 @@
-//! Engine thread: owns the (non-`Send`) PJRT runtime and serves execution
-//! requests over channels — the executor-thread pattern a production GPU
-//! server uses.  The coordinator and its worker pool stay fully `Send`.
+//! Engine threads: each replica owns a (non-`Send`) PJRT runtime and
+//! serves execution requests over channels — the executor-thread pattern
+//! a production GPU server uses.  The coordinator and its worker pool
+//! stay fully `Send`.
 //!
-//! The request loop is a software pipeline (DESIGN.md §5.4): while batch
-//! N executes on the device, batch N+1's host arrays are uploaded, and
-//! batch N's readback is deferred until N+1 has been launched, so the
-//! device never idles waiting on a host copy.  Readback results
-//! (de-batching, reply dispatch) are handed to the shared
+//! PR 3 replicates the engine: `EnginePool` spawns N replica threads
+//! (each with its own `Runtime`, preloaded checkpoints, and precompiled
+//! executables) behind a load-aware dispatcher (`DispatchState`,
+//! DESIGN.md §5.7).  A batch routes to the replica with the fewest
+//! in-flight batches; a (task, policy) group is pinned to one replica
+//! while it has batches in flight — same-replica FIFO execution keeps the
+//! group's batches in submit order — and may migrate once it drains.
+//!
+//! Each replica's request loop is a software pipeline (DESIGN.md §5.4):
+//! while batch N executes on the device, batch N+1's host arrays are
+//! uploaded, and batch N's readback is deferred until N+1 has been
+//! launched, so the device never idles waiting on a host copy.  Readback
+//! results (de-batching, reply dispatch) are handed to the shared
 //! `exec::ThreadPool` instead of blocking the engine thread.  Jobs carry
 //! only interned `TaskId`/`PolicyId` — no strings on the hot path; the
 //! engine selects the executable through its mirrored `policy -> exec
 //! mode` table (manifest-derived, so it agrees with the coordinator's
 //! without a handshake — DESIGN.md §6.3).
 
+use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -48,10 +59,23 @@ pub struct InferJob {
 pub struct InferDone {
     pub logits: Tensor,
     /// launch -> readback-complete time (engine-thread measured), us.
-    /// Under overlap this includes the next batch's upload window.
+    /// The clock starts *after* `upload_inputs` returns, so `upload_us`
+    /// is never double-counted here.  Under overlap this still includes
+    /// the next batch's upload window.
     pub exec_us: u64,
     /// host -> device input copy time, microseconds.
     pub upload_us: u64,
+    /// whole-job engine time (job receipt -> readback complete), us —
+    /// the same quantity `Timing::engine_us` carries to clients (the
+    /// end-to-end time is `Timing::total_us`, a different clock).
+    /// Invariant: `upload_us + exec_us <= engine_us`.
+    pub engine_us: u64,
+    /// Replica that executed the batch (0 for a single engine).
+    pub replica: usize,
+    /// Per-replica batch serial, stamped in execution order — combined
+    /// with `replica`, the cross-replica FIFO witness (same-replica
+    /// batches of a group execute in submit order).
+    pub exec_seq: u64,
 }
 
 enum Msg {
@@ -72,7 +96,7 @@ struct RouteTables {
     policy_exec: Vec<ModeId>,
 }
 
-/// `Send` handle to the engine thread.
+/// `Send` handle to one engine replica thread.
 pub struct Engine {
     tx: Sender<Msg>,
     join: Option<JoinHandle<()>>,
@@ -84,6 +108,33 @@ pub struct Engine {
     policy_exec: Vec<ModeId>,
 }
 
+/// A spawned-but-not-ready replica: the thread is live (uploading
+/// checkpoints, precompiling executables) but has not reported its route
+/// tables yet.  `EnginePool::spawn` starts all replicas in this state so
+/// startup preload/precompile fans out concurrently, then waits on each.
+struct PendingEngine {
+    tx: Sender<Msg>,
+    join: JoinHandle<()>,
+    ready_rx: Receiver<Result<RouteTables>>,
+}
+
+impl PendingEngine {
+    fn wait(self) -> Result<Engine> {
+        let tables = self
+            .ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Engine {
+            tx: self.tx,
+            join: Some(self.join),
+            tasks: tables.tasks,
+            modes: tables.modes,
+            policies: tables.policies,
+            policy_exec: tables.policy_exec,
+        })
+    }
+}
+
 /// Engine tuning knobs.
 #[derive(Debug, Clone)]
 pub struct EngineOptions {
@@ -91,20 +142,23 @@ pub struct EngineOptions {
     /// head).  `false` restores the strictly serial per-batch loop — kept
     /// for A/B benchmarking the pipeline win.
     pub overlap: bool,
+    /// Engine replicas behind the pool dispatcher (min 1).  Each replica
+    /// owns its own PJRT runtime, checkpoints, and executables.
+    pub replicas: usize,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
-        EngineOptions { overlap: true }
+        EngineOptions { overlap: true, replicas: 1 }
     }
 }
 
 impl Engine {
-    /// Spawn the engine: loads the manifest, uploads every (task, mode)
-    /// checkpoint in `preload`, and pre-compiles the executables for the
-    /// requested (mode, bucket) pairs so the serving hot path never
-    /// compiles.  `pool` runs completion callbacks; `staging` receives
-    /// recycled host buffers.
+    /// Spawn one engine replica and wait for it to become ready: it loads
+    /// the manifest, uploads every (task, mode) checkpoint in `preload`,
+    /// and pre-compiles the executables for the requested (mode, bucket)
+    /// pairs so the serving hot path never compiles.  `pool` runs
+    /// completion callbacks; `staging` receives recycled host buffers.
     pub fn spawn(
         artifacts: PathBuf,
         preload: Vec<(String, String, Container)>,
@@ -113,23 +167,33 @@ impl Engine {
         staging: Arc<StagingPool>,
         options: EngineOptions,
     ) -> Result<Engine> {
+        Self::spawn_replica(artifacts, Arc::new(preload), precompile, pool, staging, options, 0)?
+            .wait()
+    }
+
+    /// Start a replica thread without waiting for readiness (the pool
+    /// spawns all replicas first, then waits, so checkpoint upload and
+    /// executable compilation run concurrently across replicas).
+    fn spawn_replica(
+        artifacts: PathBuf,
+        preload: Arc<Vec<(String, String, Container)>>,
+        precompile: Vec<(String, usize)>,
+        pool: Arc<ThreadPool>,
+        staging: Arc<StagingPool>,
+        options: EngineOptions,
+        replica: usize,
+    ) -> Result<PendingEngine> {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<RouteTables>>();
         let join = std::thread::Builder::new()
-            .name("zqhero-engine".into())
-            .spawn(move || engine_main(artifacts, preload, precompile, rx, ready_tx, pool, staging, options))
+            .name(format!("zqhero-engine-{replica}"))
+            .spawn(move || {
+                engine_main(
+                    artifacts, preload, precompile, rx, ready_tx, pool, staging, options, replica,
+                )
+            })
             .context("spawning engine thread")?;
-        let tables = ready_rx
-            .recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Engine {
-            tx,
-            join: Some(join),
-            tasks: tables.tasks,
-            modes: tables.modes,
-            policies: tables.policies,
-            policy_exec: tables.policy_exec,
-        })
+        Ok(PendingEngine { tx, join, ready_rx })
     }
 
     /// Enqueue a job; on failure (engine gone) the job is handed back so
@@ -211,21 +275,282 @@ impl Drop for Engine {
     }
 }
 
+/// Load-aware replica dispatch state, shared by `EnginePool::submit`
+/// (batcher thread) and batch completions (worker pool): per-replica
+/// in-flight batch counts plus per-group pins.  A (task, policy) group is
+/// pinned to one replica while it has batches in flight — same-replica
+/// FIFO execution keeps its batches in submit order — and may migrate to
+/// the least-loaded replica once it drains (DESIGN.md §5.7).  Pure state
+/// machine: unit- and property-tested without engine threads.
+pub struct DispatchState {
+    /// Batches submitted to each replica and not yet completed.
+    inflight: Vec<AtomicUsize>,
+    /// Replicas whose engine thread is gone (submit failed): excluded
+    /// from least-loaded choice so a dead replica — which would
+    /// otherwise sit at zero in-flight and win every tie — cannot
+    /// attract all traffic and turn one failure into a full outage.
+    dead: Vec<std::sync::atomic::AtomicBool>,
+    /// group -> (pinned replica, group batches in flight).  Entries exist
+    /// only while a group has in-flight batches, so the map stays at the
+    /// handful of currently-active routes.
+    pins: Mutex<HashMap<(TaskId, PolicyId), (usize, usize)>>,
+}
+
+impl DispatchState {
+    pub fn new(replicas: usize) -> Self {
+        assert!(replicas > 0, "dispatch needs at least one replica");
+        DispatchState {
+            inflight: (0..replicas).map(|_| AtomicUsize::new(0)).collect(),
+            dead: (0..replicas).map(|_| std::sync::atomic::AtomicBool::new(false)).collect(),
+            pins: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Batches submitted to `replica` and not yet completed.
+    pub fn inflight(&self, replica: usize) -> usize {
+        self.inflight[replica].load(Ordering::SeqCst)
+    }
+
+    pub fn alive(&self, replica: usize) -> bool {
+        !self.dead[replica].load(Ordering::SeqCst)
+    }
+
+    /// Groups currently pinned to a replica (tests / introspection).
+    pub fn pinned_groups(&self) -> usize {
+        self.pins.lock().expect("dispatch pins").len()
+    }
+
+    /// Pick the replica for one batch of `key` and account it in flight:
+    /// the pinned replica while the group already has batches in flight,
+    /// else the live replica with the fewest in-flight batches (ties
+    /// break to the lowest index; if every replica is dead the choice
+    /// falls back to all of them — the submit will fail either way).
+    pub fn assign(&self, key: (TaskId, PolicyId)) -> usize {
+        let mut pins = self.pins.lock().expect("dispatch pins");
+        let replica = match pins.get_mut(&key) {
+            Some((replica, n)) => {
+                *n += 1;
+                *replica
+            }
+            None => {
+                let replica = (0..self.inflight.len())
+                    .filter(|r| self.alive(*r))
+                    .min_by_key(|r| self.inflight[*r].load(Ordering::SeqCst))
+                    .unwrap_or_else(|| {
+                        (0..self.inflight.len())
+                            .min_by_key(|r| self.inflight[*r].load(Ordering::SeqCst))
+                            .expect("at least one replica")
+                    });
+                pins.insert(key, (replica, 1));
+                replica
+            }
+        };
+        // incremented under the pins lock so a concurrent completion
+        // cannot interleave between replica choice and accounting
+        self.inflight[replica].fetch_add(1, Ordering::SeqCst);
+        replica
+    }
+
+    /// Mark one batch of `key` complete on `replica`; the group unpins
+    /// (and may migrate on its next batch) when its last in-flight batch
+    /// completes.  A completion whose group is no longer pinned to
+    /// `replica` is stale — the replica died and `mark_dead` purged its
+    /// pins — and is dropped without touching the live accounting.
+    pub fn complete(&self, key: (TaskId, PolicyId), replica: usize) {
+        let mut pins = self.pins.lock().expect("dispatch pins");
+        match pins.get_mut(&key) {
+            Some((r, n)) if *r == replica => {
+                *n -= 1;
+                if *n == 0 {
+                    pins.remove(&key);
+                }
+                self.inflight[replica].fetch_sub(1, Ordering::SeqCst);
+            }
+            _ => {}
+        }
+    }
+
+    /// Record that `replica`'s engine thread is gone: exclude it from
+    /// future least-loaded choices and purge its pins so affected groups
+    /// migrate on their next batch (their dead-queue batches can never
+    /// complete; dropped completions surface as hangups upstream).
+    pub fn mark_dead(&self, replica: usize) {
+        self.dead[replica].store(true, Ordering::SeqCst);
+        let mut pins = self.pins.lock().expect("dispatch pins");
+        pins.retain(|_, (r, _)| *r != replica);
+        // its queued batches can never complete and their stale
+        // completions are dropped, so zero the counter — introspection
+        // and the all-dead fallback must not see phantom in-flight work
+        self.inflight[replica].store(0, Ordering::SeqCst);
+    }
+}
+
+/// N engine replicas behind a load-aware dispatcher (DESIGN.md §5.7).
+/// Startup fans the shared-read `preload` out to all replica threads
+/// concurrently (each uploads to its own device context and compiles its
+/// own executables — PJRT handles are not `Send`); shutdown stops every
+/// replica first, then joins them in replica order.
+pub struct EnginePool {
+    /// Dropped in declaration order: each `Engine::drop` joins its
+    /// (already stopped) thread, so shutdown joins replicas 0..N in order.
+    replicas: Vec<Engine>,
+    state: Arc<DispatchState>,
+}
+
+impl EnginePool {
+    /// Spawn `options.replicas` engine threads.  All replicas start
+    /// concurrently (checkpoint upload + executable precompile overlap
+    /// across threads) and share one read-only preload set; the call
+    /// returns once every replica reports ready, or the first error.
+    pub fn spawn(
+        artifacts: PathBuf,
+        preload: Vec<(String, String, Container)>,
+        precompile: Vec<(String, usize)>,
+        pool: Arc<ThreadPool>,
+        staging: Arc<StagingPool>,
+        options: EngineOptions,
+    ) -> Result<EnginePool> {
+        let n = options.replicas.max(1);
+        let preload = Arc::new(preload);
+        let pending: Vec<PendingEngine> = (0..n)
+            .map(|i| {
+                Engine::spawn_replica(
+                    artifacts.clone(),
+                    Arc::clone(&preload),
+                    precompile.clone(),
+                    Arc::clone(&pool),
+                    Arc::clone(&staging),
+                    options.clone(),
+                    i,
+                )
+            })
+            .collect::<Result<_>>()?;
+        // wait in replica order; if one fails, dropping the remaining
+        // pending handles closes their channels and the threads exit on
+        // their own after startup
+        let replicas = pending
+            .into_iter()
+            .map(PendingEngine::wait)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(EnginePool { state: Arc::new(DispatchState::new(n)), replicas })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The pool's dispatch accounting (tests / introspection).
+    pub fn dispatch_state(&self) -> &DispatchState {
+        &self.state
+    }
+
+    /// Route one batch through the load-aware dispatcher.  The completion
+    /// is wrapped so the in-flight accounting decrements exactly when the
+    /// batch's completion runs.  A submit failure marks that replica dead
+    /// (its pins are purged, making the failed attempt's wrapper a stale
+    /// no-op) and the batch retries on the next live replica — one dead
+    /// replica costs a re-route, not a batch of client errors.  `Err`
+    /// means every replica is gone; the handed-back job's `done` must
+    /// still be invoked exactly once (as `Coordinator::dispatch` does).
+    pub fn submit(&self, job: InferJob) -> std::result::Result<(), Box<InferJob>> {
+        let key = (job.task, job.policy);
+        let mut job = job;
+        for _ in 0..self.replicas.len() {
+            let replica = self.state.assign(key);
+            let state = Arc::clone(&self.state);
+            let InferJob { task, policy, staging, done } = job;
+            let wrapped = InferJob {
+                task,
+                policy,
+                staging,
+                done: Box::new(move |res| {
+                    // decrement before the inner completion so a panicking
+                    // callback (isolated by the worker pool) cannot leak a
+                    // pin or an in-flight count.  After a failed attempt
+                    // this is stale (the pin was purged by mark_dead) and
+                    // complete() drops it.
+                    state.complete(key, replica);
+                    done(res);
+                }),
+            };
+            match self.replicas[replica].submit(wrapped) {
+                Ok(()) => return Ok(()),
+                Err(boxed) => {
+                    // the replica's engine thread is gone: exclude it
+                    // from least-loaded choice (at zero in-flight it
+                    // would win every tie) and retry the batch elsewhere
+                    self.state.mark_dead(replica);
+                    job = *boxed;
+                }
+            }
+        }
+        Err(Box::new(job))
+    }
+
+    pub fn task_id(&self, name: &str) -> Result<TaskId> {
+        self.replicas[0].task_id(name)
+    }
+
+    pub fn mode_id(&self, name: &str) -> Result<ModeId> {
+        self.replicas[0].mode_id(name)
+    }
+
+    pub fn policy_id(&self, name: &str) -> Result<PolicyId> {
+        self.replicas[0].policy_id(name)
+    }
+
+    /// The mirrored policy-name table (identical across replicas: every
+    /// replica derives it from the same `manifest.json`).
+    pub fn policy_names(&self) -> &[String] {
+        self.replicas[0].policy_names()
+    }
+
+    pub fn policy_exec_mode(&self, policy: PolicyId) -> Result<ModeId> {
+        self.replicas[0].policy_exec_mode(policy)
+    }
+
+    // NB: no pool-level `infer_blocking` — blocking convenience calls go
+    // through a single `Engine` (see `Engine::infer_blocking`); serving
+    // traffic reaches the pool only via `Coordinator::dispatch`.
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // stop every replica first so their queues drain concurrently;
+        // the Vec drop then runs Engine::drop per replica, joining the
+        // threads in replica order (deterministic shutdown)
+        for e in &self.replicas {
+            let _ = e.tx.send(Msg::Stop);
+        }
+    }
+}
+
 /// One launched-but-not-read-back batch (the pipeline register).
 struct InFlight {
     pending: PendingOutputs,
     done: Completion,
+    /// job receipt (before upload) — the `engine_us` clock.
+    t_job: Instant,
+    /// post-upload launch point — the `exec_us` clock.
     t0: Instant,
     upload_us: u64,
+    exec_seq: u64,
 }
 
 /// Stage 3: synchronize, copy logits to host, and hand de-batching +
 /// reply dispatch to the worker pool.
-fn retire(rt: &Runtime, f: InFlight, pool: &ThreadPool) {
+fn retire(rt: &Runtime, f: InFlight, pool: &ThreadPool, replica: usize) {
     let res = rt.readback_logits(f.pending).map(|logits| InferDone {
         logits,
         exec_us: f.t0.elapsed().as_micros() as u64,
         upload_us: f.upload_us,
+        engine_us: f.t_job.elapsed().as_micros() as u64,
+        replica,
+        exec_seq: f.exec_seq,
     });
     let done = f.done;
     pool.spawn(move || done(res));
@@ -234,13 +559,14 @@ fn retire(rt: &Runtime, f: InFlight, pool: &ThreadPool) {
 #[allow(clippy::too_many_arguments)]
 fn engine_main(
     artifacts: PathBuf,
-    preload: Vec<(String, String, Container)>,
+    preload: Arc<Vec<(String, String, Container)>>,
     precompile: Vec<(String, usize)>,
     rx: Receiver<Msg>,
     ready_tx: Sender<Result<RouteTables>>,
     pool: Arc<ThreadPool>,
     staging: Arc<StagingPool>,
     options: EngineOptions,
+    replica: usize,
 ) {
     let mut rt = match Manifest::load(&artifacts).and_then(Runtime::new) {
         Ok(rt) => rt,
@@ -250,7 +576,7 @@ fn engine_main(
         }
     };
     let mut init = || -> Result<RouteTables> {
-        for (task, mode, ckpt) in &preload {
+        for (task, mode, ckpt) in preload.iter() {
             rt.upload_checkpoint(task, mode, ckpt)?;
         }
         for (mode, bucket) in &precompile {
@@ -282,6 +608,9 @@ fn engine_main(
     }
 
     let mut inflight: Option<InFlight> = None;
+    // per-replica batch serial, stamped in execution order (the
+    // cross-replica FIFO witness carried on InferDone::exec_seq)
+    let mut next_exec_seq: u64 = 0;
     loop {
         // With a batch executing, prefer new work (to keep the device fed)
         // but retire the head batch as soon as the queue runs dry.
@@ -290,7 +619,7 @@ fn engine_main(
                 Ok(m) => Some(m),
                 Err(TryRecvError::Empty) => {
                     if let Some(f) = inflight.take() {
-                        retire(&rt, f, &pool);
+                        retire(&rt, f, &pool, replica);
                     }
                     rx.recv().ok()
                 }
@@ -305,6 +634,8 @@ fn engine_main(
         };
 
         let InferJob { task, policy, staging: host, done } = job;
+        let exec_seq = next_exec_seq;
+        next_exec_seq += 1;
         // Executable selection: policy -> mode through the mirrored table.
         let mode = match policy_exec.get(policy.index()) {
             Some(m) => *m,
@@ -314,36 +645,39 @@ fn engine_main(
                 continue;
             }
         };
-        let t0 = Instant::now();
+        let t_job = Instant::now();
         // Stage 1: upload this batch's inputs (overlaps the previous
         // batch's device execution), then recycle the host buffers.
         let uploaded = rt.upload_inputs(host.bucket, &host.ids, &host.type_ids, &host.mask);
-        let upload_us = t0.elapsed().as_micros() as u64;
+        let upload_us = t_job.elapsed().as_micros() as u64;
         staging.put(host);
         let inputs = match uploaded {
             Ok(i) => i,
             Err(e) => {
                 if let Some(f) = inflight.take() {
-                    retire(&rt, f, &pool);
+                    retire(&rt, f, &pool, replica);
                 }
                 pool.spawn(move || done(Err(e)));
                 continue;
             }
         };
-        // Stage 2: launch this batch.
+        // Stage 2: launch this batch.  The exec clock starts only after
+        // the upload returned: InferDone::exec_us must not double-count
+        // upload_us (it used to, inflating per-batch exec reporting).
+        let t0 = Instant::now();
         let launched = rt.execute_model(task, mode, &inputs);
         // Stage 3 for the previous batch: its readback now overlaps this
         // batch's execution.
         if let Some(f) = inflight.take() {
-            retire(&rt, f, &pool);
+            retire(&rt, f, &pool, replica);
         }
         match launched {
             Ok(pending) => {
-                let f = InFlight { pending, done, t0, upload_us };
+                let f = InFlight { pending, done, t_job, t0, upload_us, exec_seq };
                 if options.overlap {
                     inflight = Some(f);
                 } else {
-                    retire(&rt, f, &pool);
+                    retire(&rt, f, &pool, replica);
                 }
             }
             Err(e) => {
@@ -352,6 +686,148 @@ fn engine_main(
         }
     }
     if let Some(f) = inflight.take() {
-        retire(&rt, f, &pool);
+        retire(&rt, f, &pool, replica);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Rng};
+
+    fn key(task: u16, policy: u16) -> (TaskId, PolicyId) {
+        (TaskId(task), PolicyId(policy))
+    }
+
+    #[test]
+    fn dispatch_pins_group_while_in_flight() {
+        let d = DispatchState::new(2);
+        let g0 = key(0, 0);
+        let g1 = key(0, 1);
+        // first assignment: tie at zero load -> lowest index
+        assert_eq!(d.assign(g0), 0);
+        // pinned while in flight, even though replica 1 is emptier
+        assert_eq!(d.assign(g0), 0);
+        assert_eq!(d.inflight(0), 2);
+        assert_eq!(d.inflight(1), 0);
+        // a different group routes to the least-loaded replica
+        assert_eq!(d.assign(g1), 1);
+        assert_eq!(d.pinned_groups(), 2);
+        // draining one batch keeps the pin; draining all releases it
+        d.complete(g0, 0);
+        assert_eq!(d.assign(g0), 0, "still one batch in flight: pinned");
+        d.complete(g0, 0);
+        d.complete(g0, 0);
+        assert_eq!(d.pinned_groups(), 1);
+        assert_eq!(d.inflight(0), 0);
+        // migration: replica 1 carries g1's batch, so g0 re-pins to 0 —
+        // but if 0 were loaded it could move (see prop test)
+        assert_eq!(d.assign(g0), 0);
+        d.complete(g1, 1);
+        d.complete(g0, 0);
+        assert_eq!(d.pinned_groups(), 0);
+    }
+
+    #[test]
+    fn dispatch_migrates_drained_group_off_loaded_replica() {
+        let d = DispatchState::new(2);
+        let g0 = key(0, 0);
+        let g1 = key(1, 0);
+        // g0 runs a batch on replica 0 and drains
+        assert_eq!(d.assign(g0), 0);
+        d.complete(g0, 0);
+        assert_eq!(d.pinned_groups(), 0);
+        // g1 now occupies replica 0 (tie at zero load -> lowest index)
+        assert_eq!(d.assign(g1), 0);
+        // g0 returns while replica 0 is loaded: it migrates to replica 1
+        // — pinning is per in-flight window, not a permanent assignment
+        assert_eq!(d.assign(g0), 1);
+        d.complete(g1, 0);
+        d.complete(g0, 1);
+        assert_eq!(d.pinned_groups(), 0);
+        assert_eq!(d.inflight(0) + d.inflight(1), 0);
+    }
+
+    #[test]
+    fn dead_replica_is_excluded_and_its_groups_migrate() {
+        let d = DispatchState::new(2);
+        let g0 = key(0, 0);
+        let g1 = key(0, 1);
+        assert_eq!(d.assign(g0), 0);
+        d.mark_dead(0);
+        assert!(!d.alive(0));
+        // pins on the dead replica are purged and its counter zeroed (the
+        // queued batch can never complete): g0's next batch migrates
+        assert_eq!(d.pinned_groups(), 0);
+        assert_eq!(d.inflight(0), 0);
+        assert_eq!(d.assign(g0), 1);
+        // the dead replica never wins least-loaded again, even though
+        // its in-flight count is the minimum
+        assert_eq!(d.assign(g1), 1);
+        // a stale completion from the dead replica is dropped: g0 is now
+        // pinned to replica 1, so (g0, 0) matches nothing
+        d.complete(g0, 0);
+        assert_eq!(d.inflight(1), 2);
+        assert_eq!(d.pinned_groups(), 2);
+        d.complete(g0, 1);
+        d.complete(g1, 1);
+        assert_eq!(d.pinned_groups(), 0);
+        assert_eq!(d.inflight(1), 0);
+    }
+
+    #[test]
+    fn prop_per_group_fifo_pinning_and_count_consistency() {
+        forall("dispatch-pinning", 60, |r: &mut Rng| {
+            let nrep = 1 + r.below(4);
+            let d = DispatchState::new(nrep);
+            // in-flight batches as (group, replica-it-was-assigned)
+            let mut open: Vec<((TaskId, PolicyId), usize)> = Vec::new();
+            let mut pinned: HashMap<(TaskId, PolicyId), usize> = HashMap::new();
+            for _ in 0..200 {
+                if open.is_empty() || r.bool() {
+                    let k = key(r.below(2) as u16, r.below(3) as u16);
+                    let loads: Vec<usize> = (0..nrep).map(|i| d.inflight(i)).collect();
+                    let rep = d.assign(k);
+                    assert!(rep < nrep);
+                    match pinned.get(&k) {
+                        // the FIFO guarantee: while a group has batches in
+                        // flight, every new batch lands on the same replica
+                        Some(p) => assert_eq!(*p, rep, "group reassigned while in flight"),
+                        // a fresh (or migrated) group takes a least-loaded
+                        // replica, measured before this assignment
+                        None => {
+                            let min = loads.iter().copied().min().unwrap();
+                            assert_eq!(loads[rep], min, "not least-loaded: {loads:?} -> {rep}");
+                            pinned.insert(k, rep);
+                        }
+                    }
+                    open.push((k, rep));
+                } else {
+                    let i = r.below(open.len());
+                    let (k, rep) = open.swap_remove(i);
+                    d.complete(k, rep);
+                    if !open.iter().any(|(ok, _)| *ok == k) {
+                        pinned.remove(&k);
+                    }
+                }
+                // accounting consistency: per-replica in-flight counters
+                // always equal the number of open batches per replica
+                for rep in 0..nrep {
+                    assert_eq!(
+                        d.inflight(rep),
+                        open.iter().filter(|(_, p)| *p == rep).count(),
+                        "replica {rep} count drifted"
+                    );
+                }
+                assert_eq!(d.pinned_groups(), pinned.len());
+            }
+            for (k, rep) in open.drain(..) {
+                d.complete(k, rep);
+            }
+            assert_eq!(d.pinned_groups(), 0);
+            for rep in 0..nrep {
+                assert_eq!(d.inflight(rep), 0);
+            }
+        });
     }
 }

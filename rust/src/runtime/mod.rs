@@ -4,9 +4,12 @@
 //!
 //! `Runtime` is intentionally single-threaded (`PjRtClient` is `Rc`-based):
 //! CLI commands use it directly on the main thread; the serving coordinator
-//! wraps it in a dedicated engine thread (`engine.rs`) and talks to it over
-//! channels, the same shape as a GPU-executor thread in a production
-//! server.
+//! wraps it in dedicated engine threads (`engine.rs`) and talks to them over
+//! channels, the same shape as GPU-executor threads in a production server.
+//! Since the handles are not `Send`, scaling out means *replicating* the
+//! runtime: `engine::EnginePool` spawns N engine threads, each owning its
+//! own `Runtime` (checkpoints + executables), behind a load-aware
+//! dispatcher with per-group FIFO pinning (DESIGN.md §5.7).
 //!
 //! Hot-path tables are dense: executables live in a
 //! `[mode][bucket]`-indexed `Vec` and checkpoints in `[task][mode]`, both
@@ -17,6 +20,8 @@
 
 pub mod engine;
 pub mod staging;
+
+pub use engine::{DispatchState, Engine, EngineOptions, EnginePool};
 
 use std::collections::HashMap;
 use std::path::Path;

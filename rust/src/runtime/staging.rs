@@ -40,8 +40,13 @@ impl StagingBuf {
 
     /// Wrap caller-owned arrays (blocking/CLI path, no pool involved).
     /// `mask` is recomputed to keep one definition of padding semantics.
+    /// `real` is the number of rows the caller actually provided
+    /// (`ids.len() / seq`, rounded up for a partial final row, capped at
+    /// the bucket) — hardcoding `real = bucket` overstated occupancy in
+    /// blocking-path timings and `batch_real` reporting whenever fewer
+    /// rows were passed.
     pub fn from_parts(bucket: usize, seq: usize, ids: Vec<i32>, type_ids: Vec<i32>) -> Self {
-        let real = bucket;
+        let real = ids.len().div_ceil(seq.max(1)).min(bucket);
         let mut buf = StagingBuf { bucket, seq, real, ids, type_ids, mask: Vec::new() };
         buf.ids.resize(bucket * seq, PAD);
         buf.type_ids.resize(bucket * seq, 0);
@@ -178,5 +183,22 @@ mod tests {
         let b = StagingBuf::from_parts(2, 3, vec![9, 0, 9], vec![1, 1, 1]);
         assert_eq!(b.ids, vec![9, 0, 9, 0, 0, 0]);
         assert_eq!(b.mask, vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+        // one row of tokens was provided: real reports 1, not the bucket
+        assert_eq!(b.real, 1);
+    }
+
+    #[test]
+    fn from_parts_derives_real_from_rows_provided() {
+        // full bucket: unchanged semantics
+        let b = StagingBuf::from_parts(2, 3, vec![1; 6], vec![0; 6]);
+        assert_eq!(b.real, 2);
+        // partial final row rounds up, and real never exceeds the bucket
+        let b = StagingBuf::from_parts(4, 3, vec![1; 4], vec![0; 4]);
+        assert_eq!(b.real, 2);
+        let b = StagingBuf::from_parts(2, 3, vec![1; 9], vec![0; 9]);
+        assert_eq!(b.real, 2);
+        // degenerate inputs stay safe
+        let b = StagingBuf::from_parts(2, 0, vec![], vec![]);
+        assert_eq!(b.real, 0);
     }
 }

@@ -150,6 +150,50 @@ fn v2_policy_round_trip_and_v1_shim() {
     assert!(resp.get("error").unwrap().as_str().unwrap().contains("no mode artifact"));
 }
 
+/// Regression: a frame that arrives in two halves more than 200 ms apart
+/// (the connection handler's read timeout) must still be served — the old
+/// loop cleared its line buffer on every iteration, discarding the bytes
+/// `read_line` had already buffered when the timeout fired mid-frame.
+#[test]
+fn slow_writer_frame_split_across_read_timeout() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Arc::new(
+        Coordinator::start(
+            dir.clone(),
+            &pairs,
+            ServerConfig { max_batch: 4, max_wait: Duration::from_millis(2), ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1", 0).unwrap();
+
+    let man = Manifest::load(&dir).unwrap();
+    let split = Split::load(&man, man.task("cola").unwrap(), "dev").unwrap();
+    let (ids, _) = split.row(0);
+    let ids_json: Vec<String> = ids.iter().take(8).map(|x| x.to_string()).collect();
+    let frame = format!("{{\"task\":\"cola\",\"mode\":\"fp\",\"ids\":[{}]}}\n", ids_json.join(","));
+
+    use std::io::{BufRead, BufReader, Write};
+    let mut raw = std::net::TcpStream::connect(server.addr).unwrap();
+    let (head, tail) = frame.split_at(frame.len() / 2);
+    raw.write_all(head.as_bytes()).unwrap();
+    raw.flush().unwrap();
+    // straddle the 200 ms read timeout more than twice
+    std::thread::sleep(Duration::from_millis(600));
+    raw.write_all(tail.as_bytes()).unwrap();
+    raw.flush().unwrap();
+
+    let mut line = String::new();
+    BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let v = zqhero::json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{v:?}");
+    assert_eq!(
+        v.get("logits").unwrap().as_array().unwrap().len(),
+        man.model.num_labels
+    );
+}
+
 #[test]
 fn oversized_request_rejected() {
     let Some(dir) = artifacts() else { return };

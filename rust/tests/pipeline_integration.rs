@@ -1,11 +1,16 @@
 //! Pipelined-engine integration: mixed (task, mode, bucket) traffic
 //! through the overlapped upload/execute/readback stages, asserting
-//! per-request reply order (via the batch_seq FIFO witness), logit parity
-//! with the blocking pre-pipeline path, and panic isolation in the
-//! readback/completion stage.  Gated on `make artifacts`.
+//! per-group request order (via the batch_seq FIFO witness, generalized
+//! to the replica pool by the per-replica engine_seq witness), logit
+//! parity with the blocking pre-pipeline path, engine timing coherence
+//! (`upload_us + exec_us <= engine_us <= total_us` — the exec clock must
+//! not double-count the upload), drain-on-drop with N>1 replicas, and
+//! panic isolation in the readback/completion stage.  Gated on
+//! `make artifacts`.
 
 mod common;
 
+use std::collections::HashMap;
 use std::time::Duration;
 
 use common::{artifacts, ensure_quantized};
@@ -21,6 +26,53 @@ fn config(pipeline: bool) -> ServerConfig {
         max_wait: Duration::from_millis(2),
         pipeline,
         ..ServerConfig::default()
+    }
+}
+
+/// Engine-side timing coherence for one response: the exec clock starts
+/// after the upload returns (no double-count) and the whole-job engine
+/// time nests inside the end-to-end time.
+fn assert_timing_coherent(resp: &Response, ctx: &str) {
+    let t = &resp.timing;
+    assert!(
+        t.upload_us + t.exec_us <= t.engine_us,
+        "{ctx}: upload {} + exec {} > engine total {} (exec clock double-counts the upload?)",
+        t.upload_us,
+        t.exec_us,
+        t.engine_us
+    );
+    assert!(
+        t.engine_us <= t.total_us,
+        "{ctx}: engine {} > end-to-end {}",
+        t.engine_us,
+        t.total_us
+    );
+}
+
+/// Per-group FIFO witnesses over one group's responses: submit order
+/// (request id order) rides non-decreasing batcher dispatch numbers, and
+/// same-replica batches execute in submit order (per-replica engine_seq
+/// is stamped in execution order).  Valid for 1 and N replicas.
+fn assert_group_fifo(group: &[Response], n_replicas: usize, ctx: &str) {
+    let mut by_id: Vec<&Response> = group.iter().collect();
+    by_id.sort_unstable_by_key(|r| r.id);
+    let seqs: Vec<u64> = by_id.iter().map(|r| r.timing.batch_seq).collect();
+    let mut sorted = seqs.clone();
+    sorted.sort_unstable();
+    assert_eq!(seqs, sorted, "{ctx}: replies out of batch order");
+    let mut last_exec: HashMap<usize, u64> = HashMap::new();
+    for r in &by_id {
+        let rep = r.timing.replica;
+        assert!(rep < n_replicas, "{ctx}: replica {rep} out of range");
+        if let Some(prev) = last_exec.insert(rep, r.timing.engine_seq) {
+            assert!(
+                r.timing.engine_seq >= prev,
+                "{ctx}: replica {rep} ran batch {} after {} against submit order (req {})",
+                r.timing.engine_seq,
+                prev,
+                r.id
+            );
+        }
     }
 }
 
@@ -98,17 +150,12 @@ fn pipelined_mixed_traffic_fifo_and_parity() {
             assert!(resp.logits.iter().all(|x| x.is_finite()));
             assert!(resp.timing.bucket >= resp.timing.batch_real);
             assert!(resp.timing.batch_real >= 1 && resp.timing.batch_real <= 8);
+            assert_timing_coherent(resp, &format!("group {gi} req {}", resp.id));
         }
         // FIFO witness: within a group, submit order (request id order)
         // must ride non-decreasing dispatch sequence numbers — the
         // overlapped engine must not reorder batches of a group.
-        let mut by_id: Vec<(u64, u64)> =
-            group.iter().map(|r| (r.id, r.timing.batch_seq)).collect();
-        by_id.sort_unstable_by_key(|(id, _)| *id);
-        let seqs: Vec<u64> = by_id.iter().map(|(_, s)| *s).collect();
-        let mut sorted = seqs.clone();
-        sorted.sort_unstable();
-        assert_eq!(seqs, sorted, "group {gi}: replies out of batch order");
+        assert_group_fifo(group, 1, &format!("group {gi}"));
     }
 
     // numeric parity: the overlapped engine must match the blocking
@@ -143,6 +190,134 @@ fn pipelined_mixed_traffic_fifo_and_parity() {
         for (a, b) in piped[0][i].logits.iter().zip(dv) {
             assert!((a - b).abs() < 1e-3, "req {i}: pipelined {a} vs direct {b}");
         }
+    }
+}
+
+/// Tentpole acceptance: mixed traffic over a 2-replica engine pool keeps
+/// per-group FIFO order (pinning + per-replica execution serials), lands
+/// every batch on a valid replica with accounting that sums to the
+/// per-policy totals, and matches single-replica logits exactly.
+#[test]
+fn replica_pool_mixed_traffic_fifo_accounting_and_parity() {
+    let Some(dir) = artifacts() else { return };
+    ensure_quantized(&dir, "sst2", "m3");
+
+    let routes = [("cola", "fp"), ("sst2", "fp"), ("sst2", "m3")];
+    let pairs: Vec<(String, String)> =
+        routes.iter().map(|(t, m)| (t.to_string(), m.to_string())).collect();
+
+    let man = Manifest::load(&dir).unwrap();
+    let split = Split::load(&man, man.task("cola").unwrap(), "dev").unwrap();
+    let n_rows = 24.min(split.len());
+    let payload: Vec<(Vec<i32>, Vec<i32>)> = (0..n_rows)
+        .map(|i| {
+            let (a, b) = split.row(i);
+            (a.to_vec(), b.to_vec())
+        })
+        .collect();
+
+    let per_route = 30;
+    let n_replicas = 2;
+    let (pooled, reps, dispatched_groups) = {
+        let coord = Coordinator::start(
+            dir.clone(),
+            &pairs,
+            ServerConfig { replicas: n_replicas, ..config(true) },
+        )
+        .unwrap();
+        assert_eq!(coord.engine().replicas(), n_replicas);
+        let groups = flood(&coord, &routes, &payload, per_route);
+        // after all replies, nothing is in flight and no group is pinned
+        let ds = coord.engine().dispatch_state();
+        for r in 0..n_replicas {
+            assert_eq!(ds.inflight(r), 0, "replica {r} leaked in-flight accounting");
+        }
+        assert_eq!(ds.pinned_groups(), 0, "drained groups must unpin");
+        (groups, coord.recorder.replica_snapshot(), coord.recorder.snapshot())
+    };
+
+    for (gi, group) in pooled.iter().enumerate() {
+        assert_eq!(group.len(), per_route);
+        for resp in group {
+            assert!(resp.error.is_none(), "group {gi}: {:?}", resp.error);
+            assert!(resp.logits.iter().all(|x| x.is_finite()));
+            assert_timing_coherent(resp, &format!("pool group {gi} req {}", resp.id));
+        }
+        assert_group_fifo(group, n_replicas, &format!("pool group {gi}"));
+    }
+
+    // per-replica batch counters sum to the per-policy batch totals
+    assert_eq!(reps.len(), n_replicas);
+    let total_batches: u64 = dispatched_groups.values().map(|s| s.batches).sum();
+    assert_eq!(
+        reps.iter().map(|r| r.batches).sum::<u64>(),
+        total_batches,
+        "per-replica counts must sum to total batches: {reps:?}"
+    );
+    let total_rows: u64 = dispatched_groups.values().map(|s| s.batched_rows).sum();
+    assert_eq!(reps.iter().map(|r| r.rows).sum::<u64>(), total_rows);
+
+    // numeric parity: the pool must serve the exact same logits as a
+    // single-replica coordinator over the same artifacts and inputs
+    let single = {
+        let coord = Coordinator::start(dir.clone(), &pairs, config(true)).unwrap();
+        flood(&coord, &routes, &payload, per_route)
+    };
+    for (gp, gs) in pooled.iter().zip(&single) {
+        for (rp, rs) in gp.iter().zip(gs) {
+            for (a, b) in rp.logits.iter().zip(&rs.logits) {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "pool {a} vs single {b} (req {} / {})",
+                    rp.id,
+                    rs.id
+                );
+            }
+        }
+    }
+}
+
+/// Shutdown drain with N>1: every admitted request still gets a reply
+/// when the coordinator drops immediately after the submit burst — the
+/// batcher drains into the pool, each replica drains its queue, and the
+/// worker pool runs every completion before joining.
+#[test]
+fn replica_pool_drains_on_drop() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Coordinator::start(
+        dir.clone(),
+        &pairs,
+        ServerConfig {
+            replicas: 3,
+            max_batch: 4,
+            // long enough that undispatched requests are still queued in
+            // the batcher when the drop begins — the drain must flush them
+            max_wait: Duration::from_millis(250),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    let man = Manifest::load(&dir).unwrap();
+    let split = Split::load(&man, man.task("cola").unwrap(), "dev").unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..22 {
+        let (ids, tys) = split.row(i % split.len());
+        let rx = coord
+            .submit(RequestSpec::task("cola").mode("fp").ids(ids.to_vec()).type_ids(tys.to_vec()))
+            .unwrap();
+        rxs.push(rx);
+    }
+    drop(coord);
+    // after drop returns, every reply has been sent (or its sender
+    // dropped); recv must not block and must carry a real answer
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(1))
+            .unwrap_or_else(|e| panic!("request {i} lost in shutdown drain: {e}"));
+        assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+        assert!(!resp.logits.is_empty());
     }
 }
 

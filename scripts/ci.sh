@@ -7,8 +7,9 @@
 # `make artifacts` has not been run, so this script is safe on a bare
 # checkout.  Benches (e.g. `cargo run --release --bin e2e_serving` via
 # `benches/`) additionally emit BENCH_*.json trajectory files
-# (BENCH_e2e_serving.json, BENCH_precision_policy.json); those are not
-# part of the gate but should be committed when they change.
+# (BENCH_e2e_serving.json, BENCH_precision_policy.json,
+# BENCH_replica_scaling.json); those are not part of the gate but
+# should be committed when they change.
 #
 # The lint stages run with --all-targets so the typed PrecisionPolicy /
 # RequestSpec surface stays clean across lib, tests, benches and
@@ -32,6 +33,16 @@ cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
+
+# Artifact-gated serving smoke: the integration suites already ran
+# un-skipped inside `cargo test -q` when artifacts exist; what they do
+# not cover is the CLI surface, so drive a 2-replica serve-bench
+# (load-aware dispatch end to end; emits
+# BENCH_replica_scaling_smoke.json per-replica batch counts).
+if [ -f artifacts/manifest.json ]; then
+    echo "==> 2-replica serve-bench smoke"
+    cargo run --release -- serve-bench --replicas 2 --requests 48 --concurrency 8
+fi
 
 if [ "$SKIP_CLIPPY" -eq 0 ]; then
     echo "==> cargo clippy --all-targets -- -D warnings"
