@@ -15,14 +15,24 @@
 //! throughput scaling plus per-replica batch counts to
 //! `BENCH_replica_scaling.json`.
 //!
+//! A fourth sweep is the overload experiment (DESIGN.md §5.8): open-loop
+//! arrivals at 1x/2x/4x measured capacity against a governable manifest
+//! policy, governor off vs on, with per-request deadlines and a bounded
+//! admission queue — writing the shed/expired/completed ledger (which
+//! must reconcile exactly: admitted = completed + shed + expired) and
+//! goodput/p99 per cell to `BENCH_overload.json`.
+//!
 //! Env: ZQH_REQUESTS (default 128), ZQH_TASK (default sst2),
-//! ZQH_REPLICAS (default 2 — top of the replica sweep).
+//! ZQH_REPLICAS (default 2 — top of the replica sweep),
+//! ZQH_OVERLOAD_ARRIVALS (default 256 — open-loop burst size).
 
 use std::collections::VecDeque;
 use std::time::Duration;
 
 use zqhero::bench::Table;
-use zqhero::coordinator::{Coordinator, PolicyRef, RequestSpec, ServerConfig};
+use zqhero::coordinator::{
+    Coordinator, GovernorConfig, PolicyRef, RequestSpec, ServerConfig,
+};
 use zqhero::data::Split;
 use zqhero::evalharness as eh;
 use zqhero::json::{self, Value};
@@ -404,5 +414,182 @@ fn main() {
         Ok(()) => println!("\nwrote BENCH_replica_scaling.json (scaling {scaling:.2}x)"),
         Err(e) => eprintln!("could not write BENCH_replica_scaling.json: {e}"),
     }
+
+    overload_sweep(&dir, &man, &tname, &rows, requests);
     println!("(CPU PJRT testbed; A100 projections in hw_perf_model)");
+}
+
+/// Run one open-loop cell through the shared driver
+/// (`zqhero::bench::open_loop_burst` — the same code path as
+/// `serve-bench --overload`) and reconcile the client-side ledger
+/// against the recorder's (fresh coordinator per cell); returns the
+/// report plus the recorder's governed count.
+fn open_loop(
+    coord: &Coordinator,
+    task: &str,
+    policy: &str,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    arrivals: usize,
+    rate: f64,
+    deadline: Duration,
+) -> (zqhero::bench::OpenLoopReport, u64) {
+    let r = zqhero::bench::open_loop_burst(coord, task, policy, rows, arrivals, rate, deadline)
+        .expect("open-loop burst");
+    assert!(r.reconciles(), "client overload ledger must reconcile: {r:?}");
+    let snap = coord.recorder.snapshot();
+    let s = &snap[policy];
+    assert_eq!(s.shed as usize, r.shed, "recorder shed count");
+    assert_eq!(s.expired as usize, r.expired, "recorder expired count");
+    assert_eq!(s.completed as usize, r.completed, "recorder completed count");
+    // NB vocabulary: the ledger's "admitted" counts *offered* arrivals
+    // (shed included); the recorder's `requests` holds only those that
+    // entered the queue
+    assert_eq!(s.requests as usize, r.admitted - r.shed, "recorder terminal count");
+    (r, s.governed)
+}
+
+/// Open-loop overload at 1x/2x/4x measured capacity, governor off vs on,
+/// against a governable manifest policy -> BENCH_overload.json.
+fn overload_sweep(
+    dir: &std::path::Path,
+    man: &Manifest,
+    tname: &str,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    requests: usize,
+) {
+    // a policy whose downgrade chain is non-empty (the python manifest
+    // writer ships attn-out-fp: base m3, fallback [m2, m1, fp], exec m1,
+    // chain [m2, m3]); without one the governor has nothing to govern
+    let governed = man.policy_order.iter().find(|n| {
+        man.policy_id(n.as_str())
+            .map(|p| !man.downgrade_chain(p).is_empty())
+            .unwrap_or(false)
+    });
+    let Some(policy) = governed else {
+        println!("\noverload sweep skipped: no manifest policy has a degradation chain");
+        return;
+    };
+    let arrivals: usize = std::env::var("ZQH_OVERLOAD_ARRIVALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    // a queue bound well under the burst size so backpressure and the
+    // governor watermarks are actually exercised
+    let queue_cap = 64usize;
+    let deadline = Duration::from_millis(250);
+    let config = |governor: bool| ServerConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(4),
+        queue_cap,
+        completion_workers: 4,
+        governor: governor.then(|| GovernorConfig::for_queue(queue_cap)),
+        ..ServerConfig::default()
+    };
+    let pairs = vec![(tname.to_string(), policy.clone())];
+
+    // capacity: short closed loop (run_load) on a governor-off coordinator
+    let capacity_rps = {
+        let coord = Coordinator::start(dir.to_path_buf(), &pairs, config(false))
+            .expect("overload calibration coordinator");
+        let r = run_load(
+            &coord,
+            tname,
+            &PolicyRef::Named(policy.clone()),
+            policy,
+            rows,
+            requests.max(64),
+            16,
+        );
+        r.thr_rps
+    };
+
+    println!(
+        "\noverload sweep on ({tname},{policy}): {arrivals} open-loop arrivals per cell, \
+         capacity ~{capacity_rps:.1} req/s, deadline {}ms, queue cap {queue_cap}\n",
+        deadline.as_millis()
+    );
+    let mut t = Table::new(&[
+        "rate", "governor", "admitted", "completed", "shed", "expired", "governed",
+        "goodput req/s", "p50 ms", "p99 ms",
+    ]);
+    let mut cells: Vec<(String, Value)> = Vec::new();
+    let mut gain_2x: (f64, f64) = (0.0, 0.0); // (off, on) goodput at 2x
+    let mut p99_2x: (f64, f64) = (0.0, 0.0);
+    for gov in [false, true] {
+        for mult in [1.0f64, 2.0, 4.0] {
+            // fresh coordinator per cell: each run starts undegraded with
+            // an empty queue, so cells are comparable
+            let coord = Coordinator::start(dir.to_path_buf(), &pairs, config(gov))
+                .expect("overload coordinator");
+            let (p, governed) = open_loop(
+                &coord,
+                tname,
+                policy,
+                rows,
+                arrivals,
+                capacity_rps * mult,
+                deadline,
+            );
+            let label = format!("{mult}x_{}", if gov { "on" } else { "off" });
+            t.row(vec![
+                format!("{mult}x"),
+                if gov { "on" } else { "off" }.into(),
+                p.admitted.to_string(),
+                p.completed.to_string(),
+                p.shed.to_string(),
+                p.expired.to_string(),
+                governed.to_string(),
+                format!("{:.1}", p.goodput_rps()),
+                format!("{:.1}", p.p50_ms),
+                format!("{:.1}", p.p99_ms),
+            ]);
+            if mult == 2.0 {
+                if gov {
+                    gain_2x.1 = p.goodput_rps();
+                    p99_2x.1 = p.p99_ms;
+                } else {
+                    gain_2x.0 = p.goodput_rps();
+                    p99_2x.0 = p.p99_ms;
+                }
+            }
+            cells.push((
+                label,
+                json::obj(vec![
+                    ("admitted", json::num(p.admitted as f64)),
+                    ("completed", json::num(p.completed as f64)),
+                    ("shed", json::num(p.shed as f64)),
+                    ("expired", json::num(p.expired as f64)),
+                    ("governed", json::num(governed as f64)),
+                    ("goodput_rps", json::num(p.goodput_rps())),
+                    ("p50_ms", json::num(p.p50_ms)),
+                    ("p99_ms", json::num(p.p99_ms)),
+                ]),
+            ));
+        }
+    }
+    t.print();
+
+    let goodput_gain = gain_2x.1 / gain_2x.0.max(1e-9);
+    if goodput_gain < 1.0 {
+        println!("WARNING: governor-on goodput below governor-off at 2x ({goodput_gain:.2}x)");
+    }
+    let report = json::obj(vec![
+        ("bench", json::s("overload")),
+        ("task", json::s(tname)),
+        ("policy", json::s(policy)),
+        ("arrivals_per_cell", json::num(arrivals as f64)),
+        ("capacity_rps", json::num(capacity_rps)),
+        ("deadline_ms", json::num(deadline.as_millis() as f64)),
+        ("queue_cap", json::num(queue_cap as f64)),
+        ("cells", Value::Object(cells)),
+        ("goodput_gain_2x_governor", json::num(goodput_gain)),
+        ("p99_2x_governor_off_ms", json::num(p99_2x.0)),
+        ("p99_2x_governor_on_ms", json::num(p99_2x.1)),
+    ]);
+    match std::fs::write("BENCH_overload.json", json::to_string_pretty(&report)) {
+        Ok(()) => {
+            println!("\nwrote BENCH_overload.json (2x governor goodput gain {goodput_gain:.2}x)")
+        }
+        Err(e) => eprintln!("could not write BENCH_overload.json: {e}"),
+    }
 }

@@ -33,14 +33,14 @@ fn main() {
                         task: TaskId((i % 3) as u16),
                         policy: PolicyId((i % 2) as u16),
                     },
+                    requested: PolicyId((i % 2) as u16),
                     ids: Vec::new(),
                     type_ids: Vec::new(),
                     enqueued: t0,
+                    deadline: None,
                     reply: tx,
                 };
-                if b.push(req).is_some() {
-                    flushed += 1;
-                }
+                flushed += b.push(req, t0).batches.len();
             }
             assert!(flushed > 0);
         });

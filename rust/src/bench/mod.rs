@@ -64,6 +64,109 @@ pub fn bench_seconds<F: FnMut()>(warmup: usize, min_time_s: f64, mut f: F) -> St
     Stats::from_samples_us(samples)
 }
 
+// ----------------------------------------------------- open-loop driver
+
+/// One cell of an open-loop overload run, in the DESIGN.md §5.8 ledger
+/// vocabulary shared by `BENCH_overload*.json`: `admitted` counts the
+/// total *offered* arrivals at the admission gate (including those shed
+/// there — the acceptance ledger is
+/// `admitted = completed + shed + expired`, reconciling exactly), while
+/// the recorder's per-policy `requests` counter holds only
+/// `admitted - shed` (what actually entered the queue).
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    pub admitted: usize,
+    pub completed: usize,
+    pub shed: usize,
+    pub expired: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub wall_s: f64,
+}
+
+impl OpenLoopReport {
+    /// Completed-request throughput (expired/shed are not goodput).
+    pub fn goodput_rps(&self) -> f64 {
+        self.completed as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// The §5.8 accounting identity; `open_loop_burst` guarantees it by
+    /// construction (every non-shed submission yields exactly one
+    /// terminal reply), so a `false` here is a coordinator bug.
+    pub fn reconciles(&self) -> bool {
+        self.admitted == self.completed + self.shed + self.expired
+    }
+}
+
+/// Fire `arrivals` paced submissions at `rate` req/s independent of
+/// completions (open loop), then harvest every outcome.  Shared by
+/// `repro serve-bench --overload` and the `e2e_serving` overload sweep
+/// so the CLI smoke and the bench trajectory measure the same thing.
+/// `Err` only on a transport-level failure (dead reply channel, a
+/// non-expired error response, or a non-busy submit error).
+#[allow(clippy::too_many_arguments)]
+pub fn open_loop_burst(
+    coord: &crate::coordinator::Coordinator,
+    task: &str,
+    policy: &str,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    arrivals: usize,
+    rate: f64,
+    deadline: std::time::Duration,
+) -> anyhow::Result<OpenLoopReport> {
+    use anyhow::Context;
+    let interval = std::time::Duration::from_secs_f64(1.0 / rate.max(1.0));
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..arrivals {
+        let next = t0 + interval.mul_f64(i as f64);
+        if let Some(wait) = next.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        let (ids, tys) = rows[i % rows.len()].clone();
+        let spec = crate::coordinator::RequestSpec::task(task)
+            .policy(policy)
+            .ids(ids)
+            .type_ids(tys)
+            .deadline(deadline);
+        match coord.submit(spec) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) if e.is_busy() => shed += 1,
+            Err(e) => anyhow::bail!("burst submit failed: {e}"),
+        }
+    }
+    let (mut completed, mut expired) = (0usize, 0usize);
+    let mut lat = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().context("burst response channel closed")?;
+        if resp.expired {
+            expired += 1;
+        } else {
+            anyhow::ensure!(resp.error.is_none(), "burst request failed: {:?}", resp.error);
+            completed += 1;
+            lat.push(resp.timing.total_us as f64);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |p: f64| -> f64 {
+        if lat.is_empty() {
+            return 0.0;
+        }
+        lat[((lat.len() - 1) as f64 * p) as usize] / 1e3
+    };
+    Ok(OpenLoopReport {
+        admitted: arrivals,
+        completed,
+        shed,
+        expired,
+        p50_ms: pick(0.50),
+        p99_ms: pick(0.99),
+        wall_s,
+    })
+}
+
 // ------------------------------------------------------------- formatting
 
 /// Simple monospace table printer for the paper-reproduction benches.

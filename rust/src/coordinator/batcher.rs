@@ -1,12 +1,17 @@
 //! Dynamic batcher: groups requests by interned (task, policy), flushes a
 //! group when it reaches `max_batch` or its oldest request has waited
-//! `max_wait`.
+//! `max_wait`, and culls deadline-expired requests at de-queue time —
+//! batch formation is the last moment a request can be cancelled
+//! (DESIGN.md §5.8); once a batch leaves the batcher its members execute.
 //!
-//! The core is a pure state machine (`push`/`tick` return ready batches),
-//! which makes the invariants property-testable without threads:
+//! The core is a pure state machine (`push`/`tick` return a `Drained` of
+//! ready batches plus expired requests), which makes the invariants
+//! property-testable without threads:
 //!   * no batch exceeds `max_batch`;
-//!   * a request is emitted exactly once, in FIFO order within its group;
-//!   * no request waits longer than `max_wait` once `tick` is called.
+//!   * a request is emitted exactly once — in a batch or as expired —
+//!     in FIFO order within its group (expiry culls preserve the
+//!     survivors' relative order);
+//!   * no live request waits longer than `max_wait` once `tick` is called.
 //!
 //! Groups live in a flat `Vec` scanned linearly: the group count is the
 //! handful of admitted (task, policy) routes, for which two-integer key
@@ -23,10 +28,44 @@ pub struct Batch {
     pub requests: Vec<Request>,
 }
 
+/// What one batcher operation released: batches ready to dispatch plus
+/// requests whose deadline passed while they queued (cancelled here, at
+/// de-queue time — the caller answers them with expired responses).
+#[derive(Default)]
+pub struct Drained {
+    pub batches: Vec<Batch>,
+    pub expired: Vec<Request>,
+}
+
+impl Drained {
+    pub fn is_empty(&self) -> bool {
+        self.batches.is_empty() && self.expired.is_empty()
+    }
+}
+
 pub struct Batcher {
     pub max_batch: usize,
     pub max_wait: Duration,
     groups: Vec<(GroupKey, VecDeque<Request>)>,
+}
+
+/// Move every expired request out of `q` into `expired`, preserving the
+/// survivors' relative (FIFO) order.
+fn cull(q: &mut VecDeque<Request>, now: Instant, expired: &mut Vec<Request>) {
+    if q.iter().any(|r| r.expired(now)) {
+        let survivors: VecDeque<Request> = q
+            .drain(..)
+            .filter_map(|r| {
+                if r.expired(now) {
+                    expired.push(r);
+                    None
+                } else {
+                    Some(r)
+                }
+            })
+            .collect();
+        *q = survivors;
+    }
 }
 
 impl Batcher {
@@ -35,8 +74,9 @@ impl Batcher {
         Batcher { max_batch, max_wait, groups: Vec::new() }
     }
 
-    /// Add a request; returns any batch made ready by this arrival.
-    pub fn push(&mut self, req: Request) -> Option<Batch> {
+    /// Add a request; returns any batch made ready by this arrival (plus
+    /// requests found expired while forming it).
+    pub fn push(&mut self, req: Request, now: Instant) -> Drained {
         let key = req.key;
         let idx = match self.groups.iter().position(|(k, _)| *k == key) {
             Some(i) => i,
@@ -47,23 +87,31 @@ impl Batcher {
         };
         let q = &mut self.groups[idx].1;
         q.push_back(req);
+        let mut out = Drained::default();
         if q.len() >= self.max_batch {
-            let requests = q.drain(..self.max_batch).collect();
-            Some(Batch { key, requests })
-        } else {
-            None
+            // formation time: cancel what already expired, then flush
+            // only if a full batch of survivors remains (a short group
+            // keeps waiting for its max_wait tick)
+            cull(q, now, &mut out.expired);
+            if q.len() >= self.max_batch {
+                let requests = q.drain(..self.max_batch).collect();
+                out.batches.push(Batch { key, requests });
+            }
         }
+        out
     }
 
-    /// Flush groups whose oldest request has exceeded `max_wait`.
-    pub fn tick(&mut self, now: Instant) -> Vec<Batch> {
-        let mut out = Vec::new();
+    /// Cull expired requests everywhere, then flush groups whose oldest
+    /// survivor has exceeded `max_wait`.
+    pub fn tick(&mut self, now: Instant) -> Drained {
+        let mut out = Drained::default();
         for (key, q) in self.groups.iter_mut() {
+            cull(q, now, &mut out.expired);
             while let Some(front) = q.front() {
                 if now.duration_since(front.enqueued) >= self.max_wait {
                     let take = q.len().min(self.max_batch);
                     let requests: Vec<Request> = q.drain(..take).collect();
-                    out.push(Batch { key: *key, requests });
+                    out.batches.push(Batch { key: *key, requests });
                 } else {
                     break;
                 }
@@ -72,13 +120,15 @@ impl Batcher {
         out
     }
 
-    /// Force-flush everything (shutdown / drain).
-    pub fn drain_all(&mut self) -> Vec<Batch> {
-        let mut out = Vec::new();
+    /// Force-flush everything (shutdown / drain); already-expired
+    /// requests still come back as expired, not as batch members.
+    pub fn drain_all(&mut self, now: Instant) -> Drained {
+        let mut out = Drained::default();
         for (key, q) in self.groups.iter_mut() {
+            cull(q, now, &mut out.expired);
             while !q.is_empty() {
                 let take = q.len().min(self.max_batch);
-                out.push(Batch { key: *key, requests: q.drain(..take).collect() });
+                out.batches.push(Batch { key: *key, requests: q.drain(..take).collect() });
             }
         }
         out
@@ -88,8 +138,12 @@ impl Batcher {
         self.groups.iter().map(|(_, q)| q.len()).sum()
     }
 
-    /// Earliest deadline across groups (for the batcher thread's
-    /// `recv_timeout`); None when empty.
+    /// Earliest `max_wait` flush point across groups (each group's front
+    /// is its oldest request), or None when empty.  Deliberately O(groups),
+    /// not O(backlog): request deadlines are *not* scanned here — the
+    /// batcher loop clamps its wait to a short idle tick anyway, so
+    /// expiry culls run within that bound without walking every queued
+    /// request on the hot path to compute a wake-up time.
     pub fn next_deadline(&self) -> Option<Instant> {
         self.groups
             .iter()
@@ -110,15 +164,27 @@ mod tests {
     }
 
     fn req(id: u64, task: u16, policy: u16, at: Instant) -> Request {
+        req_deadline(id, task, policy, at, None)
+    }
+
+    fn req_deadline(
+        id: u64,
+        task: u16,
+        policy: u16,
+        at: Instant,
+        deadline: Option<Instant>,
+    ) -> Request {
         let (tx, _rx) = channel();
         // leak the receiver side: batcher tests never reply
         std::mem::forget(_rx);
         Request {
             id,
             key: key(task, policy),
+            requested: PolicyId(policy),
             ids: vec![],
             type_ids: vec![],
             enqueued: at,
+            deadline,
             reply: tx,
         }
     }
@@ -127,10 +193,12 @@ mod tests {
     fn flushes_on_max_batch() {
         let mut b = Batcher::new(3, Duration::from_secs(10));
         let t = Instant::now();
-        assert!(b.push(req(0, 0, 0, t)).is_none());
-        assert!(b.push(req(1, 0, 0, t)).is_none());
-        let batch = b.push(req(2, 0, 0, t)).expect("full batch");
-        assert_eq!(batch.requests.len(), 3);
+        assert!(b.push(req(0, 0, 0, t), t).is_empty());
+        assert!(b.push(req(1, 0, 0, t), t).is_empty());
+        let out = b.push(req(2, 0, 0, t), t);
+        assert_eq!(out.batches.len(), 1, "full batch");
+        assert_eq!(out.batches[0].requests.len(), 3);
+        assert!(out.expired.is_empty());
         assert_eq!(b.pending(), 0);
     }
 
@@ -138,11 +206,12 @@ mod tests {
     fn groups_are_isolated() {
         let mut b = Batcher::new(2, Duration::from_secs(10));
         let t = Instant::now();
-        assert!(b.push(req(0, 0, 0, t)).is_none());
-        assert!(b.push(req(1, 0, 1, t)).is_none());
-        assert!(b.push(req(2, 1, 0, t)).is_none());
+        assert!(b.push(req(0, 0, 0, t), t).is_empty());
+        assert!(b.push(req(1, 0, 1, t), t).is_empty());
+        assert!(b.push(req(2, 1, 0, t), t).is_empty());
         assert_eq!(b.pending(), 3);
-        let batch = b.push(req(3, 0, 0, t)).expect("task-0 mode-0 full");
+        let out = b.push(req(3, 0, 0, t), t);
+        let batch = &out.batches[0];
         assert_eq!(batch.key, key(0, 0));
         assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
     }
@@ -151,29 +220,85 @@ mod tests {
     fn tick_flushes_aged() {
         let mut b = Batcher::new(16, Duration::from_millis(5));
         let t0 = Instant::now();
-        b.push(req(0, 0, 0, t0));
-        b.push(req(1, 0, 0, t0));
+        b.push(req(0, 0, 0, t0), t0);
+        b.push(req(1, 0, 0, t0), t0);
         assert!(b.tick(t0 + Duration::from_millis(1)).is_empty());
         let out = b.tick(t0 + Duration::from_millis(6));
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].requests.len(), 2);
+        assert_eq!(out.batches.len(), 1);
+        assert_eq!(out.batches[0].requests.len(), 2);
         assert_eq!(b.pending(), 0);
     }
 
     #[test]
-    fn next_deadline_tracks_oldest() {
+    fn next_deadline_tracks_oldest_not_request_deadlines() {
         let mut b = Batcher::new(16, Duration::from_millis(10));
         let t0 = Instant::now();
         assert!(b.next_deadline().is_none());
-        b.push(req(0, 0, 0, t0));
-        b.push(req(1, 1, 0, t0 + Duration::from_millis(3)));
+        b.push(req(0, 0, 0, t0), t0);
+        b.push(req(1, 1, 0, t0 + Duration::from_millis(3)), t0);
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+        // request deadlines do not move the wake-up point (the serving
+        // loop's idle clamp bounds expiry-cull latency instead — the
+        // wake-up stays O(groups) under a deep backlog)
+        let d = t0 + Duration::from_millis(4);
+        b.push(req_deadline(2, 1, 0, t0 + Duration::from_millis(3), Some(d)), t0);
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+        // ...but tick still culls the expired request on the next wake
+        let out = b.tick(t0 + Duration::from_millis(5));
+        assert_eq!(out.expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn expired_requests_cancelled_at_formation_fifo_kept() {
+        let mut b = Batcher::new(3, Duration::from_millis(50));
+        let t0 = Instant::now();
+        b.push(req(0, 0, 0, t0), t0);
+        b.push(req_deadline(1, 0, 0, t0, Some(t0 + Duration::from_millis(5))), t0);
+        // third arrival lands after id 1's deadline: formation culls it,
+        // and the 2 survivors are below max_batch, so they keep waiting
+        // for the max_wait tick (no partial eager flush)
+        let out = b.push(req(2, 0, 0, t0), t0 + Duration::from_millis(10));
+        assert_eq!(out.expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert!(out.batches.is_empty());
+        assert_eq!(b.pending(), 2);
+        let out = b.tick(t0 + Duration::from_millis(60));
+        assert_eq!(out.batches.len(), 1);
+        assert_eq!(
+            out.batches[0].requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 2],
+            "FIFO among survivors"
+        );
+    }
+
+    #[test]
+    fn tick_culls_expired_without_flushing_young_survivors() {
+        let mut b = Batcher::new(16, Duration::from_millis(100));
+        let t0 = Instant::now();
+        b.push(req_deadline(0, 0, 0, t0, Some(t0 + Duration::from_millis(2))), t0);
+        b.push(req(1, 0, 0, t0 + Duration::from_millis(1)), t0);
+        let out = b.tick(t0 + Duration::from_millis(5));
+        assert_eq!(out.expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert!(out.batches.is_empty(), "survivor is younger than max_wait");
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn drain_all_reports_expired_separately() {
+        let mut b = Batcher::new(16, Duration::from_secs(10));
+        let t0 = Instant::now();
+        b.push(req(0, 0, 0, t0), t0);
+        b.push(req_deadline(1, 0, 0, t0, Some(t0 + Duration::from_millis(1))), t0);
+        let out = b.drain_all(t0 + Duration::from_millis(5));
+        assert_eq!(out.expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(out.batches.len(), 1);
+        assert_eq!(out.batches[0].requests[0].id, 0);
+        assert_eq!(b.pending(), 0);
     }
 
     // ------------------------------------------------------- properties
 
     #[test]
-    fn prop_exactly_once_fifo_and_bounded() {
+    fn prop_exactly_once_fifo_and_bounded_with_deadlines() {
         forall("batcher-invariants", 50, |r: &mut Rng| {
             let max_batch = 1 + r.below(8);
             let mut b = Batcher::new(max_batch, Duration::from_millis(r.below(20) as u64));
@@ -182,8 +307,11 @@ mod tests {
             let t0 = Instant::now();
             let n = 1 + r.below(200);
             let mut emitted: Vec<(GroupKey, u64)> = Vec::new();
-            let mut collect = |batches: Vec<Batch>, emitted: &mut Vec<(GroupKey, u64)>| {
-                for batch in batches {
+            let mut expired_ids: Vec<u64> = Vec::new();
+            let mut collect = |out: Drained,
+                               emitted: &mut Vec<(GroupKey, u64)>,
+                               expired_ids: &mut Vec<u64>| {
+                for batch in out.batches {
                     assert!(batch.requests.len() <= max_batch, "batch overflow");
                     assert!(!batch.requests.is_empty());
                     for q in &batch.requests {
@@ -191,33 +319,52 @@ mod tests {
                         emitted.push((q.key, q.id));
                     }
                 }
+                for q in out.expired {
+                    emitted.push((q.key, q.id));
+                    expired_ids.push(q.id);
+                }
             };
             for id in 0..n as u64 {
                 let task = *r.choice(&tasks);
                 let mode = *r.choice(&modes);
                 let at = t0 + Duration::from_millis(id);
-                if let Some(batch) = b.push(req(id, task, mode, at)) {
-                    collect(vec![batch], &mut emitted);
-                }
+                // ~1/3 of requests carry a deadline somewhere in the run
+                let deadline = if r.below(3) == 0 {
+                    Some(t0 + Duration::from_millis(r.below(240) as u64))
+                } else {
+                    None
+                };
+                let out = b.push(req_deadline(id, task, mode, at, deadline), at);
+                collect(out, &mut emitted, &mut expired_ids);
                 if r.below(10) == 0 {
                     let out = b.tick(t0 + Duration::from_millis(id + r.below(30) as u64));
-                    collect(out, &mut emitted);
+                    collect(out, &mut emitted, &mut expired_ids);
                 }
             }
-            collect(b.drain_all(), &mut emitted);
+            collect(
+                b.drain_all(t0 + Duration::from_millis(n as u64)),
+                &mut emitted,
+                &mut expired_ids,
+            );
             assert_eq!(b.pending(), 0);
-            // exactly once
+            // exactly once across batches + expired
             assert_eq!(emitted.len(), n);
             let mut ids: Vec<u64> = emitted.iter().map(|(_, id)| *id).collect();
             ids.sort_unstable();
             ids.dedup();
             assert_eq!(ids.len(), n, "duplicate or lost request");
-            // FIFO within each group (ids are submit-ordered)
+            // FIFO within each group among batch survivors (ids are
+            // submit-ordered; expired requests are removed, not reordered)
+            let expired_set: std::collections::BTreeSet<u64> =
+                expired_ids.iter().copied().collect();
             for task in &tasks {
                 for mode in &modes {
                     let k = key(*task, *mode);
-                    let seq: Vec<u64> =
-                        emitted.iter().filter(|(g, _)| *g == k).map(|(_, id)| *id).collect();
+                    let seq: Vec<u64> = emitted
+                        .iter()
+                        .filter(|(g, id)| *g == k && !expired_set.contains(id))
+                        .map(|(_, id)| *id)
+                        .collect();
                     let mut sorted = seq.clone();
                     sorted.sort_unstable();
                     assert_eq!(seq, sorted, "group {k:?} out of order");

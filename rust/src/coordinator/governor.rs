@@ -1,0 +1,443 @@
+//! Load-adaptive precision governor (DESIGN.md §5.8): a pure state
+//! machine — like the replica pool's `DispatchState` — that watches
+//! admission-queue pressure and walks each policy's declared degradation
+//! chain (`Manifest::downgrade_chain`) toward cheaper executable modes
+//! under sustained overload, restoring toward the base policy with
+//! hysteresis once pressure clears.
+//!
+//! Purity discipline: the machine is fed explicit `observe(depth)` calls
+//! and returns the transitions it made; it never reads clocks or
+//! channels, so every invariant (never leaves the chain, no oscillation
+//! inside the hysteresis window, returns to base after sustained calm)
+//! is unit- and property-testable without threads.  The serving side
+//! (`batcher_main`) ticks it at a wall-clock cadence and publishes the
+//! effective routes through the lock-free `GovernorShared` table that
+//! `Coordinator::submit` reads at admission.
+
+use std::sync::atomic::{AtomicU16, Ordering};
+use std::time::Duration;
+
+use crate::model::manifest::PolicyId;
+
+/// Governor tuning.  Watermarks are absolute queue depths (the serving
+/// side derives them from `queue_cap`); the `*_after` counts are
+/// consecutive observations, which makes the hysteresis window explicit:
+/// after any step, the opposite step needs a full fresh streak.
+#[derive(Debug, Clone)]
+pub struct GovernorConfig {
+    /// Depth at or above which an observation counts as pressure.
+    pub high_watermark: usize,
+    /// Depth at or below which an observation counts as clear.  Must be
+    /// `< high_watermark`; the band between them is neutral (both
+    /// streaks reset — a wobbling queue neither degrades nor restores).
+    pub low_watermark: usize,
+    /// Optional latency trip wire: an observation whose queue-delay
+    /// sample reaches this is pressure regardless of depth.  The serving
+    /// side feeds each dispatched batch's queue delay into *at most one*
+    /// observation (consumed on read — neither a cumulative histogram
+    /// nor a sticky last-value, either of which would latch high after a
+    /// burst and pin the governor degraded).  `None` = depth-only.
+    pub high_queue_us: Option<u64>,
+    /// Consecutive pressure observations per downgrade step.
+    pub degrade_after: u32,
+    /// Consecutive clear observations per restore step.  Restoring
+    /// slower than degrading (`restore_after > degrade_after`) is the
+    /// hysteresis that keeps a saturated server from flapping.
+    pub restore_after: u32,
+    /// Serving-side observation cadence (the pure machine never reads a
+    /// clock; `batcher_main` ticks at this interval).
+    pub tick: Duration,
+}
+
+impl GovernorConfig {
+    /// Defaults scaled to the admission queue: pressure at half the cap,
+    /// clear below an eighth, ~3 ticks to degrade, ~4x that to restore.
+    pub fn for_queue(queue_cap: usize) -> GovernorConfig {
+        GovernorConfig {
+            high_watermark: (queue_cap / 2).max(1),
+            low_watermark: queue_cap / 8,
+            high_queue_us: None,
+            degrade_after: 3,
+            restore_after: 12,
+            tick: Duration::from_millis(5),
+        }
+    }
+}
+
+/// One observation of serving pressure, sampled by the batcher thread at
+/// the governor cadence: the admission backlog (channel occupancy plus
+/// formed-but-undispatched requests) and the queue delay of the most
+/// recently dispatched batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Signals {
+    pub depth: usize,
+    pub queue_us: u64,
+}
+
+/// One governed transition: `policy`'s effective route moved from
+/// `from` to `to` (`level` is the new chain depth; 0 = the policy
+/// itself).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepEvent {
+    pub policy: PolicyId,
+    pub from: PolicyId,
+    pub to: PolicyId,
+    pub level: usize,
+}
+
+/// The pure governor.  One global pressure signal (the admission queue
+/// is shared by every route), per-policy chain positions: a pressure
+/// step moves every governable policy one step cheaper, a clear step
+/// moves every one a step back toward base.
+pub struct PrecisionGovernor {
+    cfg: GovernorConfig,
+    /// `[policy] -> downgrade chain` (closest-first; empty = ungovernable).
+    chains: Vec<Vec<PolicyId>>,
+    /// `[policy] -> current chain depth` (0 = base, i.e. the policy itself).
+    level: Vec<usize>,
+    pressure_run: u32,
+    calm_run: u32,
+}
+
+impl PrecisionGovernor {
+    /// `chains[i]` is `Manifest::downgrade_chain(PolicyId(i))`.
+    pub fn new(chains: Vec<Vec<PolicyId>>, cfg: GovernorConfig) -> PrecisionGovernor {
+        assert!(
+            cfg.low_watermark < cfg.high_watermark,
+            "governor watermarks inverted ({} >= {})",
+            cfg.low_watermark,
+            cfg.high_watermark
+        );
+        assert!(cfg.degrade_after > 0 && cfg.restore_after > 0);
+        let level = vec![0; chains.len()];
+        PrecisionGovernor { cfg, chains, level, pressure_run: 0, calm_run: 0 }
+    }
+
+    pub fn config(&self) -> &GovernorConfig {
+        &self.cfg
+    }
+
+    /// The route `policy` currently resolves to (itself at level 0).
+    pub fn effective(&self, policy: PolicyId) -> PolicyId {
+        let lvl = self.level[policy.index()];
+        if lvl == 0 {
+            policy
+        } else {
+            self.chains[policy.index()][lvl - 1]
+        }
+    }
+
+    /// Current chain depth of `policy` (0 = running as asked).
+    pub fn level(&self, policy: PolicyId) -> usize {
+        self.level[policy.index()]
+    }
+
+    /// True if any policy is currently degraded.
+    pub fn degraded(&self) -> bool {
+        self.level.iter().any(|l| *l > 0)
+    }
+
+    /// Feed one pressure observation; returns the transitions it caused
+    /// (empty almost always).  Pressure = deep backlog OR (when the trip
+    /// wire is set) a slow batch; clear = shallow backlog without a trip.
+    pub fn observe(&mut self, s: Signals) -> Vec<StepEvent> {
+        let tripped = matches!(self.cfg.high_queue_us, Some(t) if s.queue_us >= t);
+        if s.depth >= self.cfg.high_watermark || tripped {
+            self.calm_run = 0;
+            self.pressure_run += 1;
+            if self.pressure_run >= self.cfg.degrade_after {
+                self.pressure_run = 0;
+                return self.shift(true);
+            }
+        } else if s.depth <= self.cfg.low_watermark {
+            self.pressure_run = 0;
+            self.calm_run += 1;
+            if self.calm_run >= self.cfg.restore_after {
+                self.calm_run = 0;
+                return self.shift(false);
+            }
+        } else {
+            // neutral band: a queue hovering between the watermarks is
+            // neither overload nor recovery — both streaks restart
+            self.pressure_run = 0;
+            self.calm_run = 0;
+        }
+        Vec::new()
+    }
+
+    fn shift(&mut self, down: bool) -> Vec<StepEvent> {
+        let mut events = Vec::new();
+        for (i, chain) in self.chains.iter().enumerate() {
+            let policy = PolicyId(i as u16);
+            let from = self.effective(policy);
+            let lvl = &mut self.level[i];
+            if down {
+                if *lvl < chain.len() {
+                    *lvl += 1;
+                }
+            } else if *lvl > 0 {
+                *lvl -= 1;
+            }
+            let to = self.effective(policy);
+            if from != to {
+                events.push(StepEvent { policy, from, to, level: self.level[i] });
+            }
+        }
+        events
+    }
+}
+
+/// Lock-free `policy -> effective policy` table published by the
+/// batcher thread after each governed transition and read by
+/// `Coordinator::submit` at admission.  Starts as the identity map.
+pub struct GovernorShared {
+    effective: Vec<AtomicU16>,
+}
+
+impl GovernorShared {
+    pub fn new(num_policies: usize) -> GovernorShared {
+        GovernorShared {
+            effective: (0..num_policies).map(|i| AtomicU16::new(i as u16)).collect(),
+        }
+    }
+
+    pub fn effective(&self, policy: PolicyId) -> PolicyId {
+        PolicyId(self.effective[policy.index()].load(Ordering::Relaxed))
+    }
+
+    pub fn publish(&self, policy: PolicyId, effective: PolicyId) {
+        self.effective[policy.index()].store(effective.0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Rng};
+
+    fn cfg(high: usize, low: usize, degrade: u32, restore: u32) -> GovernorConfig {
+        GovernorConfig {
+            high_watermark: high,
+            low_watermark: low,
+            high_queue_us: None,
+            degrade_after: degrade,
+            restore_after: restore,
+            tick: Duration::from_millis(1),
+        }
+    }
+
+    fn sig(depth: usize) -> Signals {
+        Signals { depth, queue_us: 0 }
+    }
+
+    /// policy 0: ungovernable (uniform); policy 1: two-step chain to the
+    /// uniform policies 2 then 3 (cheaper and cheapest).
+    fn two_step() -> PrecisionGovernor {
+        let chains = vec![vec![], vec![PolicyId(2), PolicyId(3)], vec![], vec![]];
+        PrecisionGovernor::new(chains, cfg(8, 2, 3, 6))
+    }
+
+    #[test]
+    fn degrades_after_sustained_pressure_only() {
+        let mut g = two_step();
+        let p = PolicyId(1);
+        assert_eq!(g.effective(p), p);
+        // two pressure ticks broken by a neutral one: streak resets
+        assert!(g.observe(sig(10)).is_empty());
+        assert!(g.observe(sig(10)).is_empty());
+        assert!(g.observe(sig(5)).is_empty());
+        assert!(g.observe(sig(10)).is_empty());
+        assert!(g.observe(sig(10)).is_empty());
+        // third consecutive pressure tick: one step down the chain
+        let ev = g.observe(sig(10));
+        assert_eq!(
+            ev,
+            vec![StepEvent { policy: p, from: p, to: PolicyId(2), level: 1 }]
+        );
+        assert_eq!(g.effective(p), PolicyId(2));
+        assert!(g.degraded());
+        // ungovernable policies never move
+        assert_eq!(g.effective(PolicyId(0)), PolicyId(0));
+        assert_eq!(g.level(PolicyId(0)), 0);
+        // continued pressure: next step lands on the chain floor and stays
+        for _ in 0..2 {
+            g.observe(sig(10));
+        }
+        assert_eq!(g.effective(p), PolicyId(3));
+        for _ in 0..9 {
+            g.observe(sig(10));
+        }
+        assert_eq!(g.effective(p), PolicyId(3), "must not step past the chain");
+        assert_eq!(g.level(p), 2);
+    }
+
+    #[test]
+    fn restores_with_hysteresis_after_calm() {
+        let mut g = two_step();
+        let p = PolicyId(1);
+        for _ in 0..3 {
+            g.observe(sig(10));
+        }
+        assert_eq!(g.level(p), 1);
+        // five calm ticks then one neutral: restore streak resets
+        for _ in 0..5 {
+            assert!(g.observe(sig(0)).is_empty());
+        }
+        assert!(g.observe(sig(5)).is_empty());
+        for _ in 0..5 {
+            assert!(g.observe(sig(0)).is_empty());
+        }
+        // sixth consecutive calm tick: one step back toward base
+        let ev = g.observe(sig(0));
+        assert_eq!(
+            ev,
+            vec![StepEvent { policy: p, from: PolicyId(2), to: p, level: 0 }]
+        );
+        assert_eq!(g.effective(p), p);
+        assert!(!g.degraded());
+        // already at base: further calm is a no-op
+        for _ in 0..20 {
+            assert!(g.observe(sig(0)).is_empty());
+        }
+        assert_eq!(g.level(p), 0);
+    }
+
+    #[test]
+    fn shared_table_starts_as_identity_and_publishes() {
+        let s = GovernorShared::new(4);
+        for i in 0..4u16 {
+            assert_eq!(s.effective(PolicyId(i)), PolicyId(i));
+        }
+        s.publish(PolicyId(1), PolicyId(3));
+        assert_eq!(s.effective(PolicyId(1)), PolicyId(3));
+        s.publish(PolicyId(1), PolicyId(1));
+        assert_eq!(s.effective(PolicyId(1)), PolicyId(1));
+    }
+
+    // ------------------------------------------------------- properties
+
+    /// Under random pressure/clear/neutral interleavings the governor
+    /// (1) never leaves any policy's chain, (2) never emits opposite
+    /// transitions within the hysteresis window (a downgrade needs
+    /// `degrade_after` consecutive pressure observations since the last
+    /// step, a restore `restore_after` consecutive clears), and (3)
+    /// always returns every policy to base after sustained calm.
+    #[test]
+    fn prop_chain_bounds_hysteresis_and_return_to_base() {
+        forall("governor-invariants", 60, |r: &mut Rng| {
+            let degrade = 1 + r.below(4) as u32;
+            let restore = degrade + r.below(6) as u32;
+            let n_policies = 2 + r.below(4);
+            let chains: Vec<Vec<PolicyId>> = (0..n_policies)
+                .map(|_| {
+                    (0..r.below(4)).map(|k| PolicyId((n_policies + k) as u16)).collect()
+                })
+                .collect();
+            let max_chain = chains.iter().map(Vec::len).max().unwrap_or(0);
+            let mut full = chains.clone();
+            full.extend((0..4).map(|_| Vec::new())); // chain targets are ungovernable
+            let mut g = PrecisionGovernor::new(full, cfg(10, 3, degrade, restore));
+
+            // model the streak bookkeeping independently to check the
+            // hysteresis window on every emitted transition
+            let (mut run_p, mut run_c) = (0u32, 0u32);
+            for _ in 0..400 {
+                let depth = match r.below(3) {
+                    0 => 10 + r.below(20), // pressure
+                    1 => r.below(4),       // clear (<= 3)
+                    _ => 4 + r.below(6),   // neutral band (4..=9)
+                };
+                let events = g.observe(sig(depth));
+                if depth >= 10 {
+                    run_c = 0;
+                    run_p += 1;
+                } else if depth <= 3 {
+                    run_p = 0;
+                    run_c += 1;
+                } else {
+                    run_p = 0;
+                    run_c = 0;
+                }
+                for ev in &events {
+                    let idx = ev.policy.index();
+                    // (1) stays on the chain: the new effective route is
+                    // the policy itself or one of its declared steps
+                    assert!(ev.level <= chains[idx].len(), "left the chain: {ev:?}");
+                    if ev.level == 0 {
+                        assert_eq!(ev.to, ev.policy);
+                    } else {
+                        assert_eq!(ev.to, chains[idx][ev.level - 1]);
+                    }
+                }
+                // (2) hysteresis: a transition only fires at the end of
+                // a full streak of its own kind (the mirrored streak
+                // counters must sit exactly at the threshold)
+                if !events.is_empty() {
+                    if depth >= 10 {
+                        assert_eq!(run_p, degrade, "downgrade fired off-streak");
+                        run_p = 0;
+                    } else {
+                        assert!(depth <= 3, "neutral observation caused a transition");
+                        assert_eq!(run_c, restore, "restore fired off-streak");
+                        run_c = 0;
+                    }
+                }
+                // (1) levels always inside [0, chain_len]
+                for (i, chain) in chains.iter().enumerate() {
+                    assert!(g.level(PolicyId(i as u16)) <= chain.len());
+                }
+            }
+
+            // (3) sustained calm returns every policy to base
+            let worst = (max_chain as u32 + 1) * restore;
+            for _ in 0..worst {
+                g.observe(sig(0));
+            }
+            assert!(!g.degraded(), "sustained calm must restore every policy");
+            for i in 0..n_policies {
+                let p = PolicyId(i as u16);
+                assert_eq!(g.effective(p), p);
+                assert_eq!(g.level(p), 0);
+            }
+        });
+    }
+
+    /// Opposite transitions are always separated by at least the
+    /// relevant streak length — the no-oscillation guarantee stated in
+    /// terms of observation counts.
+    #[test]
+    fn prop_no_oscillation_within_hysteresis_window() {
+        forall("governor-no-flap", 60, |r: &mut Rng| {
+            let degrade = 1 + r.below(4) as u32;
+            let restore = 1 + r.below(8) as u32;
+            let chains = vec![vec![PolicyId(1), PolicyId(2)], vec![], vec![]];
+            let mut g = PrecisionGovernor::new(chains, cfg(10, 3, degrade, restore));
+            // (observation index, was_downgrade) — the direction is the
+            // observation kind that fired it (only pressure degrades,
+            // only clear restores)
+            let mut transitions: Vec<(usize, bool)> = Vec::new();
+            let mut prev_level = 0usize;
+            for i in 0..600 {
+                let depth = if r.bool() { 10 + r.below(5) } else { r.below(4) };
+                let events = g.observe(sig(depth));
+                if let Some(ev) = events.first() {
+                    let was_down = depth >= 10;
+                    // downgrades raise the level, restores lower it
+                    assert_eq!(ev.level > prev_level, was_down, "{ev:?} vs depth {depth}");
+                    prev_level = ev.level;
+                    transitions.push((i, was_down));
+                }
+            }
+            for w in transitions.windows(2) {
+                let ((i0, d0), (i1, d1)) = (w[0], w[1]);
+                if d0 != d1 {
+                    let need = if d1 { degrade } else { restore } as usize;
+                    assert!(
+                        i1 - i0 >= need,
+                        "opposite transitions {need}-window violated: {i0}({d0}) -> {i1}({d1})"
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,16 +1,20 @@
 //! L3 coordinator: the paper's missing "end-to-end system" — typed
 //! request specs, dynamic batching, per-request precision *policies*
 //! (whole-model mode + per-module overrides + fallback escalation),
-//! backpressure, and serving metrics over the PJRT engine thread.
+//! bounded admission with explicit backpressure, per-request deadlines,
+//! a load-adaptive precision governor, and serving metrics over the
+//! PJRT engine replica pool.
 
 pub mod batcher;
+pub mod governor;
 pub mod net;
 pub mod request;
 pub mod server;
 pub mod stats;
 
-pub use batcher::{Batch, Batcher};
+pub use batcher::{Batch, Batcher, Drained};
+pub use governor::{GovernorConfig, GovernorShared, PrecisionGovernor, Signals, StepEvent};
 pub use request::{GroupKey, PolicyRef, Request, RequestSpec, Response, Timing};
-pub use server::{Coordinator, ServerConfig};
+pub use server::{Coordinator, ServerConfig, SubmitError};
 pub use net::{NetClient, NetServer};
 pub use stats::{Histogram, PolicyStats, Recorder, ReplicaStats};

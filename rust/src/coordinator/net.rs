@@ -23,6 +23,14 @@
 //! into a v2 frame (or `policy` into a v1 frame) is an error, not a
 //! guess.
 //!
+//! Overload control on the wire (DESIGN.md §5.8): v2 frames may carry
+//! `"deadline_ms"`; a request shed at the admission bound answers
+//! `{"ok": false, "busy": true, ...}` (retry later) and one whose
+//! deadline passed before execution answers
+//! `{"ok": false, "expired": true, ...}` — both distinct from terminal
+//! errors.  The per-connection read timeout and per-frame byte cap come
+//! from `ServerConfig` (`net_read_timeout`, `max_frame_bytes`).
+//!
 //! One OS thread per connection (requests within a connection pipeline
 //! through the dynamic batcher like any other); shutdown via the returned
 //! handle.
@@ -38,7 +46,7 @@ use crate::json::{self, Value};
 use crate::model::manifest::PolicyDraft;
 
 use super::request::{PolicyRef, RequestSpec};
-use super::server::Coordinator;
+use super::server::{Coordinator, SubmitError};
 
 pub struct NetServer {
     pub addr: std::net::SocketAddr,
@@ -154,6 +162,10 @@ pub fn parse_request(req: &Value, seq: usize) -> Result<(RequestSpec, u8)> {
             req.get("policy").is_none(),
             "\"policy\" requires a v2 frame (set \"v\": 2)"
         );
+        anyhow::ensure!(
+            req.get("deadline_ms").is_none(),
+            "\"deadline_ms\" requires a v2 frame (set \"v\": 2)"
+        );
         // the old implicit "m3" default is gone: silently serving a
         // different precision than the client assumed is worse than an
         // error that names the fix
@@ -174,7 +186,17 @@ pub fn parse_request(req: &Value, seq: usize) -> Result<(RequestSpec, u8)> {
     };
     let ids = ids_from(req, "ids", seq)?.context("missing ids")?;
     let type_ids = ids_from(req, "type_ids", seq)?;
-    Ok((RequestSpec { task, policy, ids, type_ids }, version))
+    let deadline = match req.get("deadline_ms") {
+        None => None,
+        Some(v) => {
+            let ms = v.as_f64().context("deadline_ms not a number")?;
+            // a sub-millisecond budget would truncate to 0 — an
+            // expire-on-arrival trap, not a deadline
+            anyhow::ensure!(ms >= 1.0, "deadline_ms must be at least 1");
+            Some(std::time::Duration::from_millis(ms as u64))
+        }
+    };
+    Ok((RequestSpec { task, policy, ids, type_ids, deadline }, version))
 }
 
 /// Serialize a typed spec as a v2 wire frame (the client side of
@@ -192,6 +214,9 @@ pub fn request_to_json(spec: &RequestSpec) -> Value {
     pairs.push(("ids", Value::Array(spec.ids.iter().map(|x| json::num(*x as f64)).collect())));
     if let Some(tys) = &spec.type_ids {
         pairs.push(("type_ids", Value::Array(tys.iter().map(|x| json::num(*x as f64)).collect())));
+    }
+    if let Some(d) = spec.deadline {
+        pairs.push(("deadline_ms", json::num(d.as_millis() as f64)));
     }
     json::obj(pairs)
 }
@@ -212,11 +237,37 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
     };
     let rx = match coord.submit(spec) {
         Ok(rx) => rx,
+        // explicit backpressure gets its own wire shape: "busy" tells the
+        // client to back off and retry, unlike a terminal error
+        Err(e @ SubmitError::Busy { .. }) => {
+            let mut pairs = vec![
+                ("ok", Value::Bool(false)),
+                ("busy", Value::Bool(true)),
+                ("error", Value::String(e.to_string())),
+            ];
+            if version >= 2 {
+                pairs.push(("v", json::num(version as f64)));
+            }
+            return json::obj(pairs);
+        }
         Err(e) => return fail(e.to_string()),
     };
     match rx.recv() {
         Err(_) => fail("coordinator dropped request".into()),
         Ok(resp) => match resp.error {
+            Some(e) if resp.expired => {
+                // deadline expiry is a distinct outcome class, not a
+                // server fault: the flag lets clients count it apart
+                let mut pairs = vec![
+                    ("ok", Value::Bool(false)),
+                    ("expired", Value::Bool(true)),
+                    ("error", Value::String(e)),
+                ];
+                if version >= 2 {
+                    pairs.push(("v", json::num(version as f64)));
+                }
+                json::obj(pairs)
+            }
             Some(e) => fail(e),
             None => {
                 let mut pairs = vec![
@@ -256,26 +307,32 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
 /// call's appended bytes when an error lands mid-way through a
 /// multi-byte character, which would re-introduce the drop for non-ASCII
 /// frames split at exactly the wrong byte.
-/// Hard per-frame cap.  The largest legitimate frame is a few KB of
-/// token ids, so a megabyte with no newline is a runaway or malicious
-/// stream; without a cap, one connection could buffer the server into an
-/// OOM (the payload-size checks in parsing only run on complete frames).
-const MAX_FRAME_BYTES: usize = 1 << 20;
-
-fn read_frame(reader: &mut impl BufRead, line: &mut Vec<u8>, stop: &AtomicBool) -> bool {
+/// The per-frame byte cap and the socket read timeout both come from
+/// `ServerConfig` (`max_frame_bytes`, default 1 MiB; `net_read_timeout`,
+/// default 200 ms).  The largest legitimate frame is a few KB of token
+/// ids, so anything near the cap with no newline is a runaway or
+/// malicious stream; without a cap, one connection could buffer the
+/// server into an OOM (the payload-size checks in parsing only run on
+/// complete frames).
+fn read_frame(
+    reader: &mut impl BufRead,
+    line: &mut Vec<u8>,
+    stop: &AtomicBool,
+    max_frame: usize,
+) -> bool {
     loop {
         if stop.load(Ordering::SeqCst) {
             return false;
         }
         // read through a `Take` so even a firehose with no newline
         // cannot grow the buffer past the cap inside one read_until call
-        let budget = (MAX_FRAME_BYTES.saturating_sub(line.len()) + 1) as u64;
+        let budget = (max_frame.saturating_sub(line.len()) + 1) as u64;
         match (&mut *reader).take(budget).read_until(b'\n', line) {
             // EOF: a peer that closed mid-frame without a trailing
             // newline still gets its buffered final frame processed
             Ok(0) => return !line.is_empty(),
             Ok(_) => {
-                if line.last() != Some(&b'\n') && line.len() > MAX_FRAME_BYTES {
+                if line.last() != Some(&b'\n') && line.len() > max_frame {
                     // budget exhausted with no frame boundary in sight:
                     // drop the connection instead of buffering forever
                     return false;
@@ -296,11 +353,15 @@ fn handle_conn(
     served: &AtomicU64,
     stop: &AtomicBool,
 ) -> Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    // both knobs ride ServerConfig so deployments can tune them without
+    // a rebuild-level constant (a client slower than the read timeout
+    // still completes — partial frames survive across timeouts)
+    stream.set_read_timeout(Some(coord.config.net_read_timeout))?;
+    let max_frame = coord.config.max_frame_bytes;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = Vec::new();
-    while read_frame(&mut reader, &mut line, stop) {
+    while read_frame(&mut reader, &mut line, stop, max_frame) {
         {
             // invalid UTF-8 falls through to process_line's "bad json"
             // error response rather than killing the connection
@@ -464,15 +525,15 @@ mod tests {
         let stop = AtomicBool::new(false);
         let mut reader = BufReader::new(stream);
         let mut line = Vec::new();
-        assert!(read_frame(&mut reader, &mut line, &stop));
+        assert!(read_frame(&mut reader, &mut line, &stop, 1 << 20));
         assert_eq!(std::str::from_utf8(&line).unwrap().trim(), "{\"task\":\"sst2\"}");
         line.clear();
-        assert!(read_frame(&mut reader, &mut line, &stop));
+        assert!(read_frame(&mut reader, &mut line, &stop, 1 << 20));
         assert_eq!(std::str::from_utf8(&line).unwrap().trim(), "{\"second\":1}");
         line.clear();
         // peer closes: clean EOF, no frame
         drop(writer.join().unwrap());
-        assert!(!read_frame(&mut reader, &mut line, &stop));
+        assert!(!read_frame(&mut reader, &mut line, &stop, 1 << 20));
         assert!(line.is_empty());
     }
 
@@ -498,7 +559,7 @@ mod tests {
         let stop = AtomicBool::new(false);
         let mut reader = BufReader::new(stream);
         let mut line = Vec::new();
-        assert!(read_frame(&mut reader, &mut line, &stop));
+        assert!(read_frame(&mut reader, &mut line, &stop, 1 << 20));
         assert_eq!(std::str::from_utf8(&line).unwrap().trim(), "{\"task\":\"café\"}");
         drop(writer.join().unwrap());
     }
@@ -525,8 +586,11 @@ mod tests {
         let stop = AtomicBool::new(false);
         let mut reader = BufReader::new(stream);
         let mut line = Vec::new();
-        assert!(!read_frame(&mut reader, &mut line, &stop), "runaway frame must be rejected");
-        assert!(line.len() <= MAX_FRAME_BYTES + 1);
+        assert!(
+            !read_frame(&mut reader, &mut line, &stop, 1 << 20),
+            "runaway frame must be rejected"
+        );
+        assert!(line.len() <= (1 << 20) + 1);
         drop(reader); // hang up so the writer unblocks
         writer.join().unwrap();
     }
@@ -548,10 +612,93 @@ mod tests {
         let mut reader = BufReader::new(stream);
         let mut line = Vec::new();
         writer.join().unwrap();
-        assert!(read_frame(&mut reader, &mut line, &stop));
+        assert!(read_frame(&mut reader, &mut line, &stop, 1 << 20));
         assert_eq!(std::str::from_utf8(&line).unwrap().trim(), "{\"no\":\"newline\"}");
         line.clear();
-        assert!(!read_frame(&mut reader, &mut line, &stop));
+        assert!(!read_frame(&mut reader, &mut line, &stop, 1 << 20));
+    }
+
+    #[test]
+    fn read_frame_with_configured_short_timeout_still_completes() {
+        use std::io::Write;
+        // a 40 ms configured timeout (ServerConfig::net_read_timeout is
+        // plumbed to the socket in handle_conn) with a client pausing
+        // 150 ms mid-frame: several timeouts fire, the partial frame
+        // survives them all
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"task\":\"s").unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            s.write_all(b"st2\"}\n").unwrap();
+            s.flush().unwrap();
+            s
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(std::time::Duration::from_millis(40))).unwrap();
+        let stop = AtomicBool::new(false);
+        let mut reader = BufReader::new(stream);
+        let mut line = Vec::new();
+        assert!(read_frame(&mut reader, &mut line, &stop, 1 << 20));
+        assert_eq!(std::str::from_utf8(&line).unwrap().trim(), "{\"task\":\"sst2\"}");
+        drop(writer.join().unwrap());
+    }
+
+    #[test]
+    fn read_frame_respects_configured_frame_cap() {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // 100 bytes, no newline: over a 64-byte cap, under the default
+            let _ = s.write_all(&[b'x'; 100]);
+            let _ = s.flush();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(std::time::Duration::from_millis(40))).unwrap();
+        let stop = AtomicBool::new(false);
+        let mut reader = BufReader::new(stream);
+        let mut line = Vec::new();
+        assert!(
+            !read_frame(&mut reader, &mut line, &stop, 64),
+            "configured 64-byte cap must reject the frame"
+        );
+        assert!(line.len() <= 65);
+        drop(reader);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_ms_is_v2_only_and_round_trips() {
+        let seq = 4;
+        let v = json::parse(r#"{"v": 2, "task": "t", "ids": [1], "deadline_ms": 250}"#).unwrap();
+        let (spec, version) = parse_request(&v, seq).unwrap();
+        assert_eq!(version, 2);
+        assert_eq!(spec.deadline, Some(std::time::Duration::from_millis(250)));
+        // the client serializer emits it back out
+        let frame = request_to_json(&spec);
+        assert_eq!(frame.get("deadline_ms").unwrap().as_usize(), Some(250));
+        let (again, _) = parse_request(&frame, seq).unwrap();
+        assert_eq!(again.deadline, spec.deadline);
+
+        // v1 frames do not grow new fields through the shim
+        let v1 =
+            json::parse(r#"{"task": "t", "mode": "fp", "ids": [1], "deadline_ms": 250}"#).unwrap();
+        let err = format!("{:#}", parse_request(&v1, seq).unwrap_err());
+        assert!(err.contains("deadline_ms") && err.contains("v2"), "{err}");
+
+        // zero / sub-millisecond budgets are nonsense, not "no deadline"
+        // (0.5 would truncate to an expire-on-arrival 0 ms budget)
+        for bad in [
+            r#"{"v": 2, "task": "t", "ids": [1], "deadline_ms": 0}"#,
+            r#"{"v": 2, "task": "t", "ids": [1], "deadline_ms": 0.5}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(parse_request(&v, seq).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! never touches the allocator for routing.
 
 use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::model::manifest::{PolicyDraft, PolicyId, TaskId};
 
@@ -42,6 +42,13 @@ pub struct RequestSpec {
     /// Token ids; shorter than the model seq is fine (padded at admission).
     pub ids: Vec<i32>,
     pub type_ids: Option<Vec<i32>>,
+    /// Per-request completion budget, measured from admission.  A request
+    /// still queued when its deadline passes is cancelled at de-queue /
+    /// batch-formation time — never after its batch reached the engine —
+    /// and answered with an `expired` response (DESIGN.md §5.8).  `None`
+    /// falls back to `ServerConfig::default_deadline` (which may also be
+    /// `None`: no deadline).
+    pub deadline: Option<Duration>,
 }
 
 impl RequestSpec {
@@ -82,6 +89,17 @@ impl RequestSpec {
         self.type_ids = Some(type_ids);
         self
     }
+
+    /// Complete within `d` of admission or expire (see `deadline` field).
+    pub fn deadline(mut self, d: Duration) -> RequestSpec {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Wire-friendly spelling of [`RequestSpec::deadline`].
+    pub fn deadline_ms(self, ms: u64) -> RequestSpec {
+        self.deadline(Duration::from_millis(ms))
+    }
 }
 
 /// Interned batch-group key (paper §2.3 + §3 — the accuracy/latency
@@ -96,12 +114,29 @@ pub struct GroupKey {
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
+    /// Batch-group key; `key.policy` is the *effective* route — under an
+    /// active governor downgrade it may be a cheaper policy than the one
+    /// the client named.
     pub key: GroupKey,
+    /// The policy the client asked for (stats attribute shed / expired /
+    /// governed counts here, so a policy's ledger reconciles even while
+    /// its traffic rides a downgraded route).
+    pub requested: PolicyId,
     /// `[seq]` token ids (already padded/truncated to the model seq).
     pub ids: Vec<i32>,
     pub type_ids: Vec<i32>,
     pub enqueued: Instant,
+    /// Absolute expiry (admission time + the spec or server default
+    /// budget); `None` = never expires.
+    pub deadline: Option<Instant>,
     pub reply: Sender<Response>,
+}
+
+impl Request {
+    /// True once the deadline (if any) has passed.
+    pub fn expired(&self, now: Instant) -> bool {
+        matches!(self.deadline, Some(d) if now >= d)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -115,6 +150,12 @@ pub struct Response {
     pub logits: Vec<f32>,
     pub timing: Timing,
     pub error: Option<String>,
+    /// Deadline expiry (a distinct failure class: the server was healthy
+    /// but could not serve this request within its budget).  Expired
+    /// responses never carry engine timings — cancellation happens at
+    /// batch formation or via the engine's cancel-before-submit hook,
+    /// never after device work started.
+    pub expired: bool,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -166,5 +207,9 @@ mod tests {
         let draft = PolicyDraft::base("m3").with_override("attn_output", "fp");
         let spec = RequestSpec::task("sst2").policy_inline(draft.clone());
         assert_eq!(spec.policy, Some(PolicyRef::Inline(draft)));
+
+        let spec = RequestSpec::task("sst2").deadline_ms(250);
+        assert_eq!(spec.deadline, Some(Duration::from_millis(250)));
+        assert!(RequestSpec::task("sst2").deadline.is_none(), "no default budget in the spec");
     }
 }

@@ -10,21 +10,31 @@
 //! upload/execute/readback and selects executables through its mirrored
 //! policy table; and de-batching + reply dispatch run on the completion
 //! pool, never on the engine thread.
+//!
+//! Overload control (DESIGN.md §5.8): admission is bounded (`submit`
+//! returns `SubmitError::Busy`, never queues unboundedly), requests
+//! carry deadlines that cancel them at de-queue/batch-formation time or
+//! via the engine's cancel-before-submit hook — never after device work
+//! starts — and an optional `PrecisionGovernor` walks each policy's
+//! degradation chain toward cheaper modes under sustained queue pressure.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::exec::ThreadPool;
 use crate::model::manifest::{Manifest, ModeId, PolicyId, TaskId};
 use crate::model::Container;
-use crate::runtime::engine::{EngineOptions, EnginePool, InferDone, InferJob};
+use crate::runtime::engine::{
+    CancelCheck, CancelledBeforeSubmit, EngineOptions, EnginePool, InferDone, InferJob,
+};
 use crate::runtime::staging::StagingPool;
 
-use super::batcher::{Batch, Batcher};
+use super::batcher::{Batch, Batcher, Drained};
+use super::governor::{GovernorConfig, GovernorShared, PrecisionGovernor, Signals};
 use super::request::{GroupKey, PolicyRef, Request, RequestSpec, Response, Timing};
 use super::stats::Recorder;
 
@@ -43,6 +53,25 @@ pub struct ServerConfig {
     pub replicas: usize,
     /// Staging buffers kept warm per bucket.
     pub staging_per_bucket: usize,
+    /// Deadline applied to requests whose spec carries none (`None` =
+    /// such requests never expire).
+    pub default_deadline: Option<Duration>,
+    /// Enable the load-adaptive precision governor (DESIGN.md §5.8).
+    /// Also extends startup preloading to every route's degradation
+    /// chain, so a downgraded route always has a resident checkpoint.
+    pub governor: Option<GovernorConfig>,
+    /// Per-connection socket read timeout of the TCP front end (the
+    /// granularity at which connection threads notice shutdown; a slower
+    /// client is fine — partial frames survive across timeouts).
+    pub net_read_timeout: Duration,
+    /// Per-frame byte cap of the TCP front end (one frame is a few KB of
+    /// token ids; anything near this cap is a runaway or malicious
+    /// stream and drops the connection).
+    pub max_frame_bytes: usize,
+    /// Test-only service-rate throttle: each engine replica sleeps this
+    /// long per batch, making queue pressure deterministic for the
+    /// overload suites.  Never set in production.
+    pub throttle_batch: Option<Duration>,
     /// Test-only fault injection: the completion callback for this
     /// dispatch sequence number panics, exercising panic isolation in the
     /// readback/completion stage.  Never set in production.
@@ -59,7 +88,55 @@ impl Default for ServerConfig {
             pipeline: true,
             replicas: 1,
             staging_per_bucket: 4,
+            default_deadline: None,
+            governor: None,
+            net_read_timeout: Duration::from_millis(200),
+            max_frame_bytes: 1 << 20,
+            throttle_batch: None,
             fault_inject_batch: None,
+        }
+    }
+}
+
+/// Why `Coordinator::submit` refused a request.  `Busy` is the explicit
+/// backpressure signal (the admission queue is at `queue_cap`); the TCP
+/// front end maps it to a `busy` response instead of a generic error so
+/// clients can distinguish "retry later" from "fix your request".
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Admission queue full — shed, retry later.
+    Busy { queue_cap: usize },
+    /// Coordinator stopped (shutdown in progress).
+    Stopped,
+    /// Malformed payload or unknown route — retrying will not help.
+    Rejected(anyhow::Error),
+}
+
+impl SubmitError {
+    pub fn is_busy(&self) -> bool {
+        matches!(self, SubmitError::Busy { .. })
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy { queue_cap } => {
+                write!(f, "server busy: admission queue full ({queue_cap} deep)")
+            }
+            SubmitError::Stopped => f.write_str("coordinator stopped"),
+            // {:#} flattens the anyhow context chain into one line, the
+            // shape callers already match on ("no checkpoint loaded ...")
+            SubmitError::Rejected(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SubmitError::Rejected(e) => e.source(),
+            _ => None,
         }
     }
 }
@@ -79,6 +156,16 @@ pub struct Coordinator {
     /// engine.  Residency is per executable *mode*: policies that resolve
     /// to the same exec mode share a checkpoint.
     loaded: Vec<bool>,
+    /// Admitted-but-unanswered requests, across the *whole* pipeline
+    /// (channel + batcher groups + engine queues): submit reserves a
+    /// slot, the terminal reply (ok / error / expired) releases it.
+    /// Bounding this — not just the channel — is what makes `queue_cap`
+    /// an honest backlog bound, and it doubles as the governor's primary
+    /// pressure signal.
+    depth: Arc<AtomicUsize>,
+    /// Present when the governor is enabled: the lock-free
+    /// `policy -> effective policy` table admission reads.
+    governor: Option<Arc<GovernorShared>>,
     next_id: AtomicU64,
     seq: usize,
     num_labels: usize,
@@ -88,7 +175,9 @@ pub struct Coordinator {
 impl Coordinator {
     /// Load checkpoints for the given (task, policy) routes — mode names
     /// work as uniform policies — spawn the engine and batcher, and
-    /// pre-compile every (exec mode, bucket) executable.
+    /// pre-compile every (exec mode, bucket) executable.  With the
+    /// governor enabled, each route's degradation chain is loaded too:
+    /// a downgrade must never route to a cold checkpoint.
     pub fn start(
         artifacts: std::path::PathBuf,
         routes: &[(String, String)],
@@ -99,12 +188,25 @@ impl Coordinator {
         let num_labels = manifest.model.num_labels;
         let buckets = manifest.buckets.clone();
 
+        // expand routes with governor degradation targets (uniform
+        // policies of cheaper modes), then dedupe by (task, exec mode)
+        let mut expanded: Vec<(String, String)> = Vec::new();
+        for (task, policy) in routes {
+            expanded.push((task.clone(), policy.clone()));
+            if config.governor.is_some() {
+                let pid = manifest.policy_id(policy)?;
+                for step in manifest.downgrade_chain(pid) {
+                    expanded.push((task.clone(), manifest.policy_name(step).to_string()));
+                }
+            }
+        }
+
         // load quantized/fp checkpoints from disk, one per (task, exec
         // mode) — routes naming policies with the same exec mode dedupe
         let mut preload = Vec::new();
         let mut modes_used = std::collections::BTreeSet::new();
         let mut loaded = vec![false; manifest.num_tasks() * manifest.num_modes()];
-        for (task, policy) in routes {
+        for (task, policy) in &expanded {
             let t = manifest.task(task)?;
             let exec = manifest.policy(policy)?.exec_mode;
             let mode = manifest.mode_name(exec).to_string();
@@ -137,20 +239,44 @@ impl Coordinator {
             precompile,
             Arc::clone(&pool),
             Arc::clone(&staging),
-            EngineOptions { overlap: config.pipeline, replicas },
+            EngineOptions {
+                overlap: config.pipeline,
+                replicas,
+                throttle: config.throttle_batch,
+            },
         )?);
         let man = Arc::new(manifest);
         let recorder = Arc::new(Recorder::new(man.policy_order.clone(), replicas));
+        let depth = Arc::new(AtomicUsize::new(0));
+
+        // governor: pure machine on the batcher thread, shared effective
+        // table for admission
+        let (machine, shared) = match &config.governor {
+            Some(cfg) => {
+                let chains: Vec<Vec<PolicyId>> = (0..man.num_policies())
+                    .map(|i| man.downgrade_chain(PolicyId(i as u16)))
+                    .collect();
+                let machine = PrecisionGovernor::new(chains, cfg.clone());
+                let shared = Arc::new(GovernorShared::new(man.num_policies()));
+                (Some(machine), Some(shared))
+            }
+            None => (None, None),
+        };
 
         let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(config.queue_cap);
         let batcher_cfg = config.clone();
         let b_recorder = Arc::clone(&recorder);
         let b_engine = Arc::clone(&engine);
         let b_man = Arc::clone(&man);
+        let b_depth = Arc::clone(&depth);
+        let b_shared = shared.clone();
         let batcher_join = std::thread::Builder::new()
             .name("zqh-batcher".into())
             .spawn(move || {
-                batcher_main(rx, batcher_cfg, b_man, b_engine, b_recorder, staging)
+                batcher_main(
+                    rx, batcher_cfg, b_man, b_engine, b_recorder, staging, b_depth, machine,
+                    b_shared,
+                )
             })
             .context("spawn batcher")?;
 
@@ -162,6 +288,8 @@ impl Coordinator {
             recorder,
             man,
             loaded,
+            depth,
+            governor: shared,
             next_id: AtomicU64::new(0),
             seq,
             num_labels,
@@ -169,34 +297,99 @@ impl Coordinator {
         })
     }
 
-    /// Submit a typed request; `Err` on backpressure (queue full) or bad
-    /// input.  Policy references are interned here — nothing downstream
-    /// sees a string.  Short `ids`/`type_ids` are padded to the model seq.
-    pub fn submit(&self, spec: RequestSpec) -> Result<Receiver<Response>> {
-        let RequestSpec { task, policy, mut ids, type_ids } = spec;
+    /// Submit a typed request.  Policy references are interned here —
+    /// nothing downstream sees a string — the deadline is stamped, and
+    /// under an active governor downgrade the request rides the cheaper
+    /// effective route (ledgered as `governed` on the requested policy).
+    /// `Err(SubmitError::Busy)` is explicit backpressure: the admission
+    /// queue never grows past `queue_cap`.
+    pub fn submit(
+        &self,
+        spec: RequestSpec,
+    ) -> std::result::Result<Receiver<Response>, SubmitError> {
+        let RequestSpec { task, policy, mut ids, type_ids, deadline } = spec;
+        let reject = |e: anyhow::Error| SubmitError::Rejected(e);
         if ids.is_empty() || ids.len() > self.seq {
-            bail!("request needs 1..={} token ids (got {})", self.seq, ids.len());
+            return Err(reject(anyhow!(
+                "request needs 1..={} token ids (got {})",
+                self.seq,
+                ids.len()
+            )));
         }
         ids.resize(self.seq, crate::data::PAD);
         let mut type_ids = type_ids.unwrap_or_default();
         if type_ids.len() > self.seq {
-            bail!("type_ids longer than seq {} (got {})", self.seq, type_ids.len());
+            return Err(reject(anyhow!(
+                "type_ids longer than seq {} (got {})",
+                self.seq,
+                type_ids.len()
+            )));
         }
         type_ids.resize(self.seq, 0);
-        let key = self.resolve(&task, policy.as_ref())?;
+        let key = self.resolve(&task, policy.as_ref()).map_err(reject)?;
+        let requested = key.policy;
+        // governed routing: the effective policy may sit further down the
+        // degradation chain right now.  Chain targets of the *configured*
+        // routes were preloaded at start; a request naming some other
+        // admissible policy (or another task) could still be steered at a
+        // cold (task, mode) slot, so check residency and fall back to the
+        // requested route rather than dispatch to a checkpoint the engine
+        // never loaded.
+        let effective = match &self.governor {
+            Some(g) => {
+                let eff = g.effective(requested);
+                let exec = self.man.policy_by_id(eff).exec_mode;
+                if eff != requested
+                    && !self.loaded[route_slot(self.man.num_modes(), key.task, exec)]
+                {
+                    requested
+                } else {
+                    eff
+                }
+            }
+            None => requested,
+        };
+        // reserve a backlog slot before touching the channel: `depth`
+        // counts admitted-but-unanswered requests, so the bound covers
+        // everything downstream (batcher groups, engine queues), not just
+        // the channel — the channel itself (also `queue_cap` deep) can
+        // then never reject a reserved request
+        let busy = || SubmitError::Busy { queue_cap: self.config.queue_cap };
+        if self.depth.fetch_add(1, Ordering::SeqCst) >= self.config.queue_cap {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            self.recorder.record_shed(requested);
+            return Err(busy());
+        }
+        let now = Instant::now();
         let (reply, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            key,
+            key: GroupKey { task: key.task, policy: effective },
+            requested,
             ids,
             type_ids,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: deadline.or(self.config.default_deadline).map(|d| now + d),
             reply,
         };
         match self.tx.as_ref().expect("live").try_send(req) {
-            Ok(()) => Ok(rx),
-            Err(TrySendError::Full(_)) => Err(anyhow!("admission queue full (backpressure)")),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("coordinator stopped")),
+            Ok(()) => {
+                if effective != requested {
+                    self.recorder.record_governed(requested);
+                }
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                // unreachable by construction (reservations cap channel
+                // occupancy), kept as defense in depth
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                self.recorder.record_shed(requested);
+                Err(busy())
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Err(SubmitError::Stopped)
+            }
         }
     }
 
@@ -239,6 +432,21 @@ impl Coordinator {
         self.engine.as_ref().expect("engine live")
     }
 
+    /// The governor's current effective route for `policy` (identity
+    /// when the governor is off) — introspection for tests/benches.
+    pub fn effective_policy(&self, policy: PolicyId) -> PolicyId {
+        match &self.governor {
+            Some(g) => g.effective(policy),
+            None => policy,
+        }
+    }
+
+    /// Admitted-but-unanswered requests across the whole pipeline
+    /// (introspection; the governor's pressure signal).
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
     pub fn num_labels(&self) -> usize {
         self.num_labels
     }
@@ -269,6 +477,7 @@ fn route_slot(num_modes: usize, task: TaskId, mode: ModeId) -> usize {
     task.index() * num_modes + mode.index()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn batcher_main(
     rx: Receiver<Request>,
     config: ServerConfig,
@@ -276,30 +485,80 @@ fn batcher_main(
     engine: Arc<EnginePool>,
     recorder: Arc<Recorder>,
     staging: Arc<StagingPool>,
+    depth: Arc<AtomicUsize>,
+    mut governor: Option<PrecisionGovernor>,
+    shared: Option<Arc<GovernorShared>>,
 ) {
     let mut batcher = Batcher::new(config.max_batch, config.max_wait);
     let mut batch_seq: u64 = 0;
+    // queue delay of the most recently dispatched batch — the governor's
+    // instantaneous latency signal
+    let mut last_queue_us: u64 = 0;
+    let gov_tick = governor.as_ref().map(|g| g.config().tick);
+    let mut last_gov = Instant::now();
+    let idle = match gov_tick {
+        // with a governor, idle wake-ups follow its cadence so restore
+        // streaks accumulate even on a quiet server
+        Some(t) => t.max(Duration::from_millis(1)),
+        None => Duration::from_millis(50),
+    };
+    let mut finish = |out: Drained, batch_seq: &mut u64, last_queue_us: &mut u64| {
+        let now = Instant::now();
+        for r in out.expired {
+            // batcher-side expiry is terminal here, so this is where its
+            // backlog slot releases (batch completions release their
+            // own); release-before-reply, like the completion path, so
+            // an observer who has every reply also sees a drained backlog
+            depth.fetch_sub(1, Ordering::SeqCst);
+            send_expired(&r, &recorder, now);
+        }
+        for batch in out.batches {
+            if let Some(front) = batch.requests.first() {
+                *last_queue_us = now.duration_since(front.enqueued).as_micros() as u64;
+            }
+            dispatch(batch, batch_seq, &config, &man, &engine, &recorder, &staging, &depth);
+        }
+    };
     loop {
         let timeout = batcher
             .next_deadline()
-            .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
+            .map(|d| d.saturating_duration_since(Instant::now()).min(idle))
+            .unwrap_or(idle);
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                if let Some(batch) = batcher.push(req) {
-                    dispatch(batch, &mut batch_seq, &config, &man, &engine, &recorder, &staging);
-                }
+                let out = batcher.push(req, Instant::now());
+                finish(out, &mut batch_seq, &mut last_queue_us);
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                for batch in batcher.drain_all() {
-                    dispatch(batch, &mut batch_seq, &config, &man, &engine, &recorder, &staging);
-                }
+                let out = batcher.drain_all(Instant::now());
+                finish(out, &mut batch_seq, &mut last_queue_us);
                 break;
             }
         }
-        for batch in batcher.tick(Instant::now()) {
-            dispatch(batch, &mut batch_seq, &config, &man, &engine, &recorder, &staging);
+        let out = batcher.tick(Instant::now());
+        finish(out, &mut batch_seq, &mut last_queue_us);
+
+        // governor cadence: observe the whole-pipeline backlog, publish
+        // any transitions to the table admission reads
+        if let (Some(g), Some(table)) = (governor.as_mut(), shared.as_deref()) {
+            let now = Instant::now();
+            if now.duration_since(last_gov) >= gov_tick.expect("governor has a tick") {
+                last_gov = now;
+                let signals = Signals {
+                    depth: depth.load(Ordering::SeqCst),
+                    queue_us: last_queue_us,
+                };
+                // consume the latency sample: each dispatched batch's
+                // queue delay feeds exactly one observation, so a single
+                // slow batch cannot keep tripping `high_queue_us` for its
+                // whole in-flight duration (or forever on an idle server)
+                // — sustained pressure requires freshly slow batches
+                last_queue_us = 0;
+                for ev in g.observe(signals) {
+                    table.publish(ev.policy, ev.to);
+                }
+            }
         }
     }
 }
@@ -307,7 +566,11 @@ fn batcher_main(
 /// Assemble a batch into a pooled staging buffer and hand it to the
 /// engine pool with a completion callback (de-batching + reply dispatch,
 /// run on the worker pool after readback).  The pool routes the batch to
-/// the group's pinned replica, or the least-loaded one.
+/// the group's pinned replica, or the least-loaded one.  Batches whose
+/// every member carries a deadline also carry a cancel-before-submit
+/// check: if the whole batch expires while queued inside the engine, it
+/// is abandoned before any device work (DESIGN.md §5.8).
+#[allow(clippy::too_many_arguments)]
 fn dispatch(
     batch: Batch,
     batch_seq: &mut u64,
@@ -316,6 +579,7 @@ fn dispatch(
     engine: &Arc<EnginePool>,
     recorder: &Arc<Recorder>,
     staging: &Arc<StagingPool>,
+    depth: &Arc<AtomicUsize>,
 ) {
     let real = batch.requests.len();
     let bucket = man.bucket_for(real);
@@ -329,11 +593,27 @@ fn dispatch(
     }
     host.finish();
 
+    // the batch is cancellable only while every member has a deadline:
+    // once the last of them passes, no one is waiting for the result
+    let cancel: Option<CancelCheck> = batch
+        .requests
+        .iter()
+        .map(|r| r.deadline)
+        .collect::<Option<Vec<Instant>>>()
+        .and_then(|ds| ds.into_iter().max())
+        .map(|latest| Box::new(move || Instant::now() >= latest) as CancelCheck);
+
     let policy = batch.key.policy;
     let requests = batch.requests;
     let recorder = Arc::clone(recorder);
+    let depth = Arc::clone(depth);
     let fault = config.fault_inject_batch;
     let done = Box::new(move |result: Result<InferDone>| {
+        // release the whole batch's backlog reservations first, before
+        // any work that can panic (the worker pool isolates panics, and
+        // a poisoned batch must not shrink admission capacity forever —
+        // the same decrement-before-user-code rule DispatchState uses)
+        depth.fetch_sub(requests.len(), Ordering::SeqCst);
         if fault == Some(seq_no) {
             panic!("fault injection: completion panic for batch {seq_no}");
         }
@@ -365,14 +645,24 @@ fn dispatch(
                         replica: done.replica,
                         engine_seq: done.exec_seq,
                     };
-                    recorder.record_request(policy, timing.total_us, timing.queue_us, false);
+                    recorder.record_request(r.requested, timing.total_us, timing.queue_us, false);
                     let _ = r.reply.send(Response {
                         id: r.id,
                         policy,
                         logits: logits[row * nl..(row + 1) * nl].to_vec(),
                         timing,
                         error: None,
+                        expired: false,
                     });
+                }
+            }
+            Err(e) if e.downcast_ref::<CancelledBeforeSubmit>().is_some() => {
+                // the engine abandoned the whole batch before any device
+                // work: every member expired while queued — the second
+                // (and last) cancellation point after batch formation
+                let now = Instant::now();
+                for r in requests {
+                    send_expired(&r, &recorder, now);
                 }
             }
             Err(e) => {
@@ -384,7 +674,7 @@ fn dispatch(
         }
     });
 
-    let job = InferJob { task: batch.key.task, policy, staging: host, done };
+    let job = InferJob { task: batch.key.task, policy, staging: host, cancel, done };
     if let Err(job) = engine.submit(job) {
         let job = *job;
         staging.put(job.staging);
@@ -392,13 +682,33 @@ fn dispatch(
     }
 }
 
+/// NB: neither reply helper touches the backlog counter — batch
+/// completions release all their reservations up front (panic safety),
+/// and the batcher-side expiry path decrements explicitly in `finish`.
 fn send_error(r: &Request, policy: PolicyId, recorder: &Recorder, msg: &str) {
-    recorder.record_request(policy, 0, 0, true);
+    recorder.record_request(r.requested, 0, 0, true);
     let _ = r.reply.send(Response {
         id: r.id,
         policy,
         logits: vec![],
         timing: Timing::default(),
         error: Some(msg.to_string()),
+        expired: false,
+    });
+}
+
+/// Reply to a deadline-expired request: a distinct outcome class, with
+/// queue time but — by construction — no engine timings (cancellation
+/// never happens after device work starts).
+fn send_expired(r: &Request, recorder: &Recorder, now: Instant) {
+    let queue_us = now.duration_since(r.enqueued).as_micros() as u64;
+    recorder.record_expired(r.requested, queue_us);
+    let _ = r.reply.send(Response {
+        id: r.id,
+        policy: r.key.policy,
+        logits: vec![],
+        timing: Timing { queue_us, ..Timing::default() },
+        error: Some(format!("deadline exceeded after {queue_us}us in queue")),
+        expired: true,
     });
 }

@@ -96,10 +96,25 @@ pub struct PolicyStats {
     pub latency: Histogram,
     pub exec: Histogram,
     pub queue: Histogram,
+    /// Admitted requests with a terminal outcome:
+    /// `requests == completed + errors + expired` at every instant (each
+    /// outcome increments both under one lock acquisition).
     pub requests: u64,
     pub batches: u64,
     pub batched_rows: u64,
     pub errors: u64,
+    /// Replied with logits.
+    pub completed: u64,
+    /// Overload-control ledger (DESIGN.md §5.8), keyed by the policy the
+    /// client *requested* (traffic governed onto a cheaper route still
+    /// reconciles under the name the client used):
+    /// rejected at admission with `Busy` (never entered the queue),
+    pub shed: u64,
+    /// cancelled at de-queue / cancel-before-submit because the deadline
+    /// passed (counted in `requests` too — they were admitted),
+    pub expired: u64,
+    /// admitted while the governor had this policy downgraded.
+    pub governed: u64,
 }
 
 impl PolicyStats {
@@ -112,7 +127,7 @@ impl PolicyStats {
     }
 
     fn active(&self) -> bool {
-        self.requests > 0 || self.batches > 0 || self.errors > 0
+        self.requests > 0 || self.batches > 0 || self.errors > 0 || self.shed > 0
     }
 }
 
@@ -166,9 +181,33 @@ impl Recorder {
         if err {
             s.errors += 1;
         } else {
+            s.completed += 1;
             s.latency.record(total_us);
             s.queue.record(queue_us);
         }
+    }
+
+    /// A submission rejected with `Busy` at admission (queue at cap).
+    pub fn record_shed(&self, policy: PolicyId) {
+        self.inner.lock().unwrap().policies[policy.index()].shed += 1;
+    }
+
+    /// An admitted request cancelled because its deadline passed before
+    /// its batch reached the device (de-queue cull or the engine's
+    /// cancel-before-submit hook).  Counts in `requests` too, so
+    /// `requests == completed + errors + expired` stays exact.
+    pub fn record_expired(&self, policy: PolicyId, queue_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let s = &mut g.policies[policy.index()];
+        s.requests += 1;
+        s.expired += 1;
+        s.queue.record(queue_us);
+    }
+
+    /// A request admitted while the governor had `requested` downgraded
+    /// (it rides a cheaper route; the ledger stays under the asked name).
+    pub fn record_governed(&self, requested: PolicyId) {
+        self.inner.lock().unwrap().policies[requested.index()].governed += 1;
     }
 
     pub fn record_batch(&self, policy: PolicyId, rows: usize, exec_us: u64, replica: usize) {
@@ -222,15 +261,21 @@ impl Recorder {
         };
         let elapsed = self.elapsed_s();
         let mut t = Table::new(&[
-            "policy", "reqs", "errs", "thr(req/s)", "mean batch", "p50 lat", "p95 lat",
-            "p99 lat", "mean exec/batch",
+            "policy", "reqs", "errs", "shed", "expired", "governed", "goodput(r/s)",
+            "mean batch", "p50 lat", "p95 lat", "p99 lat", "mean exec/batch",
         ]);
         for (policy, s) in &snap {
             t.row(vec![
                 policy.clone(),
                 s.requests.to_string(),
                 s.errors.to_string(),
-                format!("{:.1}", s.requests as f64 / elapsed.max(1e-9)),
+                s.shed.to_string(),
+                s.expired.to_string(),
+                s.governed.to_string(),
+                // completed-only: under overload, counting expired
+                // requests here would read as "keeping up" exactly when
+                // the server is shedding accuracy and load to survive
+                format!("{:.1}", s.completed as f64 / elapsed.max(1e-9)),
                 format!("{:.2}", s.mean_batch_size()),
                 format!("{:.1}ms", s.latency.percentile_us(0.50) as f64 / 1e3),
                 format!("{:.1}ms", s.latency.percentile_us(0.95) as f64 / 1e3),
@@ -338,6 +383,199 @@ mod tests {
         let snap = r.snapshot();
         assert!(snap.contains_key("fp"));
         assert!(!snap.contains_key("m1"));
+    }
+
+    #[test]
+    fn overload_counters_reconcile_and_render() {
+        let r = Recorder::new(vec!["fp".into(), "attn-out-fp".into()], 1);
+        let p = PolicyId(1);
+        r.record_request(p, 1000, 100, false);
+        r.record_request(p, 2000, 200, true);
+        r.record_expired(p, 5000);
+        r.record_shed(p);
+        r.record_shed(p);
+        r.record_governed(p);
+        let snap = r.snapshot();
+        let s = &snap["attn-out-fp"];
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.governed, 1);
+        assert_eq!(s.requests, s.completed + s.errors + s.expired);
+        let table = r.render();
+        assert!(table.contains("shed") && table.contains("expired") && table.contains("governed"));
+        // a policy that only ever shed still shows up (the overload story
+        // must be visible even when nothing was admitted)
+        let r = Recorder::new(vec!["fp".into()], 1);
+        r.record_shed(PolicyId(0));
+        assert!(r.snapshot().contains_key("fp"));
+    }
+
+    /// Satellite coverage for DESIGN.md §5.8/§9: the recorder under
+    /// concurrent load.  Writer threads hammer every record path while a
+    /// reader snapshots/renders continuously; every *observed* snapshot
+    /// must satisfy the invariants the single-lock design promises —
+    /// per-replica batch counts summing to per-policy batch totals, and
+    /// `requests == completed + errors + expired` per policy — and the
+    /// final state must reconcile exactly with what the writers did.
+    /// (`loom` is unavailable offline, so interleavings are driven by
+    /// seeded real threads via `prop::forall` instead.)
+    #[test]
+    fn recorder_concurrent_snapshot_render_coherence() {
+        use crate::prop::{forall, Rng};
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        forall("recorder-race", 8, |r: &mut Rng| {
+            let policies: Vec<String> = vec!["fp".into(), "m3".into(), "attn-out-fp".into()];
+            let replicas = 1 + r.below(3);
+            let rec = Arc::new(Recorder::new(policies, replicas));
+            // pre-generate each writer's op tape so the work is seeded
+            // and the expected totals are known exactly
+            #[derive(Clone, Copy)]
+            enum Op {
+                Req { p: u16, err: bool },
+                Expired { p: u16 },
+                Shed { p: u16 },
+                Governed { p: u16 },
+                Batch { p: u16, rows: usize, rep: usize },
+            }
+            let n_writers = 3;
+            let tapes: Vec<Vec<Op>> = (0..n_writers)
+                .map(|_| {
+                    (0..150 + r.below(150))
+                        .map(|_| {
+                            let p = r.below(3) as u16;
+                            match r.below(5) {
+                                0 => Op::Req { p, err: r.below(8) == 0 },
+                                1 => Op::Expired { p },
+                                2 => Op::Shed { p },
+                                3 => Op::Governed { p },
+                                _ => Op::Batch {
+                                    p,
+                                    rows: 1 + r.below(16),
+                                    rep: r.below(replicas),
+                                },
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+
+            let stop = Arc::new(AtomicBool::new(false));
+            std::thread::scope(|s| {
+                let writers: Vec<_> = tapes
+                    .iter()
+                    .map(|tape| {
+                        let rec = Arc::clone(&rec);
+                        s.spawn(move || {
+                            for op in tape {
+                                match *op {
+                                    Op::Req { p, err } => {
+                                        rec.record_request(PolicyId(p), 1000, 100, err)
+                                    }
+                                    Op::Expired { p } => rec.record_expired(PolicyId(p), 500),
+                                    Op::Shed { p } => rec.record_shed(PolicyId(p)),
+                                    Op::Governed { p } => rec.record_governed(PolicyId(p)),
+                                    Op::Batch { p, rows, rep } => {
+                                        rec.record_batch(PolicyId(p), rows, 200, rep)
+                                    }
+                                }
+                            }
+                        })
+                    })
+                    .collect();
+                // reader: race snapshot/render/replica_snapshot against
+                // the writers and check coherence on every observation
+                let rec_r = Arc::clone(&rec);
+                let stop_r = Arc::clone(&stop);
+                let reader = s.spawn(move || {
+                    let mut observations = 0u32;
+                    while !stop_r.load(Ordering::SeqCst) || observations == 0 {
+                        let (snap, reps) = (rec_r.snapshot(), rec_r.replica_snapshot());
+                        for (name, s) in &snap {
+                            assert_eq!(
+                                s.requests,
+                                s.completed + s.errors + s.expired,
+                                "{name} ledger tore mid-flight"
+                            );
+                        }
+                        // NB: snapshot() then replica_snapshot() are two
+                        // lock acquisitions, so writers may land between
+                        // them — replica totals can only run *ahead* of
+                        // the policy totals observed earlier, never behind
+                        let policy_batches: u64 = snap.values().map(|s| s.batches).sum();
+                        let replica_batches: u64 = reps.iter().map(|x| x.batches).sum();
+                        assert!(
+                            replica_batches >= policy_batches,
+                            "replica batch counts ({replica_batches}) behind the \
+                             policy totals ({policy_batches}) observed earlier"
+                        );
+                        // render must never deadlock or panic mid-traffic
+                        let _ = rec_r.render();
+                        observations += 1;
+                    }
+                    observations
+                });
+                for w in writers {
+                    w.join().expect("writer");
+                }
+                stop.store(true, Ordering::SeqCst);
+                assert!(reader.join().expect("reader lives") > 0);
+            });
+
+            // final reconciliation: exactly what the tapes did
+            let mut want: Vec<PolicyStats> =
+                vec![PolicyStats::default(), PolicyStats::default(), PolicyStats::default()];
+            let mut want_reps = vec![ReplicaStats::default(); replicas];
+            for op in tapes.iter().flatten() {
+                match *op {
+                    Op::Req { p, err } => {
+                        let w = &mut want[p as usize];
+                        w.requests += 1;
+                        if err {
+                            w.errors += 1;
+                        } else {
+                            w.completed += 1;
+                        }
+                    }
+                    Op::Expired { p } => {
+                        want[p as usize].requests += 1;
+                        want[p as usize].expired += 1;
+                    }
+                    Op::Shed { p } => want[p as usize].shed += 1,
+                    Op::Governed { p } => want[p as usize].governed += 1,
+                    Op::Batch { p, rows, rep } => {
+                        want[p as usize].batches += 1;
+                        want[p as usize].batched_rows += rows as u64;
+                        want_reps[rep].batches += 1;
+                        want_reps[rep].rows += rows as u64;
+                    }
+                }
+            }
+            let snap = rec.snapshot();
+            for (i, name) in ["fp", "m3", "attn-out-fp"].iter().enumerate() {
+                let got = snap.get(*name).cloned().unwrap_or_default();
+                let w = &want[i];
+                assert_eq!(
+                    (got.requests, got.completed, got.errors, got.expired),
+                    (w.requests, w.completed, w.errors, w.expired),
+                    "{name} terminal counts"
+                );
+                assert_eq!((got.shed, got.governed), (w.shed, w.governed), "{name} ledger");
+                assert_eq!(
+                    (got.batches, got.batched_rows),
+                    (w.batches, w.batched_rows),
+                    "{name} batches"
+                );
+            }
+            let reps = rec.replica_snapshot();
+            for (i, w) in want_reps.iter().enumerate() {
+                assert_eq!((reps[i].batches, reps[i].rows), (w.batches, w.rows), "replica {i}");
+            }
+        });
     }
 
     #[test]

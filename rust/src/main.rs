@@ -96,6 +96,9 @@ fn cli() -> Cli {
                     OptSpec { name: "max-batch", takes_value: true, default: Some("16"), help: "batcher max batch" },
                     OptSpec { name: "max-wait-ms", takes_value: true, default: Some("4"), help: "batcher max wait" },
                     OptSpec { name: "replicas", takes_value: true, default: Some("1"), help: "engine replicas behind the load-aware dispatcher" },
+                    OptSpec { name: "queue-cap", takes_value: true, default: Some("1024"), help: "admission queue bound (submit sheds with busy beyond it)" },
+                    OptSpec { name: "default-deadline-ms", takes_value: true, default: Some("0"), help: "deadline for requests that carry none (0 = never expire)" },
+                    OptSpec { name: "governor", takes_value: false, default: None, help: "enable the load-adaptive precision governor" },
                 ],
             },
             SubSpec {
@@ -111,6 +114,10 @@ fn cli() -> Cli {
                     OptSpec { name: "max-batch", takes_value: true, default: Some("16"), help: "batcher max batch" },
                     OptSpec { name: "max-wait-ms", takes_value: true, default: Some("4"), help: "batcher max wait" },
                     OptSpec { name: "replicas", takes_value: true, default: Some("1"), help: "engine replicas behind the load-aware dispatcher" },
+                    OptSpec { name: "queue-cap", takes_value: true, default: Some("256"), help: "admission queue bound (submit sheds with busy beyond it)" },
+                    OptSpec { name: "default-deadline-ms", takes_value: true, default: Some("0"), help: "deadline for requests that carry none (0 = never expire)" },
+                    OptSpec { name: "governor", takes_value: false, default: None, help: "enable the load-adaptive precision governor" },
+                    OptSpec { name: "overload", takes_value: true, default: Some("0"), help: "open-loop overload burst at X times measured capacity (0 = closed loop)" },
                 ],
             },
         ],
@@ -362,31 +369,56 @@ fn route_names(man: &Manifest, args: &zqhero::cli::Args, default_modes: &str) ->
 }
 
 /// Quantize any missing checkpoint for the executable modes behind the
-/// given route names (offline PTQ prep).
+/// given route names (offline PTQ prep).  With the governor enabled the
+/// degradation-chain targets of every route are prepped too — the
+/// coordinator preloads them at start and must find them on disk.
 fn ensure_route_checkpoints(
     dir: &std::path::Path,
     tasks: &[String],
     routes: &[String],
+    governor: bool,
 ) -> Result<()> {
     let man = Manifest::load(dir)?;
     let mut rt = Runtime::new(man)?;
+    let mut modes: Vec<String> = Vec::new();
+    for r in routes {
+        let spec = rt.manifest.policy(r)?;
+        modes.push(rt.manifest.mode_name(spec.exec_mode).to_string());
+        if governor {
+            let pid = rt.manifest.policy_id(r)?;
+            for step in rt.manifest.downgrade_chain(pid) {
+                let exec = rt.manifest.policy_by_id(step).exec_mode;
+                modes.push(rt.manifest.mode_name(exec).to_string());
+            }
+        }
+    }
+    modes.sort();
+    modes.dedup();
     for t in tasks {
         let task = rt.manifest.task(t)?.clone();
-        for r in routes {
-            let exec = rt.manifest.policy(r)?.exec_mode;
-            let m = rt.manifest.mode_name(exec).to_string();
+        for m in &modes {
             if m == "fp" {
                 continue;
             }
-            let rel = task.checkpoint_rel(&m);
+            let rel = task.checkpoint_rel(m);
             if !rt.manifest.path(&rel).exists() {
                 eprintln!("[prep] quantizing {t}/{m}...");
                 let hist = eh::ensure_calibration(&mut rt, &task, 100, false)?;
-                eh::quantize_task(&mut rt, &task, &m, &hist, 100.0, None)?;
+                eh::quantize_task(&mut rt, &task, m, &hist, 100.0, None)?;
             }
         }
     }
     Ok(())
+}
+
+/// Shared overload-control knobs of `serve` / `serve-bench`.
+fn overload_config(args: &zqhero::cli::Args) -> Result<(usize, Option<Duration>, bool)> {
+    let queue_cap = args.get_usize("queue-cap")?.unwrap_or(1024).max(1);
+    let default_deadline = match args.get_usize("default-deadline-ms")?.unwrap_or(0) {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    Ok((queue_cap, default_deadline, args.get_bool("governor")))
 }
 
 fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
@@ -397,14 +429,18 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
         args.get_or("tasks", "sst2").split(',').map(str::to_string).collect();
     let routes = route_names(&Manifest::load(&dir)?, args, "fp,m3")?;
     let replicas = args.get_usize("replicas")?.unwrap_or(1).max(1);
+    let (queue_cap, default_deadline, governor) = overload_config(args)?;
     let config = ServerConfig {
         max_batch: args.get_usize("max-batch")?.unwrap_or(16),
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
         replicas,
+        queue_cap,
+        default_deadline,
+        governor: governor.then(|| zqhero::coordinator::GovernorConfig::for_queue(queue_cap)),
         ..ServerConfig::default()
     };
 
-    ensure_route_checkpoints(&dir, &tasks, &routes)?;
+    ensure_route_checkpoints(&dir, &tasks, &routes, governor)?;
     let pairs: Vec<(String, String)> = tasks
         .iter()
         .flat_map(|t| routes.iter().map(move |m| (t.clone(), m.clone())))
@@ -412,8 +448,9 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     let coord = std::sync::Arc::new(Coordinator::start(dir, &pairs, config)?);
     let server = zqhero::coordinator::NetServer::start(std::sync::Arc::clone(&coord), &host, port)?;
     println!(
-        "serving on {} — newline-delimited JSON (v1 mode / v2 policy frames), {replicas} engine replica(s)",
-        server.addr
+        "serving on {} — newline-delimited JSON (v1 mode / v2 policy frames), {replicas} engine replica(s){}",
+        server.addr,
+        if governor { ", governor on" } else { "" }
     );
     println!("request: {{\"task\":\"sst2\",\"mode\":\"m3\",\"ids\":[1,1510,2]}}");
     println!("     or: {{\"v\":2,\"task\":\"sst2\",\"policy\":{{\"base\":\"m3\",\"overrides\":[[\"attn_output\",\"fp\"]],\"fallback\":[\"m1\",\"fp\"]}},\"ids\":[1,1510,2]}}");
@@ -435,14 +472,19 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
     let requests = args.get_usize("requests")?.unwrap_or(256);
     let concurrency = args.get_usize("concurrency")?.unwrap_or(32);
     let replicas = args.get_usize("replicas")?.unwrap_or(1).max(1);
+    let (queue_cap, default_deadline, governor) = overload_config(args)?;
+    let overload = args.get_f64("overload")?.unwrap_or(0.0);
     let config = ServerConfig {
         max_batch: args.get_usize("max-batch")?.unwrap_or(16),
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
         replicas,
+        queue_cap,
+        default_deadline,
+        governor: governor.then(|| zqhero::coordinator::GovernorConfig::for_queue(queue_cap)),
         ..ServerConfig::default()
     };
 
-    ensure_route_checkpoints(&dir, &tasks, &routes)?;
+    ensure_route_checkpoints(&dir, &tasks, &routes, governor)?;
 
     let pairs: Vec<(String, String)> = tasks
         .iter()
@@ -464,6 +506,13 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
             })
             .collect();
         payloads.push(rows);
+    }
+
+    if overload > 0.0 {
+        return serve_bench_overload(
+            &coord, &man, &tasks, &routes, &payloads, requests, overload, default_deadline,
+            governor,
+        );
     }
 
     println!(
@@ -571,3 +620,142 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
     }
     Ok(())
 }
+
+/// Open-loop overload smoke (`serve-bench --overload X [--governor]`):
+/// measure capacity with a short closed loop, then fire arrivals at X
+/// times that rate regardless of completions, with per-request
+/// deadlines, and report the shed/expired/completed ledger (it must
+/// reconcile exactly: admitted = completed + shed + expired).  The full
+/// governor-on/off sweep lives in `benches/e2e_serving.rs`
+/// (BENCH_overload.json); this is the CLI/CI surface.
+#[allow(clippy::too_many_arguments)]
+fn serve_bench_overload(
+    coord: &Coordinator,
+    man: &Manifest,
+    tasks: &[String],
+    routes: &[String],
+    payloads: &[Vec<(Vec<i32>, Vec<i32>)>],
+    requests: usize,
+    overload: f64,
+    default_deadline: Option<Duration>,
+    governor: bool,
+) -> Result<()> {
+    // prefer a governable route (non-empty degradation chain) so the
+    // governor has something to do; else the first route
+    let task = tasks.first().context("no tasks")?.clone();
+    let rows = &payloads[0];
+    let route = routes
+        .iter()
+        .find(|r| {
+            governor
+                && man
+                    .policy_id(r.as_str())
+                    .map(|p| !man.downgrade_chain(p).is_empty())
+                    .unwrap_or(false)
+        })
+        .unwrap_or_else(|| &routes[0])
+        .clone();
+    let deadline = default_deadline.unwrap_or(Duration::from_millis(250));
+
+    println!("measuring capacity on ({task},{route}) with a short closed loop...");
+    let capacity_rps = closed_loop_capacity(coord, &task, &route, rows, requests.max(64) / 2)?;
+    let rate = capacity_rps * overload;
+    println!(
+        "capacity ~{capacity_rps:.1} req/s; open-loop burst: {requests} arrivals at \
+         {rate:.1} req/s ({overload}x), deadline {}ms, governor {}",
+        deadline.as_millis(),
+        if governor { "on" } else { "off" },
+    );
+    let r = zqhero::bench::open_loop_burst(coord, &task, &route, rows, requests, rate, deadline)?;
+    anyhow::ensure!(
+        r.reconciles(),
+        "overload ledger must reconcile: {} != {} + {} + {}",
+        r.admitted,
+        r.completed,
+        r.shed,
+        r.expired
+    );
+    println!(
+        "\nadmitted {} = completed {} + shed {} + expired {}  (p50 {:.1}ms, p99 {:.1}ms, \
+         goodput {:.1} req/s)",
+        r.admitted,
+        r.completed,
+        r.shed,
+        r.expired,
+        r.p50_ms,
+        r.p99_ms,
+        r.goodput_rps(),
+    );
+    print!("{}", coord.recorder.render());
+
+    use zqhero::json;
+    let report = json::obj(vec![
+        ("bench", json::s("overload_smoke")),
+        ("task", json::s(&task)),
+        ("route", json::s(&route)),
+        ("governor", zqhero::json::Value::Bool(governor)),
+        ("overload_x", json::num(overload)),
+        ("capacity_rps", json::num(capacity_rps)),
+        ("deadline_ms", json::num(deadline.as_millis() as f64)),
+        ("admitted", json::num(r.admitted as f64)),
+        ("completed", json::num(r.completed as f64)),
+        ("shed", json::num(r.shed as f64)),
+        ("expired", json::num(r.expired as f64)),
+        ("p50_ms", json::num(r.p50_ms)),
+        ("p99_ms", json::num(r.p99_ms)),
+        ("goodput_rps", json::num(r.goodput_rps())),
+    ]);
+    match std::fs::write("BENCH_overload_smoke.json", json::to_string_pretty(&report)) {
+        Ok(()) => println!("\nwrote BENCH_overload_smoke.json"),
+        Err(e) => eprintln!("could not write BENCH_overload_smoke.json: {e}"),
+    }
+    Ok(())
+}
+
+/// Short single-threaded closed loop; returns completed-request
+/// throughput (the capacity estimate the overload burst multiplies).
+fn closed_loop_capacity(
+    coord: &Coordinator,
+    task: &str,
+    route: &str,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    requests: usize,
+) -> Result<f64> {
+    let t0 = Instant::now();
+    let mut inflight = std::collections::VecDeque::new();
+    let (mut submitted, mut done) = (0usize, 0usize);
+    while done < requests {
+        while submitted < requests && inflight.len() < 16 {
+            let (ids, tys) = rows[submitted % rows.len()].clone();
+            // explicit long deadline: calibration must not expire under
+            // a tight --default-deadline-ms meant for the burst
+            let spec = zqhero::coordinator::RequestSpec::task(task)
+                .policy(route)
+                .ids(ids)
+                .type_ids(tys)
+                .deadline(Duration::from_secs(600));
+            match coord.submit(spec) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    submitted += 1;
+                }
+                Err(e) if e.is_busy() => break,
+                Err(e) => anyhow::bail!("calibration submit failed: {e}"),
+            }
+        }
+        match inflight.pop_front() {
+            Some(rx) => {
+                let resp = rx.recv().context("calibration response channel closed")?;
+                anyhow::ensure!(
+                    resp.error.is_none(),
+                    "calibration request failed: {:?}",
+                    resp.error
+                );
+                done += 1;
+            }
+            None => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    Ok(requests as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+}
+

@@ -139,6 +139,12 @@ impl Switches {
         let b = other.row();
         a.iter().zip(b.iter()).all(|(x, y)| !*x || *y)
     }
+
+    /// Number of INT8 module groups — the cost order the overload
+    /// governor walks (more INT8 = cheaper to execute, DESIGN.md §5.8).
+    pub fn int8_count(&self) -> usize {
+        self.row().iter().filter(|b| **b).count()
+    }
 }
 
 /// The paper's per-module quantization groups (Table 1 columns) — the
@@ -691,6 +697,34 @@ impl Manifest {
             }
         }
         Ok(PolicyId(spec.exec_mode.0))
+    }
+
+    /// The overload-degradation chain of a policy (DESIGN.md §5.8): the
+    /// uniform policies of every mode in `fallback ∪ {base}` that is
+    /// *strictly cheaper* than the policy's executable mode (its INT8 set
+    /// strictly contains the exec mode's — the mirror image of §6.1's
+    /// escalation rule, which only raises precision), ordered
+    /// closest-first (ascending INT8 count) so "one step down" sacrifices
+    /// the least accuracy for speed.  Uniform policies have no fallback
+    /// chain and therefore an empty degradation chain — the governor
+    /// never invents precision trades the policy author did not declare.
+    pub fn downgrade_chain(&self, id: PolicyId) -> Vec<PolicyId> {
+        let spec = self.policy_by_id(id);
+        let exec_sw = self.mode_by_id(spec.exec_mode).switches;
+        let mut modes: Vec<ModeId> = spec
+            .fallback
+            .iter()
+            .copied()
+            .chain(std::iter::once(spec.base))
+            .filter(|m| {
+                let sw = self.mode_by_id(*m).switches;
+                sw != exec_sw && exec_sw.subset_of(&sw)
+            })
+            .collect();
+        modes.sort_by_key(|m| self.mode_by_id(*m).switches.int8_count());
+        modes.dedup();
+        // uniform per-mode policies share the mode's dense index (§6.3)
+        modes.into_iter().map(|m| PolicyId(m.0)).collect()
     }
 
     pub fn mode(&self, name: &str) -> Result<&ModeSpec> {

@@ -45,6 +45,27 @@ use super::{PendingOutputs, Runtime};
 /// it is where de-batching and reply dispatch happen.
 pub type Completion = Box<dyn FnOnce(Result<InferDone>) + Send + 'static>;
 
+/// Cancel-before-submit hook (DESIGN.md §5.8): the engine thread calls
+/// this once per job, after de-queueing it and *before* any device work
+/// (upload/launch).  `true` abandons the batch — its completion runs
+/// with a [`CancelledBeforeSubmit`] error and the staging buffer is
+/// recycled untouched.  This is the only cancellation point past batch
+/// formation; once upload starts a batch always executes to completion.
+pub type CancelCheck = Box<dyn Fn() -> bool + Send + 'static>;
+
+/// Sentinel error a cancelled job's completion receives; completions
+/// `downcast_ref` it to tell deadline expiry from real engine failures.
+#[derive(Debug, Clone, Copy)]
+pub struct CancelledBeforeSubmit;
+
+impl std::fmt::Display for CancelledBeforeSubmit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("batch cancelled before engine submit (every request past its deadline)")
+    }
+}
+
+impl std::error::Error for CancelledBeforeSubmit {}
+
 pub struct InferJob {
     pub task: TaskId,
     /// Interned precision policy; the engine maps it to its executable
@@ -53,6 +74,9 @@ pub struct InferJob {
     /// Pooled host buffers: `bucket * seq` ids/type_ids/mask.  Recycled to
     /// the staging pool by the engine right after the device upload.
     pub staging: StagingBuf,
+    /// Checked once before upload; `None` = never cancel (the common
+    /// case: only all-deadline batches carry a check).
+    pub cancel: Option<CancelCheck>,
     pub done: Completion,
 }
 
@@ -145,11 +169,16 @@ pub struct EngineOptions {
     /// Engine replicas behind the pool dispatcher (min 1).  Each replica
     /// owns its own PJRT runtime, checkpoints, and executables.
     pub replicas: usize,
+    /// Test-only service-rate throttle: sleep this long per de-queued
+    /// job, before the cancel check and any device work.  The overload
+    /// integration suite uses it to build deterministic queue pressure
+    /// (`ServerConfig::throttle_batch`); never set in production.
+    pub throttle: Option<std::time::Duration>,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
-        EngineOptions { overlap: true, replicas: 1 }
+        EngineOptions { overlap: true, replicas: 1, throttle: None }
     }
 }
 
@@ -257,6 +286,7 @@ impl Engine {
             task: self.task_id(task)?,
             policy: self.policy_id(route)?,
             staging,
+            cancel: None,
             done: Box::new(move |res| {
                 let _ = reply.send(res);
             }),
@@ -462,11 +492,12 @@ impl EnginePool {
         for _ in 0..self.replicas.len() {
             let replica = self.state.assign(key);
             let state = Arc::clone(&self.state);
-            let InferJob { task, policy, staging, done } = job;
+            let InferJob { task, policy, staging, cancel, done } = job;
             let wrapped = InferJob {
                 task,
                 policy,
                 staging,
+                cancel,
                 done: Box::new(move |res| {
                     // decrement before the inner completion so a panicking
                     // callback (isolated by the worker pool) cannot leak a
@@ -633,7 +664,20 @@ fn engine_main(
             Some(Msg::Stop) | None => break,
         };
 
-        let InferJob { task, policy, staging: host, done } = job;
+        let InferJob { task, policy, staging: host, cancel, done } = job;
+        // test-only service-rate throttle (deterministic overload tests)
+        if let Some(d) = options.throttle {
+            std::thread::sleep(d);
+        }
+        // Cancel-before-submit hook: the one cancellation point past
+        // batch formation, strictly before any device work.  Cancelled
+        // jobs consume no exec_seq — the per-replica serial witnesses
+        // *executed* batches only.
+        if matches!(&cancel, Some(c) if c()) {
+            staging.put(host);
+            pool.spawn(move || done(Err(anyhow::Error::new(CancelledBeforeSubmit))));
+            continue;
+        }
         let exec_seq = next_exec_seq;
         next_exec_seq += 1;
         // Executable selection: policy -> mode through the mirrored table.

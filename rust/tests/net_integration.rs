@@ -194,6 +194,126 @@ fn slow_writer_frame_split_across_read_timeout() {
     );
 }
 
+/// Satellite for DESIGN.md §5.8: the read timeout is a `ServerConfig`
+/// knob, not a constant — and a client slower than the configured
+/// timeout but within its request deadline still completes (the partial
+/// frame survives every timeout window).
+#[test]
+fn slow_client_within_deadline_completes_with_configured_timeout() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Arc::new(
+        Coordinator::start(
+            dir.clone(),
+            &pairs,
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                // much shorter than the default 200 ms — the writer below
+                // straddles it several times over
+                net_read_timeout: Duration::from_millis(40),
+                default_deadline: Some(Duration::from_secs(10)),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1", 0).unwrap();
+
+    let man = Manifest::load(&dir).unwrap();
+    let split = Split::load(&man, man.task("cola").unwrap(), "dev").unwrap();
+    let (ids, _) = split.row(0);
+    let ids_json: Vec<String> = ids.iter().take(8).map(|x| x.to_string()).collect();
+    let frame = format!(
+        "{{\"v\":2,\"task\":\"cola\",\"policy\":\"fp\",\"deadline_ms\":10000,\"ids\":[{}]}}\n",
+        ids_json.join(",")
+    );
+
+    use std::io::{BufRead, BufReader, Write};
+    let mut raw = std::net::TcpStream::connect(server.addr).unwrap();
+    let (head, tail) = frame.split_at(frame.len() / 2);
+    raw.write_all(head.as_bytes()).unwrap();
+    raw.flush().unwrap();
+    // ~4 configured timeout windows pass mid-frame; the deadline clock
+    // only starts at admission, so the request still completes
+    std::thread::sleep(Duration::from_millis(170));
+    raw.write_all(tail.as_bytes()).unwrap();
+    raw.flush().unwrap();
+
+    let mut line = String::new();
+    BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let v = zqhero::json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{v:?}");
+    assert!(v.get("expired").is_none(), "{v:?}");
+}
+
+/// Backpressure on the wire: with the backlog bound at 1 and a slow
+/// engine, a second connection's request answers `busy` (a retryable
+/// signal distinct from a terminal error), and a retry after the first
+/// request drains succeeds.
+#[test]
+fn queue_full_maps_to_busy_response() {
+    let Some(dir) = artifacts() else { return };
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Arc::new(
+        Coordinator::start(
+            dir.clone(),
+            &pairs,
+            ServerConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 1,
+                throttle_batch: Some(Duration::from_millis(250)),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1", 0).unwrap();
+
+    let man = Manifest::load(&dir).unwrap();
+    let split = Split::load(&man, man.task("cola").unwrap(), "dev").unwrap();
+    let (ids, _) = split.row(0);
+    let payload: Vec<i32> = ids.iter().copied().take(8).collect();
+
+    // connection A occupies the single backlog slot for ~250 ms
+    let addr = server.addr;
+    let a_payload = payload.clone();
+    let a = std::thread::spawn(move || {
+        let mut client = NetClient::connect(&addr).unwrap();
+        client.request("cola", "fp", &a_payload).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(60));
+
+    // connection B: shed with a busy response while A is in flight
+    let mut client = NetClient::connect(&server.addr).unwrap();
+    let resp = client
+        .request_spec(&RequestSpec::task("cola").policy("fp").ids(payload.clone()))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp:?}");
+    assert_eq!(resp.get("busy").unwrap().as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("v").unwrap().as_usize(), Some(2), "{resp:?}");
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("busy"));
+
+    let a_resp = a.join().expect("connection A");
+    assert_eq!(a_resp.get("ok").unwrap().as_bool(), Some(true), "{a_resp:?}");
+
+    // after A drains, a retry on the same connection succeeds
+    let mut ok = false;
+    for _ in 0..200 {
+        let resp = client
+            .request_spec(&RequestSpec::task("cola").policy("fp").ids(payload.clone()))
+            .unwrap();
+        if resp.get("ok").unwrap().as_bool() == Some(true) {
+            ok = true;
+            break;
+        }
+        assert_eq!(resp.get("busy").and_then(|b| b.as_bool()), Some(true), "{resp:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(ok, "retry after drain never succeeded");
+}
+
 #[test]
 fn oversized_request_rejected() {
     let Some(dir) = artifacts() else { return };

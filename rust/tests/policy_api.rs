@@ -188,6 +188,54 @@ fn inline_interning_is_canonical() {
         .is_err());
 }
 
+/// Degradation-chain introspection (DESIGN.md §5.8): the governor's
+/// walk is derived from each policy's declared fallback ∪ base, keeps
+/// only modes strictly cheaper (more INT8) than the executable mode,
+/// and orders them closest-first.
+#[test]
+fn downgrade_chain_walks_declared_modes_cheapest_last() {
+    let man = load(
+        r#"{"attn-out-fp": {"base": "m3", "overrides": [["attn_output", "fp"]],
+                            "fallback": ["m2", "m1", "fp"]}}"#,
+    )
+    .unwrap();
+    // exec mode is m1 (110010); of fallback ∪ base, m2 (111110) and the
+    // base m3 (111111) strictly contain m1's INT8 set — fp does not, m1
+    // is the exec itself.  Ascending INT8 count: m2 (5) then m3 (6).
+    let pid = man.policy_id("attn-out-fp").unwrap();
+    let chain = man.downgrade_chain(pid);
+    assert_eq!(
+        chain,
+        vec![man.policy_id("m2").unwrap(), man.policy_id("m3").unwrap()],
+        "chain must step to the closest cheaper mode first"
+    );
+    // chain entries are uniform policies sharing the mode's dense index
+    for step in &chain {
+        assert!(man.policy_by_id(*step).is_uniform());
+    }
+
+    // uniform policies declare no fallback -> ungovernable (the governor
+    // never invents a precision trade the author did not write down)
+    for mode in ["fp", "m1", "m2", "m3"] {
+        assert!(
+            man.downgrade_chain(man.policy_id(mode).unwrap()).is_empty(),
+            "uniform {mode} must have an empty chain"
+        );
+    }
+
+    // a policy that lands exactly on an artifact (exec == effective) can
+    // still degrade along declared fallbacks that quantize further
+    let man = load(
+        r#"{"fc2-fp": {"base": "m3", "overrides": [["fc2", "fp"]],
+                       "fallback": ["m1", "fp"]}}"#,
+    )
+    .unwrap();
+    let pid = man.policy_id("fc2-fp").unwrap();
+    // exec is m2 exactly; of fallback ∪ base {m1, fp, m3}, only m3
+    // strictly contains m2's INT8 set (m1 and fp only raise precision)
+    assert_eq!(man.downgrade_chain(pid), vec![man.policy_id("m3").unwrap()]);
+}
+
 #[test]
 fn checkpoint_validation_reports_policy_context() {
     use zqhero::model::{Container, Tensor};

@@ -42,6 +42,18 @@ cargo test -q
 if [ -f artifacts/manifest.json ]; then
     echo "==> 2-replica serve-bench smoke"
     cargo run --release -- serve-bench --replicas 2 --requests 48 --concurrency 8
+
+    # overload control (DESIGN.md §5.8): re-run the serving-pressure
+    # suite explicitly, then smoke the governor through the CLI with a
+    # 2x open-loop burst (bounded admission + deadlines + governed
+    # downgrade; emits BENCH_overload_smoke.json, whose ledger the
+    # binary asserts reconciles exactly)
+    echo "==> overload suite"
+    cargo test -q --test overload_integration
+    echo "==> governor serve-bench smoke (2x open-loop burst)"
+    cargo run --release -- serve-bench --governor --overload 2 \
+        --queue-cap 64 --default-deadline-ms 250 \
+        --modes m3 --policies attn-out-fp --requests 128
 fi
 
 if [ "$SKIP_CLIPPY" -eq 0 ]; then
