@@ -22,17 +22,22 @@
 //! must reconcile exactly: admitted = completed + shed + expired) and
 //! goodput/p99 per cell to `BENCH_overload.json`.
 //!
+//! A fifth sweep is the length-aware experiment (DESIGN.md §5.9): the
+//! same mixed-length workload driven once padded to the model max
+//! client-side (the single-seq baseline — what every request paid before
+//! the seq-bucket grid) and once at real lengths (bucketed), writing
+//! padded-token volume, padding efficiency, and p50/p99 per cell to
+//! `BENCH_seq_buckets.json` — and asserting the >=2x padded-token
+//! reduction the grid exists to deliver.
+//!
 //! Env: ZQH_REQUESTS (default 128), ZQH_TASK (default sst2),
 //! ZQH_REPLICAS (default 2 — top of the replica sweep),
 //! ZQH_OVERLOAD_ARRIVALS (default 256 — open-loop burst size).
 
-use std::collections::VecDeque;
 use std::time::Duration;
 
 use zqhero::bench::Table;
-use zqhero::coordinator::{
-    Coordinator, GovernorConfig, PolicyRef, RequestSpec, ServerConfig,
-};
+use zqhero::coordinator::{Coordinator, GovernorConfig, PolicyRef, ServerConfig};
 use zqhero::data::Split;
 use zqhero::evalharness as eh;
 use zqhero::json::{self, Value};
@@ -57,47 +62,10 @@ fn run_load(
     concurrency: usize,
 ) -> LoadResult {
     let t0 = std::time::Instant::now();
-    let mut inflight = VecDeque::new();
-    let (mut submitted, mut done) = (0usize, 0usize);
-    let mut last_progress = std::time::Instant::now();
-    let mut lat = Vec::with_capacity(requests);
-    while done < requests {
-        while submitted < requests && inflight.len() < concurrency {
-            let (ids, tys) = rows[submitted % rows.len()].clone();
-            let spec = RequestSpec::task(task)
-                .policy_ref(policy.clone())
-                .ids(ids)
-                .type_ids(tys);
-            match coord.submit(spec) {
-                Ok(rx) => {
-                    inflight.push_back(rx);
-                    submitted += 1;
-                    last_progress = std::time::Instant::now();
-                }
-                Err(_) => break,
-            }
-        }
-        let rx = match inflight.pop_front() {
-            Some(rx) => rx,
-            None => {
-                // backpressured with nothing of ours in flight (another
-                // concurrent route owns the queue): wait — but a stopped
-                // coordinator also presents as submit errors, so don't
-                // wait forever
-                assert!(
-                    last_progress.elapsed() < std::time::Duration::from_secs(30),
-                    "no progress for 30s ({done}/{requests}) — coordinator stalled or stopped"
-                );
-                std::thread::sleep(std::time::Duration::from_micros(200));
-                continue;
-            }
-        };
-        let resp = rx.recv().expect("resp");
-        last_progress = std::time::Instant::now();
-        assert!(resp.error.is_none(), "{:?}", resp.error);
-        lat.push(resp.timing.total_us as f64);
-        done += 1;
-    }
+    // the shared closed-loop driver (also behind `serve-bench`), so the
+    // bench trajectory and the CLI smoke measure identical behavior
+    let mut lat = zqhero::bench::closed_loop(coord, task, policy, rows, requests, concurrency)
+        .expect("closed loop");
     let wall = t0.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pick = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize] / 1e3;
@@ -416,7 +384,127 @@ fn main() {
     }
 
     overload_sweep(&dir, &man, &tname, &rows, requests);
+    // last: this sweep asserts the >=2x padded-token reduction, so a
+    // padding regression must not suppress the other trajectory files
+    seq_bucket_sweep(&dir, &man, &tname, &rows, requests);
     println!("(CPU PJRT testbed; A100 projections in hw_perf_model)");
+}
+
+/// Mixed-length workload sweep (DESIGN.md §5.9) -> BENCH_seq_buckets.json.
+///
+/// The workload is the dev rows at their *real* lengths (PAD tail
+/// trimmed), with every 4th row kept at the model max so the top bucket
+/// stays exercised.  The single-seq baseline drives the identical
+/// logical workload padded to the model max client-side — exactly what
+/// every request paid before the seq-bucket grid.  Cells run on fresh
+/// coordinators so the recorders' padding ledgers are comparable.
+/// Asserts the headline claim: bucketed batching cuts total padded-token
+/// volume by at least 2x on this workload.
+fn seq_bucket_sweep(
+    dir: &std::path::Path,
+    man: &Manifest,
+    tname: &str,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    requests: usize,
+) {
+    if man.num_seq_buckets() == 1 {
+        println!(
+            "\nseq-bucket sweep skipped: single-seq manifest (format_version 2 — regenerate \
+             artifacts for the (seq, batch) grid)"
+        );
+        return;
+    }
+    let mixed = zqhero::data::mixed_length_workload(rows);
+
+    let mode = "m3";
+    let pairs = vec![(tname.to_string(), mode.to_string())];
+    println!(
+        "\nseq-bucket sweep on ({tname},{mode}): {requests} requests per cell, \
+         seq buckets {:?}\n",
+        man.seq_buckets
+    );
+    let mut t = Table::new(&[
+        "cell", "thr req/s", "p50 ms", "p99 ms", "padded tokens", "real tokens", "pad eff",
+    ]);
+    let mut cells: Vec<(String, Value)> = Vec::new();
+    let mut volume: Vec<(&str, u64)> = Vec::new();
+    for (label, payload) in [("single_seq", rows), ("bucketed", &mixed[..])] {
+        let coord = Coordinator::start(
+            dir.to_path_buf(),
+            &pairs,
+            ServerConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(4),
+                queue_cap: 512,
+                completion_workers: 4,
+                ..ServerConfig::default()
+            },
+        )
+        .expect("seq-bucket coordinator");
+        let policy = PolicyRef::Named(mode.to_string());
+        let r = run_load(&coord, tname, &policy, mode, payload, requests, CONCURRENCY);
+        // one route per cell, so the snapshot totals are this policy's —
+        // summed through the same helper the serve-bench smoke uses, so
+        // the two BENCH files' token semantics cannot drift
+        let (real, padded) = zqhero::bench::padding_totals(&coord.recorder.snapshot());
+        let efficiency = real as f64 / padded.max(1) as f64;
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", r.thr_rps),
+            format!("{:.1}", r.p50_ms),
+            format!("{:.1}", r.p99_ms),
+            padded.to_string(),
+            real.to_string(),
+            format!("{:.0}%", 100.0 * efficiency),
+        ]);
+        cells.push((
+            label.to_string(),
+            json::obj(vec![
+                ("thr_rps", json::num(r.thr_rps)),
+                ("p50_ms", json::num(r.p50_ms)),
+                ("p99_ms", json::num(r.p99_ms)),
+                ("padded_tokens", json::num(padded as f64)),
+                ("real_tokens", json::num(real as f64)),
+                ("pad_efficiency", json::num(efficiency)),
+            ]),
+        ));
+        volume.push((label, padded));
+    }
+    t.print();
+
+    let base = volume.iter().find(|(l, _)| *l == "single_seq").map(|(_, v)| *v).unwrap_or(0);
+    let bucketed = volume.iter().find(|(l, _)| *l == "bucketed").map(|(_, v)| *v).unwrap_or(0);
+    let reduction = base as f64 / bucketed.max(1) as f64;
+    let report = json::obj(vec![
+        ("bench", json::s("seq_buckets")),
+        ("task", json::s(tname)),
+        ("mode", json::s(mode)),
+        ("requests_per_cell", json::num(requests as f64)),
+        ("concurrency", json::num(CONCURRENCY as f64)),
+        (
+            "seq_buckets",
+            Value::Array(man.seq_buckets.iter().map(|s| json::num(*s as f64)).collect()),
+        ),
+        ("cells", Value::Object(cells)),
+        ("padded_token_reduction", json::num(reduction)),
+        ("meets_2x", Value::Bool(reduction >= 2.0)),
+    ]);
+    // write the trajectory point *before* gating on it: a regressed run
+    // must still leave its per-cell diagnostics on disk
+    match std::fs::write("BENCH_seq_buckets.json", json::to_string_pretty(&report)) {
+        Ok(()) => {
+            println!("\nwrote BENCH_seq_buckets.json (padded-token reduction {reduction:.2}x)")
+        }
+        Err(e) => eprintln!("could not write BENCH_seq_buckets.json: {e}"),
+    }
+    // the acceptance bar: mixed-length traffic must stop paying the
+    // model-max memory tax — anything under 2x means the grid is not
+    // actually routing short requests to short executables
+    assert!(
+        reduction >= 2.0,
+        "bucketed batching must cut padded-token volume >=2x vs the single-seq baseline \
+         (got {reduction:.2}x: {base} -> {bucketed}; see BENCH_seq_buckets.json)"
+    );
 }
 
 /// Run one open-loop cell through the shared driver

@@ -36,6 +36,12 @@ from . import train as T  # noqa: E402
 
 BUCKETS = (1, 4, 8, 16)
 SEQ = 128
+# Sequence-length buckets (format_version 3): model executables are
+# lowered per (seq_bucket, batch_bucket) cell so short requests ride a
+# short executable instead of paying full-SEQ memory traffic on every
+# bandwidth-bound op.  Strictly ascending; the last entry must equal SEQ
+# (the rust loader enforces both).
+SEQ_BUCKETS = (16, 32, 64, 128)
 CALIB_BATCH = 16
 
 EPOCHS = {"cola": 10, "mrpc": 8, "stsb": 10, "rte": 14,
@@ -64,11 +70,11 @@ def lower_to_file(fn, arg_structs, path):
     print(f"  lowered {path} ({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)")
 
 
-def input_structs(batch):
+def input_structs(batch, seq=SEQ):
     return [
-        jax.ShapeDtypeStruct((batch, SEQ), jnp.int32),    # input_ids
-        jax.ShapeDtypeStruct((batch, SEQ), jnp.int32),    # type_ids
-        jax.ShapeDtypeStruct((batch, SEQ), jnp.float32),  # attn_mask
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),    # input_ids
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32),    # type_ids
+        jax.ShapeDtypeStruct((batch, seq), jnp.float32),  # attn_mask
     ]
 
 
@@ -149,11 +155,12 @@ def lower_models(out, cfg, force):
     for mode in MODES:
         fn, specs = make_model_fn(cfg, mode)
         structs = specs_to_struct(specs)
-        for b in BUCKETS:
-            path = os.path.join(out, "models", mode, f"b{b}.hlo.txt")
-            if os.path.exists(path) and not force:
-                continue
-            lower_to_file(fn, structs + input_structs(b), path)
+        for s in SEQ_BUCKETS:
+            for b in BUCKETS:
+                path = os.path.join(out, "models", mode, f"s{s}_b{b}.hlo.txt")
+                if os.path.exists(path) and not force:
+                    continue
+                lower_to_file(fn, structs + input_structs(b, s), path)
 
 
 def lower_calibration(out, cfg, force):
@@ -275,7 +282,8 @@ def write_manifest(out, cfg, micro, train_metrics):
             "switches": {k: getattr(sw, k) for k in
                          ("embedding", "qkv", "attn", "attn_output", "fc1", "fc2")},
             "params": [[n, list(s), d] for n, s, d in specs],
-            "artifacts": {f"b{b}": f"models/{mode}/b{b}.hlo.txt" for b in BUCKETS},
+            "artifacts": {f"s{s}b{b}": f"models/{mode}/s{s}_b{b}.hlo.txt"
+                          for s in SEQ_BUCKETS for b in BUCKETS},
         }
     tasks = {}
     for task in D.TASKS:
@@ -285,10 +293,13 @@ def write_manifest(out, cfg, micro, train_metrics):
         tasks[task]["train_dev_metrics"] = train_metrics.get(task)
     from .config import POLICIES
     manifest = {
-        # 2: adds the `policies` section (named precision policies); the
-        # rust loader treats the section as optional, so v1 readers of
-        # this file keep working.
-        "format_version": 2,
+        # 2: adds the `policies` section (named precision policies).
+        # 3: adds `seq_buckets` and keys model artifacts by
+        #    (seq bucket, batch bucket) as "s{S}b{B}".  Both keys are
+        #    optional to the rust loader — a v2 manifest (no seq_buckets,
+        #    bare "bN" artifact keys) collapses to the single-bucket axis
+        #    [seq] and serves identically.
+        "format_version": 3,
         "model": {
             "vocab_size": cfg.vocab_size, "hidden": cfg.hidden,
             "layers": cfg.layers, "heads": cfg.heads, "ffn": cfg.ffn,
@@ -296,6 +307,7 @@ def write_manifest(out, cfg, micro, train_metrics):
             "num_labels": cfg.num_labels, "ln_eps": cfg.ln_eps,
         },
         "seq": SEQ,
+        "seq_buckets": list(SEQ_BUCKETS),
         "buckets": list(BUCKETS),
         "qmax": QMAX,
         "modes": modes,

@@ -167,6 +167,78 @@ pub fn open_loop_burst(
     })
 }
 
+/// Closed-loop load driver: keep up to `concurrency` requests of one
+/// (task, policy) route in flight until `requests` complete, backing off
+/// on admission backpressure (another concurrent route may own the
+/// queue) with a 30 s no-progress stall guard.  Returns per-request
+/// end-to-end latencies (µs) in completion order.  The one driver shared
+/// by `serve-bench` and the e2e serving sweeps, so the CLI smoke and the
+/// bench trajectories measure identical serving behavior (same
+/// backpressure and stall semantics) — the closed-loop sibling of
+/// [`open_loop_burst`].
+pub fn closed_loop(
+    coord: &crate::coordinator::Coordinator,
+    task: &str,
+    policy: &crate::coordinator::PolicyRef,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    requests: usize,
+    concurrency: usize,
+) -> anyhow::Result<Vec<f64>> {
+    use anyhow::Context;
+    let mut inflight = std::collections::VecDeque::new();
+    let (mut submitted, mut done) = (0usize, 0usize);
+    let mut last_progress = Instant::now();
+    let mut lat = Vec::with_capacity(requests);
+    while done < requests {
+        while submitted < requests && inflight.len() < concurrency {
+            let (ids, tys) = rows[submitted % rows.len()].clone();
+            let spec = crate::coordinator::RequestSpec::task(task)
+                .policy_ref(policy.clone())
+                .ids(ids)
+                .type_ids(tys);
+            match coord.submit(spec) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    submitted += 1;
+                    last_progress = Instant::now();
+                }
+                Err(_) => break, // backpressure: drain first
+            }
+        }
+        if let Some(rx) = inflight.pop_front() {
+            let resp = rx.recv().context("response channel closed")?;
+            anyhow::ensure!(resp.error.is_none(), "request failed: {:?}", resp.error);
+            lat.push(resp.timing.total_us as f64);
+            done += 1;
+            last_progress = Instant::now();
+        } else {
+            // backpressured with nothing of ours in flight: another
+            // route owns the queue — wait, but not forever (submit
+            // errors are also how a stopped coordinator presents)
+            anyhow::ensure!(
+                last_progress.elapsed() < std::time::Duration::from_secs(30),
+                "no progress for 30s ({done}/{requests} done) — coordinator stalled or stopped"
+            );
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+    Ok(lat)
+}
+
+/// Sum a recorder snapshot's padding ledger into (real tokens, padded
+/// token slots) — the one definition both `serve-bench --mixed-length`
+/// (BENCH_seq_buckets_smoke.json) and the e2e seq-bucket sweep
+/// (BENCH_seq_buckets.json) report, so the two files' token semantics
+/// cannot drift apart.
+pub fn padding_totals(
+    snap: &std::collections::BTreeMap<String, crate::coordinator::PolicyStats>,
+) -> (u64, u64) {
+    (
+        snap.values().map(|s| s.real_tokens).sum(),
+        snap.values().map(|s| s.padded_tokens).sum(),
+    )
+}
+
 // ------------------------------------------------------------- formatting
 
 /// Simple monospace table printer for the paper-reproduction benches.

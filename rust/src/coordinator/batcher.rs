@@ -1,22 +1,36 @@
-//! Dynamic batcher: groups requests by interned (task, policy), flushes a
-//! group when it reaches `max_batch` or its oldest request has waited
-//! `max_wait`, and culls deadline-expired requests at de-queue time —
-//! batch formation is the last moment a request can be cancelled
-//! (DESIGN.md §5.8); once a batch leaves the batcher its members execute.
+//! Dynamic batcher: groups requests by interned (task, policy) and
+//! sequence-length class, flushes a class when it reaches `max_batch` or
+//! its oldest request has waited `max_wait`, and culls deadline-expired
+//! requests at de-queue time — batch formation is the last moment a
+//! request can be cancelled (DESIGN.md §5.8); once a batch leaves the
+//! batcher its members execute.
+//!
+//! Length-aware formation (DESIGN.md §5.9): each (task, policy) group is
+//! partitioned into sequence-length classes — one per manifest seq
+//! bucket, assigned at admission as the smallest bucket that fits the
+//! request's real length.  Batches form per (group, class), so a batch's
+//! seq bucket is the smallest that fits its longest member by
+//! construction, and a 16-token request never pays a 128-token batch's
+//! memory traffic just because it shares a route with long requests.
+//! FIFO is preserved within (group, class); across classes of one group
+//! the batcher is free to reorder — that freedom is exactly what lets
+//! short requests stop waiting behind long ones.
 //!
 //! The core is a pure state machine (`push`/`tick` return a `Drained` of
 //! ready batches plus expired requests), which makes the invariants
 //! property-testable without threads:
 //!   * no batch exceeds `max_batch`;
+//!   * no batch mixes seq classes, and no member is longer than the
+//!     batch's seq bucket;
 //!   * a request is emitted exactly once — in a batch or as expired —
-//!     in FIFO order within its group (expiry culls preserve the
-//!     survivors' relative order);
+//!     in FIFO order within its (group, class) (expiry culls preserve
+//!     the survivors' relative order);
 //!   * no live request waits longer than `max_wait` once `tick` is called.
 //!
-//! Groups live in a flat `Vec` scanned linearly: the group count is the
-//! handful of admitted (task, policy) routes, for which two-integer key
-//! compares beat hashing — and `push` allocates nothing once the group's
-//! deque has warmed up.
+//! Classes live in a flat `Vec` scanned linearly: the class count is the
+//! handful of admitted (task, policy) routes times the few seq buckets
+//! they actually use, for which three-integer key compares beat hashing —
+//! and `push` allocates nothing once the class's deque has warmed up.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -25,6 +39,9 @@ use super::request::{GroupKey, Request};
 
 pub struct Batch {
     pub key: GroupKey,
+    /// The class's seq bucket: every member fits it, and it is the
+    /// smallest manifest bucket that fits the longest member.
+    pub seq_bucket: usize,
     pub requests: Vec<Request>,
 }
 
@@ -43,10 +60,18 @@ impl Drained {
     }
 }
 
+/// Batch-formation class: one (task, policy) group restricted to one
+/// sequence-length bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ClassKey {
+    group: GroupKey,
+    seq_bucket: usize,
+}
+
 pub struct Batcher {
     pub max_batch: usize,
     pub max_wait: Duration,
-    groups: Vec<(GroupKey, VecDeque<Request>)>,
+    classes: Vec<(ClassKey, VecDeque<Request>)>,
 }
 
 /// Move every expired request out of `q` into `expired`, preserving the
@@ -71,47 +96,55 @@ fn cull(q: &mut VecDeque<Request>, now: Instant, expired: &mut Vec<Request>) {
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch > 0);
-        Batcher { max_batch, max_wait, groups: Vec::new() }
+        Batcher { max_batch, max_wait, classes: Vec::new() }
     }
 
     /// Add a request; returns any batch made ready by this arrival (plus
     /// requests found expired while forming it).
     pub fn push(&mut self, req: Request, now: Instant) -> Drained {
-        let key = req.key;
-        let idx = match self.groups.iter().position(|(k, _)| *k == key) {
+        let key = ClassKey { group: req.key, seq_bucket: req.seq_bucket };
+        let idx = match self.classes.iter().position(|(k, _)| *k == key) {
             Some(i) => i,
             None => {
-                self.groups.push((key, VecDeque::new()));
-                self.groups.len() - 1
+                self.classes.push((key, VecDeque::new()));
+                self.classes.len() - 1
             }
         };
-        let q = &mut self.groups[idx].1;
+        let q = &mut self.classes[idx].1;
         q.push_back(req);
         let mut out = Drained::default();
         if q.len() >= self.max_batch {
             // formation time: cancel what already expired, then flush
-            // only if a full batch of survivors remains (a short group
+            // only if a full batch of survivors remains (a short class
             // keeps waiting for its max_wait tick)
             cull(q, now, &mut out.expired);
             if q.len() >= self.max_batch {
                 let requests = q.drain(..self.max_batch).collect();
-                out.batches.push(Batch { key, requests });
+                out.batches.push(Batch {
+                    key: key.group,
+                    seq_bucket: key.seq_bucket,
+                    requests,
+                });
             }
         }
         out
     }
 
-    /// Cull expired requests everywhere, then flush groups whose oldest
+    /// Cull expired requests everywhere, then flush classes whose oldest
     /// survivor has exceeded `max_wait`.
     pub fn tick(&mut self, now: Instant) -> Drained {
         let mut out = Drained::default();
-        for (key, q) in self.groups.iter_mut() {
+        for (key, q) in self.classes.iter_mut() {
             cull(q, now, &mut out.expired);
             while let Some(front) = q.front() {
                 if now.duration_since(front.enqueued) >= self.max_wait {
                     let take = q.len().min(self.max_batch);
                     let requests: Vec<Request> = q.drain(..take).collect();
-                    out.batches.push(Batch { key: *key, requests });
+                    out.batches.push(Batch {
+                        key: key.group,
+                        seq_bucket: key.seq_bucket,
+                        requests,
+                    });
                 } else {
                     break;
                 }
@@ -124,28 +157,32 @@ impl Batcher {
     /// requests still come back as expired, not as batch members.
     pub fn drain_all(&mut self, now: Instant) -> Drained {
         let mut out = Drained::default();
-        for (key, q) in self.groups.iter_mut() {
+        for (key, q) in self.classes.iter_mut() {
             cull(q, now, &mut out.expired);
             while !q.is_empty() {
                 let take = q.len().min(self.max_batch);
-                out.batches.push(Batch { key: *key, requests: q.drain(..take).collect() });
+                out.batches.push(Batch {
+                    key: key.group,
+                    seq_bucket: key.seq_bucket,
+                    requests: q.drain(..take).collect(),
+                });
             }
         }
         out
     }
 
     pub fn pending(&self) -> usize {
-        self.groups.iter().map(|(_, q)| q.len()).sum()
+        self.classes.iter().map(|(_, q)| q.len()).sum()
     }
 
-    /// Earliest `max_wait` flush point across groups (each group's front
-    /// is its oldest request), or None when empty.  Deliberately O(groups),
-    /// not O(backlog): request deadlines are *not* scanned here — the
-    /// batcher loop clamps its wait to a short idle tick anyway, so
-    /// expiry culls run within that bound without walking every queued
-    /// request on the hot path to compute a wake-up time.
+    /// Earliest `max_wait` flush point across classes (each class's front
+    /// is its oldest request), or None when empty.  Deliberately
+    /// O(classes), not O(backlog): request deadlines are *not* scanned
+    /// here — the batcher loop clamps its wait to a short idle tick
+    /// anyway, so expiry culls run within that bound without walking
+    /// every queued request on the hot path to compute a wake-up time.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.groups
+        self.classes
             .iter()
             .filter_map(|(_, q)| q.front().map(|r| r.enqueued + self.max_wait))
             .min()
@@ -159,12 +196,19 @@ mod tests {
     use crate::prop::{forall, Rng};
     use std::sync::mpsc::channel;
 
+    /// The test grid's seq buckets (mirrors a manifest's seq_buckets).
+    const SEQ_BUCKETS: [usize; 3] = [16, 64, 128];
+
+    fn class_for(len: usize) -> usize {
+        *SEQ_BUCKETS.iter().find(|b| **b >= len).unwrap_or(&128)
+    }
+
     fn key(task: u16, policy: u16) -> GroupKey {
         GroupKey { task: TaskId(task), policy: PolicyId(policy) }
     }
 
     fn req(id: u64, task: u16, policy: u16, at: Instant) -> Request {
-        req_deadline(id, task, policy, at, None)
+        req_full(id, task, policy, at, None, 128)
     }
 
     fn req_deadline(
@@ -174,6 +218,17 @@ mod tests {
         at: Instant,
         deadline: Option<Instant>,
     ) -> Request {
+        req_full(id, task, policy, at, deadline, 128)
+    }
+
+    fn req_full(
+        id: u64,
+        task: u16,
+        policy: u16,
+        at: Instant,
+        deadline: Option<Instant>,
+        len: usize,
+    ) -> Request {
         let (tx, _rx) = channel();
         // leak the receiver side: batcher tests never reply
         std::mem::forget(_rx);
@@ -181,8 +236,9 @@ mod tests {
             id,
             key: key(task, policy),
             requested: PolicyId(policy),
-            ids: vec![],
-            type_ids: vec![],
+            seq_bucket: class_for(len),
+            ids: vec![1; len],
+            type_ids: vec![0; len],
             enqueued: at,
             deadline,
             reply: tx,
@@ -198,6 +254,7 @@ mod tests {
         let out = b.push(req(2, 0, 0, t), t);
         assert_eq!(out.batches.len(), 1, "full batch");
         assert_eq!(out.batches[0].requests.len(), 3);
+        assert_eq!(out.batches[0].seq_bucket, 128);
         assert!(out.expired.is_empty());
         assert_eq!(b.pending(), 0);
     }
@@ -214,6 +271,30 @@ mod tests {
         let batch = &out.batches[0];
         assert_eq!(batch.key, key(0, 0));
         assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
+    }
+
+    #[test]
+    fn seq_classes_batch_apart_within_a_group() {
+        // same (task, policy), different lengths: the short request must
+        // not ride (or wait for) the long class's batch
+        let mut b = Batcher::new(2, Duration::from_secs(10));
+        let t = Instant::now();
+        assert!(b.push(req_full(0, 0, 0, t, None, 10), t).is_empty());
+        assert!(b.push(req_full(1, 0, 0, t, None, 100), t).is_empty());
+        assert_eq!(b.pending(), 2, "two classes, each below max_batch");
+        // a second short arrival fills the 16-token class only
+        let out = b.push(req_full(2, 0, 0, t, None, 12), t);
+        assert_eq!(out.batches.len(), 1);
+        let batch = &out.batches[0];
+        assert_eq!(batch.seq_bucket, 16);
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert!(batch.requests.iter().all(|r| r.ids.len() <= batch.seq_bucket));
+        // the long request is still queued in its own class
+        assert_eq!(b.pending(), 1);
+        let out = b.drain_all(t);
+        assert_eq!(out.batches.len(), 1);
+        assert_eq!(out.batches[0].seq_bucket, 128);
+        assert_eq!(out.batches[0].requests[0].id, 1);
     }
 
     #[test]
@@ -239,7 +320,7 @@ mod tests {
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
         // request deadlines do not move the wake-up point (the serving
         // loop's idle clamp bounds expiry-cull latency instead — the
-        // wake-up stays O(groups) under a deep backlog)
+        // wake-up stays O(classes) under a deep backlog)
         let d = t0 + Duration::from_millis(4);
         b.push(req_deadline(2, 1, 0, t0 + Duration::from_millis(3), Some(d)), t0);
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
@@ -298,7 +379,7 @@ mod tests {
     // ------------------------------------------------------- properties
 
     #[test]
-    fn prop_exactly_once_fifo_and_bounded_with_deadlines() {
+    fn prop_exactly_once_fifo_and_bounded_with_deadlines_and_lengths() {
         forall("batcher-invariants", 50, |r: &mut Rng| {
             let max_batch = 1 + r.below(8);
             let mut b = Batcher::new(max_batch, Duration::from_millis(r.below(20) as u64));
@@ -306,21 +387,40 @@ mod tests {
             let modes = [0u16, 1];
             let t0 = Instant::now();
             let n = 1 + r.below(200);
-            let mut emitted: Vec<(GroupKey, u64)> = Vec::new();
+            // (class key, id) per emission — FIFO is per (group, class)
+            let mut emitted: Vec<(GroupKey, usize, u64)> = Vec::new();
             let mut expired_ids: Vec<u64> = Vec::new();
             let mut collect = |out: Drained,
-                               emitted: &mut Vec<(GroupKey, u64)>,
+                               emitted: &mut Vec<(GroupKey, usize, u64)>,
                                expired_ids: &mut Vec<u64>| {
                 for batch in out.batches {
                     assert!(batch.requests.len() <= max_batch, "batch overflow");
                     assert!(!batch.requests.is_empty());
+                    assert!(
+                        SEQ_BUCKETS.contains(&batch.seq_bucket),
+                        "batch seq bucket {} not in the grid",
+                        batch.seq_bucket
+                    );
                     for q in &batch.requests {
                         assert_eq!(q.key, batch.key);
-                        emitted.push((q.key, q.id));
+                        // no member longer than the batch's seq bucket,
+                        // and none so short it belongs to a smaller class
+                        assert!(
+                            q.ids.len() <= batch.seq_bucket,
+                            "request of {} tokens in a {}-token batch",
+                            q.ids.len(),
+                            batch.seq_bucket
+                        );
+                        assert_eq!(
+                            class_for(q.ids.len()),
+                            batch.seq_bucket,
+                            "request not in its smallest-fit class"
+                        );
+                        emitted.push((q.key, batch.seq_bucket, q.id));
                     }
                 }
                 for q in out.expired {
-                    emitted.push((q.key, q.id));
+                    emitted.push((q.key, q.seq_bucket, q.id));
                     expired_ids.push(q.id);
                 }
             };
@@ -334,7 +434,9 @@ mod tests {
                 } else {
                     None
                 };
-                let out = b.push(req_deadline(id, task, mode, at, deadline), at);
+                // random real lengths across the whole admissible range
+                let len = 1 + r.below(128);
+                let out = b.push(req_full(id, task, mode, at, deadline, len), at);
                 collect(out, &mut emitted, &mut expired_ids);
                 if r.below(10) == 0 {
                     let out = b.tick(t0 + Duration::from_millis(id + r.below(30) as u64));
@@ -349,25 +451,31 @@ mod tests {
             assert_eq!(b.pending(), 0);
             // exactly once across batches + expired
             assert_eq!(emitted.len(), n);
-            let mut ids: Vec<u64> = emitted.iter().map(|(_, id)| *id).collect();
+            let mut ids: Vec<u64> = emitted.iter().map(|(_, _, id)| *id).collect();
             ids.sort_unstable();
             ids.dedup();
             assert_eq!(ids.len(), n, "duplicate or lost request");
-            // FIFO within each group among batch survivors (ids are
-            // submit-ordered; expired requests are removed, not reordered)
+            // FIFO within each (group, seq class) among batch survivors
+            // (ids are submit-ordered; expired requests are removed, not
+            // reordered; cross-class order within a group is deliberately
+            // unconstrained — that freedom is the padding win)
             let expired_set: std::collections::BTreeSet<u64> =
                 expired_ids.iter().copied().collect();
             for task in &tasks {
                 for mode in &modes {
-                    let k = key(*task, *mode);
-                    let seq: Vec<u64> = emitted
-                        .iter()
-                        .filter(|(g, id)| *g == k && !expired_set.contains(id))
-                        .map(|(_, id)| *id)
-                        .collect();
-                    let mut sorted = seq.clone();
-                    sorted.sort_unstable();
-                    assert_eq!(seq, sorted, "group {k:?} out of order");
+                    for sb in &SEQ_BUCKETS {
+                        let k = key(*task, *mode);
+                        let seq: Vec<u64> = emitted
+                            .iter()
+                            .filter(|(g, cls, id)| {
+                                *g == k && *cls == *sb && !expired_set.contains(id)
+                            })
+                            .map(|(_, _, id)| *id)
+                            .collect();
+                        let mut sorted = seq.clone();
+                        sorted.sort_unstable();
+                        assert_eq!(seq, sorted, "(group {k:?}, class {sb}) out of order");
+                    }
                 }
             }
         });

@@ -15,8 +15,11 @@
 //!   -> v1 fields plus {"v": 2, "policy": <interned name>,
 //!      "mode": <executable mode>}
 //!
-//! In both versions `type_ids` is optional (zeros) and short `ids` are
-//! padded to the model sequence length.  A v2 frame with no `policy`
+//! In both versions `type_ids` is optional (zeros) and `ids` stay
+//! *unpadded* — the request's real length picks its sequence-length
+//! bucket at admission (DESIGN.md §5.9), so a short request rides a
+//! short executable; successful replies name the `seq_bucket` the batch
+//! executed at.  A v2 frame with no `policy`
 //! routes through the manifest's first mode; a v1 frame must name its
 //! `mode` — the pre-v2 implicit "m3" fallback is gone, and an explicit
 //! error beats silently serving a different precision.  Mixing `mode`
@@ -121,17 +124,20 @@ impl Drop for NetServer {
     }
 }
 
+/// Parse a token array, bounds-checked against the model max but left
+/// *unpadded*: the request's real length is what admission buckets on
+/// (DESIGN.md §5.9) — padding here would silently put every wire request
+/// in the top seq class.
 fn ids_from(v: &Value, key: &str, seq: usize) -> Result<Option<Vec<i32>>> {
     match v.get(key) {
         None => Ok(None),
         Some(arr) => {
             let a = arr.as_array().context("ids must be an array")?;
             anyhow::ensure!(a.len() <= seq, "too many tokens ({} > seq {seq})", a.len());
-            let mut out = Vec::with_capacity(seq);
+            let mut out = Vec::with_capacity(a.len());
             for x in a {
                 out.push(x.as_f64().context("token not a number")? as i32);
             }
-            out.resize(seq, crate::data::PAD);
             Ok(Some(out))
         }
     }
@@ -276,6 +282,7 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
                     ("queue_us", json::num(resp.timing.queue_us as f64)),
                     ("exec_us", json::num(resp.timing.exec_us as f64)),
                     ("bucket", json::num(resp.timing.bucket as f64)),
+                    ("seq_bucket", json::num(resp.timing.seq_bucket as f64)),
                     ("batch", json::num(resp.timing.batch_real as f64)),
                 ];
                 if version >= 2 {
@@ -431,13 +438,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn ids_padding_and_bounds() {
+    fn ids_stay_unpadded_and_bounds_checked() {
+        // the wire layer must not pad: the real length is the batching
+        // signal (padding here would pin every request to the top class)
         let v = json::parse(r#"{"ids": [1, 2, 3]}"#).unwrap();
         let ids = ids_from(&v, "ids", 6).unwrap().unwrap();
-        assert_eq!(ids, vec![1, 2, 3, 0, 0, 0]);
+        assert_eq!(ids, vec![1, 2, 3]);
         let too_long = json::parse(r#"{"ids": [1,2,3,4,5,6,7]}"#).unwrap();
         assert!(ids_from(&too_long, "ids", 6).is_err());
         assert!(ids_from(&v, "type_ids", 6).unwrap().is_none());
+        // deliberate v1 contract change rider: `"ids": []` used to be
+        // padded to a full-PAD row and served garbage logits; it now
+        // stays empty here and admission rejects it with a typed error
+        let empty = json::parse(r#"{"ids": []}"#).unwrap();
+        assert_eq!(ids_from(&empty, "ids", 6).unwrap().unwrap(), Vec::<i32>::new());
     }
 
     #[test]
@@ -447,7 +461,7 @@ mod tests {
         assert_eq!(version, 1);
         assert_eq!(spec.task, "sst2");
         assert_eq!(spec.policy, Some(PolicyRef::Named("m3".into())));
-        assert_eq!(spec.ids, vec![1, 2, 0, 0]);
+        assert_eq!(spec.ids, vec![1, 2], "v1 frames keep their real length too");
         assert!(spec.type_ids.is_none());
 
         // a v1 frame with no mode is an error (no silent precision guess)
@@ -486,7 +500,7 @@ mod tests {
             .with_fallback("m1")
             .with_fallback("fp");
         assert_eq!(spec.policy, Some(PolicyRef::Inline(want)));
-        assert_eq!(spec.type_ids, Some(vec![0, 0, 0, 0]));
+        assert_eq!(spec.type_ids, Some(vec![0]));
     }
 
     #[test]

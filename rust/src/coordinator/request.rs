@@ -28,7 +28,7 @@ pub enum PolicyRef {
 /// coord.submit(
 ///     RequestSpec::task("sst2")
 ///         .policy("attn-out-fp")     // or .mode("m3") for whole-model
-///         .ids(tokens)               // padded to seq at admission
+///         .ids(tokens)               // unpadded; length picks the seq bucket
 ///         .type_ids(segments),       // optional, defaults to zeros
 /// )?;
 /// ```
@@ -39,7 +39,10 @@ pub enum PolicyRef {
 pub struct RequestSpec {
     pub task: String,
     pub policy: Option<PolicyRef>,
-    /// Token ids; shorter than the model seq is fine (padded at admission).
+    /// Token ids, unpadded.  Admission records the real length and
+    /// assigns the smallest manifest seq bucket that fits it — the
+    /// request pays for `seq_bucket` tokens of memory traffic, not the
+    /// model max (DESIGN.md §5.9).  Length must be 1..=seq.
     pub ids: Vec<i32>,
     pub type_ids: Option<Vec<i32>>,
     /// Per-request completion budget, measured from admission.  A request
@@ -122,8 +125,15 @@ pub struct Request {
     /// governed counts here, so a policy's ledger reconciles even while
     /// its traffic rides a downgraded route).
     pub requested: PolicyId,
-    /// `[seq]` token ids (already padded/truncated to the model seq).
+    /// Smallest manifest seq bucket that fits `ids.len()` — the
+    /// request's sequence-length class.  The batcher forms batches per
+    /// (group, class), so a batch's seq bucket is the smallest that fits
+    /// its longest member by construction (DESIGN.md §5.9).
+    pub seq_bucket: usize,
+    /// Unpadded token ids (`1..=seq` of them — the real length; padding
+    /// to the batch's seq bucket happens at staging, not admission).
     pub ids: Vec<i32>,
+    /// Type ids, padded/truncated to `ids.len()` at admission.
     pub type_ids: Vec<i32>,
     pub enqueued: Instant,
     /// Absolute expiry (admission time + the spec or server default
@@ -176,9 +186,20 @@ pub struct Timing {
     /// batch this request rode in
     pub batch_real: usize,
     pub bucket: usize,
+    /// seq bucket the batch executed at (the smallest manifest seq
+    /// bucket fitting its longest member)
+    pub seq_bucket: usize,
+    /// caller-provided tokens across the whole batch (pre-padding)
+    pub real_tokens: usize,
+    /// token slots the device processed (`bucket * seq_bucket`) — with
+    /// `real_tokens`, the per-batch padding-waste witness
+    pub padded_tokens: usize,
     /// coordinator-wide dispatch sequence number of the batch this request
-    /// rode in; within a (task, policy) group it is strictly increasing
+    /// rode in; within a (task, policy, seq class) it is non-decreasing
     /// with request id — the FIFO witness the pipeline tests assert on.
+    /// Across seq classes of one group the order is deliberately
+    /// unconstrained (DESIGN.md §5.9): short requests may overtake long
+    /// ones — that freedom is the padding win.
     pub batch_seq: u64,
     /// engine replica that executed this request's batch (0 when serving
     /// with a single engine).

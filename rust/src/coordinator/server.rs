@@ -5,11 +5,13 @@
 //! anywhere.
 //!
 //! Hot-path discipline (DESIGN.md §5-§6): `RequestSpec` policy references
-//! are interned to `TaskId`/`PolicyId` at admission; batch assembly
-//! writes into pooled staging buffers; the engine overlaps
-//! upload/execute/readback and selects executables through its mirrored
-//! policy table; and de-batching + reply dispatch run on the completion
-//! pool, never on the engine thread.
+//! are interned to `TaskId`/`PolicyId` at admission; requests keep their
+//! real token length and batch per sequence-length class (§5.9) so short
+//! requests never pay max-seq memory traffic; batch assembly writes into
+//! pooled staging buffers keyed by the (seq bucket, batch bucket) grid;
+//! the engine overlaps upload/execute/readback and selects executables
+//! through its mirrored policy table; and de-batching + reply dispatch
+//! run on the completion pool, never on the engine thread.
 //!
 //! Overload control (DESIGN.md §5.8): admission is bounded (`submit`
 //! returns `SubmitError::Busy`, never queues unboundedly), requests
@@ -51,8 +53,10 @@ pub struct ServerConfig {
     /// replica owns its own PJRT runtime with preloaded checkpoints and
     /// precompiled executables (DESIGN.md §5.7).
     pub replicas: usize,
-    /// Staging buffers kept warm per bucket.
-    pub staging_per_bucket: usize,
+    /// Staging buffers kept warm per (seq bucket, batch bucket) grid
+    /// cell — the warm-buffer bound is
+    /// `seq_buckets.len() * buckets.len() * staging_per_cell`.
+    pub staging_per_cell: usize,
     /// Deadline applied to requests whose spec carries none (`None` =
     /// such requests never expire).
     pub default_deadline: Option<Duration>,
@@ -87,7 +91,7 @@ impl Default for ServerConfig {
             completion_workers: 4,
             pipeline: true,
             replicas: 1,
-            staging_per_bucket: 4,
+            staging_per_cell: 4,
             default_deadline: None,
             governor: None,
             net_read_timeout: Duration::from_millis(200),
@@ -97,6 +101,38 @@ impl Default for ServerConfig {
         }
     }
 }
+
+/// Typed startup-configuration error: the server must refuse to start on
+/// a config the manifest cannot honor, instead of silently serving
+/// something else.  The one current case: `max_batch` larger than the
+/// manifest's largest batch bucket — `Manifest::bucket_for` would clamp
+/// every oversize batch to the largest bucket, so the configured batch
+/// size would silently never form.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `ServerConfig::max_batch` (`--max-batch`) exceeds the largest
+    /// manifest batch bucket; batches of the configured size could never
+    /// execute.
+    MaxBatchExceedsBuckets { max_batch: usize, largest_bucket: usize },
+    /// `max_batch` of 0 can never form a batch.
+    ZeroMaxBatch,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::MaxBatchExceedsBuckets { max_batch, largest_bucket } => write!(
+                f,
+                "max_batch {max_batch} exceeds the manifest's largest batch bucket \
+                 {largest_bucket}; a batch that size can never execute (lower --max-batch \
+                 or regenerate artifacts with a larger bucket)"
+            ),
+            ConfigError::ZeroMaxBatch => f.write_str("max_batch must be at least 1"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Why `Coordinator::submit` refused a request.  `Busy` is the explicit
 /// backpressure signal (the admission queue is at `queue_cap`); the TCP
@@ -187,6 +223,21 @@ impl Coordinator {
         let seq = manifest.seq;
         let num_labels = manifest.model.num_labels;
         let buckets = manifest.buckets.clone();
+        let seq_buckets = manifest.seq_buckets.clone();
+
+        // typed config validation before any thread spawns: an oversize
+        // max_batch would otherwise be silently clamped by bucket_for at
+        // every dispatch — serving a different batch size than configured
+        if config.max_batch == 0 {
+            return Err(anyhow::Error::new(ConfigError::ZeroMaxBatch));
+        }
+        let largest_bucket = *buckets.last().context("manifest declares no buckets")?;
+        if config.max_batch > largest_bucket {
+            return Err(anyhow::Error::new(ConfigError::MaxBatchExceedsBuckets {
+                max_batch: config.max_batch,
+                largest_bucket,
+            }));
+        }
 
         // expand routes with governor degradation targets (uniform
         // policies of cheaper modes), then dedupe by (task, exec mode)
@@ -225,13 +276,21 @@ impl Coordinator {
             preload.push((task.clone(), mode.clone(), ckpt));
             modes_used.insert(mode);
         }
-        let precompile: Vec<(String, usize)> = modes_used
+        // precompile the full (mode, seq bucket, batch bucket) grid so
+        // the serving hot path never compiles, whichever length class a
+        // request lands in
+        let precompile: Vec<(String, usize, usize)> = modes_used
             .iter()
-            .flat_map(|m| buckets.iter().map(move |b| (m.clone(), *b)))
+            .flat_map(|m| {
+                seq_buckets.iter().flat_map(move |s| {
+                    buckets.iter().map(move |b| (m.clone(), *s, *b))
+                })
+            })
             .collect();
 
         let pool = Arc::new(ThreadPool::new(config.completion_workers, "zqh-complete"));
-        let staging = Arc::new(StagingPool::new(&buckets, seq, config.staging_per_bucket));
+        let staging =
+            Arc::new(StagingPool::new(&seq_buckets, &buckets, config.staging_per_cell));
         let replicas = config.replicas.max(1);
         let engine = Arc::new(EnginePool::spawn(
             artifacts,
@@ -298,16 +357,19 @@ impl Coordinator {
     }
 
     /// Submit a typed request.  Policy references are interned here —
-    /// nothing downstream sees a string — the deadline is stamped, and
-    /// under an active governor downgrade the request rides the cheaper
-    /// effective route (ledgered as `governed` on the requested policy).
-    /// `Err(SubmitError::Busy)` is explicit backpressure: the admission
-    /// queue never grows past `queue_cap`.
+    /// nothing downstream sees a string — the deadline is stamped, the
+    /// request's *real* length is recorded (no padding to the model max:
+    /// the smallest manifest seq bucket that fits becomes the request's
+    /// batching class, DESIGN.md §5.9), and under an active governor
+    /// downgrade the request rides the cheaper effective route (ledgered
+    /// as `governed` on the requested policy).  `Err(SubmitError::Busy)`
+    /// is explicit backpressure: the admission queue never grows past
+    /// `queue_cap`.
     pub fn submit(
         &self,
         spec: RequestSpec,
     ) -> std::result::Result<Receiver<Response>, SubmitError> {
-        let RequestSpec { task, policy, mut ids, type_ids, deadline } = spec;
+        let RequestSpec { task, policy, ids, type_ids, deadline } = spec;
         let reject = |e: anyhow::Error| SubmitError::Rejected(e);
         if ids.is_empty() || ids.len() > self.seq {
             return Err(reject(anyhow!(
@@ -316,7 +378,6 @@ impl Coordinator {
                 ids.len()
             )));
         }
-        ids.resize(self.seq, crate::data::PAD);
         let mut type_ids = type_ids.unwrap_or_default();
         if type_ids.len() > self.seq {
             return Err(reject(anyhow!(
@@ -325,7 +386,13 @@ impl Coordinator {
                 type_ids.len()
             )));
         }
-        type_ids.resize(self.seq, 0);
+        // pre-grid clients padded type_ids client-side; a tail beyond the
+        // real token count rides masked PAD positions, so truncating (not
+        // rejecting) keeps every previously-valid frame valid
+        type_ids.resize(ids.len(), 0);
+        // the request's sequence-length class: padding to this bucket
+        // happens at staging, per batch — never here to the model max
+        let seq_bucket = self.man.seq_bucket_for(ids.len());
         let key = self.resolve(&task, policy.as_ref()).map_err(reject)?;
         let requested = key.policy;
         // governed routing: the effective policy may sit further down the
@@ -366,6 +433,7 @@ impl Coordinator {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             key: GroupKey { task: key.task, policy: effective },
             requested,
+            seq_bucket,
             ids,
             type_ids,
             enqueued: now,
@@ -583,15 +651,20 @@ fn dispatch(
 ) {
     let real = batch.requests.len();
     let bucket = man.bucket_for(real);
+    // the batch's seq bucket came from the batcher's class partition:
+    // the smallest manifest bucket that fits its longest member
+    let seq_bucket = batch.seq_bucket;
     let dispatched = Instant::now();
     let seq_no = *batch_seq;
     *batch_seq += 1;
 
-    let mut host = staging.take(bucket);
+    let mut host = staging.take(seq_bucket, bucket);
     for r in &batch.requests {
         host.push_row(&r.ids, &r.type_ids);
     }
     host.finish();
+    let real_tokens = host.real_tokens;
+    let padded_tokens = host.padded_tokens();
 
     // the batch is cancellable only while every member has a deadline:
     // once the last of them passes, no one is waiting for the result
@@ -630,7 +703,14 @@ fn dispatch(
                     }
                 };
                 let nl = logits.len() / bucket;
-                recorder.record_batch(policy, real, done.exec_us, done.replica);
+                recorder.record_batch(
+                    policy,
+                    real,
+                    real_tokens,
+                    padded_tokens,
+                    done.exec_us,
+                    done.replica,
+                );
                 for (row, r) in requests.into_iter().enumerate() {
                     let now = Instant::now();
                     let timing = Timing {
@@ -641,6 +721,9 @@ fn dispatch(
                         total_us: now.duration_since(r.enqueued).as_micros() as u64,
                         batch_real: real,
                         bucket,
+                        seq_bucket,
+                        real_tokens,
+                        padded_tokens,
                         batch_seq: seq_no,
                         replica: done.replica,
                         engine_seq: done.exec_seq,

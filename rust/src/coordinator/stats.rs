@@ -102,6 +102,13 @@ pub struct PolicyStats {
     pub requests: u64,
     pub batches: u64,
     pub batched_rows: u64,
+    /// Caller-provided tokens across this policy's batches (pre-padding).
+    pub real_tokens: u64,
+    /// Token slots the device actually processed (`bucket * seq_bucket`
+    /// summed over batches).  `real_tokens / padded_tokens` is the
+    /// padding efficiency the render table reports — the memory-traffic
+    /// share that carried real work (DESIGN.md §5.9).
+    pub padded_tokens: u64,
     pub errors: u64,
     /// Replied with logits.
     pub completed: u64,
@@ -123,6 +130,16 @@ impl PolicyStats {
             0.0
         } else {
             self.batched_rows as f64 / self.batches as f64
+        }
+    }
+
+    /// real tokens / padded tokens over this policy's batches, in [0, 1]
+    /// (1.0 when no batch has executed yet: an idle policy wastes nothing).
+    pub fn padding_efficiency(&self) -> f64 {
+        if self.padded_tokens == 0 {
+            1.0
+        } else {
+            self.real_tokens as f64 / self.padded_tokens as f64
         }
     }
 
@@ -210,11 +227,25 @@ impl Recorder {
         self.inner.lock().unwrap().policies[requested.index()].governed += 1;
     }
 
-    pub fn record_batch(&self, policy: PolicyId, rows: usize, exec_us: u64, replica: usize) {
+    /// `real_tokens` / `padded_tokens` are the batch's caller-token count
+    /// and device token-slot count (`bucket * seq_bucket`) — recorded
+    /// under the same lock as the batch so the padding ledger can never
+    /// tear against the batch count.
+    pub fn record_batch(
+        &self,
+        policy: PolicyId,
+        rows: usize,
+        real_tokens: usize,
+        padded_tokens: usize,
+        exec_us: u64,
+        replica: usize,
+    ) {
         let mut g = self.inner.lock().unwrap();
         let s = &mut g.policies[policy.index()];
         s.batches += 1;
         s.batched_rows += rows as u64;
+        s.real_tokens += real_tokens as u64;
+        s.padded_tokens += padded_tokens as u64;
         s.exec.record(exec_us);
         // replica slots are fixed at startup; an out-of-range index is an
         // engine-pool bug, not a slot to grow
@@ -262,7 +293,7 @@ impl Recorder {
         let elapsed = self.elapsed_s();
         let mut t = Table::new(&[
             "policy", "reqs", "errs", "shed", "expired", "governed", "goodput(r/s)",
-            "mean batch", "p50 lat", "p95 lat", "p99 lat", "mean exec/batch",
+            "mean batch", "pad eff", "p50 lat", "p95 lat", "p99 lat", "mean exec/batch",
         ]);
         for (policy, s) in &snap {
             t.row(vec![
@@ -277,6 +308,9 @@ impl Recorder {
                 // the server is shedding accuracy and load to survive
                 format!("{:.1}", s.completed as f64 / elapsed.max(1e-9)),
                 format!("{:.2}", s.mean_batch_size()),
+                // real / padded tokens: the share of device memory
+                // traffic that carried real work (DESIGN.md §5.9)
+                format!("{:.0}%", 100.0 * s.padding_efficiency()),
                 format!("{:.1}ms", s.latency.percentile_us(0.50) as f64 / 1e3),
                 format!("{:.1}ms", s.latency.percentile_us(0.95) as f64 / 1e3),
                 format!("{:.1}ms", s.latency.percentile_us(0.99) as f64 / 1e3),
@@ -364,14 +398,21 @@ mod tests {
         r.record_request(m3, 2000, 200, false);
         r.record_request(fp, 99, 9, true);
         r.record_request(named, 500, 50, false);
-        r.record_batch(m3, 8, 500, 0);
+        // 8 rows in a (bucket 8, seq 64) batch: 300 of 512 slots real
+        r.record_batch(m3, 8, 300, 512, 500, 0);
         let snap = r.snapshot();
         assert_eq!(snap["m3"].requests, 2);
         assert_eq!(snap["fp"].errors, 1);
         assert_eq!(snap["attn-out-fp"].requests, 1);
         assert_eq!(snap["m3"].mean_batch_size(), 8.0);
+        assert_eq!(snap["m3"].real_tokens, 300);
+        assert_eq!(snap["m3"].padded_tokens, 512);
+        assert!((snap["m3"].padding_efficiency() - 300.0 / 512.0).abs() < 1e-12);
+        // an idle policy reports perfect efficiency, not a 0/0 artifact
+        assert_eq!(snap["fp"].padding_efficiency(), 1.0);
         assert!(r.render().contains("m3"));
         assert!(r.render().contains("attn-out-fp"));
+        assert!(r.render().contains("pad eff"));
         // single-replica serving keeps the plain render (no replica table)
         assert!(!r.render().contains("replica"));
     }
@@ -440,7 +481,7 @@ mod tests {
                 Expired { p: u16 },
                 Shed { p: u16 },
                 Governed { p: u16 },
-                Batch { p: u16, rows: usize, rep: usize },
+                Batch { p: u16, rows: usize, real_tok: usize, padded_tok: usize, rep: usize },
             }
             let n_writers = 3;
             let tapes: Vec<Vec<Op>> = (0..n_writers)
@@ -453,11 +494,19 @@ mod tests {
                                 1 => Op::Expired { p },
                                 2 => Op::Shed { p },
                                 3 => Op::Governed { p },
-                                _ => Op::Batch {
-                                    p,
-                                    rows: 1 + r.below(16),
-                                    rep: r.below(replicas),
-                                },
+                                _ => {
+                                    // a plausible batch: padded slots are
+                                    // a (bucket, seq bucket) cell, real
+                                    // tokens never exceed them
+                                    let padded_tok = 16 * (1 + r.below(128));
+                                    Op::Batch {
+                                        p,
+                                        rows: 1 + r.below(16),
+                                        real_tok: 1 + r.below(padded_tok),
+                                        padded_tok,
+                                        rep: r.below(replicas),
+                                    }
+                                }
                             }
                         })
                         .collect()
@@ -479,9 +528,15 @@ mod tests {
                                     Op::Expired { p } => rec.record_expired(PolicyId(p), 500),
                                     Op::Shed { p } => rec.record_shed(PolicyId(p)),
                                     Op::Governed { p } => rec.record_governed(PolicyId(p)),
-                                    Op::Batch { p, rows, rep } => {
-                                        rec.record_batch(PolicyId(p), rows, 200, rep)
-                                    }
+                                    Op::Batch { p, rows, real_tok, padded_tok, rep } => rec
+                                        .record_batch(
+                                            PolicyId(p),
+                                            rows,
+                                            real_tok,
+                                            padded_tok,
+                                            200,
+                                            rep,
+                                        ),
                                 }
                             }
                         })
@@ -501,6 +556,15 @@ mod tests {
                                 s.completed + s.errors + s.expired,
                                 "{name} ledger tore mid-flight"
                             );
+                            // tokens are recorded under the same lock as
+                            // the batch, so no observation can see real
+                            // tokens outrun the padded slots (or tokens
+                            // without a batch)
+                            assert!(
+                                s.real_tokens <= s.padded_tokens,
+                                "{name} token ledger tore mid-flight"
+                            );
+                            assert!(s.batches > 0 || s.padded_tokens == 0, "{name} tokens sans batch");
                         }
                         // NB: snapshot() then replica_snapshot() are two
                         // lock acquisitions, so writers may land between
@@ -547,9 +611,11 @@ mod tests {
                     }
                     Op::Shed { p } => want[p as usize].shed += 1,
                     Op::Governed { p } => want[p as usize].governed += 1,
-                    Op::Batch { p, rows, rep } => {
+                    Op::Batch { p, rows, real_tok, padded_tok, rep } => {
                         want[p as usize].batches += 1;
                         want[p as usize].batched_rows += rows as u64;
+                        want[p as usize].real_tokens += real_tok as u64;
+                        want[p as usize].padded_tokens += padded_tok as u64;
                         want_reps[rep].batches += 1;
                         want_reps[rep].rows += rows as u64;
                     }
@@ -570,6 +636,11 @@ mod tests {
                     (w.batches, w.batched_rows),
                     "{name} batches"
                 );
+                assert_eq!(
+                    (got.real_tokens, got.padded_tokens),
+                    (w.real_tokens, w.padded_tokens),
+                    "{name} padding ledger"
+                );
             }
             let reps = rec.replica_snapshot();
             for (i, w) in want_reps.iter().enumerate() {
@@ -581,9 +652,9 @@ mod tests {
     #[test]
     fn per_replica_batch_counts_sum_to_policy_totals() {
         let r = Recorder::new(vec!["fp".into(), "m3".into()], 3);
-        r.record_batch(PolicyId(0), 4, 100, 0);
-        r.record_batch(PolicyId(1), 2, 100, 2);
-        r.record_batch(PolicyId(1), 1, 100, 2);
+        r.record_batch(PolicyId(0), 4, 200, 512, 100, 0);
+        r.record_batch(PolicyId(1), 2, 30, 32, 100, 2);
+        r.record_batch(PolicyId(1), 1, 10, 16, 100, 2);
         let reps = r.replica_snapshot();
         assert_eq!(reps.len(), 3);
         let per_policy: u64 = r.snapshot().values().map(|s| s.batches).sum();

@@ -95,6 +95,37 @@ impl Split {
     }
 }
 
+/// Strip one row's trailing PAD tokens (split containers store rows at
+/// the model max): the surviving prefix is the request's *real* length,
+/// which length-aware admission buckets on (DESIGN.md §5.9).  Always
+/// keeps at least one token; `type_ids` is cut to the same prefix (or
+/// left whole if already shorter).  The one definition shared by the
+/// serve-bench smoke, the e2e bench sweep, and the integration tests —
+/// PAD semantics must not drift between them.
+pub fn trim_pad_tail(ids: &[i32], type_ids: &[i32]) -> (Vec<i32>, Vec<i32>) {
+    let len = ids.iter().rposition(|t| *t != PAD).map_or(1, |i| i + 1);
+    (ids[..len].to_vec(), type_ids[..len.min(type_ids.len())].to_vec())
+}
+
+/// The canonical mixed-length workload of the §5.9 acceptance runs: rows
+/// at their real lengths, with every 4th kept at the container length
+/// (the model max) so the top seq bucket stays exercised.  Shared by the
+/// e2e seq-bucket sweep (whose ≥2x padded-token assertion runs on it)
+/// and the mixed-length integration test, so both validate the same
+/// workload shape.
+pub fn mixed_length_workload(rows: &[(Vec<i32>, Vec<i32>)]) -> Vec<(Vec<i32>, Vec<i32>)> {
+    rows.iter()
+        .enumerate()
+        .map(|(i, (ids, tys))| {
+            if i % 4 == 3 {
+                (ids.clone(), tys.clone())
+            } else {
+                trim_pad_tail(ids, tys)
+            }
+        })
+        .collect()
+}
+
 /// A padded batch ready for the runtime: exactly `bucket` rows, the last
 /// `bucket - real` rows being PAD padding that callers must drop.
 pub struct PaddedBatch {
@@ -162,6 +193,18 @@ mod tests {
         assert_eq!(&bs[1].mask[4..], &[0.0; 4]);
         // real row mask: PAD position is 0
         assert_eq!(&bs[0].mask[..4], &[1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn trim_pad_tail_keeps_real_prefix() {
+        // interior PAD survives; only the tail is stripped
+        assert_eq!(trim_pad_tail(&[1, 0, 2, 0, 0], &[0, 0, 1, 1, 1]), (vec![1, 0, 2], vec![0, 0, 1]));
+        // no tail: unchanged
+        assert_eq!(trim_pad_tail(&[1, 2], &[0, 1]), (vec![1, 2], vec![0, 1]));
+        // all-PAD row keeps one token (admission rejects empty ids)
+        assert_eq!(trim_pad_tail(&[0, 0, 0], &[0, 0, 0]), (vec![0], vec![0]));
+        // short type_ids never panics
+        assert_eq!(trim_pad_tail(&[1, 2, 0], &[7]), (vec![1, 2], vec![7]));
     }
 
     #[test]

@@ -118,6 +118,7 @@ fn cli() -> Cli {
                     OptSpec { name: "default-deadline-ms", takes_value: true, default: Some("0"), help: "deadline for requests that carry none (0 = never expire)" },
                     OptSpec { name: "governor", takes_value: false, default: None, help: "enable the load-adaptive precision governor" },
                     OptSpec { name: "overload", takes_value: true, default: Some("0"), help: "open-loop overload burst at X times measured capacity (0 = closed loop)" },
+                    OptSpec { name: "mixed-length", takes_value: false, default: None, help: "length-aware smoke: drive real-length rows vs a padded baseline, write BENCH_seq_buckets_smoke.json" },
                 ],
             },
         ],
@@ -183,7 +184,7 @@ fn cmd_info(args: &zqhero::cli::Args) -> Result<()> {
         "model: {} layers, d={}, heads={}, ffn={}, vocab={}, seq={}",
         m.layers, m.hidden, m.heads, m.ffn, m.vocab_size, man.seq
     );
-    println!("buckets: {:?}", man.buckets);
+    println!("buckets: {:?} x seq_buckets {:?}", man.buckets, man.seq_buckets);
     let mut t = Table::new(&["mode", "Emb", "QKV", "Attn", "AttnOut", "FC1", "FC2", "params"]);
     for name in &man.mode_order {
         let spec = &man.modes[name];
@@ -490,23 +491,26 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
         .iter()
         .flat_map(|t| routes.iter().map(move |m| (t.clone(), m.clone())))
         .collect();
-    println!("starting coordinator ({} task x policy routes)...", pairs.len());
-    let coord = Coordinator::start(dir.clone(), &pairs, config)?;
 
     // pull eval rows as the request payloads
     let man = Manifest::load(&dir)?;
-    let mut payloads = Vec::new();
-    for t in &tasks {
-        let task = man.task(t)?;
-        let split = zqhero::data::Split::load(&man, task, "dev")?;
-        let rows: Vec<(Vec<i32>, Vec<i32>)> = (0..split.len().min(requests))
-            .map(|i| {
-                let (a, b) = split.row(i);
-                (a.to_vec(), b.to_vec())
-            })
-            .collect();
-        payloads.push(rows);
+    let payloads = load_payloads(&man, &tasks, requests)?;
+
+    if args.get_bool("mixed-length") {
+        // refuse rather than silently drop the other mode's flag: a
+        // BENCH_seq_buckets_smoke.json from a closed loop must not be
+        // misread as an overload measurement
+        anyhow::ensure!(
+            overload == 0.0,
+            "--mixed-length and --overload are separate benchmarks; run one at a time"
+        );
+        return serve_bench_seq_buckets(
+            &dir, &man, &tasks, &routes, &payloads, requests, concurrency, config,
+        );
     }
+
+    println!("starting coordinator ({} task x policy routes)...", pairs.len());
+    let coord = Coordinator::start(dir.clone(), &pairs, config)?;
 
     if overload > 0.0 {
         return serve_bench_overload(
@@ -530,51 +534,9 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
             for m in &routes {
                 let rows = &payloads[ti];
                 let coord = &coord;
-                handles.push(s.spawn(move || -> Result<()> {
-                    let mut inflight = std::collections::VecDeque::new();
-                    let mut done = 0usize;
-                    let mut submitted = 0usize;
-                    let mut last_progress = Instant::now();
-                    while done < requests {
-                        while submitted < requests && inflight.len() < concurrency {
-                            let (ids, tys) = rows[submitted % rows.len()].clone();
-                            let spec = zqhero::coordinator::RequestSpec::task(t)
-                                .policy(m)
-                                .ids(ids)
-                                .type_ids(tys);
-                            match coord.submit(spec) {
-                                Ok(rx) => {
-                                    inflight.push_back(rx);
-                                    submitted += 1;
-                                    last_progress = Instant::now();
-                                }
-                                Err(_) => break, // backpressure: drain first
-                            }
-                        }
-                        if let Some(rx) = inflight.pop_front() {
-                            let resp = rx.recv().context("response channel closed")?;
-                            anyhow::ensure!(
-                                resp.error.is_none(),
-                                "request failed: {:?}",
-                                resp.error
-                            );
-                            done += 1;
-                            last_progress = Instant::now();
-                        } else {
-                            // backpressured with nothing of ours in
-                            // flight: another route owns the queue —
-                            // wait, but not forever (submit errors are
-                            // also how a stopped coordinator presents)
-                            anyhow::ensure!(
-                                last_progress.elapsed() < Duration::from_secs(30),
-                                "no progress for 30s ({done}/{requests} done) — \
-                                 coordinator stalled or stopped"
-                            );
-                            std::thread::sleep(Duration::from_micros(200));
-                        }
-                    }
-                    Ok(())
-                }));
+                handles.push(
+                    s.spawn(move || drive_closed_loop(coord, t, m, rows, requests, concurrency)),
+                );
             }
         }
         for h in handles {
@@ -617,6 +579,175 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
             Ok(()) => println!("\nwrote BENCH_replica_scaling_smoke.json"),
             Err(e) => eprintln!("could not write BENCH_replica_scaling_smoke.json: {e}"),
         }
+    }
+    Ok(())
+}
+
+/// Dev-split rows per task, the request payloads of every serve-bench
+/// variant.  Rows come back at the container length (the model max, PAD
+/// tail included) — the mixed-length smoke trims them to real lengths.
+fn load_payloads(
+    man: &Manifest,
+    tasks: &[String],
+    requests: usize,
+) -> Result<Vec<Vec<(Vec<i32>, Vec<i32>)>>> {
+    let mut payloads = Vec::new();
+    for t in tasks {
+        let task = man.task(t)?;
+        let split = zqhero::data::Split::load(man, task, "dev")?;
+        let rows: Vec<(Vec<i32>, Vec<i32>)> = (0..split.len().min(requests))
+            .map(|i| {
+                let (a, b) = split.row(i);
+                (a.to_vec(), b.to_vec())
+            })
+            .collect();
+        payloads.push(rows);
+    }
+    Ok(payloads)
+}
+
+/// One closed loop over a (task, route) through the shared
+/// `zqhero::bench::closed_loop` driver — the CLI smoke and the e2e bench
+/// measure identical serving behavior.
+fn drive_closed_loop(
+    coord: &Coordinator,
+    task: &str,
+    route: &str,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    requests: usize,
+    concurrency: usize,
+) -> Result<()> {
+    let policy = zqhero::coordinator::PolicyRef::Named(route.to_string());
+    zqhero::bench::closed_loop(coord, task, &policy, rows, requests, concurrency).map(|_| ())
+}
+
+/// Length-aware serving smoke (`serve-bench --mixed-length`): drive the
+/// same dev rows through two fresh coordinators — once padded to the
+/// model max client-side (the pre-grid single-seq baseline) and once at
+/// their real lengths (bucketed) — and report each run's padded-token
+/// volume, padding efficiency, and wall time.  Writes
+/// BENCH_seq_buckets_smoke.json; the full mixed-length sweep with the
+/// >=2x padded-token reduction assertion lives in benches/e2e_serving.rs
+/// (BENCH_seq_buckets.json).
+#[allow(clippy::too_many_arguments)]
+fn serve_bench_seq_buckets(
+    dir: &std::path::Path,
+    man: &Manifest,
+    tasks: &[String],
+    routes: &[String],
+    payloads: &[Vec<(Vec<i32>, Vec<i32>)>],
+    requests: usize,
+    concurrency: usize,
+    config: ServerConfig,
+) -> Result<()> {
+    use zqhero::json::{self, Value};
+    let pairs: Vec<(String, String)> = tasks
+        .iter()
+        .flat_map(|t| routes.iter().map(move |m| (t.clone(), m.clone())))
+        .collect();
+    println!(
+        "mixed-length smoke: {requests} requests per route, seq buckets {:?}",
+        man.seq_buckets
+    );
+    if man.num_seq_buckets() == 1 {
+        println!(
+            "note: single-seq manifest (format_version 2 artifacts) — both variants will \
+             pay identical padded-token volume"
+        );
+    }
+
+    let mut variants: Vec<(String, Value)> = Vec::new();
+    let mut padded_volume: Vec<(String, u64)> = Vec::new();
+    for (label, trim) in [("padded", false), ("bucketed", true)] {
+        let rows_by_task: Vec<Vec<(Vec<i32>, Vec<i32>)>> = payloads
+            .iter()
+            .map(|rows| {
+                rows.iter()
+                    .map(|(ids, tys)| {
+                        if trim {
+                            zqhero::data::trim_pad_tail(ids, tys)
+                        } else {
+                            (ids.clone(), tys.clone())
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        // fresh coordinator per variant so the recorders are comparable
+        let coord = Coordinator::start(dir.to_path_buf(), &pairs, config.clone())?;
+        let t0 = Instant::now();
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for (ti, t) in tasks.iter().enumerate() {
+                for m in routes {
+                    let rows = &rows_by_task[ti];
+                    let coord = &coord;
+                    handles.push(s.spawn(move || {
+                        drive_closed_loop(coord, t, m, rows, requests, concurrency)
+                    }));
+                }
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow::anyhow!("load thread panicked"))??;
+            }
+            Ok(())
+        })?;
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = coord.recorder.snapshot();
+        let (real, padded) = zqhero::bench::padding_totals(&snap);
+        let per_policy: Vec<(String, Value)> = snap
+            .iter()
+            .map(|(name, s)| {
+                (
+                    name.clone(),
+                    json::obj(vec![
+                        ("padded_tokens", json::num(s.padded_tokens as f64)),
+                        ("pad_efficiency", json::num(s.padding_efficiency())),
+                        ("p50_ms", json::num(s.latency.percentile_us(0.50) as f64 / 1e3)),
+                        ("p99_ms", json::num(s.latency.percentile_us(0.99) as f64 / 1e3)),
+                    ]),
+                )
+            })
+            .collect();
+        println!(
+            "  {label:8} {padded:>10} padded tokens, {real:>10} real ({:.0}% efficient), \
+             {wall:.1}s wall",
+            100.0 * real as f64 / padded.max(1) as f64
+        );
+        print!("{}", coord.recorder.render());
+        variants.push((
+            label.to_string(),
+            json::obj(vec![
+                ("padded_tokens", json::num(padded as f64)),
+                ("real_tokens", json::num(real as f64)),
+                ("pad_efficiency", json::num(real as f64 / padded.max(1) as f64)),
+                ("wall_s", json::num(wall)),
+                ("policies", Value::Object(per_policy)),
+            ]),
+        ));
+        padded_volume.push((label.to_string(), padded));
+    }
+
+    let base = padded_volume.iter().find(|(l, _)| l == "padded").map(|(_, v)| *v).unwrap_or(0);
+    let bucketed =
+        padded_volume.iter().find(|(l, _)| l == "bucketed").map(|(_, v)| *v).unwrap_or(0);
+    let reduction = base as f64 / bucketed.max(1) as f64;
+    println!("\npadded-token reduction (padded / bucketed): {reduction:.2}x");
+    let report = json::obj(vec![
+        ("bench", json::s("seq_buckets_smoke")),
+        ("tasks", Value::Array(tasks.iter().map(|t| json::s(t)).collect())),
+        ("routes", Value::Array(routes.iter().map(|r| json::s(r)).collect())),
+        ("requests_per_route", json::num(requests as f64)),
+        (
+            "seq_buckets",
+            Value::Array(man.seq_buckets.iter().map(|s| json::num(*s as f64)).collect()),
+        ),
+        ("variants", Value::Object(variants)),
+        ("padded_token_reduction", json::num(reduction)),
+    ]);
+    match std::fs::write("BENCH_seq_buckets_smoke.json", json::to_string_pretty(&report)) {
+        Ok(()) => println!("wrote BENCH_seq_buckets_smoke.json"),
+        Err(e) => eprintln!("could not write BENCH_seq_buckets_smoke.json: {e}"),
     }
     Ok(())
 }

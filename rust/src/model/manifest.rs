@@ -367,8 +367,11 @@ pub struct ModeSpec {
     pub name: String,
     pub switches: Switches,
     pub params: Vec<ParamSpec>,
-    /// bucket (batch size) -> artifact path relative to the artifacts root.
-    pub artifacts: BTreeMap<usize, String>,
+    /// (seq bucket, batch bucket) -> artifact path relative to the
+    /// artifacts root.  Format_version 2 manifests key artifacts by batch
+    /// bucket only (`"b16"`); the loader maps those to `(seq, batch)` so a
+    /// v2 manifest serves identically through the grid-shaped tables.
+    pub artifacts: BTreeMap<(usize, usize), String>,
 }
 
 #[derive(Debug, Clone)]
@@ -408,7 +411,15 @@ pub struct CalibSpec {
 pub struct Manifest {
     pub root: PathBuf,
     pub model: ModelCfg,
+    /// Maximum (and default) sequence length — the last seq bucket.
     pub seq: usize,
+    /// Ascending sequence-length buckets (format_version 3); a manifest
+    /// without the `seq_buckets` key (format_version 2) collapses to the
+    /// single-bucket axis `[seq]` and serves identically to before the
+    /// grid existed.  Invariants enforced at load: non-empty, strictly
+    /// ascending, last element == `seq`.
+    pub seq_buckets: Vec<usize>,
+    /// Ascending batch-size buckets.
     pub buckets: Vec<usize>,
     pub modes: BTreeMap<String, ModeSpec>,
     /// Mode order as listed in the manifest (fp, m1, m2, m3).
@@ -486,6 +497,43 @@ impl Manifest {
             .iter()
             .map(|b| b.as_usize().context("bucket"))
             .collect::<Result<Vec<_>>>()?;
+        // `bucket_for`'s first-fit scan and the serving-side max_batch
+        // validation both read `buckets.last()` as the largest — enforce
+        // the ordering here rather than assuming it
+        if !buckets.windows(2).all(|w| w[0] < w[1]) {
+            bail!("buckets must be strictly ascending (got {buckets:?})");
+        }
+
+        // the sequence axis is needed before the modes: artifact keys
+        // resolve against it (a bare "bN" key means (seq, N))
+        let seq = get_usize(&v, "seq")?;
+        let seq_buckets = match v.get("seq_buckets") {
+            // format_version 2 (and earlier): one implicit bucket — the
+            // full sequence length, exactly the pre-grid behaviour
+            None => vec![seq],
+            Some(sv) => {
+                let sb = sv
+                    .as_array()
+                    .context("seq_buckets not an array")?
+                    .iter()
+                    .map(|b| b.as_usize().context("seq bucket"))
+                    .collect::<Result<Vec<_>>>()?;
+                if sb.is_empty() {
+                    bail!("seq_buckets must not be empty");
+                }
+                if !sb.windows(2).all(|w| w[0] < w[1]) {
+                    bail!("seq_buckets must be strictly ascending (got {sb:?})");
+                }
+                if *sb.last().expect("non-empty") != seq {
+                    bail!(
+                        "largest seq bucket {} != seq {seq} (every admissible request \
+                         must fit the top bucket)",
+                        sb.last().expect("non-empty")
+                    );
+                }
+                sb
+            }
+        };
 
         let mut modes = BTreeMap::new();
         let mut mode_order = Vec::new();
@@ -504,11 +552,46 @@ impl Manifest {
             };
             let mut artifacts = BTreeMap::new();
             for (bk, pv) in mv.req("artifacts")?.as_object().context("artifacts")? {
-                let bucket: usize = bk
-                    .strip_prefix('b')
-                    .and_then(|s| s.parse().ok())
-                    .with_context(|| format!("bad bucket key {bk}"))?;
-                artifacts.insert(bucket, pv.as_str().context("artifact path")?.to_string());
+                // grid key "s<seq>b<batch>" (format_version 3) or legacy
+                // "b<batch>" (format_version 2), which pins the full seq
+                let cell: (usize, usize) = if let Some(rest) = bk.strip_prefix('s') {
+                    let (s, b) = rest
+                        .split_once('b')
+                        .with_context(|| format!("bad artifact key {bk} (want sNbM)"))?;
+                    (
+                        s.parse().with_context(|| format!("bad seq in artifact key {bk}"))?,
+                        b.parse().with_context(|| format!("bad batch in artifact key {bk}"))?,
+                    )
+                } else {
+                    let bucket: usize = bk
+                        .strip_prefix('b')
+                        .and_then(|s| s.parse().ok())
+                        .with_context(|| format!("bad bucket key {bk}"))?;
+                    (seq, bucket)
+                };
+                if !seq_buckets.contains(&cell.0) {
+                    bail!(
+                        "artifact key {bk}: seq bucket {} not in seq_buckets {seq_buckets:?}",
+                        cell.0
+                    );
+                }
+                if !buckets.contains(&cell.1) {
+                    bail!(
+                        "artifact key {bk}: batch bucket {} not in buckets {buckets:?}",
+                        cell.1
+                    );
+                }
+                let path = pv.as_str().context("artifact path")?.to_string();
+                if artifacts.insert(cell, path).is_some() {
+                    // a legacy "bN" and a grid "sSbN" key can collide on
+                    // the same cell; last-wins would silently serve one
+                    // of two conflicting artifacts
+                    bail!(
+                        "artifact key {bk}: duplicate cell (seq {}, bucket {})",
+                        cell.0,
+                        cell.1
+                    );
+                }
             }
             mode_order.push(name.clone());
             modes.insert(
@@ -580,7 +663,8 @@ impl Manifest {
         let mut man = Manifest {
             root: artifacts_dir.to_path_buf(),
             model,
-            seq: get_usize(&v, "seq")?,
+            seq,
+            seq_buckets,
             buckets,
             modes,
             mode_order,
@@ -757,6 +841,10 @@ impl Manifest {
         self.buckets.len()
     }
 
+    pub fn num_seq_buckets(&self) -> usize {
+        self.seq_buckets.len()
+    }
+
     /// Resolve a task name to its dense id (position in `task_order`).
     pub fn task_id(&self, name: &str) -> Result<TaskId> {
         intern_position(&self.task_order, name)
@@ -816,11 +904,22 @@ impl Manifest {
             .with_context(|| format!("bucket {bucket} not in manifest buckets {:?}", self.buckets))
     }
 
+    /// Dense index of an exact seq bucket (for `Vec`-indexed exe tables).
+    pub fn seq_bucket_index(&self, seq_bucket: usize) -> Result<usize> {
+        self.seq_buckets.iter().position(|b| *b == seq_bucket).with_context(|| {
+            format!("seq bucket {seq_bucket} not in manifest seq_buckets {:?}", self.seq_buckets)
+        })
+    }
+
     pub fn path(&self, rel: &str) -> PathBuf {
         self.root.join(rel)
     }
 
     /// Smallest bucket >= n, or the largest bucket if n exceeds all.
+    /// NB: the clamp exists for cold-path convenience only — serving
+    /// validates `max_batch` against the largest bucket at startup
+    /// (`ServerConfig` / `ConfigError`), so a dispatched batch never
+    /// silently shrinks through here.
     pub fn bucket_for(&self, n: usize) -> usize {
         for b in &self.buckets {
             if *b >= n {
@@ -829,21 +928,33 @@ impl Manifest {
         }
         *self.buckets.last().expect("no buckets")
     }
+
+    /// Smallest seq bucket >= n tokens, or the largest if n exceeds all
+    /// (admission bounds request length by `seq`, the top bucket, so the
+    /// fallback only triggers for cold-path callers).
+    pub fn seq_bucket_for(&self, n: usize) -> usize {
+        for b in &self.seq_buckets {
+            if *b >= n {
+                return *b;
+            }
+        }
+        *self.seq_buckets.last().expect("no seq buckets")
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn bucket_for_picks_smallest_fit() {
-        let man = Manifest {
+    fn bare_manifest() -> Manifest {
+        Manifest {
             root: PathBuf::new(),
             model: ModelCfg {
                 vocab_size: 1, hidden: 1, layers: 1, heads: 1, ffn: 1,
                 max_seq: 1, type_vocab: 1, num_labels: 1, ln_eps: 1e-12,
             },
             seq: 128,
+            seq_buckets: vec![16, 32, 64, 128],
             buckets: vec![1, 4, 8, 16],
             modes: BTreeMap::new(),
             mode_order: vec![],
@@ -853,7 +964,12 @@ mod tests {
             policies: BTreeMap::new(),
             policy_order: vec![],
             micro: BTreeMap::new(),
-        };
+        }
+    }
+
+    #[test]
+    fn bucket_for_picks_smallest_fit() {
+        let man = bare_manifest();
         assert_eq!(man.bucket_for(1), 1);
         assert_eq!(man.bucket_for(2), 4);
         assert_eq!(man.bucket_for(4), 4);
@@ -862,24 +978,32 @@ mod tests {
     }
 
     #[test]
+    fn seq_bucket_for_picks_smallest_fit_and_indexes() {
+        let man = bare_manifest();
+        assert_eq!(man.seq_bucket_for(1), 16);
+        assert_eq!(man.seq_bucket_for(16), 16);
+        assert_eq!(man.seq_bucket_for(17), 32);
+        assert_eq!(man.seq_bucket_for(100), 128);
+        // cold-path clamp, same contract as bucket_for
+        assert_eq!(man.seq_bucket_for(999), 128);
+        assert_eq!(man.seq_bucket_index(64).unwrap(), 2);
+        assert!(man.seq_bucket_index(65).is_err());
+        assert_eq!(man.num_seq_buckets(), 4);
+
+        // single-bucket axis (format_version 2 fallback shape): every
+        // length lands on the full seq, the pre-grid behaviour
+        let mut man = bare_manifest();
+        man.seq_buckets = vec![128];
+        assert_eq!(man.seq_bucket_for(1), 128);
+        assert_eq!(man.seq_bucket_for(128), 128);
+        assert_eq!(man.seq_bucket_index(128).unwrap(), 0);
+    }
+
+    #[test]
     fn route_ids_are_dense_and_roundtrip() {
-        let man = Manifest {
-            root: PathBuf::new(),
-            model: ModelCfg {
-                vocab_size: 1, hidden: 1, layers: 1, heads: 1, ffn: 1,
-                max_seq: 1, type_vocab: 1, num_labels: 1, ln_eps: 1e-12,
-            },
-            seq: 128,
-            buckets: vec![1, 4, 8, 16],
-            modes: BTreeMap::new(),
-            mode_order: vec!["fp".into(), "m1".into(), "m3".into()],
-            calib: CalibSpec { artifact: String::new(), batch: 16, params: vec![], stats: vec![] },
-            tasks: BTreeMap::new(),
-            task_order: vec!["cola".into(), "sst2".into()],
-            policies: BTreeMap::new(),
-            policy_order: vec![],
-            micro: BTreeMap::new(),
-        };
+        let mut man = bare_manifest();
+        man.mode_order = vec!["fp".into(), "m1".into(), "m3".into()];
+        man.task_order = vec!["cola".into(), "sst2".into()];
         assert_eq!(man.task_id("sst2").unwrap(), TaskId(1));
         assert_eq!(man.mode_id("m3").unwrap(), ModeId(2));
         assert_eq!(man.task_name(TaskId(1)), "sst2");

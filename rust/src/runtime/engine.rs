@@ -185,13 +185,14 @@ impl Default for EngineOptions {
 impl Engine {
     /// Spawn one engine replica and wait for it to become ready: it loads
     /// the manifest, uploads every (task, mode) checkpoint in `preload`,
-    /// and pre-compiles the executables for the requested (mode, bucket)
-    /// pairs so the serving hot path never compiles.  `pool` runs
-    /// completion callbacks; `staging` receives recycled host buffers.
+    /// and pre-compiles the executables for the requested (mode, seq
+    /// bucket, batch bucket) grid cells so the serving hot path never
+    /// compiles.  `pool` runs completion callbacks; `staging` receives
+    /// recycled host buffers.
     pub fn spawn(
         artifacts: PathBuf,
         preload: Vec<(String, String, Container)>,
-        precompile: Vec<(String, usize)>,
+        precompile: Vec<(String, usize, usize)>,
         pool: Arc<ThreadPool>,
         staging: Arc<StagingPool>,
         options: EngineOptions,
@@ -206,7 +207,7 @@ impl Engine {
     fn spawn_replica(
         artifacts: PathBuf,
         preload: Arc<Vec<(String, String, Container)>>,
-        precompile: Vec<(String, usize)>,
+        precompile: Vec<(String, usize, usize)>,
         pool: Arc<ThreadPool>,
         staging: Arc<StagingPool>,
         options: EngineOptions,
@@ -270,7 +271,9 @@ impl Engine {
 
     /// Synchronous convenience call (CLI paths, tests).  `route` is a
     /// policy name (uniform mode names work).  `ids`/`type_ids` are
-    /// `[bucket * seq]`; the mask is derived from PAD positions.
+    /// `[bucket * seq_bucket]` — the seq bucket derives from the payload
+    /// length and must exist in the manifest grid; the mask is derived
+    /// from PAD positions.
     pub fn infer_blocking(
         &self,
         task: &str,
@@ -279,7 +282,12 @@ impl Engine {
         ids: Vec<i32>,
         type_ids: Vec<i32>,
     ) -> Result<InferDone> {
-        let seq = ids.len() / bucket.max(1);
+        if bucket == 0 || ids.len() % bucket != 0 {
+            // deriving seq from a ragged payload would silently truncate
+            // trailing tokens at from_parts' resize
+            anyhow::bail!("ids len {} not a multiple of bucket {bucket}", ids.len());
+        }
+        let seq = ids.len() / bucket;
         let staging = StagingBuf::from_parts(bucket, seq, ids, type_ids);
         let (reply, rx) = channel();
         self.submit(InferJob {
@@ -439,7 +447,7 @@ impl EnginePool {
     pub fn spawn(
         artifacts: PathBuf,
         preload: Vec<(String, String, Container)>,
-        precompile: Vec<(String, usize)>,
+        precompile: Vec<(String, usize, usize)>,
         pool: Arc<ThreadPool>,
         staging: Arc<StagingPool>,
         options: EngineOptions,
@@ -591,7 +599,7 @@ fn retire(rt: &Runtime, f: InFlight, pool: &ThreadPool, replica: usize) {
 fn engine_main(
     artifacts: PathBuf,
     preload: Arc<Vec<(String, String, Container)>>,
-    precompile: Vec<(String, usize)>,
+    precompile: Vec<(String, usize, usize)>,
     rx: Receiver<Msg>,
     ready_tx: Sender<Result<RouteTables>>,
     pool: Arc<ThreadPool>,
@@ -610,8 +618,8 @@ fn engine_main(
         for (task, mode, ckpt) in preload.iter() {
             rt.upload_checkpoint(task, mode, ckpt)?;
         }
-        for (mode, bucket) in &precompile {
-            rt.model_exe(mode, *bucket)?;
+        for (mode, seq, bucket) in &precompile {
+            rt.model_exe(mode, *seq, *bucket)?;
         }
         let man = &rt.manifest;
         Ok(RouteTables {
@@ -691,8 +699,11 @@ fn engine_main(
         };
         let t_job = Instant::now();
         // Stage 1: upload this batch's inputs (overlaps the previous
-        // batch's device execution), then recycle the host buffers.
-        let uploaded = rt.upload_inputs(host.bucket, &host.ids, &host.type_ids, &host.mask);
+        // batch's device execution), then recycle the host buffers.  The
+        // staging buffer carries its seq bucket, so a short batch uploads
+        // `bucket * seq_bucket` tokens, not `bucket * max_seq`.
+        let uploaded =
+            rt.upload_inputs(host.seq, host.bucket, &host.ids, &host.type_ids, &host.mask);
         let upload_us = t_job.elapsed().as_micros() as u64;
         staging.put(host);
         let inputs = match uploaded {

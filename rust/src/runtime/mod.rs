@@ -12,11 +12,11 @@
 //! dispatcher with per-group FIFO pinning (DESIGN.md §5.7).
 //!
 //! Hot-path tables are dense: executables live in a
-//! `[mode][bucket]`-indexed `Vec` and checkpoints in `[task][mode]`, both
-//! sized from the manifest, so steady-state dispatch is two array indexes
-//! — no string hashing, no `HashMap` probes (DESIGN.md §5.2).  The
-//! string-keyed methods remain as cold-path wrappers that resolve names to
-//! `TaskId`/`ModeId` once.
+//! `[mode][seq_bucket][batch_bucket]`-indexed `Vec` and checkpoints in
+//! `[task][mode]`, both sized from the manifest, so steady-state dispatch
+//! is three array indexes — no string hashing, no `HashMap` probes
+//! (DESIGN.md §5.2, §5.9).  The string-keyed methods remain as cold-path
+//! wrappers that resolve names to `TaskId`/`ModeId` once.
 
 pub mod engine;
 pub mod staging;
@@ -54,6 +54,7 @@ pub struct DeviceCheckpoint {
 
 /// Device-resident input buffers for one batch (stage 1 of the pipeline).
 pub struct InputBufs {
+    pub seq: usize,
     pub bucket: usize,
     ids: xla::PjRtBuffer,
     type_ids: xla::PjRtBuffer,
@@ -70,8 +71,9 @@ pub struct PendingOutputs {
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    /// `[mode][bucket_index]` -> compiled model executable.
-    exes: Vec<Vec<Option<Exe>>>,
+    /// `[mode][seq_bucket_index][bucket_index]` -> compiled model
+    /// executable (the (seq, batch) grid of DESIGN.md §5.9).
+    exes: Vec<Vec<Vec<Option<Exe>>>>,
     /// misc executables (calibration artifact, micro benches) by path.
     raw_exes: HashMap<String, Exe>,
     /// `[task][mode]` -> device-resident weights.
@@ -91,7 +93,11 @@ impl Runtime {
     pub fn new(manifest: Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
         let exes = (0..manifest.num_modes())
-            .map(|_| (0..manifest.num_buckets()).map(|_| None).collect())
+            .map(|_| {
+                (0..manifest.num_seq_buckets())
+                    .map(|_| (0..manifest.num_buckets()).map(|_| None).collect())
+                    .collect()
+            })
             .collect();
         let ckpts = (0..manifest.num_tasks())
             .map(|_| (0..manifest.num_modes()).map(|_| None).collect())
@@ -120,26 +126,33 @@ impl Runtime {
         })
     }
 
-    /// Compile (and cache) the model executable for (mode, bucket).
-    pub fn model_exe(&mut self, mode: &str, bucket: usize) -> Result<&Exe> {
+    /// Compile (and cache) the model executable for (mode, seq, bucket).
+    pub fn model_exe(&mut self, mode: &str, seq: usize, bucket: usize) -> Result<&Exe> {
         let mode = self.manifest.mode_id(mode)?;
-        self.model_exe_id(mode, bucket)
+        self.model_exe_id(mode, seq, bucket)
     }
 
-    /// Dense hot-path variant: the executable slot is a `Vec` index.
-    pub fn model_exe_id(&mut self, mode: ModeId, bucket: usize) -> Result<&Exe> {
+    /// Dense hot-path variant: the executable slot is two `Vec` indexes
+    /// into the (seq bucket, batch bucket) grid.
+    pub fn model_exe_id(&mut self, mode: ModeId, seq: usize, bucket: usize) -> Result<&Exe> {
+        let si = self.manifest.seq_bucket_index(seq).with_context(|| {
+            format!("mode {} has no seq bucket {seq}", self.manifest.mode_name(mode))
+        })?;
         let bi = self.manifest.bucket_index(bucket).with_context(|| {
             format!("mode {} has no bucket {bucket}", self.manifest.mode_name(mode))
         })?;
-        if self.exes[mode.index()][bi].is_none() {
+        if self.exes[mode.index()][si][bi].is_none() {
             let spec = self.manifest.mode_by_id(mode);
-            let rel = spec.artifacts.get(&bucket).with_context(|| {
-                format!("mode {} has no bucket {bucket}", self.manifest.mode_name(mode))
+            let rel = spec.artifacts.get(&(seq, bucket)).with_context(|| {
+                format!(
+                    "mode {} has no artifact for (seq {seq}, bucket {bucket})",
+                    self.manifest.mode_name(mode)
+                )
             })?;
             let exe = Self::compile_hlo_file(&self.client, &self.manifest.path(rel))?;
-            self.exes[mode.index()][bi] = Some(exe);
+            self.exes[mode.index()][si][bi] = Some(exe);
         }
-        Ok(self.exes[mode.index()][bi].as_ref().expect("just compiled"))
+        Ok(self.exes[mode.index()][si][bi].as_ref().expect("just compiled"))
     }
 
     /// Compile (and cache) an arbitrary artifact by manifest-relative path.
@@ -247,16 +260,18 @@ impl Runtime {
     // ---- pipelined hot path (engine thread): upload | execute | readback
 
     /// Stage 1: copy one batch's host arrays into fresh device buffers.
+    /// `seq` is the batch's seq bucket — short batches upload (and later
+    /// execute) `bucket * seq_bucket` tokens, not `bucket * max_seq`.
     /// Only `&self` — it can run while a previous batch's outputs are
     /// still pending on the device.
     pub fn upload_inputs(
         &self,
+        seq: usize,
         bucket: usize,
         ids: &[i32],
         type_ids: &[i32],
         mask: &[f32],
     ) -> Result<InputBufs> {
-        let seq = self.manifest.seq;
         if ids.len() != bucket * seq {
             bail!("ids len {} != bucket {bucket} * seq {seq}", ids.len());
         }
@@ -265,6 +280,7 @@ impl Runtime {
         }
         let up = |e: xla::Error| anyhow::anyhow!("{e}");
         Ok(InputBufs {
+            seq,
             bucket,
             ids: self.client.buffer_from_host_buffer(ids, &[bucket, seq], None).map_err(up)?,
             type_ids: self
@@ -284,8 +300,8 @@ impl Runtime {
         mode: ModeId,
         inputs: &InputBufs,
     ) -> Result<PendingOutputs> {
-        let bucket = inputs.bucket;
-        self.model_exe_id(mode, bucket)?; // ensure compiled before borrowing ckpt
+        let (seq, bucket) = (inputs.seq, inputs.bucket);
+        self.model_exe_id(mode, seq, bucket)?; // ensure compiled before borrowing ckpt
         let ckpt = self.ckpts[task.index()][mode.index()].as_ref().with_context(|| {
             format!(
                 "checkpoint ({},{}) not uploaded",
@@ -299,8 +315,9 @@ impl Runtime {
         args.push(&inputs.type_ids);
         args.push(&inputs.mask);
 
+        let si = self.manifest.seq_bucket_index(seq)?;
         let bi = self.manifest.bucket_index(bucket)?;
-        let exe = self.exes[mode.index()][bi].as_ref().expect("compiled above");
+        let exe = self.exes[mode.index()][si][bi].as_ref().expect("compiled above");
         let results = exe.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
         Ok(PendingOutputs { results })
     }
@@ -315,9 +332,11 @@ impl Runtime {
     }
 
     /// Run a model executable with resident weights + fresh input buffers.
-    /// `ids`/`type_ids` are `[bucket * seq]` i32, `mask` `[bucket * seq]`
-    /// f32.  Cold-path convenience: resolves names, then runs the three
-    /// pipeline stages back-to-back.
+    /// `ids`/`type_ids` are `[bucket * seq_bucket]` i32, `mask`
+    /// `[bucket * seq_bucket]` f32 — the seq bucket is derived from the
+    /// payload length (`ids.len() / bucket`) and must name a manifest seq
+    /// bucket.  Cold-path convenience: resolves names, then runs the
+    /// three pipeline stages back-to-back.
     pub fn infer(
         &mut self,
         task: &str,
@@ -341,7 +360,12 @@ impl Runtime {
         type_ids: &[i32],
         mask: &[f32],
     ) -> Result<Tensor> {
-        let inputs = self.upload_inputs(bucket, ids, type_ids, mask)?;
+        if bucket == 0 || ids.len() % bucket != 0 {
+            bail!("ids len {} not a multiple of bucket {bucket}", ids.len());
+        }
+        let seq = ids.len() / bucket;
+        self.manifest.seq_bucket_index(seq)?; // fail with the known-bucket list
+        let inputs = self.upload_inputs(seq, bucket, ids, type_ids, mask)?;
         let pending = self.execute_model(task, mode, &inputs)?;
         self.readback_logits(pending)
     }
@@ -421,8 +445,12 @@ impl Runtime {
     }
 
     pub fn loaded_exe_count(&self) -> usize {
-        let model: usize =
-            self.exes.iter().map(|row| row.iter().filter(|e| e.is_some()).count()).sum();
+        let model: usize = self
+            .exes
+            .iter()
+            .flat_map(|grid| grid.iter())
+            .map(|row| row.iter().filter(|e| e.is_some()).count())
+            .sum();
         model + self.raw_exes.len()
     }
 }

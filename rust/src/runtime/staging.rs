@@ -1,13 +1,16 @@
-//! Pooled host staging buffers for batch assembly (DESIGN.md §5.3).
+//! Pooled host staging buffers for batch assembly (DESIGN.md §5.3, §5.9).
 //!
 //! Every admitted batch needs three host arrays — `ids`, `type_ids`,
-//! `mask`, each `[bucket * seq]` — that exist only long enough to be
-//! copied into device buffers.  Allocating them per batch puts the
+//! `mask`, each `[bucket * seq_bucket]` — that exist only long enough to
+//! be copied into device buffers.  Allocating them per batch puts the
 //! allocator on the steady-state path; instead the batcher thread checks
-//! a `StagingBuf` out of a per-bucket shelf, fills it in place, and the
-//! engine thread returns it to the shelf right after the host→device
-//! upload.  Shelves are bounded so a burst cannot pin unbounded memory:
-//! overflow buffers are simply dropped and the shelf refills on demand.
+//! a `StagingBuf` out of a per-(seq bucket, batch bucket) shelf, fills it
+//! in place, and the engine thread returns it to the shelf right after
+//! the host→device upload.  Shelves are keyed by the same grid as the
+//! executable tables, so a short batch stages `bucket * seq_bucket`
+//! tokens — not `bucket * max_seq`.  Shelves are bounded so a burst
+//! cannot pin unbounded memory: overflow buffers are simply dropped and
+//! the shelf refills on demand.
 
 use std::sync::Mutex;
 
@@ -15,12 +18,14 @@ use crate::data::PAD;
 
 /// One reusable host-side batch: `bucket * seq` token ids / type ids and
 /// the derived attention mask.  `real` tracks how many rows were filled
-/// before padding.
+/// before padding; `real_tokens` how many caller tokens those rows
+/// carried before per-row padding (the padding-efficiency numerator).
 #[derive(Debug)]
 pub struct StagingBuf {
     pub bucket: usize,
     pub seq: usize,
     pub real: usize,
+    pub real_tokens: usize,
     pub ids: Vec<i32>,
     pub type_ids: Vec<i32>,
     pub mask: Vec<f32>,
@@ -32,6 +37,7 @@ impl StagingBuf {
             bucket,
             seq,
             real: 0,
+            real_tokens: 0,
             ids: Vec::with_capacity(bucket * seq),
             type_ids: Vec::with_capacity(bucket * seq),
             mask: Vec::with_capacity(bucket * seq),
@@ -47,11 +53,26 @@ impl StagingBuf {
     /// rows were passed.
     pub fn from_parts(bucket: usize, seq: usize, ids: Vec<i32>, type_ids: Vec<i32>) -> Self {
         let real = ids.len().div_ceil(seq.max(1)).min(bucket);
-        let mut buf = StagingBuf { bucket, seq, real, ids, type_ids, mask: Vec::new() };
+        let real_tokens = ids.len().min(bucket * seq);
+        let mut buf = StagingBuf {
+            bucket,
+            seq,
+            real,
+            real_tokens,
+            ids,
+            type_ids,
+            mask: Vec::new(),
+        };
         buf.ids.resize(bucket * seq, PAD);
         buf.type_ids.resize(bucket * seq, 0);
         buf.mask = buf.ids.iter().map(|t| if *t == PAD { 0.0 } else { 1.0 }).collect();
         buf
+    }
+
+    /// Total token slots the device sees (`bucket * seq` — the
+    /// padding-efficiency denominator).
+    pub fn padded_tokens(&self) -> usize {
+        self.bucket * self.seq
     }
 
     /// Clear contents, keeping capacity (called on checkout).
@@ -59,18 +80,25 @@ impl StagingBuf {
         self.bucket = bucket;
         self.seq = seq;
         self.real = 0;
+        self.real_tokens = 0;
         self.ids.clear();
         self.type_ids.clear();
         self.mask.clear();
     }
 
-    /// Append one request row (`seq` tokens each).
+    /// Append one request row of up to `seq` real tokens; the row is
+    /// padded to the seq bucket in place (requests arrive unpadded —
+    /// admission stopped padding to the model max, DESIGN.md §5.9).
     pub fn push_row(&mut self, ids: &[i32], type_ids: &[i32]) {
-        debug_assert_eq!(ids.len(), self.seq);
-        debug_assert_eq!(type_ids.len(), self.seq);
+        debug_assert!(ids.len() <= self.seq, "row longer than seq bucket");
+        debug_assert_eq!(type_ids.len(), ids.len());
+        let row_end = self.ids.len() + self.seq;
         self.ids.extend_from_slice(ids);
+        self.ids.resize(row_end, PAD);
         self.type_ids.extend_from_slice(type_ids);
+        self.type_ids.resize(row_end, 0);
         self.real += 1;
+        self.real_tokens += ids.len();
     }
 
     /// Pad to the bucket and derive the attention mask in one pass.
@@ -83,49 +111,52 @@ impl StagingBuf {
     }
 }
 
-/// Bounded per-bucket free lists of `StagingBuf`s, shared between the
-/// batcher thread (checkout + fill) and the engine thread (return after
-/// upload).  Lock scope is a `Vec` push/pop — nanoseconds next to the
-/// memcpy the buffer exists for.
+/// Bounded free lists of `StagingBuf`s over the (seq bucket, batch
+/// bucket) grid, shared between the batcher thread (checkout + fill) and
+/// the engine thread (return after upload).  Lock scope is a `Vec`
+/// push/pop — nanoseconds next to the memcpy the buffer exists for.
 pub struct StagingPool {
+    seq_buckets: Vec<usize>,
     buckets: Vec<usize>,
-    seq: usize,
-    per_bucket_cap: usize,
+    per_cell_cap: usize,
+    /// `[seq_index * buckets.len() + bucket_index]` — one shelf per cell.
     shelves: Vec<Mutex<Vec<StagingBuf>>>,
 }
 
 impl StagingPool {
-    pub fn new(buckets: &[usize], seq: usize, per_bucket_cap: usize) -> Self {
+    pub fn new(seq_buckets: &[usize], buckets: &[usize], per_cell_cap: usize) -> Self {
         StagingPool {
+            seq_buckets: seq_buckets.to_vec(),
             buckets: buckets.to_vec(),
-            seq,
-            per_bucket_cap: per_bucket_cap.max(1),
-            shelves: buckets.iter().map(|_| Mutex::new(Vec::new())).collect(),
+            per_cell_cap: per_cell_cap.max(1),
+            shelves: (0..seq_buckets.len() * buckets.len()).map(|_| Mutex::new(Vec::new())).collect(),
         }
     }
 
-    fn shelf_index(&self, bucket: usize) -> Option<usize> {
-        self.buckets.iter().position(|b| *b == bucket)
+    fn shelf_index(&self, seq: usize, bucket: usize) -> Option<usize> {
+        let si = self.seq_buckets.iter().position(|s| *s == seq)?;
+        let bi = self.buckets.iter().position(|b| *b == bucket)?;
+        Some(si * self.buckets.len() + bi)
     }
 
-    /// Check out a cleared buffer for `bucket`, reusing capacity when a
-    /// recycled one is on the shelf.
-    pub fn take(&self, bucket: usize) -> StagingBuf {
-        if let Some(i) = self.shelf_index(bucket) {
+    /// Check out a cleared buffer for the (seq, bucket) cell, reusing
+    /// capacity when a recycled one is on the shelf.
+    pub fn take(&self, seq: usize, bucket: usize) -> StagingBuf {
+        if let Some(i) = self.shelf_index(seq, bucket) {
             if let Some(mut buf) = self.shelves[i].lock().expect("staging shelf").pop() {
-                buf.reset(bucket, self.seq);
+                buf.reset(bucket, seq);
                 return buf;
             }
         }
-        StagingBuf::new(bucket, self.seq)
+        StagingBuf::new(bucket, seq)
     }
 
     /// Return a buffer after upload; dropped silently when the shelf is
-    /// full or the bucket is foreign (blocking-path buffers).
+    /// full or the cell is foreign (blocking-path buffers).
     pub fn put(&self, buf: StagingBuf) {
-        if let Some(i) = self.shelf_index(buf.bucket) {
+        if let Some(i) = self.shelf_index(buf.seq, buf.bucket) {
             let mut shelf = self.shelves[i].lock().expect("staging shelf");
-            if shelf.len() < self.per_bucket_cap {
+            if shelf.len() < self.per_cell_cap {
                 shelf.push(buf);
             }
         }
@@ -153,28 +184,61 @@ mod tests {
     }
 
     #[test]
+    fn short_rows_pad_to_the_seq_bucket() {
+        // unpadded admission: rows shorter than the seq bucket pad in
+        // place, and real_tokens counts only what the caller provided
+        let mut b = StagingBuf::new(2, 4);
+        b.push_row(&[7, 8], &[0, 1]);
+        b.push_row(&[9], &[0]);
+        b.finish();
+        assert_eq!(b.real, 2);
+        assert_eq!(b.real_tokens, 3);
+        assert_eq!(b.padded_tokens(), 8);
+        assert_eq!(b.ids, vec![7, 8, 0, 0, 9, 0, 0, 0]);
+        assert_eq!(b.type_ids, vec![0, 1, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(b.mask, vec![1.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
     fn pool_recycles_capacity() {
-        let pool = StagingPool::new(&[1, 4], 4, 2);
-        let mut a = pool.take(4);
+        let pool = StagingPool::new(&[4], &[1, 4], 2);
+        let mut a = pool.take(4, 4);
         a.push_row(&[1, 2, 3, 4], &[0; 4]);
         a.finish();
         let cap_before = a.ids.capacity();
         pool.put(a);
         assert_eq!(pool.pooled(), 1);
-        let b = pool.take(4);
+        let b = pool.take(4, 4);
         assert_eq!(pool.pooled(), 0);
         assert_eq!(b.real, 0);
+        assert_eq!(b.real_tokens, 0);
         assert!(b.ids.is_empty());
         assert!(b.ids.capacity() >= cap_before.min(16));
     }
 
     #[test]
-    fn pool_bounds_and_tolerates_foreign_buckets() {
-        let pool = StagingPool::new(&[2], 2, 1);
+    fn pool_keys_cells_by_seq_and_batch() {
+        // the grid keeps per-cell shelves apart: a (seq 2, bucket 2)
+        // buffer never satisfies a (seq 4, bucket 2) checkout
+        let pool = StagingPool::new(&[2, 4], &[2], 1);
+        pool.put(StagingBuf::new(2, 2));
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.take(4, 2);
+        assert_eq!((b.seq, b.bucket), (4, 2));
+        assert_eq!(pool.pooled(), 1, "the seq-2 shelf is untouched");
+        let b2 = pool.take(2, 2);
+        assert_eq!((b2.seq, b2.bucket), (2, 2));
+        assert_eq!(pool.pooled(), 0, "the shelved seq-2 buffer was recycled");
+    }
+
+    #[test]
+    fn pool_bounds_and_tolerates_foreign_cells() {
+        let pool = StagingPool::new(&[2], &[2], 1);
         pool.put(StagingBuf::new(2, 2));
         pool.put(StagingBuf::new(2, 2)); // over cap: dropped
         assert_eq!(pool.pooled(), 1);
         pool.put(StagingBuf::new(7, 2)); // unknown bucket: dropped
+        pool.put(StagingBuf::new(2, 9)); // unknown seq: dropped
         assert_eq!(pool.pooled(), 1);
     }
 
@@ -185,6 +249,7 @@ mod tests {
         assert_eq!(b.mask, vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
         // one row of tokens was provided: real reports 1, not the bucket
         assert_eq!(b.real, 1);
+        assert_eq!(b.real_tokens, 3);
     }
 
     #[test]
@@ -192,13 +257,16 @@ mod tests {
         // full bucket: unchanged semantics
         let b = StagingBuf::from_parts(2, 3, vec![1; 6], vec![0; 6]);
         assert_eq!(b.real, 2);
+        assert_eq!(b.real_tokens, 6);
         // partial final row rounds up, and real never exceeds the bucket
         let b = StagingBuf::from_parts(4, 3, vec![1; 4], vec![0; 4]);
         assert_eq!(b.real, 2);
         let b = StagingBuf::from_parts(2, 3, vec![1; 9], vec![0; 9]);
         assert_eq!(b.real, 2);
+        assert_eq!(b.real_tokens, 6, "token count capped at the buffer size");
         // degenerate inputs stay safe
         let b = StagingBuf::from_parts(2, 0, vec![], vec![]);
         assert_eq!(b.real, 0);
+        assert_eq!(b.real_tokens, 0);
     }
 }

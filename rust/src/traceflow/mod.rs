@@ -120,10 +120,11 @@ pub fn count_int8_dots(hlo_text: &str) -> usize {
 /// (expected, found).
 pub fn verify_mode_artifact(man: &Manifest, mode: &str, bucket: usize) -> Result<(usize, usize)> {
     let spec = man.mode(mode)?;
+    // trace verification reads the full-seq cell of the (seq, batch) grid
     let rel = spec
         .artifacts
-        .get(&bucket)
-        .with_context(|| format!("mode {mode} missing bucket {bucket}"))?;
+        .get(&(man.seq, bucket))
+        .with_context(|| format!("mode {mode} missing (seq {}, bucket {bucket})", man.seq))?;
     let text = std::fs::read_to_string(man.path(rel))?;
     let expected = expected_int8_dots_per_layer(&spec.switches) * man.model.layers;
     Ok((expected, count_int8_dots(&text)))

@@ -93,7 +93,8 @@ fn rejects_malformed_and_applies_backpressure_shape() {
     )
     .unwrap();
     // empty and oversized payloads are rejected before admission
-    // (short-but-nonempty ids are padded to seq, so they are fine)
+    // (short-but-nonempty ids are fine: they batch in their own
+    // sequence-length class instead of being padded to seq)
     assert!(coord.submit(RequestSpec::task("cola").mode("fp")).is_err());
     let huge = vec![1i32; coord.seq() + 1];
     assert!(coord.submit(RequestSpec::task("cola").mode("fp").ids(huge)).is_err());

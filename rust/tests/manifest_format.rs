@@ -1,0 +1,211 @@
+//! Manifest format_version 3 grammar (DESIGN.md §5.9), pinned WITHOUT a
+//! generated artifacts dir via `Manifest::from_json_str`:
+//!
+//! * `seq_buckets` absent (format_version 2) ⇒ the single-bucket axis
+//!   `[seq]`, and bare `"bN"` artifact keys mean `(seq, N)` — a v2
+//!   manifest loads and routes identically to before the grid existed;
+//! * grid keys `"sSbB"` address (seq bucket, batch bucket) cells;
+//! * the grammar's error paths (empty / non-ascending / top-mismatched
+//!   `seq_buckets`, malformed or off-grid artifact keys) fail at load,
+//!   never at admission;
+//! * `ServerConfig::max_batch` is validated against the manifest's
+//!   largest batch bucket at startup with a typed `ConfigError` — the
+//!   silent `bucket_for` clamp is not reachable from serving config.
+
+use std::path::Path;
+
+use zqhero::coordinator::{ConfigError, Coordinator, ServerConfig};
+use zqhero::model::manifest::Manifest;
+
+/// Minimal two-mode manifest; `seq_buckets_line` and the fp mode's
+/// `artifacts` object are spliced in by each test.
+fn manifest_src(seq_buckets_line: &str, fp_artifacts: &str) -> String {
+    format!(
+        r#"{{
+  "model": {{"vocab_size": 16, "hidden": 8, "layers": 1, "heads": 2,
+            "ffn": 16, "max_seq": 16, "type_vocab": 2, "num_labels": 2,
+            "ln_eps": 1e-12}},
+  "seq": 16,
+  {seq_buckets_line}
+  "buckets": [1, 4],
+  "modes": {{
+    "fp": {{"switches": {{"embedding": false, "qkv": false, "attn": false,
+                        "attn_output": false, "fc1": false, "fc2": false}},
+           "params": [], "artifacts": {fp_artifacts}}},
+    "m3": {{"switches": {{"embedding": true, "qkv": true, "attn": true,
+                        "attn_output": true, "fc1": true, "fc2": true}},
+           "params": [], "artifacts": {{}}}}
+  }},
+  "calib": {{"artifact": "c.hlo", "batch": 4, "params": [], "stats": []}},
+  "tasks": {{
+    "sst2": {{"classes": 2, "metrics": ["acc"], "splits": {{"dev": "d.bin"}},
+             "checkpoint": "checkpoints/sst2/fp32.bin"}}
+  }}
+}}"#
+    )
+}
+
+fn load(seq_buckets_line: &str, fp_artifacts: &str) -> anyhow::Result<Manifest> {
+    Manifest::from_json_str(&manifest_src(seq_buckets_line, fp_artifacts), Path::new("unused"))
+}
+
+#[test]
+fn absent_seq_buckets_falls_back_to_single_seq_axis() {
+    // format_version 2 shape: no seq_buckets key, bare "bN" artifact keys
+    let man = load("", r#"{"b1": "models/fp/b1.hlo.txt", "b4": "models/fp/b4.hlo.txt"}"#)
+        .unwrap();
+    assert_eq!(man.seq_buckets, vec![16], "absent ⇒ [seq]");
+    assert_eq!(man.num_seq_buckets(), 1);
+    // every admissible length lands in the one full-seq class
+    for n in [1, 7, 16] {
+        assert_eq!(man.seq_bucket_for(n), 16);
+    }
+    // legacy keys mean (seq, batch): the grid-shaped tables still route
+    let fp = man.mode("fp").unwrap();
+    assert_eq!(fp.artifacts.get(&(16, 1)).map(String::as_str), Some("models/fp/b1.hlo.txt"));
+    assert_eq!(fp.artifacts.get(&(16, 4)).map(String::as_str), Some("models/fp/b4.hlo.txt"));
+    assert!(fp.artifacts.get(&(8, 1)).is_none());
+}
+
+#[test]
+fn grid_keys_round_trip_and_mix_with_legacy() {
+    let man = load(
+        r#""seq_buckets": [8, 16],"#,
+        r#"{"s8b1": "models/fp/s8_b1.hlo.txt",
+            "s16b4": "models/fp/s16_b4.hlo.txt",
+            "b1": "models/fp/b1.hlo.txt"}"#,
+    )
+    .unwrap();
+    assert_eq!(man.seq_buckets, vec![8, 16]);
+    assert_eq!(man.seq_bucket_for(3), 8);
+    assert_eq!(man.seq_bucket_for(9), 16);
+    assert_eq!(man.seq_bucket_index(8).unwrap(), 0);
+    assert!(man.seq_bucket_index(9).is_err());
+    let fp = man.mode("fp").unwrap();
+    assert_eq!(
+        fp.artifacts.get(&(8, 1)).map(String::as_str),
+        Some("models/fp/s8_b1.hlo.txt")
+    );
+    assert_eq!(
+        fp.artifacts.get(&(16, 4)).map(String::as_str),
+        Some("models/fp/s16_b4.hlo.txt")
+    );
+    // a bare legacy key inside a v3 manifest still pins the full seq
+    assert_eq!(fp.artifacts.get(&(16, 1)).map(String::as_str), Some("models/fp/b1.hlo.txt"));
+}
+
+#[test]
+fn seq_buckets_grammar_errors_fail_at_load() {
+    // empty
+    let err = format!("{:#}", load(r#""seq_buckets": [],"#, "{}").unwrap_err());
+    assert!(err.contains("must not be empty"), "{err}");
+    // not strictly ascending
+    let err = format!("{:#}", load(r#""seq_buckets": [16, 8],"#, "{}").unwrap_err());
+    assert!(err.contains("strictly ascending"), "{err}");
+    let err = format!("{:#}", load(r#""seq_buckets": [8, 8, 16],"#, "{}").unwrap_err());
+    assert!(err.contains("strictly ascending"), "{err}");
+    // top bucket must equal seq, or an admissible request could fit no cell
+    let err = format!("{:#}", load(r#""seq_buckets": [4, 8],"#, "{}").unwrap_err());
+    assert!(err.contains("largest seq bucket") && err.contains("16"), "{err}");
+    // non-numeric entry
+    assert!(load(r#""seq_buckets": [8, "x"],"#, "{}").is_err());
+}
+
+#[test]
+fn artifact_key_errors_fail_at_load() {
+    // malformed grid key (no batch half)
+    let err = format!(
+        "{:#}",
+        load(r#""seq_buckets": [8, 16],"#, r#"{"s8": "x.hlo"}"#).unwrap_err()
+    );
+    assert!(err.contains("bad artifact key") || err.contains("s8"), "{err}");
+    // seq not declared in seq_buckets
+    let err = format!(
+        "{:#}",
+        load(r#""seq_buckets": [8, 16],"#, r#"{"s32b1": "x.hlo"}"#).unwrap_err()
+    );
+    assert!(err.contains("not in seq_buckets"), "{err}");
+    // batch not declared in buckets (a typo'd key must fail at load, not
+    // later as a missing-cell error at replica startup)
+    let err = format!(
+        "{:#}",
+        load(r#""seq_buckets": [8, 16],"#, r#"{"s16b3": "x.hlo"}"#).unwrap_err()
+    );
+    assert!(err.contains("not in buckets"), "{err}");
+    let err = format!("{:#}", load("", r#"{"b3": "x.hlo"}"#).unwrap_err());
+    assert!(err.contains("not in buckets"), "{err}");
+    // a legacy "bN" and a grid "sSbN" key naming the same cell must not
+    // silently last-wins between two conflicting artifacts
+    let err = format!(
+        "{:#}",
+        load(r#""seq_buckets": [8, 16],"#, r#"{"b4": "x.hlo", "s16b4": "y.hlo"}"#).unwrap_err()
+    );
+    assert!(err.contains("duplicate cell"), "{err}");
+}
+
+#[test]
+fn batch_buckets_must_be_ascending() {
+    // bucket_for's first-fit scan and the max_batch validation both read
+    // buckets.last() as the largest; an unordered list must fail at load
+    let src = manifest_src("", "{}").replace(r#""buckets": [1, 4]"#, r#""buckets": [4, 1]"#);
+    let err = format!(
+        "{:#}",
+        Manifest::from_json_str(&src, Path::new("unused")).unwrap_err()
+    );
+    assert!(err.contains("buckets must be strictly ascending"), "{err}");
+    // legacy key maps to (seq, N), which is always on the axis — fine
+    assert!(load(r#""seq_buckets": [8, 16],"#, r#"{"b1": "x.hlo"}"#).is_ok());
+    // plain garbage key
+    assert!(load("", r#"{"q9": "x.hlo"}"#).is_err());
+}
+
+/// The `--max-batch` satellite: startup must refuse a batch size the
+/// manifest cannot execute, with a typed error — `bucket_for`'s silent
+/// clamp to the largest bucket is for cold paths only.  Runs without
+/// generated artifacts: validation fires before any checkpoint I/O, so a
+/// manifest.json written to a temp dir is enough.
+#[test]
+fn max_batch_validated_against_largest_bucket_at_startup() {
+    let dir = std::env::temp_dir().join(format!("zqh-manifest-format-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_src("", "{}")).unwrap();
+    let routes = vec![("sst2".to_string(), "fp".to_string())];
+
+    // over the largest bucket (4): typed refusal naming both numbers
+    let err = Coordinator::start(
+        dir.clone(),
+        &routes,
+        ServerConfig { max_batch: 99, ..ServerConfig::default() },
+    )
+    .unwrap_err();
+    match err.downcast_ref::<ConfigError>() {
+        Some(ConfigError::MaxBatchExceedsBuckets { max_batch, largest_bucket }) => {
+            assert_eq!((*max_batch, *largest_bucket), (99, 4));
+        }
+        other => panic!("expected MaxBatchExceedsBuckets, got {other:?} ({err:#})"),
+    }
+    assert!(err.to_string().contains("max_batch 99"), "{err}");
+
+    // zero can never form a batch
+    let err = Coordinator::start(
+        dir.clone(),
+        &routes,
+        ServerConfig { max_batch: 0, ..ServerConfig::default() },
+    )
+    .unwrap_err();
+    assert!(matches!(err.downcast_ref::<ConfigError>(), Some(ConfigError::ZeroMaxBatch)));
+
+    // a bucket-sized max_batch passes config validation and fails later,
+    // on the missing checkpoint — proving the gate is the config, not
+    // some broader startup failure
+    let err = Coordinator::start(
+        dir.clone(),
+        &routes,
+        ServerConfig { max_batch: 4, ..ServerConfig::default() },
+    )
+    .unwrap_err();
+    assert!(err.downcast_ref::<ConfigError>().is_none());
+    assert!(err.to_string().contains("checkpoint"), "{err:#}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -321,6 +321,104 @@ fn replica_pool_drains_on_drop() {
     }
 }
 
+/// Tentpole acceptance (DESIGN.md §5.9): mixed-length traffic batches
+/// per sequence-length class — every response's seq bucket is the
+/// smallest manifest bucket that fits its request, the per-batch padding
+/// ledger is coherent, and logits match direct single-row inference at
+/// the same seq bucket.
+#[test]
+fn mixed_length_traffic_buckets_and_parity() {
+    let Some(dir) = artifacts() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    if man.num_seq_buckets() == 1 {
+        eprintln!("skipping mixed-length test: single-seq manifest (format_version 2 artifacts)");
+        return;
+    }
+    let pairs = vec![("cola".to_string(), "fp".to_string())];
+    let coord = Coordinator::start(dir.clone(), &pairs, config(true)).unwrap();
+    let split = Split::load(&man, man.task("cola").unwrap(), "dev").unwrap();
+
+    // the canonical §5.9 mixed workload: real lengths with every 4th row
+    // at the model max — the same shape the e2e sweep's ≥2x assertion
+    // runs on (one shared constructor, so the two cannot drift)
+    let rows: Vec<(Vec<i32>, Vec<i32>)> = (0..24.min(split.len()))
+        .map(|i| {
+            let (ids, tys) = split.row(i);
+            (ids.to_vec(), tys.to_vec())
+        })
+        .collect();
+    let payload = zqhero::data::mixed_length_workload(&rows);
+    let rxs: Vec<_> = payload
+        .iter()
+        .map(|(ids, tys)| {
+            coord
+                .submit(
+                    RequestSpec::task("cola").mode("fp").ids(ids.clone()).type_ids(tys.clone()),
+                )
+                .expect("admitted")
+        })
+        .collect();
+    let resps: Vec<Response> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(120)).expect("reply"))
+        .collect();
+
+    let mut rt = Runtime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let cola = rt.manifest.task("cola").unwrap().clone();
+    eh::ensure_checkpoint(&mut rt, &cola, "fp", 4, 100.0).unwrap();
+    let mut buckets_seen = std::collections::BTreeSet::new();
+    for ((ids, tys), resp) in payload.iter().zip(&resps) {
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        // the batch rode the smallest manifest bucket fitting this request
+        assert_eq!(
+            resp.timing.seq_bucket,
+            man.seq_bucket_for(ids.len()),
+            "request of {} tokens",
+            ids.len()
+        );
+        buckets_seen.insert(resp.timing.seq_bucket);
+        // per-batch padding ledger coherence
+        assert!(resp.timing.real_tokens >= ids.len());
+        assert!(resp.timing.real_tokens <= resp.timing.padded_tokens);
+        assert_eq!(
+            resp.timing.padded_tokens,
+            resp.timing.bucket * resp.timing.seq_bucket,
+            "padded slots must be the staging cell"
+        );
+        assert_timing_coherent(resp, &format!("mixed-length len {}", ids.len()));
+        // numeric parity vs direct single-row inference at the same cell
+        let s = resp.timing.seq_bucket;
+        let mut pids = ids.clone();
+        pids.resize(s, 0);
+        let mut ptys = tys.clone();
+        ptys.resize(s, 0);
+        let mask = Split::mask_row(&pids);
+        let direct = rt.infer("cola", "fp", 1, &pids, &ptys, &mask).unwrap();
+        let dv = direct.as_f32().unwrap();
+        for (a, b) in resp.logits.iter().zip(dv) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "len {}: coordinator {a} vs direct {b}",
+                ids.len()
+            );
+        }
+    }
+    assert!(
+        buckets_seen.len() > 1,
+        "mixed workload must actually exercise multiple seq buckets, saw {buckets_seen:?}"
+    );
+    // FIFO within each class: responses of one class ride non-decreasing
+    // dispatch numbers in submit order
+    for sb in &buckets_seen {
+        let class: Vec<Response> = resps
+            .iter()
+            .filter(|r| r.timing.seq_bucket == *sb)
+            .cloned()
+            .collect();
+        assert_group_fifo(&class, 1, &format!("seq class {sb}"));
+    }
+}
+
 #[test]
 fn unknown_route_rejected_at_admission() {
     let Some(dir) = artifacts() else { return };

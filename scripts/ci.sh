@@ -8,8 +8,8 @@
 # checkout.  Benches (e.g. `cargo run --release --bin e2e_serving` via
 # `benches/`) additionally emit BENCH_*.json trajectory files
 # (BENCH_e2e_serving.json, BENCH_precision_policy.json,
-# BENCH_replica_scaling.json); those are not part of the gate but
-# should be committed when they change.
+# BENCH_replica_scaling.json, BENCH_seq_buckets.json); those are not
+# part of the gate but should be committed when they change.
 #
 # The lint stages run with --all-targets so the typed PrecisionPolicy /
 # RequestSpec surface stays clean across lib, tests, benches and
@@ -31,6 +31,11 @@ done
 echo "==> cargo build --release"
 cargo build --release
 
+# `cargo test -q` includes the no-artifact format gate
+# (tests/manifest_format.rs): the manifest format_version 3 `seq_buckets`
+# grammar (grid artifact keys, absent => [seq] fallback) and the typed
+# --max-batch config validation run on a bare checkout, so a manifest
+# writer/loader drift fails CI even where `make artifacts` never ran.
 echo "==> cargo test -q"
 cargo test -q
 
@@ -54,6 +59,14 @@ if [ -f artifacts/manifest.json ]; then
     cargo run --release -- serve-bench --governor --overload 2 \
         --queue-cap 64 --default-deadline-ms 250 \
         --modes m3 --policies attn-out-fp --requests 128
+
+    # length-aware serving (DESIGN.md §5.9): drive real-length rows vs a
+    # padded single-seq baseline through fresh coordinators and record
+    # the padded-token volumes (BENCH_seq_buckets_smoke.json); the full
+    # sweep with the >=2x reduction assertion is benches/e2e_serving.rs
+    echo "==> mixed-length serve-bench smoke (seq-bucket grid)"
+    cargo run --release -- serve-bench --mixed-length \
+        --modes m3 --requests 96 --concurrency 16
 fi
 
 if [ "$SKIP_CLIPPY" -eq 0 ]; then
