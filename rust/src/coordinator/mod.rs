@@ -16,5 +16,5 @@ pub use batcher::{Batch, Batcher, Drained};
 pub use governor::{GovernorConfig, GovernorShared, PrecisionGovernor, Signals, StepEvent};
 pub use request::{GroupKey, PolicyRef, Request, RequestSpec, Response, Timing};
 pub use server::{ConfigError, Coordinator, ServerConfig, SubmitError};
-pub use net::{NetClient, NetServer};
+pub use net::{BackoffSchedule, NetClient, NetServer};
 pub use stats::{Histogram, PolicyStats, Recorder, ReplicaStats};

@@ -42,6 +42,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -274,6 +275,20 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
                 }
                 json::obj(pairs)
             }
+            Some(e) if resp.failed => {
+                // replica failure (DESIGN.md §5.10): the server swept the
+                // request off a dead engine — retryable, unlike a
+                // terminal request error, so it gets its own wire flag
+                let mut pairs = vec![
+                    ("ok", Value::Bool(false)),
+                    ("failed", Value::Bool(true)),
+                    ("error", Value::String(e)),
+                ];
+                if version >= 2 {
+                    pairs.push(("v", json::num(version as f64)));
+                }
+                json::obj(pairs)
+            }
             Some(e) => fail(e),
             None => {
                 let mut pairs = vec![
@@ -389,12 +404,60 @@ fn handle_conn(
     Ok(())
 }
 
+/// Pure jittered-exponential backoff schedule for `NetClient` retries:
+/// attempt `k` sleeps `base * 2^k` capped at `max`, scaled by a
+/// deterministic jitter in [0.5, 1.0) hashed from `(seed, attempt)` —
+/// stateless, so the schedule is testable as plain values with no clock
+/// or RNG plumbing (and two clients with different seeds never
+/// thundering-herd in lockstep).
+#[derive(Debug, Clone, Copy)]
+pub struct BackoffSchedule {
+    pub base: Duration,
+    pub max: Duration,
+    pub seed: u64,
+}
+
+impl Default for BackoffSchedule {
+    fn default() -> Self {
+        BackoffSchedule {
+            base: Duration::from_millis(10),
+            max: Duration::from_secs(1),
+            seed: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+impl BackoffSchedule {
+    /// Sleep before retry number `attempt` (0-based).
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let full = self.base.saturating_mul(1u32 << attempt.min(16)).min(self.max);
+        // splitmix64 finalizer over (seed, attempt): stateless jitter
+        let mut z =
+            self.seed.wrapping_add((attempt as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        let frac = 0.5 + (z >> 11) as f64 / (1u64 << 53) as f64 / 2.0; // [0.5, 1.0)
+        full.mul_f64(frac)
+    }
+}
+
 /// Minimal blocking client for examples/tests.  The versioned surface:
 /// `request` emits legacy v1 string-mode frames (the shim keeps old
 /// clients working), `request_spec` emits v2 typed-policy frames.
+///
+/// Retry is opt-in: `retries(n)` arms up to `n` transparent retries on
+/// `busy` responses (explicit backpressure) and on connection loss
+/// (reset/EOF mid-round-trip, with an automatic reconnect) — the
+/// hand-rolled retry loops the bench drivers used to carry.  Each retry
+/// sleeps a `BackoffSchedule` step (`backoff(base, max)` to tune).
+/// Terminal errors (`ok: false` without `busy`) are never retried.
 pub struct NetClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    addr: std::net::SocketAddr,
+    retries: u32,
+    backoff: BackoffSchedule,
 }
 
 impl NetClient {
@@ -404,7 +467,26 @@ impl NetClient {
     pub fn connect(addr: &std::net::SocketAddr) -> Result<NetClient> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
-        Ok(NetClient { reader: BufReader::new(stream), writer })
+        Ok(NetClient {
+            reader: BufReader::new(stream),
+            writer,
+            addr: *addr,
+            retries: 0,
+            backoff: BackoffSchedule::default(),
+        })
+    }
+
+    /// Retry up to `n` times on `busy` responses and connection loss.
+    pub fn retries(mut self, n: u32) -> NetClient {
+        self.retries = n;
+        self
+    }
+
+    /// Tune the retry backoff schedule (jitter seed stays the default).
+    pub fn backoff(mut self, base: Duration, max: Duration) -> NetClient {
+        self.backoff.base = base;
+        self.backoff.max = max;
+        self
     }
 
     /// Legacy v1 frame: whole-model mode by name (server desugars it to
@@ -424,11 +506,45 @@ impl NetClient {
     }
 
     fn round_trip(&mut self, req: &Value) -> Result<Value> {
-        self.writer.write_all(json::to_string(req).as_bytes())?;
+        let frame = json::to_string(req);
+        let mut attempt = 0u32;
+        loop {
+            match self.send_recv(&frame) {
+                Ok(v) => {
+                    let busy = v.get("busy").and_then(Value::as_bool) == Some(true);
+                    if !busy || attempt >= self.retries {
+                        return Ok(v);
+                    }
+                }
+                // connection loss mid-round-trip: reconnect, then retry
+                // through the same backoff schedule; anything else (or a
+                // failed reconnect) propagates
+                Err(e) => {
+                    if attempt >= self.retries || !self.reconnect() {
+                        return Err(e);
+                    }
+                }
+            }
+            std::thread::sleep(self.backoff.delay(attempt));
+            attempt += 1;
+        }
+    }
+
+    fn reconnect(&mut self) -> bool {
+        let Ok(stream) = TcpStream::connect(self.addr) else { return false };
+        let Ok(writer) = stream.try_clone() else { return false };
+        self.reader = BufReader::new(stream);
+        self.writer = writer;
+        true
+    }
+
+    fn send_recv(&mut self, frame: &str) -> Result<Value> {
+        self.writer.write_all(frame.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "connection closed before a response arrived");
         json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
     }
 }
@@ -713,6 +829,82 @@ mod tests {
             let v = json::parse(bad).unwrap();
             assert!(parse_request(&v, seq).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn backoff_schedule_is_bounded_deterministic_jittered_exponential() {
+        let b = BackoffSchedule {
+            base: Duration::from_millis(10),
+            max: Duration::from_millis(200),
+            seed: 42,
+        };
+        // each attempt's delay sits in [full/2, full], full = base*2^k
+        // capped at max — the whole schedule checked as pure values
+        for k in 0..10u32 {
+            let full =
+                Duration::from_millis(10).saturating_mul(1u32 << k).min(Duration::from_millis(200));
+            let d = b.delay(k);
+            assert!(d >= full.mul_f64(0.5), "attempt {k}: {d:?} under half of {full:?}");
+            assert!(d <= full, "attempt {k}: {d:?} over {full:?}");
+        }
+        // deterministic per (seed, attempt); different seeds de-correlate
+        assert_eq!(b.delay(3), b.delay(3));
+        let c = BackoffSchedule { seed: 43, ..b };
+        assert_ne!(b.delay(3), c.delay(3), "seeds 42/43 jitter identically");
+        // deep attempts stay capped (and the shift never overflows)
+        assert!(b.delay(40) <= Duration::from_millis(200));
+    }
+
+    #[test]
+    fn client_retries_busy_then_reconnects_on_reset() {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // connection 1: answer busy once, then hang up mid-request
+            let (mut s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            s.write_all(b"{\"ok\":false,\"busy\":true,\"error\":\"busy\"}\n").unwrap();
+            s.flush().unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            drop(s); // connection reset before a response
+            // connection 2 (the client's reconnect): answer ok
+            let (mut s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            s.write_all(b"{\"ok\":true,\"logits\":[]}\n").unwrap();
+            s.flush().unwrap();
+        });
+        let mut c = NetClient::connect(&addr)
+            .unwrap()
+            .retries(4)
+            .backoff(Duration::from_millis(1), Duration::from_millis(4));
+        let resp = c.request("t", "m", &[1]).unwrap();
+        assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true));
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn client_without_retries_surfaces_busy_verbatim() {
+        use std::io::Write;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            s.write_all(b"{\"ok\":false,\"busy\":true,\"error\":\"busy\"}\n").unwrap();
+            s.flush().unwrap();
+        });
+        let mut c = NetClient::connect(&addr).unwrap(); // retry is opt-in
+        let resp = c.request("t", "m", &[1]).unwrap();
+        assert_eq!(resp.get("busy").and_then(Value::as_bool), Some(true));
+        server.join().unwrap();
     }
 
     #[test]

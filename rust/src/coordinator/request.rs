@@ -166,6 +166,12 @@ pub struct Response {
     /// batch formation or via the engine's cancel-before-submit hook,
     /// never after device work started.
     pub expired: bool,
+    /// Replica failure (a third failure class: the engine replica holding
+    /// this request's batch died before the batch completed — DESIGN.md
+    /// §5.10).  The request itself was well-formed; a retry on the
+    /// recovered pool is expected to succeed.  Mutually exclusive with
+    /// `expired`; always accompanied by `error`.
+    pub failed: bool,
 }
 
 #[derive(Debug, Clone, Default)]

@@ -31,7 +31,8 @@ use crate::exec::ThreadPool;
 use crate::model::manifest::{Manifest, ModeId, PolicyId, TaskId};
 use crate::model::Container;
 use crate::runtime::engine::{
-    CancelCheck, CancelledBeforeSubmit, EngineOptions, EnginePool, InferDone, InferJob,
+    CancelCheck, CancelledBeforeSubmit, Completion, EngineOptions, EnginePool, FaultPlan,
+    InferDone, InferJob, ReplicaFailed, RestartPolicy,
 };
 use crate::runtime::staging::StagingPool;
 
@@ -72,14 +73,23 @@ pub struct ServerConfig {
     /// token ids; anything near this cap is a runaway or malicious
     /// stream and drops the connection).
     pub max_frame_bytes: usize,
-    /// Test-only service-rate throttle: each engine replica sleeps this
-    /// long per batch, making queue pressure deterministic for the
-    /// overload suites.  Never set in production.
-    pub throttle_batch: Option<Duration>,
-    /// Test-only fault injection: the completion callback for this
-    /// dispatch sequence number panics, exercising panic isolation in the
-    /// readback/completion stage.  Never set in production.
-    pub fault_inject_batch: Option<u64>,
+    /// Heartbeat stall budget for the replica watchdog (DESIGN.md §5.10):
+    /// a replica with work in flight whose progress counter stalls this
+    /// long is declared dead, swept, and restarted.  `None` disables
+    /// stall detection (thread death is always detected).
+    pub watchdog: Option<Duration>,
+    /// Supervised-restart backoff and circuit-breaker budget.
+    pub restart: RestartPolicy,
+    /// Structured fault-injection plan (DESIGN.md §5.10): per-replica
+    /// scripted panics, stalls, throttles, and slow paths for the chaos
+    /// and overload suites.  Empty in production.
+    pub fault_plan: FaultPlan,
+    /// `Some(latency)` swaps every replica's PJRT device for a fake that
+    /// sleeps `latency` per batch and returns zero logits — the
+    /// artifact-free path the chaos suite drives the full coordinator
+    /// on.  Checkpoint preloading is skipped (routes resolve against the
+    /// manifest only).  Never set in production.
+    pub fake_engine: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -96,8 +106,10 @@ impl Default for ServerConfig {
             governor: None,
             net_read_timeout: Duration::from_millis(200),
             max_frame_bytes: 1 << 20,
-            throttle_batch: None,
-            fault_inject_batch: None,
+            watchdog: None,
+            restart: RestartPolicy::default(),
+            fault_plan: FaultPlan::default(),
+            fake_engine: None,
         }
     }
 }
@@ -253,7 +265,10 @@ impl Coordinator {
         }
 
         // load quantized/fp checkpoints from disk, one per (task, exec
-        // mode) — routes naming policies with the same exec mode dedupe
+        // mode) — routes naming policies with the same exec mode dedupe.
+        // Under a fake engine there is nothing to read: routes still
+        // resolve and mark their slots resident, but no Container leaves
+        // disk and the fake device accepts any preload set.
         let mut preload = Vec::new();
         let mut modes_used = std::collections::BTreeSet::new();
         let mut loaded = vec![false; manifest.num_tasks() * manifest.num_modes()];
@@ -265,6 +280,11 @@ impl Coordinator {
             if loaded[slot] {
                 continue;
             }
+            loaded[slot] = true;
+            modes_used.insert(mode.clone());
+            if config.fake_engine.is_some() {
+                continue;
+            }
             let rel = t.checkpoint_rel(&mode);
             let path = manifest.path(&rel);
             let ckpt = Container::read_file(&path)
@@ -272,9 +292,7 @@ impl Coordinator {
                     format!("loading checkpoint {path:?} (run `repro quantize` first?)")
                 })?
                 .reordered(&manifest.mode(&mode)?.params)?;
-            loaded[slot] = true;
             preload.push((task.clone(), mode.clone(), ckpt));
-            modes_used.insert(mode);
         }
         // precompile the full (mode, seq bucket, batch bucket) grid so
         // the serving hot path never compiles, whichever length class a
@@ -301,11 +319,21 @@ impl Coordinator {
             EngineOptions {
                 overlap: config.pipeline,
                 replicas,
-                throttle: config.throttle_batch,
+                watchdog: config.watchdog,
+                restart: config.restart.clone(),
+                fault_plan: config.fault_plan.clone(),
+                fake: config.fake_engine,
             },
         )?);
         let man = Arc::new(manifest);
         let recorder = Arc::new(Recorder::new(man.policy_order.clone(), replicas));
+        // supervision telemetry: failures/restarts/exclusions/heartbeats
+        // flow from the supervisor thread into the recorder's
+        // replica-health ledger (DESIGN.md §5.10)
+        {
+            let rec = Arc::clone(&recorder);
+            engine.set_event_hook(Arc::new(move |ev| rec.record_pool_event(ev)));
+        }
         let depth = Arc::new(AtomicUsize::new(0));
 
         // governor: pure machine on the batcher thread, shared effective
@@ -465,7 +493,18 @@ impl Coordinator {
     /// resident checkpoint.
     fn resolve(&self, task: &str, policy: Option<&PolicyRef>) -> Result<GroupKey> {
         let label = match policy {
-            None => self.man.mode_order.first().cloned().unwrap_or_default(),
+            // a manifest with no modes has no default route to fall back
+            // to — reject, rather than fabricating an empty-string mode
+            // that fails later with a misleading "unknown mode" error
+            None => match self.man.mode_order.first() {
+                Some(m) => m.clone(),
+                None => {
+                    return Err(anyhow!(
+                        "manifest declares no modes; a request without an explicit \
+                         policy has no default route"
+                    ))
+                }
+            },
             Some(PolicyRef::Named(n)) => n.clone(),
             Some(PolicyRef::Inline(_)) => "<inline>".to_string(),
         };
@@ -680,8 +719,8 @@ fn dispatch(
     let requests = batch.requests;
     let recorder = Arc::clone(recorder);
     let depth = Arc::clone(depth);
-    let fault = config.fault_inject_batch;
-    let done = Box::new(move |result: Result<InferDone>| {
+    let fault = config.fault_plan.completion_panic();
+    let done = Completion::new(move |result: Result<InferDone>| {
         // release the whole batch's backlog reservations first, before
         // any work that can panic (the worker pool isolates panics, and
         // a poisoned batch must not shrink admission capacity forever —
@@ -736,6 +775,7 @@ fn dispatch(
                         timing,
                         error: None,
                         expired: false,
+                        failed: false,
                     });
                 }
             }
@@ -746,6 +786,15 @@ fn dispatch(
                 let now = Instant::now();
                 for r in requests {
                     send_expired(&r, &recorder, now);
+                }
+            }
+            Err(e) if e.downcast_ref::<ReplicaFailed>().is_some() => {
+                // the replica holding this batch died (panic, stall, or
+                // shutdown sweep) — a typed outcome class distinct from
+                // request errors: the request was fine, the engine was
+                // not, and a retry on the recovered pool should succeed
+                for r in requests {
+                    send_failed(&r, policy, &recorder);
                 }
             }
             Err(e) => {
@@ -761,7 +810,7 @@ fn dispatch(
     if let Err(job) = engine.submit(job) {
         let job = *job;
         staging.put(job.staging);
-        (job.done)(Err(anyhow!("engine unavailable")));
+        job.done.run(Err(anyhow!("engine unavailable")));
     }
 }
 
@@ -777,6 +826,24 @@ fn send_error(r: &Request, policy: PolicyId, recorder: &Recorder, msg: &str) {
         timing: Timing::default(),
         error: Some(msg.to_string()),
         expired: false,
+        failed: false,
+    });
+}
+
+/// Reply to a request whose batch was swept off a dead replica
+/// (DESIGN.md §5.10): ledgered as `failed` — a class of its own so the
+/// overload ledger still reconciles exactly under chaos
+/// (admitted = completed + shed + expired + failed).
+fn send_failed(r: &Request, policy: PolicyId, recorder: &Recorder) {
+    recorder.record_failed(r.requested);
+    let _ = r.reply.send(Response {
+        id: r.id,
+        policy,
+        logits: vec![],
+        timing: Timing::default(),
+        error: Some("engine replica failed before the batch completed".to_string()),
+        expired: false,
+        failed: true,
     });
 }
 
@@ -793,5 +860,6 @@ fn send_expired(r: &Request, recorder: &Recorder, now: Instant) {
         timing: Timing { queue_us, ..Timing::default() },
         error: Some(format!("deadline exceeded after {queue_us}us in queue")),
         expired: true,
+        failed: false,
     });
 }

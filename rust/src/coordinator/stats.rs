@@ -10,6 +10,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::model::manifest::PolicyId;
+use crate::runtime::engine::PoolEvent;
 
 /// Log2-bucketed latency histogram (microseconds).
 #[derive(Debug, Clone)]
@@ -97,8 +98,8 @@ pub struct PolicyStats {
     pub exec: Histogram,
     pub queue: Histogram,
     /// Admitted requests with a terminal outcome:
-    /// `requests == completed + errors + expired` at every instant (each
-    /// outcome increments both under one lock acquisition).
+    /// `requests == completed + errors + expired + failed` at every
+    /// instant (each outcome increments both under one lock acquisition).
     pub requests: u64,
     pub batches: u64,
     pub batched_rows: u64,
@@ -122,6 +123,10 @@ pub struct PolicyStats {
     pub expired: u64,
     /// admitted while the governor had this policy downgraded.
     pub governed: u64,
+    /// Batch swept off a dead engine replica with `ReplicaFailed`
+    /// (DESIGN.md §5.10) — a terminal class of its own, distinct from
+    /// request `errors`: the request was well-formed, the engine was not.
+    pub failed: u64,
 }
 
 impl PolicyStats {
@@ -148,13 +153,26 @@ impl PolicyStats {
     }
 }
 
-/// Per-replica batch accounting for the engine pool (DESIGN.md §5.7):
-/// how many batches (and request rows) each replica executed, the
-/// load-balance witness the replica-scaling bench and tests read.
+/// Per-replica batch accounting for the engine pool (DESIGN.md §5.7),
+/// plus the supervision health ledger (§5.10) fed by `PoolEvent`s: how
+/// many batches (and request rows) each replica executed, which
+/// incarnation is serving, how many supervised restarts it has survived,
+/// how many batches its deaths failed, and how stale its heartbeat is.
 #[derive(Debug, Default, Clone)]
 pub struct ReplicaStats {
     pub batches: u64,
     pub rows: u64,
+    /// Current incarnation (0 = original; bumped by supervised restart).
+    pub generation: u64,
+    /// Supervised restarts that reached ready and rejoined dispatch.
+    pub restarts: u64,
+    /// Device-committed batches swept with `ReplicaFailed` across all of
+    /// this replica's deaths.
+    pub failed: u64,
+    /// Heartbeat age at the supervisor's last liveness sample, us.
+    pub beat_age_us: u64,
+    /// Circuit breaker tripped: the replica is out for the pool's life.
+    pub excluded: bool,
 }
 
 /// Both slot tables behind the recorder's single mutex: per-policy and
@@ -227,6 +245,39 @@ impl Recorder {
         self.inner.lock().unwrap().policies[requested.index()].governed += 1;
     }
 
+    /// An admitted request whose batch was swept off a dead replica with
+    /// `ReplicaFailed` (DESIGN.md §5.10).  Counts in `requests` too, so
+    /// `requests == completed + errors + expired + failed` stays exact.
+    pub fn record_failed(&self, policy: PolicyId) {
+        let mut g = self.inner.lock().unwrap();
+        let s = &mut g.policies[policy.index()];
+        s.requests += 1;
+        s.failed += 1;
+    }
+
+    /// Fold a supervision lifecycle event into the replica health ledger
+    /// (the coordinator installs this as the pool's event hook; events
+    /// arrive from the supervisor thread).
+    pub fn record_pool_event(&self, ev: PoolEvent) {
+        let mut g = self.inner.lock().unwrap();
+        match ev {
+            PoolEvent::ReplicaFailed { replica, failed_batches, .. } => {
+                g.replicas[replica].failed += failed_batches;
+            }
+            PoolEvent::ReplicaRestarted { replica, generation } => {
+                let rs = &mut g.replicas[replica];
+                rs.restarts += 1;
+                rs.generation = generation;
+            }
+            PoolEvent::ReplicaExcluded { replica } => g.replicas[replica].excluded = true,
+            PoolEvent::Heartbeat { replica, generation, age_us } => {
+                let rs = &mut g.replicas[replica];
+                rs.generation = generation;
+                rs.beat_age_us = age_us;
+            }
+        }
+    }
+
     /// `real_tokens` / `padded_tokens` are the batch's caller-token count
     /// and device token-slot count (`bucket * seq_bucket`) — recorded
     /// under the same lock as the batch so the padding ledger can never
@@ -292,7 +343,7 @@ impl Recorder {
         };
         let elapsed = self.elapsed_s();
         let mut t = Table::new(&[
-            "policy", "reqs", "errs", "shed", "expired", "governed", "goodput(r/s)",
+            "policy", "reqs", "errs", "shed", "expired", "failed", "governed", "goodput(r/s)",
             "mean batch", "pad eff", "p50 lat", "p95 lat", "p99 lat", "mean exec/batch",
         ]);
         for (policy, s) in &snap {
@@ -302,6 +353,7 @@ impl Recorder {
                 s.errors.to_string(),
                 s.shed.to_string(),
                 s.expired.to_string(),
+                s.failed.to_string(),
                 s.governed.to_string(),
                 // completed-only: under overload, counting expired
                 // requests here would read as "keeping up" exactly when
@@ -320,13 +372,24 @@ impl Recorder {
         let mut out = t.render();
         if reps.len() > 1 {
             let total: u64 = reps.iter().map(|r| r.batches).sum();
-            let mut rt = Table::new(&["replica", "batches", "rows", "share"]);
+            // replica health table (DESIGN.md §5.10): load share plus the
+            // supervision ledger — generation, restarts, swept batches,
+            // last-heartbeat age, breaker state
+            let mut rt = Table::new(&[
+                "replica", "batches", "rows", "share", "gen", "restarts", "failed", "beat age",
+                "state",
+            ]);
             for (i, r) in reps.iter().enumerate() {
                 rt.row(vec![
                     i.to_string(),
                     r.batches.to_string(),
                     r.rows.to_string(),
                     format!("{:.0}%", 100.0 * r.batches as f64 / total.max(1) as f64),
+                    r.generation.to_string(),
+                    r.restarts.to_string(),
+                    r.failed.to_string(),
+                    format!("{:.1}ms", r.beat_age_us as f64 / 1e3),
+                    if r.excluded { "excluded".to_string() } else { "live".to_string() },
                 ]);
             }
             out.push('\n');
@@ -481,6 +544,8 @@ mod tests {
                 Expired { p: u16 },
                 Shed { p: u16 },
                 Governed { p: u16 },
+                Failed { p: u16 },
+                Event(PoolEvent),
                 Batch { p: u16, rows: usize, real_tok: usize, padded_tok: usize, rep: usize },
             }
             let n_writers = 3;
@@ -489,11 +554,34 @@ mod tests {
                     (0..150 + r.below(150))
                         .map(|_| {
                             let p = r.below(3) as u16;
-                            match r.below(5) {
+                            match r.below(7) {
                                 0 => Op::Req { p, err: r.below(8) == 0 },
                                 1 => Op::Expired { p },
                                 2 => Op::Shed { p },
                                 3 => Op::Governed { p },
+                                4 => Op::Failed { p },
+                                // supervision events race the request
+                                // ledger through the same lock
+                                5 => {
+                                    let replica = r.below(replicas);
+                                    Op::Event(match r.below(4) {
+                                        0 => PoolEvent::ReplicaFailed {
+                                            replica,
+                                            generation: r.below(3) as u64,
+                                            failed_batches: r.below(4) as u64,
+                                        },
+                                        1 => PoolEvent::ReplicaRestarted {
+                                            replica,
+                                            generation: 1 + r.below(3) as u64,
+                                        },
+                                        2 => PoolEvent::ReplicaExcluded { replica },
+                                        _ => PoolEvent::Heartbeat {
+                                            replica,
+                                            generation: r.below(4) as u64,
+                                            age_us: r.below(5000) as u64,
+                                        },
+                                    })
+                                }
                                 _ => {
                                     // a plausible batch: padded slots are
                                     // a (bucket, seq bucket) cell, real
@@ -528,6 +616,8 @@ mod tests {
                                     Op::Expired { p } => rec.record_expired(PolicyId(p), 500),
                                     Op::Shed { p } => rec.record_shed(PolicyId(p)),
                                     Op::Governed { p } => rec.record_governed(PolicyId(p)),
+                                    Op::Failed { p } => rec.record_failed(PolicyId(p)),
+                                    Op::Event(ev) => rec.record_pool_event(ev),
                                     Op::Batch { p, rows, real_tok, padded_tok, rep } => rec
                                         .record_batch(
                                             PolicyId(p),
@@ -553,7 +643,7 @@ mod tests {
                         for (name, s) in &snap {
                             assert_eq!(
                                 s.requests,
-                                s.completed + s.errors + s.expired,
+                                s.completed + s.errors + s.expired + s.failed,
                                 "{name} ledger tore mid-flight"
                             );
                             // tokens are recorded under the same lock as
@@ -611,6 +701,23 @@ mod tests {
                     }
                     Op::Shed { p } => want[p as usize].shed += 1,
                     Op::Governed { p } => want[p as usize].governed += 1,
+                    Op::Failed { p } => {
+                        want[p as usize].requests += 1;
+                        want[p as usize].failed += 1;
+                    }
+                    // additive health fields reconcile exactly; the
+                    // last-writer-wins ones (generation, beat age) race
+                    // across tapes by design and are only bounds-checked
+                    Op::Event(PoolEvent::ReplicaFailed { replica, failed_batches, .. }) => {
+                        want_reps[replica].failed += failed_batches;
+                    }
+                    Op::Event(PoolEvent::ReplicaRestarted { replica, .. }) => {
+                        want_reps[replica].restarts += 1;
+                    }
+                    Op::Event(PoolEvent::ReplicaExcluded { replica }) => {
+                        want_reps[replica].excluded = true;
+                    }
+                    Op::Event(PoolEvent::Heartbeat { .. }) => {}
                     Op::Batch { p, rows, real_tok, padded_tok, rep } => {
                         want[p as usize].batches += 1;
                         want[p as usize].batched_rows += rows as u64;
@@ -626,8 +733,8 @@ mod tests {
                 let got = snap.get(*name).cloned().unwrap_or_default();
                 let w = &want[i];
                 assert_eq!(
-                    (got.requests, got.completed, got.errors, got.expired),
-                    (w.requests, w.completed, w.errors, w.expired),
+                    (got.requests, got.completed, got.errors, got.expired, got.failed),
+                    (w.requests, w.completed, w.errors, w.expired, w.failed),
                     "{name} terminal counts"
                 );
                 assert_eq!((got.shed, got.governed), (w.shed, w.governed), "{name} ledger");
@@ -645,6 +752,11 @@ mod tests {
             let reps = rec.replica_snapshot();
             for (i, w) in want_reps.iter().enumerate() {
                 assert_eq!((reps[i].batches, reps[i].rows), (w.batches, w.rows), "replica {i}");
+                assert_eq!(
+                    (reps[i].restarts, reps[i].failed, reps[i].excluded),
+                    (w.restarts, w.failed, w.excluded),
+                    "replica {i} health ledger"
+                );
             }
         });
     }
@@ -667,5 +779,30 @@ mod tests {
         assert_eq!(reps[2].rows, 3);
         // multi-replica render appends the per-replica table
         assert!(r.render().contains("replica"));
+    }
+
+    #[test]
+    fn replica_health_ledger_and_render() {
+        let r = Recorder::new(vec!["fp".into()], 3);
+        r.record_failed(PolicyId(0));
+        r.record_pool_event(PoolEvent::ReplicaFailed {
+            replica: 1,
+            generation: 0,
+            failed_batches: 2,
+        });
+        r.record_pool_event(PoolEvent::ReplicaRestarted { replica: 1, generation: 1 });
+        r.record_pool_event(PoolEvent::Heartbeat { replica: 0, generation: 0, age_us: 1500 });
+        r.record_pool_event(PoolEvent::ReplicaExcluded { replica: 2 });
+        let snap = r.snapshot();
+        let s = &snap["fp"];
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.requests, s.completed + s.errors + s.expired + s.failed);
+        let reps = r.replica_snapshot();
+        assert_eq!((reps[1].failed, reps[1].restarts, reps[1].generation), (2, 1, 1));
+        assert_eq!(reps[0].beat_age_us, 1500);
+        assert!(reps[2].excluded && !reps[0].excluded);
+        let table = r.render();
+        assert!(table.contains("restarts") && table.contains("beat age"));
+        assert!(table.contains("excluded") && table.contains("failed"));
     }
 }

@@ -13,7 +13,7 @@ use zqhero::evalharness as eh;
 use zqhero::model::manifest::Manifest;
 
 use zqhero::perfmodel;
-use zqhero::runtime::Runtime;
+use zqhero::runtime::{FaultKind, FaultPlan, FaultSpec, RestartPolicy, Runtime};
 use zqhero::traceflow;
 
 fn artifacts_opt() -> OptSpec {
@@ -99,6 +99,8 @@ fn cli() -> Cli {
                     OptSpec { name: "queue-cap", takes_value: true, default: Some("1024"), help: "admission queue bound (submit sheds with busy beyond it)" },
                     OptSpec { name: "default-deadline-ms", takes_value: true, default: Some("0"), help: "deadline for requests that carry none (0 = never expire)" },
                     OptSpec { name: "governor", takes_value: false, default: None, help: "enable the load-adaptive precision governor" },
+                    OptSpec { name: "watchdog-ms", takes_value: true, default: Some("0"), help: "replica heartbeat stall budget before supervised restart (0 = off)" },
+                    OptSpec { name: "restart-budget", takes_value: true, default: Some("5"), help: "replica restarts tolerated per window before circuit-breaker exclusion" },
                 ],
             },
             SubSpec {
@@ -119,6 +121,9 @@ fn cli() -> Cli {
                     OptSpec { name: "governor", takes_value: false, default: None, help: "enable the load-adaptive precision governor" },
                     OptSpec { name: "overload", takes_value: true, default: Some("0"), help: "open-loop overload burst at X times measured capacity (0 = closed loop)" },
                     OptSpec { name: "mixed-length", takes_value: false, default: None, help: "length-aware smoke: drive real-length rows vs a padded baseline, write BENCH_seq_buckets_smoke.json" },
+                    OptSpec { name: "watchdog-ms", takes_value: true, default: Some("0"), help: "replica heartbeat stall budget before supervised restart (0 = off)" },
+                    OptSpec { name: "restart-budget", takes_value: true, default: Some("5"), help: "replica restarts tolerated per window before circuit-breaker exclusion" },
+                    OptSpec { name: "chaos", takes_value: false, default: None, help: "supervision smoke: kill one replica mid-run, assert goodput recovers, write BENCH_chaos_smoke.json" },
                 ],
             },
         ],
@@ -422,6 +427,18 @@ fn overload_config(args: &zqhero::cli::Args) -> Result<(usize, Option<Duration>,
     Ok((queue_cap, default_deadline, args.get_bool("governor")))
 }
 
+/// Shared replica-supervision knobs of `serve` / `serve-bench`
+/// (DESIGN.md §5.10): the watchdog's heartbeat stall budget and the
+/// circuit breaker's restart budget.
+fn supervision_config(args: &zqhero::cli::Args) -> Result<(Option<Duration>, RestartPolicy)> {
+    let watchdog = match args.get_usize("watchdog-ms")?.unwrap_or(0) {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    let budget = args.get_usize("restart-budget")?.unwrap_or(5).max(1);
+    Ok((watchdog, RestartPolicy { budget, ..RestartPolicy::default() }))
+}
+
 fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let host = args.get_or("host", "127.0.0.1").to_string();
@@ -431,6 +448,7 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     let routes = route_names(&Manifest::load(&dir)?, args, "fp,m3")?;
     let replicas = args.get_usize("replicas")?.unwrap_or(1).max(1);
     let (queue_cap, default_deadline, governor) = overload_config(args)?;
+    let (watchdog, restart) = supervision_config(args)?;
     let config = ServerConfig {
         max_batch: args.get_usize("max-batch")?.unwrap_or(16),
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
@@ -438,6 +456,8 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
         queue_cap,
         default_deadline,
         governor: governor.then(|| zqhero::coordinator::GovernorConfig::for_queue(queue_cap)),
+        watchdog,
+        restart,
         ..ServerConfig::default()
     };
 
@@ -474,6 +494,7 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
     let concurrency = args.get_usize("concurrency")?.unwrap_or(32);
     let replicas = args.get_usize("replicas")?.unwrap_or(1).max(1);
     let (queue_cap, default_deadline, governor) = overload_config(args)?;
+    let (watchdog, restart) = supervision_config(args)?;
     let overload = args.get_f64("overload")?.unwrap_or(0.0);
     let config = ServerConfig {
         max_batch: args.get_usize("max-batch")?.unwrap_or(16),
@@ -482,6 +503,8 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
         queue_cap,
         default_deadline,
         governor: governor.then(|| zqhero::coordinator::GovernorConfig::for_queue(queue_cap)),
+        watchdog,
+        restart,
         ..ServerConfig::default()
     };
 
@@ -501,12 +524,20 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
         // BENCH_seq_buckets_smoke.json from a closed loop must not be
         // misread as an overload measurement
         anyhow::ensure!(
-            overload == 0.0,
-            "--mixed-length and --overload are separate benchmarks; run one at a time"
+            overload == 0.0 && !args.get_bool("chaos"),
+            "--mixed-length, --overload and --chaos are separate benchmarks; run one at a time"
         );
         return serve_bench_seq_buckets(
             &dir, &man, &tasks, &routes, &payloads, requests, concurrency, config,
         );
+    }
+
+    if args.get_bool("chaos") {
+        anyhow::ensure!(
+            overload == 0.0,
+            "--chaos and --overload are separate benchmarks; run one at a time"
+        );
+        return serve_bench_chaos(&dir, &tasks, &routes, &payloads, requests, concurrency, config);
     }
 
     println!("starting coordinator ({} task x policy routes)...", pairs.len());
@@ -888,5 +919,173 @@ fn closed_loop_capacity(
         }
     }
     Ok(requests as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+}
+
+/// Replica-supervision chaos smoke (`serve-bench --chaos`, DESIGN.md
+/// §5.10): measure fault-free goodput, then rerun the identical load
+/// with a fault plan that panics one replica mid-run.  The supervisor
+/// must sweep the orphaned batches into typed failures (every client
+/// gets a terminal reply; the ledger reconciles exactly), restart the
+/// replica, and a post-recovery loop must reach >= 90% of the baseline
+/// goodput.  Writes BENCH_chaos_smoke.json; the exhaustive fault matrix
+/// lives in tests/chaos_integration.rs on the fake engine.
+fn serve_bench_chaos(
+    dir: &std::path::Path,
+    tasks: &[String],
+    routes: &[String],
+    payloads: &[Vec<(Vec<i32>, Vec<i32>)>],
+    requests: usize,
+    concurrency: usize,
+    mut config: ServerConfig,
+) -> Result<()> {
+    use zqhero::json;
+    // failover needs somewhere to go: at least two replicas, and enough
+    // requests that the planned fault is guaranteed to trip mid-run
+    config.replicas = config.replicas.max(2);
+    let replicas = config.replicas;
+    let requests = requests.max(4 * config.max_batch.max(1));
+    let task = tasks.first().context("no tasks")?.clone();
+    let route = routes.first().context("no routes")?.clone();
+    let rows = &payloads[0];
+    let pairs = vec![(task.clone(), route.clone())];
+
+    // phase 1: fault-free baseline goodput on an identical coordinator
+    println!("chaos smoke: baseline closed loop ({requests} requests, {replicas} replicas)...");
+    let baseline_rps = {
+        let coord = Coordinator::start(dir.to_path_buf(), &pairs, config.clone())?;
+        let (completed, failed, wall) =
+            chaos_loop(&coord, &task, &route, rows, requests, concurrency)?;
+        anyhow::ensure!(failed == 0, "baseline run saw {failed} replica failures");
+        completed as f64 / wall.max(1e-9)
+    };
+    println!("baseline goodput ~{baseline_rps:.1} req/s");
+
+    // phase 2: identical load, but replica 0 is planned to panic on its
+    // second batch — per-group pinning lands the first batches there, so
+    // the fault is reached deterministically
+    config.fault_plan = FaultPlan::default().with(FaultSpec::on(0, FaultKind::PanicAt { batch: 1 }));
+    let coord = Coordinator::start(dir.to_path_buf(), &pairs, config)?;
+    println!("fault window: replica 0 panics at its batch 1...");
+    let (completed, failed, fault_wall) =
+        chaos_loop(&coord, &task, &route, rows, requests, concurrency)?;
+    anyhow::ensure!(
+        completed + failed == requests,
+        "chaos ledger lost replies: {completed} completed + {failed} failed != {requests}"
+    );
+    anyhow::ensure!(failed > 0, "the planned fault never fired — not a chaos run");
+    println!("fault window: {completed} completed + {failed} failed (typed) in {fault_wall:.1}s");
+
+    // recorder side must agree exactly with the client-side ledger
+    let snap = coord.recorder.snapshot();
+    let s = &snap[route.as_str()];
+    anyhow::ensure!(
+        s.completed as usize == completed && s.failed as usize == failed && s.errors == 0,
+        "recorder disagrees with the client ledger: completed {} vs {completed}, failed {} vs \
+         {failed}, errors {}",
+        s.completed,
+        s.failed,
+        s.errors
+    );
+
+    // phase 3: the supervisor must restart replica 0 and return the pool
+    // to full strength; goodput must then recover
+    let t0 = Instant::now();
+    while coord.engine().live_replicas() < replicas {
+        anyhow::ensure!(
+            t0.elapsed() < Duration::from_secs(30),
+            "replica 0 never came back: {}/{replicas} live after 30s",
+            coord.engine().live_replicas()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let restarts = coord.engine().replica_restarts(0);
+    anyhow::ensure!(restarts >= 1, "pool is full strength but replica 0 ledgered no restart");
+    let (rec_completed, rec_failed, rec_wall) =
+        chaos_loop(&coord, &task, &route, rows, requests, concurrency)?;
+    anyhow::ensure!(rec_failed == 0, "post-recovery run saw {rec_failed} replica failures");
+    let recovered_rps = rec_completed as f64 / rec_wall.max(1e-9);
+    let ratio = recovered_rps / baseline_rps.max(1e-9);
+    println!("recovered goodput ~{recovered_rps:.1} req/s ({:.0}% of baseline)", 100.0 * ratio);
+    anyhow::ensure!(
+        ratio >= 0.9,
+        "goodput did not recover: {recovered_rps:.1} req/s vs baseline {baseline_rps:.1} \
+         (need >= 90%)"
+    );
+    anyhow::ensure!(coord.queue_depth() == 0, "backlog slots leaked after drain");
+    print!("{}", coord.recorder.render());
+
+    let report = json::obj(vec![
+        ("bench", json::s("chaos_smoke")),
+        ("task", json::s(&task)),
+        ("route", json::s(&route)),
+        ("replicas", json::num(replicas as f64)),
+        ("requests_per_phase", json::num(requests as f64)),
+        ("baseline_rps", json::num(baseline_rps)),
+        ("fault_completed", json::num(completed as f64)),
+        ("fault_failed", json::num(failed as f64)),
+        ("fault_wall_s", json::num(fault_wall)),
+        ("replica0_restarts", json::num(restarts as f64)),
+        ("recovered_rps", json::num(recovered_rps)),
+        ("recovery_ratio", json::num(ratio)),
+    ]);
+    match std::fs::write("BENCH_chaos_smoke.json", json::to_string_pretty(&report)) {
+        Ok(()) => println!("\nwrote BENCH_chaos_smoke.json"),
+        Err(e) => eprintln!("could not write BENCH_chaos_smoke.json: {e}"),
+    }
+    Ok(())
+}
+
+/// Closed loop that tolerates (and counts) typed replica-failure
+/// replies — the chaos smoke's measurement primitive.  Returns
+/// `(completed, failed, wall_s)`; any other terminal outcome is a bug.
+fn chaos_loop(
+    coord: &Coordinator,
+    task: &str,
+    route: &str,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    requests: usize,
+    concurrency: usize,
+) -> Result<(usize, usize, f64)> {
+    let t0 = Instant::now();
+    let mut inflight = std::collections::VecDeque::new();
+    let (mut submitted, mut completed, mut failed) = (0usize, 0usize, 0usize);
+    while completed + failed < requests {
+        while submitted < requests && inflight.len() < concurrency.max(1) {
+            let (ids, tys) = rows[submitted % rows.len()].clone();
+            // explicit long deadline: the fault window must produce typed
+            // failures, never expiries racing the supervisor's sweep
+            let spec = zqhero::coordinator::RequestSpec::task(task)
+                .policy(route)
+                .ids(ids)
+                .type_ids(tys)
+                .deadline(Duration::from_secs(600));
+            match coord.submit(spec) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    submitted += 1;
+                }
+                Err(e) if e.is_busy() => break,
+                Err(e) => anyhow::bail!("chaos submit failed: {e}"),
+            }
+        }
+        match inflight.pop_front() {
+            Some(rx) => {
+                let resp = rx.recv().context("chaos response channel closed")?;
+                if resp.failed {
+                    failed += 1;
+                } else {
+                    anyhow::ensure!(
+                        resp.error.is_none(),
+                        "unexpected request error: {:?}",
+                        resp.error
+                    );
+                    anyhow::ensure!(!resp.expired, "request expired under a 600s deadline");
+                    completed += 1;
+                }
+            }
+            None => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    Ok((completed, failed, t0.elapsed().as_secs_f64()))
 }
 

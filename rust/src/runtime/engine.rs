@@ -1,15 +1,33 @@
 //! Engine threads: each replica owns a (non-`Send`) PJRT runtime and
-//! serves execution requests over channels — the executor-thread pattern
-//! a production GPU server uses.  The coordinator and its worker pool
-//! stay fully `Send`.
+//! serves execution requests over queues — the executor-thread pattern a
+//! production GPU server uses.  The coordinator and its worker pool stay
+//! fully `Send`.
 //!
-//! PR 3 replicates the engine: `EnginePool` spawns N replica threads
+//! PR 3 replicated the engine: `EnginePool` spawns N replica threads
 //! (each with its own `Runtime`, preloaded checkpoints, and precompiled
 //! executables) behind a load-aware dispatcher (`DispatchState`,
 //! DESIGN.md §5.7).  A batch routes to the replica with the fewest
 //! in-flight batches; a (task, policy) group is pinned to one replica
 //! while it has batches in flight — same-replica FIFO execution keeps the
 //! group's batches in submit order — and may migrate once it drains.
+//!
+//! PR 6 adds replica *supervision* (DESIGN.md §5.10).  Each replica
+//! incarnation carries a heartbeat (`ReplicaHealth`, beaten at job
+//! de-queue, post-upload, and retire), a `JobQueue` that can be closed
+//! and drained from outside, and a `SweepTable` parking every
+//! device-committed completion.  A supervisor thread watches all three:
+//! a finished thread (panic/exit) or a heartbeat stalled past the
+//! watchdog budget while work is in flight marks the replica dead, at
+//! which point queued jobs are drained and resubmitted to live replicas,
+//! in-flight completions are swept with a typed [`ReplicaFailed`] error
+//! (exactly once — `Completion` carries a drop-guard so no path can leak
+//! a client), and the replica is respawned under exponential backoff
+//! with a restart-budget circuit breaker.  `DispatchState` tags every
+//! assignment with the replica's generation so completions from a dead
+//! incarnation are dropped as stale.  Faults for the chaos suite are
+//! scripted through a structured [`FaultPlan`] instead of ad-hoc knobs,
+//! and a fake device (`EngineOptions::fake`) runs the whole machine
+//! without artifacts or PJRT.
 //!
 //! Each replica's request loop is a software pipeline (DESIGN.md §5.4):
 //! while batch N executes on the device, batch N+1's host arrays are
@@ -22,13 +40,13 @@
 //! mode` table (manifest-derived, so it agrees with the coordinator's
 //! without a handshake — DESIGN.md §6.3).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -38,12 +56,55 @@ use crate::model::tensor::Tensor;
 use crate::model::Container;
 
 use super::staging::{StagingBuf, StagingPool};
-use super::{PendingOutputs, Runtime};
+use super::{InputBufs, PendingOutputs, Runtime};
 
 /// Completion callback: runs on the shared worker pool with the batch
 /// result (readback stage output).  Owning the per-request reply senders,
 /// it is where de-batching and reply dispatch happen.
-pub type Completion = Box<dyn FnOnce(Result<InferDone>) + Send + 'static>;
+///
+/// A `Completion` is a *liability*, not a plain closure: every admitted
+/// batch holds backlog slots (`depth`) and client reply channels that are
+/// only released when the callback runs.  The drop-guard makes that
+/// structural — if a `Completion` is dropped without [`Completion::run`]
+/// (a job stranded in a dead replica's queue, a panic unwinding the
+/// engine loop), the callback still fires with a [`ReplicaFailed`] error,
+/// so no failure path can hang a client or leak admission accounting.
+pub struct Completion {
+    f: Option<Box<dyn FnOnce(Result<InferDone>) + Send + 'static>>,
+}
+
+impl Completion {
+    pub fn new(f: impl FnOnce(Result<InferDone>) + Send + 'static) -> Self {
+        Completion { f: Some(Box::new(f)) }
+    }
+
+    /// Invoke the callback with `res`.  The closure is taken out first,
+    /// so a panic *inside* the callback does not re-fire the drop-guard.
+    pub fn run(mut self, res: Result<InferDone>) {
+        if let Some(f) = self.f.take() {
+            f(res);
+        }
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        if let Some(f) = self.f.take() {
+            // the guard runs on whatever thread dropped the job (engine
+            // unwind, queue drain, supervisor) — isolate callback panics
+            // so the guard itself can never take down its host
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                f(Err(anyhow::Error::new(ReplicaFailed)))
+            }));
+        }
+    }
+}
+
+impl std::fmt::Debug for Completion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.f.is_some() { "Completion(pending)" } else { "Completion(spent)" })
+    }
+}
 
 /// Cancel-before-submit hook (DESIGN.md §5.8): the engine thread calls
 /// this once per job, after de-queueing it and *before* any device work
@@ -65,6 +126,22 @@ impl std::fmt::Display for CancelledBeforeSubmit {
 }
 
 impl std::error::Error for CancelledBeforeSubmit {}
+
+/// Typed terminal error for a batch lost to replica death (DESIGN.md
+/// §5.10): the replica panicked, stalled past the watchdog budget, or
+/// went away with the batch queued/in flight.  Completions downcast it
+/// to route the request to the `failed` ledger column rather than the
+/// generic error path.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaFailed;
+
+impl std::fmt::Display for ReplicaFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("engine replica failed before the batch completed")
+    }
+}
+
+impl std::error::Error for ReplicaFailed {}
 
 pub struct InferJob {
     pub task: TaskId,
@@ -107,10 +184,323 @@ enum Msg {
     Stop,
 }
 
+// ------------------------------------------------------------------ faults
+
+/// One scripted fault kind (DESIGN.md §5.10).  Batch indices count the
+/// jobs a replica incarnation de-queues (0-based), except
+/// `CompletionPanicAt`, which counts coordinator dispatch sequence
+/// numbers (it fires in the completion callback, not the engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the engine thread when it de-queues batch `batch` — the
+    /// held job's completion drop-guard delivers `ReplicaFailed` during
+    /// unwind; the supervisor reaps the thread.
+    PanicAt { batch: u64 },
+    /// Sleep `dur` after de-queueing batch `batch` (post-heartbeat): a
+    /// hung device call for the watchdog to detect.
+    StallFor { batch: u64, dur: Duration },
+    /// Sleep per de-queued job, before the cancel check and any device
+    /// work — the deterministic service-rate throttle the overload
+    /// suite builds queue pressure with (previously
+    /// `ServerConfig::throttle_batch`).
+    Throttle { per_batch: Duration },
+    /// Close the replica's own submit queue after de-queueing batch
+    /// `after_batch`: later pushes fail and the pool reroutes, while
+    /// already-queued work drains normally.
+    FailSubmit { after_batch: u64 },
+    /// Sleep per batch before the input upload (a slow host->device
+    /// link; with a tight watchdog this reads as a stall).
+    SlowUpload { per_batch: Duration },
+    /// Coordinator-side: panic the completion callback of dispatch batch
+    /// `batch_seq` (previously `ServerConfig::fault_inject_batch`) —
+    /// exercises worker-pool panic isolation and depth-release ordering.
+    CompletionPanicAt { batch_seq: u64 },
+}
+
+/// A fault kind scoped to a replica and lifetime.  By default a fault
+/// applies only to generation 0 (the original incarnation), so a
+/// restarted replica comes back healthy; `persistent` faults survive
+/// restarts (how the chaos suite drives the circuit breaker).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// `None` = every replica.
+    pub replica: Option<usize>,
+    pub kind: FaultKind,
+    pub persistent: bool,
+}
+
+impl FaultSpec {
+    /// Fault every replica's first incarnation.
+    pub fn all(kind: FaultKind) -> Self {
+        FaultSpec { replica: None, kind, persistent: false }
+    }
+
+    /// Fault one replica's first incarnation.
+    pub fn on(replica: usize, kind: FaultKind) -> Self {
+        FaultSpec { replica: Some(replica), kind, persistent: false }
+    }
+
+    /// Apply to every incarnation (survives supervised restart).
+    pub fn persistent(mut self) -> Self {
+        self.persistent = true;
+        self
+    }
+}
+
+/// Structured fault-injection plan threaded through `EngineOptions`
+/// (DESIGN.md §5.10): the test-only plane the chaos suite scripts
+/// replica death, stalls, and slow paths with.  Empty in production.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn with(mut self, spec: FaultSpec) -> Self {
+        self.faults.push(spec);
+        self
+    }
+
+    /// Service-rate throttle on every replica, every incarnation — the
+    /// migration shim for the old `throttle_batch` knob.
+    pub fn throttle(per_batch: Duration) -> Self {
+        FaultPlan::default().with(FaultSpec::all(FaultKind::Throttle { per_batch }).persistent())
+    }
+
+    /// Coordinator-side completion panic — the migration shim for the
+    /// old `fault_inject_batch` knob.
+    pub fn completion_panic_at(batch_seq: u64) -> Self {
+        FaultPlan::default().with(FaultSpec::all(FaultKind::CompletionPanicAt { batch_seq }))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The dispatch sequence number whose completion should panic, if
+    /// scripted (consumed by the coordinator, not the engine).
+    pub fn completion_panic(&self) -> Option<u64> {
+        self.faults.iter().find_map(|s| match s.kind {
+            FaultKind::CompletionPanicAt { batch_seq } => Some(batch_seq),
+            _ => None,
+        })
+    }
+
+    /// Resolve the engine-side faults for one replica incarnation.
+    fn for_replica(&self, replica: usize, generation: u64) -> EngineFaults {
+        let mut f = EngineFaults::default();
+        for spec in &self.faults {
+            if spec.replica.is_some_and(|r| r != replica) {
+                continue;
+            }
+            if generation > 0 && !spec.persistent {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::PanicAt { batch } => f.panic_at = Some(batch),
+                FaultKind::StallFor { batch, dur } => f.stall = Some((batch, dur)),
+                FaultKind::Throttle { per_batch } => f.throttle = Some(per_batch),
+                FaultKind::FailSubmit { after_batch } => f.fail_submit_after = Some(after_batch),
+                FaultKind::SlowUpload { per_batch } => f.slow_upload = Some(per_batch),
+                FaultKind::CompletionPanicAt { .. } => {}
+            }
+        }
+        f
+    }
+}
+
+/// Per-incarnation resolved fault script (engine-side kinds only).
+#[derive(Debug, Clone, Copy, Default)]
+struct EngineFaults {
+    panic_at: Option<u64>,
+    stall: Option<(u64, Duration)>,
+    throttle: Option<Duration>,
+    fail_submit_after: Option<u64>,
+    slow_upload: Option<Duration>,
+}
+
+// ------------------------------------------------------------- supervision
+
+/// Supervised-restart tuning (DESIGN.md §5.10): a dead replica respawns
+/// after `backoff * 2^consecutive_failures` (capped at `max_backoff`);
+/// `budget` failures within `window` trip the circuit breaker and the
+/// replica is excluded for the life of the pool.
+#[derive(Debug, Clone)]
+pub struct RestartPolicy {
+    pub backoff: Duration,
+    pub max_backoff: Duration,
+    pub budget: usize,
+    pub window: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+            budget: 5,
+            window: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Per-incarnation liveness signal: `progress` is a monotonic counter
+/// beaten at job de-queue, post-upload, and retire; `beat_us` is the
+/// beat's timestamp (micros since the pool epoch).  The watchdog reads
+/// `progress`; the health table renders `beat_us` age.
+#[derive(Debug, Default)]
+struct ReplicaHealth {
+    progress: AtomicU64,
+    beat_us: AtomicU64,
+}
+
+impl ReplicaHealth {
+    fn beat(&self, epoch: &Instant) {
+        self.progress.fetch_add(1, Ordering::SeqCst);
+        self.beat_us.store(epoch.elapsed().as_micros() as u64, Ordering::SeqCst);
+    }
+
+    fn progress(&self) -> u64 {
+        self.progress.load(Ordering::SeqCst)
+    }
+
+    fn beat_age_us(&self, epoch: &Instant) -> u64 {
+        let now = epoch.elapsed().as_micros() as u64;
+        now.saturating_sub(self.beat_us.load(Ordering::SeqCst))
+    }
+}
+
+/// Closable, drainable job queue (replaces the mpsc channel so the
+/// supervisor can reclaim queued jobs from outside).  `close` (graceful
+/// shutdown) rejects new pushes but lets queued work drain; `poison`
+/// (replica death, via `close_and_drain`) additionally tells a
+/// still-running incarnation to abandon work on sight.
+struct JobQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    poisoned: AtomicBool,
+}
+
+struct QueueInner {
+    q: VecDeque<Msg>,
+    closed: bool,
+}
+
+enum TryPop {
+    Msg(Msg),
+    Empty,
+    Closed,
+}
+
+impl JobQueue {
+    fn new() -> Arc<Self> {
+        Arc::new(JobQueue {
+            inner: Mutex::new(QueueInner { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    /// Enqueue; `Err` hands the message back when the queue is closed.
+    fn push(&self, msg: Msg) -> std::result::Result<(), Msg> {
+        let mut inner = self.inner.lock().expect("job queue");
+        if inner.closed {
+            return Err(msg);
+        }
+        inner.q.push_back(msg);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking de-queue; `None` once the queue is closed *and* empty
+    /// (graceful close drains queued work first).
+    fn pop(&self) -> Option<Msg> {
+        let mut inner = self.inner.lock().expect("job queue");
+        loop {
+            if let Some(m) = inner.q.pop_front() {
+                return Some(m);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cv.wait(inner).expect("job queue");
+        }
+    }
+
+    /// Non-blocking de-queue (the overlap loop's try-recv analogue).
+    fn try_pop(&self) -> TryPop {
+        let mut inner = self.inner.lock().expect("job queue");
+        match inner.q.pop_front() {
+            Some(m) => TryPop::Msg(m),
+            None if inner.closed => TryPop::Closed,
+            None => TryPop::Empty,
+        }
+    }
+
+    /// Graceful close: new pushes fail, queued work still drains.
+    fn close(&self) {
+        self.inner.lock().expect("job queue").closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Death close: reject pushes, reclaim everything queued, and poison
+    /// the queue so a hung-but-alive incarnation abandons work on wake.
+    fn close_and_drain(&self) -> Vec<Msg> {
+        self.poisoned.store(true, Ordering::SeqCst);
+        let mut inner = self.inner.lock().expect("job queue");
+        inner.closed = true;
+        let drained = inner.q.drain(..).collect();
+        self.cv.notify_all();
+        drained
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+}
+
+/// Parking lot for device-committed completions.  The engine registers a
+/// completion right before upload and takes it back at retire; when the
+/// supervisor declares the incarnation dead it sweeps the table instead.
+/// The mutex makes take-vs-sweep a race with exactly one winner, so every
+/// completion runs exactly once no matter which side gets there first.
+#[derive(Default)]
+struct SweepTable {
+    inner: Mutex<SweepInner>,
+}
+
+#[derive(Default)]
+struct SweepInner {
+    next: u64,
+    slots: HashMap<u64, Completion>,
+}
+
+impl SweepTable {
+    fn register(&self, done: Completion) -> u64 {
+        let mut inner = self.inner.lock().expect("sweep table");
+        let id = inner.next;
+        inner.next += 1;
+        inner.slots.insert(id, done);
+        id
+    }
+
+    fn take(&self, id: u64) -> Option<Completion> {
+        self.inner.lock().expect("sweep table").slots.remove(&id)
+    }
+
+    fn sweep(&self) -> Vec<Completion> {
+        let mut inner = self.inner.lock().expect("sweep table");
+        inner.slots.drain().map(|(_, c)| c).collect()
+    }
+}
+
+// ------------------------------------------------------------ engine handle
+
 /// Route/policy tables mirrored out of the engine-side manifest at
 /// startup: both sides derive ids from the same `manifest.json`, so the
 /// coordinator's and engine's tables are identical by construction (the
 /// parity the policy integration tests pin).
+#[derive(Clone)]
 struct RouteTables {
     tasks: Vec<String>,
     modes: Vec<String>,
@@ -120,42 +510,74 @@ struct RouteTables {
     policy_exec: Vec<ModeId>,
 }
 
-/// `Send` handle to one engine replica thread.
-pub struct Engine {
-    tx: Sender<Msg>,
-    join: Option<JoinHandle<()>>,
-    /// Route tables mirrored from the engine-side manifest so blocking
-    /// (CLI/test) callers can resolve names without loading it again.
-    tasks: Vec<String>,
-    modes: Vec<String>,
-    policies: Vec<String>,
-    policy_exec: Vec<ModeId>,
+impl RouteTables {
+    fn from_manifest(man: &Manifest) -> Self {
+        RouteTables {
+            tasks: man.task_order.clone(),
+            modes: man.mode_order.clone(),
+            policies: man.policy_order.clone(),
+            policy_exec: man.policy_order.iter().map(|p| man.policies[p].exec_mode).collect(),
+        }
+    }
+
+    fn task_id(&self, name: &str) -> Result<TaskId> {
+        crate::model::manifest::intern_position(&self.tasks, name)
+            .map(TaskId)
+            .with_context(|| format!("unknown task {name:?}"))
+    }
+
+    fn mode_id(&self, name: &str) -> Result<ModeId> {
+        crate::model::manifest::intern_position(&self.modes, name)
+            .map(ModeId)
+            .with_context(|| format!("unknown mode {name:?}"))
+    }
+
+    fn policy_id(&self, name: &str) -> Result<PolicyId> {
+        crate::model::manifest::intern_position(&self.policies, name)
+            .map(PolicyId)
+            .with_context(|| format!("unknown policy {name:?} (have {:?})", self.policies))
+    }
+
+    fn policy_exec_mode(&self, policy: PolicyId) -> Result<ModeId> {
+        self.policy_exec
+            .get(policy.index())
+            .copied()
+            .with_context(|| format!("PolicyId {} out of range", policy.0))
+    }
 }
 
-/// A spawned-but-not-ready replica: the thread is live (uploading
-/// checkpoints, precompiling executables) but has not reported its route
-/// tables yet.  `EnginePool::spawn` starts all replicas in this state so
-/// startup preload/precompile fans out concurrently, then waits on each.
-struct PendingEngine {
-    tx: Sender<Msg>,
+/// `Send` handle to one engine replica thread (blocking/CLI path; the
+/// serving path talks to replicas through `EnginePool`'s slots).
+pub struct Engine {
+    queue: Arc<JobQueue>,
+    join: Option<JoinHandle<()>>,
+    tables: RouteTables,
+}
+
+/// A spawned-but-not-ready replica incarnation: the thread is live
+/// (uploading checkpoints, precompiling executables) but has not
+/// reported its route tables yet.  Startup fans all replicas out in this
+/// state so preload/precompile runs concurrently; supervised restart
+/// holds one while the respawned thread warms up, re-admitting the
+/// replica to dispatch only once `ready_rx` reports success.
+struct PendingReplica {
+    queue: Arc<JobQueue>,
     join: JoinHandle<()>,
+    health: Arc<ReplicaHealth>,
+    sweep: Arc<SweepTable>,
     ready_rx: Receiver<Result<RouteTables>>,
 }
 
-impl PendingEngine {
-    fn wait(self) -> Result<Engine> {
+impl PendingReplica {
+    fn wait(self) -> Result<(LiveReplica, RouteTables)> {
         let tables = self
             .ready_rx
             .recv()
             .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Engine {
-            tx: self.tx,
-            join: Some(self.join),
-            tasks: tables.tasks,
-            modes: tables.modes,
-            policies: tables.policies,
-            policy_exec: tables.policy_exec,
-        })
+        Ok((
+            LiveReplica { queue: self.queue, join: self.join, health: self.health, sweep: self.sweep },
+            tables,
+        ))
     }
 }
 
@@ -169,16 +591,31 @@ pub struct EngineOptions {
     /// Engine replicas behind the pool dispatcher (min 1).  Each replica
     /// owns its own PJRT runtime, checkpoints, and executables.
     pub replicas: usize,
-    /// Test-only service-rate throttle: sleep this long per de-queued
-    /// job, before the cancel check and any device work.  The overload
-    /// integration suite uses it to build deterministic queue pressure
-    /// (`ServerConfig::throttle_batch`); never set in production.
-    pub throttle: Option<std::time::Duration>,
+    /// Heartbeat stall budget: a replica with work in flight whose
+    /// progress counter has not advanced for this long is declared dead
+    /// (swept, drained, restarted).  `None` disables stall detection —
+    /// thread death (panic/exit) is always detected.
+    pub watchdog: Option<Duration>,
+    /// Supervised-restart backoff and circuit-breaker budget.
+    pub restart: RestartPolicy,
+    /// Scripted fault plan (chaos suite; empty in production).
+    pub fault_plan: FaultPlan,
+    /// `Some(latency)` replaces the PJRT device with a fake that sleeps
+    /// `latency` per batch and returns zero logits — the artifact-free
+    /// path the chaos suite runs the full serving machine on.
+    pub fake: Option<Duration>,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
-        EngineOptions { overlap: true, replicas: 1, throttle: None }
+        EngineOptions {
+            overlap: true,
+            replicas: 1,
+            watchdog: None,
+            restart: RestartPolicy::default(),
+            fault_plan: FaultPlan::default(),
+            fake: None,
+        }
     }
 }
 
@@ -197,76 +634,50 @@ impl Engine {
         staging: Arc<StagingPool>,
         options: EngineOptions,
     ) -> Result<Engine> {
-        Self::spawn_replica(artifacts, Arc::new(preload), precompile, pool, staging, options, 0)?
-            .wait()
-    }
-
-    /// Start a replica thread without waiting for readiness (the pool
-    /// spawns all replicas first, then waits, so checkpoint upload and
-    /// executable compilation run concurrently across replicas).
-    fn spawn_replica(
-        artifacts: PathBuf,
-        preload: Arc<Vec<(String, String, Container)>>,
-        precompile: Vec<(String, usize, usize)>,
-        pool: Arc<ThreadPool>,
-        staging: Arc<StagingPool>,
-        options: EngineOptions,
-        replica: usize,
-    ) -> Result<PendingEngine> {
-        let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<Result<RouteTables>>();
-        let join = std::thread::Builder::new()
-            .name(format!("zqhero-engine-{replica}"))
-            .spawn(move || {
-                engine_main(
-                    artifacts, preload, precompile, rx, ready_tx, pool, staging, options, replica,
-                )
-            })
-            .context("spawning engine thread")?;
-        Ok(PendingEngine { tx, join, ready_rx })
+        let spawner = Spawner {
+            artifacts,
+            preload: Arc::new(preload),
+            precompile,
+            pool,
+            staging,
+            options,
+        };
+        let (live, tables) = spawner.spawn(0, 0, Instant::now())?.wait()?;
+        Ok(Engine { queue: live.queue, join: Some(live.join), tables })
     }
 
     /// Enqueue a job; on failure (engine gone) the job is handed back so
     /// the caller can recycle its staging buffer and fail its requests.
     pub fn submit(&self, job: InferJob) -> std::result::Result<(), Box<InferJob>> {
-        self.tx.send(Msg::Infer(Box::new(job))).map_err(|e| match e.0 {
+        self.queue.push(Msg::Infer(Box::new(job))).map_err(|m| match m {
             Msg::Infer(job) => job,
             Msg::Stop => unreachable!("submit only sends Infer"),
         })
     }
 
     pub fn task_id(&self, name: &str) -> Result<TaskId> {
-        crate::model::manifest::intern_position(&self.tasks, name)
-            .map(TaskId)
-            .with_context(|| format!("unknown task {name:?}"))
+        self.tables.task_id(name)
     }
 
     pub fn mode_id(&self, name: &str) -> Result<ModeId> {
-        crate::model::manifest::intern_position(&self.modes, name)
-            .map(ModeId)
-            .with_context(|| format!("unknown mode {name:?}"))
+        self.tables.mode_id(name)
     }
 
     /// Resolve a policy name against the engine's mirrored table (uniform
     /// mode names included).
     pub fn policy_id(&self, name: &str) -> Result<PolicyId> {
-        crate::model::manifest::intern_position(&self.policies, name)
-            .map(PolicyId)
-            .with_context(|| format!("unknown policy {name:?} (have {:?})", self.policies))
+        self.tables.policy_id(name)
     }
 
     /// The mirrored policy-name table (parity checks against the
     /// coordinator's `Manifest::policy_order`).
     pub fn policy_names(&self) -> &[String] {
-        &self.policies
+        &self.tables.policies
     }
 
     /// The executable mode this policy selects on the engine.
     pub fn policy_exec_mode(&self, policy: PolicyId) -> Result<ModeId> {
-        self.policy_exec
-            .get(policy.index())
-            .copied()
-            .with_context(|| format!("PolicyId {} out of range", policy.0))
+        self.tables.policy_exec_mode(policy)
     }
 
     /// Synchronous convenience call (CLI paths, tests).  `route` is a
@@ -295,7 +706,7 @@ impl Engine {
             policy: self.policy_id(route)?,
             staging,
             cancel: None,
-            done: Box::new(move |res| {
+            done: Completion::new(move |res| {
                 let _ = reply.send(res);
             }),
         })
@@ -306,28 +717,145 @@ impl Engine {
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Stop);
+        // graceful close: queued work drains, then the loop exits
+        self.queue.close();
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
     }
 }
 
+// -------------------------------------------------------------- the device
+
+/// The execution backend behind one replica: the real PJRT runtime, or a
+/// fake that mimics its timing surface (sleep per batch, zero logits)
+/// without artifacts — what lets the chaos suite drive the whole
+/// supervision machine on a bare checkout.
+enum EngineDevice {
+    Real(Box<Runtime>),
+    Fake { manifest: Manifest, latency: Duration },
+}
+
+enum EngineInputs {
+    Real(InputBufs),
+    Fake { rows: usize },
+}
+
+enum EnginePending {
+    Real(PendingOutputs),
+    Fake { rows: usize },
+}
+
+impl EngineDevice {
+    fn open(artifacts: &std::path::Path, fake: Option<Duration>) -> Result<EngineDevice> {
+        let manifest = Manifest::load(artifacts)?;
+        match fake {
+            Some(latency) => Ok(EngineDevice::Fake { manifest, latency }),
+            None => Runtime::new(manifest).map(|rt| EngineDevice::Real(Box::new(rt))),
+        }
+    }
+
+    fn manifest(&self) -> &Manifest {
+        match self {
+            EngineDevice::Real(rt) => &rt.manifest,
+            EngineDevice::Fake { manifest, .. } => manifest,
+        }
+    }
+
+    /// Upload checkpoints + compile the executable grid (fake: no-op —
+    /// there is nothing to warm, readiness is immediate).
+    fn preload(
+        &mut self,
+        preload: &[(String, String, Container)],
+        precompile: &[(String, usize, usize)],
+    ) -> Result<()> {
+        if let EngineDevice::Real(rt) = self {
+            for (task, mode, ckpt) in preload {
+                rt.upload_checkpoint(task, mode, ckpt)?;
+            }
+            for (mode, seq, bucket) in precompile {
+                rt.model_exe(mode, *seq, *bucket)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn upload(&self, host: &StagingBuf) -> Result<EngineInputs> {
+        match self {
+            EngineDevice::Real(rt) => rt
+                .upload_inputs(host.seq, host.bucket, &host.ids, &host.type_ids, &host.mask)
+                .map(EngineInputs::Real),
+            EngineDevice::Fake { .. } => {
+                let n = host.bucket * host.seq;
+                if host.ids.len() != n || host.type_ids.len() != n || host.mask.len() != n {
+                    anyhow::bail!(
+                        "ids/type_ids/mask length mismatch for bucket {} * seq {}",
+                        host.bucket,
+                        host.seq
+                    );
+                }
+                Ok(EngineInputs::Fake { rows: host.bucket })
+            }
+        }
+    }
+
+    fn execute(
+        &mut self,
+        task: TaskId,
+        mode: ModeId,
+        inputs: &EngineInputs,
+    ) -> Result<EnginePending> {
+        match (self, inputs) {
+            (EngineDevice::Real(rt), EngineInputs::Real(i)) => {
+                rt.execute_model(task, mode, i).map(EnginePending::Real)
+            }
+            (EngineDevice::Fake { latency, .. }, EngineInputs::Fake { rows }) => {
+                // the fake "device" is busy for the scripted latency —
+                // blocking here gives tests a deterministic service rate
+                std::thread::sleep(*latency);
+                Ok(EnginePending::Fake { rows: *rows })
+            }
+            _ => unreachable!("device and inputs come from the same replica"),
+        }
+    }
+
+    fn readback(&self, pending: EnginePending) -> Result<Tensor> {
+        match (self, pending) {
+            (EngineDevice::Real(rt), EnginePending::Real(p)) => rt.readback_logits(p),
+            (EngineDevice::Fake { manifest, .. }, EnginePending::Fake { rows }) => {
+                let nl = manifest.model.num_labels;
+                Ok(Tensor::f32(vec![rows, nl], vec![0.0; rows * nl]))
+            }
+            _ => unreachable!("device and pending come from the same replica"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- dispatch
+
 /// Load-aware replica dispatch state, shared by `EnginePool::submit`
-/// (batcher thread) and batch completions (worker pool): per-replica
-/// in-flight batch counts plus per-group pins.  A (task, policy) group is
-/// pinned to one replica while it has batches in flight — same-replica
-/// FIFO execution keeps its batches in submit order — and may migrate to
-/// the least-loaded replica once it drains (DESIGN.md §5.7).  Pure state
-/// machine: unit- and property-tested without engine threads.
+/// (batcher thread), batch completions (worker pool), and the supervisor:
+/// per-replica in-flight batch counts, liveness, incarnation generations,
+/// and per-group pins.  A (task, policy) group is pinned to one replica
+/// while it has batches in flight — same-replica FIFO execution keeps its
+/// batches in submit order — and may migrate to the least-loaded replica
+/// once it drains (DESIGN.md §5.7).  Every assignment is tagged with the
+/// replica's generation; `mark_dead` bumps it, so completions issued to a
+/// dead incarnation can never touch a revived replica's accounting
+/// (DESIGN.md §5.10).  Pure state machine: unit- and property-tested
+/// without engine threads.
 pub struct DispatchState {
     /// Batches submitted to each replica and not yet completed.
     inflight: Vec<AtomicUsize>,
-    /// Replicas whose engine thread is gone (submit failed): excluded
-    /// from least-loaded choice so a dead replica — which would
+    /// Replicas currently out of service (dead, restarting, or excluded):
+    /// excluded from least-loaded choice so a dead replica — which would
     /// otherwise sit at zero in-flight and win every tie — cannot
     /// attract all traffic and turn one failure into a full outage.
-    dead: Vec<std::sync::atomic::AtomicBool>,
+    dead: Vec<AtomicBool>,
+    /// Incarnation counter per replica: bumped by `mark_dead`, left
+    /// unchanged by `revive`.  A completion whose generation predates
+    /// the current one is stale and dropped.
+    generation: Vec<AtomicU64>,
     /// group -> (pinned replica, group batches in flight).  Entries exist
     /// only while a group has in-flight batches, so the map stays at the
     /// handful of currently-active routes.
@@ -339,7 +867,8 @@ impl DispatchState {
         assert!(replicas > 0, "dispatch needs at least one replica");
         DispatchState {
             inflight: (0..replicas).map(|_| AtomicUsize::new(0)).collect(),
-            dead: (0..replicas).map(|_| std::sync::atomic::AtomicBool::new(false)).collect(),
+            dead: (0..replicas).map(|_| AtomicBool::new(false)).collect(),
+            generation: (0..replicas).map(|_| AtomicU64::new(0)).collect(),
             pins: Mutex::new(HashMap::new()),
         }
     }
@@ -357,6 +886,11 @@ impl DispatchState {
         !self.dead[replica].load(Ordering::SeqCst)
     }
 
+    /// The replica's incarnation generation (== its death count).
+    pub fn generation(&self, replica: usize) -> u64 {
+        self.generation[replica].load(Ordering::SeqCst)
+    }
+
     /// Groups currently pinned to a replica (tests / introspection).
     pub fn pinned_groups(&self) -> usize {
         self.pins.lock().expect("dispatch pins").len()
@@ -367,7 +901,9 @@ impl DispatchState {
     /// else the live replica with the fewest in-flight batches (ties
     /// break to the lowest index; if every replica is dead the choice
     /// falls back to all of them — the submit will fail either way).
-    pub fn assign(&self, key: (TaskId, PolicyId)) -> usize {
+    /// Returns the replica and its generation at assignment time; the
+    /// completion must echo both to `complete`.
+    pub fn assign(&self, key: (TaskId, PolicyId)) -> (usize, u64) {
         let mut pins = self.pins.lock().expect("dispatch pins");
         let replica = match pins.get_mut(&key) {
             Some((replica, n)) => {
@@ -390,15 +926,19 @@ impl DispatchState {
         // incremented under the pins lock so a concurrent completion
         // cannot interleave between replica choice and accounting
         self.inflight[replica].fetch_add(1, Ordering::SeqCst);
-        replica
+        (replica, self.generation[replica].load(Ordering::SeqCst))
     }
 
     /// Mark one batch of `key` complete on `replica`; the group unpins
     /// (and may migrate on its next batch) when its last in-flight batch
-    /// completes.  A completion whose group is no longer pinned to
-    /// `replica` is stale — the replica died and `mark_dead` purged its
-    /// pins — and is dropped without touching the live accounting.
-    pub fn complete(&self, key: (TaskId, PolicyId), replica: usize) {
+    /// completes.  A completion tagged with a stale generation — or whose
+    /// group is no longer pinned to `replica` — belongs to a dead
+    /// incarnation whose accounting `mark_dead` already purged, and is
+    /// dropped without touching the live state.
+    pub fn complete(&self, key: (TaskId, PolicyId), replica: usize, generation: u64) {
+        if self.generation[replica].load(Ordering::SeqCst) != generation {
+            return;
+        }
         let mut pins = self.pins.lock().expect("dispatch pins");
         match pins.get_mut(&key) {
             Some((r, n)) if *r == replica => {
@@ -412,38 +952,233 @@ impl DispatchState {
         }
     }
 
-    /// Record that `replica`'s engine thread is gone: exclude it from
-    /// future least-loaded choices and purge its pins so affected groups
-    /// migrate on their next batch (their dead-queue batches can never
-    /// complete; dropped completions surface as hangups upstream).
+    /// Take `replica` out of service: exclude it from least-loaded
+    /// choices, bump its generation (staling every outstanding
+    /// completion), and purge its pins so affected groups migrate on
+    /// their next batch.  The supervisor pairs this with a queue drain +
+    /// sweep so none of those completions is lost — they all run with
+    /// `ReplicaFailed` or are resubmitted elsewhere.
     pub fn mark_dead(&self, replica: usize) {
         self.dead[replica].store(true, Ordering::SeqCst);
+        self.generation[replica].fetch_add(1, Ordering::SeqCst);
         let mut pins = self.pins.lock().expect("dispatch pins");
         pins.retain(|_, (r, _)| *r != replica);
-        // its queued batches can never complete and their stale
-        // completions are dropped, so zero the counter — introspection
-        // and the all-dead fallback must not see phantom in-flight work
+        // outstanding completions are now stale no-ops, so zero the
+        // counter — introspection and the all-dead fallback must not see
+        // phantom in-flight work
         self.inflight[replica].store(0, Ordering::SeqCst);
+    }
+
+    /// Re-admit a restarted replica to dispatch.  The generation keeps
+    /// its post-death value, so completions from the previous incarnation
+    /// stay stale; in-flight is already zero (`mark_dead` cleared it and
+    /// nothing routed here while dead).
+    pub fn revive(&self, replica: usize) {
+        self.dead[replica].store(false, Ordering::SeqCst);
     }
 }
 
-/// N engine replicas behind a load-aware dispatcher (DESIGN.md §5.7).
-/// Startup fans the shared-read `preload` out to all replica threads
-/// concurrently (each uploads to its own device context and compiles its
-/// own executables — PJRT handles are not `Send`); shutdown stops every
-/// replica first, then joins them in replica order.
+// -------------------------------------------------------------------- pool
+
+/// Supervision lifecycle events, delivered to the pool's event hook from
+/// the supervisor thread (the coordinator forwards them to the recorder's
+/// replica-health ledger).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolEvent {
+    /// The replica was declared dead (thread death or heartbeat stall);
+    /// `failed_batches` counts the device-committed batches swept with
+    /// `ReplicaFailed` (drained-but-recoverable jobs are resubmitted and
+    /// not counted here).
+    ReplicaFailed { replica: usize, generation: u64, failed_batches: u64 },
+    /// A respawned incarnation reported ready and rejoined dispatch.
+    ReplicaRestarted { replica: usize, generation: u64 },
+    /// The circuit breaker tripped: no further restarts for this replica.
+    ReplicaExcluded { replica: usize },
+    /// Periodic liveness sample for a live replica.
+    Heartbeat { replica: usize, generation: u64, age_us: u64 },
+}
+
+/// Pool event subscriber (see `EnginePool::set_event_hook`).
+pub type PoolEventHook = Arc<dyn Fn(PoolEvent) + Send + Sync>;
+
+/// Everything needed to (re)spawn a replica incarnation — kept by the
+/// pool so the supervisor can respawn with the exact startup inputs.
+struct Spawner {
+    artifacts: PathBuf,
+    preload: Arc<Vec<(String, String, Container)>>,
+    precompile: Vec<(String, usize, usize)>,
+    pool: Arc<ThreadPool>,
+    staging: Arc<StagingPool>,
+    options: EngineOptions,
+}
+
+impl Spawner {
+    fn spawn(&self, replica: usize, generation: u64, epoch: Instant) -> Result<PendingReplica> {
+        let queue = JobQueue::new();
+        let health = Arc::new(ReplicaHealth::default());
+        let sweep = Arc::new(SweepTable::default());
+        let (ready_tx, ready_rx) = channel::<Result<RouteTables>>();
+        let ctx = EngineCtx {
+            artifacts: self.artifacts.clone(),
+            preload: Arc::clone(&self.preload),
+            precompile: self.precompile.clone(),
+            queue: Arc::clone(&queue),
+            ready_tx,
+            pool: Arc::clone(&self.pool),
+            staging: Arc::clone(&self.staging),
+            options: self.options.clone(),
+            replica,
+            generation,
+            health: Arc::clone(&health),
+            sweep: Arc::clone(&sweep),
+            epoch,
+        };
+        let join = std::thread::Builder::new()
+            .name(format!("zqhero-engine-{replica}"))
+            .spawn(move || engine_main(ctx))
+            .context("spawning engine thread")?;
+        Ok(PendingReplica { queue, join, health, sweep, ready_rx })
+    }
+}
+
+/// One live replica incarnation's handles.
+struct LiveReplica {
+    queue: Arc<JobQueue>,
+    join: JoinHandle<()>,
+    health: Arc<ReplicaHealth>,
+    sweep: Arc<SweepTable>,
+}
+
+/// Supervision state machine per replica slot (DESIGN.md §5.10):
+/// `Live -> (death) -> Backoff -> Restarting -> Live`, or `-> Excluded`
+/// once the restart budget is spent.
+enum SlotState {
+    Live(LiveReplica),
+    Backoff { until: Instant },
+    Restarting { live: LiveReplica, ready_rx: Receiver<Result<RouteTables>> },
+    Excluded,
+}
+
+struct SlotInner {
+    state: SlotState,
+    /// Successful supervised restarts.
+    restarts: u64,
+    /// Consecutive failures since the last successful restart (backoff
+    /// exponent).
+    consecutive: u32,
+    /// Failure timestamps inside the circuit-breaker window.
+    failures: VecDeque<Instant>,
+    /// Device-committed batches lost to this replica's deaths.
+    failed_batches: u64,
+}
+
+struct ReplicaSlot {
+    inner: Mutex<SlotInner>,
+}
+
+/// Shared pool state: the dispatcher, the per-replica slots, and the
+/// spawner the supervisor respawns incarnations with.
+struct PoolShared {
+    state: DispatchState,
+    slots: Vec<ReplicaSlot>,
+    tables: RouteTables,
+    spawner: Spawner,
+    hook: RwLock<Option<PoolEventHook>>,
+    stop: AtomicBool,
+    /// Pool birth — the zero point for heartbeat timestamps.
+    epoch: Instant,
+}
+
+impl PoolShared {
+    fn emit(&self, ev: PoolEvent) {
+        if let Some(h) = self.hook.read().expect("pool event hook").as_ref() {
+            h(ev);
+        }
+    }
+
+    /// Route one batch through the load-aware dispatcher.  The completion
+    /// is wrapped so the in-flight accounting decrements exactly when the
+    /// batch's completion runs (generation-tagged, so it no-ops if the
+    /// replica dies first).  A push failure marks that replica dead and
+    /// the batch retries on the next live replica — one dead replica
+    /// costs a re-route, not a batch of client errors.  `Err` means every
+    /// replica is gone; the handed-back job's `done` must still be
+    /// invoked exactly once (its drop-guard enforces that).
+    fn submit_inner(self: &Arc<Self>, job: InferJob) -> std::result::Result<(), Box<InferJob>> {
+        let key = (job.task, job.policy);
+        let mut job = job;
+        for _ in 0..self.state.replicas() {
+            let (replica, generation) = self.state.assign(key);
+            let shared = Arc::clone(self);
+            let InferJob { task, policy, staging, cancel, done } = job;
+            let wrapped = InferJob {
+                task,
+                policy,
+                staging,
+                cancel,
+                done: Completion::new(move |res| {
+                    // decrement before the inner completion so a panicking
+                    // callback (isolated by the worker pool) cannot leak a
+                    // pin or an in-flight count.  After a failed attempt
+                    // or a replica death this is stale and dropped.
+                    shared.state.complete(key, replica, generation);
+                    done.run(res);
+                }),
+            };
+            let push = {
+                let slot = self.slots[replica].inner.lock().expect("replica slot");
+                match &slot.state {
+                    SlotState::Live(l) => l.queue.push(Msg::Infer(Box::new(wrapped))),
+                    // not serving: fail this attempt without touching the
+                    // (possibly warming) incarnation's queue
+                    _ => Err(Msg::Infer(Box::new(wrapped))),
+                }
+            };
+            match push {
+                Ok(()) => return Ok(()),
+                Err(Msg::Infer(boxed)) => {
+                    // the replica cannot take work: take it out of
+                    // dispatch (the supervisor owns recovery) and retry
+                    // the batch elsewhere.  The wrapped completion's
+                    // accounting is already stale via the generation bump.
+                    self.state.mark_dead(replica);
+                    job = *boxed;
+                }
+                Err(Msg::Stop) => unreachable!("submit only sends Infer"),
+            }
+        }
+        Err(Box::new(job))
+    }
+
+    /// Fail an orphaned job that could not be resubmitted anywhere:
+    /// recycle its staging buffer and deliver `ReplicaFailed` on the
+    /// worker pool.
+    fn fail_job(&self, job: InferJob) {
+        self.spawner.staging.put(job.staging);
+        let done = job.done;
+        self.spawner.pool.spawn(move || done.run(Err(anyhow::Error::new(ReplicaFailed))));
+    }
+}
+
+/// N supervised engine replicas behind a load-aware dispatcher
+/// (DESIGN.md §5.7, §5.10).  Startup fans the shared-read `preload` out
+/// to all replica threads concurrently (each uploads to its own device
+/// context and compiles its own executables — PJRT handles are not
+/// `Send`); a supervisor thread then watches heartbeats, reconciles
+/// failed replicas, and respawns them under backoff.  Shutdown stops the
+/// supervisor, closes every queue (queued work drains), then joins the
+/// replica threads in slot order.
 pub struct EnginePool {
-    /// Dropped in declaration order: each `Engine::drop` joins its
-    /// (already stopped) thread, so shutdown joins replicas 0..N in order.
-    replicas: Vec<Engine>,
-    state: Arc<DispatchState>,
+    shared: Arc<PoolShared>,
+    supervisor: Option<JoinHandle<()>>,
 }
 
 impl EnginePool {
-    /// Spawn `options.replicas` engine threads.  All replicas start
-    /// concurrently (checkpoint upload + executable precompile overlap
-    /// across threads) and share one read-only preload set; the call
-    /// returns once every replica reports ready, or the first error.
+    /// Spawn `options.replicas` engine threads plus the supervisor.  All
+    /// replicas start concurrently (checkpoint upload + executable
+    /// precompile overlap across threads) and share one read-only preload
+    /// set; the call returns once every replica reports ready, or the
+    /// first error.
     pub fn spawn(
         artifacts: PathBuf,
         preload: Vec<(String, String, Container)>,
@@ -453,103 +1188,134 @@ impl EnginePool {
         options: EngineOptions,
     ) -> Result<EnginePool> {
         let n = options.replicas.max(1);
-        let preload = Arc::new(preload);
-        let pending: Vec<PendingEngine> = (0..n)
-            .map(|i| {
-                Engine::spawn_replica(
-                    artifacts.clone(),
-                    Arc::clone(&preload),
-                    precompile.clone(),
-                    Arc::clone(&pool),
-                    Arc::clone(&staging),
-                    options.clone(),
-                    i,
-                )
-            })
-            .collect::<Result<_>>()?;
-        // wait in replica order; if one fails, dropping the remaining
-        // pending handles closes their channels and the threads exit on
-        // their own after startup
-        let replicas = pending
-            .into_iter()
-            .map(PendingEngine::wait)
-            .collect::<Result<Vec<_>>>()?;
-        Ok(EnginePool { state: Arc::new(DispatchState::new(n)), replicas })
+        let epoch = Instant::now();
+        let spawner =
+            Spawner { artifacts, preload: Arc::new(preload), precompile, pool, staging, options };
+        let pending: Vec<PendingReplica> =
+            (0..n).map(|i| spawner.spawn(i, 0, epoch)).collect::<Result<_>>()?;
+        // wait in replica order; if one fails, close every other queue so
+        // the already-started threads drain out and exit on their own
+        let mut tables: Option<RouteTables> = None;
+        let mut lives: Vec<LiveReplica> = Vec::with_capacity(n);
+        let mut failure: Option<anyhow::Error> = None;
+        let mut iter = pending.into_iter();
+        for p in iter.by_ref() {
+            match p.wait() {
+                Ok((live, t)) => {
+                    tables.get_or_insert(t);
+                    lives.push(live);
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            for l in &lives {
+                l.queue.close();
+            }
+            for p in iter {
+                p.queue.close();
+            }
+            return Err(e);
+        }
+        let mut slots = Vec::with_capacity(n);
+        for live in lives {
+            slots.push(ReplicaSlot {
+                inner: Mutex::new(SlotInner {
+                    state: SlotState::Live(live),
+                    restarts: 0,
+                    consecutive: 0,
+                    failures: VecDeque::new(),
+                    failed_batches: 0,
+                }),
+            });
+        }
+        let shared = Arc::new(PoolShared {
+            state: DispatchState::new(n),
+            slots,
+            tables: tables.expect("at least one replica"),
+            spawner,
+            hook: RwLock::new(None),
+            stop: AtomicBool::new(false),
+            epoch,
+        });
+        let sup = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("zqhero-supervisor".into())
+                .spawn(move || supervisor_main(shared))
+                .context("spawning supervisor thread")?
+        };
+        Ok(EnginePool { shared, supervisor: Some(sup) })
     }
 
     pub fn replicas(&self) -> usize {
-        self.replicas.len()
+        self.shared.slots.len()
+    }
+
+    /// Replicas currently live and accepting work.
+    pub fn live_replicas(&self) -> usize {
+        self.shared
+            .slots
+            .iter()
+            .filter(|s| matches!(s.inner.lock().expect("replica slot").state, SlotState::Live(_)))
+            .count()
+    }
+
+    /// Whether the circuit breaker has permanently excluded `replica`.
+    pub fn replica_excluded(&self, replica: usize) -> bool {
+        matches!(
+            self.shared.slots[replica].inner.lock().expect("replica slot").state,
+            SlotState::Excluded
+        )
+    }
+
+    /// Successful supervised restarts of `replica`.
+    pub fn replica_restarts(&self, replica: usize) -> u64 {
+        self.shared.slots[replica].inner.lock().expect("replica slot").restarts
     }
 
     /// The pool's dispatch accounting (tests / introspection).
     pub fn dispatch_state(&self) -> &DispatchState {
-        &self.state
+        &self.shared.state
     }
 
-    /// Route one batch through the load-aware dispatcher.  The completion
-    /// is wrapped so the in-flight accounting decrements exactly when the
-    /// batch's completion runs.  A submit failure marks that replica dead
-    /// (its pins are purged, making the failed attempt's wrapper a stale
-    /// no-op) and the batch retries on the next live replica — one dead
-    /// replica costs a re-route, not a batch of client errors.  `Err`
-    /// means every replica is gone; the handed-back job's `done` must
-    /// still be invoked exactly once (as `Coordinator::dispatch` does).
+    /// Subscribe to supervision events (replica failure/restart/
+    /// exclusion, heartbeats).  One subscriber; installing replaces the
+    /// previous hook.  Called from the supervisor thread — keep it quick
+    /// and never call back into the pool.
+    pub fn set_event_hook(&self, hook: PoolEventHook) {
+        *self.shared.hook.write().expect("pool event hook") = Some(hook);
+    }
+
+    /// Route one batch through the load-aware dispatcher (see
+    /// `PoolShared::submit_inner`).
     pub fn submit(&self, job: InferJob) -> std::result::Result<(), Box<InferJob>> {
-        let key = (job.task, job.policy);
-        let mut job = job;
-        for _ in 0..self.replicas.len() {
-            let replica = self.state.assign(key);
-            let state = Arc::clone(&self.state);
-            let InferJob { task, policy, staging, cancel, done } = job;
-            let wrapped = InferJob {
-                task,
-                policy,
-                staging,
-                cancel,
-                done: Box::new(move |res| {
-                    // decrement before the inner completion so a panicking
-                    // callback (isolated by the worker pool) cannot leak a
-                    // pin or an in-flight count.  After a failed attempt
-                    // this is stale (the pin was purged by mark_dead) and
-                    // complete() drops it.
-                    state.complete(key, replica);
-                    done(res);
-                }),
-            };
-            match self.replicas[replica].submit(wrapped) {
-                Ok(()) => return Ok(()),
-                Err(boxed) => {
-                    // the replica's engine thread is gone: exclude it
-                    // from least-loaded choice (at zero in-flight it
-                    // would win every tie) and retry the batch elsewhere
-                    self.state.mark_dead(replica);
-                    job = *boxed;
-                }
-            }
-        }
-        Err(Box::new(job))
+        self.shared.submit_inner(job)
     }
 
     pub fn task_id(&self, name: &str) -> Result<TaskId> {
-        self.replicas[0].task_id(name)
+        self.shared.tables.task_id(name)
     }
 
     pub fn mode_id(&self, name: &str) -> Result<ModeId> {
-        self.replicas[0].mode_id(name)
+        self.shared.tables.mode_id(name)
     }
 
     pub fn policy_id(&self, name: &str) -> Result<PolicyId> {
-        self.replicas[0].policy_id(name)
+        self.shared.tables.policy_id(name)
     }
 
     /// The mirrored policy-name table (identical across replicas: every
     /// replica derives it from the same `manifest.json`).
     pub fn policy_names(&self) -> &[String] {
-        self.replicas[0].policy_names()
+        &self.shared.tables.policies
     }
 
     pub fn policy_exec_mode(&self, policy: PolicyId) -> Result<ModeId> {
-        self.replicas[0].policy_exec_mode(policy)
+        self.shared.tables.policy_exec_mode(policy)
     }
 
     // NB: no pool-level `infer_blocking` — blocking convenience calls go
@@ -559,19 +1325,216 @@ impl EnginePool {
 
 impl Drop for EnginePool {
     fn drop(&mut self) {
-        // stop every replica first so their queues drain concurrently;
-        // the Vec drop then runs Engine::drop per replica, joining the
-        // threads in replica order (deterministic shutdown)
-        for e in &self.replicas {
-            let _ = e.tx.send(Msg::Stop);
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.supervisor.take() {
+            let _ = j.join();
+        }
+        // close every queue first so replicas drain concurrently, then
+        // join the threads in slot order (deterministic shutdown).
+        // Threads abandoned by the supervisor (hung incarnations) are not
+        // here — they exit on their own when they observe poisoning.
+        let mut joins = Vec::new();
+        for slot in &self.shared.slots {
+            let mut inner = slot.inner.lock().expect("replica slot");
+            match std::mem::replace(&mut inner.state, SlotState::Excluded) {
+                SlotState::Live(l) => {
+                    l.queue.close();
+                    joins.push(l.join);
+                }
+                SlotState::Restarting { live, .. } => {
+                    live.queue.close();
+                    joins.push(live.join);
+                }
+                _ => {}
+            }
+        }
+        for j in joins {
+            let _ = j.join();
         }
     }
 }
 
-/// One launched-but-not-read-back batch (the pipeline register).
+// -------------------------------------------------------------- supervisor
+
+fn supervisor_main(shared: Arc<PoolShared>) {
+    let options = &shared.spawner.options;
+    // poll fast enough to resolve the watchdog budget, slow enough to
+    // stay invisible in profiles
+    let tick = match options.watchdog {
+        Some(w) => (w / 4).clamp(Duration::from_millis(1), Duration::from_millis(50)),
+        None => Duration::from_millis(10),
+    };
+    let n = shared.slots.len();
+    // (progress value, when it last changed) per replica
+    let mut last: Vec<(u64, Instant)> = (0..n).map(|_| (0, Instant::now())).collect();
+    while !shared.stop.load(Ordering::SeqCst) {
+        for r in 0..n {
+            poll_replica(&shared, r, &mut last[r]);
+        }
+        std::thread::sleep(tick);
+    }
+}
+
+/// One supervision step for one replica slot.  Slot-state mutation runs
+/// under the slot lock; orphan resubmission and event delivery are
+/// deferred until the lock is released (`submit_inner` takes slot locks,
+/// and the hook may take foreign ones).
+fn poll_replica(shared: &Arc<PoolShared>, r: usize, last: &mut (u64, Instant)) {
+    let now = Instant::now();
+    let watchdog = shared.spawner.options.watchdog;
+    let policy = &shared.spawner.options.restart;
+    let mut events: Vec<PoolEvent> = Vec::new();
+    let mut orphans: Vec<Box<InferJob>> = Vec::new();
+    {
+        let mut inner = shared.slots[r].inner.lock().expect("replica slot");
+        let state = std::mem::replace(&mut inner.state, SlotState::Excluded);
+        inner.state = match state {
+            SlotState::Live(live) => {
+                let progress = live.health.progress();
+                if progress != last.0 {
+                    *last = (progress, now);
+                }
+                let stalled = watchdog.is_some_and(|w| {
+                    shared.state.inflight(r) > 0 && now.duration_since(last.1) > w
+                });
+                if live.join.is_finished() || stalled {
+                    fail_replica(shared, r, live, &mut inner, now, &mut events, &mut orphans)
+                } else {
+                    events.push(PoolEvent::Heartbeat {
+                        replica: r,
+                        generation: shared.state.generation(r),
+                        age_us: live.health.beat_age_us(&shared.epoch),
+                    });
+                    SlotState::Live(live)
+                }
+            }
+            SlotState::Backoff { until } if now >= until => {
+                match shared.spawner.spawn(r, shared.state.generation(r), shared.epoch) {
+                    Ok(p) => SlotState::Restarting {
+                        live: LiveReplica {
+                            queue: p.queue,
+                            join: p.join,
+                            health: p.health,
+                            sweep: p.sweep,
+                        },
+                        ready_rx: p.ready_rx,
+                    },
+                    Err(_) => breaker_step(r, &mut inner, policy, now, &mut events),
+                }
+            }
+            SlotState::Restarting { live, ready_rx } => match ready_rx.try_recv() {
+                Ok(Ok(_tables)) => {
+                    inner.restarts += 1;
+                    inner.consecutive = 0;
+                    shared.state.revive(r);
+                    *last = (live.health.progress(), now);
+                    events.push(PoolEvent::ReplicaRestarted {
+                        replica: r,
+                        generation: shared.state.generation(r),
+                    });
+                    SlotState::Live(live)
+                }
+                // still warming (preload/precompile) — keep watching the
+                // other replicas rather than blocking on this one
+                Err(TryRecvError::Empty) => SlotState::Restarting { live, ready_rx },
+                Ok(Err(_)) | Err(TryRecvError::Disconnected) => {
+                    breaker_step(r, &mut inner, policy, now, &mut events)
+                }
+            },
+            other => other,
+        };
+    }
+    // recoverable (never-uploaded) orphans ride a live replica; if none
+    // is left their drop-guarded completions still deliver ReplicaFailed
+    for job in orphans {
+        if let Err(job) = shared.submit_inner(*job) {
+            shared.fail_job(*job);
+        }
+    }
+    for ev in events {
+        shared.emit(ev);
+    }
+}
+
+/// Declare a live incarnation dead: poison + drain its queue, stale its
+/// dispatch accounting, sweep its device-committed completions (each
+/// runs exactly once with `ReplicaFailed`), and move the slot into
+/// backoff — or trip the circuit breaker.  Runs under the slot lock;
+/// drained jobs are handed back to the caller for resubmission after the
+/// lock drops.
+fn fail_replica(
+    shared: &Arc<PoolShared>,
+    r: usize,
+    live: LiveReplica,
+    inner: &mut SlotInner,
+    now: Instant,
+    events: &mut Vec<PoolEvent>,
+    orphans: &mut Vec<Box<InferJob>>,
+) -> SlotState {
+    // order matters: close the queue first (new pushes fail -> reroute),
+    // then bump the generation (outstanding completions go stale), then
+    // sweep (anything device-committed fails exactly once)
+    let drained = live.queue.close_and_drain();
+    shared.state.mark_dead(r);
+    let generation = shared.state.generation(r);
+    let swept = live.sweep.sweep();
+    inner.failed_batches += swept.len() as u64;
+    events.push(PoolEvent::ReplicaFailed {
+        replica: r,
+        generation,
+        failed_batches: swept.len() as u64,
+    });
+    for done in swept {
+        shared.spawner.pool.spawn(move || done.run(Err(anyhow::Error::new(ReplicaFailed))));
+    }
+    for msg in drained {
+        if let Msg::Infer(job) = msg {
+            orphans.push(job);
+        }
+    }
+    if live.join.is_finished() {
+        let _ = live.join.join();
+    }
+    // else: the thread is hung inside a device call — abandon the handle;
+    // the poisoned queue makes it abandon work and exit when it wakes,
+    // and generation tags + the swept table neutralize its late effects
+    breaker_step(r, inner, &shared.spawner.options.restart, now, events)
+}
+
+/// Record one failure against the restart budget: exclude the replica
+/// when `budget` failures land inside `window`, otherwise schedule a
+/// respawn after the exponential backoff.
+fn breaker_step(
+    r: usize,
+    inner: &mut SlotInner,
+    policy: &RestartPolicy,
+    now: Instant,
+    events: &mut Vec<PoolEvent>,
+) -> SlotState {
+    inner.failures.push_back(now);
+    while inner.failures.front().is_some_and(|t| now.duration_since(*t) > policy.window) {
+        inner.failures.pop_front();
+    }
+    if inner.failures.len() >= policy.budget.max(1) {
+        events.push(PoolEvent::ReplicaExcluded { replica: r });
+        SlotState::Excluded
+    } else {
+        let exp = inner.consecutive.min(16);
+        inner.consecutive += 1;
+        let delay = policy.backoff.saturating_mul(1u32 << exp).min(policy.max_backoff);
+        SlotState::Backoff { until: now + delay }
+    }
+}
+
+// ------------------------------------------------------------- engine loop
+
+/// One launched-but-not-read-back batch (the pipeline register).  The
+/// completion itself is parked in the sweep table; `done_id` redeems it
+/// at retire (or the supervisor sweeps it on death — whoever takes the
+/// slot first wins).
 struct InFlight {
-    pending: PendingOutputs,
-    done: Completion,
+    pending: EnginePending,
+    done_id: u64,
     /// job receipt (before upload) — the `engine_us` clock.
     t_job: Instant,
     /// post-upload launch point — the `exec_us` clock.
@@ -581,9 +1544,11 @@ struct InFlight {
 }
 
 /// Stage 3: synchronize, copy logits to host, and hand de-batching +
-/// reply dispatch to the worker pool.
-fn retire(rt: &Runtime, f: InFlight, pool: &ThreadPool, replica: usize) {
-    let res = rt.readback_logits(f.pending).map(|logits| InferDone {
+/// reply dispatch to the worker pool.  A swept batch (the supervisor
+/// already failed it) is skipped entirely.
+fn retire(dev: &EngineDevice, f: InFlight, pool: &ThreadPool, replica: usize, sweep: &SweepTable) {
+    let Some(done) = sweep.take(f.done_id) else { return };
+    let res = dev.readback(f.pending).map(|logits| InferDone {
         logits,
         exec_us: f.t0.elapsed().as_micros() as u64,
         upload_us: f.upload_us,
@@ -591,49 +1556,53 @@ fn retire(rt: &Runtime, f: InFlight, pool: &ThreadPool, replica: usize) {
         replica,
         exec_seq: f.exec_seq,
     });
-    let done = f.done;
-    pool.spawn(move || done(res));
+    pool.spawn(move || done.run(res));
 }
 
-#[allow(clippy::too_many_arguments)]
-fn engine_main(
+/// Startup + loop inputs for one replica incarnation.
+struct EngineCtx {
     artifacts: PathBuf,
     preload: Arc<Vec<(String, String, Container)>>,
     precompile: Vec<(String, usize, usize)>,
-    rx: Receiver<Msg>,
+    queue: Arc<JobQueue>,
     ready_tx: Sender<Result<RouteTables>>,
     pool: Arc<ThreadPool>,
     staging: Arc<StagingPool>,
     options: EngineOptions,
     replica: usize,
-) {
-    let mut rt = match Manifest::load(&artifacts).and_then(Runtime::new) {
-        Ok(rt) => rt,
+    generation: u64,
+    health: Arc<ReplicaHealth>,
+    sweep: Arc<SweepTable>,
+    epoch: Instant,
+}
+
+fn engine_main(ctx: EngineCtx) {
+    let EngineCtx {
+        artifacts,
+        preload,
+        precompile,
+        queue,
+        ready_tx,
+        pool,
+        staging,
+        options,
+        replica,
+        generation,
+        health,
+        sweep,
+        epoch,
+    } = ctx;
+    let faults = options.fault_plan.for_replica(replica, generation);
+    let mut dev = match EngineDevice::open(&artifacts, options.fake) {
+        Ok(d) => d,
         Err(e) => {
             let _ = ready_tx.send(Err(e));
             return;
         }
     };
-    let mut init = || -> Result<RouteTables> {
-        for (task, mode, ckpt) in preload.iter() {
-            rt.upload_checkpoint(task, mode, ckpt)?;
-        }
-        for (mode, seq, bucket) in &precompile {
-            rt.model_exe(mode, *seq, *bucket)?;
-        }
-        let man = &rt.manifest;
-        Ok(RouteTables {
-            tasks: man.task_order.clone(),
-            modes: man.mode_order.clone(),
-            policies: man.policy_order.clone(),
-            policy_exec: man
-                .policy_order
-                .iter()
-                .map(|p| man.policies[p].exec_mode)
-                .collect(),
-        })
-    };
-    let tables = match init() {
+    let tables = match dev.preload(&preload, &precompile).map(|()| {
+        RouteTables::from_manifest(dev.manifest())
+    }) {
         Ok(t) => t,
         Err(e) => {
             let _ = ready_tx.send(Err(e));
@@ -650,32 +1619,56 @@ fn engine_main(
     // per-replica batch serial, stamped in execution order (the
     // cross-replica FIFO witness carried on InferDone::exec_seq)
     let mut next_exec_seq: u64 = 0;
+    // de-queued Infer jobs — the index the fault script fires on
+    let mut batches: u64 = 0;
     loop {
         // With a batch executing, prefer new work (to keep the device fed)
         // but retire the head batch as soon as the queue runs dry.
         let msg = if inflight.is_some() {
-            match rx.try_recv() {
-                Ok(m) => Some(m),
-                Err(TryRecvError::Empty) => {
+            match queue.try_pop() {
+                TryPop::Msg(m) => Some(m),
+                TryPop::Empty => {
                     if let Some(f) = inflight.take() {
-                        retire(&rt, f, &pool, replica);
+                        retire(&dev, f, &pool, replica, &sweep);
+                        health.beat(&epoch);
                     }
-                    rx.recv().ok()
+                    queue.pop()
                 }
-                Err(TryRecvError::Disconnected) => None,
+                TryPop::Closed => None,
             }
         } else {
-            rx.recv().ok()
+            queue.pop()
         };
         let job = match msg {
             Some(Msg::Infer(job)) => *job,
             Some(Msg::Stop) | None => break,
         };
-
+        // heartbeat 1: job de-queued
+        health.beat(&epoch);
+        let batch_no = batches;
+        batches += 1;
         let InferJob { task, policy, staging: host, cancel, done } = job;
-        // test-only service-rate throttle (deterministic overload tests)
-        if let Some(d) = options.throttle {
+        // scripted faults fire while `done` is live on this stack frame,
+        // so a panic's unwind runs its drop-guard (ReplicaFailed out)
+        if let Some((at, dur)) = faults.stall {
+            if batch_no == at {
+                std::thread::sleep(dur);
+            }
+        }
+        if faults.panic_at == Some(batch_no) {
+            panic!("fault injection: replica {replica} panics at batch {batch_no}");
+        }
+        if let Some(d) = faults.throttle {
             std::thread::sleep(d);
+        }
+        // A poisoned queue means the supervisor declared this incarnation
+        // dead (e.g. it stalled past the watchdog) and already reconciled
+        // its work: abandon the job (the drop-guard delivers
+        // ReplicaFailed) instead of racing the successor with late output.
+        if queue.is_poisoned() {
+            staging.put(host);
+            drop(done);
+            break;
         }
         // Cancel-before-submit hook: the one cancellation point past
         // batch formation, strictly before any device work.  Cancelled
@@ -683,7 +1676,7 @@ fn engine_main(
         // *executed* batches only.
         if matches!(&cancel, Some(c) if c()) {
             staging.put(host);
-            pool.spawn(move || done(Err(anyhow::Error::new(CancelledBeforeSubmit))));
+            pool.spawn(move || done.run(Err(anyhow::Error::new(CancelledBeforeSubmit))));
             continue;
         }
         let exec_seq = next_exec_seq;
@@ -693,26 +1686,36 @@ fn engine_main(
             Some(m) => *m,
             None => {
                 staging.put(host);
-                pool.spawn(move || done(Err(anyhow!("PolicyId {} out of range", policy.0))));
+                pool.spawn(move || done.run(Err(anyhow!("PolicyId {} out of range", policy.0))));
                 continue;
             }
         };
         let t_job = Instant::now();
+        if let Some(d) = faults.slow_upload {
+            std::thread::sleep(d);
+        }
         // Stage 1: upload this batch's inputs (overlaps the previous
         // batch's device execution), then recycle the host buffers.  The
         // staging buffer carries its seq bucket, so a short batch uploads
         // `bucket * seq_bucket` tokens, not `bucket * max_seq`.
-        let uploaded =
-            rt.upload_inputs(host.seq, host.bucket, &host.ids, &host.type_ids, &host.mask);
+        let uploaded = dev.upload(&host);
         let upload_us = t_job.elapsed().as_micros() as u64;
         staging.put(host);
+        // The batch is now device-committed: park the completion in the
+        // sweep table so a dead incarnation's in-flight work can be
+        // reconciled from outside (take-vs-sweep runs it exactly once).
+        let done_id = sweep.register(done);
+        // heartbeat 2: upload finished
+        health.beat(&epoch);
         let inputs = match uploaded {
             Ok(i) => i,
             Err(e) => {
                 if let Some(f) = inflight.take() {
-                    retire(&rt, f, &pool, replica);
+                    retire(&dev, f, &pool, replica, &sweep);
                 }
-                pool.spawn(move || done(Err(e)));
+                if let Some(done) = sweep.take(done_id) {
+                    pool.spawn(move || done.run(Err(e)));
+                }
                 continue;
             }
         };
@@ -720,28 +1723,37 @@ fn engine_main(
         // the upload returned: InferDone::exec_us must not double-count
         // upload_us (it used to, inflating per-batch exec reporting).
         let t0 = Instant::now();
-        let launched = rt.execute_model(task, mode, &inputs);
+        let launched = dev.execute(task, mode, &inputs);
         // Stage 3 for the previous batch: its readback now overlaps this
         // batch's execution.
         if let Some(f) = inflight.take() {
-            retire(&rt, f, &pool, replica);
+            retire(&dev, f, &pool, replica, &sweep);
         }
         match launched {
             Ok(pending) => {
-                let f = InFlight { pending, done, t_job, t0, upload_us, exec_seq };
+                let f = InFlight { pending, done_id, t_job, t0, upload_us, exec_seq };
                 if options.overlap {
                     inflight = Some(f);
                 } else {
-                    retire(&rt, f, &pool, replica);
+                    retire(&dev, f, &pool, replica, &sweep);
                 }
             }
             Err(e) => {
-                pool.spawn(move || done(Err(e)));
+                if let Some(done) = sweep.take(done_id) {
+                    pool.spawn(move || done.run(Err(e)));
+                }
             }
+        }
+        // heartbeat 3: batch launched/retired
+        health.beat(&epoch);
+        // fail-submit fault: close our own queue so later pushes fail and
+        // the pool reroutes; already-queued work still drains above
+        if faults.fail_submit_after == Some(batch_no) {
+            queue.close();
         }
     }
     if let Some(f) = inflight.take() {
-        retire(&rt, f, &pool, replica);
+        retire(&dev, f, &pool, replica, &sweep);
     }
 }
 
@@ -755,31 +1767,176 @@ mod tests {
     }
 
     #[test]
+    fn completion_drop_guard_fires_replica_failed_exactly_once() {
+        let (tx, rx) = channel::<Result<InferDone>>();
+        let done = Completion::new(move |res| {
+            let _ = tx.send(res);
+        });
+        drop(done);
+        let res = rx.recv().expect("guard delivered a result");
+        let err = res.expect_err("drop-guard must deliver an error");
+        assert!(err.downcast_ref::<ReplicaFailed>().is_some(), "not ReplicaFailed: {err:#}");
+        assert!(rx.try_recv().is_err(), "guard fired more than once");
+    }
+
+    #[test]
+    fn completion_run_consumes_and_disarms_the_guard() {
+        let (tx, rx) = channel::<Result<InferDone>>();
+        let done = Completion::new(move |res| {
+            let _ = tx.send(res);
+        });
+        done.run(Err(anyhow!("explicit")));
+        let res = rx.recv().expect("run delivered");
+        assert!(res.is_err());
+        // run() consumed the closure: the subsequent drop is a no-op
+        assert!(rx.try_recv().is_err(), "guard re-fired after run");
+    }
+
+    #[test]
+    fn job_queue_close_semantics() {
+        let q = JobQueue::new();
+        q.push(Msg::Stop).map_err(|_| ()).expect("open queue accepts");
+        // graceful close: pushes fail, queued work still drains
+        q.close();
+        assert!(q.push(Msg::Stop).is_err(), "closed queue must reject");
+        assert!(!q.is_poisoned(), "graceful close is not poison");
+        assert!(matches!(q.try_pop(), TryPop::Msg(Msg::Stop)));
+        assert!(matches!(q.try_pop(), TryPop::Closed));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn job_queue_drain_reclaims_and_poisons() {
+        let q = JobQueue::new();
+        q.push(Msg::Stop).map_err(|_| ()).unwrap();
+        q.push(Msg::Stop).map_err(|_| ()).unwrap();
+        let drained = q.close_and_drain();
+        assert_eq!(drained.len(), 2);
+        assert!(q.is_poisoned());
+        assert!(q.push(Msg::Stop).is_err());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn sweep_table_take_and_sweep_are_exactly_once() {
+        let t = SweepTable::default();
+        let (tx, rx) = channel::<Result<InferDone>>();
+        let tx2 = tx.clone();
+        let a = t.register(Completion::new(move |r| {
+            let _ = tx.send(r);
+        }));
+        let b = t.register(Completion::new(move |r| {
+            let _ = tx2.send(r);
+        }));
+        // retire wins slot a
+        t.take(a).expect("registered").run(Err(anyhow!("retired")));
+        assert!(rx.recv().unwrap().is_err());
+        // the sweep gets only slot b, and a second take of a is None
+        let swept = t.sweep();
+        assert_eq!(swept.len(), 1);
+        assert!(t.take(a).is_none());
+        assert!(t.take(b).is_none());
+        for done in swept {
+            done.run(Err(anyhow::Error::new(ReplicaFailed)));
+        }
+        assert!(rx.recv().unwrap().is_err());
+        assert!(rx.try_recv().is_err(), "a completion ran twice");
+    }
+
+    #[test]
+    fn fault_plan_scopes_by_replica_and_generation() {
+        let plan = FaultPlan::default()
+            .with(FaultSpec::on(1, FaultKind::PanicAt { batch: 3 }))
+            .with(FaultSpec::all(FaultKind::Throttle { per_batch: Duration::from_millis(5) })
+                .persistent())
+            .with(FaultSpec::on(2, FaultKind::StallFor {
+                batch: 0,
+                dur: Duration::from_millis(9),
+            }));
+        // replica scoping
+        assert_eq!(plan.for_replica(1, 0).panic_at, Some(3));
+        assert_eq!(plan.for_replica(0, 0).panic_at, None);
+        assert_eq!(plan.for_replica(2, 0).stall, Some((0, Duration::from_millis(9))));
+        // generation scoping: non-persistent faults die with generation 0
+        assert_eq!(plan.for_replica(1, 1).panic_at, None);
+        assert_eq!(plan.for_replica(2, 2).stall, None);
+        // persistent faults survive restart
+        assert_eq!(plan.for_replica(1, 4).throttle, Some(Duration::from_millis(5)));
+        // coordinator-side kind is invisible to the engine
+        let cp = FaultPlan::completion_panic_at(7);
+        assert_eq!(cp.completion_panic(), Some(7));
+        assert_eq!(cp.for_replica(0, 0).panic_at, None);
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn breaker_trips_after_budget_failures_in_window() {
+        let policy = RestartPolicy {
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(40),
+            budget: 3,
+            window: Duration::from_secs(60),
+        };
+        let mut inner = SlotInner {
+            state: SlotState::Excluded,
+            restarts: 0,
+            consecutive: 0,
+            failures: VecDeque::new(),
+            failed_batches: 0,
+        };
+        let now = Instant::now();
+        let mut events = Vec::new();
+        // failures 1 and 2: exponential backoff, capped at max_backoff
+        match breaker_step(0, &mut inner, &policy, now, &mut events) {
+            SlotState::Backoff { until } => assert_eq!(until - now, Duration::from_millis(10)),
+            _ => panic!("expected backoff"),
+        }
+        match breaker_step(0, &mut inner, &policy, now, &mut events) {
+            SlotState::Backoff { until } => assert_eq!(until - now, Duration::from_millis(20)),
+            _ => panic!("expected backoff"),
+        }
+        assert!(events.is_empty());
+        // failure 3 trips the breaker
+        assert!(matches!(
+            breaker_step(0, &mut inner, &policy, now, &mut events),
+            SlotState::Excluded
+        ));
+        assert_eq!(events, vec![PoolEvent::ReplicaExcluded { replica: 0 }]);
+        // a successful restart resets the exponent but not the window:
+        // budget counts failures, not consecutive failures
+        inner.consecutive = 0;
+        assert!(matches!(
+            breaker_step(0, &mut inner, &policy, now, &mut events),
+            SlotState::Excluded
+        ));
+    }
+
+    #[test]
     fn dispatch_pins_group_while_in_flight() {
         let d = DispatchState::new(2);
         let g0 = key(0, 0);
         let g1 = key(0, 1);
         // first assignment: tie at zero load -> lowest index
-        assert_eq!(d.assign(g0), 0);
+        assert_eq!(d.assign(g0), (0, 0));
         // pinned while in flight, even though replica 1 is emptier
-        assert_eq!(d.assign(g0), 0);
+        assert_eq!(d.assign(g0), (0, 0));
         assert_eq!(d.inflight(0), 2);
         assert_eq!(d.inflight(1), 0);
         // a different group routes to the least-loaded replica
-        assert_eq!(d.assign(g1), 1);
+        assert_eq!(d.assign(g1), (1, 0));
         assert_eq!(d.pinned_groups(), 2);
         // draining one batch keeps the pin; draining all releases it
-        d.complete(g0, 0);
-        assert_eq!(d.assign(g0), 0, "still one batch in flight: pinned");
-        d.complete(g0, 0);
-        d.complete(g0, 0);
+        d.complete(g0, 0, 0);
+        assert_eq!(d.assign(g0).0, 0, "still one batch in flight: pinned");
+        d.complete(g0, 0, 0);
+        d.complete(g0, 0, 0);
         assert_eq!(d.pinned_groups(), 1);
         assert_eq!(d.inflight(0), 0);
         // migration: replica 1 carries g1's batch, so g0 re-pins to 0 —
         // but if 0 were loaded it could move (see prop test)
-        assert_eq!(d.assign(g0), 0);
-        d.complete(g1, 1);
-        d.complete(g0, 0);
+        assert_eq!(d.assign(g0).0, 0);
+        d.complete(g1, 1, 0);
+        d.complete(g0, 0, 0);
         assert_eq!(d.pinned_groups(), 0);
     }
 
@@ -789,45 +1946,59 @@ mod tests {
         let g0 = key(0, 0);
         let g1 = key(1, 0);
         // g0 runs a batch on replica 0 and drains
-        assert_eq!(d.assign(g0), 0);
-        d.complete(g0, 0);
+        assert_eq!(d.assign(g0).0, 0);
+        d.complete(g0, 0, 0);
         assert_eq!(d.pinned_groups(), 0);
         // g1 now occupies replica 0 (tie at zero load -> lowest index)
-        assert_eq!(d.assign(g1), 0);
+        assert_eq!(d.assign(g1).0, 0);
         // g0 returns while replica 0 is loaded: it migrates to replica 1
         // — pinning is per in-flight window, not a permanent assignment
-        assert_eq!(d.assign(g0), 1);
-        d.complete(g1, 0);
-        d.complete(g0, 1);
+        assert_eq!(d.assign(g0).0, 1);
+        d.complete(g1, 0, 0);
+        d.complete(g0, 1, 0);
         assert_eq!(d.pinned_groups(), 0);
         assert_eq!(d.inflight(0) + d.inflight(1), 0);
     }
 
     #[test]
-    fn dead_replica_is_excluded_and_its_groups_migrate() {
+    fn dead_replica_is_excluded_and_revive_readmits_with_stale_generations() {
         let d = DispatchState::new(2);
         let g0 = key(0, 0);
         let g1 = key(0, 1);
-        assert_eq!(d.assign(g0), 0);
+        let (r, gen0) = d.assign(g0);
+        assert_eq!((r, gen0), (0, 0));
         d.mark_dead(0);
         assert!(!d.alive(0));
-        // pins on the dead replica are purged and its counter zeroed (the
-        // queued batch can never complete): g0's next batch migrates
+        assert_eq!(d.generation(0), 1, "death bumps the generation");
+        // pins on the dead replica are purged and its counter zeroed:
+        // g0's next batch migrates
         assert_eq!(d.pinned_groups(), 0);
         assert_eq!(d.inflight(0), 0);
-        assert_eq!(d.assign(g0), 1);
-        // the dead replica never wins least-loaded again, even though
-        // its in-flight count is the minimum
-        assert_eq!(d.assign(g1), 1);
-        // a stale completion from the dead replica is dropped: g0 is now
-        // pinned to replica 1, so (g0, 0) matches nothing
-        d.complete(g0, 0);
+        assert_eq!(d.assign(g0).0, 1);
+        // the dead replica never wins least-loaded, even though its
+        // in-flight count is the minimum
+        assert_eq!(d.assign(g1).0, 1);
+        // the dead incarnation's completion is stale twice over: its
+        // generation predates the bump and its pin is gone
+        d.complete(g0, 0, gen0);
         assert_eq!(d.inflight(1), 2);
         assert_eq!(d.pinned_groups(), 2);
-        d.complete(g0, 1);
-        d.complete(g1, 1);
+        // revive re-admits at the bumped generation
+        d.revive(0);
+        assert!(d.alive(0));
+        assert_eq!(d.generation(0), 1);
+        let g2 = key(1, 0);
+        let (r2, gen2) = d.assign(g2);
+        assert_eq!((r2, gen2), (0, 1), "revived replica is least-loaded again");
+        // a late pre-death completion for the same slot still can't touch
+        // the new incarnation's accounting
+        d.complete(g2, 0, gen0);
+        assert_eq!(d.inflight(0), 1);
+        d.complete(g2, 0, gen2);
+        d.complete(g0, 1, 0);
+        d.complete(g1, 1, 0);
         assert_eq!(d.pinned_groups(), 0);
-        assert_eq!(d.inflight(1), 0);
+        assert_eq!(d.inflight(0) + d.inflight(1), 0);
     }
 
     #[test]
@@ -835,15 +2006,16 @@ mod tests {
         forall("dispatch-pinning", 60, |r: &mut Rng| {
             let nrep = 1 + r.below(4);
             let d = DispatchState::new(nrep);
-            // in-flight batches as (group, replica-it-was-assigned)
-            let mut open: Vec<((TaskId, PolicyId), usize)> = Vec::new();
+            // in-flight batches as (group, replica, generation)
+            let mut open: Vec<((TaskId, PolicyId), usize, u64)> = Vec::new();
             let mut pinned: HashMap<(TaskId, PolicyId), usize> = HashMap::new();
             for _ in 0..200 {
                 if open.is_empty() || r.bool() {
                     let k = key(r.below(2) as u16, r.below(3) as u16);
                     let loads: Vec<usize> = (0..nrep).map(|i| d.inflight(i)).collect();
-                    let rep = d.assign(k);
+                    let (rep, gen) = d.assign(k);
                     assert!(rep < nrep);
+                    assert_eq!(gen, 0, "no deaths in this test");
                     match pinned.get(&k) {
                         // the FIFO guarantee: while a group has batches in
                         // flight, every new batch lands on the same replica
@@ -856,12 +2028,12 @@ mod tests {
                             pinned.insert(k, rep);
                         }
                     }
-                    open.push((k, rep));
+                    open.push((k, rep, gen));
                 } else {
                     let i = r.below(open.len());
-                    let (k, rep) = open.swap_remove(i);
-                    d.complete(k, rep);
-                    if !open.iter().any(|(ok, _)| *ok == k) {
+                    let (k, rep, gen) = open.swap_remove(i);
+                    d.complete(k, rep, gen);
+                    if !open.iter().any(|(ok, _, _)| *ok == k) {
                         pinned.remove(&k);
                     }
                 }
@@ -870,18 +2042,116 @@ mod tests {
                 for rep in 0..nrep {
                     assert_eq!(
                         d.inflight(rep),
-                        open.iter().filter(|(_, p)| *p == rep).count(),
+                        open.iter().filter(|(_, p, _)| *p == rep).count(),
                         "replica {rep} count drifted"
                     );
                 }
                 assert_eq!(d.pinned_groups(), pinned.len());
             }
-            for (k, rep) in open.drain(..) {
-                d.complete(k, rep);
+            for (k, rep, gen) in open.drain(..) {
+                d.complete(k, rep, gen);
             }
             assert_eq!(d.pinned_groups(), 0);
             for rep in 0..nrep {
                 assert_eq!(d.inflight(rep), 0);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_supervised_dispatch_generations_neutralize_stale_completions() {
+        forall("dispatch-supervision", 60, |r: &mut Rng| {
+            let nrep = 1 + r.below(4);
+            let d = DispatchState::new(nrep);
+            // live batches vs completions orphaned by a death (stale)
+            let mut open: Vec<((TaskId, PolicyId), usize, u64)> = Vec::new();
+            let mut stale: Vec<((TaskId, PolicyId), usize, u64)> = Vec::new();
+            let mut pinned: HashMap<(TaskId, PolicyId), usize> = HashMap::new();
+            let mut alive = vec![true; nrep];
+            for _ in 0..300 {
+                match r.below(10) {
+                    // kill a replica: its open batches become stale
+                    0 => {
+                        let rep = r.below(nrep);
+                        if alive[rep] {
+                            d.mark_dead(rep);
+                            alive[rep] = false;
+                            let mut kept = Vec::new();
+                            for e in open.drain(..) {
+                                if e.1 == rep {
+                                    stale.push(e);
+                                } else {
+                                    kept.push(e);
+                                }
+                            }
+                            open = kept;
+                            pinned.retain(|_, p| *p != rep);
+                        }
+                    }
+                    // supervised restart re-admits the slot
+                    1 => {
+                        let rep = r.below(nrep);
+                        if !alive[rep] {
+                            d.revive(rep);
+                            alive[rep] = true;
+                        }
+                    }
+                    // replay a stale completion at a random point: the
+                    // generation tag must make it a strict no-op
+                    2 | 3 if !stale.is_empty() => {
+                        let i = r.below(stale.len());
+                        let (k, rep, gen) = stale.swap_remove(i);
+                        d.complete(k, rep, gen);
+                    }
+                    _ if open.is_empty() || r.bool() => {
+                        let k = key(r.below(2) as u16, r.below(3) as u16);
+                        let (rep, gen) = d.assign(k);
+                        assert!(rep < nrep);
+                        assert_eq!(gen, d.generation(rep));
+                        match pinned.get(&k) {
+                            Some(p) => assert_eq!(*p, rep, "group reassigned while in flight"),
+                            None => {
+                                if alive.iter().any(|a| *a) {
+                                    assert!(
+                                        alive[rep],
+                                        "assigned to a dead replica while a live one exists"
+                                    );
+                                }
+                                pinned.insert(k, rep);
+                            }
+                        }
+                        open.push((k, rep, gen));
+                    }
+                    _ => {
+                        let i = r.below(open.len());
+                        let (k, rep, gen) = open.swap_remove(i);
+                        d.complete(k, rep, gen);
+                        if !open.iter().any(|(ok, _, _)| *ok == k) {
+                            pinned.remove(&k);
+                        }
+                    }
+                }
+                // the live accounting never drifts, no matter how death,
+                // revival, and stale replays interleave
+                for rep in 0..nrep {
+                    assert_eq!(
+                        d.inflight(rep),
+                        open.iter().filter(|(_, p, _)| *p == rep).count(),
+                        "replica {rep} count drifted"
+                    );
+                }
+                assert_eq!(d.pinned_groups(), pinned.len());
+            }
+            for (k, rep, gen) in open.drain(..) {
+                d.complete(k, rep, gen);
+            }
+            // any leftover stale completions drain as no-ops
+            for (k, rep, gen) in stale.drain(..) {
+                d.complete(k, rep, gen);
+            }
+            assert_eq!(d.pinned_groups(), 0);
+            for rep in 0..nrep {
+                assert_eq!(d.inflight(rep), 0, "stale completion corrupted replica {rep}");
             }
         });
     }

@@ -21,7 +21,10 @@
 pub mod engine;
 pub mod staging;
 
-pub use engine::{DispatchState, Engine, EngineOptions, EnginePool};
+pub use engine::{
+    DispatchState, Engine, EngineOptions, EnginePool, FaultKind, FaultPlan, FaultSpec, PoolEvent,
+    PoolEventHook, ReplicaFailed, RestartPolicy,
+};
 
 use std::collections::HashMap;
 use std::path::Path;

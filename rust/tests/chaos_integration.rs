@@ -1,0 +1,488 @@
+//! Chaos suite (DESIGN.md §5.10, §9): replica supervision driven end to
+//! end on the fake engine device — no artifacts, no PJRT, a bare
+//! checkout runs every test here.  Each test scripts failures through
+//! the structured `FaultPlan` and asserts the supervision contract:
+//! zero hung clients, exact ledger reconciliation
+//! (admitted = completed + shed + expired + failed), dispatch-order
+//! FIFO among survivors, capacity recovery after supervised restart,
+//! and circuit-breaker terminal behavior.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use zqhero::coordinator::{Coordinator, RequestSpec, Response, ServerConfig, SubmitError};
+use zqhero::runtime::{FaultKind, FaultPlan, FaultSpec, RestartPolicy};
+
+/// A minimal-but-valid manifest for the fake engine: one mode, one
+/// task, a tiny bucket grid, no artifacts on disk (artifact paths are
+/// never opened under `fake_engine`).
+const FAKE_MANIFEST: &str = r#"{
+  "model": {"vocab_size": 64, "hidden": 8, "layers": 1, "heads": 2, "ffn": 16,
+            "max_seq": 8, "type_vocab": 2, "num_labels": 3, "ln_eps": 0.00001},
+  "seq": 8,
+  "buckets": [1, 2, 4],
+  "modes": {
+    "fp": {
+      "switches": {"embedding": false, "qkv": false, "attn": false,
+                   "attn_output": false, "fc1": false, "fc2": false},
+      "artifacts": {},
+      "params": []
+    }
+  },
+  "calib": {"artifact": "calib.bin", "batch": 1, "params": [], "stats": []},
+  "tasks": {
+    "chaos": {"splits": {}, "metrics": [], "classes": 3, "checkpoint": "ckpt-{mode}.bin"}
+  }
+}"#;
+
+/// Degenerate manifest with an empty mode table: structurally valid,
+/// but a request without an explicit policy has no default route.
+const NO_MODES_MANIFEST: &str = r#"{
+  "model": {"vocab_size": 64, "hidden": 8, "layers": 1, "heads": 2, "ffn": 16,
+            "max_seq": 8, "type_vocab": 2, "num_labels": 3, "ln_eps": 0.00001},
+  "seq": 8,
+  "buckets": [1, 2, 4],
+  "modes": {},
+  "calib": {"artifact": "calib.bin", "batch": 1, "params": [], "stats": []},
+  "tasks": {
+    "chaos": {"splits": {}, "metrics": [], "classes": 3, "checkpoint": "ckpt-{mode}.bin"}
+  }
+}"#;
+
+/// Write `manifest` into a per-test temp dir and return it (stable
+/// within one test binary run; contents are overwritten, never reused).
+fn fake_artifacts(test: &str, manifest: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("zqhero-chaos-{}-{test}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create fake artifacts dir");
+    std::fs::write(dir.join("manifest.json"), manifest).expect("write fake manifest");
+    dir
+}
+
+/// Base config for the suite: tiny batches, a fake device with a
+/// deterministic per-batch latency, everything else default.
+fn config(latency_ms: u64) -> ServerConfig {
+    ServerConfig {
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 64,
+        fake_engine: Some(Duration::from_millis(latency_ms)),
+        ..ServerConfig::default()
+    }
+}
+
+fn routes() -> Vec<(String, String)> {
+    vec![("chaos".to_string(), "fp".to_string())]
+}
+
+fn spec(i: usize) -> RequestSpec {
+    // vary the payload length across the seq range for realism; every
+    // length lands in the single seq bucket (8)
+    let len = 1 + i % 8;
+    RequestSpec::task("chaos").mode("fp").ids((0..len as i32).collect())
+}
+
+/// Drain every receiver with a generous bound: a reply that never
+/// arrives is precisely the hung-client bug the supervisor exists to
+/// prevent, so the timeout is the test's core assertion.
+fn drain(rxs: Vec<(u64, std::sync::mpsc::Receiver<Response>)>) -> Vec<Response> {
+    rxs.into_iter()
+        .map(|(id, rx)| {
+            rx.recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("client hung waiting for request {id}: {e}"))
+        })
+        .collect()
+}
+
+/// Partition terminal outcomes; panics on any reply shape that violates
+/// the outcome taxonomy (failed and expired are mutually exclusive;
+/// completed replies carry logits, failed/expired ones never do).
+struct Outcomes {
+    completed: Vec<Response>,
+    expired: usize,
+    failed: usize,
+}
+
+fn classify(resps: Vec<Response>, num_labels: usize) -> Outcomes {
+    let mut out = Outcomes { completed: Vec::new(), expired: 0, failed: 0 };
+    for r in resps {
+        assert!(!(r.failed && r.expired), "req {}: failed and expired at once", r.id);
+        if r.failed {
+            assert!(r.logits.is_empty(), "failed reply with logits");
+            assert!(r.error.is_some(), "failed reply without an error");
+            out.failed += 1;
+        } else if r.expired {
+            assert!(r.logits.is_empty(), "expired reply with logits");
+            out.expired += 1;
+        } else if let Some(e) = &r.error {
+            panic!("unexpected generic error for req {}: {e}", r.id);
+        } else {
+            assert_eq!(r.logits.len(), num_labels, "req {}: bad logits width", r.id);
+            out.completed.push(r);
+        }
+    }
+    out
+}
+
+/// Wait (bounded) until `cond` holds; panics with `what` on timeout.
+fn wait_until(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn fake_engine_serves_end_to_end() {
+    let dir = fake_artifacts("baseline", FAKE_MANIFEST);
+    let coord = Coordinator::start(dir, &routes(), config(2)).unwrap();
+
+    let mut rxs = Vec::new();
+    for i in 0..20u64 {
+        rxs.push((i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!(out.completed.len(), 20);
+    assert_eq!((out.failed, out.expired), (0, 0));
+
+    let snap = coord.recorder.snapshot();
+    let s = &snap["fp"];
+    assert_eq!(s.requests, 20);
+    assert_eq!(s.completed, 20);
+    assert_eq!((s.errors, s.expired, s.failed, s.shed), (0, 0, 0, 0));
+    assert_eq!(coord.queue_depth(), 0, "backlog slots leaked");
+}
+
+/// Satellite: a manifest whose mode table is empty must reject a
+/// policy-less request with a typed `Rejected` at admission — not
+/// fabricate an empty-string default mode that fails downstream with a
+/// misleading "unknown mode" error.
+#[test]
+fn empty_manifest_submit_is_typed_rejection() {
+    let dir = fake_artifacts("no-modes", NO_MODES_MANIFEST);
+    let coord = Coordinator::start(dir, &[], config(1)).unwrap();
+    let err = coord
+        .submit(RequestSpec::task("chaos").ids(vec![1, 2, 3]))
+        .expect_err("no-policy submit against a modeless manifest must be rejected");
+    assert!(matches!(err, SubmitError::Rejected(_)), "wrong class: {err:?}");
+    assert!(!err.is_busy());
+    let msg = format!("{err}");
+    assert!(msg.contains("no modes"), "unhelpful rejection: {msg}");
+}
+
+/// The tentpole scenario: a replica panics mid-batch under load.  Every
+/// client gets a terminal reply (completed or typed `failed`), the
+/// ledger reconciles exactly on both sides, dispatch FIFO holds among
+/// survivors, the backlog drains to zero, and the supervisor restores
+/// full capacity — after which new traffic completes cleanly.
+#[test]
+fn replica_panic_mid_batch_fails_over_and_reconciles() {
+    let dir = fake_artifacts("panic", FAKE_MANIFEST);
+    let coord = Coordinator::start(
+        dir,
+        &routes(),
+        ServerConfig {
+            replicas: 2,
+            fault_plan: FaultPlan::default()
+                .with(FaultSpec::on(0, FaultKind::PanicAt { batch: 1 })),
+            ..config(5)
+        },
+    )
+    .unwrap();
+    assert_eq!(coord.engine().live_replicas(), 2);
+
+    let total = 40u64;
+    let mut rxs = Vec::new();
+    for i in 0..total {
+        rxs.push((i, coord.submit(spec(i as usize)).expect("queue_cap 64 admits all")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+
+    // zero hung clients, exact reconciliation: nothing shed (under cap),
+    // nothing expired (no deadlines), so admitted = completed + failed
+    assert_eq!(out.completed.len() + out.failed, total as usize);
+    assert!(out.failed >= 1, "the panicked batch must fail its requests");
+    assert!(!out.completed.is_empty(), "failover never completed anything");
+    assert_eq!(coord.queue_depth(), 0, "backlog slots leaked through the failure");
+
+    // recorder-side ledger agrees request for request
+    let snap = coord.recorder.snapshot();
+    let s = &snap["fp"];
+    assert_eq!(s.requests, total);
+    assert_eq!(s.completed as usize, out.completed.len());
+    assert_eq!(s.failed as usize, out.failed);
+    assert_eq!((s.errors, s.expired, s.shed), (0, 0, 0));
+    assert_eq!(s.requests, s.completed + s.errors + s.expired + s.failed);
+
+    // dispatch FIFO among survivors: ids are submit-ordered, so their
+    // batch sequence numbers must be non-decreasing even across the
+    // failover (orphans resubmit with their original dispatch order)
+    let mut survivors = out.completed;
+    survivors.sort_by_key(|r| r.id);
+    let seqs: Vec<u64> = survivors.iter().map(|r| r.timing.batch_seq).collect();
+    let mut sorted = seqs.clone();
+    sorted.sort_unstable();
+    assert_eq!(seqs, sorted, "survivors out of dispatch order");
+
+    // supervised restart restores capacity: the watchdog-less supervisor
+    // still detects thread death, and the respawned incarnation (its
+    // non-persistent fault expired with generation 0) rejoins dispatch
+    wait_until("replica 0 restart", Duration::from_secs(10), || {
+        coord.engine().live_replicas() == 2
+    });
+    assert!(coord.engine().replica_restarts(0) >= 1);
+    assert!(coord.engine().dispatch_state().generation(0) >= 1);
+    assert!(!coord.engine().replica_excluded(0));
+
+    // the health ledger saw the lifecycle: a failure and a restart on
+    // replica 0 (heartbeat samples keep flowing, so poll briefly)
+    wait_until("recorder replica health", Duration::from_secs(5), || {
+        let reps = coord.recorder.replica_snapshot();
+        reps[0].restarts >= 1 && reps[0].generation >= 1
+    });
+
+    // post-recovery traffic completes with zero failures
+    let mut rxs = Vec::new();
+    for i in 0..10u64 {
+        rxs.push((1000 + i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!(out.completed.len(), 10, "recovered pool must serve cleanly");
+    assert_eq!(coord.queue_depth(), 0);
+}
+
+/// Watchdog path: a replica that stalls inside a device call (no thread
+/// death) is declared dead once its heartbeat exceeds the budget; its
+/// queue is reclaimed onto the survivor and the slot restarts.  The
+/// stalled incarnation's late wake-up must not corrupt anything — its
+/// queue is poisoned and its generation is stale.
+#[test]
+fn watchdog_detects_stall_and_supervisor_recovers() {
+    let dir = fake_artifacts("stall", FAKE_MANIFEST);
+    let coord = Coordinator::start(
+        dir,
+        &routes(),
+        ServerConfig {
+            replicas: 2,
+            watchdog: Some(Duration::from_millis(100)),
+            fault_plan: FaultPlan::default().with(FaultSpec::on(
+                0,
+                FaultKind::StallFor { batch: 0, dur: Duration::from_millis(1500) },
+            )),
+            ..config(2)
+        },
+    )
+    .unwrap();
+
+    let total = 12u64;
+    let mut rxs = Vec::new();
+    for i in 0..total {
+        rxs.push((i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!(out.completed.len() + out.failed, total as usize);
+    assert!(out.failed >= 1, "the stalled batch must fail");
+    assert!(
+        out.completed.len() >= total as usize - 2,
+        "only the stalled batch may fail (drained work must resubmit): {} completed",
+        out.completed.len()
+    );
+    assert_eq!(coord.queue_depth(), 0);
+
+    wait_until("stalled replica restart", Duration::from_secs(10), || {
+        coord.engine().live_replicas() == 2 && coord.engine().replica_restarts(0) >= 1
+    });
+    let snap = coord.recorder.snapshot();
+    let s = &snap["fp"];
+    assert_eq!(s.requests, total);
+    assert_eq!(s.requests, s.completed + s.errors + s.expired + s.failed);
+}
+
+/// Circuit breaker: a replica that crashes at the first batch of every
+/// incarnation burns through its restart budget and is excluded for the
+/// life of the pool; the pool keeps serving on the survivor.
+#[test]
+fn circuit_breaker_excludes_permanently_crashing_replica() {
+    let dir = fake_artifacts("breaker", FAKE_MANIFEST);
+    let coord = Coordinator::start(
+        dir,
+        &routes(),
+        ServerConfig {
+            replicas: 2,
+            restart: RestartPolicy {
+                backoff: Duration::from_millis(1),
+                max_backoff: Duration::from_millis(5),
+                budget: 3,
+                window: Duration::from_secs(60),
+            },
+            fault_plan: FaultPlan::default()
+                .with(FaultSpec::on(0, FaultKind::PanicAt { batch: 0 }).persistent()),
+            ..config(1)
+        },
+    )
+    .unwrap();
+
+    // drive single requests until the breaker trips: whenever replica 0
+    // is live (and idle it wins the lowest-index tie) the next batch
+    // lands there and kills the incarnation; budget 3 deaths -> excluded
+    let t0 = Instant::now();
+    let mut failed = 0usize;
+    let mut completed = 0usize;
+    while !coord.engine().replica_excluded(0) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "breaker never tripped: {failed} failed / {completed} completed so far"
+        );
+        let rx = coord.submit(spec(completed + failed)).expect("admit");
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
+        if resp.failed {
+            failed += 1;
+        } else {
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            completed += 1;
+        }
+        // give the supervisor a beat to cycle backoff -> restart
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(failed >= 3, "budget is 3 deaths, saw only {failed} failed replies");
+    assert_eq!(coord.engine().live_replicas(), 1, "survivor must stay in service");
+
+    // terminal: the exclusion is permanent and the pool serves on
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        rxs.push((i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!(out.completed.len(), 8, "survivor must carry all traffic");
+    assert!(coord.engine().replica_excluded(0), "exclusion must be terminal");
+    wait_until("excluded flag in health ledger", Duration::from_secs(5), || {
+        coord.recorder.replica_snapshot()[0].excluded
+    });
+    assert_eq!(coord.queue_depth(), 0);
+}
+
+/// FailSubmit: a replica that stops accepting work (queue closed) after
+/// its first batch is not a client-visible failure at all — queued work
+/// drains, later batches reroute to the survivor, and the supervisor
+/// recycles the slot once the thread exits.
+#[test]
+fn fail_submit_reroutes_without_client_failures() {
+    let dir = fake_artifacts("failsubmit", FAKE_MANIFEST);
+    let coord = Coordinator::start(
+        dir,
+        &routes(),
+        ServerConfig {
+            replicas: 2,
+            // a wide backoff keeps the slot in its dead window while the
+            // second wave submits, so the reroute path is actually taken
+            restart: RestartPolicy { backoff: Duration::from_millis(500), ..Default::default() },
+            fault_plan: FaultPlan::default()
+                .with(FaultSpec::on(0, FaultKind::FailSubmit { after_batch: 0 })),
+            ..config(2)
+        },
+    )
+    .unwrap();
+
+    // wave 1 lands on replica 0 (lowest-index tie) and closes its queue
+    let mut rxs = Vec::new();
+    for i in 0..4u64 {
+        rxs.push((i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!((out.completed.len(), out.failed), (4, 0), "drained work must complete");
+
+    // wave 2 must reroute: replica 0 rejects pushes (or is already dead)
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        rxs.push((100 + i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!((out.completed.len(), out.failed), (8, 0), "reroute must be invisible");
+    assert!(
+        coord.recorder.replica_snapshot()[1].batches >= 1,
+        "survivor replica never executed a batch — nothing rerouted"
+    );
+
+    // the graceful exit still cycles the slot through supervised restart
+    wait_until("closed slot restart", Duration::from_secs(10), || {
+        coord.engine().replica_restarts(0) >= 1 && coord.engine().live_replicas() == 2
+    });
+    let snap = coord.recorder.snapshot();
+    assert_eq!(snap["fp"].failed, 0, "FailSubmit must not fail a single request");
+    assert_eq!(coord.queue_depth(), 0);
+}
+
+/// The full four-class ledger under chaos: deadlines + a tight admission
+/// cap + a mid-run replica panic produce shed, expired, failed, and
+/// completed traffic at once — and the ledger still reconciles exactly,
+/// client side and recorder side.
+#[test]
+fn chaos_overload_ledger_reconciles_with_all_outcome_classes() {
+    let dir = fake_artifacts("ledger", FAKE_MANIFEST);
+    let coord = Coordinator::start(
+        dir,
+        &routes(),
+        ServerConfig {
+            replicas: 2,
+            queue_cap: 8,
+            default_deadline: Some(Duration::from_millis(30)),
+            fault_plan: FaultPlan::default()
+                .with(FaultSpec::on(0, FaultKind::PanicAt { batch: 2 })),
+            ..config(8)
+        },
+    )
+    .unwrap();
+
+    let total = 80usize;
+    let mut shed = 0usize;
+    let mut rxs = Vec::new();
+    for i in 0..total {
+        match coord.submit(spec(i)) {
+            Ok(rx) => rxs.push((i as u64, rx)),
+            Err(e) if e.is_busy() => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        if i % 8 == 7 {
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    }
+    assert!(coord.queue_depth() <= 8, "backlog bound exceeded");
+
+    let out = classify(drain(rxs), coord.num_labels());
+    let completed = out.completed.len();
+
+    // the four-class ledger reconciles exactly, client side ...
+    assert_eq!(
+        total,
+        completed + shed + out.expired + out.failed,
+        "admitted != completed + shed + expired + failed"
+    );
+    assert!(shed > 0, "never hit the admission cap — not an overload test");
+    assert!(out.failed > 0, "the panicked batch never failed anyone");
+    assert!(completed > 0, "nothing survived");
+
+    // ... and recorder side
+    let snap = coord.recorder.snapshot();
+    let s = &snap["fp"];
+    assert_eq!(s.shed as usize, shed);
+    assert_eq!(s.expired as usize, out.expired);
+    assert_eq!(s.failed as usize, out.failed);
+    assert_eq!(s.completed as usize, completed);
+    assert_eq!(s.requests as usize, total - shed);
+    assert_eq!(s.errors, 0);
+    assert_eq!(s.requests, s.completed + s.errors + s.expired + s.failed);
+
+    // dispatch FIFO among survivors across shed/expiry/failure churn
+    let mut survivors = out.completed;
+    survivors.sort_by_key(|r| r.id);
+    let seqs: Vec<u64> = survivors.iter().map(|r| r.timing.batch_seq).collect();
+    let mut sorted = seqs.clone();
+    sorted.sort_unstable();
+    assert_eq!(seqs, sorted, "survivors out of dispatch order");
+
+    // after full drain the backlog returns to zero and capacity recovers
+    assert_eq!(coord.queue_depth(), 0, "backlog slots leaked");
+    wait_until("capacity recovery", Duration::from_secs(10), || {
+        coord.engine().live_replicas() == 2
+    });
+}

@@ -11,6 +11,7 @@ use zqhero::coordinator::{Coordinator, NetClient, NetServer, RequestSpec, Server
 use zqhero::data::Split;
 use zqhero::json::Value;
 use zqhero::model::manifest::{Manifest, PolicyDraft};
+use zqhero::runtime::FaultPlan;
 
 #[test]
 fn tcp_round_trip_and_errors() {
@@ -263,7 +264,7 @@ fn queue_full_maps_to_busy_response() {
                 max_batch: 1,
                 max_wait: Duration::from_millis(1),
                 queue_cap: 1,
-                throttle_batch: Some(Duration::from_millis(250)),
+                fault_plan: FaultPlan::throttle(Duration::from_millis(250)),
                 ..Default::default()
             },
         )

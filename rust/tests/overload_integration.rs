@@ -15,6 +15,7 @@ use common::{artifacts, ensure_quantized};
 use zqhero::coordinator::{Coordinator, GovernorConfig, RequestSpec, Response, ServerConfig};
 use zqhero::data::Split;
 use zqhero::model::manifest::Manifest;
+use zqhero::runtime::FaultPlan;
 
 fn payload(dir: &std::path::Path, task: &str) -> Vec<(Vec<i32>, Vec<i32>)> {
     let man = Manifest::load(dir).unwrap();
@@ -62,7 +63,7 @@ fn overload_ledger_reconciles_fifo_survivors_zero_post_submit_cancellations() {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
             queue_cap: 8,
-            throttle_batch: Some(Duration::from_millis(25)),
+            fault_plan: FaultPlan::throttle(Duration::from_millis(25)),
             default_deadline: Some(Duration::from_millis(60)),
             ..ServerConfig::default()
         },
@@ -164,7 +165,7 @@ fn governor_degrades_under_pressure_and_restores_on_calm() {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
             queue_cap: 16,
-            throttle_batch: Some(Duration::from_millis(20)),
+            fault_plan: FaultPlan::throttle(Duration::from_millis(20)),
             governor: Some(GovernorConfig {
                 high_watermark: 4,
                 low_watermark: 1,

@@ -18,7 +18,7 @@ use zqhero::coordinator::{Coordinator, RequestSpec, Response, ServerConfig};
 use zqhero::data::Split;
 use zqhero::evalharness as eh;
 use zqhero::model::manifest::Manifest;
-use zqhero::runtime::Runtime;
+use zqhero::runtime::{FaultPlan, Runtime};
 
 fn config(pipeline: bool) -> ServerConfig {
     ServerConfig {
@@ -442,7 +442,7 @@ fn readback_stage_panic_is_isolated() {
     let coord = Coordinator::start(
         dir.clone(),
         &pairs,
-        ServerConfig { fault_inject_batch: Some(0), ..config(true) },
+        ServerConfig { fault_plan: FaultPlan::completion_panic_at(0), ..config(true) },
     )
     .unwrap();
 

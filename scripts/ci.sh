@@ -39,6 +39,13 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Replica supervision (DESIGN.md §5.10): the chaos suite runs on the
+# fake engine (no artifacts needed), so the watchdog / supervised
+# restart / circuit-breaker / fault-plan ledger invariants gate every
+# checkout, not just artifact-bearing ones.
+echo "==> chaos suite (fake engine)"
+cargo test -q --test chaos_integration
+
 # Artifact-gated serving smoke: the integration suites already ran
 # un-skipped inside `cargo test -q` when artifacts exist; what they do
 # not cover is the CLI surface, so drive a 2-replica serve-bench
@@ -67,6 +74,14 @@ if [ -f artifacts/manifest.json ]; then
     echo "==> mixed-length serve-bench smoke (seq-bucket grid)"
     cargo run --release -- serve-bench --mixed-length \
         --modes m3 --requests 96 --concurrency 16
+
+    # replica supervision on the real engine (DESIGN.md §5.10): panic a
+    # replica mid-run, assert every client still gets a terminal reply,
+    # the supervisor restarts the replica, and goodput recovers to >=90%
+    # of a fault-free baseline (emits BENCH_chaos_smoke.json)
+    echo "==> chaos serve-bench smoke (replica kill + supervised restart)"
+    cargo run --release -- serve-bench --chaos --replicas 2 \
+        --requests 64 --concurrency 16
 fi
 
 if [ "$SKIP_CLIPPY" -eq 0 ]; then
