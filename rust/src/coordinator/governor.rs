@@ -123,6 +123,7 @@ impl PrecisionGovernor {
         if lvl == 0 {
             policy
         } else {
+            // panic-ok: lvl > 0 here and tick() clamps level to chain len
             self.chains[policy.index()][lvl - 1]
         }
     }
@@ -202,10 +203,15 @@ impl GovernorShared {
     }
 
     pub fn effective(&self, policy: PolicyId) -> PolicyId {
+        // relaxed-ok: each cell is a self-contained PolicyId — admission
+        // reads no other memory ordered against this load, and a stale
+        // route for a few requests only delays the downgrade by one beat
         PolicyId(self.effective[policy.index()].load(Ordering::Relaxed))
     }
 
     pub fn publish(&self, policy: PolicyId, effective: PolicyId) {
+        // relaxed-ok: single-cell publish with no dependent payload; the
+        // batcher owns all writes, so no ordering between cells matters
         self.effective[policy.index()].store(effective.0, Ordering::Relaxed);
     }
 }

@@ -458,6 +458,8 @@ impl Coordinator {
         let now = Instant::now();
         let (reply, rx) = channel();
         let req = Request {
+            // relaxed-ok: pure id allocation — uniqueness is all that
+            // matters and fetch_add gives it at any ordering
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             key: GroupKey { task: key.task, policy: effective },
             requested,
@@ -468,6 +470,8 @@ impl Coordinator {
             deadline: deadline.or(self.config.default_deadline).map(|d| now + d),
             reply,
         };
+        // panic-ok: tx is Some from construction until drop; submit on a
+        // dropped coordinator is a caller bug, not a runtime state
         match self.tx.as_ref().expect("live").try_send(req) {
             Ok(()) => {
                 if effective != requested {
@@ -536,6 +540,7 @@ impl Coordinator {
     /// The engine pool handle (mirrored route/policy tables, dispatch
     /// state introspection).
     pub fn engine(&self) -> &EnginePool {
+        // panic-ok: engine is Some from construction until drop
         self.engine.as_ref().expect("engine live")
     }
 
@@ -650,6 +655,8 @@ fn batcher_main(
         // any transitions to the table admission reads
         if let (Some(g), Some(table)) = (governor.as_mut(), shared.as_deref()) {
             let now = Instant::now();
+            // panic-ok: gov_tick is Some whenever governor is Some (both
+            // derive from the same config branch)
             if now.duration_since(last_gov) >= gov_tick.expect("governor has a tick") {
                 last_gov = now;
                 let signals = Signals {
@@ -771,6 +778,8 @@ fn dispatch(
                     let _ = r.reply.send(Response {
                         id: r.id,
                         policy,
+                        // panic-ok: the engine returns bucket*nl logits
+                        // and row < rows <= bucket by batch formation
                         logits: logits[row * nl..(row + 1) * nl].to_vec(),
                         timing,
                         error: None,

@@ -6,7 +6,7 @@
 //! slots, so v1 (string-mode) traffic keeps its mode-name keys.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::model::manifest::PolicyId;
@@ -167,8 +167,10 @@ pub struct ReplicaStats {
     /// Supervised restarts that reached ready and rejoined dispatch.
     pub restarts: u64,
     /// Device-committed batches swept with `ReplicaFailed` across all of
-    /// this replica's deaths.
-    pub failed: u64,
+    /// this replica's deaths (named apart from the policy-ledger
+    /// `failed` counter: this one is outside the reconciliation
+    /// identity).
+    pub swept: u64,
     /// Heartbeat age at the supervisor's last liveness sample, us.
     pub beat_age_us: u64,
     /// Circuit breaker tripped: the replica is out for the pool's life.
@@ -208,8 +210,20 @@ impl Recorder {
         Recorder { start: Instant::now(), policies, inner: Mutex::new(slots) }
     }
 
+    /// Lock the slot tables, recovering from poisoning.  Every mutation
+    /// under this lock is a monotone counter bump or histogram append —
+    /// a panicking holder cannot leave torn state — so recovery keeps
+    /// the ledger serving instead of cascading opaque poison panics
+    /// through the supervisor and every connection thread.
+    fn slots(&self) -> MutexGuard<'_, Slots> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     pub fn record_request(&self, policy: PolicyId, total_us: u64, queue_us: u64, err: bool) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.slots();
         // slots are policy_order-sized; a foreign PolicyId is a bug, not a slot
         let s = &mut g.policies[policy.index()];
         s.requests += 1;
@@ -224,7 +238,7 @@ impl Recorder {
 
     /// A submission rejected with `Busy` at admission (queue at cap).
     pub fn record_shed(&self, policy: PolicyId) {
-        self.inner.lock().unwrap().policies[policy.index()].shed += 1;
+        self.slots().policies[policy.index()].shed += 1;
     }
 
     /// An admitted request cancelled because its deadline passed before
@@ -232,7 +246,7 @@ impl Recorder {
     /// cancel-before-submit hook).  Counts in `requests` too, so
     /// `requests == completed + errors + expired` stays exact.
     pub fn record_expired(&self, policy: PolicyId, queue_us: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.slots();
         let s = &mut g.policies[policy.index()];
         s.requests += 1;
         s.expired += 1;
@@ -242,14 +256,14 @@ impl Recorder {
     /// A request admitted while the governor had `requested` downgraded
     /// (it rides a cheaper route; the ledger stays under the asked name).
     pub fn record_governed(&self, requested: PolicyId) {
-        self.inner.lock().unwrap().policies[requested.index()].governed += 1;
+        self.slots().policies[requested.index()].governed += 1;
     }
 
     /// An admitted request whose batch was swept off a dead replica with
     /// `ReplicaFailed` (DESIGN.md §5.10).  Counts in `requests` too, so
     /// `requests == completed + errors + expired + failed` stays exact.
     pub fn record_failed(&self, policy: PolicyId) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.slots();
         let s = &mut g.policies[policy.index()];
         s.requests += 1;
         s.failed += 1;
@@ -259,10 +273,10 @@ impl Recorder {
     /// (the coordinator installs this as the pool's event hook; events
     /// arrive from the supervisor thread).
     pub fn record_pool_event(&self, ev: PoolEvent) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.slots();
         match ev {
             PoolEvent::ReplicaFailed { replica, failed_batches, .. } => {
-                g.replicas[replica].failed += failed_batches;
+                g.replicas[replica].swept += failed_batches;
             }
             PoolEvent::ReplicaRestarted { replica, generation } => {
                 let rs = &mut g.replicas[replica];
@@ -291,7 +305,7 @@ impl Recorder {
         exec_us: u64,
         replica: usize,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.slots();
         let s = &mut g.policies[policy.index()];
         s.batches += 1;
         s.batched_rows += rows as u64;
@@ -308,7 +322,7 @@ impl Recorder {
     /// Per-replica batch counts, dense by replica index (all replicas,
     /// including idle ones — the imbalance is the signal).
     pub fn replica_snapshot(&self) -> Vec<ReplicaStats> {
-        self.inner.lock().unwrap().replicas.clone()
+        self.slots().replicas.clone()
     }
 
     fn policy_snapshot_of(&self, slots: &Slots) -> BTreeMap<String, PolicyStats> {
@@ -324,7 +338,7 @@ impl Recorder {
     /// Per-policy stats keyed by policy name, active policies only (so
     /// callers see the same shape as traffic they actually sent).
     pub fn snapshot(&self) -> BTreeMap<String, PolicyStats> {
-        let g = self.inner.lock().unwrap();
+        let g = self.slots();
         self.policy_snapshot_of(&g)
     }
 
@@ -338,7 +352,7 @@ impl Recorder {
     pub fn render(&self) -> String {
         use crate::bench::Table;
         let (snap, reps) = {
-            let g = self.inner.lock().unwrap();
+            let g = self.slots();
             (self.policy_snapshot_of(&g), g.replicas.clone())
         };
         let elapsed = self.elapsed_s();
@@ -376,7 +390,7 @@ impl Recorder {
             // supervision ledger — generation, restarts, swept batches,
             // last-heartbeat age, breaker state
             let mut rt = Table::new(&[
-                "replica", "batches", "rows", "share", "gen", "restarts", "failed", "beat age",
+                "replica", "batches", "rows", "share", "gen", "restarts", "swept", "beat age",
                 "state",
             ]);
             for (i, r) in reps.iter().enumerate() {
@@ -387,7 +401,7 @@ impl Recorder {
                     format!("{:.0}%", 100.0 * r.batches as f64 / total.max(1) as f64),
                     r.generation.to_string(),
                     r.restarts.to_string(),
-                    r.failed.to_string(),
+                    r.swept.to_string(),
                     format!("{:.1}ms", r.beat_age_us as f64 / 1e3),
                     if r.excluded { "excluded".to_string() } else { "live".to_string() },
                 ]);
@@ -709,7 +723,7 @@ mod tests {
                     // last-writer-wins ones (generation, beat age) race
                     // across tapes by design and are only bounds-checked
                     Op::Event(PoolEvent::ReplicaFailed { replica, failed_batches, .. }) => {
-                        want_reps[replica].failed += failed_batches;
+                        want_reps[replica].swept += failed_batches;
                     }
                     Op::Event(PoolEvent::ReplicaRestarted { replica, .. }) => {
                         want_reps[replica].restarts += 1;
@@ -753,8 +767,8 @@ mod tests {
             for (i, w) in want_reps.iter().enumerate() {
                 assert_eq!((reps[i].batches, reps[i].rows), (w.batches, w.rows), "replica {i}");
                 assert_eq!(
-                    (reps[i].restarts, reps[i].failed, reps[i].excluded),
-                    (w.restarts, w.failed, w.excluded),
+                    (reps[i].restarts, reps[i].swept, reps[i].excluded),
+                    (w.restarts, w.swept, w.excluded),
                     "replica {i} health ledger"
                 );
             }
@@ -798,7 +812,7 @@ mod tests {
         assert_eq!(s.failed, 1);
         assert_eq!(s.requests, s.completed + s.errors + s.expired + s.failed);
         let reps = r.replica_snapshot();
-        assert_eq!((reps[1].failed, reps[1].restarts, reps[1].generation), (2, 1, 1));
+        assert_eq!((reps[1].swept, reps[1].restarts, reps[1].generation), (2, 1, 1));
         assert_eq!(reps[0].beat_age_us, 1500);
         assert!(reps[2].excluded && !reps[0].excluded);
         let table = r.render();

@@ -64,6 +64,8 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("{name}-{i}"))
                     .spawn(move || worker_main(rx, shared))
+                    // panic-ok: spawn fails only on OS thread exhaustion at
+                    // startup; there is no pool to degrade into yet
                     .expect("spawn worker")
             })
             .collect();
@@ -72,6 +74,8 @@ impl ThreadPool {
 
     /// Enqueue a job; returns false if the pool is shut down.
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) -> bool {
+        // panic-ok: counts is only touched by this accounting code, which
+        // cannot panic while holding it (job panics are caught unlocked)
         self.shared.counts.lock().expect("pool counts").queued += 1;
         self.tx.send(Msg::Run(Box::new(f))).is_ok()
     }
@@ -101,22 +105,27 @@ impl ThreadPool {
     }
 
     pub fn pending(&self) -> usize {
+        // panic-ok: counts critical sections are panic-free accounting
         let c = self.shared.counts.lock().expect("pool counts");
         c.queued - c.completed
     }
 
     pub fn completed(&self) -> usize {
+        // panic-ok: counts critical sections are panic-free accounting
         self.shared.counts.lock().expect("pool counts").completed
     }
 
     pub fn panicked(&self) -> usize {
+        // panic-ok: counts critical sections are panic-free accounting
         self.shared.counts.lock().expect("pool counts").panicked
     }
 
     /// Park until every queued job has finished (no spinning).
     pub fn wait_idle(&self) {
+        // panic-ok: counts critical sections are panic-free accounting
         let mut c = self.shared.counts.lock().expect("pool counts");
         while c.completed < c.queued {
+            // panic-ok: wait() re-acquires the same panic-free lock
             c = self.shared.idle.wait(c).expect("pool counts");
         }
     }
@@ -136,12 +145,15 @@ impl Drop for ThreadPool {
 fn worker_main(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
     loop {
         let msg = {
+            // panic-ok: the receiver lock only guards recv(), which does
+            // not panic; a poisoned queue means memory corruption
             let guard = rx.lock().expect("queue poisoned");
             guard.recv()
         };
         match msg {
             Ok(Msg::Run(job)) => {
                 let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                // panic-ok: job panics were caught above, unlocked
                 let mut c = shared.counts.lock().expect("pool counts");
                 if res.is_err() {
                     c.panicked += 1;

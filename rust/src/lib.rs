@@ -21,7 +21,8 @@
 //!   hardware claims;
 //! * [`traceflow`] — Figures 1/2 as checkable precision-flow traces;
 //! * substrates built from scratch for the offline environment:
-//!   [`json`], [`cli`], [`exec`], [`prop`], [`bench`].
+//!   [`json`], [`cli`], [`exec`], [`prop`], [`bench`], and [`lint`] —
+//!   the repo-native static analyses gating the concurrency discipline.
 
 pub mod bench;
 pub mod calib;
@@ -31,6 +32,7 @@ pub mod data;
 pub mod evalharness;
 pub mod exec;
 pub mod json;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod perfmodel;

@@ -1,0 +1,736 @@
+//! Per-function fact extraction for herolint (DESIGN.md §5.11).
+//!
+//! A single forward walk over the token stream recovers, for every
+//! non-test function: lock acquisitions (with the set of guards held at
+//! each one, tracked through `let`-bound vs temporary guard scopes),
+//! calls made while holding locks (for the inter-procedural lock
+//! graph), atomic accesses with their `Ordering`, panic sites
+//! (`unwrap`/`expect`/arithmetic slice index), counter increments,
+//! Condvar usage, and whether the function sends a wire reply.
+//!
+//! The walk is deliberately syntactic: no types, no name resolution.
+//! Where that loses precision the rules compensate (unique-name call
+//! resolution, annotation escape hatches) and DESIGN.md §5.11 records
+//! the known blind spots (closures attribute to their enclosing
+//! function; trait-object indirection is invisible).
+
+use std::collections::HashMap;
+
+use super::lexer::{AnnKind, Lexed, Tok, Token};
+
+/// Methods that acquire a std lock when called with no arguments.
+const LOCK_METHODS: [&str; 3] = ["lock", "read", "write"];
+
+const ATOMIC_METHODS: [&str; 13] = [
+    "load", "store", "swap", "fetch_add", "fetch_sub", "fetch_and", "fetch_or", "fetch_xor",
+    "fetch_max", "fetch_min", "fetch_update", "compare_exchange", "compare_exchange_weak",
+];
+
+const CONDVAR_METHODS: [&str; 6] =
+    ["wait", "wait_timeout", "wait_while", "wait_timeout_while", "notify_one", "notify_all"];
+
+/// One direct lock acquisition.
+#[derive(Debug, Clone)]
+pub struct Acquire {
+    pub class: String,
+    pub line: u32,
+}
+
+/// A nested acquisition: `class` taken while `held` was already held.
+#[derive(Debug, Clone)]
+pub struct Nested {
+    pub held: String,
+    pub class: String,
+    pub line: u32,
+}
+
+/// A call made while holding at least one lock (inter-procedural edge
+/// candidate).
+#[derive(Debug, Clone)]
+pub struct LockedCall {
+    pub callee: String,
+    pub held: Vec<String>,
+    pub line: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct AtomicSite {
+    pub field: String,
+    pub method: String,
+    pub ordering: String,
+    pub is_store: bool,
+    pub line: u32,
+    pub suppressed: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PanicKind {
+    Unwrap,
+    Expect,
+    Index,
+}
+
+impl PanicKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            PanicKind::Unwrap => "unwrap()",
+            PanicKind::Expect => "expect()",
+            PanicKind::Index => "arithmetic slice index",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PanicSite {
+    pub kind: PanicKind,
+    pub line: u32,
+    pub suppressed: bool,
+}
+
+/// Everything the rules need to know about one function.
+#[derive(Debug, Clone, Default)]
+pub struct FnFacts {
+    pub file: String,
+    /// Bare method name.
+    pub name: String,
+    /// `Type::name` when inside an impl block, else `name`.
+    pub qual: String,
+    pub impl_type: Option<String>,
+    pub line: u32,
+    pub acquires: Vec<Acquire>,
+    pub nested: Vec<Nested>,
+    pub locked_calls: Vec<LockedCall>,
+    /// Every `name(`/`​.name(` call site (coarse; includes enum
+    /// constructors — the rules match against known method names only).
+    pub calls: Vec<(String, u32)>,
+    pub atomics: Vec<AtomicSite>,
+    pub panics: Vec<PanicSite>,
+    /// `field += …` sites.
+    pub increments: Vec<(String, u32)>,
+    pub uses_condvar: bool,
+    pub sends_reply: bool,
+    /// Signature returns a `MutexGuard`/`RwLock*Guard` — callers of
+    /// this function acquire its lock.
+    pub guard_helper: bool,
+}
+
+#[derive(Debug)]
+struct Guard {
+    class: String,
+    depth: u32,
+    let_bound: bool,
+}
+
+struct Frame {
+    facts: FnFacts,
+    depth: u32,
+    guards: Vec<Guard>,
+}
+
+/// `exec/mod.rs` → `exec`, `coordinator/stats.rs` → `stats` — the
+/// fallback lock-class namespace when an acquisition has no
+/// `.expect("label")`.
+fn file_stem(file: &str) -> String {
+    let base = file.rsplit('/').next().unwrap_or(file);
+    let stem = base.strip_suffix(".rs").unwrap_or(base);
+    if stem == "mod" || stem == "lib" || stem == "main" {
+        let mut parts: Vec<&str> = file.split('/').collect();
+        parts.pop();
+        if let Some(dir) = parts.pop() {
+            return dir.to_string();
+        }
+    }
+    stem.to_string()
+}
+
+/// Walk backwards from the token before `.method(` to the receiver's
+/// innermost field name: `self.inner.lock()` → `inner`,
+/// `shared.effective[i].load(…)` → `effective`.
+fn receiver_field(toks: &[Token], mut i: isize) -> String {
+    while i >= 0 {
+        match &toks[i as usize].tok {
+            Tok::Ident(s) => return s.clone(),
+            Tok::Punct(']') => {
+                let mut depth = 1;
+                i -= 1;
+                while i >= 0 && depth > 0 {
+                    match toks[i as usize].tok {
+                        Tok::Punct(']') => depth += 1,
+                        Tok::Punct('[') => depth -= 1,
+                        _ => {}
+                    }
+                    i -= 1;
+                }
+            }
+            Tok::Punct(')') => {
+                let mut depth = 1;
+                i -= 1;
+                while i >= 0 && depth > 0 {
+                    match toks[i as usize].tok {
+                        Tok::Punct(')') => depth += 1,
+                        Tok::Punct('(') => depth -= 1,
+                        _ => {}
+                    }
+                    i -= 1;
+                }
+                // skip the method name + dot of the inner call and keep
+                // walking: `self.q.lock().unwrap()` wants `q`.
+                if i >= 0 && toks[i as usize].ident().is_some() {
+                    i -= 1;
+                }
+                if i >= 0 && toks[i as usize].is_punct('.') {
+                    i -= 1;
+                } else {
+                    return "?".to_string();
+                }
+            }
+            _ => return "?".to_string(),
+        }
+    }
+    "?".to_string()
+}
+
+/// Extract facts for every production (non-`#[cfg(test)]`, non-`#[test]`)
+/// function in one file.  `helpers` maps guard-returning helper method
+/// names to the lock class they hand out (from a prior pass).
+pub fn extract(file: &str, lexed: &Lexed, helpers: &HashMap<String, String>) -> Vec<FnFacts> {
+    let toks = &lexed.tokens;
+    let n = toks.len();
+    let stem = file_stem(file);
+
+    let mut out: Vec<FnFacts> = Vec::new();
+    let mut frames: Vec<Frame> = Vec::new();
+    let mut impls: Vec<(String, u32)> = Vec::new();
+    let mut depth: u32 = 0;
+    let mut pb: u32 = 0; // paren + bracket depth (for `;` disambiguation)
+    let mut pending_fn: Option<(String, bool, u32)> = None; // (name, guard_helper, line)
+    let mut pending_impl: Option<String> = None;
+    let mut pending_skip = false;
+    let mut stmt_let = false;
+    let mut pending_atomic: Option<(String, String, u32)> = None; // (field, method, line)
+
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        match &t.tok {
+            // ---- attributes: `#[...]` / `#![...]` --------------------
+            Tok::Punct('#') => {
+                let mut j = i + 1;
+                if j < n && toks[j].is_punct('!') {
+                    j += 1;
+                }
+                if j < n && toks[j].is_punct('[') {
+                    let mut adepth = 1u32;
+                    let mut idents: Vec<&str> = Vec::new();
+                    j += 1;
+                    while j < n && adepth > 0 {
+                        match &toks[j].tok {
+                            Tok::Punct('[') => adepth += 1,
+                            Tok::Punct(']') => adepth -= 1,
+                            Tok::Ident(s) => idents.push(s.as_str()),
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    if idents.contains(&"test") && !idents.contains(&"not") {
+                        pending_skip = true;
+                    }
+                    i = j;
+                    continue;
+                }
+                i += 1;
+            }
+
+            Tok::Punct('{') => {
+                if pending_skip {
+                    // consume the whole test item
+                    let mut bdepth = 1u32;
+                    let mut j = i + 1;
+                    while j < n && bdepth > 0 {
+                        match toks[j].tok {
+                            Tok::Punct('{') => bdepth += 1,
+                            Tok::Punct('}') => bdepth -= 1,
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    pending_skip = false;
+                    pending_fn = None;
+                    pending_impl = None;
+                    i = j;
+                    continue;
+                }
+                depth += 1;
+                stmt_let = false;
+                pending_atomic = None;
+                if let Some((name, helper, line)) = pending_fn.take() {
+                    let impl_type = impls.last().map(|(t, _)| t.clone());
+                    let qual = match &impl_type {
+                        Some(t) => format!("{}::{}", t, name),
+                        None => name.clone(),
+                    };
+                    frames.push(Frame {
+                        facts: FnFacts {
+                            file: file.to_string(),
+                            name,
+                            qual,
+                            impl_type,
+                            line,
+                            guard_helper: helper,
+                            ..FnFacts::default()
+                        },
+                        depth,
+                        guards: Vec::new(),
+                    });
+                } else if let Some(ty) = pending_impl.take() {
+                    impls.push((ty, depth));
+                }
+                i += 1;
+            }
+
+            Tok::Punct('}') => {
+                if let Some(fr) = frames.last_mut() {
+                    fr.guards.retain(|g| g.depth < depth);
+                    if fr.depth == depth {
+                        let fr = frames.pop().expect("frame just checked");
+                        out.push(fr.facts);
+                    }
+                }
+                if let Some((_, d)) = impls.last() {
+                    if *d == depth {
+                        impls.pop();
+                    }
+                }
+                depth = depth.saturating_sub(1);
+                stmt_let = false;
+                pending_atomic = None;
+                i += 1;
+            }
+
+            Tok::Punct(';') => {
+                if pb == 0 {
+                    if pending_skip {
+                        // `#[cfg(test)] use …;` — no body to skip
+                        pending_skip = false;
+                        pending_fn = None;
+                    }
+                    if let Some(fr) = frames.last_mut() {
+                        fr.guards.retain(|g| g.let_bound || g.depth < depth);
+                    }
+                    stmt_let = false;
+                    pending_atomic = None;
+                }
+                i += 1;
+            }
+
+            Tok::Punct('(') | Tok::Punct('[') => {
+                // slice-index sub-rule: flag `x[… + …]` / `x[… - …]`
+                if t.is_punct('[') && !frames.is_empty() && i > 0 {
+                    let prev_ok = matches!(toks[i - 1].tok, Tok::Ident(_))
+                        || toks[i - 1].is_punct(']')
+                        || toks[i - 1].is_punct(')');
+                    if prev_ok {
+                        let mut bdepth = 1u32;
+                        let mut j = i + 1;
+                        let mut arith = false;
+                        while j < n && bdepth > 0 {
+                            match toks[j].tok {
+                                Tok::Punct('[') => bdepth += 1,
+                                Tok::Punct(']') => bdepth -= 1,
+                                Tok::Punct('+') | Tok::Punct('-') => arith = true,
+                                _ => {}
+                            }
+                            j += 1;
+                        }
+                        if arith {
+                            let suppressed = lexed.suppressed(AnnKind::PanicOk, t.line);
+                            if let Some(fr) = frames.last_mut() {
+                                fr.facts.panics.push(PanicSite {
+                                    kind: PanicKind::Index,
+                                    line: t.line,
+                                    suppressed,
+                                });
+                            }
+                        }
+                    }
+                }
+                pb += 1;
+                i += 1;
+            }
+            Tok::Punct(')') | Tok::Punct(']') => {
+                pb = pb.saturating_sub(1);
+                i += 1;
+            }
+
+            Tok::Ident(id) if id == "fn" => {
+                // signature scan: name, guard-helper return, body-vs-decl
+                let mut j = i + 1;
+                let name = match toks.get(j).and_then(|t| t.ident()) {
+                    Some(s) => s.to_string(),
+                    None => {
+                        i += 1;
+                        continue;
+                    }
+                };
+                let line = toks[j].line;
+                j += 1;
+                let mut sig_pb = 0u32;
+                let mut helper = false;
+                while j < n {
+                    match &toks[j].tok {
+                        Tok::Punct('(') | Tok::Punct('[') => sig_pb += 1,
+                        Tok::Punct(')') | Tok::Punct(']') => sig_pb = sig_pb.saturating_sub(1),
+                        Tok::Punct('{') if sig_pb == 0 => break,
+                        Tok::Punct(';') if sig_pb == 0 => {
+                            // trait method declaration: no body
+                            j += 1;
+                            break;
+                        }
+                        Tok::Ident(s)
+                            if s == "MutexGuard"
+                                || s == "RwLockReadGuard"
+                                || s == "RwLockWriteGuard" =>
+                        {
+                            helper = true;
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if j < n && toks[j].is_punct('{') {
+                    pending_fn = Some((name, helper, line));
+                }
+                i = j; // the `{` (or token after `;`) is processed by the main loop
+            }
+
+            Tok::Ident(id) if id == "impl" => {
+                // header scan up to `{`: last path segment at angle-depth
+                // 0 wins; `for` resets (the earlier name was the trait)
+                let mut j = i + 1;
+                let mut angle = 0i32;
+                let mut ty: Option<String> = None;
+                while j < n {
+                    match &toks[j].tok {
+                        Tok::Punct('{') if angle <= 0 => break,
+                        Tok::Punct('<') => angle += 1,
+                        Tok::Punct('>') => angle -= 1,
+                        Tok::Ident(s) if s == "for" => ty = None,
+                        Tok::Ident(s) if angle <= 0 && s != "where" => ty = Some(s.clone()),
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                pending_impl = Some(ty.unwrap_or_else(|| "?".to_string()));
+                i = j; // leave the `{` to the main loop
+            }
+
+            Tok::Ident(id) if id == "let" => {
+                stmt_let = true;
+                i += 1;
+            }
+
+            // ---- method calls: `.name(` ------------------------------
+            Tok::Punct('.') => {
+                let m = match toks.get(i + 1).and_then(|t| t.ident()) {
+                    Some(s) if toks.get(i + 2).map(|t| t.is_punct('(')).unwrap_or(false) => {
+                        s.to_string()
+                    }
+                    _ => {
+                        i += 1;
+                        continue;
+                    }
+                };
+                let line = toks[i + 1].line;
+                if let Some(fr) = frames.last_mut() {
+                    // Method names the extractor already special-cases
+                    // are std-library calls (`.expect(…)`, `.load(…)`)
+                    // — recording them as resolvable calls would let a
+                    // same-named tree function (e.g. `json::Parser::
+                    // expect`, `Manifest::load`) pollute the lock graph.
+                    let std_method = LOCK_METHODS.contains(&m.as_str())
+                        || ATOMIC_METHODS.contains(&m.as_str())
+                        || CONDVAR_METHODS.contains(&m.as_str())
+                        || matches!(m.as_str(), "unwrap" | "expect" | "send");
+                    if !std_method {
+                        fr.facts.calls.push((m.clone(), line));
+                        if !fr.guards.is_empty() {
+                            fr.facts.locked_calls.push(LockedCall {
+                                callee: m.clone(),
+                                held: fr.guards.iter().map(|g| g.class.clone()).collect(),
+                                line,
+                            });
+                        }
+                    }
+                    let no_args = toks.get(i + 3).map(|t| t.is_punct(')')).unwrap_or(false);
+                    if LOCK_METHODS.contains(&m.as_str()) && no_args {
+                        // class: chained `.expect("label")` names it,
+                        // else fall back to `stem::field`
+                        let mut class = None;
+                        if toks.get(i + 4).map(|t| t.is_punct('.')).unwrap_or(false)
+                            && toks.get(i + 5).and_then(|t| t.ident()) == Some("expect")
+                        {
+                            if let Some(Tok::Str(s)) = toks.get(i + 7).map(|t| &t.tok) {
+                                class = Some(s.clone());
+                            }
+                        }
+                        let class = class.unwrap_or_else(|| {
+                            format!("{}::{}", stem, receiver_field(toks, i as isize - 1))
+                        });
+                        record_acquire(fr, class, line, depth, stmt_let);
+                    } else if let Some(class) = helpers.get(&m) {
+                        record_acquire(fr, class.clone(), line, depth, stmt_let);
+                    }
+                    if ATOMIC_METHODS.contains(&m.as_str()) {
+                        let field = receiver_field(toks, i as isize - 1);
+                        pending_atomic = Some((field, m.clone(), line));
+                    }
+                    if CONDVAR_METHODS.contains(&m.as_str()) {
+                        fr.facts.uses_condvar = true;
+                    }
+                    if m == "send" && receiver_field(toks, i as isize - 1) == "reply" {
+                        fr.facts.sends_reply = true;
+                    }
+                    if m == "unwrap" || m == "expect" {
+                        let kind =
+                            if m == "unwrap" { PanicKind::Unwrap } else { PanicKind::Expect };
+                        let suppressed = lexed.suppressed(AnnKind::PanicOk, line);
+                        fr.facts.panics.push(PanicSite { kind, line, suppressed });
+                    }
+                }
+                i += 2; // resume at the `(` so pb stays balanced
+            }
+
+            // ---- `Ordering::X` resolves a pending atomic -------------
+            Tok::Ident(id) if id == "Ordering" => {
+                let is_path = toks.get(i + 1).map(|t| t.is_punct(':')).unwrap_or(false)
+                    && toks.get(i + 2).map(|t| t.is_punct(':')).unwrap_or(false);
+                if is_path {
+                    if let Some(ord) = toks.get(i + 3).and_then(|t| t.ident()) {
+                        if let Some((field, method, aline)) = pending_atomic.take() {
+                            if let Some(fr) = frames.last_mut() {
+                                let suppressed = lexed.suppressed(AnnKind::RelaxedOk, aline)
+                                    || lexed.suppressed(AnnKind::RelaxedOk, toks[i].line);
+                                fr.facts.atomics.push(AtomicSite {
+                                    field,
+                                    is_store: method != "load",
+                                    method,
+                                    ordering: ord.to_string(),
+                                    line: aline,
+                                    suppressed,
+                                });
+                            }
+                        }
+                        i += 4;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+
+            // ---- free calls / increments -----------------------------
+            Tok::Ident(id) => {
+                let is_call = toks.get(i + 1).map(|t| t.is_punct('(')).unwrap_or(false)
+                    && (i == 0 || toks[i - 1].ident() != Some("fn"));
+                let is_incr = toks.get(i + 1).map(|t| t.is_punct('+')).unwrap_or(false)
+                    && toks.get(i + 2).map(|t| t.is_punct('=')).unwrap_or(false);
+                if let Some(fr) = frames.last_mut() {
+                    if is_call {
+                        fr.facts.calls.push((id.clone(), t.line));
+                        if !fr.guards.is_empty() {
+                            fr.facts.locked_calls.push(LockedCall {
+                                callee: id.clone(),
+                                held: fr.guards.iter().map(|g| g.class.clone()).collect(),
+                                line: t.line,
+                            });
+                        }
+                        if let Some(class) = helpers.get(id) {
+                            record_acquire(fr, class.clone(), t.line, depth, stmt_let);
+                        }
+                    }
+                    if is_incr {
+                        fr.facts.increments.push((id.clone(), t.line));
+                    }
+                }
+                i += 1;
+            }
+
+            _ => {
+                i += 1;
+            }
+        }
+    }
+    // unterminated frames (shouldn't happen on valid code) still report
+    while let Some(fr) = frames.pop() {
+        out.push(fr.facts);
+    }
+    out
+}
+
+fn record_acquire(fr: &mut Frame, class: String, line: u32, depth: u32, let_bound: bool) {
+    fr.facts.acquires.push(Acquire { class: class.clone(), line });
+    for g in &fr.guards {
+        fr.facts.nested.push(Nested { held: g.class.clone(), class: class.clone(), line });
+    }
+    fr.guards.push(Guard { class, depth, let_bound });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn facts_of(src: &str) -> Vec<FnFacts> {
+        extract("x/demo.rs", &lex(src), &HashMap::new())
+    }
+
+    #[test]
+    fn nested_acquisition_and_label_classes() {
+        let src = r#"
+impl Pool {
+    fn submit(&self) {
+        let slot = self.slot.lock().expect("replica slot");
+        let q = self.queue.lock().expect("job queue");
+        q.len();
+    }
+}
+"#;
+        let f = &facts_of(src)[0];
+        assert_eq!(f.qual, "Pool::submit");
+        assert_eq!(f.acquires.len(), 2);
+        assert_eq!(f.acquires[0].class, "replica slot");
+        assert_eq!(f.nested.len(), 1);
+        assert_eq!(f.nested[0].held, "replica slot");
+        assert_eq!(f.nested[0].class, "job queue");
+        // the two `.expect(` chains are panic sites too
+        assert_eq!(f.panics.iter().filter(|p| p.kind == PanicKind::Expect).count(), 2);
+    }
+
+    #[test]
+    fn temporary_guard_released_at_statement_end() {
+        let src = r#"
+fn tick(&self) {
+    self.a.lock().unwrap().push(1);
+    self.b.lock().unwrap().push(2);
+}
+"#;
+        let f = &facts_of(src)[0];
+        assert_eq!(f.acquires.len(), 2);
+        assert!(f.nested.is_empty(), "statement-scoped guards must not overlap: {:?}", f.nested);
+    }
+
+    #[test]
+    fn let_guard_held_across_call_sites() {
+        let src = r#"
+fn drain(&self) {
+    let g = self.a.lock().unwrap();
+    helper(g.len());
+}
+"#;
+        let f = &facts_of(src)[0];
+        let lc: Vec<&str> = f.locked_calls.iter().map(|c| c.callee.as_str()).collect();
+        assert!(lc.contains(&"helper"), "call under guard must be recorded: {:?}", lc);
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = r#"
+fn real(&self) { self.x.lock().unwrap(); }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fake() { panic!(); }
+    fn helper(&self) { self.y.lock().unwrap(); }
+}
+"#;
+        let fs = facts_of(src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].name, "real");
+    }
+
+    #[test]
+    fn atomics_condvar_reply_and_increments() {
+        let src = r#"
+impl Recorder {
+    fn record(&self, s: &mut Slots) {
+        s.requests += 1;
+        self.seq.fetch_add(1, Ordering::Relaxed);
+        self.flag.store(true, Ordering::SeqCst);
+    }
+    fn pump(&self, g: G) {
+        let g = self.cv.wait(g).unwrap();
+        r.reply.send(g);
+    }
+}
+"#;
+        let fs = facts_of(src);
+        let rec = fs.iter().find(|f| f.name == "record").unwrap();
+        assert_eq!(rec.increments, vec![("requests".to_string(), 4)]);
+        assert_eq!(rec.atomics.len(), 2);
+        assert_eq!(rec.atomics[0].field, "seq");
+        assert_eq!(rec.atomics[0].ordering, "Relaxed");
+        assert!(rec.atomics[0].is_store);
+        assert_eq!(rec.atomics[1].ordering, "SeqCst");
+        assert_eq!(rec.impl_type.as_deref(), Some("Recorder"));
+        let pump = fs.iter().find(|f| f.name == "pump").unwrap();
+        assert!(pump.uses_condvar);
+        assert!(pump.sends_reply);
+    }
+
+    #[test]
+    fn arithmetic_index_flagged_plain_index_not() {
+        let src = r#"
+fn pick(&self, i: usize) -> u32 {
+    let a = self.chains[i];
+    self.chains[i - 1]
+}
+"#;
+        let f = &facts_of(src)[0];
+        let idx: Vec<&PanicSite> =
+            f.panics.iter().filter(|p| p.kind == PanicKind::Index).collect();
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx[0].line, 4);
+    }
+
+    #[test]
+    fn guard_helper_signature_detected_and_calls_resolve() {
+        let src = r#"
+impl R {
+    fn slots(&self) -> MutexGuard<'_, Slots> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+}
+"#;
+        let fs = facts_of(src);
+        assert!(fs[0].guard_helper);
+        assert_eq!(fs[0].acquires[0].class, "demo::inner");
+
+        let mut helpers = HashMap::new();
+        helpers.insert("slots".to_string(), "demo::inner".to_string());
+        let caller = r#"
+impl R {
+    fn bump(&self) {
+        let mut g = self.slots();
+        g.requests += 1;
+        self.other.lock().expect("other lock");
+    }
+}
+"#;
+        let fs = extract("x/demo.rs", &lex(caller), &helpers);
+        assert_eq!(fs[0].acquires.len(), 2);
+        assert_eq!(fs[0].nested.len(), 1);
+        assert_eq!(fs[0].nested[0].held, "demo::inner");
+        assert_eq!(fs[0].nested[0].class, "other lock");
+    }
+
+    #[test]
+    fn suppression_annotations_reach_sites() {
+        let src = "fn f(&self) {\n    // panic-ok: checked non-empty above\n    self.v.last().unwrap();\n    self.w.first().unwrap();\n}\n";
+        let f = &facts_of(src)[0];
+        assert_eq!(f.panics.len(), 2);
+        assert!(f.panics[0].suppressed);
+        assert!(!f.panics[1].suppressed);
+    }
+}

@@ -1,0 +1,410 @@
+//! Minimal Rust lexer for the herolint analyses (DESIGN.md §5.11).
+//!
+//! Dependency-free, in the spirit of `json`/`prop`/`cli`: `syn` is
+//! unavailable offline, and the four lint rules only need a token
+//! stream with line numbers plus the suppression annotations — not a
+//! full AST.  The lexer understands exactly enough of the language to
+//! be line-accurate through the constructs that defeat naive text
+//! scans: nested block comments, string/char literals (including raw
+//! strings with `#` fences and byte strings), and the lifetime-vs-char
+//! ambiguity of `'`.
+//!
+//! Suppression annotations are ordinary line comments with a required
+//! reason:
+//!
+//! ```text
+//! // panic-ok: <invariant that makes the panic unreachable>
+//! // relaxed-ok: <why no cross-thread ordering is needed>
+//! ```
+//!
+//! An annotation suppresses findings of its kind on its own line and on
+//! the line directly below it (so it can sit on the site's line or on a
+//! comment line of its own).  When a standalone annotation comment is
+//! followed by further whole-line comments, the block extends: the
+//! annotation covers the first code line after the comment block, so a
+//! justification too long for one line still reaches its site.  A bare
+//! `// panic-ok` with no reason does not count: the reason *is* the
+//! review artifact.
+
+/// One lexical token.  Numbers keep their text only for debugging; the
+/// analyses never interpret them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Str(String),
+    Num(String),
+    /// Lifetime (`'a`) — distinct from `Ch` so `'a` never opens a
+    /// phantom char literal that would swallow the rest of the file.
+    Life,
+    /// Char or byte literal (contents never matter to the analyses).
+    Ch,
+    Punct(char),
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+}
+
+/// Which finding kind a comment annotation suppresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnnKind {
+    PanicOk,
+    RelaxedOk,
+}
+
+#[derive(Debug, Clone)]
+pub struct Annotation {
+    pub kind: AnnKind,
+    pub line: u32,
+    /// Comment sat on its own line (no code before it); only these
+    /// extend through a following comment block.
+    standalone: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub annotations: Vec<Annotation>,
+}
+
+impl Lexed {
+    /// True when an annotation of `kind` covers `line` (the annotation
+    /// sits on the line itself or on the line directly above).
+    pub fn suppressed(&self, kind: AnnKind, line: u32) -> bool {
+        self.annotations
+            .iter()
+            .any(|a| a.kind == kind && (a.line == line || a.line + 1 == line))
+    }
+}
+
+fn ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Parse a `//` comment body into an annotation, if it is one.
+fn annotation_of(body: &str) -> Option<AnnKind> {
+    let t = body.trim_start_matches(['/', '!']).trim();
+    for (prefix, kind) in [("panic-ok:", AnnKind::PanicOk), ("relaxed-ok:", AnnKind::RelaxedOk)] {
+        if let Some(reason) = t.strip_prefix(prefix) {
+            if !reason.trim().is_empty() {
+                return Some(kind);
+            }
+        }
+    }
+    None
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (and annotation capture)
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            let body: String = cs[start..j].iter().collect();
+            let own_line = out.tokens.last().map_or(true, |t| t.line != line);
+            if let Some(kind) = annotation_of(&body) {
+                out.annotations.push(Annotation { kind, line, standalone: own_line });
+            } else if own_line {
+                // a whole-line comment directly below a standalone
+                // annotation continues its block: slide the annotation
+                // down so it still covers the code line after the block
+                if let Some(a) = out.annotations.last_mut() {
+                    if a.standalone && a.line + 1 == line {
+                        a.line = line;
+                    }
+                }
+            }
+            i = j;
+            continue;
+        }
+        // block comment (nested, per the language)
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte string prefixes: r", r#", b", br", br#", b'
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let (raw, skip) = match (c, cs[i + 1]) {
+                ('r', '"') | ('r', '#') => (true, 1),
+                ('b', 'r') if i + 2 < n && (cs[i + 2] == '"' || cs[i + 2] == '#') => (true, 2),
+                ('b', '"') => (false, 1),
+                ('b', '\'') => {
+                    // byte char literal: scan to the closing quote
+                    let start_line = line;
+                    let mut j = i + 2;
+                    while j < n && cs[j] != '\'' {
+                        if cs[j] == '\\' {
+                            j += 1;
+                        }
+                        j += 1;
+                    }
+                    out.tokens.push(Token { tok: Tok::Ch, line: start_line });
+                    i = j + 1;
+                    continue;
+                }
+                _ => (false, 0),
+            };
+            if raw {
+                let start_line = line;
+                let mut j = i + skip;
+                let mut fences = 0usize;
+                while j < n && cs[j] == '#' {
+                    fences += 1;
+                    j += 1;
+                }
+                // opening quote
+                j += 1;
+                let mut body = String::new();
+                'raw: while j < n {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    if cs[j] == '"' {
+                        let mut k = 0usize;
+                        while k < fences && j + 1 + k < n && cs[j + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == fences {
+                            j += 1 + fences;
+                            break 'raw;
+                        }
+                    }
+                    body.push(cs[j]);
+                    j += 1;
+                }
+                out.tokens.push(Token { tok: Tok::Str(body), line: start_line });
+                i = j;
+                continue;
+            }
+            if skip == 1 {
+                // b"..." — fall through to the normal string scan below,
+                // starting at the quote
+                i += 1;
+                // (the `"` branch below handles it)
+            }
+        }
+        if cs[i] == '"' {
+            let start_line = line;
+            let mut j = i + 1;
+            let mut body = String::new();
+            while j < n {
+                let d = cs[j];
+                if d == '\\' && j + 1 < n {
+                    if cs[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    body.push(d);
+                    body.push(cs[j + 1]);
+                    j += 2;
+                    continue;
+                }
+                if d == '"' {
+                    j += 1;
+                    break;
+                }
+                if d == '\n' {
+                    line += 1;
+                }
+                body.push(d);
+                j += 1;
+            }
+            out.tokens.push(Token { tok: Tok::Str(body), line: start_line });
+            i = j;
+            continue;
+        }
+        if cs[i] == '\'' {
+            // lifetime or char literal
+            if i + 1 < n && cs[i + 1] == '\\' {
+                // escaped char: scan to the closing quote
+                let mut j = i + 2;
+                while j < n && cs[j] != '\'' {
+                    if cs[j] == '\\' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                out.tokens.push(Token { tok: Tok::Ch, line });
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && cs[i + 2] == '\'' {
+                // 'x' — any single char (including an ident char)
+                out.tokens.push(Token { tok: Tok::Ch, line });
+                i = i + 3;
+                continue;
+            }
+            if i + 1 < n && ident_start(cs[i + 1]) {
+                // lifetime: 'a, 'static — no closing quote
+                let mut j = i + 1;
+                while j < n && ident_cont(cs[j]) {
+                    j += 1;
+                }
+                out.tokens.push(Token { tok: Tok::Life, line });
+                i = j;
+                continue;
+            }
+            // stray quote (shouldn't happen in valid code)
+            out.tokens.push(Token { tok: Tok::Punct('\''), line });
+            i += 1;
+            continue;
+        }
+        if ident_start(cs[i]) {
+            let mut j = i + 1;
+            while j < n && ident_cont(cs[j]) {
+                j += 1;
+            }
+            let s: String = cs[i..j].iter().collect();
+            out.tokens.push(Token { tok: Tok::Ident(s), line });
+            i = j;
+            continue;
+        }
+        if cs[i].is_ascii_digit() {
+            // loose: suffixes and hex ride along; `.` stays punct so
+            // ranges (`0..n`) never get eaten
+            let mut j = i + 1;
+            while j < n && ident_cont(cs[j]) {
+                j += 1;
+            }
+            let s: String = cs[i..j].iter().collect();
+            out.tokens.push(Token { tok: Tok::Num(s), line });
+            i = j;
+            continue;
+        }
+        out.tokens.push(Token { tok: Tok::Punct(cs[i]), line });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| t.ident().map(str::to_string))
+            .collect()
+    }
+
+    #[test]
+    fn comments_strings_and_lifetimes_do_not_leak_tokens() {
+        let src = r##"
+// a comment with fn and lock() in it
+/* block /* nested */ still comment fn */
+fn real<'a>(x: &'a str) -> char {
+    let _s = "fn fake() { lock() }";
+    let _r = r#"also "fake" lock()"#;
+    let _c = 'l';
+    let _e = '\n';
+    'x'
+}
+"##;
+        let ids = idents(src);
+        assert_eq!(
+            ids,
+            vec!["fn", "real", "x", "str", "char", "let", "_s", "let", "_r", "let", "_c", "let",
+                 "_e"]
+        );
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "/* one\ntwo */\nfn f() {}\n\"a\nb\"\nfn g() {}\n";
+        let lx = lex(src);
+        let f = lx.tokens.iter().find(|t| t.ident() == Some("f")).unwrap();
+        assert_eq!(f.line, 3);
+        let g = lx.tokens.iter().find(|t| t.ident() == Some("g")).unwrap();
+        assert_eq!(g.line, 6);
+    }
+
+    #[test]
+    fn annotations_require_a_reason_and_cover_two_lines() {
+        let src = "\n// panic-ok: guarded by the check above\nx.unwrap();\n// panic-ok\ny.unwrap();\n// relaxed-ok: id allocation only\n";
+        let lx = lex(src);
+        assert_eq!(lx.annotations.len(), 2, "bare panic-ok must not count");
+        assert!(lx.suppressed(AnnKind::PanicOk, 2));
+        assert!(lx.suppressed(AnnKind::PanicOk, 3), "annotation covers the next line");
+        assert!(!lx.suppressed(AnnKind::PanicOk, 5), "reasonless annotation suppresses nothing");
+        assert!(lx.suppressed(AnnKind::RelaxedOk, 6));
+        assert!(!lx.suppressed(AnnKind::RelaxedOk, 3));
+    }
+
+    #[test]
+    fn annotation_blocks_extend_through_continuation_comments() {
+        let src = "\n// panic-ok: the invariant is long enough that the\n// justification wraps onto a second comment line\nx.unwrap();\ny.unwrap();\ncode();\n// not an annotation\nz.unwrap();\n";
+        let lx = lex(src);
+        assert!(lx.suppressed(AnnKind::PanicOk, 4), "block covers first code line");
+        assert!(!lx.suppressed(AnnKind::PanicOk, 5), "coverage stops after one code line");
+        assert!(!lx.suppressed(AnnKind::PanicOk, 8), "unrelated comment gains nothing");
+        // a trailing annotation (code before it on the line) does not
+        // slide down a following comment block away from its own line
+        let src2 = "a.unwrap(); // panic-ok: checked right above\n// an ordinary comment\nb.unwrap();\n";
+        let lx2 = lex(src2);
+        assert!(lx2.suppressed(AnnKind::PanicOk, 1));
+        assert!(!lx2.suppressed(AnnKind::PanicOk, 3));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_scan_cleanly() {
+        let src = r###"let a = br#"x "quoted" y"#; let b = b"bytes"; let c = b'q';"###;
+        let lx = lex(src);
+        let strs: Vec<&Tok> =
+            lx.tokens.iter().filter(|t| matches!(t.tok, Tok::Str(_))).map(|t| &t.tok).collect();
+        assert_eq!(strs.len(), 2);
+        assert!(lx.tokens.iter().any(|t| t.tok == Tok::Ch));
+    }
+}

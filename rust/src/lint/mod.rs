@@ -1,0 +1,228 @@
+//! herolint — repo-native static analysis for the serving spine
+//! (DESIGN.md §5.11).
+//!
+//! loom and clippy-with-custom-lints are unavailable offline, so — in
+//! the same spirit as `prop::forall` — the race/deadlock/panic
+//! discipline the concurrent modules rely on is checked by this
+//! dependency-free pass instead: a lightweight lexer ([`lexer`]), a
+//! per-function fact extractor ([`facts`]), and four rules tuned to
+//! this codebase ([`rules`]): lock-order cycles, under-ordered atomics
+//! in cross-thread handshakes, panic paths in serving modules, and the
+//! Recorder ledger identity.
+//!
+//! Entry points: [`lint_sources`] for in-memory `(path, source)` pairs
+//! (fixtures, tests) and [`lint_tree`] for a source directory; the
+//! `lint` CLI subcommand and the `scripts/ci.sh` gate sit on top.
+
+pub mod facts;
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use rules::{Analysis, Finding, LockEdge};
+
+use crate::json::{self, Value};
+
+/// Full lint result for one run.
+pub struct Report {
+    /// Root the relative paths in findings are resolved against.
+    pub root: String,
+    pub analysis: Analysis,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.analysis.findings.is_empty()
+    }
+
+    /// Human-readable report: findings grouped by rule, then the
+    /// observed lock order (the cross-referenced edge list that
+    /// documents the discipline the checker enforces).
+    pub fn render(&self) -> String {
+        let a = &self.analysis;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "herolint: {} files, {} functions — {} finding(s), {} suppressed (panic-ok {}, relaxed-ok {})\n",
+            a.files,
+            a.functions,
+            a.findings.len(),
+            a.suppressed_panic + a.suppressed_relaxed,
+            a.suppressed_panic,
+            a.suppressed_relaxed,
+        ));
+        for rule in [
+            rules::RULE_LOCK_ORDER,
+            rules::RULE_ATOMIC,
+            rules::RULE_PANIC,
+            rules::RULE_LEDGER,
+        ] {
+            let of_rule: Vec<&Finding> =
+                a.findings.iter().filter(|f| f.rule == rule).collect();
+            if of_rule.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("\n[{}] {} finding(s)\n", rule, of_rule.len()));
+            for f in of_rule {
+                if f.file.is_empty() {
+                    out.push_str(&format!("  {}\n", f.message));
+                } else {
+                    out.push_str(&format!("  {}:{}: {}\n", f.file, f.line, f.message));
+                }
+            }
+        }
+        if !a.edges.is_empty() {
+            out.push_str("\nobserved lock order (acquire left before right):\n");
+            for e in &a.edges {
+                let via = e.via.as_ref().map(|v| format!(" via {}()", v)).unwrap_or_default();
+                out.push_str(&format!(
+                    "  `{}` -> `{}`  ({}:{}{})\n",
+                    e.from, e.to, e.file, e.line, via
+                ));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable report for CI trend tooling (`lint --json`).
+    pub fn to_json(&self) -> Value {
+        let a = &self.analysis;
+        let findings: Vec<Value> = a
+            .findings
+            .iter()
+            .map(|f| {
+                json::obj(vec![
+                    ("rule", json::s(f.rule)),
+                    ("file", json::s(&f.file)),
+                    ("line", json::num(f.line as f64)),
+                    ("message", json::s(&f.message)),
+                ])
+            })
+            .collect();
+        let edges: Vec<Value> = a
+            .edges
+            .iter()
+            .map(|e| {
+                json::obj(vec![
+                    ("from", json::s(&e.from)),
+                    ("to", json::s(&e.to)),
+                    ("file", json::s(&e.file)),
+                    ("line", json::num(e.line as f64)),
+                    (
+                        "via",
+                        e.via.as_ref().map(|v| json::s(v)).unwrap_or(Value::Null),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("root", json::s(&self.root)),
+            ("files", json::num(a.files as f64)),
+            ("functions", json::num(a.functions as f64)),
+            (
+                "suppressed",
+                json::obj(vec![
+                    ("panic_ok", json::num(a.suppressed_panic as f64)),
+                    ("relaxed_ok", json::num(a.suppressed_relaxed as f64)),
+                ]),
+            ),
+            ("findings", Value::Array(findings)),
+            ("lock_edges", Value::Array(edges)),
+        ])
+    }
+}
+
+/// Lint in-memory sources; `(relative_path, source)` pairs.
+pub fn lint_sources(files: &[(String, String)]) -> Report {
+    Report {
+        root: "<memory>".to_string(),
+        analysis: rules::analyze(files),
+    }
+}
+
+/// Lint every `.rs` file under `root` (deterministic order).
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let mut files: Vec<(String, String)> = Vec::new();
+    collect(root, root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    anyhow::ensure!(
+        !files.is_empty(),
+        "no .rs files under {} — wrong --src root?",
+        root.display()
+    );
+    Ok(Report {
+        root: root.display().to_string(),
+        analysis: rules::analyze(&files),
+    })
+}
+
+fn collect(root: &Path, dir: &Path, out: &mut Vec<(String, String)>) -> Result<()> {
+    for entry in fs::read_dir(dir).with_context(|| format!("read_dir {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect(root, &path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let src =
+                fs::read_to_string(&path).with_context(|| format!("read {}", path.display()))?;
+            out.push((rel, src));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_shape() {
+        let files = vec![(
+            "coordinator/demo.rs".to_string(),
+            "fn hot(&self) { self.m.get(&k).unwrap(); }\n".to_string(),
+        )];
+        let rep = lint_sources(&files);
+        assert!(!rep.clean());
+        let v = rep.to_json();
+        let findings = v.get("findings").and_then(|f| f.as_array()).unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(
+            findings[0].get("rule").and_then(|r| r.as_str()),
+            Some("panic-path")
+        );
+        assert_eq!(findings[0].get("line").and_then(|l| l.as_usize()), Some(1));
+        // round-trips through the in-repo parser
+        let text = json::to_string_pretty(&v);
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.get("files").and_then(|f| f.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn render_mentions_rule_and_lock_order_section() {
+        let files = vec![(
+            "x/demo.rs".to_string(),
+            r#"
+impl P {
+    fn one(&self) {
+        let a = self.a.lock().expect("lock A");
+        let b = self.b.lock().expect("lock B");
+    }
+}
+"#
+            .to_string(),
+        )];
+        let rep = lint_sources(&files);
+        assert!(rep.clean());
+        let text = rep.render();
+        assert!(text.contains("observed lock order"));
+        assert!(text.contains("`lock A` -> `lock B`"));
+    }
+}

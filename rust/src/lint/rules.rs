@@ -1,0 +1,791 @@
+//! The four herolint analyses (DESIGN.md §5.11), run over the facts
+//! extracted by [`super::facts`].
+//!
+//! 1. **lock-order** — build the inter-procedural lock graph (nested
+//!    acquisitions plus calls made while holding a guard, resolved to
+//!    lock-acquiring functions by unique bare name) and fail on any
+//!    strongly-connected component: a cycle is a potential deadlock.
+//! 2. **atomic-ordering** — flag `Ordering::Relaxed` sites that look
+//!    like cross-thread handshakes: the field is accessed with mixed
+//!    orderings, the function participates in a Condvar protocol, or
+//!    the field is Relaxed-stored in one function and Relaxed-loaded in
+//!    another (publish/observe pair).  `// relaxed-ok: <reason>`
+//!    suppresses.
+//! 3. **panic-path** — forbid `unwrap()`/`expect()`/arithmetic slice
+//!    indexing in serving modules (`coordinator/*`, `runtime/*`,
+//!    `exec/*`) without `// panic-ok: <invariant>`.
+//! 4. **ledger-identity** — every counter in the reconciliation
+//!    identity `requests == completed + errors + expired + failed`
+//!    must have exactly one owning `Recorder` method, that method must
+//!    also bump `requests`, and every production call site of it must
+//!    be a terminal-reply path (a function that sends a wire reply).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use super::facts::{extract, FnFacts};
+use super::lexer::lex;
+
+pub const RULE_LOCK_ORDER: &str = "lock-order";
+pub const RULE_ATOMIC: &str = "atomic-ordering";
+pub const RULE_PANIC: &str = "panic-path";
+pub const RULE_LEDGER: &str = "ledger-identity";
+
+/// Counters on the right-hand side of the reconciliation identity.
+const IDENTITY_RHS: [&str; 4] = ["completed", "errors", "expired", "failed"];
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// One edge of the lock graph, with its witness site.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub file: String,
+    pub line: u32,
+    /// `Some(callee)` for inter-procedural edges.
+    pub via: Option<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct Analysis {
+    pub findings: Vec<Finding>,
+    pub edges: Vec<LockEdge>,
+    pub files: usize,
+    pub functions: usize,
+    pub suppressed_panic: usize,
+    pub suppressed_relaxed: usize,
+}
+
+/// Run all four analyses over `(relative_path, source)` pairs.
+pub fn analyze(files: &[(String, String)]) -> Analysis {
+    // Pass 1: lex + extract with no helper knowledge, to learn which
+    // functions hand out guards (poison-recovery helpers).
+    let lexed: Vec<_> = files.iter().map(|(p, s)| (p.clone(), lex(s))).collect();
+    let mut first: Vec<FnFacts> = Vec::new();
+    for (p, lx) in &lexed {
+        first.extend(extract(p, lx, &HashMap::new()));
+    }
+    let mut helpers: HashMap<String, String> = HashMap::new();
+    let mut ambiguous: BTreeSet<String> = BTreeSet::new();
+    for f in &first {
+        if f.guard_helper {
+            if let Some(a) = f.acquires.first() {
+                match helpers.get(&f.name) {
+                    Some(c) if *c != a.class => {
+                        ambiguous.insert(f.name.clone());
+                    }
+                    _ => {
+                        helpers.insert(f.name.clone(), a.class.clone());
+                    }
+                }
+            }
+        }
+    }
+    for name in &ambiguous {
+        helpers.remove(name);
+    }
+
+    // Pass 2: the real extraction — helper calls now count as
+    // acquisitions at the call site.
+    let mut fns: Vec<FnFacts> = Vec::new();
+    for (p, lx) in &lexed {
+        fns.extend(extract(p, lx, &helpers));
+    }
+
+    let mut a = Analysis {
+        files: files.len(),
+        functions: fns.len(),
+        ..Analysis::default()
+    };
+    a.suppressed_panic = fns.iter().flat_map(|f| &f.panics).filter(|p| p.suppressed).count();
+    a.suppressed_relaxed = fns
+        .iter()
+        .flat_map(|f| &f.atomics)
+        .filter(|s| s.ordering == "Relaxed" && s.suppressed)
+        .count();
+
+    lock_order(&fns, &mut a);
+    atomic_ordering(&fns, &mut a);
+    panic_path(&fns, &mut a);
+    ledger_identity(&fns, &mut a);
+
+    a.findings.sort_by(|x, y| {
+        (x.rule, &x.file, x.line).cmp(&(y.rule, &y.file, y.line))
+    });
+    a
+}
+
+// ---------------------------------------------------------------- rule 1
+
+fn lock_order(fns: &[FnFacts], a: &mut Analysis) {
+    // Transitive lock sets per function, grown to a fixpoint through
+    // calls that resolve uniquely (by bare name, self excluded) to a
+    // lock-acquiring function.
+    let mut by_name: HashMap<&str, Vec<usize>> = HashMap::new();
+    for (i, f) in fns.iter().enumerate() {
+        by_name.entry(f.name.as_str()).or_default().push(i);
+    }
+    let mut trans: Vec<BTreeSet<String>> = fns
+        .iter()
+        .map(|f| f.acquires.iter().map(|q| q.class.clone()).collect())
+        .collect();
+    loop {
+        let mut changed = false;
+        for i in 0..fns.len() {
+            for (callee, _) in &fns[i].calls {
+                if let Some(j) = resolve(callee, i, &by_name, &trans) {
+                    let add: Vec<String> =
+                        trans[j].iter().filter(|c| !trans[i].contains(*c)).cloned().collect();
+                    if !add.is_empty() {
+                        trans[i].extend(add);
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Edges: intra-procedural nesting + held-across-call expansion.
+    let mut edges: BTreeSet<LockEdge> = BTreeSet::new();
+    for (i, f) in fns.iter().enumerate() {
+        for nst in &f.nested {
+            edges.insert(LockEdge {
+                from: nst.held.clone(),
+                to: nst.class.clone(),
+                file: f.file.clone(),
+                line: nst.line,
+                via: None,
+            });
+        }
+        for lc in &f.locked_calls {
+            if let Some(j) = resolve(&lc.callee, i, &by_name, &trans) {
+                for h in &lc.held {
+                    for c in &trans[j] {
+                        edges.insert(LockEdge {
+                            from: h.clone(),
+                            to: c.clone(),
+                            file: f.file.clone(),
+                            line: lc.line,
+                            via: Some(lc.callee.clone()),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    // A `from == to` edge only counts when it is a *direct* nested
+    // re-acquisition (via: None): call-resolution is name-based and
+    // over-approximate, so `x.push(…)` under a guard must not convict
+    // the guard of re-entering itself.
+    let edges: Vec<LockEdge> =
+        edges.into_iter().filter(|e| e.from != e.to || e.via.is_none()).collect();
+
+    // SCCs over the class graph; any SCC with a cycle is a finding.
+    let mut classes: Vec<&str> = Vec::new();
+    let mut class_ix: BTreeMap<&str, usize> = BTreeMap::new();
+    for e in &edges {
+        for c in [e.from.as_str(), e.to.as_str()] {
+            if !class_ix.contains_key(c) {
+                class_ix.insert(c, classes.len());
+                classes.push(c);
+            }
+        }
+    }
+    let mut adj = vec![Vec::new(); classes.len()];
+    for e in &edges {
+        adj[class_ix[e.from.as_str()]].push(class_ix[e.to.as_str()]);
+    }
+    for scc in sccs(&adj) {
+        let cyclic = scc.len() > 1
+            || adj[scc[0]].contains(&scc[0]);
+        if !cyclic {
+            continue;
+        }
+        let members: BTreeSet<&str> = scc.iter().map(|&i| classes[i]).collect();
+        let mut witness: Vec<String> = edges
+            .iter()
+            .filter(|e| members.contains(e.from.as_str()) && members.contains(e.to.as_str()))
+            .map(|e| {
+                let via =
+                    e.via.as_ref().map(|v| format!(" via {}()", v)).unwrap_or_default();
+                format!("`{}` -> `{}` at {}:{}{}", e.from, e.to, e.file, e.line, via)
+            })
+            .collect();
+        witness.dedup();
+        let (file, line) = edges
+            .iter()
+            .find(|e| members.contains(e.from.as_str()) && members.contains(e.to.as_str()))
+            .map(|e| (e.file.clone(), e.line))
+            .unwrap_or_default();
+        let names: Vec<String> = members.iter().map(|m| format!("`{}`", m)).collect();
+        a.findings.push(Finding {
+            rule: RULE_LOCK_ORDER,
+            file,
+            line,
+            message: format!(
+                "lock-order cycle among {{{}}} — potential deadlock; witness edges: {}",
+                names.join(", "),
+                witness.join("; ")
+            ),
+        });
+    }
+    a.edges = edges;
+}
+
+/// Resolve a bare callee name to the unique lock-acquiring function
+/// with that name (excluding `except`, normally the caller).
+fn resolve(
+    callee: &str,
+    except: usize,
+    by_name: &HashMap<&str, Vec<usize>>,
+    trans: &[BTreeSet<String>],
+) -> Option<usize> {
+    let cands: Vec<usize> = by_name
+        .get(callee)?
+        .iter()
+        .copied()
+        .filter(|&j| j != except && !trans[j].is_empty())
+        .collect();
+    if cands.len() == 1 {
+        Some(cands[0])
+    } else {
+        None
+    }
+}
+
+/// Tarjan's strongly-connected components (recursive; lock graphs are
+/// a handful of nodes).
+fn sccs(adj: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    struct St<'a> {
+        adj: &'a [Vec<usize>],
+        index: Vec<Option<u32>>,
+        low: Vec<u32>,
+        on: Vec<bool>,
+        stack: Vec<usize>,
+        next: u32,
+        out: Vec<Vec<usize>>,
+    }
+    fn dfs(st: &mut St, v: usize) {
+        st.index[v] = Some(st.next);
+        st.low[v] = st.next;
+        st.next += 1;
+        st.stack.push(v);
+        st.on[v] = true;
+        let ns = st.adj[v].clone();
+        for w in ns {
+            if st.index[w].is_none() {
+                dfs(st, w);
+                st.low[v] = st.low[v].min(st.low[w]);
+            } else if st.on[w] {
+                // panic-ok: index[w] was just checked Some
+                st.low[v] = st.low[v].min(st.index[w].unwrap());
+            }
+        }
+        // panic-ok: index[v] assigned at entry
+        if st.low[v] == st.index[v].unwrap() {
+            let mut comp = Vec::new();
+            loop {
+                // panic-ok: v is still on the stack by the SCC invariant
+                let w = st.stack.pop().unwrap();
+                st.on[w] = false;
+                comp.push(w);
+                if w == v {
+                    break;
+                }
+            }
+            st.out.push(comp);
+        }
+    }
+    let n = adj.len();
+    let mut st = St {
+        adj,
+        index: vec![None; n],
+        low: vec![0; n],
+        on: vec![false; n],
+        stack: Vec::new(),
+        next: 0,
+        out: Vec::new(),
+    };
+    for v in 0..n {
+        if st.index[v].is_none() {
+            dfs(&mut st, v);
+        }
+    }
+    st.out
+}
+
+// ---------------------------------------------------------------- rule 2
+
+fn atomic_ordering(fns: &[FnFacts], a: &mut Analysis) {
+    // field -> the set of orderings it is accessed with, anywhere
+    let mut orderings: HashMap<&str, BTreeSet<&str>> = HashMap::new();
+    // field -> (functions that Relaxed-store it, functions that Relaxed-load it)
+    let mut stores: HashMap<&str, BTreeSet<&str>> = HashMap::new();
+    let mut loads: HashMap<&str, BTreeSet<&str>> = HashMap::new();
+    for f in fns {
+        for s in &f.atomics {
+            orderings.entry(&s.field).or_default().insert(&s.ordering);
+            if s.ordering == "Relaxed" {
+                if s.is_store {
+                    stores.entry(&s.field).or_default().insert(&f.qual);
+                } else {
+                    loads.entry(&s.field).or_default().insert(&f.qual);
+                }
+            }
+        }
+    }
+    for f in fns {
+        for s in &f.atomics {
+            if s.ordering != "Relaxed" || s.suppressed {
+                continue;
+            }
+            let mut reasons: Vec<String> = Vec::new();
+            let ords = &orderings[s.field.as_str()];
+            if ords.len() > 1 {
+                let others: Vec<&str> =
+                    ords.iter().copied().filter(|o| *o != "Relaxed").collect();
+                reasons.push(format!(
+                    "field `{}` is also accessed with {}",
+                    s.field,
+                    others.join("/")
+                ));
+            }
+            if f.uses_condvar {
+                reasons.push(format!(
+                    "`{}` participates in a Condvar protocol",
+                    f.qual
+                ));
+            }
+            let st = stores.get(s.field.as_str());
+            let ld = loads.get(s.field.as_str());
+            if let (Some(st), Some(ld)) = (st, ld) {
+                let cross = st.union(ld).count() >= 2;
+                if cross {
+                    reasons.push(format!(
+                        "`{}` is Relaxed-published in {} and Relaxed-observed in {} — a cross-thread handshake",
+                        s.field,
+                        join_quoted(st),
+                        join_quoted(ld)
+                    ));
+                }
+            }
+            if !reasons.is_empty() {
+                a.findings.push(Finding {
+                    rule: RULE_ATOMIC,
+                    file: f.file.clone(),
+                    line: s.line,
+                    message: format!(
+                        "Ordering::Relaxed on `{}.{}()` needs `// relaxed-ok: <reason>` or a stronger ordering: {}",
+                        s.field,
+                        s.method,
+                        reasons.join("; ")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn join_quoted(s: &BTreeSet<&str>) -> String {
+    let v: Vec<String> = s.iter().map(|x| format!("`{}`", x)).collect();
+    v.join(", ")
+}
+
+// ---------------------------------------------------------------- rule 3
+
+fn serving_path(file: &str) -> bool {
+    file.starts_with("coordinator/") || file.starts_with("runtime/") || file.starts_with("exec/")
+}
+
+fn panic_path(fns: &[FnFacts], a: &mut Analysis) {
+    for f in fns {
+        if !serving_path(&f.file) {
+            continue;
+        }
+        for p in &f.panics {
+            if p.suppressed {
+                continue;
+            }
+            a.findings.push(Finding {
+                rule: RULE_PANIC,
+                file: f.file.clone(),
+                line: p.line,
+                message: format!(
+                    "{} in serving path (`{}`) — return an error, recover, or justify with `// panic-ok: <invariant>`",
+                    p.kind.label(),
+                    f.qual
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 4
+
+fn ledger_identity(fns: &[FnFacts], a: &mut Analysis) {
+    let recorder =
+        |f: &FnFacts| f.impl_type.as_deref() == Some("Recorder");
+    for counter in IDENTITY_RHS {
+        let owners: Vec<&FnFacts> = fns
+            .iter()
+            .filter(|f| recorder(f) && f.increments.iter().any(|(c, _)| c == counter))
+            .collect();
+        match owners.len() {
+            0 => {
+                a.findings.push(Finding {
+                    rule: RULE_LEDGER,
+                    file: String::new(),
+                    line: 0,
+                    message: format!(
+                        "identity counter `{}` has no Recorder increment site — the ledger cannot reconcile",
+                        counter
+                    ),
+                });
+                continue;
+            }
+            1 => {}
+            _ => {
+                let names: Vec<String> =
+                    owners.iter().map(|f| format!("`{}`", f.qual)).collect();
+                a.findings.push(Finding {
+                    rule: RULE_LEDGER,
+                    file: owners[1].file.clone(),
+                    line: owners[1].line,
+                    message: format!(
+                        "identity counter `{}` is incremented by multiple Recorder methods ({}) — single-owner discipline broken",
+                        counter,
+                        names.join(", ")
+                    ),
+                });
+            }
+        }
+        for owner in &owners {
+            if !owner.increments.iter().any(|(c, _)| c == "requests") {
+                a.findings.push(Finding {
+                    rule: RULE_LEDGER,
+                    file: owner.file.clone(),
+                    line: owner.line,
+                    message: format!(
+                        "`{}` increments `{}` without `requests` — breaks `requests == completed + errors + expired + failed`",
+                        owner.qual, counter
+                    ),
+                });
+            }
+            let callers: Vec<&FnFacts> = fns
+                .iter()
+                .filter(|f| !recorder(f) && f.calls.iter().any(|(c, _)| c == &owner.name))
+                .collect();
+            if callers.is_empty() {
+                a.findings.push(Finding {
+                    rule: RULE_LEDGER,
+                    file: owner.file.clone(),
+                    line: owner.line,
+                    message: format!(
+                        "`{}` (owner of `{}`) has no production call site — counter can never move",
+                        owner.qual, counter
+                    ),
+                });
+            }
+            for caller in callers {
+                if !caller.sends_reply {
+                    a.findings.push(Finding {
+                        rule: RULE_LEDGER,
+                        file: caller.file.clone(),
+                        line: caller.line,
+                        message: format!(
+                            "`{}` calls `{}` (counter `{}`) but is not a terminal-reply path — ledger increments must pair with exactly one reply",
+                            caller.qual, owner.name, counter
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(files: &[(&str, &str)]) -> Analysis {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+        analyze(&owned)
+    }
+
+    fn rules_of(a: &Analysis) -> Vec<&'static str> {
+        a.findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn lock_cycle_detected_intra_procedurally() {
+        let src = r#"
+impl P {
+    fn ab(&self) {
+        let a = self.a.lock().expect("lock A");
+        let b = self.b.lock().expect("lock B");
+    }
+    fn ba(&self) {
+        let b = self.b.lock().expect("lock B");
+        let a = self.a.lock().expect("lock A");
+    }
+}
+"#;
+        let a = run(&[("quant/demo.rs", src)]);
+        let cyc: Vec<&Finding> =
+            a.findings.iter().filter(|f| f.rule == RULE_LOCK_ORDER).collect();
+        assert_eq!(cyc.len(), 1, "exactly one cycle finding: {:?}", a.findings);
+        assert!(cyc[0].message.contains("lock A"));
+        assert!(cyc[0].message.contains("lock B"));
+    }
+
+    #[test]
+    fn lock_cycle_detected_through_calls() {
+        let src = r#"
+impl P {
+    fn take_b_locked(&self) {
+        let b = self.b.lock().expect("lock B");
+    }
+    fn take_a_locked(&self) {
+        let a = self.a.lock().expect("lock A");
+    }
+    fn ab(&self) {
+        let a = self.a.lock().expect("lock A");
+        self.take_b_locked();
+    }
+    fn ba(&self) {
+        let b = self.b.lock().expect("lock B");
+        self.take_a_locked();
+    }
+}
+"#;
+        let a = run(&[("quant/demo.rs", src)]);
+        assert!(
+            rules_of(&a).contains(&RULE_LOCK_ORDER),
+            "inter-procedural cycle must be found: {:?}",
+            a.findings
+        );
+    }
+
+    #[test]
+    fn consistent_order_is_clean() {
+        let src = r#"
+impl P {
+    fn one(&self) {
+        let a = self.a.lock().expect("lock A");
+        let b = self.b.lock().expect("lock B");
+    }
+    fn two(&self) {
+        let a = self.a.lock().expect("lock A");
+        let b = self.b.lock().expect("lock B");
+    }
+}
+"#;
+        let a = run(&[("quant/demo.rs", src)]);
+        assert!(!rules_of(&a).contains(&RULE_LOCK_ORDER), "{:?}", a.findings);
+        assert!(!a.edges.is_empty(), "the consistent edge must still be reported");
+    }
+
+    #[test]
+    fn relaxed_handshake_flagged_and_suppressible() {
+        let flagged = r#"
+impl G {
+    fn publish(&self) { self.level.store(1, Ordering::Relaxed); }
+    fn observe(&self) -> u16 { self.level.load(Ordering::Relaxed) }
+}
+"#;
+        let a = run(&[("quant/demo.rs", flagged)]);
+        assert_eq!(
+            rules_of(&a).iter().filter(|r| **r == RULE_ATOMIC).count(),
+            2,
+            "both ends of the handshake flag: {:?}",
+            a.findings
+        );
+
+        let suppressed = r#"
+impl G {
+    fn publish(&self) {
+        // relaxed-ok: single-cell value, no dependent data
+        self.level.store(1, Ordering::Relaxed);
+    }
+    fn observe(&self) -> u16 {
+        // relaxed-ok: single-cell value, no dependent data
+        self.level.load(Ordering::Relaxed)
+    }
+}
+"#;
+        let a = run(&[("quant/demo.rs", suppressed)]);
+        assert!(!rules_of(&a).contains(&RULE_ATOMIC), "{:?}", a.findings);
+        assert_eq!(a.suppressed_relaxed, 2);
+    }
+
+    #[test]
+    fn condvar_adjacent_relaxed_flagged_but_private_counter_clean() {
+        let src = r#"
+impl W {
+    fn pump(&self) {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        let g = self.cv.wait(self.m.lock().expect("pump lock")).unwrap();
+    }
+    fn alloc(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+}
+"#;
+        let a = run(&[("quant/demo.rs", src)]);
+        let atomic: Vec<&Finding> =
+            a.findings.iter().filter(|f| f.rule == RULE_ATOMIC).collect();
+        assert_eq!(atomic.len(), 1, "{:?}", a.findings);
+        assert!(atomic[0].message.contains("Condvar"));
+    }
+
+    #[test]
+    fn serving_path_panics_flagged_non_serving_clean() {
+        let src = r#"
+fn hot(&self) -> u32 {
+    let v = self.m.get(&k).unwrap();
+    self.tbl[i - 1]
+}
+"#;
+        let a = run(&[("coordinator/demo.rs", src)]);
+        assert_eq!(
+            rules_of(&a).iter().filter(|r| **r == RULE_PANIC).count(),
+            2,
+            "unwrap + arithmetic index: {:?}",
+            a.findings
+        );
+        let a = run(&[("quant/demo.rs", src)]);
+        assert!(!rules_of(&a).contains(&RULE_PANIC), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn panic_ok_annotation_suppresses() {
+        let src = "impl S {\n    fn hot(&self) {\n        // panic-ok: key inserted at construction\n        let v = self.m.get(&k).unwrap();\n    }\n}\n";
+        let a = run(&[("runtime/demo.rs", src)]);
+        assert!(!rules_of(&a).contains(&RULE_PANIC), "{:?}", a.findings);
+        assert_eq!(a.suppressed_panic, 1);
+    }
+
+    fn ledger_base(record_done: &str, caller: &str) -> Analysis {
+        let recorder = format!(
+            r#"
+impl Recorder {{
+    {}
+    fn record_errors(&self, s: &mut S) {{ s.requests += 1; s.errors += 1; }}
+    fn record_expired(&self, s: &mut S) {{ s.requests += 1; s.expired += 1; }}
+    fn record_failed(&self, s: &mut S) {{ s.requests += 1; s.failed += 1; }}
+}}
+"#,
+            record_done
+        );
+        let server = format!(
+            r#"
+impl Server {{
+    {}
+    fn send_error(&self, r: R) {{ self.rec.record_errors(s); r.reply.send(e); }}
+    fn send_expired(&self, r: R) {{ self.rec.record_expired(s); r.reply.send(e); }}
+    fn send_failed(&self, r: R) {{ self.rec.record_failed(s); r.reply.send(e); }}
+}}
+"#,
+            caller
+        );
+        run(&[
+            ("coordinator/stats.rs", recorder.as_str()),
+            ("coordinator/server.rs", server.as_str()),
+        ])
+    }
+
+    #[test]
+    fn healthy_ledger_is_clean() {
+        let a = ledger_base(
+            "fn record_done(&self, s: &mut S) { s.requests += 1; s.completed += 1; }",
+            "fn dispatch(&self, r: R) { self.rec.record_done(s); r.reply.send(m); }",
+        );
+        assert!(!rules_of(&a).contains(&RULE_LEDGER), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn identity_breaking_increment_flagged() {
+        let a = ledger_base(
+            "fn record_done(&self, s: &mut S) { s.completed += 1; }",
+            "fn dispatch(&self, r: R) { self.rec.record_done(s); r.reply.send(m); }",
+        );
+        let msgs: Vec<&str> = a
+            .findings
+            .iter()
+            .filter(|f| f.rule == RULE_LEDGER)
+            .map(|f| f.message.as_str())
+            .collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("without `requests`")),
+            "{:?}",
+            a.findings
+        );
+    }
+
+    #[test]
+    fn orphan_and_non_reply_ledger_callers_flagged() {
+        let orphan = ledger_base(
+            "fn record_done(&self, s: &mut S) { s.requests += 1; s.completed += 1; }",
+            "fn dispatch(&self, r: R) { r.reply.send(m); }",
+        );
+        assert!(
+            orphan
+                .findings
+                .iter()
+                .any(|f| f.rule == RULE_LEDGER && f.message.contains("no production call site")),
+            "{:?}",
+            orphan.findings
+        );
+
+        let silent = ledger_base(
+            "fn record_done(&self, s: &mut S) { s.requests += 1; s.completed += 1; }",
+            "fn dispatch(&self, r: R) { self.rec.record_done(s); }",
+        );
+        assert!(
+            silent
+                .findings
+                .iter()
+                .any(|f| f.rule == RULE_LEDGER && f.message.contains("not a terminal-reply path")),
+            "{:?}",
+            silent.findings
+        );
+    }
+
+    #[test]
+    fn guard_helper_acquisitions_feed_the_lock_graph() {
+        let src = r#"
+impl R {
+    fn slots(&self) -> MutexGuard<'_, Slots> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+    fn ab(&self) {
+        let g = self.slots();
+        let b = self.b.lock().expect("lock B");
+    }
+    fn ba(&self) {
+        let b = self.b.lock().expect("lock B");
+        let g = self.slots();
+    }
+}
+"#;
+        let a = run(&[("quant/demo.rs", src)]);
+        assert!(
+            rules_of(&a).contains(&RULE_LOCK_ORDER),
+            "helper-mediated cycle must be found: {:?}",
+            a.findings
+        );
+    }
+}

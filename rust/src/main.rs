@@ -126,6 +126,14 @@ fn cli() -> Cli {
                     OptSpec { name: "chaos", takes_value: false, default: None, help: "supervision smoke: kill one replica mid-run, assert goodput recovers, write BENCH_chaos_smoke.json" },
                 ],
             },
+            SubSpec {
+                name: "lint",
+                help: "herolint: lock-order / atomic-ordering / panic-path / ledger static analyses over the source tree (DESIGN.md 5.11)",
+                opts: vec![
+                    OptSpec { name: "src", takes_value: true, default: Some("src"), help: "source root to lint (relative to the cargo workspace)" },
+                    OptSpec { name: "json", takes_value: false, default: None, help: "machine-readable report on stdout" },
+                ],
+            },
         ],
     }
 }
@@ -148,6 +156,7 @@ fn main() {
         "perfmodel" => cmd_perfmodel(&args),
         "serve" => cmd_serve(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "lint" => cmd_lint(&args),
         _ => unreachable!(),
     };
     if let Err(e) = r {
@@ -1089,3 +1098,32 @@ fn chaos_loop(
     Ok((completed, failed, t0.elapsed().as_secs_f64()))
 }
 
+
+/// `repro lint` — run the herolint static analyses (DESIGN.md §5.11)
+/// over the source tree and fail on any unsuppressed finding.  The CI
+/// gate (`scripts/ci.sh`) runs this on every checkout; `--json` feeds
+/// trend tooling through the in-repo json module.
+fn cmd_lint(args: &zqhero::cli::Args) -> Result<()> {
+    let flag = args.get_or("src", "src");
+    let mut root = PathBuf::from(flag);
+    if !root.exists() {
+        // `cargo run` may execute from the workspace root rather than
+        // the crate dir; fall back to the crate's own tree
+        let fallback = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(flag);
+        if fallback.exists() {
+            root = fallback;
+        }
+    }
+    let report = zqhero::lint::lint_tree(&root)?;
+    if args.get_bool("json") {
+        println!("{}", zqhero::json::to_string_pretty(&report.to_json()));
+    } else {
+        print!("{}", report.render());
+    }
+    anyhow::ensure!(
+        report.clean(),
+        "{} unsuppressed lint finding(s)",
+        report.analysis.findings.len()
+    );
+    Ok(())
+}

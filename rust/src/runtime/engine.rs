@@ -403,6 +403,8 @@ impl JobQueue {
 
     /// Enqueue; `Err` hands the message back when the queue is closed.
     fn push(&self, msg: Msg) -> std::result::Result<(), Msg> {
+        // panic-ok: queue critical sections are push/pop/flag flips that
+        // cannot panic while holding the lock
         let mut inner = self.inner.lock().expect("job queue");
         if inner.closed {
             return Err(msg);
@@ -415,6 +417,7 @@ impl JobQueue {
     /// Blocking de-queue; `None` once the queue is closed *and* empty
     /// (graceful close drains queued work first).
     fn pop(&self) -> Option<Msg> {
+        // panic-ok: queue critical sections are panic-free (see push)
         let mut inner = self.inner.lock().expect("job queue");
         loop {
             if let Some(m) = inner.q.pop_front() {
@@ -423,12 +426,14 @@ impl JobQueue {
             if inner.closed {
                 return None;
             }
+            // panic-ok: wait() re-acquires the same panic-free lock
             inner = self.cv.wait(inner).expect("job queue");
         }
     }
 
     /// Non-blocking de-queue (the overlap loop's try-recv analogue).
     fn try_pop(&self) -> TryPop {
+        // panic-ok: queue critical sections are panic-free (see push)
         let mut inner = self.inner.lock().expect("job queue");
         match inner.q.pop_front() {
             Some(m) => TryPop::Msg(m),
@@ -439,6 +444,7 @@ impl JobQueue {
 
     /// Graceful close: new pushes fail, queued work still drains.
     fn close(&self) {
+        // panic-ok: queue critical sections are panic-free (see push)
         self.inner.lock().expect("job queue").closed = true;
         self.cv.notify_all();
     }
@@ -447,6 +453,7 @@ impl JobQueue {
     /// the queue so a hung-but-alive incarnation abandons work on wake.
     fn close_and_drain(&self) -> Vec<Msg> {
         self.poisoned.store(true, Ordering::SeqCst);
+        // panic-ok: queue critical sections are panic-free (see push)
         let mut inner = self.inner.lock().expect("job queue");
         inner.closed = true;
         let drained = inner.q.drain(..).collect();
@@ -477,6 +484,8 @@ struct SweepInner {
 
 impl SweepTable {
     fn register(&self, done: Completion) -> u64 {
+        // panic-ok: sweep-table critical sections are map ops that cannot
+        // panic while holding the lock
         let mut inner = self.inner.lock().expect("sweep table");
         let id = inner.next;
         inner.next += 1;
@@ -485,10 +494,12 @@ impl SweepTable {
     }
 
     fn take(&self, id: u64) -> Option<Completion> {
+        // panic-ok: sweep-table critical sections are panic-free (see register)
         self.inner.lock().expect("sweep table").slots.remove(&id)
     }
 
     fn sweep(&self) -> Vec<Completion> {
+        // panic-ok: sweep-table critical sections are panic-free (see register)
         let mut inner = self.inner.lock().expect("sweep table");
         inner.slots.drain().map(|(_, c)| c).collect()
     }
@@ -893,6 +904,8 @@ impl DispatchState {
 
     /// Groups currently pinned to a replica (tests / introspection).
     pub fn pinned_groups(&self) -> usize {
+        // panic-ok: pins critical sections are map/counter ops that cannot
+        // panic while holding the lock
         self.pins.lock().expect("dispatch pins").len()
     }
 
@@ -904,6 +917,7 @@ impl DispatchState {
     /// Returns the replica and its generation at assignment time; the
     /// completion must echo both to `complete`.
     pub fn assign(&self, key: (TaskId, PolicyId)) -> (usize, u64) {
+        // panic-ok: pins critical sections are panic-free (see pinned_groups)
         let mut pins = self.pins.lock().expect("dispatch pins");
         let replica = match pins.get_mut(&key) {
             Some((replica, n)) => {
@@ -917,6 +931,7 @@ impl DispatchState {
                     .unwrap_or_else(|| {
                         (0..self.inflight.len())
                             .min_by_key(|r| self.inflight[*r].load(Ordering::SeqCst))
+                            // panic-ok: pool construction rejects zero replicas
                             .expect("at least one replica")
                     });
                 pins.insert(key, (replica, 1));
@@ -939,6 +954,7 @@ impl DispatchState {
         if self.generation[replica].load(Ordering::SeqCst) != generation {
             return;
         }
+        // panic-ok: pins critical sections are panic-free (see pinned_groups)
         let mut pins = self.pins.lock().expect("dispatch pins");
         match pins.get_mut(&key) {
             Some((r, n)) if *r == replica => {
@@ -961,6 +977,7 @@ impl DispatchState {
     pub fn mark_dead(&self, replica: usize) {
         self.dead[replica].store(true, Ordering::SeqCst);
         self.generation[replica].fetch_add(1, Ordering::SeqCst);
+        // panic-ok: pins critical sections are panic-free (see pinned_groups)
         let mut pins = self.pins.lock().expect("dispatch pins");
         pins.retain(|_, (r, _)| *r != replica);
         // outstanding completions are now stale no-ops, so zero the
@@ -1091,6 +1108,8 @@ struct PoolShared {
 
 impl PoolShared {
     fn emit(&self, ev: PoolEvent) {
+        // panic-ok: hook panics run outside the read guard (worker pool
+        // isolation); writers only swap the Option
         if let Some(h) = self.hook.read().expect("pool event hook").as_ref() {
             h(ev);
         }
@@ -1126,6 +1145,9 @@ impl PoolShared {
                 }),
             };
             let push = {
+                // panic-ok: slot critical sections only match on state and
+                // move messages; replica death is handled by the
+                // supervisor, not by lock poisoning
                 let slot = self.slots[replica].inner.lock().expect("replica slot");
                 match &slot.state {
                     SlotState::Live(l) => l.queue.push(Msg::Infer(Box::new(wrapped))),
@@ -1235,6 +1257,8 @@ impl EnginePool {
         let shared = Arc::new(PoolShared {
             state: DispatchState::new(n),
             slots,
+            // panic-ok: the spawn loop above ran at least once (n is
+            // clamped to >= 1 at entry) and filled `tables`
             tables: tables.expect("at least one replica"),
             spawner,
             hook: RwLock::new(None),
@@ -1260,6 +1284,7 @@ impl EnginePool {
         self.shared
             .slots
             .iter()
+            // panic-ok: slot critical sections are panic-free (see submit_inner)
             .filter(|s| matches!(s.inner.lock().expect("replica slot").state, SlotState::Live(_)))
             .count()
     }
@@ -1267,6 +1292,7 @@ impl EnginePool {
     /// Whether the circuit breaker has permanently excluded `replica`.
     pub fn replica_excluded(&self, replica: usize) -> bool {
         matches!(
+            // panic-ok: slot critical sections are panic-free (see submit_inner)
             self.shared.slots[replica].inner.lock().expect("replica slot").state,
             SlotState::Excluded
         )
@@ -1274,6 +1300,7 @@ impl EnginePool {
 
     /// Successful supervised restarts of `replica`.
     pub fn replica_restarts(&self, replica: usize) -> u64 {
+        // panic-ok: slot critical sections are panic-free (see submit_inner)
         self.shared.slots[replica].inner.lock().expect("replica slot").restarts
     }
 
@@ -1287,6 +1314,7 @@ impl EnginePool {
     /// previous hook.  Called from the supervisor thread — keep it quick
     /// and never call back into the pool.
     pub fn set_event_hook(&self, hook: PoolEventHook) {
+        // panic-ok: the write guard only swaps the Option (see emit)
         *self.shared.hook.write().expect("pool event hook") = Some(hook);
     }
 
@@ -1335,6 +1363,7 @@ impl Drop for EnginePool {
         // here — they exit on their own when they observe poisoning.
         let mut joins = Vec::new();
         for slot in &self.shared.slots {
+            // panic-ok: slot critical sections are panic-free (see submit_inner)
             let mut inner = slot.inner.lock().expect("replica slot");
             match std::mem::replace(&mut inner.state, SlotState::Excluded) {
                 SlotState::Live(l) => {
@@ -1386,6 +1415,7 @@ fn poll_replica(shared: &Arc<PoolShared>, r: usize, last: &mut (u64, Instant)) {
     let mut events: Vec<PoolEvent> = Vec::new();
     let mut orphans: Vec<Box<InferJob>> = Vec::new();
     {
+        // panic-ok: slot critical sections are panic-free (see submit_inner)
         let mut inner = shared.slots[r].inner.lock().expect("replica slot");
         let state = std::mem::replace(&mut inner.state, SlotState::Excluded);
         inner.state = match state {

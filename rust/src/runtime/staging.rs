@@ -12,7 +12,7 @@
 //! cannot pin unbounded memory: overflow buffers are simply dropped and
 //! the shelf refills on demand.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::data::PAD;
 
@@ -139,11 +139,23 @@ impl StagingPool {
         Some(si * self.buckets.len() + bi)
     }
 
+    /// Lock one shelf, recovering from poisoning: a shelf is a plain
+    /// free list, and the worst a panicking holder can leave behind is
+    /// a buffer checked out or dropped — never torn state — so the pool
+    /// keeps recycling instead of cascading the panic into the batcher
+    /// and engine threads.
+    fn shelf(&self, i: usize) -> MutexGuard<'_, Vec<StagingBuf>> {
+        match self.shelves[i].lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     /// Check out a cleared buffer for the (seq, bucket) cell, reusing
     /// capacity when a recycled one is on the shelf.
     pub fn take(&self, seq: usize, bucket: usize) -> StagingBuf {
         if let Some(i) = self.shelf_index(seq, bucket) {
-            if let Some(mut buf) = self.shelves[i].lock().expect("staging shelf").pop() {
+            if let Some(mut buf) = self.shelf(i).pop() {
                 buf.reset(bucket, seq);
                 return buf;
             }
@@ -155,7 +167,7 @@ impl StagingPool {
     /// full or the cell is foreign (blocking-path buffers).
     pub fn put(&self, buf: StagingBuf) {
         if let Some(i) = self.shelf_index(buf.seq, buf.bucket) {
-            let mut shelf = self.shelves[i].lock().expect("staging shelf");
+            let mut shelf = self.shelf(i);
             if shelf.len() < self.per_cell_cap {
                 shelf.push(buf);
             }
@@ -164,7 +176,7 @@ impl StagingPool {
 
     /// Buffers currently resting on shelves (tests / introspection).
     pub fn pooled(&self) -> usize {
-        self.shelves.iter().map(|s| s.lock().expect("staging shelf").len()).sum()
+        (0..self.shelves.len()).map(|i| self.shelf(i).len()).sum()
     }
 }
 

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI gate for the rust L3 stack: build, tests, lints, formatting.
 #
-# Usage: scripts/ci.sh [--skip-clippy] [--skip-fmt]
+# Usage: scripts/ci.sh [--skip-clippy] [--skip-fmt] [--skip-lint]
 #
 # Integration tests and benches that need real artifacts self-skip when
 # `make artifacts` has not been run, so this script is safe on a bare
@@ -20,10 +20,12 @@ cd "$(dirname "$0")/.."
 
 SKIP_CLIPPY=0
 SKIP_FMT=0
+SKIP_LINT=0
 for arg in "$@"; do
     case "$arg" in
         --skip-clippy) SKIP_CLIPPY=1 ;;
         --skip-fmt) SKIP_FMT=1 ;;
+        --skip-lint) SKIP_LINT=1 ;;
         *) echo "unknown flag: $arg" >&2; exit 2 ;;
     esac
 done
@@ -45,6 +47,17 @@ cargo test -q
 # checkout, not just artifact-bearing ones.
 echo "==> chaos suite (fake engine)"
 cargo test -q --test chaos_integration
+
+# herolint (DESIGN.md §5.11): the repo-native static analyses —
+# lock-order cycles, under-ordered atomics in cross-thread handshakes,
+# panic paths in serving modules, and the Recorder ledger identity —
+# gate every checkout (no artifacts needed).  Zero unsuppressed
+# findings required; suppressions live in-tree as `// panic-ok:` /
+# `// relaxed-ok:` annotations with mandatory reasons.
+if [ "$SKIP_LINT" -eq 0 ]; then
+    echo "==> cargo run --release -- lint"
+    cargo run --release -- lint
+fi
 
 # Artifact-gated serving smoke: the integration suites already ran
 # un-skipped inside `cargo test -q` when artifacts exist; what they do
