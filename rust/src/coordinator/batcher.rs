@@ -194,7 +194,7 @@ mod tests {
     use super::*;
     use crate::model::manifest::{PolicyId, TaskId};
     use crate::prop::{forall, Rng};
-    use std::sync::mpsc::channel;
+    use crate::sync::mpsc::channel;
 
     /// The test grid's seq buckets (mirrors a manifest's seq_buckets).
     const SEQ_BUCKETS: [usize; 3] = [16, 64, 128];

@@ -14,8 +14,9 @@
 //! effective routes through the lock-free `GovernorShared` table that
 //! `Coordinator::submit` reads at admission.
 
-use std::sync::atomic::{AtomicU16, Ordering};
 use std::time::Duration;
+
+use crate::sync::atomic::{AtomicU16, Ordering};
 
 use crate::model::manifest::PolicyId;
 

@@ -7,10 +7,10 @@
 //! every hot-path type here is `String`-free so the steady-state path
 //! never touches the allocator for routing.
 
-use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
 use crate::model::manifest::{PolicyDraft, PolicyId, TaskId};
+use crate::sync::mpsc::Sender;
 
 /// How a request names its precision policy before interning.
 #[derive(Debug, Clone, PartialEq, Eq)]

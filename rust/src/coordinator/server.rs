@@ -20,10 +20,11 @@
 //! starts — and an optional `PrecisionGovernor` walks each policy's
 //! degradation chain toward cheaper modes under sustained queue pressure.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::mpsc::{channel, Receiver, SyncSender, TrySendError};
+use crate::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -191,7 +192,7 @@ impl std::error::Error for SubmitError {
 
 pub struct Coordinator {
     tx: Option<SyncSender<Request>>,
-    batcher_join: Option<std::thread::JoinHandle<()>>,
+    batcher_join: Option<crate::sync::thread::JoinHandle<()>>,
     // Drop order matters (declaration order): the engine pool must shut
     // down (each replica draining its queue into completion jobs, joined
     // in replica order) before the worker pool joins, so every admitted
@@ -350,14 +351,14 @@ impl Coordinator {
             None => (None, None),
         };
 
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(config.queue_cap);
+        let (tx, rx) = crate::sync::mpsc::sync_channel::<Request>(config.queue_cap);
         let batcher_cfg = config.clone();
         let b_recorder = Arc::clone(&recorder);
         let b_engine = Arc::clone(&engine);
         let b_man = Arc::clone(&man);
         let b_depth = Arc::clone(&depth);
         let b_shared = shared.clone();
-        let batcher_join = std::thread::Builder::new()
+        let batcher_join = crate::sync::thread::Builder::new()
             .name("zqh-batcher".into())
             .spawn(move || {
                 batcher_main(
@@ -641,8 +642,8 @@ fn batcher_main(
                 let out = batcher.push(req, Instant::now());
                 finish(out, &mut batch_seq, &mut last_queue_us);
             }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            Err(crate::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(crate::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 let out = batcher.drain_all(Instant::now());
                 finish(out, &mut batch_seq, &mut last_queue_us);
                 break;

@@ -6,8 +6,9 @@
 //! slots, so v1 (string-mode) traffic keeps its mode-name keys.
 
 use std::collections::BTreeMap;
-use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
+
+use crate::sync::{Mutex, MutexGuard};
 
 use crate::model::manifest::PolicyId;
 use crate::runtime::engine::PoolEvent;

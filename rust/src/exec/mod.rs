@@ -10,9 +10,9 @@
 //! panic payload back to the caller instead of silently dropping the
 //! reply channel.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use crate::sync::mpsc::{channel, Receiver, Sender};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -61,7 +61,7 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
+                crate::sync::thread::Builder::new()
                     .name(format!("{name}-{i}"))
                     .spawn(move || worker_main(rx, shared))
                     // panic-ok: spawn fails only on OS thread exhaustion at
@@ -148,6 +148,10 @@ fn worker_main(rx: Arc<Mutex<Receiver<Msg>>>, shared: Arc<Shared>) {
             // panic-ok: the receiver lock only guards recv(), which does
             // not panic; a poisoned queue means memory corruption
             let guard = rx.lock().expect("queue poisoned");
+            // block-ok: the receiver mutex IS the work handoff — exactly
+            // one idle worker holds it while parked in recv(), and peers
+            // queue on the lock until a job is taken; nothing else is
+            // ever guarded by it
             guard.recv()
         };
         match msg {

@@ -21,8 +21,10 @@
 //!   hardware claims;
 //! * [`traceflow`] — Figures 1/2 as checkable precision-flow traces;
 //! * substrates built from scratch for the offline environment:
-//!   [`json`], [`cli`], [`exec`], [`prop`], [`bench`], and [`lint`] —
-//!   the repo-native static analyses gating the concurrency discipline.
+//!   [`json`], [`cli`], [`exec`], [`prop`], [`bench`], [`lint`] — the
+//!   repo-native static analyses gating the concurrency discipline —
+//!   and [`mck`], the schedule-exploring model checker behind the
+//!   [`sync`] primitive facade.
 
 pub mod bench;
 pub mod calib;
@@ -33,10 +35,12 @@ pub mod evalharness;
 pub mod exec;
 pub mod json;
 pub mod lint;
+pub mod mck;
 pub mod metrics;
 pub mod model;
 pub mod perfmodel;
 pub mod prop;
 pub mod quant;
 pub mod runtime;
+pub mod sync;
 pub mod traceflow;

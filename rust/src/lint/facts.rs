@@ -5,8 +5,10 @@
 //! each one, tracked through `let`-bound vs temporary guard scopes),
 //! calls made while holding locks (for the inter-procedural lock
 //! graph), atomic accesses with their `Ordering`, panic sites
-//! (`unwrap`/`expect`/arithmetic slice index), counter increments,
-//! Condvar usage, and whether the function sends a wire reply.
+//! (`unwrap`/`expect`/arithmetic slice index), blocking calls made
+//! while a guard is live (`send`/`recv`/`join`/`sleep`/IO), counter
+//! increments, Condvar usage, and whether the function sends a wire
+//! reply.
 //!
 //! The walk is deliberately syntactic: no types, no name resolution.
 //! Where that loses precision the rules compensate (unique-name call
@@ -28,6 +30,23 @@ const ATOMIC_METHODS: [&str; 13] = [
 
 const CONDVAR_METHODS: [&str; 6] =
     ["wait", "wait_timeout", "wait_while", "wait_timeout_while", "notify_one", "notify_all"];
+
+/// Is this call a potential parking point for the `hold-across-blocking`
+/// rule, given its argument shape and the number of guards held?
+///
+/// A condvar `wait` *releases* the guard it is passed, so it only counts
+/// when a *second* guard is held across the park.  `.join()` is only a
+/// thread join when it takes no arguments (`slice::join(sep)` takes the
+/// separator).
+fn blocking_call(m: &str, no_args: bool, guards: usize) -> bool {
+    match m {
+        "recv" | "recv_timeout" | "send" | "sleep" | "write_all" | "flush" | "read_exact"
+        | "read_to_end" | "read_to_string" | "read_line" | "accept" | "connect" => guards >= 1,
+        "join" => no_args && guards >= 1,
+        "wait" | "wait_timeout" | "wait_while" | "wait_timeout_while" => guards >= 2,
+        _ => false,
+    }
+}
 
 /// One direct lock acquisition.
 #[derive(Debug, Clone)]
@@ -87,6 +106,16 @@ pub struct PanicSite {
     pub suppressed: bool,
 }
 
+/// A call that can park the thread while at least one lock guard is
+/// live (`hold-across-blocking`).
+#[derive(Debug, Clone)]
+pub struct BlockingSite {
+    pub callee: String,
+    pub held: Vec<String>,
+    pub line: u32,
+    pub suppressed: bool,
+}
+
 /// Everything the rules need to know about one function.
 #[derive(Debug, Clone, Default)]
 pub struct FnFacts {
@@ -105,6 +134,7 @@ pub struct FnFacts {
     pub calls: Vec<(String, u32)>,
     pub atomics: Vec<AtomicSite>,
     pub panics: Vec<PanicSite>,
+    pub blocking: Vec<BlockingSite>,
     /// `field += …` sites.
     pub increments: Vec<(String, u32)>,
     pub uses_condvar: bool,
@@ -442,6 +472,15 @@ pub fn extract(file: &str, lexed: &Lexed, helpers: &HashMap<String, String>) -> 
                 };
                 let line = toks[i + 1].line;
                 if let Some(fr) = frames.last_mut() {
+                    let no_args = toks.get(i + 3).map(|t| t.is_punct(')')).unwrap_or(false);
+                    if blocking_call(&m, no_args, fr.guards.len()) {
+                        fr.facts.blocking.push(BlockingSite {
+                            callee: m.clone(),
+                            held: fr.guards.iter().map(|g| g.class.clone()).collect(),
+                            line,
+                            suppressed: lexed.suppressed(AnnKind::BlockOk, line),
+                        });
+                    }
                     // Method names the extractor already special-cases
                     // are std-library calls (`.expect(…)`, `.load(…)`)
                     // — recording them as resolvable calls would let a
@@ -461,7 +500,6 @@ pub fn extract(file: &str, lexed: &Lexed, helpers: &HashMap<String, String>) -> 
                             });
                         }
                     }
-                    let no_args = toks.get(i + 3).map(|t| t.is_punct(')')).unwrap_or(false);
                     if LOCK_METHODS.contains(&m.as_str()) && no_args {
                         // class: chained `.expect("label")` names it,
                         // else fall back to `stem::field`
@@ -541,6 +579,18 @@ pub fn extract(file: &str, lexed: &Lexed, helpers: &HashMap<String, String>) -> 
                                 callee: id.clone(),
                                 held: fr.guards.iter().map(|g| g.class.clone()).collect(),
                                 line: t.line,
+                            });
+                        }
+                        // free-call form of the parking points
+                        // (`thread::sleep(…)` and friends)
+                        let no_args =
+                            toks.get(i + 2).map(|t| t.is_punct(')')).unwrap_or(false);
+                        if blocking_call(id, no_args, fr.guards.len()) {
+                            fr.facts.blocking.push(BlockingSite {
+                                callee: id.clone(),
+                                held: fr.guards.iter().map(|g| g.class.clone()).collect(),
+                                line: t.line,
+                                suppressed: lexed.suppressed(AnnKind::BlockOk, t.line),
                             });
                         }
                         if let Some(class) = helpers.get(id) {
@@ -723,6 +773,25 @@ impl R {
         assert_eq!(fs[0].nested.len(), 1);
         assert_eq!(fs[0].nested[0].held, "demo::inner");
         assert_eq!(fs[0].nested[0].class, "other lock");
+    }
+
+    #[test]
+    fn blocking_sites_capture_held_guards_and_annotations() {
+        let src = r#"
+fn pump(&self) {
+    let q = self.q.lock().expect("job queue");
+    let msg = self.rx.recv();
+    // block-ok: device latency is the product here
+    sleep(Duration::from_millis(2));
+}
+"#;
+        let f = &facts_of(src)[0];
+        assert_eq!(f.blocking.len(), 2, "{:?}", f.blocking);
+        assert_eq!(f.blocking[0].callee, "recv");
+        assert_eq!(f.blocking[0].held, vec!["job queue".to_string()]);
+        assert!(!f.blocking[0].suppressed);
+        assert_eq!(f.blocking[1].callee, "sleep");
+        assert!(f.blocking[1].suppressed);
     }
 
     #[test]

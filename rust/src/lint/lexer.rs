@@ -15,6 +15,7 @@
 //! ```text
 //! // panic-ok: <invariant that makes the panic unreachable>
 //! // relaxed-ok: <why no cross-thread ordering is needed>
+//! // block-ok: <why blocking under this guard cannot stall peers>
 //! ```
 //!
 //! An annotation suppresses findings of its kind on its own line and on
@@ -65,6 +66,7 @@ impl Token {
 pub enum AnnKind {
     PanicOk,
     RelaxedOk,
+    BlockOk,
 }
 
 #[derive(Debug, Clone)]
@@ -103,7 +105,11 @@ fn ident_cont(c: char) -> bool {
 /// Parse a `//` comment body into an annotation, if it is one.
 fn annotation_of(body: &str) -> Option<AnnKind> {
     let t = body.trim_start_matches(['/', '!']).trim();
-    for (prefix, kind) in [("panic-ok:", AnnKind::PanicOk), ("relaxed-ok:", AnnKind::RelaxedOk)] {
+    for (prefix, kind) in [
+        ("panic-ok:", AnnKind::PanicOk),
+        ("relaxed-ok:", AnnKind::RelaxedOk),
+        ("block-ok:", AnnKind::BlockOk),
+    ] {
         if let Some(reason) = t.strip_prefix(prefix) {
             if !reason.trim().is_empty() {
                 return Some(kind);

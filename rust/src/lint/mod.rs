@@ -5,10 +5,13 @@
 //! the same spirit as `prop::forall` — the race/deadlock/panic
 //! discipline the concurrent modules rely on is checked by this
 //! dependency-free pass instead: a lightweight lexer ([`lexer`]), a
-//! per-function fact extractor ([`facts`]), and four rules tuned to
+//! per-function fact extractor ([`facts`]), and five rules tuned to
 //! this codebase ([`rules`]): lock-order cycles, under-ordered atomics
-//! in cross-thread handshakes, panic paths in serving modules, and the
-//! Recorder ledger identity.
+//! in cross-thread handshakes, panic paths in serving modules, the
+//! Recorder ledger identity, and lock guards held across blocking
+//! calls.  The dynamic complement — heromck ([`crate::mck`]) — explores
+//! real schedules over the same spine and cross-checks its runtime
+//! lock-order witness against the static `lock_edges` reported here.
 //!
 //! Entry points: [`lint_sources`] for in-memory `(path, source)` pairs
 //! (fixtures, tests) and [`lint_tree`] for a source directory; the
@@ -39,6 +42,19 @@ impl Report {
         self.analysis.findings.is_empty()
     }
 
+    /// The CLI exit-status gate, shared by the `--json` and human output
+    /// paths of `repro lint`: `Err` on any unsuppressed finding, so both
+    /// modes exit nonzero identically (CI keys off the status, not the
+    /// format).
+    pub fn gate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.clean(),
+            "{} unsuppressed lint finding(s)",
+            self.analysis.findings.len()
+        );
+        Ok(())
+    }
+
     /// Human-readable report: findings grouped by rule, then the
     /// observed lock order (the cross-referenced edge list that
     /// documents the discipline the checker enforces).
@@ -46,19 +62,21 @@ impl Report {
         let a = &self.analysis;
         let mut out = String::new();
         out.push_str(&format!(
-            "herolint: {} files, {} functions — {} finding(s), {} suppressed (panic-ok {}, relaxed-ok {})\n",
+            "herolint: {} files, {} functions — {} finding(s), {} suppressed (panic-ok {}, relaxed-ok {}, block-ok {})\n",
             a.files,
             a.functions,
             a.findings.len(),
-            a.suppressed_panic + a.suppressed_relaxed,
+            a.suppressed_panic + a.suppressed_relaxed + a.suppressed_block,
             a.suppressed_panic,
             a.suppressed_relaxed,
+            a.suppressed_block,
         ));
         for rule in [
             rules::RULE_LOCK_ORDER,
             rules::RULE_ATOMIC,
             rules::RULE_PANIC,
             rules::RULE_LEDGER,
+            rules::RULE_HOLD_BLOCKING,
         ] {
             let of_rule: Vec<&Finding> =
                 a.findings.iter().filter(|f| f.rule == rule).collect();
@@ -127,6 +145,7 @@ impl Report {
                 json::obj(vec![
                     ("panic_ok", json::num(a.suppressed_panic as f64)),
                     ("relaxed_ok", json::num(a.suppressed_relaxed as f64)),
+                    ("block_ok", json::num(a.suppressed_block as f64)),
                 ]),
             ),
             ("findings", Value::Array(findings)),
@@ -203,6 +222,25 @@ mod tests {
         let text = json::to_string_pretty(&v);
         let back = json::parse(&text).unwrap();
         assert_eq!(back.get("files").and_then(|f| f.as_usize()), Some(1));
+    }
+
+    #[test]
+    fn gate_fails_on_findings_and_passes_clean() {
+        // the same gate backs `repro lint` and `repro lint --json`: a
+        // finding-bearing report must be an Err (nonzero exit) in both
+        let dirty = lint_sources(&[(
+            "coordinator/demo.rs".to_string(),
+            "fn hot(&self) { self.m.get(&k).unwrap(); }\n".to_string(),
+        )]);
+        let err = dirty.gate().expect_err("findings must gate the exit status");
+        assert!(err.to_string().contains("1 unsuppressed lint finding"));
+
+        let clean = lint_sources(&[(
+            "coordinator/demo.rs".to_string(),
+            "fn cold(&self) -> usize { 1 }\n".to_string(),
+        )]);
+        assert!(clean.clean());
+        clean.gate().expect("clean tree must gate Ok");
     }
 
     #[test]

@@ -19,6 +19,12 @@
 //!    must have exactly one owning `Recorder` method, that method must
 //!    also bump `requests`, and every production call site of it must
 //!    be a terminal-reply path (a function that sends a wire reply).
+//! 5. **hold-across-blocking** — a lock guard live across a call that
+//!    can park the thread (`send`/`recv`/`join`/`sleep`/file or socket
+//!    IO) in serving modules stalls every peer of that lock for the
+//!    duration of the park.  `// block-ok: <reason>` suppresses; a
+//!    condvar `wait` only counts when a second guard rides along (the
+//!    waited guard itself is released by the condvar).
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
@@ -29,6 +35,7 @@ pub const RULE_LOCK_ORDER: &str = "lock-order";
 pub const RULE_ATOMIC: &str = "atomic-ordering";
 pub const RULE_PANIC: &str = "panic-path";
 pub const RULE_LEDGER: &str = "ledger-identity";
+pub const RULE_HOLD_BLOCKING: &str = "hold-across-blocking";
 
 /// Counters on the right-hand side of the reconciliation identity.
 const IDENTITY_RHS: [&str; 4] = ["completed", "errors", "expired", "failed"];
@@ -60,6 +67,7 @@ pub struct Analysis {
     pub functions: usize,
     pub suppressed_panic: usize,
     pub suppressed_relaxed: usize,
+    pub suppressed_block: usize,
 }
 
 /// Run all four analyses over `(relative_path, source)` pairs.
@@ -109,11 +117,13 @@ pub fn analyze(files: &[(String, String)]) -> Analysis {
         .flat_map(|f| &f.atomics)
         .filter(|s| s.ordering == "Relaxed" && s.suppressed)
         .count();
+    a.suppressed_block = fns.iter().flat_map(|f| &f.blocking).filter(|b| b.suppressed).count();
 
     lock_order(&fns, &mut a);
     atomic_ordering(&fns, &mut a);
     panic_path(&fns, &mut a);
     ledger_identity(&fns, &mut a);
+    hold_blocking(&fns, &mut a);
 
     a.findings.sort_by(|x, y| {
         (x.rule, &x.file, x.line).cmp(&(y.rule, &y.file, y.line))
@@ -423,6 +433,33 @@ fn panic_path(fns: &[FnFacts], a: &mut Analysis) {
                     "{} in serving path (`{}`) — return an error, recover, or justify with `// panic-ok: <invariant>`",
                     p.kind.label(),
                     f.qual
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 5
+
+fn hold_blocking(fns: &[FnFacts], a: &mut Analysis) {
+    for f in fns {
+        if !serving_path(&f.file) {
+            continue;
+        }
+        for b in &f.blocking {
+            if b.suppressed {
+                continue;
+            }
+            let held: Vec<String> = b.held.iter().map(|h| format!("`{}`", h)).collect();
+            a.findings.push(Finding {
+                rule: RULE_HOLD_BLOCKING,
+                file: f.file.clone(),
+                line: b.line,
+                message: format!(
+                    "`{}()` can park `{}` while holding {} — every peer of that lock stalls for the duration; drop the guard first or justify with `// block-ok: <reason>`",
+                    b.callee,
+                    f.qual,
+                    held.join(" + "),
                 ),
             });
         }
@@ -758,6 +795,90 @@ impl Server {{
                 .any(|f| f.rule == RULE_LEDGER && f.message.contains("not a terminal-reply path")),
             "{:?}",
             silent.findings
+        );
+    }
+
+    #[test]
+    fn blocking_under_guard_flagged_and_suppressible() {
+        let src = r#"
+impl W {
+    fn pump(&self) {
+        let q = self.q.lock().expect("job queue");
+        let msg = self.rx.recv();
+    }
+}
+"#;
+        let a = run(&[("exec/demo.rs", src)]);
+        let hits: Vec<&Finding> =
+            a.findings.iter().filter(|f| f.rule == RULE_HOLD_BLOCKING).collect();
+        assert_eq!(hits.len(), 1, "{:?}", a.findings);
+        assert!(hits[0].message.contains("job queue"));
+        assert!(hits[0].message.contains("recv"));
+
+        // outside the serving path the same shape is not a finding
+        let a = run(&[("quant/demo.rs", src)]);
+        assert!(!rules_of(&a).contains(&RULE_HOLD_BLOCKING), "{:?}", a.findings);
+
+        let suppressed = r#"
+impl W {
+    fn pump(&self) {
+        let q = self.q.lock().expect("job queue");
+        // block-ok: single consumer; the guard is the handoff protocol
+        let msg = self.rx.recv();
+    }
+}
+"#;
+        let a = run(&[("exec/demo.rs", suppressed)]);
+        assert!(!rules_of(&a).contains(&RULE_HOLD_BLOCKING), "{:?}", a.findings);
+        assert_eq!(a.suppressed_block, 1);
+    }
+
+    #[test]
+    fn blocking_rule_spares_released_guards_and_str_join() {
+        // the temporary guard dies at the `;` — the next-statement recv
+        // is guard-free; `names.join(", ")` is not a thread join
+        let src = r#"
+impl W {
+    fn pump(&self) {
+        self.counts.lock().expect("pool counts").queued += 1;
+        let msg = self.rx.recv();
+        let held = self.names.lock().expect("name table");
+        held.join(", ")
+    }
+    fn park(&self) {
+        let h = self.handle.lock().expect("worker handle");
+        h.join();
+    }
+    fn idle(&self) {
+        let mut c = self.counts.lock().expect("pool counts");
+        c = self.cv.wait(c);
+    }
+}
+"#;
+        let a = run(&[("runtime/demo.rs", src)]);
+        let hits: Vec<&Finding> =
+            a.findings.iter().filter(|f| f.rule == RULE_HOLD_BLOCKING).collect();
+        assert_eq!(hits.len(), 1, "only the no-arg thread join flags: {:?}", hits);
+        assert!(hits[0].message.contains("join"));
+        assert!(hits[0].message.contains("worker handle"));
+    }
+
+    #[test]
+    fn condvar_wait_with_second_guard_flagged() {
+        let src = r#"
+impl W {
+    fn bad(&self) {
+        let slot = self.slot.lock().expect("replica slot");
+        let c = self.counts.lock().expect("pool counts");
+        let c = self.cv.wait(c);
+    }
+}
+"#;
+        let a = run(&[("runtime/demo.rs", src)]);
+        assert!(
+            rules_of(&a).contains(&RULE_HOLD_BLOCKING),
+            "waiting with a second guard held must flag: {:?}",
+            a.findings
         );
     }
 

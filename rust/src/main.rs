@@ -1120,10 +1120,7 @@ fn cmd_lint(args: &zqhero::cli::Args) -> Result<()> {
     } else {
         print!("{}", report.render());
     }
-    anyhow::ensure!(
-        report.clean(),
-        "{} unsuppressed lint finding(s)",
-        report.analysis.findings.len()
-    );
-    Ok(())
+    // one shared gate for both output modes: `--json` must exit nonzero
+    // on findings exactly like the human path (CI keys off the status)
+    report.gate()
 }

@@ -1,0 +1,286 @@
+//! Schedule exploration: a bounded-preemption exhaustive DFS plus a
+//! seeded PCT-style randomized sweep, both producing replayable failure
+//! schedules.
+//!
+//! **Soundness caveat** (DESIGN.md §5.12): heromck proves invariants
+//! only over the schedules it explores — all interleavings reachable
+//! with at most `max_preemptions` preemptions (the DFS), plus
+//! `pct_iters` random priority schedules.  Empirically most concurrency
+//! bugs need very few preemptions to trigger (the PCT observation), but
+//! a clean run is a *schedule-bounded* proof, not a full one.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::prop::Rng;
+
+use super::sched::{Controller, DecideMode, MckAbort, PointKind, RunRecord};
+use super::thread::panic_message;
+use super::{decode_token, install_quiet_hook, next_epoch, set_current, RunHandle};
+
+/// Exploration budgets.  `from_env` lets CI cap the total schedule
+/// count via `MCK_SCHEDULES` without touching the tests.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// DFS preemption bound: schedules with more than this many
+    /// preemptive context switches are not enumerated.
+    pub max_preemptions: u32,
+    /// Hard cap on schedules executed across DFS and PCT together.
+    pub max_schedules: usize,
+    /// Per-schedule decision-count bound (fails the schedule as a
+    /// livelock when exceeded).
+    pub max_depth: usize,
+    /// Randomized-mode iterations appended after the DFS.
+    pub pct_iters: usize,
+    pub pct_seed: u64,
+    /// Priority change points injected per PCT schedule.
+    pub pct_change_points: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            max_preemptions: 2,
+            max_schedules: 4000,
+            max_depth: 4000,
+            pct_iters: 64,
+            pct_seed: 0x5eed_cafe,
+            pct_change_points: 3,
+        }
+    }
+}
+
+impl Config {
+    /// Default budgets, with `MCK_SCHEDULES` (when set) overriding the
+    /// total schedule cap — the CI knob.
+    pub fn from_env() -> Config {
+        let mut cfg = Config::default();
+        if let Ok(v) = std::env::var("MCK_SCHEDULES") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                cfg.max_schedules = n.max(1);
+            }
+        }
+        cfg
+    }
+}
+
+/// A failing schedule, fully replayable via its token.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub kind: String,
+    pub message: String,
+    pub token: String,
+    /// Rendered schedule-step tail leading up to the failure.
+    pub schedule: Vec<String>,
+    /// Held-lock stacks at failure time.
+    pub held: Vec<String>,
+    pub depth: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub schedules: usize,
+    pub max_depth: usize,
+    /// Whether the DFS drained its frontier (vs hitting the schedule
+    /// cap) — i.e. the preemption-bounded space was covered completely.
+    pub dfs_complete: bool,
+}
+
+pub struct Outcome {
+    pub stats: Stats,
+    pub failure: Option<Failure>,
+    /// Union of named lock-order edges observed across all explored
+    /// schedules; cross-checked against herolint's static `lock_edges`.
+    pub edges: BTreeSet<(String, String)>,
+}
+
+impl Outcome {
+    pub fn ok(&self) -> bool {
+        self.failure.is_none()
+    }
+}
+
+/// Execute one schedule: run `body` as model thread 0 under a fresh
+/// controller, forcing the decision prefix, and collect the record.
+fn run_one<F>(body: &Arc<F>, forced: Vec<usize>, mode: DecideMode, cfg: &Config) -> RunRecord
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    install_quiet_hook();
+    let ctl = Arc::new(Controller::new(
+        next_epoch(),
+        forced,
+        mode,
+        cfg.max_preemptions,
+        cfg.max_depth,
+    ));
+    let tid = ctl.register_main();
+    let b = body.clone();
+    let c = ctl.clone();
+    let os = std::thread::Builder::new()
+        .name(format!("mck-t{tid}"))
+        .spawn(move || {
+            set_current(Some(RunHandle { ctl: c.clone(), tid }));
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| b()));
+            let panic_msg = match &result {
+                Ok(_) => None,
+                Err(p) if p.is::<MckAbort>() => None,
+                Err(p) => Some(panic_message(p.as_ref())),
+            };
+            set_current(None);
+            c.thread_finished(tid, panic_msg);
+        })
+        .expect("failed to spawn model main thread");
+    let _ = os.join();
+    ctl.wait_all_finished()
+}
+
+fn failure_of(rec: &RunRecord) -> Option<Failure> {
+    rec.failure.as_ref().map(|f| Failure {
+        kind: f.kind.clone(),
+        message: f.message.clone(),
+        token: f.token.clone(),
+        schedule: f.schedule.clone(),
+        held: f.held.clone(),
+        depth: f.depth,
+    })
+}
+
+/// Replay a single schedule from its token.  Decisions beyond the
+/// recorded prefix (there should be none for a faithfully reproduced
+/// failure) fall back to the DFS default.
+pub fn replay<F>(cfg: &Config, body: F, token: &str) -> Outcome
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let forced = decode_token(token).unwrap_or_else(|| {
+        panic!("heromck: malformed replay token {token:?} (want mck1.<i>.<i>...)")
+    });
+    let body = Arc::new(body);
+    let rec = run_one(&body, forced, DecideMode::Dfs, cfg);
+    Outcome {
+        stats: Stats { schedules: 1, max_depth: rec.trace.len(), dfs_complete: false },
+        failure: failure_of(&rec),
+        edges: rec.edges,
+    }
+}
+
+/// Explore `body` under `cfg` and return the outcome without panicking.
+/// Used directly by tests that *expect* a failure (deadlock demos,
+/// mutation-sensitivity checks); [`check`] is the asserting wrapper.
+///
+/// When `MCK_REPLAY` is set in the environment, exploration is skipped
+/// and the named schedule is replayed instead.
+pub fn check_result<F>(name: &str, cfg: Config, body: F) -> Outcome
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    if let Ok(tok) = std::env::var("MCK_REPLAY") {
+        let out = replay(&cfg, body, tok.trim());
+        super::record_outcome(name, &out);
+        return out;
+    }
+    let body = Arc::new(body);
+    let mut stats = Stats { schedules: 0, max_depth: 0, dfs_complete: true };
+    let mut edges: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut failure: Option<Failure> = None;
+
+    // Bounded-preemption DFS: the frontier holds forced decision
+    // prefixes; each executed schedule contributes one alternative
+    // prefix per unexplored sibling decision past its own prefix.
+    let mut frontier: Vec<Vec<usize>> = vec![Vec::new()];
+    while let Some(forced) = frontier.pop() {
+        if stats.schedules >= cfg.max_schedules {
+            stats.dfs_complete = false;
+            break;
+        }
+        let flen = forced.len();
+        let rec = run_one(&body, forced, DecideMode::Dfs, &cfg);
+        stats.schedules += 1;
+        stats.max_depth = stats.max_depth.max(rec.trace.len());
+        edges.extend(rec.edges.iter().cloned());
+        if rec.failure.is_some() {
+            failure = failure_of(&rec);
+            break;
+        }
+        for i in flen..rec.trace.len() {
+            let p = &rec.trace[i];
+            // value alternatives are free; thread alternatives cost a
+            // preemption iff the default would have kept the previous
+            // thread running
+            let affordable = match p.kind {
+                PointKind::Value => true,
+                PointKind::Thread => {
+                    !p.preempting_alts || p.preempts_before + 1 <= cfg.max_preemptions
+                }
+            };
+            if !affordable {
+                continue;
+            }
+            for alt in (p.chosen + 1..p.options).rev() {
+                let mut next: Vec<usize> = rec.trace[..i].iter().map(|t| t.chosen).collect();
+                next.push(alt);
+                frontier.push(next);
+            }
+        }
+    }
+
+    // Seeded PCT-style sweep: random thread priorities with a few
+    // priority change points, catching orderings the preemption bound
+    // excludes.  Fully determined by (pct_seed, iteration).
+    if failure.is_none() {
+        for iter in 0..cfg.pct_iters {
+            if stats.schedules >= cfg.max_schedules + cfg.pct_iters {
+                break;
+            }
+            let mut rng = Rng::new(
+                cfg.pct_seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(iter as u64 + 1),
+            );
+            let horizon = stats.max_depth.max(64);
+            let change_points: Vec<usize> =
+                (0..cfg.pct_change_points).map(|_| rng.below(horizon)).collect();
+            let mode = DecideMode::Pct { rng, change_points, priorities: Vec::new() };
+            let rec = run_one(&body, Vec::new(), mode, &cfg);
+            stats.schedules += 1;
+            stats.max_depth = stats.max_depth.max(rec.trace.len());
+            edges.extend(rec.edges.iter().cloned());
+            if rec.failure.is_some() {
+                failure = failure_of(&rec);
+                break;
+            }
+        }
+    }
+
+    let out = Outcome { stats, failure, edges };
+    super::record_outcome(name, &out);
+    out
+}
+
+/// Explore `body` and panic with a full replayable report if any
+/// schedule fails.  The panic message carries the schedule token;
+/// re-running the same test with `MCK_REPLAY=<token>` reproduces the
+/// failing interleaving deterministically.
+pub fn check<F>(name: &str, cfg: Config, body: F) -> Outcome
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let out = check_result(name, cfg, body);
+    if let Some(f) = &out.failure {
+        let mut report = format!(
+            "heromck[{name}] {}: {}\n  replay: MCK_REPLAY={} (depth {})\n",
+            f.kind, f.message, f.token, f.depth
+        );
+        if !f.held.is_empty() {
+            report.push_str("  held locks:\n");
+            for h in &f.held {
+                report.push_str(&format!("    {h}\n"));
+            }
+        }
+        report.push_str("  schedule tail:\n");
+        for s in &f.schedule {
+            report.push_str(&format!("    {s}\n"));
+        }
+        panic!("{report}");
+    }
+    out
+}

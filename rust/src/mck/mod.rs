@@ -1,0 +1,424 @@
+//! heromck — a dependency-free schedule-exploring concurrency checker
+//! (DESIGN.md §5.12).
+//!
+//! herolint (§5.11) checks the serving spine's concurrency disciplines
+//! *syntactically*; heromck checks them *semantically*, by executing
+//! test bodies under a deterministic cooperative scheduler that
+//! enumerates interleavings.  The real tool for this, loom, is
+//! unavailable offline, so — in the same spirit as `prop::forall` and
+//! `lint/` — the model checker is built in-repo:
+//!
+//! * [`sync`] — instrumented doubles of the `std::sync` surface the
+//!   spine uses (`Mutex`, `Condvar`, `RwLock`, atomics with modeled
+//!   `Ordering` semantics, `mpsc` channels) that fall back to plain
+//!   `std` outside model runs;
+//! * [`thread`] — modeled `spawn`/`join`/`sleep`;
+//! * [`explore`] — a bounded-preemption exhaustive DFS plus a seeded
+//!   PCT-style randomized mode, with **replayable failure schedules**:
+//!   a failing run prints its schedule token, and `MCK_REPLAY=<token>`
+//!   re-executes that exact interleaving.
+//!
+//! The crate-level `crate::sync` facade re-exports `std::sync` in
+//! normal builds and these types under `--features heromck`, so the
+//! spine's own code can be driven through the model unchanged.
+
+pub(crate) mod sched;
+
+pub mod explore;
+pub mod sync;
+pub mod thread;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64 as StdAtomicU64, Ordering as StdOrdering};
+use std::sync::{Arc, Mutex as StdMutex, Once};
+
+pub use explore::{check, check_result, replay, Config, Failure, Outcome, Stats};
+
+use crate::json;
+use sched::{Controller, TracePoint};
+
+/// The calling thread's link to the active model run, if any.
+#[derive(Clone)]
+pub(crate) struct RunHandle {
+    pub(crate) ctl: Arc<Controller>,
+    pub(crate) tid: usize,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<RunHandle>> = RefCell::new(None);
+}
+
+pub(crate) fn current() -> Option<RunHandle> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+pub(crate) fn set_current(h: Option<RunHandle>) {
+    CURRENT.with(|c| *c.borrow_mut() = h);
+}
+
+/// Epochs start at 1; registration cells default to epoch 0, so a fresh
+/// primitive never matches a run it was not registered with.
+static EPOCH: StdAtomicU64 = StdAtomicU64::new(1);
+
+pub(crate) fn next_epoch() -> u64 {
+    EPOCH.fetch_add(1, StdOrdering::SeqCst)
+}
+
+// ----------------------------------------------------------- token codec
+
+/// Encode a decision trace as a replay token: `mck1` followed by the
+/// chosen index of every *recorded* decision (single-option points are
+/// not recorded, in recording and replay alike).
+pub(crate) fn encode_token(trace: &[TracePoint]) -> String {
+    let mut s = String::from("mck1");
+    for p in trace {
+        s.push('.');
+        s.push_str(&p.chosen.to_string());
+    }
+    s
+}
+
+/// Decode a replay token into a forced decision prefix.  `None` on
+/// malformed input (wrong version tag or non-numeric segment).
+pub fn decode_token(token: &str) -> Option<Vec<usize>> {
+    let rest = token.strip_prefix("mck1")?;
+    if rest.is_empty() {
+        return Some(Vec::new());
+    }
+    rest.strip_prefix('.')?
+        .split('.')
+        .map(|p| p.parse::<usize>().ok())
+        .collect()
+}
+
+// ------------------------------------------------------------ panic hook
+
+static HOOK: Once = Once::new();
+
+/// Model threads fail schedules by panicking; without this the default
+/// hook would spray backtraces for every unwound thread of every failing
+/// schedule (and for the `MckAbort` teardown of innocent ones).  Threads
+/// are named `mck-*`, so the filter is precise.
+pub(crate) fn install_quiet_hook() {
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let quiet = std::thread::current()
+                .name()
+                .map(|n| n.starts_with("mck-"))
+                .unwrap_or(false);
+            if !quiet {
+                prev(info);
+            }
+        }));
+    });
+}
+
+// -------------------------------------------------------- bench artifact
+
+#[derive(Clone)]
+struct TestStat {
+    schedules: usize,
+    max_depth: usize,
+    failed: bool,
+}
+
+static REGISTRY: StdMutex<Option<BTreeMap<String, TestStat>>> = StdMutex::new(None);
+
+/// Record one exploration outcome; when `MCK_BENCH_JSON` names a file,
+/// rewrite the trend artifact with everything recorded so far (each
+/// test completion updates it, so a partial run still leaves a valid
+/// artifact).
+pub(crate) fn record_outcome(name: &str, out: &Outcome) {
+    let snapshot: Vec<(String, TestStat)> = {
+        let mut g = match REGISTRY.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let map = g.get_or_insert_with(BTreeMap::new);
+        map.insert(
+            name.to_string(),
+            TestStat {
+                schedules: out.stats.schedules,
+                max_depth: out.stats.max_depth,
+                failed: out.failure.is_some(),
+            },
+        );
+        map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    };
+    if let Ok(path) = std::env::var("MCK_BENCH_JSON") {
+        if !path.is_empty() {
+            let _ = write_bench(&path, &snapshot);
+        }
+    }
+}
+
+/// `BENCH_lint_mck.json`: herolint finding/suppression counts plus
+/// heromck exploration volume, for CI trend tracking.
+fn write_bench(path: &str, tests: &[(String, TestStat)]) -> std::io::Result<()> {
+    let schedules: usize = tests.iter().map(|(_, t)| t.schedules).sum();
+    let max_depth: usize = tests.iter().map(|(_, t)| t.max_depth).max().unwrap_or(0);
+    let failures: usize = tests.iter().filter(|(_, t)| t.failed).count();
+    let lint = match crate::lint::lint_tree(&Path::new(env!("CARGO_MANIFEST_DIR")).join("src")) {
+        Ok(r) => json::obj(vec![
+            ("findings", json::num(r.analysis.findings.len() as f64)),
+            ("suppressed_panic", json::num(r.analysis.suppressed_panic as f64)),
+            ("suppressed_relaxed", json::num(r.analysis.suppressed_relaxed as f64)),
+            ("suppressed_block", json::num(r.analysis.suppressed_block as f64)),
+            ("lock_edges", json::num(r.analysis.edges.len() as f64)),
+        ]),
+        Err(e) => json::obj(vec![("error", json::s(&e.to_string()))]),
+    };
+    let per_test: Vec<json::Value> = tests
+        .iter()
+        .map(|(name, t)| {
+            json::obj(vec![
+                ("name", json::s(name)),
+                ("schedules", json::num(t.schedules as f64)),
+                ("max_depth", json::num(t.max_depth as f64)),
+                ("failed", json::Value::Bool(t.failed)),
+            ])
+        })
+        .collect();
+    let v = json::obj(vec![
+        ("bench", json::s("lint_mck")),
+        ("lint", lint),
+        (
+            "mck",
+            json::obj(vec![
+                ("tests", json::num(tests.len() as f64)),
+                ("schedules_explored", json::num(schedules as f64)),
+                ("max_schedule_depth", json::num(max_depth as f64)),
+                ("failing_tests", json::num(failures as f64)),
+            ]),
+        ),
+        ("per_test", json::Value::Array(per_test)),
+    ]);
+    std::fs::write(path, json::to_string_pretty(&v))
+}
+
+// ------------------------------------------------------------ self-tests
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::sync::atomic::{AtomicU64, Ordering};
+    use super::sync::{mpsc, Condvar, Mutex};
+    use super::{check, check_result, decode_token, replay, thread, Config};
+
+    fn small() -> Config {
+        Config { max_schedules: 500, pct_iters: 8, ..Config::default() }
+    }
+
+    #[test]
+    fn token_codec_round_trips() {
+        assert_eq!(decode_token("mck1"), Some(vec![]));
+        assert_eq!(decode_token("mck1.0.2.1"), Some(vec![0, 2, 1]));
+        assert_eq!(decode_token("mck2.0"), None);
+        assert_eq!(decode_token("mck1.x"), None);
+        assert_eq!(decode_token(""), None);
+    }
+
+    #[test]
+    fn primitives_fall_back_to_std_outside_model_runs() {
+        let m = Mutex::new(1u32);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 2);
+        let (tx, rx) = mpsc::channel();
+        tx.send(7u32).unwrap();
+        assert_eq!(rx.recv().unwrap(), 7);
+        let a = AtomicU64::new(1);
+        a.fetch_add(2, Ordering::SeqCst);
+        assert_eq!(a.load(Ordering::SeqCst), 3);
+        let h = thread::spawn(|| 5u32);
+        assert_eq!(h.join().unwrap(), 5);
+    }
+
+    #[test]
+    fn mutex_counter_is_race_free() {
+        let out = check("mutex-counter", small(), || {
+            let n = Arc::new(Mutex::new(0u32));
+            let mut hs = Vec::new();
+            for _ in 0..2 {
+                let n = n.clone();
+                hs.push(thread::spawn(move || {
+                    *n.lock().unwrap() += 1;
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+        assert!(out.stats.schedules > 1, "exploration should cover several interleavings");
+    }
+
+    #[test]
+    fn fetch_add_counter_is_clean() {
+        check("fetch-add-counter", small(), || {
+            let n = Arc::new(AtomicU64::new(0));
+            let mut hs = Vec::new();
+            for _ in 0..2 {
+                let n = n.clone();
+                hs.push(thread::spawn(move || {
+                    n.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    fn racy_increment_is_caught_and_replays() {
+        // load-then-store is a lost update waiting to happen; the model
+        // must find a schedule where both threads read the same value
+        let body = || {
+            let n = Arc::new(AtomicU64::new(0));
+            let mut hs = Vec::new();
+            for _ in 0..2 {
+                let n = n.clone();
+                hs.push(thread::spawn(move || {
+                    let v = n.load(Ordering::Relaxed);
+                    n.store(v + 1, Ordering::Relaxed);
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 2, "lost update");
+        };
+        let out = check_result("racy-increment", small(), body);
+        let f = out.failure.expect("exploration should find the lost update");
+        assert_eq!(f.kind, "panic");
+        assert!(f.token.starts_with("mck1"), "token {:?}", f.token);
+        // the token replays the exact failing interleaving
+        let re = replay(&small(), body, &f.token);
+        let rf = re.failure.expect("replay must reproduce the failure");
+        assert_eq!(rf.kind, f.kind);
+        assert_eq!(rf.token, f.token);
+    }
+
+    #[test]
+    fn lock_order_inversion_deadlocks_with_held_report() {
+        let out = check_result("ab-ba-deadlock", small(), || {
+            let a = Arc::new(Mutex::new_named("lock A", ()));
+            let b = Arc::new(Mutex::new_named("lock B", ()));
+            let (a2, b2) = (a.clone(), b.clone());
+            let t = thread::spawn(move || {
+                let _x = b2.lock().unwrap();
+                let _y = a2.lock().unwrap();
+            });
+            {
+                let _x = a.lock().unwrap();
+                let _y = b.lock().unwrap();
+            }
+            let _ = t.join();
+        });
+        let f = out.failure.expect("exploration should find the AB/BA deadlock");
+        assert_eq!(f.kind, "deadlock");
+        assert!(
+            f.held.iter().any(|h| h.contains("lock A"))
+                && f.held.iter().any(|h| h.contains("lock B")),
+            "held-lock report should name both locks: {:?}",
+            f.held
+        );
+        // both acquisition orders were observed on the way
+        assert!(out.edges.contains(&("lock A".to_string(), "lock B".to_string())));
+        assert!(out.edges.contains(&("lock B".to_string(), "lock A".to_string())));
+    }
+
+    #[test]
+    fn missed_notify_is_reported_as_deadlock() {
+        let out = check_result("missed-notify", small(), || {
+            let pair = Arc::new((Mutex::new(()), Condvar::new()));
+            let p2 = pair.clone();
+            let t = thread::spawn(move || {
+                let g = p2.0.lock().unwrap();
+                // BUG: unconditional wait — a notify that fires before
+                // this thread parks is lost forever
+                let _g = p2.1.wait(g).unwrap();
+            });
+            pair.1.notify_one();
+            let _ = t.join();
+        });
+        let f = out.failure.expect("the lost notification should deadlock some schedule");
+        assert_eq!(f.kind, "deadlock");
+        assert!(f.message.contains("blocked"), "message: {}", f.message);
+    }
+
+    #[test]
+    fn condvar_with_predicate_loop_is_clean() {
+        check("condvar-predicate", small(), || {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = pair.clone();
+            let t = thread::spawn(move || {
+                let mut g = p2.0.lock().unwrap();
+                while !*g {
+                    g = p2.1.wait(g).unwrap();
+                }
+            });
+            *pair.0.lock().unwrap() = true;
+            pair.1.notify_one();
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn bounded_channel_blocks_and_drains() {
+        check("bounded-channel", small(), || {
+            let (tx, rx) = mpsc::sync_channel::<u32>(1);
+            let t = thread::spawn(move || {
+                tx.send(1).unwrap();
+                tx.send(2).unwrap();
+            });
+            assert_eq!(rx.recv().unwrap(), 1);
+            assert_eq!(rx.recv().unwrap(), 2);
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn release_acquire_publishes_data() {
+        // the classic message-passing litmus: with Release/Acquire the
+        // reader that sees the flag must see the payload
+        check("release-acquire-publish", small(), || {
+            let flag = Arc::new(AtomicU64::new(0));
+            let data = Arc::new(AtomicU64::new(0));
+            let (f2, d2) = (flag.clone(), data.clone());
+            let t = thread::spawn(move || {
+                d2.store(42, Ordering::Relaxed);
+                f2.store(1, Ordering::Release);
+            });
+            if flag.load(Ordering::Acquire) == 1 {
+                assert_eq!(data.load(Ordering::Relaxed), 42, "acquire must see the payload");
+            }
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn relaxed_flag_does_not_publish_data() {
+        // the same litmus with a Relaxed flag load must fail: the model
+        // lets the data load observe the stale store
+        let out = check_result("relaxed-no-publish", small(), || {
+            let flag = Arc::new(AtomicU64::new(0));
+            let data = Arc::new(AtomicU64::new(0));
+            let (f2, d2) = (flag.clone(), data.clone());
+            let t = thread::spawn(move || {
+                d2.store(42, Ordering::Relaxed);
+                f2.store(1, Ordering::Relaxed);
+            });
+            if flag.load(Ordering::Relaxed) == 1 {
+                assert_eq!(data.load(Ordering::Relaxed), 42, "no ordering, no guarantee");
+            }
+            t.join().unwrap();
+        });
+        assert!(out.failure.is_some(), "relaxed publish must be caught");
+    }
+}

@@ -1,0 +1,776 @@
+//! The deterministic cooperative scheduler at the heart of heromck.
+//!
+//! Model threads are real OS threads, but a single *baton* — handed out
+//! by the [`Controller`] — guarantees that exactly one of them executes
+//! at any moment.  Every modeled operation (lock, unlock, atomic
+//! load/store, channel send/recv, spawn, join, condvar wait/notify) is a
+//! *schedule point*: the thread arrives, surrenders the baton, and a
+//! scheduling decision picks who runs next.  Decisions are indices into
+//! a deterministically ordered candidate list, so a recorded decision
+//! sequence — the *schedule token* — replays the exact interleaving.
+//!
+//! Two decision kinds exist: *thread* decisions (who runs next) and
+//! *value* decisions (which coherence-visible store a relaxed atomic
+//! load observes, which condvar waiter a `notify_one` wakes).  Both are
+//! recorded in the same trace and replayed the same way.
+//!
+//! The scheduler also keeps the model-level state — mutexes, rwlocks,
+//! condvars, channel occupancy, atomic store histories with vector
+//! clocks, per-thread held-lock stacks — and derives two reports from
+//! it: the per-schedule lock-acquisition-order edges (cross-checked
+//! against herolint's static `lock_edges`), and, when every live thread
+//! is blocked, a deadlock report carrying the schedule and the held-lock
+//! set of each thread.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::{Condvar as StdCondvar, Mutex as StdMutex};
+
+use crate::prop::Rng;
+
+/// Panic payload used to unwind model threads during teardown after a
+/// failure was recorded.  Not itself a failure.
+pub(crate) struct MckAbort;
+
+/// Decision kinds, stored per trace point (diagnostics only — replay
+/// consumes the index stream without caring which kind produced it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum PointKind {
+    Thread,
+    Value,
+}
+
+/// One recorded scheduling decision.
+#[derive(Clone, Debug)]
+pub(crate) struct TracePoint {
+    pub options: usize,
+    pub chosen: usize,
+    pub kind: PointKind,
+    /// Whether non-default alternatives at this point cost a preemption
+    /// (true iff the previously running thread was itself a candidate).
+    pub preempting_alts: bool,
+    /// Cumulative preemptions spent before this decision.
+    pub preempts_before: u32,
+}
+
+/// Why a thread cannot currently run.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum BlockReason {
+    MutexLock(usize),
+    RwRead(usize),
+    RwWrite(usize),
+    CondWait(usize),
+    ChanRecv(usize),
+    ChanSend(usize),
+    Join(usize),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum Status {
+    Ready,
+    Blocked(BlockReason),
+    Finished,
+}
+
+/// A vector clock over model-thread ids; the happens-before backbone for
+/// the atomic visibility rules.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub(crate) struct VClock(pub Vec<u32>);
+
+impl VClock {
+    pub fn tick(&mut self, tid: usize) {
+        if self.0.len() <= tid {
+            self.0.resize(tid + 1, 0);
+        }
+        self.0[tid] += 1;
+    }
+
+    pub fn join(&mut self, other: &VClock) {
+        if self.0.len() < other.0.len() {
+            self.0.resize(other.0.len(), 0);
+        }
+        for (i, v) in other.0.iter().enumerate() {
+            if self.0[i] < *v {
+                self.0[i] = *v;
+            }
+        }
+    }
+
+    /// `self` happens-before-or-equals `other`.
+    pub fn leq(&self, other: &VClock) -> bool {
+        self.0
+            .iter()
+            .enumerate()
+            .all(|(i, v)| *v == 0 || other.0.get(i).copied().unwrap_or(0) >= *v)
+    }
+}
+
+// ------------------------------------------------------------ model state
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum HeldLock {
+    M(usize),
+    R(usize),
+    W(usize),
+}
+
+pub(crate) struct MutexObj {
+    pub holder: Option<usize>,
+    pub class: Option<&'static str>,
+    /// Clock released by the last unlock; joined on acquire.
+    pub clock: VClock,
+}
+
+pub(crate) struct RwObj {
+    pub writer: Option<usize>,
+    pub readers: Vec<usize>,
+    pub class: Option<&'static str>,
+    /// Clock released by the last write unlock.
+    pub clock: VClock,
+    /// Join of reader clocks since the last write lock.
+    pub readers_clock: VClock,
+}
+
+pub(crate) struct CvObj {
+    /// (tid, mutex id) pairs parked in `wait`, not yet notified.
+    pub waiting: Vec<(usize, usize)>,
+}
+
+pub(crate) struct ChanObj {
+    pub len: usize,
+    pub cap: Option<usize>,
+    pub senders: usize,
+    pub rx_alive: bool,
+    /// Per-message send clocks, FIFO with the payloads (which live in
+    /// the wrapped real channel).
+    pub msg_clocks: VecDeque<VClock>,
+}
+
+pub(crate) struct StoreRec {
+    pub val: u64,
+    /// The storing thread's clock at store time (visibility: a store
+    /// that happens-before a load hides everything older).
+    pub clock: VClock,
+    /// Whether an acquire load may synchronize with this store
+    /// (Release / AcqRel / SeqCst stores and RMWs).
+    pub release: bool,
+}
+
+pub(crate) struct AtomObj {
+    pub stores: Vec<StoreRec>,
+    /// Coherence floor per thread: the newest store index each thread
+    /// has observed (reads may never go backwards).
+    pub last_seen: Vec<usize>,
+}
+
+impl AtomObj {
+    pub fn seen(&self, tid: usize) -> usize {
+        self.last_seen.get(tid).copied().unwrap_or(0)
+    }
+
+    pub fn note_seen(&mut self, tid: usize, idx: usize) {
+        if self.last_seen.len() <= tid {
+            self.last_seen.resize(tid + 1, 0);
+        }
+        if self.last_seen[tid] < idx {
+            self.last_seen[tid] = idx;
+        }
+    }
+}
+
+/// All modeled objects of one schedule execution.  Object ids are
+/// allocated in first-use order under the baton, so they are identical
+/// across replays of the same decision sequence.
+#[derive(Default)]
+pub(crate) struct Model {
+    pub mutexes: Vec<MutexObj>,
+    pub rwlocks: Vec<RwObj>,
+    pub condvars: Vec<CvObj>,
+    pub channels: Vec<ChanObj>,
+    pub atomics: Vec<AtomObj>,
+    /// Per-thread vector clocks.
+    pub clocks: Vec<VClock>,
+    /// Per-thread stacks of held locks, in acquisition order.
+    pub held: Vec<Vec<HeldLock>>,
+    /// Named lock-order edges observed this schedule: `(outer, inner)`
+    /// whenever a named lock is acquired while another named lock is
+    /// held.  Cross-checked against herolint's static `lock_edges`.
+    pub edges: BTreeSet<(String, String)>,
+}
+
+impl Model {
+    fn lock_class(&self, l: HeldLock) -> Option<&'static str> {
+        match l {
+            HeldLock::M(i) => self.mutexes[i].class,
+            HeldLock::R(i) | HeldLock::W(i) => self.rwlocks[i].class,
+        }
+    }
+
+    /// Record lock-order edges for acquiring `acq` with `held` stacks.
+    fn note_acquire_edges(&mut self, tid: usize, acq: HeldLock) {
+        let to = match self.lock_class(acq) {
+            Some(c) => c,
+            None => return,
+        };
+        let outers: Vec<&'static str> = self.held[tid]
+            .iter()
+            .filter_map(|h| self.lock_class(*h))
+            .collect();
+        for from in outers {
+            if from != to {
+                self.edges.insert((from.to_string(), to.to_string()));
+            }
+        }
+    }
+
+    pub fn alloc_mutex(&mut self, class: Option<&'static str>) -> usize {
+        self.mutexes.push(MutexObj { holder: None, class, clock: VClock::default() });
+        self.mutexes.len() - 1
+    }
+
+    pub fn alloc_rwlock(&mut self, class: Option<&'static str>) -> usize {
+        self.rwlocks.push(RwObj {
+            writer: None,
+            readers: Vec::new(),
+            class,
+            clock: VClock::default(),
+            readers_clock: VClock::default(),
+        });
+        self.rwlocks.len() - 1
+    }
+
+    pub fn alloc_condvar(&mut self) -> usize {
+        self.condvars.push(CvObj { waiting: Vec::new() });
+        self.condvars.len() - 1
+    }
+
+    pub fn alloc_channel(&mut self, cap: Option<usize>) -> usize {
+        self.channels.push(ChanObj {
+            len: 0,
+            cap,
+            senders: 1,
+            rx_alive: true,
+            msg_clocks: VecDeque::new(),
+        });
+        self.channels.len() - 1
+    }
+
+    pub fn alloc_atomic(&mut self, init: u64) -> usize {
+        self.atomics.push(AtomObj {
+            stores: vec![StoreRec { val: init, clock: VClock::default(), release: false }],
+            last_seen: Vec::new(),
+        });
+        self.atomics.len() - 1
+    }
+
+    /// Acquire `id` for `tid`; the caller checked it is free.
+    pub fn lock_mutex(&mut self, tid: usize, id: usize) {
+        self.mutexes[id].holder = Some(tid);
+        let clock = self.mutexes[id].clock.clone();
+        self.clocks[tid].join(&clock);
+        self.note_acquire_edges(tid, HeldLock::M(id));
+        self.held[tid].push(HeldLock::M(id));
+    }
+
+    /// Release `id`; publishes the holder's clock to the next acquirer.
+    pub fn unlock_mutex(&mut self, tid: usize, id: usize) {
+        self.clocks[tid].tick(tid);
+        self.mutexes[id].clock = self.clocks[tid].clone();
+        self.mutexes[id].holder = None;
+        if let Some(pos) = self.held[tid].iter().rposition(|h| *h == HeldLock::M(id)) {
+            self.held[tid].remove(pos);
+        }
+    }
+
+    /// Acquire the read side of rwlock `id`; the caller checked no
+    /// writer holds it.
+    pub fn lock_rw_read(&mut self, tid: usize, id: usize) {
+        self.rwlocks[id].readers.push(tid);
+        let clock = self.rwlocks[id].clock.clone();
+        self.clocks[tid].join(&clock);
+        self.note_acquire_edges(tid, HeldLock::R(id));
+        self.held[tid].push(HeldLock::R(id));
+    }
+
+    pub fn unlock_rw_read(&mut self, tid: usize, id: usize) {
+        self.clocks[tid].tick(tid);
+        let clock = self.clocks[tid].clone();
+        let rw = &mut self.rwlocks[id];
+        rw.readers_clock.join(&clock);
+        if let Some(pos) = rw.readers.iter().position(|r| *r == tid) {
+            rw.readers.remove(pos);
+        }
+        if let Some(pos) = self.held[tid].iter().rposition(|h| *h == HeldLock::R(id)) {
+            self.held[tid].remove(pos);
+        }
+    }
+
+    /// Acquire the write side of rwlock `id`; the caller checked it is
+    /// entirely free.
+    pub fn lock_rw_write(&mut self, tid: usize, id: usize) {
+        self.rwlocks[id].writer = Some(tid);
+        let clock = self.rwlocks[id].clock.clone();
+        self.clocks[tid].join(&clock);
+        let readers = self.rwlocks[id].readers_clock.clone();
+        self.clocks[tid].join(&readers);
+        self.note_acquire_edges(tid, HeldLock::W(id));
+        self.held[tid].push(HeldLock::W(id));
+    }
+
+    pub fn unlock_rw_write(&mut self, tid: usize, id: usize) {
+        self.clocks[tid].tick(tid);
+        let clock = self.clocks[tid].clone();
+        let rw = &mut self.rwlocks[id];
+        rw.clock = clock.clone();
+        rw.readers_clock = clock;
+        rw.writer = None;
+        if let Some(pos) = self.held[tid].iter().rposition(|h| *h == HeldLock::W(id)) {
+            self.held[tid].remove(pos);
+        }
+    }
+
+    /// Render the held-lock stacks of every thread, for failure reports.
+    pub fn render_held(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (tid, held) in self.held.iter().enumerate() {
+            if held.is_empty() {
+                continue;
+            }
+            let names: Vec<String> = held
+                .iter()
+                .map(|h| match h {
+                    HeldLock::M(i) => match self.mutexes[*i].class {
+                        Some(c) => format!("mutex {i} \"{c}\""),
+                        None => format!("mutex {i}"),
+                    },
+                    HeldLock::R(i) => format!("rwlock {i} (read)"),
+                    HeldLock::W(i) => format!("rwlock {i} (write)"),
+                })
+                .collect();
+            out.push(format!("t{tid} holds [{}]", names.join(", ")));
+        }
+        out
+    }
+}
+
+// --------------------------------------------------------------- failures
+
+/// What went wrong in a failing schedule.  Carried out of the run and
+/// rendered (with token and schedule) by the explorer.
+#[derive(Clone, Debug)]
+pub(crate) struct RunFailure {
+    pub kind: String,
+    pub message: String,
+    /// The replay token for this exact interleaving.
+    pub token: String,
+    /// Rendered schedule steps (tail, bounded).
+    pub schedule: Vec<String>,
+    /// Held-lock stacks at failure time.
+    pub held: Vec<String>,
+    pub depth: usize,
+}
+
+/// Everything the explorer needs from one completed schedule execution.
+pub(crate) struct RunRecord {
+    pub trace: Vec<TracePoint>,
+    pub failure: Option<RunFailure>,
+    pub edges: BTreeSet<(String, String)>,
+}
+
+// ------------------------------------------------------------- scheduling
+
+/// How decisions beyond the forced prefix are made.
+pub(crate) enum DecideMode {
+    /// Default-first: index 0 (continue the previous thread when it is a
+    /// candidate; read the newest store).  The DFS explorer enumerates
+    /// the alternatives by growing the forced prefix.
+    Dfs,
+    /// PCT-style randomized: threads carry random priorities, the
+    /// highest-priority ready thread runs, and a bounded number of
+    /// random change points demote the running thread.  Value decisions
+    /// are uniform.  Fully determined by the seed.
+    Pct { rng: Rng, change_points: Vec<usize>, priorities: Vec<u64> },
+}
+
+pub(crate) struct ThreadSlot {
+    pub status: Status,
+}
+
+const STEP_TAIL: usize = 160;
+
+pub(crate) struct Inner {
+    pub threads: Vec<ThreadSlot>,
+    /// The thread currently holding the baton.
+    pub running: Option<usize>,
+    /// The thread that held the baton before the current decision.
+    pub last_running: Option<usize>,
+    pub preemptions: u32,
+    pub max_preemptions: u32,
+    pub max_depth: usize,
+    pub forced: Vec<usize>,
+    pub mode: DecideMode,
+    pub trace: Vec<TracePoint>,
+    pub steps: VecDeque<String>,
+    pub failure: Option<RunFailure>,
+    pub aborting: bool,
+    pub finished: usize,
+    pub model: Model,
+}
+
+impl Inner {
+    /// Record a failure (first one wins) and start teardown.
+    pub fn fail(&mut self, kind: &str, message: String) {
+        if self.failure.is_none() {
+            self.failure = Some(RunFailure {
+                kind: kind.to_string(),
+                message,
+                token: super::encode_token(&self.trace),
+                schedule: self.steps.iter().cloned().collect(),
+                held: self.model.render_held(),
+                depth: self.trace.len(),
+            });
+        }
+        self.aborting = true;
+    }
+
+    pub fn note_step(&mut self, tid: usize, label: &str) {
+        if self.steps.len() == STEP_TAIL {
+            self.steps.pop_front();
+        }
+        self.steps.push_back(format!("t{tid} {label}"));
+    }
+
+    /// Wake every blocked thread whose reason satisfies `pred`.
+    pub fn wake_where(&mut self, pred: impl Fn(&BlockReason) -> bool) {
+        for t in self.threads.iter_mut() {
+            if let Status::Blocked(r) = &t.status {
+                if pred(r) {
+                    t.status = Status::Ready;
+                }
+            }
+        }
+    }
+
+    /// One scheduling decision over `options` alternatives; returns the
+    /// chosen index.  `cands` carries the candidate tids for thread
+    /// decisions (empty for value decisions).
+    pub fn decide(&mut self, kind: PointKind, options: usize, preempting_alts: bool, cands: &[usize]) -> usize {
+        debug_assert!(options > 0);
+        if options == 1 {
+            // no choice — keep forced tokens and traces free of padding
+            return 0;
+        }
+        if self.trace.len() >= self.max_depth {
+            self.fail(
+                "depth-exceeded",
+                format!("schedule exceeded {} decisions — livelock or unbounded retry loop", self.max_depth),
+            );
+            return 0;
+        }
+        let pos = self.trace.len();
+        let chosen = if pos < self.forced.len() {
+            let c = self.forced[pos];
+            if c >= options {
+                self.fail(
+                    "stale-token",
+                    format!("replay token decision {pos} picks alternative {c} of {options} — the model diverged from the recorded schedule"),
+                );
+                0
+            } else {
+                c
+            }
+        } else {
+            match &mut self.mode {
+                DecideMode::Dfs => 0,
+                DecideMode::Pct { rng, change_points, priorities } => match kind {
+                    PointKind::Value => (rng.next_u64() % options as u64) as usize,
+                    PointKind::Thread => {
+                        let idx = cands
+                            .iter()
+                            .enumerate()
+                            .max_by_key(|(_, tid)| priorities.get(**tid).copied().unwrap_or(0))
+                            .map(|(i, _)| i)
+                            .unwrap_or(0);
+                        if change_points.contains(&pos) {
+                            let tid = cands[idx];
+                            if let Some(p) = priorities.get_mut(tid) {
+                                *p = 0;
+                            }
+                        }
+                        idx
+                    }
+                },
+            }
+        };
+        self.trace.push(TracePoint {
+            options,
+            chosen,
+            kind,
+            preempting_alts,
+            preempts_before: self.preemptions,
+        });
+        chosen
+    }
+
+    /// Decide which coherence-visible store index to read, given the
+    /// candidates ordered newest-first.  Returns the store index.
+    pub fn decide_store(&mut self, cands: &[usize]) -> usize {
+        if cands.len() == 1 {
+            return cands[0];
+        }
+        let idx = self.decide(PointKind::Value, cands.len(), false, &[]);
+        cands[idx]
+    }
+}
+
+/// One value of this exists per schedule execution.  `epoch` is globally
+/// unique, so lazily registered objects can tell a fresh run from a
+/// stale registration.
+pub(crate) struct Controller {
+    pub epoch: u64,
+    inner: StdMutex<Inner>,
+    cv: StdCondvar,
+}
+
+pub(crate) enum Step<R> {
+    Done(R),
+    Block(BlockReason),
+}
+
+impl Controller {
+    pub fn new(epoch: u64, forced: Vec<usize>, mode: DecideMode, max_preemptions: u32, max_depth: usize) -> Controller {
+        Controller {
+            epoch,
+            inner: StdMutex::new(Inner {
+                threads: Vec::new(),
+                running: None,
+                last_running: None,
+                preemptions: 0,
+                max_preemptions,
+                max_depth,
+                forced,
+                mode,
+                trace: Vec::new(),
+                steps: VecDeque::new(),
+                failure: None,
+                aborting: false,
+                finished: 0,
+                model: Model::default(),
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    fn guard(&self) -> std::sync::MutexGuard<'_, Inner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Register a new model thread; returns its tid.  The main thread is
+    /// registered before the run starts; children are registered from
+    /// their parent's `spawn` schedule point (under the baton, so tids
+    /// are deterministic).
+    pub fn register_thread(inner: &mut Inner, parent: Option<usize>) -> usize {
+        let tid = inner.threads.len();
+        inner.threads.push(ThreadSlot { status: Status::Ready });
+        let mut clock = match parent {
+            Some(p) => {
+                inner.model.clocks[p].tick(p);
+                inner.model.clocks[p].clone()
+            }
+            None => VClock::default(),
+        };
+        clock.tick(tid);
+        inner.model.clocks.push(clock);
+        inner.model.held.push(Vec::new());
+        if let DecideMode::Pct { rng, priorities, .. } = &mut inner.mode {
+            // 1.. so a demoted thread (priority 0) ranks below everyone
+            priorities.push(1 + rng.next_u64() % 1_000_000);
+        }
+        tid
+    }
+
+    pub fn register_main(&self) -> usize {
+        let mut inner = self.guard();
+        let tid = Self::register_thread(&mut inner, None);
+        inner.running = Some(tid);
+        inner.last_running = Some(tid);
+        tid
+    }
+
+    /// If no thread holds the baton, make a scheduling decision (or
+    /// report a deadlock when nothing is runnable).
+    fn pick_if_idle(&self, inner: &mut Inner) {
+        if inner.running.is_some() || inner.aborting {
+            return;
+        }
+        let cands: Vec<usize> = inner
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Ready)
+            .map(|(i, _)| i)
+            .collect();
+        if cands.is_empty() {
+            if inner.finished < inner.threads.len() {
+                let blocked: Vec<String> = inner
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, t)| match &t.status {
+                        Status::Blocked(r) => Some(format!("t{i} blocked on {r:?}")),
+                        _ => None,
+                    })
+                    .collect();
+                inner.fail(
+                    "deadlock",
+                    format!("every live model thread is blocked: {}", blocked.join("; ")),
+                );
+            }
+            return;
+        }
+        // candidate order: previously running thread first (so the
+        // default decision never preempts), then ascending tid
+        let mut ordered = cands;
+        let prev_is_cand = match inner.last_running {
+            Some(p) => {
+                if let Some(pos) = ordered.iter().position(|&t| t == p) {
+                    ordered.remove(pos);
+                    ordered.insert(0, p);
+                    true
+                } else {
+                    false
+                }
+            }
+            None => false,
+        };
+        let idx = inner.decide(PointKind::Thread, ordered.len(), prev_is_cand, &ordered);
+        if inner.aborting {
+            return;
+        }
+        let chosen = ordered[idx];
+        if prev_is_cand && Some(chosen) != inner.last_running {
+            inner.preemptions += 1;
+        }
+        inner.last_running = Some(chosen);
+        inner.running = Some(chosen);
+    }
+
+    /// Execute one modeled operation for `tid`.  `f` runs under the
+    /// baton with the model state borrowed; returning `Block` parks the
+    /// thread until another operation wakes it, after which `f` is
+    /// retried with an incremented attempt counter.
+    pub(crate) fn op<R>(
+        &self,
+        tid: usize,
+        label: &'static str,
+        mut f: impl FnMut(&mut Inner, usize) -> Step<R>,
+    ) -> R {
+        let mut inner = self.guard();
+        // arrival: surrender the baton, forcing a decision
+        inner.threads[tid].status = Status::Ready;
+        if inner.running == Some(tid) {
+            inner.running = None;
+        }
+        self.pick_if_idle(&mut inner);
+        self.cv.notify_all();
+        let mut attempt = 0usize;
+        loop {
+            while inner.running != Some(tid) {
+                if inner.aborting {
+                    drop(inner);
+                    std::panic::panic_any(MckAbort);
+                }
+                inner = match self.cv.wait(inner) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+            if inner.aborting {
+                drop(inner);
+                std::panic::panic_any(MckAbort);
+            }
+            inner.note_step(tid, label);
+            match f(&mut inner, attempt) {
+                Step::Done(r) => return r,
+                Step::Block(reason) => {
+                    inner.threads[tid].status = Status::Blocked(reason);
+                    inner.running = None;
+                    self.pick_if_idle(&mut inner);
+                    self.cv.notify_all();
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// A non-blocking operation that tolerates teardown: used from
+    /// `Drop` impls, where panicking would abort the process.  Returns
+    /// `None` when the run is already aborting.
+    pub(crate) fn op_release<R>(
+        &self,
+        tid: usize,
+        label: &'static str,
+        f: impl FnOnce(&mut Inner) -> R,
+    ) -> Option<R> {
+        let mut inner = self.guard();
+        inner.threads[tid].status = Status::Ready;
+        if inner.running == Some(tid) {
+            inner.running = None;
+        }
+        self.pick_if_idle(&mut inner);
+        self.cv.notify_all();
+        loop {
+            if inner.aborting {
+                return None;
+            }
+            if inner.running == Some(tid) {
+                break;
+            }
+            inner = match self.cv.wait(inner) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        inner.note_step(tid, label);
+        Some(f(&mut inner))
+    }
+
+    /// Mark `tid` finished.  A non-`MckAbort` panic payload records a
+    /// failure; joiners are woken either way.
+    pub fn thread_finished(&self, tid: usize, panic_msg: Option<String>) {
+        let mut inner = self.guard();
+        inner.threads[tid].status = Status::Finished;
+        inner.finished += 1;
+        if inner.running == Some(tid) {
+            inner.running = None;
+        }
+        if let Some(msg) = panic_msg {
+            inner.fail("panic", format!("t{tid} panicked: {msg}"));
+        }
+        inner.wake_where(|r| *r == BlockReason::Join(tid));
+        self.pick_if_idle(&mut inner);
+        self.cv.notify_all();
+    }
+
+    /// Block until every registered thread has finished, then extract
+    /// the run record.  Called by the explorer after the main body's OS
+    /// thread has been joined.
+    pub fn wait_all_finished(&self) -> RunRecord {
+        let mut inner = self.guard();
+        while inner.finished < inner.threads.len() {
+            // a failure already tore the run down; stragglers see
+            // `aborting` at their next schedule point and unwind
+            inner = match self.cv.wait(inner) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        RunRecord {
+            trace: std::mem::take(&mut inner.trace),
+            failure: inner.failure.take(),
+            edges: std::mem::take(&mut inner.model.edges),
+        }
+    }
+}

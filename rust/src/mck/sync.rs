@@ -1,0 +1,982 @@
+//! heromck's instrumented sync primitives: drop-in doubles for the
+//! `std::sync` surface the serving spine uses, wired into the
+//! deterministic scheduler.
+//!
+//! Every type wraps its real `std` counterpart for storage, and only
+//! consults the model when the calling thread belongs to an active
+//! model run (`mck::current()`); outside a run the wrappers degrade to
+//! plain `std` behaviour, so code paths that construct these types in
+//! ordinary tests keep working under `--features heromck`.
+//!
+//! Objects register with the run lazily, at first modeled use, under
+//! the scheduler baton — so object ids (and therefore decision traces)
+//! are identical across replays of the same schedule.  Registrations
+//! carry the run's epoch and go stale with it; an object that outlives
+//! one run re-registers in the next.
+//!
+//! Fidelity notes (documented in DESIGN.md §5.12):
+//! * atomics keep full store histories with vector clocks — `Relaxed`
+//!   loads may observe any coherence-visible store (an explorer value
+//!   decision), `Acquire` loads join the clock of `Release`/`SeqCst`
+//!   stores, `SeqCst` loads read the newest store (an approximation of
+//!   the single total order);
+//! * `recv_timeout` never parks: with the queue empty it returns
+//!   `Timeout` immediately (timeouts are not modeled as time);
+//! * condvars do not produce spurious wakeups;
+//! * poisoning never happens inside a model run — a panicking model
+//!   thread fails the whole schedule instead.
+
+use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, RwLock as StdRwLock};
+use std::sync::{LockResult, PoisonError};
+
+use super::sched::{BlockReason, Inner, PointKind, Status, Step};
+use super::{current, RunHandle};
+
+/// (epoch, object id) of the run this object last registered with.
+pub(crate) type Reg = StdMutex<(u64, usize)>;
+
+pub(crate) fn reg_new() -> Reg {
+    StdMutex::new((0, 0))
+}
+
+fn reg_get(reg: &Reg, epoch: u64) -> Option<usize> {
+    let g = match reg.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    if g.0 == epoch {
+        Some(g.1)
+    } else {
+        None
+    }
+}
+
+fn reg_set(reg: &Reg, epoch: u64, id: usize) {
+    let mut g = match reg.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    *g = (epoch, id);
+}
+
+fn ensure_mutex(inner: &mut Inner, epoch: u64, reg: &Reg, class: Option<&'static str>) -> usize {
+    match reg_get(reg, epoch) {
+        Some(id) => id,
+        None => {
+            let id = inner.model.alloc_mutex(class);
+            reg_set(reg, epoch, id);
+            id
+        }
+    }
+}
+
+fn ensure_rwlock(inner: &mut Inner, epoch: u64, reg: &Reg, class: Option<&'static str>) -> usize {
+    match reg_get(reg, epoch) {
+        Some(id) => id,
+        None => {
+            let id = inner.model.alloc_rwlock(class);
+            reg_set(reg, epoch, id);
+            id
+        }
+    }
+}
+
+fn ensure_condvar(inner: &mut Inner, epoch: u64, reg: &Reg) -> usize {
+    match reg_get(reg, epoch) {
+        Some(id) => id,
+        None => {
+            let id = inner.model.alloc_condvar();
+            reg_set(reg, epoch, id);
+            id
+        }
+    }
+}
+
+// ------------------------------------------------------------------ Mutex
+
+pub struct Mutex<T> {
+    class: Option<&'static str>,
+    reg: Reg,
+    data: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Mutex<T> {
+        Mutex { class: None, reg: reg_new(), data: StdMutex::new(t) }
+    }
+
+    /// A mutex carrying a herolint lock-class name, so acquisitions feed
+    /// the runtime lock-order witness.  Model-test only: production code
+    /// keeps its classes in `.expect("label")` strings, which herolint
+    /// reads statically.
+    pub fn new_named(class: &'static str, t: T) -> Mutex<T> {
+        Mutex { class: Some(class), reg: reg_new(), data: StdMutex::new(t) }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some(h) = current() {
+            let epoch = h.ctl.epoch;
+            let tid = h.tid;
+            let id = h.ctl.op(tid, "mutex.lock", |inner, _| {
+                let id = ensure_mutex(inner, epoch, &self.reg, self.class);
+                if inner.model.mutexes[id].holder.is_none() {
+                    inner.model.lock_mutex(tid, id);
+                    Step::Done(id)
+                } else {
+                    Step::Block(BlockReason::MutexLock(id))
+                }
+            });
+            // the model admitted us, so the real lock is uncontended
+            let real = match self.data.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            Ok(MutexGuard { lock: self, real: Some(real), model: Some((h, id)) })
+        } else {
+            match self.data.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, real: Some(g), model: None }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    real: Some(p.into_inner()),
+                    model: None,
+                })),
+            }
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.data.into_inner()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.data.get_mut()
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.data.fmt(f)
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    real: Option<std::sync::MutexGuard<'a, T>>,
+    model: Option<(RunHandle, usize)>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.real.as_ref().expect("guard holds the real lock")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.real.as_mut().expect("guard holds the real lock")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some((h, id)) = self.model.take() {
+            h.ctl.op_release(h.tid, "mutex.unlock", |inner| {
+                inner.model.unlock_mutex(h.tid, id);
+                inner.wake_where(|r| matches!(r, BlockReason::MutexLock(i) if *i == id));
+            });
+        }
+        // the real guard (if any) drops with the struct, after the
+        // model released — the next holder is only scheduled later
+    }
+}
+
+// ---------------------------------------------------------------- Condvar
+
+pub struct Condvar {
+    reg: Reg,
+    real: StdCondvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar { reg: reg_new(), real: StdCondvar::new() }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match guard.model.take() {
+            Some((h, mid)) => {
+                let lock = guard.lock;
+                // release the real mutex before parking in the model, so
+                // the model-admitted next holder can take it for real
+                guard.real = None;
+                drop(guard);
+                let epoch = h.ctl.epoch;
+                let tid = h.tid;
+                h.ctl.op(tid, "condvar.wait", |inner, attempt| {
+                    if attempt == 0 {
+                        let cid = ensure_condvar(inner, epoch, &self.reg);
+                        inner.model.unlock_mutex(tid, mid);
+                        inner.wake_where(|r| matches!(r, BlockReason::MutexLock(i) if *i == mid));
+                        inner.model.condvars[cid].waiting.push((tid, mid));
+                        Step::Block(BlockReason::CondWait(cid))
+                    } else if inner.model.mutexes[mid].holder.is_none() {
+                        // notified; reacquire the paired mutex
+                        inner.model.lock_mutex(tid, mid);
+                        Step::Done(())
+                    } else {
+                        Step::Block(BlockReason::MutexLock(mid))
+                    }
+                });
+                let real = match lock.data.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                Ok(MutexGuard { lock, real: Some(real), model: Some((h, mid)) })
+            }
+            None => {
+                let lock = guard.lock;
+                let real = guard.real.take().expect("guard holds the real lock");
+                drop(guard);
+                match self.real.wait(real) {
+                    Ok(g) => Ok(MutexGuard { lock, real: Some(g), model: None }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        lock,
+                        real: Some(p.into_inner()),
+                        model: None,
+                    })),
+                }
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        if let Some(h) = current() {
+            let epoch = h.ctl.epoch;
+            let tid = h.tid;
+            h.ctl.op(tid, "condvar.notify_one", |inner, _| {
+                let cid = ensure_condvar(inner, epoch, &self.reg);
+                let n = inner.model.condvars[cid].waiting.len();
+                if n > 0 {
+                    // which waiter wakes is a value decision
+                    let idx = inner.decide(PointKind::Value, n, false, &[]);
+                    let (wtid, _mid) = inner.model.condvars[cid].waiting.remove(idx);
+                    inner.threads[wtid].status = Status::Ready;
+                }
+                Step::Done(())
+            });
+        } else {
+            self.real.notify_one();
+        }
+    }
+
+    pub fn notify_all(&self) {
+        if let Some(h) = current() {
+            let epoch = h.ctl.epoch;
+            let tid = h.tid;
+            h.ctl.op(tid, "condvar.notify_all", |inner, _| {
+                let cid = ensure_condvar(inner, epoch, &self.reg);
+                let waiters = std::mem::take(&mut inner.model.condvars[cid].waiting);
+                for (wtid, _mid) in waiters {
+                    inner.threads[wtid].status = Status::Ready;
+                }
+                Step::Done(())
+            });
+        } else {
+            self.real.notify_all();
+        }
+    }
+}
+
+// ----------------------------------------------------------------- RwLock
+
+pub struct RwLock<T> {
+    class: Option<&'static str>,
+    reg: Reg,
+    data: StdRwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(t: T) -> RwLock<T> {
+        RwLock { class: None, reg: reg_new(), data: StdRwLock::new(t) }
+    }
+
+    pub fn new_named(class: &'static str, t: T) -> RwLock<T> {
+        RwLock { class: Some(class), reg: reg_new(), data: StdRwLock::new(t) }
+    }
+
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        if let Some(h) = current() {
+            let epoch = h.ctl.epoch;
+            let tid = h.tid;
+            let id = h.ctl.op(tid, "rwlock.read", |inner, _| {
+                let id = ensure_rwlock(inner, epoch, &self.reg, self.class);
+                if inner.model.rwlocks[id].writer.is_none() {
+                    inner.model.lock_rw_read(tid, id);
+                    Step::Done(id)
+                } else {
+                    Step::Block(BlockReason::RwRead(id))
+                }
+            });
+            let real = match self.data.read() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            Ok(RwLockReadGuard { real: Some(real), model: Some((h, id)) })
+        } else {
+            match self.data.read() {
+                Ok(g) => Ok(RwLockReadGuard { real: Some(g), model: None }),
+                Err(p) => Err(PoisonError::new(RwLockReadGuard {
+                    real: Some(p.into_inner()),
+                    model: None,
+                })),
+            }
+        }
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        if let Some(h) = current() {
+            let epoch = h.ctl.epoch;
+            let tid = h.tid;
+            let id = h.ctl.op(tid, "rwlock.write", |inner, _| {
+                let id = ensure_rwlock(inner, epoch, &self.reg, self.class);
+                let rw = &inner.model.rwlocks[id];
+                if rw.writer.is_none() && rw.readers.is_empty() {
+                    inner.model.lock_rw_write(tid, id);
+                    Step::Done(id)
+                } else {
+                    Step::Block(BlockReason::RwWrite(id))
+                }
+            });
+            let real = match self.data.write() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            Ok(RwLockWriteGuard { real: Some(real), model: Some((h, id)) })
+        } else {
+            match self.data.write() {
+                Ok(g) => Ok(RwLockWriteGuard { real: Some(g), model: None }),
+                Err(p) => Err(PoisonError::new(RwLockWriteGuard {
+                    real: Some(p.into_inner()),
+                    model: None,
+                })),
+            }
+        }
+    }
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    real: Option<std::sync::RwLockReadGuard<'a, T>>,
+    model: Option<(RunHandle, usize)>,
+}
+
+impl<T> std::ops::Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.real.as_ref().expect("guard holds the real lock")
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some((h, id)) = self.model.take() {
+            h.ctl.op_release(h.tid, "rwlock.read-unlock", |inner| {
+                inner.model.unlock_rw_read(h.tid, id);
+                if inner.model.rwlocks[id].readers.is_empty() {
+                    inner.wake_where(|r| matches!(r, BlockReason::RwWrite(i) if *i == id));
+                }
+            });
+        }
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    real: Option<std::sync::RwLockWriteGuard<'a, T>>,
+    model: Option<(RunHandle, usize)>,
+}
+
+impl<T> std::ops::Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.real.as_ref().expect("guard holds the real lock")
+    }
+}
+
+impl<T> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.real.as_mut().expect("guard holds the real lock")
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some((h, id)) = self.model.take() {
+            h.ctl.op_release(h.tid, "rwlock.write-unlock", |inner| {
+                inner.model.unlock_rw_write(h.tid, id);
+                inner.wake_where(|r| {
+                    matches!(r, BlockReason::RwWrite(i) if *i == id)
+                        || matches!(r, BlockReason::RwRead(i) if *i == id)
+                });
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- atomics
+
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    use std::sync::atomic as std_atomic;
+
+    use super::super::current;
+    use super::super::sched::{StoreRec, Step};
+    use super::{reg_new, reg_get, reg_set, Reg};
+
+    fn is_acquire(ord: Ordering) -> bool {
+        matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+    }
+
+    fn is_release(ord: Ordering) -> bool {
+        matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+    }
+
+    fn ensure_atomic(
+        inner: &mut super::Inner,
+        epoch: u64,
+        reg: &Reg,
+        init: &mut Option<impl FnOnce() -> u64>,
+    ) -> usize {
+        match reg_get(reg, epoch) {
+            Some(id) => id,
+            None => {
+                let v = init.take().map(|f| f()).unwrap_or(0);
+                let id = inner.model.alloc_atomic(v);
+                reg_set(reg, epoch, id);
+                id
+            }
+        }
+    }
+
+    /// Modeled load; `None` when the caller is not a model thread.
+    fn model_load(reg: &Reg, init: impl FnOnce() -> u64, ord: Ordering) -> Option<u64> {
+        let h = current()?;
+        let epoch = h.ctl.epoch;
+        let tid = h.tid;
+        let mut init = Some(init);
+        Some(h.ctl.op(tid, "atomic.load", move |inner, _| {
+            let id = ensure_atomic(inner, epoch, reg, &mut init);
+            // visibility floor: newest store this thread has observed
+            // (coherence) or that happens-before it (anything older is
+            // hidden by an intervening hb store)
+            let (first, len) = {
+                let a = &inner.model.atomics[id];
+                let my = &inner.model.clocks[tid];
+                let mut first = a.seen(tid);
+                for (j, s) in a.stores.iter().enumerate() {
+                    if j > first && s.clock.leq(my) {
+                        first = j;
+                    }
+                }
+                (first, a.stores.len())
+            };
+            let idx = if matches!(ord, Ordering::SeqCst) {
+                // approximation of the SC total order: the newest store
+                len - 1
+            } else {
+                let cands: Vec<usize> = (first..len).rev().collect();
+                inner.decide_store(&cands)
+            };
+            let (val, rel_clock) = {
+                let s = &inner.model.atomics[id].stores[idx];
+                let rel = if s.release && is_acquire(ord) { Some(s.clock.clone()) } else { None };
+                (s.val, rel)
+            };
+            if let Some(c) = rel_clock {
+                inner.model.clocks[tid].join(&c);
+            }
+            inner.model.atomics[id].note_seen(tid, idx);
+            Step::Done(val)
+        }))
+    }
+
+    /// Modeled store; returns false when not in a model run.
+    fn model_store(reg: &Reg, init: impl FnOnce() -> u64, val: u64, ord: Ordering) -> bool {
+        let h = match current() {
+            Some(h) => h,
+            None => return false,
+        };
+        let epoch = h.ctl.epoch;
+        let tid = h.tid;
+        let mut init = Some(init);
+        h.ctl.op(tid, "atomic.store", move |inner, _| {
+            let id = ensure_atomic(inner, epoch, reg, &mut init);
+            inner.model.clocks[tid].tick(tid);
+            let clock = inner.model.clocks[tid].clone();
+            let a = &mut inner.model.atomics[id];
+            a.stores.push(StoreRec { val, clock, release: is_release(ord) });
+            let idx = a.stores.len() - 1;
+            a.note_seen(tid, idx);
+            Step::Done(())
+        });
+        true
+    }
+
+    /// Modeled read-modify-write (reads the newest store, like the real
+    /// thing); returns the old value, or `None` when not in a model run.
+    fn model_rmw(reg: &Reg, init: impl FnOnce() -> u64, ord: Ordering, f: impl Fn(u64) -> u64) -> Option<u64> {
+        let h = current()?;
+        let epoch = h.ctl.epoch;
+        let tid = h.tid;
+        let mut init = Some(init);
+        Some(h.ctl.op(tid, "atomic.rmw", move |inner, _| {
+            let id = ensure_atomic(inner, epoch, reg, &mut init);
+            let (old, rel_clock) = {
+                let s = inner.model.atomics[id].stores.last().expect("atomic has an initial store");
+                let rel = if s.release && is_acquire(ord) { Some(s.clock.clone()) } else { None };
+                (s.val, rel)
+            };
+            if let Some(c) = rel_clock {
+                inner.model.clocks[tid].join(&c);
+            }
+            inner.model.clocks[tid].tick(tid);
+            let clock = inner.model.clocks[tid].clone();
+            let a = &mut inner.model.atomics[id];
+            a.stores.push(StoreRec { val: f(old), clock, release: is_release(ord) });
+            let idx = a.stores.len() - 1;
+            a.note_seen(tid, idx);
+            Step::Done(old)
+        }))
+    }
+
+    macro_rules! int_atomic {
+        ($name:ident, $prim:ty, $std:ty) => {
+            pub struct $name {
+                real: $std,
+                reg: Reg,
+            }
+
+            impl $name {
+                pub fn new(v: $prim) -> $name {
+                    $name { real: <$std>::new(v), reg: reg_new() }
+                }
+
+                pub fn load(&self, ord: Ordering) -> $prim {
+                    match model_load(&self.reg, || self.real.load(Ordering::SeqCst) as u64, ord) {
+                        Some(v) => v as $prim,
+                        None => self.real.load(ord),
+                    }
+                }
+
+                pub fn store(&self, v: $prim, ord: Ordering) {
+                    if model_store(&self.reg, || self.real.load(Ordering::SeqCst) as u64, v as u64, ord) {
+                        // mirror so fallback readers and re-registration
+                        // see the newest store
+                        self.real.store(v, Ordering::SeqCst);
+                    } else {
+                        self.real.store(v, ord);
+                    }
+                }
+
+                pub fn swap(&self, v: $prim, ord: Ordering) -> $prim {
+                    match model_rmw(&self.reg, || self.real.load(Ordering::SeqCst) as u64, ord, |_| v as u64) {
+                        Some(old) => {
+                            self.real.store(v, Ordering::SeqCst);
+                            old as $prim
+                        }
+                        None => self.real.swap(v, ord),
+                    }
+                }
+
+                pub fn fetch_add(&self, v: $prim, ord: Ordering) -> $prim {
+                    match model_rmw(&self.reg, || self.real.load(Ordering::SeqCst) as u64, ord, |old| {
+                        (old as $prim).wrapping_add(v) as u64
+                    }) {
+                        Some(old) => {
+                            self.real.store((old as $prim).wrapping_add(v), Ordering::SeqCst);
+                            old as $prim
+                        }
+                        None => self.real.fetch_add(v, ord),
+                    }
+                }
+
+                pub fn fetch_sub(&self, v: $prim, ord: Ordering) -> $prim {
+                    match model_rmw(&self.reg, || self.real.load(Ordering::SeqCst) as u64, ord, |old| {
+                        (old as $prim).wrapping_sub(v) as u64
+                    }) {
+                        Some(old) => {
+                            self.real.store((old as $prim).wrapping_sub(v), Ordering::SeqCst);
+                            old as $prim
+                        }
+                        None => self.real.fetch_sub(v, ord),
+                    }
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    self.real.fmt(f)
+                }
+            }
+        };
+    }
+
+    int_atomic!(AtomicU16, u16, std_atomic::AtomicU16);
+    int_atomic!(AtomicU64, u64, std_atomic::AtomicU64);
+    int_atomic!(AtomicUsize, usize, std_atomic::AtomicUsize);
+
+    pub struct AtomicBool {
+        real: std_atomic::AtomicBool,
+        reg: Reg,
+    }
+
+    impl AtomicBool {
+        pub fn new(v: bool) -> AtomicBool {
+            AtomicBool { real: std_atomic::AtomicBool::new(v), reg: reg_new() }
+        }
+
+        pub fn load(&self, ord: Ordering) -> bool {
+            match model_load(&self.reg, || self.real.load(Ordering::SeqCst) as u64, ord) {
+                Some(v) => v != 0,
+                None => self.real.load(ord),
+            }
+        }
+
+        pub fn store(&self, v: bool, ord: Ordering) {
+            if model_store(&self.reg, || self.real.load(Ordering::SeqCst) as u64, v as u64, ord) {
+                self.real.store(v, Ordering::SeqCst);
+            } else {
+                self.real.store(v, ord);
+            }
+        }
+
+        pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+            match model_rmw(&self.reg, || self.real.load(Ordering::SeqCst) as u64, ord, |_| v as u64) {
+                Some(old) => {
+                    self.real.store(v, Ordering::SeqCst);
+                    old != 0
+                }
+                None => self.real.swap(v, ord),
+            }
+        }
+    }
+
+    impl std::fmt::Debug for AtomicBool {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            self.real.fmt(f)
+        }
+    }
+}
+
+// --------------------------------------------------------------- channels
+
+pub mod mpsc {
+    pub use std::sync::mpsc::{RecvError, RecvTimeoutError, SendError, TryRecvError, TrySendError};
+
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use super::super::current;
+    use super::super::sched::{BlockReason, Step};
+    use super::{reg_new, reg_get, Reg};
+
+    struct ChanCtl {
+        reg: Reg,
+        cap: Option<usize>,
+    }
+
+    fn ensure_channel(inner: &mut super::Inner, epoch: u64, ctl: &ChanCtl) -> usize {
+        match reg_get(&ctl.reg, epoch) {
+            Some(id) => id,
+            None => {
+                let id = inner.model.alloc_channel(ctl.cap);
+                super::reg_set(&ctl.reg, epoch, id);
+                id
+            }
+        }
+    }
+
+    pub struct Sender<T> {
+        real: std::sync::mpsc::Sender<T>,
+        ctl: Arc<ChanCtl>,
+    }
+
+    pub struct SyncSender<T> {
+        real: std::sync::mpsc::SyncSender<T>,
+        ctl: Arc<ChanCtl>,
+    }
+
+    pub struct Receiver<T> {
+        real: std::sync::mpsc::Receiver<T>,
+        ctl: Arc<ChanCtl>,
+    }
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let ctl = Arc::new(ChanCtl { reg: reg_new(), cap: None });
+        (Sender { real: tx, ctl: ctl.clone() }, Receiver { real: rx, ctl })
+    }
+
+    /// Bounded channel.  The model treats `cap == 0` (rendezvous) as
+    /// capacity 1 — the spine never uses rendezvous channels.
+    pub fn sync_channel<T>(cap: usize) -> (SyncSender<T>, Receiver<T>) {
+        let (tx, rx) = std::sync::mpsc::sync_channel(cap.max(1));
+        let ctl = Arc::new(ChanCtl { reg: reg_new(), cap: Some(cap.max(1)) });
+        (SyncSender { real: tx, ctl: ctl.clone() }, Receiver { real: rx, ctl })
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            if let Some(h) = current() {
+                let epoch = h.ctl.epoch;
+                let tid = h.tid;
+                let mut slot = Some(t);
+                h.ctl.op(tid, "chan.send", |inner, _| {
+                    let id = ensure_channel(inner, epoch, &self.ctl);
+                    if !inner.model.channels[id].rx_alive {
+                        return Step::Done(Err(SendError(slot.take().expect("send payload"))));
+                    }
+                    inner.model.clocks[tid].tick(tid);
+                    let clock = inner.model.clocks[tid].clone();
+                    let ch = &mut inner.model.channels[id];
+                    ch.len += 1;
+                    ch.msg_clocks.push_back(clock);
+                    let _ = self.real.send(slot.take().expect("send payload"));
+                    inner.wake_where(|r| matches!(r, BlockReason::ChanRecv(i) if *i == id));
+                    Step::Done(Ok(()))
+                })
+            } else {
+                self.real.send(t)
+            }
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Sender<T> {
+            if let Some(h) = current() {
+                let epoch = h.ctl.epoch;
+                let tid = h.tid;
+                h.ctl.op(tid, "chan.clone", |inner, _| {
+                    let id = ensure_channel(inner, epoch, &self.ctl);
+                    inner.model.channels[id].senders += 1;
+                    Step::Done(())
+                });
+            }
+            Sender { real: self.real.clone(), ctl: self.ctl.clone() }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            drop_sender_side(&self.ctl);
+        }
+    }
+
+    impl<T> SyncSender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            if let Some(h) = current() {
+                let epoch = h.ctl.epoch;
+                let tid = h.tid;
+                let mut slot = Some(t);
+                h.ctl.op(tid, "chan.send", |inner, _| {
+                    let id = ensure_channel(inner, epoch, &self.ctl);
+                    let ch = &inner.model.channels[id];
+                    if !ch.rx_alive {
+                        return Step::Done(Err(SendError(slot.take().expect("send payload"))));
+                    }
+                    if let Some(cap) = ch.cap {
+                        if ch.len >= cap {
+                            return Step::Block(BlockReason::ChanSend(id));
+                        }
+                    }
+                    inner.model.clocks[tid].tick(tid);
+                    let clock = inner.model.clocks[tid].clone();
+                    let ch = &mut inner.model.channels[id];
+                    ch.len += 1;
+                    ch.msg_clocks.push_back(clock);
+                    let _ = self.real.try_send(slot.take().expect("send payload"));
+                    inner.wake_where(|r| matches!(r, BlockReason::ChanRecv(i) if *i == id));
+                    Step::Done(Ok(()))
+                })
+            } else {
+                self.real.send(t)
+            }
+        }
+
+        pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+            if let Some(h) = current() {
+                let epoch = h.ctl.epoch;
+                let tid = h.tid;
+                let mut slot = Some(t);
+                h.ctl.op(tid, "chan.try_send", |inner, _| {
+                    let id = ensure_channel(inner, epoch, &self.ctl);
+                    let ch = &inner.model.channels[id];
+                    if !ch.rx_alive {
+                        return Step::Done(Err(TrySendError::Disconnected(
+                            slot.take().expect("send payload"),
+                        )));
+                    }
+                    if let Some(cap) = ch.cap {
+                        if ch.len >= cap {
+                            return Step::Done(Err(TrySendError::Full(
+                                slot.take().expect("send payload"),
+                            )));
+                        }
+                    }
+                    inner.model.clocks[tid].tick(tid);
+                    let clock = inner.model.clocks[tid].clone();
+                    let ch = &mut inner.model.channels[id];
+                    ch.len += 1;
+                    ch.msg_clocks.push_back(clock);
+                    let _ = self.real.try_send(slot.take().expect("send payload"));
+                    inner.wake_where(|r| matches!(r, BlockReason::ChanRecv(i) if *i == id));
+                    Step::Done(Ok(()))
+                })
+            } else {
+                self.real.try_send(t)
+            }
+        }
+    }
+
+    impl<T> Clone for SyncSender<T> {
+        fn clone(&self) -> SyncSender<T> {
+            if let Some(h) = current() {
+                let epoch = h.ctl.epoch;
+                let tid = h.tid;
+                h.ctl.op(tid, "chan.clone", |inner, _| {
+                    let id = ensure_channel(inner, epoch, &self.ctl);
+                    inner.model.channels[id].senders += 1;
+                    Step::Done(())
+                });
+            }
+            SyncSender { real: self.real.clone(), ctl: self.ctl.clone() }
+        }
+    }
+
+    impl<T> Drop for SyncSender<T> {
+        fn drop(&mut self) {
+            drop_sender_side(&self.ctl);
+        }
+    }
+
+    fn drop_sender_side(ctl: &ChanCtl) {
+        if let Some(h) = current() {
+            if let Some(id) = reg_get(&ctl.reg, h.ctl.epoch) {
+                h.ctl.op_release(h.tid, "chan.tx-drop", |inner| {
+                    let ch = &mut inner.model.channels[id];
+                    ch.senders = ch.senders.saturating_sub(1);
+                    if ch.senders == 0 {
+                        inner.wake_where(|r| matches!(r, BlockReason::ChanRecv(i) if *i == id));
+                    }
+                });
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            if let Some(h) = current() {
+                let epoch = h.ctl.epoch;
+                let tid = h.tid;
+                h.ctl.op(tid, "chan.recv", |inner, _| {
+                    let id = ensure_channel(inner, epoch, &self.ctl);
+                    let ch = &inner.model.channels[id];
+                    if ch.len > 0 {
+                        let clock = {
+                            let ch = &mut inner.model.channels[id];
+                            ch.len -= 1;
+                            ch.msg_clocks.pop_front().unwrap_or_default()
+                        };
+                        inner.model.clocks[tid].join(&clock);
+                        let v = self.real.try_recv().expect("model says a message is queued");
+                        inner.wake_where(|r| matches!(r, BlockReason::ChanSend(i) if *i == id));
+                        Step::Done(Ok(v))
+                    } else if ch.senders == 0 {
+                        Step::Done(Err(RecvError))
+                    } else {
+                        Step::Block(BlockReason::ChanRecv(id))
+                    }
+                })
+            } else {
+                self.real.recv()
+            }
+        }
+
+        /// In a model run timeouts are not time: an empty queue returns
+        /// `Timeout` immediately instead of parking the thread.
+        pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+            if let Some(h) = current() {
+                let epoch = h.ctl.epoch;
+                let tid = h.tid;
+                h.ctl.op(tid, "chan.recv_timeout", |inner, _| {
+                    let id = ensure_channel(inner, epoch, &self.ctl);
+                    let ch = &inner.model.channels[id];
+                    if ch.len > 0 {
+                        let clock = {
+                            let ch = &mut inner.model.channels[id];
+                            ch.len -= 1;
+                            ch.msg_clocks.pop_front().unwrap_or_default()
+                        };
+                        inner.model.clocks[tid].join(&clock);
+                        let v = self.real.try_recv().expect("model says a message is queued");
+                        inner.wake_where(|r| matches!(r, BlockReason::ChanSend(i) if *i == id));
+                        Step::Done(Ok(v))
+                    } else if ch.senders == 0 {
+                        Step::Done(Err(RecvTimeoutError::Disconnected))
+                    } else {
+                        Step::Done(Err(RecvTimeoutError::Timeout))
+                    }
+                })
+            } else {
+                self.real.recv_timeout(timeout)
+            }
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            if let Some(h) = current() {
+                let epoch = h.ctl.epoch;
+                let tid = h.tid;
+                h.ctl.op(tid, "chan.try_recv", |inner, _| {
+                    let id = ensure_channel(inner, epoch, &self.ctl);
+                    let ch = &inner.model.channels[id];
+                    if ch.len > 0 {
+                        let clock = {
+                            let ch = &mut inner.model.channels[id];
+                            ch.len -= 1;
+                            ch.msg_clocks.pop_front().unwrap_or_default()
+                        };
+                        inner.model.clocks[tid].join(&clock);
+                        let v = self.real.try_recv().expect("model says a message is queued");
+                        inner.wake_where(|r| matches!(r, BlockReason::ChanSend(i) if *i == id));
+                        Step::Done(Ok(v))
+                    } else if ch.senders == 0 {
+                        Step::Done(Err(TryRecvError::Disconnected))
+                    } else {
+                        Step::Done(Err(TryRecvError::Empty))
+                    }
+                })
+            } else {
+                self.real.try_recv()
+            }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            if let Some(h) = current() {
+                if let Some(id) = reg_get(&self.ctl.reg, h.ctl.epoch) {
+                    h.ctl.op_release(h.tid, "chan.rx-drop", |inner| {
+                        inner.model.channels[id].rx_alive = false;
+                        inner.wake_where(|r| matches!(r, BlockReason::ChanSend(i) if *i == id));
+                    });
+                }
+            }
+        }
+    }
+}

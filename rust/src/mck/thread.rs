@@ -1,0 +1,166 @@
+//! Modeled `spawn`/`join` — the `std::thread` sliver the serving spine
+//! uses, scheduled by the heromck controller when a model run is active.
+//!
+//! Model threads are real OS threads (named `mck-t{tid}` so the quiet
+//! panic hook can recognize them), but they only ever *execute* while
+//! holding the controller baton; registration happens at the parent's
+//! `spawn` schedule point, so thread ids — and therefore decision
+//! traces — are deterministic.  Plain code between schedule points may
+//! overlap with a freshly spawned child that has not yet reached its
+//! first modeled operation; model tests must only share state through
+//! modeled primitives, which makes that overlap unobservable.
+
+use std::io;
+use std::sync::{Arc, Mutex as StdMutex};
+use std::time::Duration;
+
+use super::sched::{BlockReason, Controller, MckAbort, Status, Step};
+use super::{current, set_current, RunHandle};
+
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+type Slot<T> = Arc<StdMutex<Option<std::thread::Result<T>>>>;
+
+enum Imp<T> {
+    Real(std::thread::JoinHandle<T>),
+    Model {
+        child: usize,
+        os: Option<std::thread::JoinHandle<()>>,
+        slot: Slot<T>,
+    },
+}
+
+pub struct JoinHandle<T>(Imp<T>);
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.0 {
+            Imp::Real(h) => h.join(),
+            Imp::Model { child, os, slot } => {
+                if let Some(h) = current() {
+                    h.ctl.op(h.tid, "thread.join", |inner, _| {
+                        if inner.threads[child].status == Status::Finished {
+                            // join edge: the child's final clock
+                            // happens-before everything after the join
+                            let c = inner.model.clocks[child].clone();
+                            inner.model.clocks[h.tid].join(&c);
+                            Step::Done(())
+                        } else {
+                            Step::Block(BlockReason::Join(child))
+                        }
+                    });
+                }
+                if let Some(os) = os {
+                    let _ = os.join();
+                }
+                let mut g = match slot.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                g.take().expect("joined model thread left a result")
+            }
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        match &self.0 {
+            Imp::Real(h) => h.is_finished(),
+            Imp::Model { os, .. } => os.as_ref().map(|h| h.is_finished()).unwrap_or(true),
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct Builder {
+    name: Option<String>,
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        Builder { name: None }
+    }
+
+    pub fn name(mut self, name: String) -> Builder {
+        self.name = Some(name);
+        self
+    }
+
+    pub fn spawn<F, T>(self, f: F) -> io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        if let Some(h) = current() {
+            let parent = h.tid;
+            let child = h.ctl.op(parent, "thread.spawn", |inner, _| {
+                Step::Done(Controller::register_thread(inner, Some(parent)))
+            });
+            let slot: Slot<T> = Arc::new(StdMutex::new(None));
+            let ctl = h.ctl.clone();
+            let body_slot = slot.clone();
+            let os = std::thread::Builder::new()
+                .name(format!("mck-t{child}"))
+                .spawn(move || {
+                    set_current(Some(RunHandle { ctl: ctl.clone(), tid: child }));
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                    let panic_msg = match &result {
+                        Ok(_) => None,
+                        Err(p) if p.is::<MckAbort>() => None,
+                        Err(p) => Some(panic_message(p.as_ref())),
+                    };
+                    if !result.as_ref().err().map(|p| p.is::<MckAbort>()).unwrap_or(false) {
+                        let mut g = match body_slot.lock() {
+                            Ok(g) => g,
+                            Err(p) => p.into_inner(),
+                        };
+                        *g = Some(result);
+                    }
+                    set_current(None);
+                    ctl.thread_finished(child, panic_msg);
+                })?;
+            Ok(JoinHandle(Imp::Model { child, os: Some(os), slot }))
+        } else {
+            let mut b = std::thread::Builder::new();
+            if let Some(n) = self.name {
+                b = b.name(n);
+            }
+            Ok(JoinHandle(Imp::Real(b.spawn(f)?)))
+        }
+    }
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    Builder::new().spawn(f).expect("failed to spawn thread")
+}
+
+/// In a model run sleeping is just a schedule point — model time does
+/// not advance, but every interleaving a real sleep could allow is still
+/// reachable through the decision it introduces.
+pub fn sleep(dur: Duration) {
+    if let Some(h) = current() {
+        h.ctl.op(h.tid, "thread.sleep", |_, _| Step::Done(()));
+    } else {
+        std::thread::sleep(dur);
+    }
+}
+
+/// Same treatment as [`sleep`]: a pure schedule point in a model run.
+pub fn yield_now() {
+    if let Some(h) = current() {
+        h.ctl.op(h.tid, "thread.yield", |_, _| Step::Done(()));
+    } else {
+        std::thread::yield_now();
+    }
+}

@@ -42,11 +42,12 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{Arc, Condvar, Mutex, RwLock};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -823,7 +824,7 @@ impl EngineDevice {
             (EngineDevice::Fake { latency, .. }, EngineInputs::Fake { rows }) => {
                 // the fake "device" is busy for the scripted latency —
                 // blocking here gives tests a deterministic service rate
-                std::thread::sleep(*latency);
+                crate::sync::thread::sleep(*latency);
                 Ok(EnginePending::Fake { rows: *rows })
             }
             _ => unreachable!("device and inputs come from the same replica"),
@@ -1050,7 +1051,7 @@ impl Spawner {
             sweep: Arc::clone(&sweep),
             epoch,
         };
-        let join = std::thread::Builder::new()
+        let join = crate::sync::thread::Builder::new()
             .name(format!("zqhero-engine-{replica}"))
             .spawn(move || engine_main(ctx))
             .context("spawning engine thread")?;
@@ -1267,7 +1268,7 @@ impl EnginePool {
         });
         let sup = {
             let shared = Arc::clone(&shared);
-            std::thread::Builder::new()
+            crate::sync::thread::Builder::new()
                 .name("zqhero-supervisor".into())
                 .spawn(move || supervisor_main(shared))
                 .context("spawning supervisor thread")?
@@ -1400,7 +1401,7 @@ fn supervisor_main(shared: Arc<PoolShared>) {
         for r in 0..n {
             poll_replica(&shared, r, &mut last[r]);
         }
-        std::thread::sleep(tick);
+        crate::sync::thread::sleep(tick);
     }
 }
 
@@ -1682,14 +1683,14 @@ fn engine_main(ctx: EngineCtx) {
         // so a panic's unwind runs its drop-guard (ReplicaFailed out)
         if let Some((at, dur)) = faults.stall {
             if batch_no == at {
-                std::thread::sleep(dur);
+                crate::sync::thread::sleep(dur);
             }
         }
         if faults.panic_at == Some(batch_no) {
             panic!("fault injection: replica {replica} panics at batch {batch_no}");
         }
         if let Some(d) = faults.throttle {
-            std::thread::sleep(d);
+            crate::sync::thread::sleep(d);
         }
         // A poisoned queue means the supervisor declared this incarnation
         // dead (e.g. it stalled past the watchdog) and already reconciled
@@ -1722,7 +1723,7 @@ fn engine_main(ctx: EngineCtx) {
         };
         let t_job = Instant::now();
         if let Some(d) = faults.slow_upload {
-            std::thread::sleep(d);
+            crate::sync::thread::sleep(d);
         }
         // Stage 1: upload this batch's inputs (overlaps the previous
         // batch's device execution), then recycle the host buffers.  The

@@ -12,9 +12,8 @@
 //! cannot pin unbounded memory: overflow buffers are simply dropped and
 //! the shelf refills on demand.
 
-use std::sync::{Mutex, MutexGuard};
-
 use crate::data::PAD;
+use crate::sync::{Mutex, MutexGuard};
 
 /// One reusable host-side batch: `bucket * seq` token ids / type ids and
 /// the derived attention mask.  `real` tracks how many rows were filled

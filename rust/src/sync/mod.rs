@@ -1,0 +1,34 @@
+//! `crate::sync` — the sync-primitive facade for the concurrent serving
+//! spine (DESIGN.md §5.12).
+//!
+//! Normal builds re-export `std::sync` (and `std::thread`) verbatim:
+//! zero cost, zero behaviour change.  Under `--features heromck` the
+//! same names resolve to heromck's instrumented doubles
+//! ([`crate::mck::sync`], [`crate::mck::thread`]), so the spine's own
+//! locks, atomics, channels, and threads can be driven through the
+//! deterministic schedule explorer unchanged.
+//!
+//! `Arc` is always the real `std::sync::Arc` — reference counting is
+//! not a schedule point, and modeling it would only bloat traces.
+//!
+//! The concurrent spine (`coordinator/{server,batcher,governor,stats}`,
+//! `runtime/{engine,staging}`, `exec`) imports from here instead of
+//! `std::sync`.  Modules outside the model-checked spine (e.g.
+//! `coordinator/net`, which owns OS sockets heromck does not model)
+//! keep using `std` directly.
+
+#[cfg(not(feature = "heromck"))]
+pub use std::sync::{
+    atomic, mpsc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+#[cfg(not(feature = "heromck"))]
+pub use std::thread;
+
+#[cfg(feature = "heromck")]
+pub use crate::mck::sync::{
+    atomic, mpsc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+#[cfg(feature = "heromck")]
+pub use crate::mck::thread;
+
+pub use std::sync::Arc;

@@ -1,0 +1,278 @@
+//! heromck model tests for the crown-jewel concurrency invariants
+//! (DESIGN.md §5.12).
+//!
+//! Each test runs the real spine type (not a mock) under the modeled
+//! scheduler: `crate::sync` resolves to `zqhero::mck::sync` because this
+//! test only compiles with `--features heromck`, so the `DispatchState`
+//! atomics, the `Recorder` mutex, the governor cells, the staging
+//! shelves and the `ThreadPool` condvar are all schedule points heromck
+//! can exhaustively interleave (within the preemption/schedule bounds —
+//! see the soundness caveat in `mck::explore`).
+//!
+//! Mutation sensitivity (the reason these tests exist): delete the
+//! generation guard at the top of `DispatchState::complete`, or the
+//! `GovernorShared::publish` store, and the corresponding test below
+//! fails with a replayable `MCK_REPLAY=mck1....` schedule token.
+
+#![cfg(feature = "heromck")]
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use zqhero::coordinator::{GovernorShared, Recorder};
+use zqhero::exec::ThreadPool;
+use zqhero::mck::{self, Config};
+use zqhero::model::manifest::{PolicyId, TaskId};
+use zqhero::runtime::staging::StagingPool;
+use zqhero::runtime::DispatchState;
+use zqhero::sync::atomic::{AtomicUsize, Ordering};
+use zqhero::sync::{thread, Arc, Mutex};
+
+/// CI honours `MCK_SCHEDULES`; local runs get the defaults.
+fn cfg() -> Config {
+    Config::from_env()
+}
+
+// ---------------------------------------------------------------- dispatch
+
+/// The §5.10 incarnation protocol: a completion carrying a generation
+/// from *before* a `mark_dead` must not touch the revived replica's
+/// accounting.  One replica, one pinned group; three racing threads:
+///
+///   killer       mark_dead(0); revive(0)         (supervisor restart)
+///   re-assigner  assign(key) -> g2               (dispatch after restart)
+///   staler       complete(key, 0, g0)            (readback from the old
+///                                                 incarnation, swept)
+///
+/// In every schedule where the re-assign observed the new incarnation
+/// (`g2 == g0 + 1`), the stale complete must have been a no-op: the new
+/// incarnation's inflight count and pin survive.  Remove the generation
+/// check in `complete()` and the schedule killer -> re-assigner ->
+/// staler decrements the *new* incarnation's inflight to 0 — heromck
+/// finds it and prints the replay token.
+#[test]
+fn dispatch_stale_completion_is_a_no_op() {
+    mck::check("dispatch-stale-generation", cfg(), || {
+        let ds = Arc::new(DispatchState::new(1));
+        let key = (TaskId(0), PolicyId(0));
+        let (r0, g0) = ds.assign(key);
+        assert_eq!(r0, 0);
+
+        let killer = {
+            let ds = Arc::clone(&ds);
+            thread::spawn(move || {
+                ds.mark_dead(0);
+                ds.revive(0);
+            })
+        };
+        let reassign = {
+            let ds = Arc::clone(&ds);
+            thread::spawn(move || ds.assign(key))
+        };
+        let staler = {
+            let ds = Arc::clone(&ds);
+            thread::spawn(move || ds.complete(key, 0, g0))
+        };
+
+        killer.join().unwrap();
+        let (_, g2) = reassign.join().unwrap();
+        staler.join().unwrap();
+
+        if g2 == g0 + 1 {
+            // the re-assign landed on the revived incarnation; the stale
+            // complete (generation g0) must not have touched it
+            assert_eq!(
+                ds.inflight(0),
+                1,
+                "stale completion decremented the new incarnation's inflight"
+            );
+            assert_eq!(ds.pinned_groups(), 1, "stale completion unpinned the new group");
+        }
+        assert!(ds.alive(0));
+    });
+}
+
+// ---------------------------------------------------------------- recorder
+
+/// Ledger identity under interleaved terminal replies: however the
+/// completion / error / expiry threads interleave inside the slot
+/// mutex, `requests == completed + errors + expired + failed` holds in
+/// every observable snapshot order.
+#[test]
+fn recorder_ledger_identity_under_interleaving() {
+    mck::check("recorder-ledger-identity", cfg(), || {
+        let rec = Arc::new(Recorder::new(vec!["int8".to_string()], 1));
+        let p = PolicyId(0);
+        let terminals: Vec<_> = (0u8..3)
+            .map(|kind| {
+                let rec = Arc::clone(&rec);
+                thread::spawn(move || match kind {
+                    0 => rec.record_request(p, 900, 40, false),
+                    1 => rec.record_request(p, 900, 40, true),
+                    _ => rec.record_failed(p),
+                })
+            })
+            .collect();
+        for t in terminals {
+            t.join().unwrap();
+        }
+        let snap = rec.snapshot();
+        let s = &snap["int8"];
+        assert_eq!(s.requests, 3);
+        assert_eq!(
+            s.requests,
+            s.completed + s.errors + s.expired + s.failed,
+            "ledger identity broken: {s:?}"
+        );
+        assert_eq!((s.completed, s.errors, s.failed), (1, 1, 1));
+    });
+}
+
+// ---------------------------------------------------------------- governor
+
+/// The two `relaxed-ok` annotations in `GovernorShared` claim (a) a
+/// route read is always a value some `publish` actually stored — never
+/// torn, never invented — and (b) after the publisher is joined
+/// (happens-before), the new route is visible.  The model's relaxed
+/// semantics let the load return *any* coherent store, so (a) fails if
+/// a torn value were possible and (b) fails if `publish` is removed.
+#[test]
+fn governor_publish_effective_honors_relaxed_claims() {
+    mck::check("governor-relaxed-cells", cfg(), || {
+        let g = Arc::new(GovernorShared::new(2));
+        let writer = {
+            let g = Arc::clone(&g);
+            thread::spawn(move || g.publish(PolicyId(0), PolicyId(1)))
+        };
+        let reader = {
+            let g = Arc::clone(&g);
+            thread::spawn(move || g.effective(PolicyId(0)))
+        };
+        let seen = reader.join().unwrap();
+        assert!(
+            seen == PolicyId(0) || seen == PolicyId(1),
+            "racing read returned a route nobody published: {seen:?}"
+        );
+        writer.join().unwrap();
+        // join() synchronizes-with the writer: the downgrade is now the
+        // only coherent value left for this cell
+        assert_eq!(g.effective(PolicyId(0)), PolicyId(1), "published route not visible after join");
+        // the untouched cell still routes to itself
+        assert_eq!(g.effective(PolicyId(1)), PolicyId(1));
+    });
+}
+
+// ----------------------------------------------------------------- staging
+
+/// Shelf check-in/check-out between a batcher thread and an engine
+/// thread: the cap is never exceeded, a shelved buffer is never handed
+/// to two takers, and `take` always yields a buffer shaped for the
+/// requested cell no matter the interleaving.
+#[test]
+fn staging_shelf_checkin_checkout() {
+    mck::check("staging-shelves", cfg(), || {
+        let pool = Arc::new(StagingPool::new(&[128], &[4], 1));
+        let sides: Vec<_> = (0..2)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                thread::spawn(move || {
+                    let buf = pool.take(128, 4);
+                    assert_eq!((buf.seq, buf.bucket), (128, 4));
+                    pool.put(buf);
+                })
+            })
+            .collect();
+        for t in sides {
+            t.join().unwrap();
+        }
+        // cap is 1: whichever put lost the race was dropped, the winner
+        // rests on the shelf — never two, never a leak of the cap
+        assert!(pool.pooled() <= 1, "per-cell cap exceeded");
+        let again = pool.take(128, 4);
+        assert_eq!((again.seq, again.bucket), (128, 4));
+        assert_eq!(pool.pooled(), 0, "take left a phantom buffer shelved");
+    });
+}
+
+// --------------------------------------------------------------- exec pool
+
+/// `wait_idle` parks on the pool condvar until `completed == queued`.
+/// The hazard is the classic missed wakeup: a worker finishing the last
+/// job between the caller's count check and its park.  Under the model
+/// every such window is explored; a lost notify deadlocks the schedule
+/// and heromck reports it with the held-lock set.
+#[test]
+fn thread_pool_wait_idle_never_misses_the_wakeup() {
+    mck::check("pool-wait-idle", cfg(), || {
+        let pool = ThreadPool::new(1, "mdl");
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..2 {
+            let hits = Arc::clone(&hits);
+            assert!(pool.spawn(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.wait_idle();
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "wait_idle returned before the jobs ran");
+        assert_eq!(pool.completed(), 2);
+        assert_eq!(pool.pending(), 0);
+        drop(pool); // Stop + join must terminate in every schedule
+    });
+}
+
+// -------------------------------------------------------- lock-order witness
+
+/// Dynamic/static agreement (the tentpole cross-check): heromck records
+/// the runtime lock-acquisition order of a protocol model that mirrors
+/// the spine's documented nesting — a replica-slot critical section
+/// acquiring the job queue — using the same lock classes herolint
+/// extracts from `.expect("...")` labels.  Every edge the scheduler
+/// witnesses at runtime must already be in herolint's static
+/// `lock_edges` for `src/`, and the §5.11 spine edge must be witnessed
+/// by both sides.
+#[test]
+fn runtime_lock_order_witness_agrees_with_static_lock_edges() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = zqhero::lint::lint_tree(&src).expect("linting the source tree");
+    let static_edges: BTreeSet<(String, String)> = report
+        .analysis
+        .edges
+        .iter()
+        .map(|e| (e.from.clone(), e.to.clone()))
+        .collect();
+
+    let out = mck::check("lock-order-witness", cfg(), || {
+        let slot = Arc::new(Mutex::new_named("replica slot", 0u32));
+        let queue = Arc::new(Mutex::new_named("job queue", Vec::<u32>::new()));
+        let pollers: Vec<_> = (0..2)
+            .map(|i| {
+                let slot = Arc::clone(&slot);
+                let queue = Arc::clone(&queue);
+                thread::spawn(move || {
+                    // poll_replica shape: inspect the slot, then drain
+                    // into the queue while still holding it
+                    let mut s = slot.lock().expect("replica slot");
+                    *s += 1;
+                    queue.lock().expect("job queue").push(i);
+                })
+            })
+            .collect();
+        for t in pollers {
+            t.join().unwrap();
+        }
+        assert_eq!(*slot.lock().unwrap(), 2);
+        assert_eq!(queue.lock().unwrap().len(), 2);
+    });
+
+    assert!(!out.edges.is_empty(), "scheduler witnessed no lock nesting");
+    for edge in &out.edges {
+        assert!(
+            static_edges.contains(edge),
+            "runtime witnessed {edge:?} but herolint's static lock_edges never saw it \
+             — the model and the spine discipline have diverged"
+        );
+    }
+    let spine = ("replica slot".to_string(), "job queue".to_string());
+    assert!(out.edges.contains(&spine), "dynamic witness missed the §5.11 spine edge");
+    assert!(static_edges.contains(&spine), "static analysis lost the §5.11 spine edge");
+}

@@ -190,3 +190,77 @@ fn prop_histogram_percentile_monotone() {
         assert!(h.min_us() <= h.max_us());
     });
 }
+
+#[test]
+fn prop_lexer_fuzz_never_panics_and_lines_roundtrip() {
+    use zqhero::lint::lexer::lex;
+    // random soup of the constructs herolint's lexer special-cases: raw
+    // strings with arbitrary # fence counts, byte strings, nested block
+    // comments, lifetime-vs-char-literal quotes — plus unique sentinel
+    // idents whose reported line must equal 1 + the '\n' count before
+    // them in the source.  Then truncate at a random char boundary
+    // (mid-raw-string, mid-comment) and demand the lexer still returns.
+    forall("lexer-fuzz", 120, |r: &mut Rng| {
+        let mut src = String::new();
+        let mut sentinels: Vec<String> = Vec::new();
+        let n_frags = 1 + r.below(12);
+        for k in 0..n_frags {
+            match r.below(8) {
+                0 => {
+                    // raw string; body may hold quotes closed by fewer #s
+                    let f = r.below(4);
+                    let h = "#".repeat(f);
+                    let body = if f == 0 {
+                        "plain raw body → no quotes".to_string()
+                    } else {
+                        format!("a \" b \"{} c\nd", "#".repeat(f - 1))
+                    };
+                    src.push_str(&format!("let s = r{h}\"{body}\"{h};\n"));
+                }
+                1 => src.push_str("let b = b\"bytes \\x41 \\\" esc\";\n"),
+                2 => src.push_str("/* outer /* inner\n level */ still outer */ x();\n"),
+                3 => src.push_str("fn f<'a>(x: &'a str) -> &'static str { x }\n"),
+                4 => src.push_str("let c = '\\''; let d = 'x'; let e = '\\n';\n"),
+                5 => src.push_str("// plain note — not an annotation\n"),
+                6 => src.push_str("let q = m.lock().unwrap();\n"),
+                _ => src.push('\n'),
+            }
+            if r.bool() {
+                let name = format!("zqsent{k}");
+                src.push_str(&format!("\n{name}\n"));
+                sentinels.push(name);
+            }
+        }
+
+        // exact line round-trip on the well-formed source
+        let lexed = lex(&src);
+        for name in &sentinels {
+            let pos = src.find(name.as_str()).expect("sentinel is in the source");
+            let want = 1 + src[..pos].matches('\n').count() as u32;
+            let got = lexed
+                .tokens
+                .iter()
+                .find(|t| t.ident() == Some(name.as_str()))
+                .unwrap_or_else(|| panic!("sentinel {name} lost by the lexer"));
+            assert_eq!(got.line, want, "line drifted for {name} in:\n{src}");
+        }
+        let total_lines = 1 + src.matches('\n').count() as u32;
+        let mut prev = 1u32;
+        for t in &lexed.tokens {
+            assert!(t.line >= prev && t.line <= total_lines, "non-monotone line");
+            prev = t.line;
+        }
+
+        // truncation at an arbitrary char boundary must never panic and
+        // must keep the same line invariants on whatever tokens survive
+        let chars: Vec<char> = src.chars().collect();
+        let cut: String = chars[..r.below(chars.len() + 1)].iter().collect();
+        let lexed = lex(&cut);
+        let total_lines = 1 + cut.matches('\n').count() as u32;
+        let mut prev = 1u32;
+        for t in &lexed.tokens {
+            assert!(t.line >= prev && t.line <= total_lines, "non-monotone line after cut");
+            prev = t.line;
+        }
+    });
+}

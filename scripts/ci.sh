@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI gate for the rust L3 stack: build, tests, lints, formatting.
 #
-# Usage: scripts/ci.sh [--skip-clippy] [--skip-fmt] [--skip-lint]
+# Usage: scripts/ci.sh [--skip-clippy] [--skip-fmt] [--skip-lint] [--skip-mck]
 #
 # Integration tests and benches that need real artifacts self-skip when
 # `make artifacts` has not been run, so this script is safe on a bare
@@ -21,11 +21,13 @@ cd "$(dirname "$0")/.."
 SKIP_CLIPPY=0
 SKIP_FMT=0
 SKIP_LINT=0
+SKIP_MCK=0
 for arg in "$@"; do
     case "$arg" in
         --skip-clippy) SKIP_CLIPPY=1 ;;
         --skip-fmt) SKIP_FMT=1 ;;
         --skip-lint) SKIP_LINT=1 ;;
+        --skip-mck) SKIP_MCK=1 ;;
         *) echo "unknown flag: $arg" >&2; exit 2 ;;
     esac
 done
@@ -57,6 +59,21 @@ cargo test -q --test chaos_integration
 if [ "$SKIP_LINT" -eq 0 ]; then
     echo "==> cargo run --release -- lint"
     cargo run --release -- lint
+fi
+
+# heromck (DESIGN.md §5.12): the dynamic complement to herolint —
+# explore real thread schedules over the modeled `crate::sync` spine
+# and prove the dispatch/ledger/governor/staging/pool invariants within
+# the schedule budget.  The budget is pinned so the stage stays inside
+# CI time; a failure prints an MCK_REPLAY token that reproduces the
+# exact schedule.  Emits BENCH_lint_mck.json (schedule counts per model
+# plus the herolint finding/suppression snapshot) — a trajectory
+# artifact, not part of the gate.
+if [ "$SKIP_MCK" -eq 0 ]; then
+    echo "==> cargo test --features heromck --test mck_models (schedule-bounded)"
+    MCK_SCHEDULES="${MCK_SCHEDULES:-2000}" \
+    MCK_BENCH_JSON="$PWD/BENCH_lint_mck.json" \
+        cargo test -q --features heromck --test mck_models
 fi
 
 # Artifact-gated serving smoke: the integration suites already ran
