@@ -32,8 +32,10 @@ fn main() {
                     key: zqhero::coordinator::GroupKey {
                         task: TaskId((i % 3) as u16),
                         policy: PolicyId((i % 2) as u16),
+                        version: 0,
                     },
                     requested: PolicyId((i % 2) as u16),
+                    seq_bucket: 128,
                     ids: Vec::new(),
                     type_ids: Vec::new(),
                     enqueued: t0,

@@ -204,7 +204,7 @@ mod tests {
     }
 
     fn key(task: u16, policy: u16) -> GroupKey {
-        GroupKey { task: TaskId(task), policy: PolicyId(policy) }
+        GroupKey { task: TaskId(task), policy: PolicyId(policy), version: 0 }
     }
 
     fn req(id: u64, task: u16, policy: u16, at: Instant) -> Request {

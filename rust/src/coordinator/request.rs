@@ -112,6 +112,11 @@ impl RequestSpec {
 pub struct GroupKey {
     pub task: TaskId,
     pub policy: PolicyId,
+    /// Manifest version this request was admitted under (hot reload,
+    /// DESIGN.md §5.13).  Part of the key so a batch never mixes
+    /// versions: requests admitted before a reload drain on the old
+    /// version's cells while new admissions ride the new one.
+    pub version: u32,
 }
 
 #[derive(Debug)]
@@ -214,6 +219,11 @@ pub struct Timing {
     /// cross-replica FIFO witness — same-replica batches of a group
     /// execute in submit order.
     pub engine_seq: u64,
+    /// time the batch waited on executable residency before its upload
+    /// (0 when the cell was already resident).  A miss-caused slow
+    /// request is attributable here instead of inflating `engine_us`/
+    /// `upload_us` (DESIGN.md §5.13).
+    pub load_wait_us: u64,
 }
 
 #[cfg(test)]

@@ -33,7 +33,7 @@ use crate::model::manifest::{Manifest, ModeId, PolicyId, TaskId};
 use crate::model::Container;
 use crate::runtime::engine::{
     CancelCheck, CancelledBeforeSubmit, Completion, EngineOptions, EnginePool, FaultPlan,
-    InferDone, InferJob, ReplicaFailed, RestartPolicy,
+    InferDone, InferJob, ReplicaFailed, RestartPolicy, VersionPayload,
 };
 use crate::runtime::staging::StagingPool;
 
@@ -91,6 +91,18 @@ pub struct ServerConfig {
     /// on.  Checkpoint preloading is skipped (routes resolve against the
     /// manifest only).  Never set in production.
     pub fake_engine: Option<Duration>,
+    /// Per-replica resident executable-cell budget (DESIGN.md §5.13):
+    /// cold (mode, seq bucket, batch bucket) cells LRU-evict past this
+    /// count; pinned cells are exempt.  `None` = unbounded.
+    pub max_resident_cells: Option<usize>,
+    /// Per-replica resident executable byte budget (artifact sizes).
+    pub max_resident_bytes: Option<usize>,
+    /// Pin the *full* (mode, seq bucket, batch bucket) grid at startup —
+    /// the pre-residency eager behavior, kept for A/B benchmarking
+    /// (`serve-bench --residency` measures exactly this trade).  The
+    /// default pins only each route's (exec mode, seq bucket,
+    /// max-batch bucket) cells; everything else loads on demand.
+    pub pin_full_grid: bool,
 }
 
 impl Default for ServerConfig {
@@ -111,6 +123,9 @@ impl Default for ServerConfig {
             restart: RestartPolicy::default(),
             fault_plan: FaultPlan::default(),
             fake_engine: None,
+            max_resident_cells: None,
+            max_resident_bytes: None,
+            pin_full_grid: false,
         }
     }
 }
@@ -218,15 +233,117 @@ pub struct Coordinator {
     next_id: AtomicU64,
     seq: usize,
     num_labels: usize,
+    /// Startup inputs kept for hot reload: `reload` re-reads the
+    /// manifest at `artifacts` and rebuilds the same routes against it.
+    artifacts: std::path::PathBuf,
+    routes: Vec<(String, String)>,
+    /// Admission-visible manifest version (DESIGN.md §5.13).  Stored
+    /// only after `push_version` broadcast the payload, so a request
+    /// stamped with version N is always behind the `Reload(N)` message
+    /// in every replica queue.  (`AtomicU64` because the heromck facade
+    /// models no `AtomicU32`; the value is a `u32`.)
+    current_version: AtomicU64,
     pub config: ServerConfig,
+}
+
+/// Expand routes (plus governor degradation chains), read each
+/// (task, exec mode) checkpoint, and derive the pin set — everything
+/// version-specific the engine needs from one manifest.  `start` and
+/// `reload` share this, so a reloaded version installs exactly what a
+/// fresh start against the same manifest would.
+///
+/// The pin set is the cells the configured routes actually serve:
+/// each *requested* route's exec mode, across every seq bucket, at the
+/// `max_batch` batch bucket.  Governor chain rungs are deliberately not
+/// pinned — their checkpoints are resident, but their executables load
+/// on demand (or warm on a governed steer), which is what broke the old
+/// `(mode x seq x batch) x replicas` preload cross-product.
+/// `pin_full_grid` restores the old eager behavior for A/B benches.
+fn build_version_payload(
+    man: &Arc<Manifest>,
+    routes: &[(String, String)],
+    config: &ServerConfig,
+    version: u32,
+) -> Result<(Arc<VersionPayload>, Vec<bool>)> {
+    // expand routes with governor degradation targets (uniform
+    // policies of cheaper modes), then dedupe by (task, exec mode)
+    let mut expanded: Vec<(String, String)> = Vec::new();
+    let mut pin_modes = std::collections::BTreeSet::new();
+    for (task, policy) in routes {
+        expanded.push((task.clone(), policy.clone()));
+        pin_modes.insert(man.policy(policy)?.exec_mode.0);
+        if config.governor.is_some() {
+            let pid = man.policy_id(policy)?;
+            for step in man.downgrade_chain(pid) {
+                expanded.push((task.clone(), man.policy_name(step).to_string()));
+            }
+        }
+    }
+
+    // load quantized/fp checkpoints from disk, one per (task, exec
+    // mode) — routes naming policies with the same exec mode dedupe.
+    // Under a fake engine there is nothing to read: routes still
+    // resolve and mark their slots resident, but no Container leaves
+    // disk and the fake device accepts any preload set.
+    let mut preload = Vec::new();
+    let mut modes_used = std::collections::BTreeSet::new();
+    let mut loaded = vec![false; man.num_tasks() * man.num_modes()];
+    for (task, policy) in &expanded {
+        let t = man.task(task)?;
+        let exec = man.policy(policy)?.exec_mode;
+        let mode = man.mode_name(exec).to_string();
+        let slot = route_slot(man.num_modes(), man.task_id(task)?, exec);
+        if loaded[slot] {
+            continue;
+        }
+        loaded[slot] = true;
+        modes_used.insert(exec.0);
+        if config.fake_engine.is_some() {
+            continue;
+        }
+        let rel = t.checkpoint_rel(&mode);
+        let path = man.path(&rel);
+        let ckpt = Container::read_file(&path)
+            .with_context(|| format!("loading checkpoint {path:?} (run `repro quantize` first?)"))?
+            .reordered(&man.mode(&mode)?.params)?;
+        preload.push((task.clone(), mode.clone(), ckpt));
+    }
+
+    let pins: Vec<(u16, usize, usize)> = if config.pin_full_grid {
+        modes_used
+            .iter()
+            .flat_map(|m| {
+                man.seq_buckets.iter().flat_map(move |s| {
+                    man.buckets.iter().map(move |b| (*m, *s, *b))
+                })
+            })
+            .collect()
+    } else {
+        let bucket = man.bucket_for(config.max_batch);
+        pin_modes
+            .iter()
+            .flat_map(|m| man.seq_buckets.iter().map(move |s| (*m, *s, bucket)))
+            .collect()
+    };
+
+    let payload = Arc::new(VersionPayload {
+        version,
+        manifest: Arc::clone(man),
+        preload: Arc::new(preload),
+        pins: Arc::new(pins),
+    });
+    Ok((payload, loaded))
 }
 
 impl Coordinator {
     /// Load checkpoints for the given (task, policy) routes — mode names
-    /// work as uniform policies — spawn the engine and batcher, and
-    /// pre-compile every (exec mode, bucket) executable.  With the
-    /// governor enabled, each route's degradation chain is loaded too:
-    /// a downgrade must never route to a cold checkpoint.
+    /// work as uniform policies — spawn the engine and batcher, and pin
+    /// each route's (exec mode, seq bucket, max-batch bucket) cells;
+    /// other grid cells compile on first demand under the residency
+    /// budget (DESIGN.md §5.13).  With the governor enabled, each
+    /// route's degradation chain's *checkpoints* are loaded too — a
+    /// downgrade must never route to a cold checkpoint — but chain
+    /// executables load on demand.
     pub fn start(
         artifacts: std::path::PathBuf,
         routes: &[(String, String)],
@@ -252,69 +369,26 @@ impl Coordinator {
             }));
         }
 
-        // expand routes with governor degradation targets (uniform
-        // policies of cheaper modes), then dedupe by (task, exec mode)
-        let mut expanded: Vec<(String, String)> = Vec::new();
-        for (task, policy) in routes {
-            expanded.push((task.clone(), policy.clone()));
-            if config.governor.is_some() {
-                let pid = manifest.policy_id(policy)?;
-                for step in manifest.downgrade_chain(pid) {
-                    expanded.push((task.clone(), manifest.policy_name(step).to_string()));
-                }
-            }
-        }
-
-        // load quantized/fp checkpoints from disk, one per (task, exec
-        // mode) — routes naming policies with the same exec mode dedupe.
-        // Under a fake engine there is nothing to read: routes still
-        // resolve and mark their slots resident, but no Container leaves
-        // disk and the fake device accepts any preload set.
-        let mut preload = Vec::new();
-        let mut modes_used = std::collections::BTreeSet::new();
-        let mut loaded = vec![false; manifest.num_tasks() * manifest.num_modes()];
-        for (task, policy) in &expanded {
-            let t = manifest.task(task)?;
-            let exec = manifest.policy(policy)?.exec_mode;
-            let mode = manifest.mode_name(exec).to_string();
-            let slot = route_slot(manifest.num_modes(), manifest.task_id(task)?, exec);
-            if loaded[slot] {
-                continue;
-            }
-            loaded[slot] = true;
-            modes_used.insert(mode.clone());
-            if config.fake_engine.is_some() {
-                continue;
-            }
-            let rel = t.checkpoint_rel(&mode);
-            let path = manifest.path(&rel);
-            let ckpt = Container::read_file(&path)
-                .with_context(|| {
-                    format!("loading checkpoint {path:?} (run `repro quantize` first?)")
-                })?
-                .reordered(&manifest.mode(&mode)?.params)?;
-            preload.push((task.clone(), mode.clone(), ckpt));
-        }
-        // precompile the full (mode, seq bucket, batch bucket) grid so
-        // the serving hot path never compiles, whichever length class a
-        // request lands in
-        let precompile: Vec<(String, usize, usize)> = modes_used
-            .iter()
-            .flat_map(|m| {
-                seq_buckets.iter().flat_map(move |s| {
-                    buckets.iter().map(move |b| (m.clone(), *s, *b))
-                })
-            })
-            .collect();
+        let man = Arc::new(manifest);
+        // version 0's payload: route checkpoints + the startup pin set
+        // (only the pin set compiles before ready — DESIGN.md §5.13)
+        let (payload, loaded) = build_version_payload(&man, routes, &config, 0)?;
 
         let pool = Arc::new(ThreadPool::new(config.completion_workers, "zqh-complete"));
         let staging =
             Arc::new(StagingPool::new(&seq_buckets, &buckets, config.staging_per_cell));
         let replicas = config.replicas.max(1);
+        // the recorder exists before the pool so its event hook rides
+        // along into spawn: supervision telemetry AND the startup pin
+        // loads land in the ledger (DESIGN.md §5.10/§5.13 — the
+        // residency smoke asserts startup loads == the pin set)
+        let recorder = Arc::new(Recorder::new(man.policy_order.clone(), replicas));
+        let hook = {
+            let rec = Arc::clone(&recorder);
+            Arc::new(move |ev| rec.record_pool_event(ev)) as crate::runtime::engine::PoolEventHook
+        };
         let engine = Arc::new(EnginePool::spawn(
-            artifacts,
-            preload,
-            precompile,
+            payload,
             Arc::clone(&pool),
             Arc::clone(&staging),
             EngineOptions {
@@ -324,17 +398,11 @@ impl Coordinator {
                 restart: config.restart.clone(),
                 fault_plan: config.fault_plan.clone(),
                 fake: config.fake_engine,
+                max_resident_cells: config.max_resident_cells,
+                max_resident_bytes: config.max_resident_bytes,
             },
+            Some(hook),
         )?);
-        let man = Arc::new(manifest);
-        let recorder = Arc::new(Recorder::new(man.policy_order.clone(), replicas));
-        // supervision telemetry: failures/restarts/exclusions/heartbeats
-        // flow from the supervisor thread into the recorder's
-        // replica-health ledger (DESIGN.md §5.10)
-        {
-            let rec = Arc::clone(&recorder);
-            engine.set_event_hook(Arc::new(move |ev| rec.record_pool_event(ev)));
-        }
         let depth = Arc::new(AtomicUsize::new(0));
 
         // governor: pure machine on the batcher thread, shared effective
@@ -381,8 +449,43 @@ impl Coordinator {
             next_id: AtomicU64::new(0),
             seq,
             num_labels,
+            artifacts,
+            routes: routes.to_vec(),
+            current_version: AtomicU64::new(0),
             config,
         })
+    }
+
+    /// Hot-reload the manifest at the startup `artifacts` path
+    /// (DESIGN.md §5.13): the new manifest must be grid-compatible
+    /// (identical mode/policy/task orders and bucket grids — a reload is
+    /// a *weights/artifact* refresh; grid changes need a restart).  The
+    /// new version's checkpoints and pin set are broadcast to every
+    /// replica first; only then does the admission version advance, so
+    /// new requests route to the new version while in-flight requests
+    /// drain on the old one, whose cells unpin and age out via LRU.
+    /// Returns the new version number.
+    pub fn reload(&self) -> Result<u32> {
+        let next = Manifest::load(&self.artifacts)?;
+        self.man
+            .grid_compatible(&next)
+            .context("manifest changed incompatibly; hot reload refused")?;
+        let next = Arc::new(next);
+        let version = self.current_version.load(Ordering::SeqCst) as u32 + 1;
+        let (payload, _loaded) = build_version_payload(&next, &self.routes, &self.config, version)?;
+        // order matters: ledger slots exist before any event can carry
+        // the new version; replicas hold the payload before any request
+        // can be stamped with it
+        self.recorder.register_version(version);
+        self.engine().push_version(payload);
+        self.current_version.store(version as u64, Ordering::SeqCst);
+        Ok(version)
+    }
+
+    /// The admission-visible manifest version (requests admitted now are
+    /// stamped with it).
+    pub fn current_version(&self) -> u32 {
+        self.current_version.load(Ordering::SeqCst) as u32
     }
 
     /// Submit a typed request.  Policy references are interned here —
@@ -435,9 +538,24 @@ impl Coordinator {
             Some(g) => {
                 let eff = g.effective(requested);
                 let exec = self.man.policy_by_id(eff).exec_mode;
-                if eff != requested
-                    && !self.loaded[route_slot(self.man.num_modes(), key.task, exec)]
-                {
+                if eff == requested {
+                    eff
+                } else if !self.loaded[route_slot(self.man.num_modes(), key.task, exec)] {
+                    requested
+                } else if !self.engine().any_resident(key.version, exec, seq_bucket) {
+                    // the governed rung's executable cell is cold on
+                    // every replica: a downshifted batch would stall the
+                    // pressure path behind a compile — the opposite of
+                    // what the governor is for.  Serve the requested
+                    // route now and warm the rung in the background; the
+                    // steer takes effect once the cell is resident
+                    // (DESIGN.md §5.13).
+                    self.engine().warm(
+                        key.version,
+                        exec,
+                        seq_bucket,
+                        self.man.bucket_for(self.config.max_batch),
+                    );
                     requested
                 } else {
                     eff
@@ -453,7 +571,7 @@ impl Coordinator {
         let busy = || SubmitError::Busy { queue_cap: self.config.queue_cap };
         if self.depth.fetch_add(1, Ordering::SeqCst) >= self.config.queue_cap {
             self.depth.fetch_sub(1, Ordering::SeqCst);
-            self.recorder.record_shed(requested);
+            self.recorder.record_shed_at(key.version, requested);
             return Err(busy());
         }
         let now = Instant::now();
@@ -462,7 +580,7 @@ impl Coordinator {
             // relaxed-ok: pure id allocation — uniqueness is all that
             // matters and fetch_add gives it at any ordering
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            key: GroupKey { task: key.task, policy: effective },
+            key: GroupKey { task: key.task, policy: effective, version: key.version },
             requested,
             seq_bucket,
             ids,
@@ -476,7 +594,7 @@ impl Coordinator {
         match self.tx.as_ref().expect("live").try_send(req) {
             Ok(()) => {
                 if effective != requested {
-                    self.recorder.record_governed(requested);
+                    self.recorder.record_governed_at(key.version, requested);
                 }
                 Ok(rx)
             }
@@ -484,7 +602,7 @@ impl Coordinator {
                 // unreachable by construction (reservations cap channel
                 // occupancy), kept as defense in depth
                 self.depth.fetch_sub(1, Ordering::SeqCst);
-                self.recorder.record_shed(requested);
+                self.recorder.record_shed_at(key.version, requested);
                 Err(busy())
             }
             Err(TrySendError::Disconnected(_)) => {
@@ -529,7 +647,8 @@ impl Coordinator {
             let detail = format!(" — policy executes mode {:?}", self.man.mode_name(exec));
             return Err(no_ckpt(&detail));
         }
-        Ok(GroupKey { task: task_id, policy: pid })
+        let version = self.current_version.load(Ordering::SeqCst) as u32;
+        Ok(GroupKey { task: task_id, policy: pid, version })
     }
 
     /// The coordinator-side manifest (policy/route tables; parity tests
@@ -724,6 +843,7 @@ fn dispatch(
         .map(|latest| Box::new(move || Instant::now() >= latest) as CancelCheck);
 
     let policy = batch.key.policy;
+    let version = batch.key.version;
     let requests = batch.requests;
     let recorder = Arc::clone(recorder);
     let depth = Arc::clone(depth);
@@ -750,7 +870,8 @@ fn dispatch(
                     }
                 };
                 let nl = logits.len() / bucket;
-                recorder.record_batch(
+                recorder.record_batch_at(
+                    version,
                     policy,
                     real,
                     real_tokens,
@@ -774,8 +895,15 @@ fn dispatch(
                         batch_seq: seq_no,
                         replica: done.replica,
                         engine_seq: done.exec_seq,
+                        load_wait_us: done.load_wait_us,
                     };
-                    recorder.record_request(r.requested, timing.total_us, timing.queue_us, false);
+                    recorder.record_request_at(
+                        version,
+                        r.requested,
+                        timing.total_us,
+                        timing.queue_us,
+                        false,
+                    );
                     let _ = r.reply.send(Response {
                         id: r.id,
                         policy,
@@ -816,7 +944,7 @@ fn dispatch(
         }
     });
 
-    let job = InferJob { task: batch.key.task, policy, staging: host, cancel, done };
+    let job = InferJob { task: batch.key.task, policy, version, staging: host, cancel, done };
     if let Err(job) = engine.submit(job) {
         let job = *job;
         staging.put(job.staging);
@@ -828,7 +956,7 @@ fn dispatch(
 /// completions release all their reservations up front (panic safety),
 /// and the batcher-side expiry path decrements explicitly in `finish`.
 fn send_error(r: &Request, policy: PolicyId, recorder: &Recorder, msg: &str) {
-    recorder.record_request(r.requested, 0, 0, true);
+    recorder.record_request_at(r.key.version, r.requested, 0, 0, true);
     let _ = r.reply.send(Response {
         id: r.id,
         policy,
@@ -845,7 +973,7 @@ fn send_error(r: &Request, policy: PolicyId, recorder: &Recorder, msg: &str) {
 /// overload ledger still reconciles exactly under chaos
 /// (admitted = completed + shed + expired + failed).
 fn send_failed(r: &Request, policy: PolicyId, recorder: &Recorder) {
-    recorder.record_failed(r.requested);
+    recorder.record_failed_at(r.key.version, r.requested);
     let _ = r.reply.send(Response {
         id: r.id,
         policy,
@@ -862,7 +990,7 @@ fn send_failed(r: &Request, policy: PolicyId, recorder: &Recorder) {
 /// never happens after device work starts).
 fn send_expired(r: &Request, recorder: &Recorder, now: Instant) {
     let queue_us = now.duration_since(r.enqueued).as_micros() as u64;
-    recorder.record_expired(r.requested, queue_us);
+    recorder.record_expired_at(r.key.version, r.requested, queue_us);
     let _ = r.reply.send(Response {
         id: r.id,
         policy: r.key.policy,

@@ -178,24 +178,71 @@ pub struct ReplicaStats {
     pub excluded: bool,
 }
 
-/// Both slot tables behind the recorder's single mutex: per-policy and
-/// per-replica counters update atomically together, so "per-replica
-/// batch counts sum to per-policy batch totals" holds for every
-/// observer, not just quiescent ones.
+/// Per-replica executable-residency ledger (DESIGN.md §5.13), fed by
+/// `CellLoaded`/`CellEvicted`/`ResidencyLookup` pool events: how often
+/// batches found their cell resident, what misses cost, and how the
+/// LRU budget churned.  The reconciliation identity the property tests
+/// pin: `hits + misses == lookups` and every miss either loaded or
+/// failed — `loads <= misses` (warm/pin loads are not lookups, so
+/// `loads` can also exceed `misses` on a warm-heavy profile; the table
+/// reports both rather than deriving one from the other).
+#[derive(Debug, Default, Clone)]
+pub struct ResidencyStats {
+    /// Batch lookups that found their cell resident.
+    pub hits: u64,
+    /// Batch lookups that had to load (or wait on a failed load).
+    pub misses: u64,
+    /// Cells that became resident (pins, warms, and demand misses).
+    pub loads: u64,
+    /// The subset of `loads` that were pinned cells.
+    pub pinned_loads: u64,
+    /// LRU evictions plus version-drain drops.
+    pub evictions: u64,
+    /// Resident cells after the most recent load/evict event.
+    pub resident: usize,
+    /// Compile+upload latency per load.
+    pub load_us: Histogram,
+    /// What miss-path batches actually waited on the residency table.
+    pub wait_us: Histogram,
+}
+
+impl ResidencyStats {
+    fn active(&self) -> bool {
+        self.hits > 0 || self.misses > 0 || self.loads > 0 || self.evictions > 0
+    }
+}
+
+/// All slot tables behind the recorder's single mutex: per-policy,
+/// per-replica, and residency counters update atomically together, so
+/// "per-replica batch counts sum to per-policy batch totals" holds for
+/// every observer, not just quiescent ones.  `names` lives here too:
+/// hot manifest reload appends a whole block of versioned policy slots
+/// (`"fp@v1"`, ...), and the names must grow under the same lock as the
+/// stats they label.
 struct Slots {
+    /// Slot names: version 0's block carries the bare policy names;
+    /// version N's block (registered on reload) carries `"name@vN"`.
+    names: Vec<String>,
     policies: Vec<PolicyStats>,
     replicas: Vec<ReplicaStats>,
+    residency: Vec<ResidencyStats>,
 }
 
 /// Shared recorder (single mutex — recording is tiny next to inference).
-/// Slots are dense by `PolicyId`; policy names are kept only for
-/// rendering.  Replica slots are dense by replica index, fixed at
-/// startup; per-replica batch counts always sum to the per-policy batch
-/// totals (every batch is recorded once, with the replica that ran it,
-/// under one lock).
+/// Slots are dense by `(version, PolicyId)`: version v's block starts at
+/// `v * base` where `base` is the manifest's policy count, so each
+/// manifest version reconciles on its own ledger
+/// (`requests == completed + errors + expired + failed` per slot).
+/// Replica slots are dense by replica index, fixed at startup;
+/// per-replica batch counts always sum to the per-policy batch totals
+/// (every batch is recorded once, with the replica that ran it, under
+/// one lock).
 pub struct Recorder {
     start: Instant,
-    policies: Vec<String>,
+    /// Policies per version block (the manifest's policy count — reload
+    /// requires an identical policy order, so every version's block is
+    /// the same width).
+    base: usize,
     inner: Mutex<Slots>,
 }
 
@@ -204,11 +251,50 @@ impl Recorder {
     /// (uniform mode policies first, then the `policies` section).
     /// `replicas` is the engine-pool size (min 1).
     pub fn new(policies: Vec<String>, replicas: usize) -> Self {
+        let base = policies.len();
         let slots = Slots {
             policies: policies.iter().map(|_| PolicyStats::default()).collect(),
+            names: policies,
             replicas: vec![ReplicaStats::default(); replicas.max(1)],
+            residency: vec![ResidencyStats::default(); replicas.max(1)],
         };
-        Recorder { start: Instant::now(), policies, inner: Mutex::new(slots) }
+        Recorder { start: Instant::now(), base, inner: Mutex::new(slots) }
+    }
+
+    /// Ensure slot blocks exist through `version` (called by the
+    /// coordinator *before* it publishes a reloaded version, so no event
+    /// can arrive carrying an unregistered version; the record paths
+    /// also self-heal under the same lock as defense in depth).
+    pub fn register_version(&self, version: u32) {
+        let mut g = self.slots();
+        self.grow_to(&mut g, version);
+    }
+
+    fn grow_to(&self, g: &mut Slots, version: u32) {
+        if self.base == 0 {
+            return;
+        }
+        let want = (version as usize + 1) * self.base;
+        while g.policies.len() < want {
+            let s = g.policies.len();
+            let name = format!("{}@v{}", g.names[s % self.base], s / self.base);
+            g.names.push(name);
+            g.policies.push(PolicyStats::default());
+        }
+    }
+
+    /// The `(version, policy)` slot, growing the version's block if it
+    /// does not exist yet.
+    fn policy_slot<'a>(
+        &self,
+        g: &'a mut Slots,
+        version: u32,
+        policy: PolicyId,
+    ) -> &'a mut PolicyStats {
+        self.grow_to(g, version);
+        // slots are policy_order-sized per block; a foreign PolicyId is
+        // a bug, not a slot
+        &mut g.policies[version as usize * self.base + policy.index()]
     }
 
     /// Lock the slot tables, recovering from poisoning.  Every mutation
@@ -224,9 +310,23 @@ impl Recorder {
     }
 
     pub fn record_request(&self, policy: PolicyId, total_us: u64, queue_us: u64, err: bool) {
+        self.record_request_at(0, policy, total_us, queue_us, err);
+    }
+
+    /// Versioned spelling of [`Recorder::record_request`]: the slot is
+    /// `(version, policy)`, so each manifest version's ledger reconciles
+    /// on its own (the unversioned methods are v0 sugar for callers that
+    /// never reload).
+    pub fn record_request_at(
+        &self,
+        version: u32,
+        policy: PolicyId,
+        total_us: u64,
+        queue_us: u64,
+        err: bool,
+    ) {
         let mut g = self.slots();
-        // slots are policy_order-sized; a foreign PolicyId is a bug, not a slot
-        let s = &mut g.policies[policy.index()];
+        let s = self.policy_slot(&mut g, version, policy);
         s.requests += 1;
         if err {
             s.errors += 1;
@@ -239,7 +339,12 @@ impl Recorder {
 
     /// A submission rejected with `Busy` at admission (queue at cap).
     pub fn record_shed(&self, policy: PolicyId) {
-        self.slots().policies[policy.index()].shed += 1;
+        self.record_shed_at(0, policy);
+    }
+
+    pub fn record_shed_at(&self, version: u32, policy: PolicyId) {
+        let mut g = self.slots();
+        self.policy_slot(&mut g, version, policy).shed += 1;
     }
 
     /// An admitted request cancelled because its deadline passed before
@@ -247,8 +352,12 @@ impl Recorder {
     /// cancel-before-submit hook).  Counts in `requests` too, so
     /// `requests == completed + errors + expired` stays exact.
     pub fn record_expired(&self, policy: PolicyId, queue_us: u64) {
+        self.record_expired_at(0, policy, queue_us);
+    }
+
+    pub fn record_expired_at(&self, version: u32, policy: PolicyId, queue_us: u64) {
         let mut g = self.slots();
-        let s = &mut g.policies[policy.index()];
+        let s = self.policy_slot(&mut g, version, policy);
         s.requests += 1;
         s.expired += 1;
         s.queue.record(queue_us);
@@ -257,15 +366,24 @@ impl Recorder {
     /// A request admitted while the governor had `requested` downgraded
     /// (it rides a cheaper route; the ledger stays under the asked name).
     pub fn record_governed(&self, requested: PolicyId) {
-        self.slots().policies[requested.index()].governed += 1;
+        self.record_governed_at(0, requested);
+    }
+
+    pub fn record_governed_at(&self, version: u32, requested: PolicyId) {
+        let mut g = self.slots();
+        self.policy_slot(&mut g, version, requested).governed += 1;
     }
 
     /// An admitted request whose batch was swept off a dead replica with
     /// `ReplicaFailed` (DESIGN.md §5.10).  Counts in `requests` too, so
     /// `requests == completed + errors + expired + failed` stays exact.
     pub fn record_failed(&self, policy: PolicyId) {
+        self.record_failed_at(0, policy);
+    }
+
+    pub fn record_failed_at(&self, version: u32, policy: PolicyId) {
         let mut g = self.slots();
-        let s = &mut g.policies[policy.index()];
+        let s = self.policy_slot(&mut g, version, policy);
         s.requests += 1;
         s.failed += 1;
     }
@@ -290,6 +408,29 @@ impl Recorder {
                 rs.generation = generation;
                 rs.beat_age_us = age_us;
             }
+            PoolEvent::CellLoaded { replica, load_us, pinned, resident } => {
+                let rs = &mut g.residency[replica];
+                rs.loads += 1;
+                if pinned {
+                    rs.pinned_loads += 1;
+                }
+                rs.load_us.record(load_us);
+                rs.resident = resident;
+            }
+            PoolEvent::CellEvicted { replica, resident } => {
+                let rs = &mut g.residency[replica];
+                rs.evictions += 1;
+                rs.resident = resident;
+            }
+            PoolEvent::ResidencyLookup { replica, hit, wait_us } => {
+                let rs = &mut g.residency[replica];
+                if hit {
+                    rs.hits += 1;
+                } else {
+                    rs.misses += 1;
+                    rs.wait_us.record(wait_us);
+                }
+            }
         }
     }
 
@@ -306,13 +447,29 @@ impl Recorder {
         exec_us: u64,
         replica: usize,
     ) {
+        self.record_batch_at(0, policy, rows, real_tokens, padded_tokens, exec_us, replica);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_batch_at(
+        &self,
+        version: u32,
+        policy: PolicyId,
+        rows: usize,
+        real_tokens: usize,
+        padded_tokens: usize,
+        exec_us: u64,
+        replica: usize,
+    ) {
         let mut g = self.slots();
-        let s = &mut g.policies[policy.index()];
-        s.batches += 1;
-        s.batched_rows += rows as u64;
-        s.real_tokens += real_tokens as u64;
-        s.padded_tokens += padded_tokens as u64;
-        s.exec.record(exec_us);
+        {
+            let s = self.policy_slot(&mut g, version, policy);
+            s.batches += 1;
+            s.batched_rows += rows as u64;
+            s.real_tokens += real_tokens as u64;
+            s.padded_tokens += padded_tokens as u64;
+            s.exec.record(exec_us);
+        }
         // replica slots are fixed at startup; an out-of-range index is an
         // engine-pool bug, not a slot to grow
         let rs = &mut g.replicas[replica];
@@ -326,13 +483,21 @@ impl Recorder {
         self.slots().replicas.clone()
     }
 
+    /// Per-replica residency ledger, dense by replica index (DESIGN.md
+    /// §5.13).  On a freshly started pool, `loads` across replicas equals
+    /// the pin-set size times the replica count — the acceptance witness
+    /// that startup loaded only the pin set, not the preload cross-product.
+    pub fn residency_snapshot(&self) -> Vec<ResidencyStats> {
+        self.slots().residency.clone()
+    }
+
     fn policy_snapshot_of(&self, slots: &Slots) -> BTreeMap<String, PolicyStats> {
         slots
             .policies
             .iter()
             .enumerate()
             .filter(|(_, s)| s.active())
-            .map(|(i, s)| (self.policies[i].clone(), s.clone()))
+            .map(|(i, s)| (slots.names[i].clone(), s.clone()))
             .collect()
     }
 
@@ -352,9 +517,9 @@ impl Recorder {
     /// totals even while traffic is flowing.
     pub fn render(&self) -> String {
         use crate::bench::Table;
-        let (snap, reps) = {
+        let (snap, reps, res) = {
             let g = self.slots();
-            (self.policy_snapshot_of(&g), g.replicas.clone())
+            (self.policy_snapshot_of(&g), g.replicas.clone(), g.residency.clone())
         };
         let elapsed = self.elapsed_s();
         let mut t = Table::new(&[
@@ -409,6 +574,30 @@ impl Recorder {
             }
             out.push('\n');
             out.push_str(&rt.render());
+        }
+        if res.iter().any(|r| r.active()) {
+            // executable residency table (DESIGN.md §5.13): cache
+            // effectiveness, load latency, and budget churn per replica
+            let mut ct = Table::new(&[
+                "replica", "hits", "misses", "loads", "pinned", "evicted", "resident",
+                "p50 load", "p99 load", "p99 miss wait",
+            ]);
+            for (i, r) in res.iter().enumerate() {
+                ct.row(vec![
+                    i.to_string(),
+                    r.hits.to_string(),
+                    r.misses.to_string(),
+                    r.loads.to_string(),
+                    r.pinned_loads.to_string(),
+                    r.evictions.to_string(),
+                    r.resident.to_string(),
+                    format!("{:.1}ms", r.load_us.percentile_us(0.50) as f64 / 1e3),
+                    format!("{:.1}ms", r.load_us.percentile_us(0.99) as f64 / 1e3),
+                    format!("{:.1}ms", r.wait_us.percentile_us(0.99) as f64 / 1e3),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&ct.render());
         }
         out
     }
@@ -819,5 +1008,82 @@ mod tests {
         let table = r.render();
         assert!(table.contains("restarts") && table.contains("beat age"));
         assert!(table.contains("excluded") && table.contains("failed"));
+    }
+
+    /// Hot-reload ledger (DESIGN.md §5.13): each manifest version gets
+    /// its own slot block, keyed `name@vN`, and reconciles independently
+    /// — the acceptance identity `requests == completed + errors +
+    /// expired + failed` must hold on both versions' ledgers after a
+    /// mid-run reload.
+    #[test]
+    fn versioned_slots_reconcile_per_version() {
+        let r = Recorder::new(vec!["fp".into(), "m3".into()], 1);
+        let m3 = PolicyId(1);
+        // v0 traffic under the bare name
+        r.record_request_at(0, m3, 1000, 100, false);
+        r.record_failed_at(0, m3);
+        // reload publishes v1; draining v0 requests keep landing on v0
+        r.register_version(1);
+        r.record_request_at(1, m3, 900, 80, false);
+        r.record_request_at(1, m3, 950, 90, true);
+        r.record_expired_at(1, m3, 5000);
+        r.record_shed_at(1, m3);
+        r.record_governed_at(1, m3);
+        r.record_batch_at(1, m3, 4, 100, 256, 300, 0);
+        r.record_request_at(0, m3, 1100, 120, false);
+
+        let snap = r.snapshot();
+        let v0 = &snap["m3"];
+        assert_eq!((v0.requests, v0.completed, v0.failed), (3, 2, 1));
+        assert_eq!(v0.requests, v0.completed + v0.errors + v0.expired + v0.failed);
+        assert_eq!(v0.batches, 0, "v1 batches must not leak into v0");
+        let v1 = &snap["m3@v1"];
+        assert_eq!((v1.requests, v1.completed, v1.errors, v1.expired), (3, 1, 1, 1));
+        assert_eq!(v1.requests, v1.completed + v1.errors + v1.expired + v1.failed);
+        assert_eq!((v1.shed, v1.governed, v1.batches), (1, 1, 1));
+        // the idle fp@v1 slot stays hidden like any idle policy
+        assert!(!snap.contains_key("fp@v1"));
+        assert!(r.render().contains("m3@v1"));
+
+        // record paths self-heal an unregistered version (defense in
+        // depth — registration normally precedes publication)
+        r.record_shed_at(3, PolicyId(0));
+        assert_eq!(r.snapshot()["fp@v3"].shed, 1);
+    }
+
+    /// Residency events fold into the per-replica cache ledger and the
+    /// render grows the residency table (DESIGN.md §5.13).
+    #[test]
+    fn residency_ledger_accumulates_and_renders() {
+        let r = Recorder::new(vec!["fp".into()], 2);
+        assert!(r.residency_snapshot().iter().all(|x| !x.active()));
+        assert!(!r.render().contains("p50 load"), "idle residency stays out of the render");
+        // replica 0: two pin loads at startup, then a hit and a demand miss
+        for _ in 0..2 {
+            r.record_pool_event(PoolEvent::CellLoaded {
+                replica: 0,
+                load_us: 4000,
+                pinned: true,
+                resident: 1,
+            });
+        }
+        r.record_pool_event(PoolEvent::ResidencyLookup { replica: 0, hit: true, wait_us: 0 });
+        r.record_pool_event(PoolEvent::ResidencyLookup { replica: 0, hit: false, wait_us: 7000 });
+        r.record_pool_event(PoolEvent::CellLoaded {
+            replica: 0,
+            load_us: 6000,
+            pinned: false,
+            resident: 3,
+        });
+        r.record_pool_event(PoolEvent::CellEvicted { replica: 0, resident: 2 });
+        let res = r.residency_snapshot();
+        assert_eq!((res[0].hits, res[0].misses), (1, 1));
+        assert_eq!((res[0].loads, res[0].pinned_loads, res[0].evictions), (3, 2, 1));
+        assert_eq!(res[0].resident, 2, "resident tracks the latest event");
+        assert_eq!(res[0].load_us.count(), 3);
+        assert_eq!(res[0].wait_us.count(), 1, "only misses record a wait");
+        assert!(!res[1].active(), "untouched replica keeps a zero ledger");
+        let table = r.render();
+        assert!(table.contains("p50 load") && table.contains("evicted"));
     }
 }

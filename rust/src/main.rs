@@ -101,6 +101,9 @@ fn cli() -> Cli {
                     OptSpec { name: "governor", takes_value: false, default: None, help: "enable the load-adaptive precision governor" },
                     OptSpec { name: "watchdog-ms", takes_value: true, default: Some("0"), help: "replica heartbeat stall budget before supervised restart (0 = off)" },
                     OptSpec { name: "restart-budget", takes_value: true, default: Some("5"), help: "replica restarts tolerated per window before circuit-breaker exclusion" },
+                    OptSpec { name: "max-resident-cells", takes_value: true, default: Some("0"), help: "LRU budget for resident executable cells per replica (0 = unbounded)" },
+                    OptSpec { name: "pin-full-grid", takes_value: false, default: None, help: "pin every (mode, seq, batch) executable cell at startup (pre-residency eager preload)" },
+                    OptSpec { name: "reload", takes_value: false, default: None, help: "hot-reload the manifest when artifacts/manifest.json changes on disk (SIGHUP also triggers a reload)" },
                 ],
             },
             SubSpec {
@@ -124,6 +127,8 @@ fn cli() -> Cli {
                     OptSpec { name: "watchdog-ms", takes_value: true, default: Some("0"), help: "replica heartbeat stall budget before supervised restart (0 = off)" },
                     OptSpec { name: "restart-budget", takes_value: true, default: Some("5"), help: "replica restarts tolerated per window before circuit-breaker exclusion" },
                     OptSpec { name: "chaos", takes_value: false, default: None, help: "supervision smoke: kill one replica mid-run, assert goodput recovers, write BENCH_chaos_smoke.json" },
+                    OptSpec { name: "residency", takes_value: false, default: None, help: "residency smoke: pin-set startup vs eager full-grid preload, write BENCH_residency.json" },
+                    OptSpec { name: "max-resident-cells", takes_value: true, default: Some("0"), help: "LRU budget for resident executable cells per replica (0 = unbounded)" },
                 ],
             },
             SubSpec {
@@ -448,6 +453,35 @@ fn supervision_config(args: &zqhero::cli::Args) -> Result<(Option<Duration>, Res
     Ok((watchdog, RestartPolicy { budget, ..RestartPolicy::default() }))
 }
 
+/// Parse `--max-resident-cells` (0 = unbounded) into the LRU budget.
+fn residency_budget(args: &zqhero::cli::Args) -> Result<Option<usize>> {
+    Ok(match args.get_usize("max-resident-cells")?.unwrap_or(0) {
+        0 => None,
+        n => Some(n),
+    })
+}
+
+/// Install a process-wide SIGHUP flag (the conventional "re-read your
+/// config" signal — here: hot-reload the manifest).  Raw `signal(2)`
+/// declaration instead of a libc dependency; the handler only stores an
+/// `AtomicBool` (async-signal-safe), the serve loop polls it.
+#[cfg(unix)]
+fn install_sighup_flag() -> &'static std::sync::atomic::AtomicBool {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_sighup(_sig: i32) {
+        FLAG.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGHUP: i32 = 1;
+    unsafe {
+        signal(SIGHUP, on_sighup as extern "C" fn(i32) as usize);
+    }
+    &FLAG
+}
+
 fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let host = args.get_or("host", "127.0.0.1").to_string();
@@ -458,6 +492,7 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     let replicas = args.get_usize("replicas")?.unwrap_or(1).max(1);
     let (queue_cap, default_deadline, governor) = overload_config(args)?;
     let (watchdog, restart) = supervision_config(args)?;
+    let watch_manifest = args.get_bool("reload");
     let config = ServerConfig {
         max_batch: args.get_usize("max-batch")?.unwrap_or(16),
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
@@ -467,6 +502,8 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
         governor: governor.then(|| zqhero::coordinator::GovernorConfig::for_queue(queue_cap)),
         watchdog,
         restart,
+        max_resident_cells: residency_budget(args)?,
+        pin_full_grid: args.get_bool("pin-full-grid"),
         ..ServerConfig::default()
     };
 
@@ -475,6 +512,7 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
         .iter()
         .flat_map(|t| routes.iter().map(move |m| (t.clone(), m.clone())))
         .collect();
+    let manifest_path = dir.join("manifest.json");
     let coord = std::sync::Arc::new(Coordinator::start(dir, &pairs, config)?);
     let server = zqhero::coordinator::NetServer::start(std::sync::Arc::clone(&coord), &host, port)?;
     println!(
@@ -484,13 +522,45 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     );
     println!("request: {{\"task\":\"sst2\",\"mode\":\"m3\",\"ids\":[1,1510,2]}}");
     println!("     or: {{\"v\":2,\"task\":\"sst2\",\"policy\":{{\"base\":\"m3\",\"overrides\":[[\"attn_output\",\"fp\"]],\"fallback\":[\"m1\",\"fp\"]}},\"ids\":[1,1510,2]}}");
-    println!("Ctrl-C to stop; stats every 30s");
+    #[cfg(unix)]
+    let sighup = install_sighup_flag();
+    println!(
+        "Ctrl-C to stop; stats every 30s; SIGHUP{} hot-reloads the manifest",
+        if watch_manifest { " or a manifest.json change" } else { "" }
+    );
+    let mtime_of = |p: &std::path::Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+    let mut last_mtime = mtime_of(&manifest_path);
+    let mut ticks = 0u32;
     loop {
-        std::thread::sleep(Duration::from_secs(30));
-        println!("\n== {} connections, {} requests ==",
-                 server.connections.load(std::sync::atomic::Ordering::SeqCst),
-                 server.served.load(std::sync::atomic::Ordering::SeqCst));
-        print!("{}", coord.recorder.render());
+        std::thread::sleep(Duration::from_secs(1));
+        let mut want_reload = false;
+        #[cfg(unix)]
+        if sighup.swap(false, std::sync::atomic::Ordering::SeqCst) {
+            want_reload = true;
+        }
+        if watch_manifest {
+            let now = mtime_of(&manifest_path);
+            if now.is_some() && now != last_mtime {
+                last_mtime = now;
+                want_reload = true;
+            }
+        }
+        if want_reload {
+            // a refused reload (incompatible grid, unreadable manifest)
+            // keeps the current version serving — report and carry on
+            match coord.reload() {
+                Ok(v) => println!("manifest hot-reloaded as version v{v}"),
+                Err(e) => eprintln!("reload refused: {e:#}"),
+            }
+        }
+        ticks += 1;
+        if ticks % 30 == 0 {
+            println!("\n== {} connections, {} requests (manifest v{}) ==",
+                     server.connections.load(std::sync::atomic::Ordering::SeqCst),
+                     server.served.load(std::sync::atomic::Ordering::SeqCst),
+                     coord.current_version());
+            print!("{}", coord.recorder.render());
+        }
     }
 }
 
@@ -514,6 +584,7 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
         governor: governor.then(|| zqhero::coordinator::GovernorConfig::for_queue(queue_cap)),
         watchdog,
         restart,
+        max_resident_cells: residency_budget(args)?,
         ..ServerConfig::default()
     };
 
@@ -527,6 +598,17 @@ fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
     // pull eval rows as the request payloads
     let man = Manifest::load(&dir)?;
     let payloads = load_payloads(&man, &tasks, requests)?;
+
+    if args.get_bool("residency") {
+        anyhow::ensure!(
+            overload == 0.0 && !args.get_bool("chaos") && !args.get_bool("mixed-length"),
+            "--residency, --mixed-length, --overload and --chaos are separate benchmarks; \
+             run one at a time"
+        );
+        return serve_bench_residency(
+            &dir, &man, &tasks, &routes, &payloads, requests, concurrency, config,
+        );
+    }
 
     if args.get_bool("mixed-length") {
         // refuse rather than silently drop the other mode's flag: a
@@ -790,6 +872,243 @@ fn serve_bench_seq_buckets(
         Err(e) => eprintln!("could not write BENCH_seq_buckets_smoke.json: {e}"),
     }
     Ok(())
+}
+
+/// Executable-residency smoke (`serve-bench --residency`, DESIGN.md
+/// §5.13): run the identical closed loop twice — first on the pin-set
+/// startup (demand cells compile on first miss under the LRU budget),
+/// then with `pin_full_grid` (the pre-residency eager `(mode x seq x
+/// batch)` preload) — and report startup time and load counts, the
+/// hit/miss/eviction ledger, VmRSS, and the latency split between
+/// requests that found their cell resident and those that paid a cold
+/// compile (`Timing::load_wait_us > 0`).  The pinned phase asserts the
+/// acceptance invariant: startup loads exactly the pin set (each
+/// requested route's exec mode x every seq bucket at the serving batch
+/// bucket), never the cross-product.  Writes BENCH_residency.json.
+#[allow(clippy::too_many_arguments)]
+fn serve_bench_residency(
+    dir: &std::path::Path,
+    man: &Manifest,
+    tasks: &[String],
+    routes: &[String],
+    payloads: &[Vec<(Vec<i32>, Vec<i32>)>],
+    requests: usize,
+    concurrency: usize,
+    config: ServerConfig,
+) -> Result<()> {
+    use zqhero::json::{self, Value};
+    anyhow::ensure!(
+        config.governor.is_none(),
+        "--residency measures cold/warm cell behavior on fixed routes; run it without --governor"
+    );
+    let pairs: Vec<(String, String)> = tasks
+        .iter()
+        .flat_map(|t| routes.iter().map(move |m| (t.clone(), m.clone())))
+        .collect();
+    // mirror the coordinator's pin-set derivation so the ledger can be
+    // checked from the outside: requested routes' exec modes (deduped)
+    // x every seq bucket, at one batch bucket (the serving max-batch)
+    let mut exec_modes: Vec<zqhero::model::manifest::ModeId> = Vec::new();
+    for r in routes {
+        let m = man.policy(r)?.exec_mode;
+        if !exec_modes.contains(&m) {
+            exec_modes.push(m);
+        }
+    }
+    let pin_cells = exec_modes.len() * man.num_seq_buckets();
+    let grid_cells = pin_cells * man.buckets.len();
+    println!(
+        "residency smoke: pin set {pin_cells} cells vs full grid {grid_cells} cells \
+         ({} modes x {} seq buckets x {} batch buckets), budget {:?}",
+        exec_modes.len(),
+        man.num_seq_buckets(),
+        man.buckets.len(),
+        config.max_resident_cells,
+    );
+
+    fn pctl_ms(sorted: &[u64], p: f64) -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+        sorted[idx] as f64 / 1e3
+    }
+
+    let mut phases: Vec<(String, Value)> = Vec::new();
+    for (label, full_grid, expected_startup) in
+        [("pinned", false, pin_cells), ("eager", true, grid_cells)]
+    {
+        let mut cfg = config.clone();
+        cfg.pin_full_grid = full_grid;
+        let t_start = Instant::now();
+        let coord = Coordinator::start(dir.to_path_buf(), &pairs, cfg)?;
+        let startup_s = t_start.elapsed().as_secs_f64();
+        // ledger the startup loads before any traffic: the acceptance
+        // witness that startup loaded exactly the pin set (or, in the
+        // eager phase, the whole grid)
+        let startup = coord.recorder.residency_snapshot();
+        for (i, r) in startup.iter().enumerate() {
+            anyhow::ensure!(
+                r.loads as usize == expected_startup,
+                "{label}: replica {i} loaded {} cells at startup, expected {expected_startup}",
+                r.loads
+            );
+            anyhow::ensure!(
+                r.loads == r.pinned_loads && r.misses == 0,
+                "{label}: startup loads must all be pins ({} loads, {} pinned, {} misses)",
+                r.loads,
+                r.pinned_loads,
+                r.misses
+            );
+        }
+        let startup_loads: u64 = startup.iter().map(|r| r.loads).sum();
+
+        let t0 = Instant::now();
+        let mut samples: Vec<(u64, u64)> = Vec::new(); // (total_us, load_wait_us)
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for (ti, t) in tasks.iter().enumerate() {
+                for m in routes {
+                    let rows = &payloads[ti];
+                    let coord = &coord;
+                    handles.push(
+                        s.spawn(move || residency_loop(coord, t, m, rows, requests, concurrency)),
+                    );
+                }
+            }
+            for h in handles {
+                samples.extend(h.join().map_err(|_| anyhow::anyhow!("load thread panicked"))??);
+            }
+            Ok(())
+        })?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        let res = coord.recorder.residency_snapshot();
+        let (hits, misses, evictions): (u64, u64, u64) = res
+            .iter()
+            .fold((0, 0, 0), |a, r| (a.0 + r.hits, a.1 + r.misses, a.2 + r.evictions));
+        if let Some(cap) = config.max_resident_cells {
+            for (i, r) in res.iter().enumerate() {
+                anyhow::ensure!(
+                    r.resident <= cap,
+                    "{label}: replica {i} holds {} resident cells over the {cap} budget",
+                    r.resident
+                );
+            }
+        }
+        let resident: u64 = res.iter().map(|r| r.resident as u64).sum();
+        let mut all: Vec<u64> = samples.iter().map(|(t, _)| *t).collect();
+        let mut warm: Vec<u64> =
+            samples.iter().filter(|(_, w)| *w == 0).map(|(t, _)| *t).collect();
+        let mut cold: Vec<u64> = samples.iter().filter(|(_, w)| *w > 0).map(|(t, _)| *t).collect();
+        all.sort_unstable();
+        warm.sort_unstable();
+        cold.sort_unstable();
+        let rss_kb = vm_rss_kb().unwrap_or(0);
+        println!(
+            "  {label:7} startup {startup_s:.2}s ({startup_loads} cell loads), {hits} hits / \
+             {misses} misses / {evictions} evictions, {resident} resident, p99 {:.1}ms (warm \
+             {:.1}ms, cold-cell {:.1}ms over {} reqs), {wall:.1}s wall, VmRSS {rss_kb} kB",
+            pctl_ms(&all, 0.99),
+            pctl_ms(&warm, 0.99),
+            pctl_ms(&cold, 0.99),
+            cold.len(),
+        );
+        print!("{}", coord.recorder.render());
+        phases.push((
+            label.to_string(),
+            json::obj(vec![
+                ("startup_s", json::num(startup_s)),
+                ("startup_cell_loads", json::num(startup_loads as f64)),
+                ("expected_startup_cells", json::num(expected_startup as f64)),
+                ("hits", json::num(hits as f64)),
+                ("misses", json::num(misses as f64)),
+                ("evictions", json::num(evictions as f64)),
+                ("resident_cells", json::num(resident as f64)),
+                ("p50_ms", json::num(pctl_ms(&all, 0.50))),
+                ("p99_ms", json::num(pctl_ms(&all, 0.99))),
+                ("warm_p99_ms", json::num(pctl_ms(&warm, 0.99))),
+                ("cold_p99_ms", json::num(pctl_ms(&cold, 0.99))),
+                ("cold_requests", json::num(cold.len() as f64)),
+                ("wall_s", json::num(wall)),
+                ("vm_rss_kb", json::num(rss_kb as f64)),
+            ]),
+        ));
+    }
+
+    let report = json::obj(vec![
+        ("bench", json::s("residency_smoke")),
+        ("tasks", Value::Array(tasks.iter().map(|t| json::s(t)).collect())),
+        ("routes", Value::Array(routes.iter().map(|r| json::s(r)).collect())),
+        ("requests_per_route", json::num(requests as f64)),
+        (
+            "max_resident_cells",
+            json::num(config.max_resident_cells.map(|c| c as f64).unwrap_or(0.0)),
+        ),
+        ("pin_cells", json::num(pin_cells as f64)),
+        ("grid_cells", json::num(grid_cells as f64)),
+        ("phases", Value::Object(phases)),
+    ]);
+    match std::fs::write("BENCH_residency.json", json::to_string_pretty(&report)) {
+        Ok(()) => println!("\nwrote BENCH_residency.json"),
+        Err(e) => eprintln!("could not write BENCH_residency.json: {e}"),
+    }
+    Ok(())
+}
+
+/// Closed loop that returns each completed request's
+/// `(total_us, load_wait_us)` — the residency smoke's warm/cold split
+/// primitive.  Any terminal outcome other than completion is a bug.
+fn residency_loop(
+    coord: &Coordinator,
+    task: &str,
+    route: &str,
+    rows: &[(Vec<i32>, Vec<i32>)],
+    requests: usize,
+    concurrency: usize,
+) -> Result<Vec<(u64, u64)>> {
+    let mut inflight = std::collections::VecDeque::new();
+    let mut out = Vec::with_capacity(requests);
+    let mut submitted = 0usize;
+    while out.len() < requests {
+        while submitted < requests && inflight.len() < concurrency.max(1) {
+            let (ids, tys) = rows[submitted % rows.len()].clone();
+            // explicit long deadline: a cold-cell compile must show up as
+            // load_wait_us, never as a spurious expiry
+            let spec = zqhero::coordinator::RequestSpec::task(task)
+                .policy(route)
+                .ids(ids)
+                .type_ids(tys)
+                .deadline(Duration::from_secs(600));
+            match coord.submit(spec) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    submitted += 1;
+                }
+                Err(e) if e.is_busy() => break,
+                Err(e) => anyhow::bail!("residency submit failed: {e}"),
+            }
+        }
+        match inflight.pop_front() {
+            Some(rx) => {
+                let resp = rx.recv().context("residency response channel closed")?;
+                anyhow::ensure!(
+                    resp.error.is_none() && !resp.expired && !resp.failed,
+                    "residency smoke request did not complete: {:?}",
+                    resp.error
+                );
+                out.push((resp.timing.total_us, resp.timing.load_wait_us));
+            }
+            None => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    Ok(out)
+}
+
+/// Resident-set size from `/proc/self/status`, in kB (`None` off-Linux).
+fn vm_rss_kb() -> Option<u64> {
+    let s = std::fs::read_to_string("/proc/self/status").ok()?;
+    s.lines().find(|l| l.starts_with("VmRSS:"))?.split_whitespace().nth(1)?.parse().ok()
 }
 
 /// Open-loop overload smoke (`serve-bench --overload X [--governor]`):

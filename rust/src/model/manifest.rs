@@ -407,7 +407,7 @@ pub struct CalibSpec {
     pub stats: Vec<(String, Vec<usize>)>,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Manifest {
     pub root: PathBuf,
     pub model: ModelCfg,
@@ -469,6 +469,62 @@ impl Manifest {
         let src = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
         Self::from_json_str(&src, artifacts_dir).with_context(|| format!("{path:?}"))
+    }
+
+    /// Hot-reload compatibility gate (DESIGN.md §5.13): a reloaded
+    /// manifest may change weights and artifact paths, but the interned
+    /// ID spaces and the (seq, batch) grid axes must be identical —
+    /// `TaskId`/`ModeId`/`PolicyId` values, governor chains, and bucket
+    /// indices are shared across versions, so any drift here would
+    /// silently misroute in-flight work.  Incompatible manifests need a
+    /// restart, not a reload.
+    pub fn grid_compatible(&self, other: &Manifest) -> Result<()> {
+        if self.mode_order != other.mode_order {
+            bail!(
+                "reload changes mode_order ({:?} -> {:?}); restart required",
+                self.mode_order,
+                other.mode_order
+            );
+        }
+        if self.policy_order != other.policy_order {
+            bail!(
+                "reload changes policy_order ({:?} -> {:?}); restart required",
+                self.policy_order,
+                other.policy_order
+            );
+        }
+        if self.task_order != other.task_order {
+            bail!(
+                "reload changes task_order ({:?} -> {:?}); restart required",
+                self.task_order,
+                other.task_order
+            );
+        }
+        if self.buckets != other.buckets {
+            bail!(
+                "reload changes batch buckets ({:?} -> {:?}); restart required",
+                self.buckets,
+                other.buckets
+            );
+        }
+        if self.seq_buckets != other.seq_buckets {
+            bail!(
+                "reload changes seq buckets ({:?} -> {:?}); restart required",
+                self.seq_buckets,
+                other.seq_buckets
+            );
+        }
+        if self.seq != other.seq {
+            bail!("reload changes seq ({} -> {}); restart required", self.seq, other.seq);
+        }
+        if self.model.num_labels != other.model.num_labels {
+            bail!(
+                "reload changes num_labels ({} -> {}); restart required",
+                self.model.num_labels,
+                other.model.num_labels
+            );
+        }
+        Ok(())
     }
 
     /// Parse a manifest from JSON source — the file-less entry point the
@@ -1071,6 +1127,31 @@ mod tests {
         let typo = json::parse(r#"{"base": "m3", "override": [["qkv", "fp"]]}"#).unwrap();
         let err = PolicyDraft::from_json(&typo).unwrap_err().to_string();
         assert!(err.contains("unknown policy key"), "{err}");
+    }
+
+    #[test]
+    fn grid_compatible_accepts_same_grid_and_rejects_drift() {
+        let a = bare_manifest();
+        let b = bare_manifest();
+        a.grid_compatible(&b).unwrap();
+        // weights/artifact-path changes are invisible to the grid gate
+        let mut c = bare_manifest();
+        c.root = PathBuf::from("/elsewhere");
+        a.grid_compatible(&c).unwrap();
+        // any axis or interning drift is a restart, not a reload
+        let mut d = bare_manifest();
+        d.seq_buckets = vec![16, 32, 128];
+        let err = a.grid_compatible(&d).unwrap_err().to_string();
+        assert!(err.contains("seq buckets"), "{err}");
+        let mut e = bare_manifest();
+        e.mode_order = vec!["fp".into()];
+        assert!(a.grid_compatible(&e).is_err());
+        let mut f = bare_manifest();
+        f.policy_order = vec!["fp".into()];
+        assert!(a.grid_compatible(&f).is_err());
+        let mut g = bare_manifest();
+        g.model.num_labels = 3;
+        assert!(a.grid_compatible(&g).is_err());
     }
 
     #[test]

@@ -29,6 +29,19 @@
 //! and a fake device (`EngineOptions::fake`) runs the whole machine
 //! without artifacts or PJRT.
 //!
+//! PR 9 replaces the eager full-grid executable preload with per-replica
+//! *residency* (DESIGN.md §5.13): each slot owns a [`Residency`] table;
+//! startup synchronously loads only the manifest-derived pin set, other
+//! `(mode, seq, batch)` cells compile on first demand (single-flight,
+//! LRU-evicted under `EngineOptions::max_resident_cells`/`_bytes`), and
+//! `Msg::Warm` prefetches cells between jobs so a governed downgrade
+//! never stalls on a cold rung.  `Msg::Reload` installs a new manifest
+//! version ([`VersionPayload`]) without stopping the loop: new-version
+//! requests route in while the old version drains and its cells unpin
+//! and age out.  Preload failures are typed per cell ([`PreloadError`]);
+//! the supervisor treats one as a deterministic artifact fault and
+//! excludes the slot immediately instead of burning the restart budget.
+//!
 //! Each replica's request loop is a software pipeline (DESIGN.md §5.4):
 //! while batch N executes on the device, batch N+1's host arrays are
 //! uploaded, and batch N's readback is deferred until N+1 has been
@@ -40,7 +53,7 @@
 //! mode` table (manifest-derived, so it agrees with the coordinator's
 //! without a handshake — DESIGN.md §6.3).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -56,6 +69,7 @@ use crate::model::manifest::{Manifest, ModeId, PolicyId, TaskId};
 use crate::model::tensor::Tensor;
 use crate::model::Container;
 
+use super::residency::{Begin, CellKey, Residency};
 use super::staging::{StagingBuf, StagingPool};
 use super::{InputBufs, PendingOutputs, Runtime};
 
@@ -144,11 +158,47 @@ impl std::fmt::Display for ReplicaFailed {
 
 impl std::error::Error for ReplicaFailed {}
 
+/// Typed startup/preload failure naming the exact artifact cell that
+/// broke (DESIGN.md §5.13).  Deterministic: retrying the incarnation
+/// would fail on the same cell, so the supervisor downcasts this from a
+/// restart's ready channel and *excludes* the slot immediately instead
+/// of crash-looping the restart circuit breaker against it.
+#[derive(Debug, Clone)]
+pub enum PreloadError {
+    /// A (task, mode) checkpoint failed to load/upload.
+    Checkpoint { task: String, mode: String, cause: String },
+    /// A (mode, seq bucket, batch bucket) executable cell failed to
+    /// compile or upload.
+    Executable { mode: String, seq: usize, bucket: usize, cause: String },
+}
+
+impl std::fmt::Display for PreloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PreloadError::Checkpoint { task, mode, cause } => {
+                write!(f, "preload failed at checkpoint ({task}, {mode}): {cause}")
+            }
+            PreloadError::Executable { mode, seq, bucket, cause } => {
+                write!(
+                    f,
+                    "preload failed at executable cell ({mode}, seq {seq}, bucket {bucket}): \
+                     {cause}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for PreloadError {}
+
 pub struct InferJob {
     pub task: TaskId,
     /// Interned precision policy; the engine maps it to its executable
     /// mode via the mirrored `policy_exec` table.
     pub policy: PolicyId,
+    /// Manifest version (hot reload, DESIGN.md §5.13): selects the
+    /// checkpoint set and executable cells; 0 until the first reload.
+    pub version: u32,
     /// Pooled host buffers: `bucket * seq` ids/type_ids/mask.  Recycled to
     /// the staging pool by the engine right after the device upload.
     pub staging: StagingBuf,
@@ -178,10 +228,21 @@ pub struct InferDone {
     /// with `replica`, the cross-replica FIFO witness (same-replica
     /// batches of a group execute in submit order).
     pub exec_seq: u64,
+    /// Time the batch spent resolving its executable cell against the
+    /// residency table, us — ~0 on a hit, the compile+upload latency on
+    /// a miss.  Measured *before* the `engine_us` clock starts, so a
+    /// miss-caused slow request is attributable (DESIGN.md §5.13).
+    pub load_wait_us: u64,
 }
 
 enum Msg {
     Infer(Box<InferJob>),
+    /// Install a new manifest version (hot reload).  Idempotent: a
+    /// version the replica already knows (startup snapshot vs queued
+    /// reload race) is skipped.
+    Reload(Arc<VersionPayload>),
+    /// Prefetch one executable cell between jobs (governed-rung warm).
+    Warm(CellKey),
     Stop,
 }
 
@@ -216,34 +277,49 @@ pub enum FaultKind {
     /// `batch_seq` (previously `ServerConfig::fault_inject_batch`) —
     /// exercises worker-pool panic isolation and depth-release ordering.
     CompletionPanicAt { batch_seq: u64 },
+    /// Fail the incarnation's startup with a typed [`PreloadError`]
+    /// (simulated corrupt artifact cell) — drives the supervisor's
+    /// immediate-exclusion path.
+    FailPreload,
 }
 
 /// A fault kind scoped to a replica and lifetime.  By default a fault
 /// applies only to generation 0 (the original incarnation), so a
 /// restarted replica comes back healthy; `persistent` faults survive
-/// restarts (how the chaos suite drives the circuit breaker).
+/// restarts (how the chaos suite drives the circuit breaker), and
+/// `from_gen` delays a fault until a later incarnation (e.g. a preload
+/// failure that appears only on restart).
 #[derive(Debug, Clone, Copy)]
 pub struct FaultSpec {
     /// `None` = every replica.
     pub replica: Option<usize>,
     pub kind: FaultKind,
     pub persistent: bool,
+    /// First generation the fault applies to (default 0).
+    pub min_generation: u64,
 }
 
 impl FaultSpec {
     /// Fault every replica's first incarnation.
     pub fn all(kind: FaultKind) -> Self {
-        FaultSpec { replica: None, kind, persistent: false }
+        FaultSpec { replica: None, kind, persistent: false, min_generation: 0 }
     }
 
     /// Fault one replica's first incarnation.
     pub fn on(replica: usize, kind: FaultKind) -> Self {
-        FaultSpec { replica: Some(replica), kind, persistent: false }
+        FaultSpec { replica: Some(replica), kind, persistent: false, min_generation: 0 }
     }
 
     /// Apply to every incarnation (survives supervised restart).
     pub fn persistent(mut self) -> Self {
         self.persistent = true;
+        self
+    }
+
+    /// Apply only from generation `g` on (pair with `persistent` —
+    /// non-persistent faults are already limited to generation 0).
+    pub fn from_gen(mut self, g: u64) -> Self {
+        self.min_generation = g;
         self
     }
 }
@@ -297,6 +373,9 @@ impl FaultPlan {
             if generation > 0 && !spec.persistent {
                 continue;
             }
+            if generation < spec.min_generation {
+                continue;
+            }
             match spec.kind {
                 FaultKind::PanicAt { batch } => f.panic_at = Some(batch),
                 FaultKind::StallFor { batch, dur } => f.stall = Some((batch, dur)),
@@ -304,6 +383,7 @@ impl FaultPlan {
                 FaultKind::FailSubmit { after_batch } => f.fail_submit_after = Some(after_batch),
                 FaultKind::SlowUpload { per_batch } => f.slow_upload = Some(per_batch),
                 FaultKind::CompletionPanicAt { .. } => {}
+                FaultKind::FailPreload => f.fail_preload = true,
             }
         }
         f
@@ -318,6 +398,7 @@ struct EngineFaults {
     throttle: Option<Duration>,
     fail_submit_after: Option<u64>,
     slow_upload: Option<Duration>,
+    fail_preload: bool,
 }
 
 // ------------------------------------------------------------- supervision
@@ -616,6 +697,13 @@ pub struct EngineOptions {
     /// `latency` per batch and returns zero logits — the artifact-free
     /// path the chaos suite runs the full serving machine on.
     pub fake: Option<Duration>,
+    /// Per-replica resident executable-cell budget (DESIGN.md §5.13):
+    /// cold cells LRU-evict past this count.  `None` = unbounded.
+    /// Pinned cells override the budget.
+    pub max_resident_cells: Option<usize>,
+    /// Per-replica resident executable byte budget (artifact file
+    /// sizes).  `None` = unbounded.
+    pub max_resident_bytes: Option<usize>,
 }
 
 impl Default for EngineOptions {
@@ -627,16 +715,18 @@ impl Default for EngineOptions {
             restart: RestartPolicy::default(),
             fault_plan: FaultPlan::default(),
             fake: None,
+            max_resident_cells: None,
+            max_resident_bytes: None,
         }
     }
 }
 
 impl Engine {
-    /// Spawn one engine replica and wait for it to become ready: it loads
-    /// the manifest, uploads every (task, mode) checkpoint in `preload`,
-    /// and pre-compiles the executables for the requested (mode, seq
-    /// bucket, batch bucket) grid cells so the serving hot path never
-    /// compiles.  `pool` runs completion callbacks; `staging` receives
+    /// Spawn one engine replica and wait for it to become ready: it
+    /// uploads every (task, mode) checkpoint in `preload` and pins the
+    /// requested (mode, seq bucket, batch bucket) grid cells so those
+    /// never compile on the hot path (other cells load on demand under
+    /// residency).  `pool` runs completion callbacks; `staging` receives
     /// recycled host buffers.
     pub fn spawn(
         artifacts: PathBuf,
@@ -646,14 +736,18 @@ impl Engine {
         staging: Arc<StagingPool>,
         options: EngineOptions,
     ) -> Result<Engine> {
-        let spawner = Spawner {
-            artifacts,
+        let manifest = Manifest::load(&artifacts)?;
+        let pins = precompile
+            .iter()
+            .map(|(mode, seq, bucket)| Ok((manifest.mode_id(mode)?.0, *seq, *bucket)))
+            .collect::<Result<Vec<_>>>()?;
+        let payload = Arc::new(VersionPayload {
+            version: 0,
+            manifest: Arc::new(manifest),
             preload: Arc::new(preload),
-            precompile,
-            pool,
-            staging,
-            options,
-        };
+            pins: Arc::new(pins),
+        });
+        let spawner = Spawner::new(payload, 1, pool, staging, options);
         let (live, tables) = spawner.spawn(0, 0, Instant::now())?.wait()?;
         Ok(Engine { queue: live.queue, join: Some(live.join), tables })
     }
@@ -663,7 +757,7 @@ impl Engine {
     pub fn submit(&self, job: InferJob) -> std::result::Result<(), Box<InferJob>> {
         self.queue.push(Msg::Infer(Box::new(job))).map_err(|m| match m {
             Msg::Infer(job) => job,
-            Msg::Stop => unreachable!("submit only sends Infer"),
+            _ => unreachable!("submit only sends Infer"),
         })
     }
 
@@ -716,6 +810,7 @@ impl Engine {
         self.submit(InferJob {
             task: self.task_id(task)?,
             policy: self.policy_id(route)?,
+            version: 0,
             staging,
             cancel: None,
             done: Completion::new(move |res| {
@@ -745,7 +840,7 @@ impl Drop for Engine {
 /// supervision machine on a bare checkout.
 enum EngineDevice {
     Real(Box<Runtime>),
-    Fake { manifest: Manifest, latency: Duration },
+    Fake { manifest: Arc<Manifest>, latency: Duration },
 }
 
 enum EngineInputs {
@@ -759,11 +854,10 @@ enum EnginePending {
 }
 
 impl EngineDevice {
-    fn open(artifacts: &std::path::Path, fake: Option<Duration>) -> Result<EngineDevice> {
-        let manifest = Manifest::load(artifacts)?;
+    fn open(manifest: &Arc<Manifest>, fake: Option<Duration>) -> Result<EngineDevice> {
         match fake {
-            Some(latency) => Ok(EngineDevice::Fake { manifest, latency }),
-            None => Runtime::new(manifest).map(|rt| EngineDevice::Real(Box::new(rt))),
+            Some(latency) => Ok(EngineDevice::Fake { manifest: Arc::clone(manifest), latency }),
+            None => Runtime::new((**manifest).clone()).map(|rt| EngineDevice::Real(Box::new(rt))),
         }
     }
 
@@ -774,22 +868,63 @@ impl EngineDevice {
         }
     }
 
-    /// Upload checkpoints + compile the executable grid (fake: no-op —
-    /// there is nothing to warm, readiness is immediate).
-    fn preload(
-        &mut self,
-        preload: &[(String, String, Container)],
-        precompile: &[(String, usize, usize)],
-    ) -> Result<()> {
+    /// Upload one version's (task, mode) checkpoints (fake: no-op —
+    /// there is nothing to stage).  A failure is typed per cell so the
+    /// supervisor can tell a corrupt checkpoint from a dead replica.
+    fn upload_version_checkpoints(&mut self, payload: &VersionPayload) -> Result<()> {
         if let EngineDevice::Real(rt) = self {
-            for (task, mode, ckpt) in preload {
-                rt.upload_checkpoint(task, mode, ckpt)?;
-            }
-            for (mode, seq, bucket) in precompile {
-                rt.model_exe(mode, *seq, *bucket)?;
+            for (task, mode, ckpt) in payload.preload.iter() {
+                let ids = {
+                    // name -> id resolution is stable across versions
+                    // (reload requires identical task/mode orders)
+                    let man = &rt.manifest;
+                    man.task_id(task).and_then(|t| man.mode_id(mode).map(|m| (t, m)))
+                };
+                let res =
+                    ids.and_then(|(t, m)| rt.upload_checkpoint_v(payload.version, t, m, ckpt));
+                if let Err(e) = res {
+                    return Err(anyhow::Error::new(PreloadError::Checkpoint {
+                        task: task.clone(),
+                        mode: mode.clone(),
+                        cause: format!("{e:#}"),
+                    }));
+                }
             }
         }
         Ok(())
+    }
+
+    /// Compile + insert one executable grid cell; returns the artifact's
+    /// on-disk size for the residency byte ledger.  The fake device has
+    /// nothing to compile — loads are instant (0 bytes), which lets the
+    /// chaos suite exercise the full residency protocol without PJRT.
+    fn load_cell(&mut self, man: &Manifest, key: CellKey) -> Result<u64> {
+        match self {
+            EngineDevice::Real(rt) => {
+                let mode = ModeId(key.mode);
+                let (exe, bytes) = rt.load_exe(man, mode, key.seq, key.bucket)?;
+                rt.insert_exe(key.version, mode, key.seq, key.bucket, exe);
+                Ok(bytes)
+            }
+            EngineDevice::Fake { .. } => Ok(0),
+        }
+    }
+
+    /// Drop evicted cells' device-side executables.
+    fn evict_cells(&mut self, keys: &[CellKey]) {
+        if let EngineDevice::Real(rt) = self {
+            for k in keys {
+                rt.remove_exe(k.version, ModeId(k.mode), k.seq, k.bucket);
+            }
+        }
+    }
+
+    /// Drop checkpoints of versions older than `keep_min` (reload keeps
+    /// the current + draining versions' weights resident).
+    fn drop_version_ckpts(&mut self, keep_min: u32) {
+        if let EngineDevice::Real(rt) = self {
+            rt.drop_version_ckpts(keep_min);
+        }
     }
 
     fn upload(&self, host: &StagingBuf) -> Result<EngineInputs> {
@@ -811,15 +946,19 @@ impl EngineDevice {
         }
     }
 
+    /// Launch against a resident cell — `&self`, never compiles: the
+    /// residency resolve above this call guaranteed the cell (a typed
+    /// error surfaces if bookkeeping and device state disagree).
     fn execute(
-        &mut self,
+        &self,
+        version: u32,
         task: TaskId,
         mode: ModeId,
         inputs: &EngineInputs,
     ) -> Result<EnginePending> {
         match (self, inputs) {
             (EngineDevice::Real(rt), EngineInputs::Real(i)) => {
-                rt.execute_model(task, mode, i).map(EnginePending::Real)
+                rt.execute_model_at(version, task, mode, i).map(EnginePending::Real)
             }
             (EngineDevice::Fake { latency, .. }, EngineInputs::Fake { rows }) => {
                 // the fake "device" is busy for the scripted latency —
@@ -1014,32 +1153,83 @@ pub enum PoolEvent {
     ReplicaExcluded { replica: usize },
     /// Periodic liveness sample for a live replica.
     Heartbeat { replica: usize, generation: u64, age_us: u64 },
+    /// An executable cell became resident (pin, warm, or demand miss);
+    /// `resident` is the replica's post-load resident cell count.
+    CellLoaded { replica: usize, load_us: u64, pinned: bool, resident: usize },
+    /// A cell was LRU-evicted (or dropped with its drained version).
+    CellEvicted { replica: usize, resident: usize },
+    /// A batch resolved its executable cell: `hit` = already resident;
+    /// `wait_us` is what the batch waited on the residency table (~0 on
+    /// a hit, the compile+upload latency on a miss).
+    ResidencyLookup { replica: usize, hit: bool, wait_us: u64 },
 }
 
 /// Pool event subscriber (see `EnginePool::set_event_hook`).
 pub type PoolEventHook = Arc<dyn Fn(PoolEvent) + Send + Sync>;
 
+/// One manifest version's startup/reload inputs: the parsed manifest
+/// (artifact paths), every route's (task, mode) checkpoints, and the
+/// pin set as `(mode index, seq bucket, batch bucket)` cells.  Reload
+/// (`EnginePool::push_version`) appends one of these to the shared
+/// version list and broadcasts it to every replica queue.
+pub struct VersionPayload {
+    pub version: u32,
+    pub manifest: Arc<Manifest>,
+    pub preload: Arc<Vec<(String, String, Container)>>,
+    pub pins: Arc<Vec<(u16, usize, usize)>>,
+}
+
 /// Everything needed to (re)spawn a replica incarnation — kept by the
 /// pool so the supervisor can respawn with the exact startup inputs.
+/// The version list is shared (append-only under its lock): a respawn
+/// snapshots it so a restarted replica comes back knowing every version
+/// pushed while it was down.
 struct Spawner {
-    artifacts: PathBuf,
-    preload: Arc<Vec<(String, String, Container)>>,
-    precompile: Vec<(String, usize, usize)>,
+    versions: Arc<Mutex<Vec<Arc<VersionPayload>>>>,
+    /// Per-slot residency tables — owned here (not by the incarnation)
+    /// so they survive restarts and the supervisor can `clear` them on
+    /// terminal exclusion.
+    residencies: Vec<Arc<Residency>>,
+    /// Shared with engine threads so they can emit residency events
+    /// (`CellLoaded`/`CellEvicted`/`ResidencyLookup`).
+    hook: Arc<RwLock<Option<PoolEventHook>>>,
     pool: Arc<ThreadPool>,
     staging: Arc<StagingPool>,
     options: EngineOptions,
 }
 
 impl Spawner {
+    fn new(
+        payload: Arc<VersionPayload>,
+        replicas: usize,
+        pool: Arc<ThreadPool>,
+        staging: Arc<StagingPool>,
+        options: EngineOptions,
+    ) -> Spawner {
+        let residencies = (0..replicas)
+            .map(|_| {
+                Arc::new(Residency::new(options.max_resident_cells, options.max_resident_bytes))
+            })
+            .collect();
+        Spawner {
+            versions: Arc::new(Mutex::new(vec![payload])),
+            residencies,
+            hook: Arc::new(RwLock::new(None)),
+            pool,
+            staging,
+            options,
+        }
+    }
+
     fn spawn(&self, replica: usize, generation: u64, epoch: Instant) -> Result<PendingReplica> {
         let queue = JobQueue::new();
         let health = Arc::new(ReplicaHealth::default());
         let sweep = Arc::new(SweepTable::default());
         let (ready_tx, ready_rx) = channel::<Result<RouteTables>>();
         let ctx = EngineCtx {
-            artifacts: self.artifacts.clone(),
-            preload: Arc::clone(&self.preload),
-            precompile: self.precompile.clone(),
+            versions: Arc::clone(&self.versions),
+            residency: Arc::clone(&self.residencies[replica]),
+            hook: Arc::clone(&self.hook),
             queue: Arc::clone(&queue),
             ready_tx,
             pool: Arc::clone(&self.pool),
@@ -1101,19 +1291,44 @@ struct PoolShared {
     slots: Vec<ReplicaSlot>,
     tables: RouteTables,
     spawner: Spawner,
-    hook: RwLock<Option<PoolEventHook>>,
     stop: AtomicBool,
     /// Pool birth — the zero point for heartbeat timestamps.
     epoch: Instant,
 }
 
+/// Fire the pool event hook (shared between the supervisor, which holds
+/// `PoolShared`, and engine threads, which only hold the `Arc`'d hook).
+fn emit_hook(hook: &RwLock<Option<PoolEventHook>>, ev: PoolEvent) {
+    // panic-ok: hook panics run outside the read guard (worker pool
+    // isolation); writers only swap the Option
+    if let Some(h) = hook.read().expect("pool event hook").as_ref() {
+        h(ev);
+    }
+}
+
 impl PoolShared {
     fn emit(&self, ev: PoolEvent) {
-        // panic-ok: hook panics run outside the read guard (worker pool
-        // isolation); writers only swap the Option
-        if let Some(h) = self.hook.read().expect("pool event hook").as_ref() {
-            h(ev);
-        }
+        emit_hook(&self.spawner.hook, ev);
+    }
+
+    /// Release a terminally excluded slot's device-side footprint: clear
+    /// its residency table (the next `Residency::counters` read shows
+    /// zero resident cells) and shrink the staging pool's per-cell cap
+    /// to match the surviving replica count.  The engine thread is
+    /// already gone at this point, so its `Runtime` (executable tables,
+    /// checkpoints, PJRT client) was dropped with the thread stack —
+    /// this tears down what the *pool* still holds for the slot.
+    fn teardown_slot(&self, replica: usize) {
+        self.spawner.residencies[replica].clear();
+        let live = self
+            .slots
+            .iter()
+            // panic-ok: slot critical sections are panic-free (see submit_inner)
+            .filter(|s| {
+                !matches!(s.inner.lock().expect("replica slot").state, SlotState::Excluded)
+            })
+            .count();
+        self.spawner.staging.trim(live, self.slots.len());
     }
 
     /// Route one batch through the load-aware dispatcher.  The completion
@@ -1130,10 +1345,11 @@ impl PoolShared {
         for _ in 0..self.state.replicas() {
             let (replica, generation) = self.state.assign(key);
             let shared = Arc::clone(self);
-            let InferJob { task, policy, staging, cancel, done } = job;
+            let InferJob { task, policy, version, staging, cancel, done } = job;
             let wrapped = InferJob {
                 task,
                 policy,
+                version,
                 staging,
                 cancel,
                 done: Completion::new(move |res| {
@@ -1167,7 +1383,7 @@ impl PoolShared {
                     self.state.mark_dead(replica);
                     job = *boxed;
                 }
-                Err(Msg::Stop) => unreachable!("submit only sends Infer"),
+                Err(_) => unreachable!("submit only sends Infer"),
             }
         }
         Err(Box::new(job))
@@ -1198,22 +1414,28 @@ pub struct EnginePool {
 
 impl EnginePool {
     /// Spawn `options.replicas` engine threads plus the supervisor.  All
-    /// replicas start concurrently (checkpoint upload + executable
-    /// precompile overlap across threads) and share one read-only preload
-    /// set; the call returns once every replica reports ready, or the
-    /// first error.
+    /// replicas start concurrently (checkpoint upload + pin-set compile
+    /// overlap across threads) and share one read-only version payload;
+    /// the call returns once every replica reports ready, or the first
+    /// error.  Startup loads *only* `payload.pins` — everything else in
+    /// the grid compiles on first demand (DESIGN.md §5.13).
     pub fn spawn(
-        artifacts: PathBuf,
-        preload: Vec<(String, String, Container)>,
-        precompile: Vec<(String, usize, usize)>,
+        payload: Arc<VersionPayload>,
         pool: Arc<ThreadPool>,
         staging: Arc<StagingPool>,
         options: EngineOptions,
+        hook: Option<PoolEventHook>,
     ) -> Result<EnginePool> {
         let n = options.replicas.max(1);
         let epoch = Instant::now();
-        let spawner =
-            Spawner { artifacts, preload: Arc::new(preload), precompile, pool, staging, options };
+        let spawner = Spawner::new(payload, n, pool, staging, options);
+        if let Some(h) = hook {
+            // installed before the first incarnation spawns so the
+            // startup pin loads are ledgered too (the residency smoke
+            // asserts startup loads == the pin set)
+            // panic-ok: the write guard only swaps the Option (see emit_hook)
+            *spawner.hook.write().expect("pool event hook") = Some(h);
+        }
         let pending: Vec<PendingReplica> =
             (0..n).map(|i| spawner.spawn(i, 0, epoch)).collect::<Result<_>>()?;
         // wait in replica order; if one fails, close every other queue so
@@ -1262,7 +1484,6 @@ impl EnginePool {
             // clamped to >= 1 at entry) and filled `tables`
             tables: tables.expect("at least one replica"),
             spawner,
-            hook: RwLock::new(None),
             stop: AtomicBool::new(false),
             epoch,
         });
@@ -1315,8 +1536,65 @@ impl EnginePool {
     /// previous hook.  Called from the supervisor thread — keep it quick
     /// and never call back into the pool.
     pub fn set_event_hook(&self, hook: PoolEventHook) {
-        // panic-ok: the write guard only swaps the Option (see emit)
-        *self.shared.hook.write().expect("pool event hook") = Some(hook);
+        // panic-ok: the write guard only swaps the Option (see emit_hook)
+        *self.shared.spawner.hook.write().expect("pool event hook") = Some(hook);
+    }
+
+    /// Install a new manifest version on every replica (hot reload).
+    /// The payload is appended to the shared version list (so replicas
+    /// restarting later pick it up at startup) and a `Reload` message is
+    /// broadcast to every live *and* restarting incarnation's queue.
+    /// Idempotent per version number; the caller swaps the admission
+    /// version only after this returns, so new requests never race ahead
+    /// of the install broadcast (a queued `Reload` is processed before
+    /// any job enqueued after it).
+    pub fn push_version(&self, payload: Arc<VersionPayload>) {
+        {
+            // panic-ok: the version list critical section only pushes
+            let mut versions = self.shared.spawner.versions.lock().expect("version list");
+            if versions.iter().any(|p| p.version == payload.version) {
+                return;
+            }
+            versions.push(Arc::clone(&payload));
+        }
+        for slot in &self.shared.slots {
+            // panic-ok: slot critical sections are panic-free (see submit_inner)
+            let slot = slot.inner.lock().expect("replica slot");
+            let queue = match &slot.state {
+                SlotState::Live(l) => &l.queue,
+                SlotState::Restarting { live, .. } => &live.queue,
+                _ => continue,
+            };
+            // a closed queue means the incarnation is dying; the shared
+            // version list covers its successor
+            let _ = queue.push(Msg::Reload(Arc::clone(&payload)));
+        }
+    }
+
+    /// Whether *any* replica has an executable resident for
+    /// `(version, mode, seq_bucket)` at any batch bucket.  Used by the
+    /// admission path to decide if a governed downshift would stall on a
+    /// cold compile (DESIGN.md §5.13).
+    pub fn any_resident(&self, version: u32, mode: ModeId, seq_bucket: usize) -> bool {
+        self.shared
+            .spawner
+            .residencies
+            .iter()
+            .any(|r| r.any_resident(version, mode.0, seq_bucket))
+    }
+
+    /// Ask every live replica to load `(version, mode, seq, bucket)` in
+    /// the background (between batches).  Fire-and-forget: replicas that
+    /// are down simply skip the warm; a later demand miss still works.
+    pub fn warm(&self, version: u32, mode: ModeId, seq: usize, bucket: usize) {
+        let key = CellKey { version, mode: mode.0, seq, bucket };
+        for slot in &self.shared.slots {
+            // panic-ok: slot critical sections are panic-free (see submit_inner)
+            let slot = slot.inner.lock().expect("replica slot");
+            if let SlotState::Live(l) = &slot.state {
+                let _ = l.queue.push(Msg::Warm(key));
+            }
+        }
     }
 
     /// Route one batch through the load-aware dispatcher (see
@@ -1465,15 +1743,27 @@ fn poll_replica(shared: &Arc<PoolShared>, r: usize, last: &mut (u64, Instant)) {
                     });
                     SlotState::Live(live)
                 }
-                // still warming (preload/precompile) — keep watching the
-                // other replicas rather than blocking on this one
+                // still warming (checkpoint upload / pin compile) — keep
+                // watching the other replicas rather than blocking on this one
                 Err(TryRecvError::Empty) => SlotState::Restarting { live, ready_rx },
+                // A typed preload error names one corrupt artifact cell:
+                // restarting cannot fix the artifact, so exclude immediately
+                // instead of burning the restart budget on it.
+                Ok(Err(e)) if e.downcast_ref::<PreloadError>().is_some() => {
+                    events.push(PoolEvent::ReplicaExcluded { replica: r });
+                    SlotState::Excluded
+                }
                 Ok(Err(_)) | Err(TryRecvError::Disconnected) => {
                     breaker_step(r, &mut inner, policy, now, &mut events)
                 }
             },
             other => other,
         };
+    }
+    // a terminal exclusion releases the slot's residual footprint
+    // (residency table, staging shelf share) outside the slot lock
+    if events.iter().any(|e| matches!(e, PoolEvent::ReplicaExcluded { .. })) {
+        shared.teardown_slot(r);
     }
     // recoverable (never-uploaded) orphans ride a live replica; if none
     // is left their drop-guarded completions still deliver ReplicaFailed
@@ -1572,6 +1862,9 @@ struct InFlight {
     t0: Instant,
     upload_us: u64,
     exec_seq: u64,
+    /// Residency resolution wait (0 on a hit) — clocked *before* `t_job`
+    /// so `engine_us`/`upload_us` stay comparable across hits and misses.
+    load_wait_us: u64,
 }
 
 /// Stage 3: synchronize, copy logits to host, and hand de-batching +
@@ -1586,15 +1879,16 @@ fn retire(dev: &EngineDevice, f: InFlight, pool: &ThreadPool, replica: usize, sw
         engine_us: f.t_job.elapsed().as_micros() as u64,
         replica,
         exec_seq: f.exec_seq,
+        load_wait_us: f.load_wait_us,
     });
     pool.spawn(move || done.run(res));
 }
 
 /// Startup + loop inputs for one replica incarnation.
 struct EngineCtx {
-    artifacts: PathBuf,
-    preload: Arc<Vec<(String, String, Container)>>,
-    precompile: Vec<(String, usize, usize)>,
+    versions: Arc<Mutex<Vec<Arc<VersionPayload>>>>,
+    residency: Arc<Residency>,
+    hook: Arc<RwLock<Option<PoolEventHook>>>,
     queue: Arc<JobQueue>,
     ready_tx: Sender<Result<RouteTables>>,
     pool: Arc<ThreadPool>,
@@ -1607,11 +1901,120 @@ struct EngineCtx {
     epoch: Instant,
 }
 
+/// Background-load one cell between batches (`Msg::Warm`, or a reload's
+/// new pin set warming in).  Never blocks a job: a resident cell is a
+/// no-op, a concurrent load elsewhere is left to finish on its own, and
+/// a failed load just clears the marker (the next demand miss retries).
+fn warm_cell(
+    dev: &mut EngineDevice,
+    residency: &Residency,
+    known: &BTreeMap<u32, Arc<VersionPayload>>,
+    pin_set: &HashSet<CellKey>,
+    key: CellKey,
+    hook: &RwLock<Option<PoolEventHook>>,
+    replica: usize,
+) {
+    if residency.is_resident(key) {
+        return;
+    }
+    let Some(payload) = known.get(&key.version) else { return };
+    match residency.begin(key) {
+        Begin::Hit => {}
+        Begin::Load => {
+            let t0 = Instant::now();
+            match dev.load_cell(&payload.manifest, key) {
+                Ok(bytes) => {
+                    let pinned = pin_set.contains(&key);
+                    let evicted = residency.complete(key, bytes, pinned);
+                    dev.evict_cells(&evicted);
+                    let resident = residency.counters().resident;
+                    emit_hook(
+                        hook,
+                        PoolEvent::CellLoaded {
+                            replica,
+                            load_us: t0.elapsed().as_micros() as u64,
+                            pinned,
+                            resident,
+                        },
+                    );
+                    for _ in &evicted {
+                        emit_hook(hook, PoolEvent::CellEvicted { replica, resident });
+                    }
+                }
+                Err(_) => residency.fail(key),
+            }
+        }
+    }
+}
+
+/// Install a reload payload on this incarnation: upload its checkpoints,
+/// swap the pin set (old pins unpin and age out via LRU; new pins warm
+/// in between batches), and drain every version older than
+/// `payload.version - 1` — one predecessor stays resident so in-flight
+/// and still-queued jobs stamped with it finish cleanly.
+#[allow(clippy::too_many_arguments)]
+fn apply_reload(
+    dev: &mut EngineDevice,
+    residency: &Residency,
+    known: &mut BTreeMap<u32, Arc<VersionPayload>>,
+    pin_set: &mut HashSet<CellKey>,
+    pending_warm: &mut VecDeque<CellKey>,
+    payload: Arc<VersionPayload>,
+    hook: &RwLock<Option<PoolEventHook>>,
+    replica: usize,
+) {
+    // idempotent: push_version broadcasts to live + restarting queues and
+    // a restart also snapshots the shared list, so duplicates are normal
+    if known.contains_key(&payload.version) {
+        return;
+    }
+    if dev.upload_version_checkpoints(&payload).is_err() {
+        // version stays uninstalled on this replica; jobs stamped with it
+        // fail with a typed "not resident" error rather than killing the
+        // incarnation (the coordinator only swaps admission after
+        // push_version, so this window is a degraded replica, not a
+        // client-visible outage)
+        return;
+    }
+    let new_pins: Vec<CellKey> = payload
+        .pins
+        .iter()
+        .map(|&(mode, seq, bucket)| CellKey { version: payload.version, mode, seq, bucket })
+        .collect();
+    let evicted = residency.repin(&new_pins);
+    dev.evict_cells(&evicted);
+    let resident = residency.counters().resident;
+    for _ in &evicted {
+        emit_hook(hook, PoolEvent::CellEvicted { replica, resident });
+    }
+    *pin_set = new_pins.iter().copied().collect();
+    for key in new_pins {
+        if !residency.is_resident(key) && !pending_warm.contains(&key) {
+            pending_warm.push_back(key);
+        }
+    }
+    known.insert(payload.version, payload);
+    // drain everything older than the immediate predecessor
+    let newest = *known.keys().next_back().unwrap_or(&0);
+    let keep_min = newest.saturating_sub(1);
+    let dropped = residency.drop_versions_below(keep_min);
+    if !dropped.is_empty() {
+        dev.evict_cells(&dropped);
+        let resident = residency.counters().resident;
+        for _ in &dropped {
+            emit_hook(hook, PoolEvent::CellEvicted { replica, resident });
+        }
+    }
+    dev.drop_version_ckpts(keep_min);
+    known.retain(|v, _| *v >= keep_min);
+    pending_warm.retain(|k| k.version >= keep_min);
+}
+
 fn engine_main(ctx: EngineCtx) {
     let EngineCtx {
-        artifacts,
-        preload,
-        precompile,
+        versions,
+        residency,
+        hook,
         queue,
         ready_tx,
         pool,
@@ -1624,27 +2027,91 @@ fn engine_main(ctx: EngineCtx) {
         epoch,
     } = ctx;
     let faults = options.fault_plan.for_replica(replica, generation);
-    let mut dev = match EngineDevice::open(&artifacts, options.fake) {
+    // snapshot the shared version list: every version pushed so far must
+    // be installed before this incarnation reports ready (a restarted
+    // replica joins at the pool's current version, not its birth version)
+    let snapshot: Vec<Arc<VersionPayload>> = {
+        // panic-ok: the version list critical section only clones Arcs
+        versions.lock().expect("version list").clone()
+    };
+    let Some(latest) = snapshot.last().cloned() else {
+        let _ = ready_tx.send(Err(anyhow!("replica {replica}: empty version list")));
+        return;
+    };
+    let mut dev = match EngineDevice::open(&latest.manifest, options.fake) {
         Ok(d) => d,
         Err(e) => {
             let _ = ready_tx.send(Err(e));
             return;
         }
     };
-    let tables = match dev.preload(&preload, &precompile).map(|()| {
-        RouteTables::from_manifest(dev.manifest())
-    }) {
-        Ok(t) => t,
-        Err(e) => {
+    // a fresh incarnation starts from an empty residency table (the
+    // previous incarnation's device state died with its thread)
+    residency.reset();
+    // installed versions on this incarnation (checkpoints uploaded)
+    let mut known: BTreeMap<u32, Arc<VersionPayload>> = BTreeMap::new();
+    for payload in &snapshot {
+        if let Err(e) = dev.upload_version_checkpoints(payload) {
             let _ = ready_tx.send(Err(e));
             return;
         }
-    };
+        known.insert(payload.version, Arc::clone(payload));
+    }
+    if faults.fail_preload {
+        let _ = ready_tx.send(Err(anyhow::Error::new(PreloadError::Executable {
+            mode: "fault-injected".into(),
+            seq: 0,
+            bucket: 0,
+            cause: "fault injection: FailPreload".into(),
+        })));
+        return;
+    }
+    // startup loads exactly the newest version's pin set — nothing else
+    // (the ISSUE's ledger assertion: startup loads == pinned cells)
+    let mut pin_set: HashSet<CellKey> = HashSet::new();
+    for &(mode, seq, bucket) in latest.pins.iter() {
+        let key = CellKey { version: latest.version, mode, seq, bucket };
+        pin_set.insert(key);
+        match residency.begin(key) {
+            Begin::Hit => {}
+            Begin::Load => {
+                let t0 = Instant::now();
+                match dev.load_cell(&latest.manifest, key) {
+                    Ok(bytes) => {
+                        let evicted = residency.complete(key, bytes, true);
+                        dev.evict_cells(&evicted);
+                        emit_hook(
+                            &hook,
+                            PoolEvent::CellLoaded {
+                                replica,
+                                load_us: t0.elapsed().as_micros() as u64,
+                                pinned: true,
+                                resident: residency.counters().resident,
+                            },
+                        );
+                    }
+                    Err(e) => {
+                        residency.fail(key);
+                        let _ = ready_tx.send(Err(anyhow::Error::new(PreloadError::Executable {
+                            mode: latest.manifest.mode_name(ModeId(key.mode)).to_string(),
+                            seq: key.seq,
+                            bucket: key.bucket,
+                            cause: format!("{e:#}"),
+                        })));
+                        return;
+                    }
+                }
+            }
+        }
+    }
+    let tables = RouteTables::from_manifest(dev.manifest());
     // keep the engine thread's own copy of executable selection
     let policy_exec = tables.policy_exec.clone();
     if ready_tx.send(Ok(tables)).is_err() {
         return;
     }
+    // warm requests deferred to idle gaps between batches
+    let mut pending_warm: VecDeque<CellKey> = VecDeque::new();
 
     let mut inflight: Option<InFlight> = None;
     // per-replica batch serial, stamped in execution order (the
@@ -1654,7 +2121,10 @@ fn engine_main(ctx: EngineCtx) {
     let mut batches: u64 = 0;
     loop {
         // With a batch executing, prefer new work (to keep the device fed)
-        // but retire the head batch as soon as the queue runs dry.
+        // but retire the head batch as soon as the queue runs dry.  Warm
+        // loads run strictly in idle gaps: only once the queue is empty
+        // and nothing is in flight, one warm per iteration so a fresh
+        // job never waits behind a warm backlog.
         let msg = if inflight.is_some() {
             match queue.try_pop() {
                 TryPop::Msg(m) => Some(m),
@@ -1663,7 +2133,23 @@ fn engine_main(ctx: EngineCtx) {
                         retire(&dev, f, &pool, replica, &sweep);
                         health.beat(&epoch);
                     }
-                    queue.pop()
+                    if pending_warm.is_empty() {
+                        queue.pop()
+                    } else {
+                        continue;
+                    }
+                }
+                TryPop::Closed => None,
+            }
+        } else if !pending_warm.is_empty() {
+            match queue.try_pop() {
+                TryPop::Msg(m) => Some(m),
+                TryPop::Empty => {
+                    if let Some(key) = pending_warm.pop_front() {
+                        warm_cell(&mut dev, &residency, &known, &pin_set, key, &hook, replica);
+                        health.beat(&epoch);
+                    }
+                    continue;
                 }
                 TryPop::Closed => None,
             }
@@ -1672,13 +2158,33 @@ fn engine_main(ctx: EngineCtx) {
         };
         let job = match msg {
             Some(Msg::Infer(job)) => *job,
+            Some(Msg::Reload(payload)) => {
+                apply_reload(
+                    &mut dev,
+                    &residency,
+                    &mut known,
+                    &mut pin_set,
+                    &mut pending_warm,
+                    payload,
+                    &hook,
+                    replica,
+                );
+                health.beat(&epoch);
+                continue;
+            }
+            Some(Msg::Warm(key)) => {
+                if !pending_warm.contains(&key) {
+                    pending_warm.push_back(key);
+                }
+                continue;
+            }
             Some(Msg::Stop) | None => break,
         };
         // heartbeat 1: job de-queued
         health.beat(&epoch);
         let batch_no = batches;
         batches += 1;
-        let InferJob { task, policy, staging: host, cancel, done } = job;
+        let InferJob { task, policy, version, staging: host, cancel, done } = job;
         // scripted faults fire while `done` is live on this stack frame,
         // so a panic's unwind runs its drop-guard (ReplicaFailed out)
         if let Some((at, dur)) = faults.stall {
@@ -1721,6 +2227,67 @@ fn engine_main(ctx: EngineCtx) {
                 continue;
             }
         };
+        // Residency resolution runs on its own clock, *before* t_job:
+        // a demand-miss compile must show up as load_wait_us, never as
+        // upload_us/engine_us (hit and miss batches stay comparable).
+        let cell = CellKey { version, mode: mode.0, seq: host.seq, bucket: host.bucket };
+        let t_res = Instant::now();
+        match residency.begin(cell) {
+            Begin::Hit => {
+                emit_hook(
+                    &hook,
+                    PoolEvent::ResidencyLookup {
+                        replica,
+                        hit: true,
+                        wait_us: t_res.elapsed().as_micros() as u64,
+                    },
+                );
+            }
+            Begin::Load => {
+                let load = match known.get(&version) {
+                    Some(p) => dev.load_cell(&p.manifest, cell),
+                    None => Err(anyhow!(
+                        "manifest version {version} is not installed on replica {replica} \
+                         (reload drained it or its checkpoint upload failed)"
+                    )),
+                };
+                match load {
+                    Ok(bytes) => {
+                        let pinned = pin_set.contains(&cell);
+                        let evicted = residency.complete(cell, bytes, pinned);
+                        dev.evict_cells(&evicted);
+                        let resident = residency.counters().resident;
+                        let wait_us = t_res.elapsed().as_micros() as u64;
+                        emit_hook(
+                            &hook,
+                            PoolEvent::CellLoaded { replica, load_us: wait_us, pinned, resident },
+                        );
+                        for _ in &evicted {
+                            emit_hook(&hook, PoolEvent::CellEvicted { replica, resident });
+                        }
+                        emit_hook(
+                            &hook,
+                            PoolEvent::ResidencyLookup { replica, hit: false, wait_us },
+                        );
+                    }
+                    Err(e) => {
+                        residency.fail(cell);
+                        emit_hook(
+                            &hook,
+                            PoolEvent::ResidencyLookup {
+                                replica,
+                                hit: false,
+                                wait_us: t_res.elapsed().as_micros() as u64,
+                            },
+                        );
+                        staging.put(host);
+                        pool.spawn(move || done.run(Err(e)));
+                        continue;
+                    }
+                }
+            }
+        }
+        let load_wait_us = t_res.elapsed().as_micros() as u64;
         let t_job = Instant::now();
         if let Some(d) = faults.slow_upload {
             crate::sync::thread::sleep(d);
@@ -1754,7 +2321,7 @@ fn engine_main(ctx: EngineCtx) {
         // the upload returned: InferDone::exec_us must not double-count
         // upload_us (it used to, inflating per-batch exec reporting).
         let t0 = Instant::now();
-        let launched = dev.execute(task, mode, &inputs);
+        let launched = dev.execute(version, task, mode, &inputs);
         // Stage 3 for the previous batch: its readback now overlaps this
         // batch's execution.
         if let Some(f) = inflight.take() {
@@ -1762,7 +2329,7 @@ fn engine_main(ctx: EngineCtx) {
         }
         match launched {
             Ok(pending) => {
-                let f = InFlight { pending, done_id, t_job, t0, upload_us, exec_seq };
+                let f = InFlight { pending, done_id, t_job, t0, upload_us, exec_seq, load_wait_us };
                 if options.overlap {
                     inflight = Some(f);
                 } else {
@@ -1898,6 +2465,15 @@ mod tests {
         assert_eq!(cp.completion_panic(), Some(7));
         assert_eq!(cp.for_replica(0, 0).panic_at, None);
         assert!(FaultPlan::default().is_empty());
+        // from_gen arms a fault only from that generation onward — the
+        // chaos suite uses it to corrupt a replica's *restart* preload
+        // while its first incarnation boots cleanly
+        let fp = FaultPlan::default()
+            .with(FaultSpec::on(0, FaultKind::FailPreload).from_gen(1).persistent());
+        assert!(!fp.for_replica(0, 0).fail_preload);
+        assert!(fp.for_replica(0, 1).fail_preload);
+        assert!(fp.for_replica(0, 2).fail_preload);
+        assert!(!fp.for_replica(1, 1).fail_preload);
     }
 
     #[test]

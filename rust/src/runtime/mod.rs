@@ -11,20 +11,26 @@
 //! own `Runtime` (checkpoints + executables), behind a load-aware
 //! dispatcher with per-group FIFO pinning (DESIGN.md §5.7).
 //!
-//! Hot-path tables are dense: executables live in a
-//! `[mode][seq_bucket][batch_bucket]`-indexed `Vec` and checkpoints in
-//! `[task][mode]`, both sized from the manifest, so steady-state dispatch
-//! is three array indexes — no string hashing, no `HashMap` probes
-//! (DESIGN.md §5.2, §5.9).  The string-keyed methods remain as cold-path
-//! wrappers that resolve names to `TaskId`/`ModeId` once.
+//! Executables and checkpoints live in maps keyed by `(version, mode,
+//! seq_bucket, batch_bucket)` / `(version, task, mode)`: residency
+//! (DESIGN.md §5.13) loads and evicts individual grid cells on demand,
+//! and hot manifest reload keeps several versions' tables side by side
+//! while old in-flight work drains.  Lookup (`exe_at`, `execute_model_at`)
+//! borrows `&self` so the hot path never takes a mutable borrow; the
+//! compile step (`load_exe`) is split out so the engine can run it off
+//! the dispatch-critical section.  The string-keyed methods remain as
+//! cold-path wrappers that resolve names to `TaskId`/`ModeId` once and
+//! pin everything at version 0 (the CLI single-manifest world).
 
 pub mod engine;
+pub mod residency;
 pub mod staging;
 
 pub use engine::{
     DispatchState, Engine, EngineOptions, EnginePool, FaultKind, FaultPlan, FaultSpec, PoolEvent,
     PoolEventHook, ReplicaFailed, RestartPolicy,
 };
+pub use residency::{Begin, CellKey, Residency, ResidencyCounters};
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -73,14 +79,18 @@ pub struct PendingOutputs {
 
 pub struct Runtime {
     pub client: xla::PjRtClient,
+    /// Version-0 manifest (CLI paths and legacy wrappers); versioned
+    /// callers pass their own manifest into `load_exe`.
     pub manifest: Manifest,
-    /// `[mode][seq_bucket_index][bucket_index]` -> compiled model
-    /// executable (the (seq, batch) grid of DESIGN.md §5.9).
-    exes: Vec<Vec<Vec<Option<Exe>>>>,
+    /// `(version, mode, seq_bucket, batch_bucket)` -> compiled model
+    /// executable — the residency-managed grid (DESIGN.md §5.13): cells
+    /// are inserted by `insert_exe` after a demand load and removed by
+    /// `remove_exe` on eviction, so the map holds only resident cells.
+    exes: HashMap<(u32, u16, usize, usize), Exe>,
     /// misc executables (calibration artifact, micro benches) by path.
     raw_exes: HashMap<String, Exe>,
-    /// `[task][mode]` -> device-resident weights.
-    ckpts: Vec<Vec<Option<DeviceCheckpoint>>>,
+    /// `(version, task, mode)` -> device-resident weights.
+    ckpts: HashMap<(u32, u16, u16), DeviceCheckpoint>,
 }
 
 #[allow(dead_code)]
@@ -95,17 +105,13 @@ fn elem_type(dt: DType) -> xla::ElementType {
 impl Runtime {
     pub fn new(manifest: Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
-        let exes = (0..manifest.num_modes())
-            .map(|_| {
-                (0..manifest.num_seq_buckets())
-                    .map(|_| (0..manifest.num_buckets()).map(|_| None).collect())
-                    .collect()
-            })
-            .collect();
-        let ckpts = (0..manifest.num_tasks())
-            .map(|_| (0..manifest.num_modes()).map(|_| None).collect())
-            .collect();
-        Ok(Runtime { client, manifest, exes, raw_exes: HashMap::new(), ckpts })
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            raw_exes: HashMap::new(),
+            ckpts: HashMap::new(),
+        })
     }
 
     // ---------------------------------------------------------------- load
@@ -129,34 +135,76 @@ impl Runtime {
         })
     }
 
+    /// Resident-cell lookup: `&self`, no compile — the residency-managed
+    /// hot path.  `None` means the cell is cold (evicted or never
+    /// loaded); the caller goes through `Residency::begin` + `load_exe`.
+    pub fn exe_at(&self, version: u32, mode: ModeId, seq: usize, bucket: usize) -> Option<&Exe> {
+        self.exes.get(&(version, mode.0, seq, bucket))
+    }
+
+    /// Compile one grid cell from `man`'s artifact table without
+    /// inserting it — `&self`, so the load can run while the executable
+    /// table is borrowed elsewhere.  Returns the executable plus the
+    /// artifact's on-disk size (the residency byte ledger's input).
+    pub fn load_exe(
+        &self,
+        man: &Manifest,
+        mode: ModeId,
+        seq: usize,
+        bucket: usize,
+    ) -> Result<(Exe, u64)> {
+        man.seq_bucket_index(seq)
+            .with_context(|| format!("mode {} has no seq bucket {seq}", man.mode_name(mode)))?;
+        man.bucket_index(bucket)
+            .with_context(|| format!("mode {} has no bucket {bucket}", man.mode_name(mode)))?;
+        let spec = man.mode_by_id(mode);
+        let rel = spec.artifacts.get(&(seq, bucket)).with_context(|| {
+            format!(
+                "mode {} has no artifact for (seq {seq}, bucket {bucket})",
+                man.mode_name(mode)
+            )
+        })?;
+        let path = man.path(rel);
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let exe = Self::compile_hlo_file(&self.client, &path)?;
+        Ok((exe, bytes))
+    }
+
+    /// Make a loaded cell resident.
+    pub fn insert_exe(&mut self, version: u32, mode: ModeId, seq: usize, bucket: usize, exe: Exe) {
+        self.exes.insert((version, mode.0, seq, bucket), exe);
+    }
+
+    /// Evict a cell (residency LRU): drops the device-side executable.
+    pub fn remove_exe(
+        &mut self,
+        version: u32,
+        mode: ModeId,
+        seq: usize,
+        bucket: usize,
+    ) -> Option<Exe> {
+        self.exes.remove(&(version, mode.0, seq, bucket))
+    }
+
     /// Compile (and cache) the model executable for (mode, seq, bucket).
     pub fn model_exe(&mut self, mode: &str, seq: usize, bucket: usize) -> Result<&Exe> {
         let mode = self.manifest.mode_id(mode)?;
         self.model_exe_id(mode, seq, bucket)
     }
 
-    /// Dense hot-path variant: the executable slot is two `Vec` indexes
-    /// into the (seq bucket, batch bucket) grid.
+    /// Legacy compile-inline variant (CLI / calibration paths, version
+    /// 0): lookup, compiling on miss.  Serving goes through
+    /// `exe_at`/`load_exe` instead so misses never hold `&mut self`.
     pub fn model_exe_id(&mut self, mode: ModeId, seq: usize, bucket: usize) -> Result<&Exe> {
-        let si = self.manifest.seq_bucket_index(seq).with_context(|| {
-            format!("mode {} has no seq bucket {seq}", self.manifest.mode_name(mode))
-        })?;
-        let bi = self.manifest.bucket_index(bucket).with_context(|| {
-            format!("mode {} has no bucket {bucket}", self.manifest.mode_name(mode))
-        })?;
-        if self.exes[mode.index()][si][bi].is_none() {
-            let spec = self.manifest.mode_by_id(mode);
-            let rel = spec.artifacts.get(&(seq, bucket)).with_context(|| {
-                format!(
-                    "mode {} has no artifact for (seq {seq}, bucket {bucket})",
-                    self.manifest.mode_name(mode)
-                )
-            })?;
-            let exe = Self::compile_hlo_file(&self.client, &self.manifest.path(rel))?;
-            self.exes[mode.index()][si][bi] = Some(exe);
+        if !self.exes.contains_key(&(0, mode.0, seq, bucket)) {
+            let (exe, _bytes) = {
+                let man = &self.manifest;
+                self.load_exe(man, mode, seq, bucket)?
+            };
+            self.exes.insert((0, mode.0, seq, bucket), exe);
         }
-        // panic-ok: the None arm directly above just filled this slot
-        Ok(self.exes[mode.index()][si][bi].as_ref().expect("just compiled"))
+        // panic-ok: the miss arm directly above just filled this slot
+        Ok(self.exes.get(&(0, mode.0, seq, bucket)).expect("just compiled"))
     }
 
     /// Compile (and cache) an arbitrary artifact by manifest-relative path.
@@ -204,19 +252,39 @@ impl Runtime {
         mode: ModeId,
         ckpt: &Container,
     ) -> Result<()> {
+        self.upload_checkpoint_v(0, task, mode, ckpt)
+    }
+
+    /// Versioned checkpoint upload (manifest reload keeps the latest two
+    /// versions' weights resident while the old one drains).
+    pub fn upload_checkpoint_v(
+        &mut self,
+        version: u32,
+        task: TaskId,
+        mode: ModeId,
+        ckpt: &Container,
+    ) -> Result<()> {
         let mut bufs = Vec::with_capacity(ckpt.len());
         let mut nbytes = 0;
         for (_, t) in &ckpt.entries {
             bufs.push(self.upload_tensor(t)?);
             nbytes += t.nbytes();
         }
-        self.ckpts[task.index()][mode.index()] = Some(DeviceCheckpoint { bufs, nbytes });
+        self.ckpts.insert((version, task.0, mode.0), DeviceCheckpoint { bufs, nbytes });
         Ok(())
+    }
+
+    /// Drop checkpoints of versions older than `keep_min` — the reload
+    /// drain's terminal step.  Executables are not touched here: their
+    /// removal goes through the residency table (`remove_exe` per
+    /// evicted cell) so metadata and device state cannot disagree.
+    pub fn drop_version_ckpts(&mut self, keep_min: u32) {
+        self.ckpts.retain(|(v, _, _), _| *v >= keep_min);
     }
 
     pub fn has_checkpoint(&self, task: &str, mode: &str) -> bool {
         match (self.manifest.task_id(task), self.manifest.mode_id(mode)) {
-            (Ok(t), Ok(m)) => self.ckpts[t.index()][m.index()].is_some(),
+            (Ok(t), Ok(m)) => self.ckpts.contains_key(&(0, t.0, m.0)),
             _ => false,
         }
     }
@@ -224,7 +292,7 @@ impl Runtime {
     pub fn checkpoint_nbytes(&self, task: &str, mode: &str) -> Option<usize> {
         let t = self.manifest.task_id(task).ok()?;
         let m = self.manifest.mode_id(mode).ok()?;
-        self.ckpts[t.index()][m.index()].as_ref().map(|c| c.nbytes)
+        self.ckpts.get(&(0, t.0, m.0)).map(|c| c.nbytes)
     }
 
     // ------------------------------------------------------------- execute
@@ -297,18 +365,33 @@ impl Runtime {
 
     /// Stage 2: launch the executable against resident weights + uploaded
     /// inputs.  Returns without waiting for a host copy; the caller holds
-    /// the `PendingOutputs` while staging the next batch.
+    /// the `PendingOutputs` while staging the next batch.  Legacy
+    /// compile-inline wrapper (CLI, version 0).
     pub fn execute_model(
         &mut self,
         task: TaskId,
         mode: ModeId,
         inputs: &InputBufs,
     ) -> Result<PendingOutputs> {
+        self.model_exe_id(mode, inputs.seq, inputs.bucket)?;
+        self.execute_model_at(0, task, mode, inputs)
+    }
+
+    /// Residency-managed stage 2: `&self`, never compiles.  Errors name
+    /// the missing cell — absence means residency bookkeeping and the
+    /// device table disagree (or the version was dropped mid-drain),
+    /// which must surface as a typed per-request failure, not a panic.
+    pub fn execute_model_at(
+        &self,
+        version: u32,
+        task: TaskId,
+        mode: ModeId,
+        inputs: &InputBufs,
+    ) -> Result<PendingOutputs> {
         let (seq, bucket) = (inputs.seq, inputs.bucket);
-        self.model_exe_id(mode, seq, bucket)?; // ensure compiled before borrowing ckpt
-        let ckpt = self.ckpts[task.index()][mode.index()].as_ref().with_context(|| {
+        let ckpt = self.ckpts.get(&(version, task.0, mode.0)).with_context(|| {
             format!(
-                "checkpoint ({},{}) not uploaded",
+                "checkpoint ({},{}) not resident at version {version}",
                 self.manifest.task_name(task),
                 self.manifest.mode_name(mode)
             )
@@ -319,10 +402,12 @@ impl Runtime {
         args.push(&inputs.type_ids);
         args.push(&inputs.mask);
 
-        let si = self.manifest.seq_bucket_index(seq)?;
-        let bi = self.manifest.bucket_index(bucket)?;
-        // panic-ok: callers reach here only after exe() compiled this slot
-        let exe = self.exes[mode.index()][si][bi].as_ref().expect("compiled above");
+        let exe = self.exes.get(&(version, mode.0, seq, bucket)).with_context(|| {
+            format!(
+                "executable cell (v{version}, {}, seq {seq}, bucket {bucket}) not resident",
+                self.manifest.mode_name(mode)
+            )
+        })?;
         let results = exe.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
         Ok(PendingOutputs { results })
     }
@@ -450,12 +535,6 @@ impl Runtime {
     }
 
     pub fn loaded_exe_count(&self) -> usize {
-        let model: usize = self
-            .exes
-            .iter()
-            .flat_map(|grid| grid.iter())
-            .map(|row| row.iter().filter(|e| e.is_some()).count())
-            .sum();
-        model + self.raw_exes.len()
+        self.exes.len() + self.raw_exes.len()
     }
 }

@@ -1,0 +1,518 @@
+//! Executable residency manager (DESIGN.md §5.13).
+//!
+//! The executable table is a `[version][mode][seq_bucket][batch_bucket]`
+//! grid; eagerly materializing the whole cross-product per replica
+//! multiplies startup time and resident memory by the grid size
+//! (ROADMAP item 5).  `Residency` replaces eager preload with cache
+//! semantics over grid *cells*:
+//!
+//!   * a configurable **pin set** is loaded synchronously at startup and
+//!     is never evicted;
+//!   * every other cell is compiled/uploaded on first demand with
+//!     **single-flight** dedup — concurrent requests for one cell block
+//!     on the one in-progress load instead of compiling twice;
+//!   * cold cells are **LRU-evicted** under a cell-count and/or byte
+//!     budget, so resident memory is bounded regardless of grid growth;
+//!   * a manifest reload **repins** to the new version's pin set; the
+//!     old version's cells unpin and age out through the same LRU.
+//!
+//! `Residency` holds only *metadata* (states, LRU stamps, byte sizes,
+//! counters); the compiled executables themselves live in the replica's
+//! `Runtime`, which is not `Send`.  The engine thread is the only
+//! loader; the coordinator reads `any_resident` to keep a governed
+//! downgrade from stalling on a cold rung, and the supervisor calls
+//! `clear` when a slot is terminally excluded.  The protocol per cell:
+//!
+//! ```text
+//!   begin(key) -> Hit            # resident; LRU stamp refreshed
+//!   begin(key) -> Load           # caller owns the load:
+//!       ... compile/upload ...
+//!       complete(key, bytes, pinned) -> evicted cells   # or
+//!       fail(key)                # waiters retry and re-claim the load
+//! ```
+//!
+//! Eviction runs at `complete`, *before* the arriving cell is inserted
+//! (make room first), so the resident count never exceeds
+//! `max(budget, pinned cells)` and the arriving cell is never its own
+//! victim.  Cells mid-`Loading` are never eviction candidates.
+
+use std::collections::HashMap;
+
+use crate::sync::{Condvar, Mutex, MutexGuard};
+
+/// One executable grid cell: a compiled `(mode, seq bucket, batch
+/// bucket)` variant of one manifest version.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CellKey {
+    pub version: u32,
+    /// `ModeId` index (kept raw so the key stays `Ord` + trivially
+    /// hashable).
+    pub mode: u16,
+    pub seq: usize,
+    pub bucket: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum CellState {
+    /// One loader owns an in-progress compile/upload; other callers of
+    /// `begin` block on the condvar (single-flight).
+    Loading,
+    Resident { pinned: bool, last_used: u64, bytes: usize },
+}
+
+/// What `begin` resolved a cell to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Begin {
+    /// Resident; the LRU stamp was refreshed.
+    Hit,
+    /// The caller owns the load and must call `complete` or `fail`.
+    Load,
+}
+
+#[derive(Default)]
+struct ResidencyInner {
+    cells: HashMap<CellKey, CellState>,
+    /// Logical LRU clock: bumped on every hit/insert.
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    loads: u64,
+    evictions: u64,
+    peak_resident: usize,
+    resident_bytes: usize,
+}
+
+impl ResidencyInner {
+    fn resident(&self) -> usize {
+        self.cells.values().filter(|c| matches!(c, CellState::Resident { .. })).count()
+    }
+
+    fn pinned(&self) -> usize {
+        self.cells
+            .values()
+            .filter(|c| matches!(c, CellState::Resident { pinned: true, .. }))
+            .count()
+    }
+}
+
+/// Counter snapshot (ledgered per replica by the Recorder's residency
+/// table; asserted by the property tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResidencyCounters {
+    pub hits: u64,
+    pub misses: u64,
+    /// Completed loads (misses that reached `complete`).
+    pub loads: u64,
+    pub evictions: u64,
+    pub resident: usize,
+    pub pinned: usize,
+    /// High-water mark of the resident cell count.
+    pub peak_resident: usize,
+    pub resident_bytes: usize,
+}
+
+/// Thread-safe residency metadata for one replica's executable grid.
+pub struct Residency {
+    /// Max resident cells (`None` = unbounded).  Pinned cells override
+    /// the budget: they are never evicted even when the pin set alone
+    /// exceeds it.
+    max_cells: Option<usize>,
+    /// Max resident bytes (`None` = unbounded), measured by artifact
+    /// size as reported at `complete`.
+    max_bytes: Option<usize>,
+    inner: Mutex<ResidencyInner>,
+    cv: Condvar,
+}
+
+impl Residency {
+    pub fn new(max_cells: Option<usize>, max_bytes: Option<usize>) -> Self {
+        Residency {
+            max_cells,
+            max_bytes,
+            inner: Mutex::new(ResidencyInner::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Lock the metadata, recovering from poisoning: the table is pure
+    /// bookkeeping (no torn invariants a panicking holder could leave
+    /// half-applied that later ops cannot reconcile), and the serving
+    /// path must keep resolving cells even if an introspection caller
+    /// panicked.
+    fn lock(&self) -> MutexGuard<'_, ResidencyInner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Resolve `key`: `Hit` if resident (LRU refreshed), `Load` if this
+    /// caller now owns the cell's load.  Blocks while another loader has
+    /// the cell in flight; if that load fails, a waiter wakes, finds the
+    /// cell absent, and claims the load itself (retry-on-failure).
+    pub fn begin(&self, key: CellKey) -> Begin {
+        let mut g = self.lock();
+        loop {
+            match g.cells.get(&key).copied() {
+                Some(CellState::Resident { pinned, bytes, .. }) => {
+                    g.tick += 1;
+                    let last_used = g.tick;
+                    g.cells.insert(key, CellState::Resident { pinned, last_used, bytes });
+                    g.hits += 1;
+                    return Begin::Hit;
+                }
+                Some(CellState::Loading) => {
+                    // single-flight: park until the owning loader calls
+                    // complete (-> Hit) or fail (-> claim the load)
+                    g = match self.cv.wait(g) {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                }
+                None => {
+                    g.cells.insert(key, CellState::Loading);
+                    g.misses += 1;
+                    return Begin::Load;
+                }
+            }
+        }
+    }
+
+    /// Mark an owned load done: the cell becomes resident (stamped most
+    /// recently used), waiters wake as hits, and LRU eviction makes room
+    /// first.  Returns the evicted cells; the caller must drop their
+    /// device-side executables.
+    pub fn complete(&self, key: CellKey, bytes: usize, pinned: bool) -> Vec<CellKey> {
+        let mut g = self.lock();
+        // make room before inserting: the arriving cell is never its own
+        // eviction victim, and the budget holds post-insert
+        let evicted = self.evict_for(&mut g, 1, bytes);
+        g.cells.remove(&key);
+        g.tick += 1;
+        let last_used = g.tick;
+        g.cells.insert(key, CellState::Resident { pinned, last_used, bytes });
+        g.loads += 1;
+        g.resident_bytes += bytes;
+        let resident = g.resident();
+        g.peak_resident = g.peak_resident.max(resident);
+        self.cv.notify_all();
+        evicted
+    }
+
+    /// Abandon an owned load (compile/upload error): the `Loading`
+    /// marker is removed and waiters wake to retry.
+    pub fn fail(&self, key: CellKey) {
+        let mut g = self.lock();
+        if matches!(g.cells.get(&key), Some(CellState::Loading)) {
+            g.cells.remove(&key);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Replace the pin set (manifest reload): every resident cell's pin
+    /// flag is recomputed against `pins` — the old version's pins unpin
+    /// and become LRU candidates — then eviction reconciles any budget
+    /// overshoot the old pin set was excusing.  LRU stamps are kept, so
+    /// unpinned-but-hot cells age out last.
+    pub fn repin(&self, pins: &[CellKey]) -> Vec<CellKey> {
+        let mut g = self.lock();
+        let keys: Vec<CellKey> = g.cells.keys().copied().collect();
+        for k in keys {
+            if let Some(CellState::Resident { last_used, bytes, .. }) = g.cells.get(&k).copied() {
+                let pinned = pins.contains(&k);
+                g.cells.insert(k, CellState::Resident { pinned, last_used, bytes });
+            }
+        }
+        self.evict_for(&mut g, 0, 0)
+    }
+
+    /// Evict least-recently-used unpinned resident cells until
+    /// `incoming_cells`/`incoming_bytes` more fit the budgets.  Stops
+    /// when only pinned (or mid-load) cells remain: pins always win over
+    /// the budget.
+    fn evict_for(
+        &self,
+        g: &mut ResidencyInner,
+        incoming_cells: usize,
+        incoming_bytes: usize,
+    ) -> Vec<CellKey> {
+        let mut evicted = Vec::new();
+        loop {
+            let over_cells =
+                self.max_cells.is_some_and(|m| g.resident() + incoming_cells > m);
+            let over_bytes =
+                self.max_bytes.is_some_and(|m| g.resident_bytes + incoming_bytes > m);
+            if !over_cells && !over_bytes {
+                return evicted;
+            }
+            let victim = g
+                .cells
+                .iter()
+                .filter_map(|(k, c)| match c {
+                    CellState::Resident { pinned: false, last_used, bytes } => {
+                        Some((*k, *last_used, *bytes))
+                    }
+                    _ => None,
+                })
+                .min_by_key(|(_, last_used, _)| *last_used);
+            match victim {
+                Some((k, _, bytes)) => {
+                    g.cells.remove(&k);
+                    g.resident_bytes = g.resident_bytes.saturating_sub(bytes);
+                    g.evictions += 1;
+                    evicted.push(k);
+                }
+                None => return evicted,
+            }
+        }
+    }
+
+    /// Drop every *resident* cell of versions older than `keep_min`
+    /// (reload drain: with current + previous kept, anything older has
+    /// no in-flight work left).  Returns the dropped keys so the caller
+    /// removes their device-side executables too; cells mid-`Loading`
+    /// are left for their owner to complete (they age out via LRU).
+    pub fn drop_versions_below(&self, keep_min: u32) -> Vec<CellKey> {
+        let mut g = self.lock();
+        let stale: Vec<CellKey> = g
+            .cells
+            .iter()
+            .filter_map(|(k, c)| {
+                (k.version < keep_min && matches!(c, CellState::Resident { .. })).then_some(*k)
+            })
+            .collect();
+        for k in &stale {
+            if let Some(CellState::Resident { bytes, .. }) = g.cells.remove(k) {
+                g.resident_bytes = g.resident_bytes.saturating_sub(bytes);
+                g.evictions += 1;
+            }
+        }
+        self.cv.notify_all();
+        stale
+    }
+
+    pub fn is_resident(&self, key: CellKey) -> bool {
+        matches!(self.lock().cells.get(&key), Some(CellState::Resident { .. }))
+    }
+
+    /// Whether *any* batch-bucket cell of `(version, mode, seq)` is
+    /// resident — the coordinator's governed-downgrade probe: a rung
+    /// with no resident cell would stall the pressure path on a compile,
+    /// so the governor serves the resident rung and warms this one
+    /// asynchronously instead.
+    pub fn any_resident(&self, version: u32, mode: u16, seq: usize) -> bool {
+        self.lock().cells.iter().any(|(k, c)| {
+            k.version == version
+                && k.mode == mode
+                && k.seq == seq
+                && matches!(c, CellState::Resident { .. })
+        })
+    }
+
+    /// Drop every cell (terminal slot exclusion: the device state is
+    /// gone, so the metadata must not claim residency).  Counters are
+    /// kept — the ledger survives the teardown.
+    pub fn clear(&self) {
+        let mut g = self.lock();
+        g.cells.clear();
+        g.resident_bytes = 0;
+        // wake any waiter so it re-resolves (and fails fast against the
+        // dead incarnation rather than parking forever)
+        self.cv.notify_all();
+    }
+
+    /// Fresh-incarnation reset (supervised restart): a new `Runtime` has
+    /// nothing resident and the per-incarnation ledger starts at zero —
+    /// `startup loads == pinned cells` is asserted against this state.
+    pub fn reset(&self) {
+        let mut g = self.lock();
+        *g = ResidencyInner::default();
+        self.cv.notify_all();
+    }
+
+    pub fn counters(&self) -> ResidencyCounters {
+        let g = self.lock();
+        ResidencyCounters {
+            hits: g.hits,
+            misses: g.misses,
+            loads: g.loads,
+            evictions: g.evictions,
+            resident: g.resident(),
+            pinned: g.pinned(),
+            peak_resident: g.peak_resident,
+            resident_bytes: g.resident_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Rng};
+    use crate::sync::Arc;
+
+    fn cell(mode: u16, seq: usize, bucket: usize) -> CellKey {
+        CellKey { version: 0, mode, seq, bucket }
+    }
+
+    #[test]
+    fn hit_miss_and_lru_eviction() {
+        let r = Residency::new(Some(2), None);
+        assert_eq!(r.begin(cell(0, 16, 4)), Begin::Load);
+        assert!(r.complete(cell(0, 16, 4), 10, false).is_empty());
+        assert_eq!(r.begin(cell(0, 16, 4)), Begin::Hit);
+        assert_eq!(r.begin(cell(0, 32, 4)), Begin::Load);
+        assert!(r.complete(cell(0, 32, 4), 10, false).is_empty());
+        // touch the first cell so the second is the LRU victim
+        assert_eq!(r.begin(cell(0, 16, 4)), Begin::Hit);
+        assert_eq!(r.begin(cell(1, 16, 4)), Begin::Load);
+        let evicted = r.complete(cell(1, 16, 4), 10, false);
+        assert_eq!(evicted, vec![cell(0, 32, 4)], "LRU cell evicted");
+        let c = r.counters();
+        assert_eq!((c.hits, c.misses, c.loads, c.evictions), (2, 3, 3, 1));
+        assert_eq!(c.resident, 2);
+        assert_eq!(c.peak_resident, 2, "make-room-first never overshoots");
+        assert!(!r.is_resident(cell(0, 32, 4)));
+    }
+
+    #[test]
+    fn pinned_cells_survive_budget_pressure_and_repin_releases_them() {
+        let r = Residency::new(Some(1), None);
+        assert_eq!(r.begin(cell(0, 16, 4)), Begin::Load);
+        assert!(r.complete(cell(0, 16, 4), 5, true).is_empty());
+        // budget 1 is full of pin: a demand load still lands (pins
+        // override the budget) and the pin is never the victim
+        assert_eq!(r.begin(cell(0, 32, 4)), Begin::Load);
+        assert!(r.complete(cell(0, 32, 4), 5, false).is_empty());
+        assert_eq!(r.counters().resident, 2);
+        assert_eq!(r.begin(cell(0, 64, 4)), Begin::Load);
+        let evicted = r.complete(cell(0, 64, 4), 5, false);
+        assert_eq!(evicted, vec![cell(0, 32, 4)], "unpinned LRU evicted, pin kept");
+        // reload: the new pin set drops the old pin, which now evicts
+        let evicted = r.repin(&[cell(0, 64, 4)]);
+        assert_eq!(evicted, vec![cell(0, 16, 4)], "old pin unpinned and reconciled");
+        let c = r.counters();
+        assert_eq!((c.resident, c.pinned), (1, 1));
+    }
+
+    #[test]
+    fn byte_budget_evicts_and_failed_loads_retry() {
+        let r = Residency::new(None, Some(100));
+        assert_eq!(r.begin(cell(0, 16, 4)), Begin::Load);
+        assert!(r.complete(cell(0, 16, 4), 60, false).is_empty());
+        assert_eq!(r.begin(cell(0, 32, 4)), Begin::Load);
+        let evicted = r.complete(cell(0, 32, 4), 60, false);
+        assert_eq!(evicted, vec![cell(0, 16, 4)], "byte budget forced the LRU out");
+        assert_eq!(r.counters().resident_bytes, 60);
+        // a failed load leaves no residue: the next begin re-claims it
+        assert_eq!(r.begin(cell(1, 16, 4)), Begin::Load);
+        r.fail(cell(1, 16, 4));
+        assert_eq!(r.begin(cell(1, 16, 4)), Begin::Load);
+        r.fail(cell(1, 16, 4));
+        assert_eq!(r.counters().misses, 4);
+        assert_eq!(r.counters().loads, 2);
+    }
+
+    #[test]
+    fn single_flight_one_loader_many_hits() {
+        // N threads race begin() on one cold cell: exactly one owns the
+        // load, everyone else blocks and resolves to a hit — the cell is
+        // never compiled twice
+        let r = Arc::new(Residency::new(None, None));
+        let key = cell(0, 128, 16);
+        let loads = Arc::new(crate::sync::atomic::AtomicUsize::new(0));
+        let hits = Arc::new(crate::sync::atomic::AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let r = Arc::clone(&r);
+            let loads = Arc::clone(&loads);
+            let hits = Arc::clone(&hits);
+            joins.push(crate::sync::thread::spawn(move || match r.begin(key) {
+                Begin::Load => {
+                    // hold the load long enough that the other threads
+                    // pile up on the condvar
+                    crate::sync::thread::sleep(std::time::Duration::from_millis(20));
+                    loads.fetch_add(1, crate::sync::atomic::Ordering::SeqCst);
+                    r.complete(key, 1, false);
+                }
+                Begin::Hit => {
+                    hits.fetch_add(1, crate::sync::atomic::Ordering::SeqCst);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().expect("residency race thread");
+        }
+        assert_eq!(loads.load(crate::sync::atomic::Ordering::SeqCst), 1);
+        assert_eq!(hits.load(crate::sync::atomic::Ordering::SeqCst), 7);
+        let c = r.counters();
+        assert_eq!((c.hits, c.misses, c.loads), (7, 1, 1));
+    }
+
+    #[test]
+    fn prop_budget_pins_and_ledger_reconcile() {
+        forall("residency-invariants", 60, |rng: &mut Rng| {
+            let budget = 1 + rng.below(6);
+            // pins fit the budget (the serving config derives them that
+            // way); the invariant under test is then a hard bound
+            let npins = rng.below(budget + 1);
+            let grid: Vec<CellKey> = (0..3u16)
+                .flat_map(|m| [16usize, 32, 64].into_iter().map(move |s| cell(m, s, 4)))
+                .collect();
+            let mut pins: Vec<CellKey> = grid.clone();
+            // deterministic shuffle via random swaps
+            for i in (1..pins.len()).rev() {
+                let j = rng.below(i + 1);
+                pins.swap(i, j);
+            }
+            pins.truncate(npins);
+            let r = Residency::new(Some(budget), None);
+            for p in &pins {
+                assert_eq!(r.begin(*p), Begin::Load, "fresh pin must be a miss");
+                r.complete(*p, 1 + rng.below(10), true);
+            }
+            let c = r.counters();
+            assert_eq!(c.loads, npins as u64, "startup loads == pinned cells");
+            assert_eq!(c.pinned, npins);
+            let mut begins = npins as u64;
+            let mut evicted_log: Vec<CellKey> = Vec::new();
+            for _ in 0..rng.below(200) {
+                let k = *rng.choice(&grid);
+                begins += 1;
+                match r.begin(k) {
+                    Begin::Hit => {}
+                    Begin::Load => {
+                        if rng.below(10) == 0 {
+                            r.fail(k);
+                        } else {
+                            evicted_log.extend(r.complete(k, 1 + rng.below(10), false));
+                        }
+                    }
+                }
+                let c = r.counters();
+                assert!(
+                    c.resident <= budget,
+                    "resident {} exceeded budget {budget}",
+                    c.resident
+                );
+                assert_eq!(c.hits + c.misses, begins, "every begin is a hit or a miss");
+                for p in &pins {
+                    assert!(r.is_resident(*p), "pinned cell {p:?} went missing");
+                }
+            }
+            assert!(
+                evicted_log.iter().all(|k| !pins.contains(k)),
+                "a pinned cell was evicted"
+            );
+            assert!(r.counters().peak_resident <= budget);
+            // reload to an empty pin set: everything becomes evictable
+            // and the budget still holds
+            r.repin(&[]);
+            assert_eq!(r.counters().pinned, 0);
+            assert!(r.counters().resident <= budget);
+            r.clear();
+            let c = r.counters();
+            assert_eq!((c.resident, c.resident_bytes), (0, 0));
+        });
+    }
+}

@@ -13,6 +13,7 @@
 //! the shelf refills on demand.
 
 use crate::data::PAD;
+use crate::sync::atomic::{AtomicUsize, Ordering};
 use crate::sync::{Mutex, MutexGuard};
 
 /// One reusable host-side batch: `bucket * seq` token ids / type ids and
@@ -117,18 +118,44 @@ impl StagingBuf {
 pub struct StagingPool {
     seq_buckets: Vec<usize>,
     buckets: Vec<usize>,
-    per_cell_cap: usize,
+    /// Live cap — shrunk by `trim` when replicas are excluded, so a
+    /// degraded pool doesn't keep shelving buffers sized for the full
+    /// replica count.  Relaxed is enough: the cap is a soft bound read
+    /// racily by `put`, never a synchronization edge.
+    per_cell_cap: AtomicUsize,
+    /// The cap the pool was built with (the `trim` scaling baseline).
+    initial_cap: usize,
     /// `[seq_index * buckets.len() + bucket_index]` — one shelf per cell.
     shelves: Vec<Mutex<Vec<StagingBuf>>>,
 }
 
 impl StagingPool {
     pub fn new(seq_buckets: &[usize], buckets: &[usize], per_cell_cap: usize) -> Self {
+        let cap = per_cell_cap.max(1);
         StagingPool {
             seq_buckets: seq_buckets.to_vec(),
             buckets: buckets.to_vec(),
-            per_cell_cap: per_cell_cap.max(1),
+            per_cell_cap: AtomicUsize::new(cap),
+            initial_cap: cap,
             shelves: (0..seq_buckets.len() * buckets.len()).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    /// Scale the per-cell cap to the live replica share and drop shelved
+    /// buffers beyond it (replica exclusion teardown: a pool sized for N
+    /// replicas should not keep N replicas' worth of staging resident
+    /// when only `live` remain).  Never drops below one buffer per cell.
+    pub fn trim(&self, live: usize, total: usize) {
+        let cap = if total == 0 {
+            self.initial_cap
+        } else {
+            (self.initial_cap * live.min(total) / total).max(1)
+        };
+        // relaxed-ok: soft bound, see per_cell_cap
+        self.per_cell_cap.store(cap, Ordering::Relaxed);
+        for i in 0..self.shelves.len() {
+            let mut shelf = self.shelf(i);
+            shelf.truncate(cap);
         }
     }
 
@@ -167,7 +194,8 @@ impl StagingPool {
     pub fn put(&self, buf: StagingBuf) {
         if let Some(i) = self.shelf_index(buf.seq, buf.bucket) {
             let mut shelf = self.shelf(i);
-            if shelf.len() < self.per_cell_cap {
+            // relaxed-ok: soft bound, see per_cell_cap
+            if shelf.len() < self.per_cell_cap.load(Ordering::Relaxed) {
                 shelf.push(buf);
             }
         }
@@ -251,6 +279,29 @@ mod tests {
         pool.put(StagingBuf::new(7, 2)); // unknown bucket: dropped
         pool.put(StagingBuf::new(2, 9)); // unknown seq: dropped
         assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn trim_scales_cap_to_live_share_and_drops_excess() {
+        let pool = StagingPool::new(&[2], &[2], 4);
+        for _ in 0..4 {
+            pool.put(StagingBuf::new(2, 2));
+        }
+        assert_eq!(pool.pooled(), 4);
+        // half the replicas are gone: cap halves and shelves shed
+        pool.trim(2, 4);
+        assert_eq!(pool.pooled(), 2);
+        pool.put(StagingBuf::new(2, 2)); // over the trimmed cap: dropped
+        assert_eq!(pool.pooled(), 2);
+        // the floor is one buffer per cell even with zero live replicas
+        pool.trim(0, 4);
+        assert_eq!(pool.pooled(), 1);
+        // recovery restores the full share
+        pool.trim(4, 4);
+        for _ in 0..4 {
+            pool.put(StagingBuf::new(2, 2));
+        }
+        assert_eq!(pool.pooled(), 4);
     }
 
     #[test]

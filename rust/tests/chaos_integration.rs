@@ -486,3 +486,123 @@ fn chaos_overload_ledger_reconciles_with_all_outcome_classes() {
         coord.engine().live_replicas() == 2
     });
 }
+
+/// Hot manifest reload mid-burst (DESIGN.md §5.13): requests admitted
+/// before the reload drain on version 0 while new admissions ride
+/// version 1 — zero client-visible failures, and the ledger identity
+/// `requests == completed + errors + expired + failed` holds on both
+/// versions' slots independently.
+#[test]
+fn manifest_reload_mid_burst_drains_cleanly_on_both_versions() {
+    let dir = fake_artifacts("reload", FAKE_MANIFEST);
+    let coord =
+        Coordinator::start(dir.clone(), &routes(), ServerConfig { replicas: 2, ..config(3) })
+            .unwrap();
+    assert_eq!(coord.current_version(), 0);
+
+    let wave = 24u64;
+    let mut rxs = Vec::new();
+    for i in 0..wave {
+        rxs.push((i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    // rewrite the manifest in place (identical grid: hot reload is a
+    // weights refresh, never a topology change) and swap mid-drain
+    std::fs::write(dir.join("manifest.json"), FAKE_MANIFEST).expect("rewrite manifest");
+    let v = coord.reload().expect("grid-compatible reload must be accepted");
+    assert_eq!((v, coord.current_version()), (1, 1));
+    for i in wave..2 * wave {
+        rxs.push((i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!(out.completed.len() as u64, 2 * wave, "reload must be client-invisible");
+    assert_eq!((out.failed, out.expired), (0, 0));
+    assert_eq!(coord.queue_depth(), 0, "backlog slots leaked across the reload");
+
+    // recorder side: one slot block per version, each reconciling alone
+    let snap = coord.recorder.snapshot();
+    let v0 = &snap["fp"];
+    let v1 = &snap["fp@v1"];
+    assert_eq!(v0.requests, v0.completed + v0.errors + v0.expired + v0.failed);
+    assert_eq!(v1.requests, v1.completed + v1.errors + v1.expired + v1.failed);
+    assert_eq!((v0.errors, v0.failed, v1.errors, v1.failed), (0, 0, 0, 0));
+    assert_eq!(v0.requests, wave, "pre-reload admissions drain on v0");
+    assert_eq!(v1.requests, wave, "post-reload admissions ride v1");
+
+    // versions are monotone: the next swap mints v2, and traffic still
+    // completes cleanly on it
+    assert_eq!(coord.reload().expect("second reload"), 2);
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        rxs.push((1000 + i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!(out.completed.len(), 8, "post-reload pool must serve cleanly");
+}
+
+/// A corrupt artifact cell is deterministic: when a restarted
+/// incarnation's preload fails with a typed `PreloadError`, the
+/// supervisor must exclude the slot immediately — no restart-budget
+/// crash loop against the same broken cell — and the pool serves on
+/// the survivor (DESIGN.md §5.13).
+#[test]
+fn preload_failure_on_restart_excludes_immediately() {
+    let dir = fake_artifacts("preload", FAKE_MANIFEST);
+    let coord = Coordinator::start(
+        dir,
+        &routes(),
+        ServerConfig {
+            replicas: 2,
+            restart: RestartPolicy {
+                backoff: Duration::from_millis(1),
+                max_backoff: Duration::from_millis(5),
+                budget: 5,
+                window: Duration::from_secs(60),
+            },
+            fault_plan: FaultPlan::default()
+                .with(FaultSpec::on(0, FaultKind::PanicAt { batch: 1 }))
+                .with(FaultSpec::on(0, FaultKind::FailPreload).from_gen(1).persistent()),
+            ..config(2)
+        },
+    )
+    .unwrap();
+
+    // the original incarnation preloads fine (FailPreload gates on
+    // generation >= 1) and dies on its second batch; the respawned
+    // incarnation then fails preload with the typed error
+    let total = 24u64;
+    let mut rxs = Vec::new();
+    for i in 0..total {
+        rxs.push((i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!(out.completed.len() + out.failed, total as usize);
+    assert!(out.failed >= 1, "the panicked batch must fail its requests");
+
+    // exclusion must be immediate — one typed preload failure, not
+    // `budget` crash-looped incarnations — and a spawn that never
+    // reached ready must not ledger as a completed restart
+    wait_until("typed-preload exclusion", Duration::from_secs(10), || {
+        coord.engine().replica_excluded(0)
+    });
+    assert_eq!(
+        coord.engine().replica_restarts(0),
+        0,
+        "a failed preload must not count as a completed restart"
+    );
+    assert_eq!(coord.engine().live_replicas(), 1, "survivor must stay in service");
+    wait_until("excluded flag in health ledger", Duration::from_secs(5), || {
+        coord.recorder.replica_snapshot()[0].excluded
+    });
+
+    // the survivor carries all traffic; the ledger still reconciles
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        rxs.push((100 + i, coord.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(drain(rxs), coord.num_labels());
+    assert_eq!(out.completed.len(), 8, "survivor must carry all traffic");
+    let snap = coord.recorder.snapshot();
+    let s = &snap["fp"];
+    assert_eq!(s.requests, s.completed + s.errors + s.expired + s.failed);
+    assert_eq!(coord.queue_depth(), 0);
+}

@@ -112,6 +112,15 @@ if [ -f artifacts/manifest.json ]; then
     echo "==> chaos serve-bench smoke (replica kill + supervised restart)"
     cargo run --release -- serve-bench --chaos --replicas 2 \
         --requests 64 --concurrency 16
+
+    # executable residency (DESIGN.md §5.13): pin-set startup vs the old
+    # eager full-grid preload on the real engine — asserts startup loads
+    # exactly the pin set and the resident-cell count respects the LRU
+    # budget; reports the warm/cold-cell latency split (emits
+    # BENCH_residency.json)
+    echo "==> residency serve-bench smoke (pin set vs eager grid)"
+    cargo run --release -- serve-bench --residency \
+        --modes fp,m3 --requests 64 --concurrency 8 --max-resident-cells 8
 fi
 
 if [ "$SKIP_CLIPPY" -eq 0 ]; then
