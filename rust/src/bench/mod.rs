@@ -70,15 +70,22 @@ pub fn bench_seconds<F: FnMut()>(warmup: usize, min_time_s: f64, mut f: F) -> St
 /// vocabulary shared by `BENCH_overload*.json`: `admitted` counts the
 /// total *offered* arrivals at the admission gate (including those shed
 /// there — the acceptance ledger is
-/// `admitted = completed + shed + expired`, reconciling exactly), while
-/// the recorder's per-policy `requests` counter holds only
-/// `admitted - shed` (what actually entered the queue).
+/// `admitted = completed + shed + expired + failed`, reconciling
+/// exactly), while the recorder's per-policy `requests` counter holds
+/// only `admitted - shed` (what actually entered the queue).  `shed`
+/// folds both shapes of backpressure together: the synchronous
+/// `SubmitError::Busy` a local admission gate raises and the terminal
+/// `busy` response a remote tier sends after the fact (DESIGN.md §5.14)
+/// — same outcome class, different transport.
 #[derive(Debug, Clone)]
 pub struct OpenLoopReport {
     pub admitted: usize,
     pub completed: usize,
     pub shed: usize,
     pub expired: usize,
+    /// Replica/node failures surfaced as typed `failed` responses (0 in
+    /// fault-free runs; the chaos drivers assert on it).
+    pub failed: usize,
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub wall_s: f64,
@@ -94,7 +101,7 @@ impl OpenLoopReport {
     /// construction (every non-shed submission yields exactly one
     /// terminal reply), so a `false` here is a coordinator bug.
     pub fn reconciles(&self) -> bool {
-        self.admitted == self.completed + self.shed + self.expired
+        self.admitted == self.completed + self.shed + self.expired + self.failed
     }
 }
 
@@ -102,11 +109,14 @@ impl OpenLoopReport {
 /// completions (open loop), then harvest every outcome.  Shared by
 /// `repro serve-bench --overload` and the `e2e_serving` overload sweep
 /// so the CLI smoke and the bench trajectory measure the same thing.
-/// `Err` only on a transport-level failure (dead reply channel, a
-/// non-expired error response, or a non-busy submit error).
+/// Generic over [`Admission`](crate::coordinator::Admission), so the
+/// same driver loads a single-process coordinator or a multi-host front
+/// end.  `Err` only on a transport-level failure (dead reply channel, a
+/// response outside the typed outcome classes, or a non-busy submit
+/// error).
 #[allow(clippy::too_many_arguments)]
-pub fn open_loop_burst(
-    coord: &crate::coordinator::Coordinator,
+pub fn open_loop_burst<A: crate::coordinator::Admission>(
+    adm: &A,
     task: &str,
     policy: &str,
     rows: &[(Vec<i32>, Vec<i32>)],
@@ -114,7 +124,26 @@ pub fn open_loop_burst(
     rate: f64,
     deadline: std::time::Duration,
 ) -> anyhow::Result<OpenLoopReport> {
+    let groups = [(task.to_string(), policy.to_string())];
+    open_loop_burst_groups(adm, &groups, rows, arrivals, rate, deadline)
+}
+
+/// [`open_loop_burst`] over several (task, policy) groups, round-robined
+/// per arrival.  Multi-host scaling needs this shape: one group pins to
+/// one engine node while it has requests in flight, so a single-group
+/// burst can never exercise more than one node — concurrent groups are
+/// what `NodeDispatch` spreads across the fleet (DESIGN.md §5.14).
+#[allow(clippy::too_many_arguments)]
+pub fn open_loop_burst_groups<A: crate::coordinator::Admission>(
+    adm: &A,
+    groups: &[(String, String)],
+    rows: &[(Vec<i32>, Vec<i32>)],
+    arrivals: usize,
+    rate: f64,
+    deadline: std::time::Duration,
+) -> anyhow::Result<OpenLoopReport> {
     use anyhow::Context;
+    anyhow::ensure!(!groups.is_empty(), "open-loop burst needs at least one group");
     let interval = std::time::Duration::from_secs_f64(1.0 / rate.max(1.0));
     let t0 = Instant::now();
     let mut rxs = Vec::new();
@@ -125,23 +154,30 @@ pub fn open_loop_burst(
             std::thread::sleep(wait);
         }
         let (ids, tys) = rows[i % rows.len()].clone();
+        let (task, policy) = &groups[i % groups.len()];
         let spec = crate::coordinator::RequestSpec::task(task)
             .policy(policy)
             .ids(ids)
             .type_ids(tys)
             .deadline(deadline);
-        match coord.submit(spec) {
+        match adm.submit_spec(spec) {
             Ok(rx) => rxs.push(rx),
             Err(e) if e.is_busy() => shed += 1,
             Err(e) => anyhow::bail!("burst submit failed: {e}"),
         }
     }
-    let (mut completed, mut expired) = (0usize, 0usize);
+    let (mut completed, mut expired, mut failed) = (0usize, 0usize, 0usize);
     let mut lat = Vec::new();
     for rx in rxs {
         let resp = rx.recv().context("burst response channel closed")?;
-        if resp.expired {
+        if resp.busy {
+            // remote-tier shed: backpressure arrived as a terminal
+            // response instead of a SubmitError (same ledger class)
+            shed += 1;
+        } else if resp.expired {
             expired += 1;
+        } else if resp.failed {
+            failed += 1;
         } else {
             anyhow::ensure!(resp.error.is_none(), "burst request failed: {:?}", resp.error);
             completed += 1;
@@ -161,6 +197,7 @@ pub fn open_loop_burst(
         completed,
         shed,
         expired,
+        failed,
         p50_ms: pick(0.50),
         p99_ms: pick(0.99),
         wall_s,
@@ -175,9 +212,9 @@ pub fn open_loop_burst(
 /// by `serve-bench` and the e2e serving sweeps, so the CLI smoke and the
 /// bench trajectories measure identical serving behavior (same
 /// backpressure and stall semantics) — the closed-loop sibling of
-/// [`open_loop_burst`].
-pub fn closed_loop(
-    coord: &crate::coordinator::Coordinator,
+/// [`open_loop_burst`].  Generic over admission like its sibling.
+pub fn closed_loop<A: crate::coordinator::Admission>(
+    adm: &A,
     task: &str,
     policy: &crate::coordinator::PolicyRef,
     rows: &[(Vec<i32>, Vec<i32>)],
@@ -196,7 +233,7 @@ pub fn closed_loop(
                 .policy_ref(policy.clone())
                 .ids(ids)
                 .type_ids(tys);
-            match coord.submit(spec) {
+            match adm.submit_spec(spec) {
                 Ok(rx) => {
                     inflight.push_back(rx);
                     submitted += 1;

@@ -8,6 +8,7 @@
 pub mod batcher;
 pub mod governor;
 pub mod net;
+pub mod node;
 pub mod request;
 pub mod server;
 pub mod stats;
@@ -16,5 +17,6 @@ pub use batcher::{Batch, Batcher, Drained};
 pub use governor::{GovernorConfig, GovernorShared, PrecisionGovernor, Signals, StepEvent};
 pub use request::{GroupKey, PolicyRef, Request, RequestSpec, Response, Timing};
 pub use server::{ConfigError, Coordinator, ServerConfig, SubmitError};
-pub use net::{BackoffSchedule, NetClient, NetServer};
+pub use net::{Admission, BackoffSchedule, NetClient, NetServer};
+pub use node::{EngineNode, FrontEnd, FrontEndConfig, NodeDispatch, NodeKey};
 pub use stats::{Histogram, PolicyStats, Recorder, ReplicaStats};

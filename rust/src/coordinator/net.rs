@@ -47,10 +47,57 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::json::{self, Value};
-use crate::model::manifest::PolicyDraft;
+use crate::model::manifest::{Manifest, PolicyDraft};
+use crate::sync::mpsc::Receiver;
 
-use super::request::{PolicyRef, RequestSpec};
+use super::request::{PolicyRef, RequestSpec, Response};
 use super::server::{Coordinator, SubmitError};
+
+/// What the wire layer needs from whatever sits behind it.  Two
+/// implementors: the single-process `Coordinator` (admission straight
+/// into the local batcher) and the two-tier `FrontEnd` (admission into
+/// the node router, DESIGN.md §5.14).  `NetServer` is generic over this
+/// trait so the same accept loop, framing, and response mapping serve
+/// both deployments — the client cannot tell them apart.
+pub trait Admission: Send + Sync {
+    /// Admit one typed request; the receiver yields exactly one terminal
+    /// `Response` unless the server is torn down mid-flight.
+    fn submit_spec(&self, spec: RequestSpec)
+        -> std::result::Result<Receiver<Response>, SubmitError>;
+    /// Manifest for name <-> id mapping in v2 responses.
+    fn manifest(&self) -> &Manifest;
+    /// Model max sequence length (wire-level ids bounds check).
+    fn seq(&self) -> usize;
+    /// Per-connection socket read timeout.
+    fn net_read_timeout(&self) -> Duration;
+    /// Per-frame byte cap.
+    fn max_frame_bytes(&self) -> usize;
+}
+
+impl Admission for Coordinator {
+    fn submit_spec(
+        &self,
+        spec: RequestSpec,
+    ) -> std::result::Result<Receiver<Response>, SubmitError> {
+        self.submit(spec)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        Coordinator::manifest(self)
+    }
+
+    fn seq(&self) -> usize {
+        Coordinator::seq(self)
+    }
+
+    fn net_read_timeout(&self) -> Duration {
+        self.config.net_read_timeout
+    }
+
+    fn max_frame_bytes(&self) -> usize {
+        self.config.max_frame_bytes
+    }
+}
 
 pub struct NetServer {
     pub addr: std::net::SocketAddr,
@@ -62,7 +109,7 @@ pub struct NetServer {
 
 impl NetServer {
     /// Bind `host:port` (port 0 = ephemeral) and serve until dropped.
-    pub fn start(coord: Arc<Coordinator>, host: &str, port: u16) -> Result<NetServer> {
+    pub fn start<A: Admission + 'static>(coord: Arc<A>, host: &str, port: u16) -> Result<NetServer> {
         let listener =
             TcpListener::bind((host, port)).with_context(|| format!("bind {host}:{port}"))?;
         let addr = listener.local_addr()?;
@@ -228,7 +275,68 @@ pub fn request_to_json(spec: &RequestSpec) -> Value {
     json::obj(pairs)
 }
 
-fn process_line(line: &str, coord: &Coordinator) -> Value {
+/// Map a terminal `Response` to its wire shape.  This is the *single*
+/// definition of the outcome-class -> wire-field mapping: `process_line`
+/// uses it to answer clients, and the engine-node link (DESIGN.md §5.14)
+/// uses the same function so `busy` / `expired` / `failed` cross the
+/// tier boundary as the exact fields the client already understands —
+/// the front end re-types them from flags, never by parsing error
+/// strings.
+pub fn response_to_json(resp: &Response, version: u8, man: &Manifest) -> Value {
+    let flagged = |flag: &'static str, msg: String| {
+        let mut pairs = vec![
+            ("ok", Value::Bool(false)),
+            (flag, Value::Bool(true)),
+            ("error", Value::String(msg)),
+        ];
+        if version >= 2 {
+            pairs.push(("v", json::num(version as f64)));
+        }
+        json::obj(pairs)
+    };
+    if resp.busy {
+        // remote-tier backpressure (a node shed the request after the
+        // front end admitted it): same wire shape as a local Busy
+        return flagged("busy", resp.error.clone().unwrap_or_else(|| "busy".into()));
+    }
+    match &resp.error {
+        // deadline expiry is a distinct outcome class, not a server
+        // fault: the flag lets clients count it apart
+        Some(e) if resp.expired => flagged("expired", e.clone()),
+        // replica failure (DESIGN.md §5.10): the server swept the
+        // request off a dead engine — retryable, unlike a terminal
+        // request error, so it gets its own wire flag
+        Some(e) if resp.failed => flagged("failed", e.clone()),
+        Some(e) => {
+            json::obj(vec![("ok", Value::Bool(false)), ("error", Value::String(e.clone()))])
+        }
+        None => {
+            let mut pairs = vec![
+                ("ok", Value::Bool(true)),
+                ("logits", json::arr_f32(&resp.logits)),
+                ("queue_us", json::num(resp.timing.queue_us as f64)),
+                ("exec_us", json::num(resp.timing.exec_us as f64)),
+                ("bucket", json::num(resp.timing.bucket as f64)),
+                ("seq_bucket", json::num(resp.timing.seq_bucket as f64)),
+                ("batch", json::num(resp.timing.batch_real as f64)),
+            ];
+            if version >= 2 {
+                // admission already interned the policy; map the id
+                // back to names without re-resolving
+                pairs.push(("v", json::num(version as f64)));
+                pairs.push((
+                    "policy",
+                    Value::String(man.policy_name(resp.policy).to_string()),
+                ));
+                let exec = man.policy_by_id(resp.policy).exec_mode;
+                pairs.push(("mode", Value::String(man.mode_name(exec).to_string())));
+            }
+            json::obj(pairs)
+        }
+    }
+}
+
+fn process_line<A: Admission>(line: &str, coord: &A) -> Value {
     let fail = |msg: String| {
         json::obj(vec![("ok", Value::Bool(false)), ("error", Value::String(msg))])
     };
@@ -242,7 +350,7 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
         Ok(x) => x,
         Err(e) => return fail(format!("{e:#}")),
     };
-    let rx = match coord.submit(spec) {
+    let rx = match coord.submit_spec(spec) {
         Ok(rx) => rx,
         // explicit backpressure gets its own wire shape: "busy" tells the
         // client to back off and retry, unlike a terminal error
@@ -261,60 +369,7 @@ fn process_line(line: &str, coord: &Coordinator) -> Value {
     };
     match rx.recv() {
         Err(_) => fail("coordinator dropped request".into()),
-        Ok(resp) => match resp.error {
-            Some(e) if resp.expired => {
-                // deadline expiry is a distinct outcome class, not a
-                // server fault: the flag lets clients count it apart
-                let mut pairs = vec![
-                    ("ok", Value::Bool(false)),
-                    ("expired", Value::Bool(true)),
-                    ("error", Value::String(e)),
-                ];
-                if version >= 2 {
-                    pairs.push(("v", json::num(version as f64)));
-                }
-                json::obj(pairs)
-            }
-            Some(e) if resp.failed => {
-                // replica failure (DESIGN.md §5.10): the server swept the
-                // request off a dead engine — retryable, unlike a
-                // terminal request error, so it gets its own wire flag
-                let mut pairs = vec![
-                    ("ok", Value::Bool(false)),
-                    ("failed", Value::Bool(true)),
-                    ("error", Value::String(e)),
-                ];
-                if version >= 2 {
-                    pairs.push(("v", json::num(version as f64)));
-                }
-                json::obj(pairs)
-            }
-            Some(e) => fail(e),
-            None => {
-                let mut pairs = vec![
-                    ("ok", Value::Bool(true)),
-                    ("logits", json::arr_f32(&resp.logits)),
-                    ("queue_us", json::num(resp.timing.queue_us as f64)),
-                    ("exec_us", json::num(resp.timing.exec_us as f64)),
-                    ("bucket", json::num(resp.timing.bucket as f64)),
-                    ("seq_bucket", json::num(resp.timing.seq_bucket as f64)),
-                    ("batch", json::num(resp.timing.batch_real as f64)),
-                ];
-                if version >= 2 {
-                    // admission already interned the policy; map the id
-                    // back to names without re-resolving
-                    let man = coord.manifest();
-                    pairs.push(("v", json::num(version as f64)));
-                    pairs.push((
-                        "policy",
-                        Value::String(man.policy_name(resp.policy).to_string()),
-                    ));
-                    let exec = man.policy_by_id(resp.policy).exec_mode;
-                    pairs.push(("mode", Value::String(man.mode_name(exec).to_string())));
-                }
-                json::obj(pairs)
-            }
-        },
+        Ok(resp) => response_to_json(&resp, version, coord.manifest()),
     }
 }
 
@@ -369,17 +424,17 @@ fn read_frame(
     }
 }
 
-fn handle_conn(
+fn handle_conn<A: Admission>(
     stream: TcpStream,
-    coord: &Coordinator,
+    coord: &A,
     served: &AtomicU64,
     stop: &AtomicBool,
 ) -> Result<()> {
     // both knobs ride ServerConfig so deployments can tune them without
     // a rebuild-level constant (a client slower than the read timeout
     // still completes — partial frames survive across timeouts)
-    stream.set_read_timeout(Some(coord.config.net_read_timeout))?;
-    let max_frame = coord.config.max_frame_bytes;
+    stream.set_read_timeout(Some(coord.net_read_timeout()))?;
+    let max_frame = coord.max_frame_bytes();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut line = Vec::new();

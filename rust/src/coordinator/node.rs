@@ -1,0 +1,1648 @@
+//! Two-tier serving (DESIGN.md §5.14): a front-end process that owns
+//! net admission, depth bounding, deadlines, and the precision
+//! governor, routing typed requests to N engine-node processes over
+//! persistent pipelined links.
+//!
+//! The pieces:
+//!
+//! * [`NodeDispatch`] — `DispatchState`'s fewest-in-flight routing
+//!   lifted one tier up: (task, policy, seq class) groups pin to an
+//!   engine *node* while they have requests in flight and migrate to
+//!   the least-loaded live node once drained.  Same generation-tag
+//!   discipline: node death stales every outstanding completion.
+//! * [`EngineNode`] — a listener wrapping a local [`Coordinator`]
+//!   (engine pool + residency manager) behind the v2 protocol.  One
+//!   connection carries many requests concurrently: frames are
+//!   length-delimited and correlated by an `"id"` field, and replies
+//!   stream back in completion order, not submission order.
+//! * [`FrontEnd`] — the admission tier.  `submit` mirrors
+//!   `Coordinator::submit` (validation, policy interning, governor
+//!   steering, depth-bounded shed) but forwards the request as a wire
+//!   frame to the node `NodeDispatch` picked.  Node death is handled
+//!   the way dead replicas are handled in-process: exclude the node,
+//!   purge its pins, sweep its in-flight entries and retry them on a
+//!   live node, and keep `admitted = completed + shed + expired +
+//!   failed` reconciling exactly on this tier's ledger.
+//!
+//! Outcome classes cross the tier boundary typed: an engine node's
+//! `Busy` / `expired` / `ReplicaFailed` arrive as the same wire flags
+//! the public protocol already defines (`net::response_to_json` is the
+//! single mapping), and the front end re-types them from those flags —
+//! never by parsing error strings.  A node-side `Busy` lands after the
+//! front end has already handed the client a receiver, so it surfaces
+//! as a terminal `Response { busy: true, .. }`.
+//!
+//! Delivery is at-least-once across node death: a request whose node
+//! died after executing but before its reply crossed the link is
+//! retried on a live node.  Requests are single-shot classifications —
+//! re-execution is idempotent — and every retry re-routes through the
+//! current pin table, so the FIFO witness within a (task, policy,
+//! seq-class) group still holds per node incarnation.
+//!
+//! Concurrency: `NodeDispatch` rides `crate::sync` so heromck can
+//! explore its schedules (tests/mck_models.rs); the link machinery
+//! below it owns OS sockets heromck does not model and uses `std`
+//! directly, like `coordinator/net` (see sync/mod.rs).  Lock ordering
+//! is trivial by construction — no code path holds two of
+//! {pins, pending, writer} at once.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{
+    AtomicBool as StdAtomicBool, AtomicU64 as StdAtomicU64, AtomicUsize as StdAtomicUsize,
+    Ordering as StdOrdering,
+};
+use std::sync::{Arc, Mutex as StdMutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::{self, Value};
+use crate::model::manifest::{Manifest, PolicyId, TaskId};
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use crate::sync::Mutex;
+
+use super::governor::{GovernorConfig, GovernorShared, PrecisionGovernor, Signals};
+use super::net::{parse_request, request_to_json, response_to_json, BackoffSchedule};
+use super::request::{PolicyRef, RequestSpec, Response, Timing};
+use super::server::{Coordinator, SubmitError};
+use super::stats::Recorder;
+
+// ------------------------------------------------------------- dispatch
+
+/// Routing key one tier up from `DispatchState`'s `(task, policy)`: the
+/// sequence-length class joins the key so each seq bucket of a route
+/// pins (and migrates) independently — long and short traffic of one
+/// policy may land on different nodes, but each class keeps same-node
+/// FIFO execution while it has requests in flight.
+pub type NodeKey = (TaskId, PolicyId, usize);
+
+/// Load-aware engine-*node* dispatch state, shared by `FrontEnd::submit`
+/// (client threads), link readers (reply completions), and the link
+/// supervisors: per-node in-flight request counts, liveness, incarnation
+/// generations, and per-group pins.  The state machine is
+/// `runtime::DispatchState` verbatim with the node-tier key — a group is
+/// pinned to one node while it has requests in flight and may migrate to
+/// the least-loaded node once it drains; `mark_dead` bumps the node's
+/// generation so completions addressed to a dead incarnation can never
+/// touch a reconnected node's accounting.  Pure state machine: unit-,
+/// property-, and model-tested without sockets.
+pub struct NodeDispatch {
+    /// Requests forwarded to each node and not yet completed.
+    inflight: Vec<AtomicUsize>,
+    /// Nodes currently out of service (link down or excluded): excluded
+    /// from least-loaded choice so a dead node — which would otherwise
+    /// sit at zero in-flight and win every tie — cannot attract all
+    /// traffic and turn one failure into a full outage.
+    dead: Vec<AtomicBool>,
+    /// Incarnation counter per node: bumped by `mark_dead`, left
+    /// unchanged by `revive`.  A completion whose generation predates
+    /// the current one is stale and dropped.
+    generation: Vec<AtomicU64>,
+    /// group -> (pinned node, group requests in flight).  Entries exist
+    /// only while a group has in-flight requests, so the map stays at
+    /// the handful of currently-active routes.
+    pins: Mutex<HashMap<NodeKey, (usize, usize)>>,
+}
+
+impl NodeDispatch {
+    pub fn new(nodes: usize) -> Self {
+        assert!(nodes > 0, "node dispatch needs at least one engine node");
+        NodeDispatch {
+            inflight: (0..nodes).map(|_| AtomicUsize::new(0)).collect(),
+            dead: (0..nodes).map(|_| AtomicBool::new(false)).collect(),
+            generation: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+            pins: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Requests forwarded to `node` and not yet completed.
+    pub fn inflight(&self, node: usize) -> usize {
+        self.inflight[node].load(Ordering::SeqCst)
+    }
+
+    pub fn alive(&self, node: usize) -> bool {
+        !self.dead[node].load(Ordering::SeqCst)
+    }
+
+    /// The node's incarnation generation (== its death count).
+    pub fn generation(&self, node: usize) -> u64 {
+        self.generation[node].load(Ordering::SeqCst)
+    }
+
+    /// Groups currently pinned to a node (tests / introspection).
+    pub fn pinned_groups(&self) -> usize {
+        // panic-ok: pins critical sections are map/counter ops that cannot
+        // panic while holding the lock
+        self.pins.lock().expect("node pins").len()
+    }
+
+    /// Pick the node for one request of `key` and account it in flight:
+    /// the pinned node while the group already has requests in flight,
+    /// else the live node with the fewest in-flight requests (ties break
+    /// to the lowest index; if every node is dead the choice falls back
+    /// to all of them — the send will fail either way and the request
+    /// re-routes).  Returns the node and its generation at assignment
+    /// time; the completion must echo both to `complete`.
+    pub fn assign(&self, key: NodeKey) -> (usize, u64) {
+        // panic-ok: pins critical sections are panic-free (see pinned_groups)
+        let mut pins = self.pins.lock().expect("node pins");
+        let node = match pins.get_mut(&key) {
+            Some((node, n)) => {
+                *n += 1;
+                *node
+            }
+            None => {
+                let node = (0..self.inflight.len())
+                    .filter(|n| self.alive(*n))
+                    .min_by_key(|n| self.inflight[*n].load(Ordering::SeqCst))
+                    .unwrap_or_else(|| {
+                        (0..self.inflight.len())
+                            .min_by_key(|n| self.inflight[*n].load(Ordering::SeqCst))
+                            // panic-ok: construction rejects zero nodes
+                            .expect("at least one node")
+                    });
+                pins.insert(key, (node, 1));
+                node
+            }
+        };
+        // incremented under the pins lock so a concurrent completion
+        // cannot interleave between node choice and accounting
+        self.inflight[node].fetch_add(1, Ordering::SeqCst);
+        (node, self.generation[node].load(Ordering::SeqCst))
+    }
+
+    /// Mark one request of `key` complete on `node`; the group unpins
+    /// (and may migrate on its next request) when its last in-flight
+    /// request completes.  A completion tagged with a stale generation —
+    /// or whose group is no longer pinned to `node` — belongs to a dead
+    /// incarnation whose accounting `mark_dead` already purged, and is
+    /// dropped without touching the live state.
+    pub fn complete(&self, key: NodeKey, node: usize, generation: u64) {
+        if self.generation[node].load(Ordering::SeqCst) != generation {
+            return;
+        }
+        // panic-ok: pins critical sections are panic-free (see pinned_groups)
+        let mut pins = self.pins.lock().expect("node pins");
+        match pins.get_mut(&key) {
+            Some((n, count)) if *n == node => {
+                *count -= 1;
+                if *count == 0 {
+                    pins.remove(&key);
+                }
+                self.inflight[node].fetch_sub(1, Ordering::SeqCst);
+            }
+            _ => {}
+        }
+    }
+
+    /// Take `node` out of service: exclude it from least-loaded choices,
+    /// bump its generation (staling every outstanding completion), and
+    /// purge its pins so affected groups migrate on their next request.
+    /// The link layer pairs this with a pending-map sweep so none of
+    /// those requests is lost — each is retried on a live node or
+    /// answered with a typed `failed` reply.
+    pub fn mark_dead(&self, node: usize) {
+        self.dead[node].store(true, Ordering::SeqCst);
+        self.generation[node].fetch_add(1, Ordering::SeqCst);
+        // panic-ok: pins critical sections are panic-free (see pinned_groups)
+        let mut pins = self.pins.lock().expect("node pins");
+        pins.retain(|_, (n, _)| *n != node);
+        // outstanding completions are now stale no-ops, so zero the
+        // counter — introspection and the all-dead fallback must not see
+        // phantom in-flight work
+        self.inflight[node].store(0, Ordering::SeqCst);
+    }
+
+    /// Re-admit a reconnected node to dispatch.  The generation keeps
+    /// its post-death value, so completions from the previous link
+    /// incarnation stay stale; in-flight is already zero (`mark_dead`
+    /// cleared it and nothing routed here while dead).
+    pub fn revive(&self, node: usize) {
+        self.dead[node].store(false, Ordering::SeqCst);
+    }
+}
+
+// -------------------------------------------------------------- framing
+
+/// Read exactly `n` bytes (beyond what `buf` already holds) from a
+/// socket with a read timeout, checking `stop` between timeouts.
+/// `Ok(true)` = the bytes are in `buf`; `Ok(false)` = stop was raised,
+/// or the peer closed cleanly *between* frames (`buf` empty).  A close
+/// mid-frame is an error: the peer tore a frame.
+fn read_exact_interruptible(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    n: usize,
+    stop: &StdAtomicBool,
+) -> std::io::Result<bool> {
+    let mut chunk = [0u8; 4096];
+    while buf.len() < n {
+        if stop.load(StdOrdering::SeqCst) {
+            return Ok(false);
+        }
+        let want = (n - buf.len()).min(chunk.len());
+        match stream.read(&mut chunk[..want]) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(false);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "peer closed mid-frame",
+                ));
+            }
+            Ok(k) => buf.extend_from_slice(&chunk[..k]),
+            // read timeout: partial bytes stay in `buf`; loop to check
+            // stop and keep filling — a frame may straddle many timeouts
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one length-delimited frame (4-byte big-endian length, then that
+/// many bytes of JSON).  `Ok(None)` = clean shutdown (stop or EOF at a
+/// frame boundary); errors are link poison — the caller drops the
+/// connection.  The byte cap bounds what one frame can buffer, exactly
+/// like the newline protocol's cap (`net::read_frame`).
+pub fn read_ld_frame(
+    stream: &mut TcpStream,
+    stop: &StdAtomicBool,
+    max_frame: usize,
+) -> std::io::Result<Option<Vec<u8>>> {
+    let mut head = Vec::with_capacity(4);
+    if !read_exact_interruptible(stream, &mut head, 4, stop)? {
+        return Ok(None);
+    }
+    let len = u32::from_be_bytes([head[0], head[1], head[2], head[3]]) as usize;
+    if len == 0 || len > max_frame {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} outside 1..={max_frame}"),
+        ));
+    }
+    let mut body = Vec::with_capacity(len);
+    if !read_exact_interruptible(stream, &mut body, len, stop)? {
+        return Ok(None);
+    }
+    Ok(Some(body))
+}
+
+/// Write one length-delimited frame.  Callers serialize writes per link
+/// (a torn interleaved frame would poison the whole connection).
+pub fn write_ld_frame(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+    stream.write_all(&(body.len() as u32).to_be_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Append the correlation id to a frame body.  `parse_request` ignores
+/// unknown keys, so the node strips nothing: the same v2 grammar crosses
+/// both the public socket and the inter-tier link.
+fn with_id(mut v: Value, id: u64) -> Value {
+    if let Value::Object(pairs) = &mut v {
+        pairs.push(("id".to_string(), json::num(id as f64)));
+    }
+    v
+}
+
+/// Re-type a node's wire reply into the `Response` the client channel
+/// expects — the inverse of `net::response_to_json`, driven entirely by
+/// the typed boolean wire fields (`ok`/`busy`/`expired`/`failed`), never
+/// by error-string inspection.  `policy` is the effective policy the
+/// front end routed (already interned; the wire name is redundant with
+/// it), `total_us` is stamped by the caller from its own clock.
+pub fn response_from_wire(v: &Value, id: u64, policy: PolicyId) -> Response {
+    let flag = |k: &str| v.get(k).and_then(Value::as_bool) == Some(true);
+    let ok = flag("ok");
+    let num = |k: &str| v.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+    let mut timing = Timing::default();
+    let logits = if ok {
+        timing.queue_us = num("queue_us") as u64;
+        timing.exec_us = num("exec_us") as u64;
+        timing.bucket = num("bucket") as usize;
+        timing.seq_bucket = num("seq_bucket") as usize;
+        timing.batch_real = num("batch") as usize;
+        v.get("logits")
+            .and_then(Value::as_array)
+            .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0) as f32).collect())
+            .unwrap_or_default()
+    } else {
+        vec![]
+    };
+    let error = if ok {
+        None
+    } else {
+        Some(
+            v.get("error")
+                .and_then(Value::as_str)
+                .unwrap_or("engine node answered without an error message")
+                .to_string(),
+        )
+    };
+    Response {
+        id,
+        policy,
+        logits,
+        timing,
+        error,
+        expired: flag("expired"),
+        failed: flag("failed"),
+        busy: flag("busy"),
+    }
+}
+
+// ----------------------------------------------------------- engine node
+
+/// An engine-node process: the existing single-process [`Coordinator`]
+/// (engine pool, residency manager, local admission bound) behind a
+/// length-delimited v2 listener.  Unlike the public `NetServer` (one
+/// request outstanding per connection), a node connection is a
+/// *pipelined link*: the reader admits frames as fast as they arrive and
+/// a pump thread streams replies back in completion order, so one link
+/// carries the front end's whole in-flight window.
+pub struct EngineNode {
+    pub addr: SocketAddr,
+    stop: Arc<StdAtomicBool>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineNode {
+    /// Bind `host:port` (port 0 = ephemeral) and serve until dropped.
+    pub fn start(coord: Arc<Coordinator>, host: &str, port: u16) -> Result<EngineNode> {
+        let listener =
+            TcpListener::bind((host, port)).with_context(|| format!("bind {host}:{port}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(StdAtomicBool::new(false));
+        let t_stop = Arc::clone(&stop);
+        let accept_join = std::thread::Builder::new()
+            .name("zqh-node-accept".into())
+            .spawn(move || {
+                let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !t_stop.load(StdOrdering::SeqCst) {
+                    let mut i = 0;
+                    while i < workers.len() {
+                        if workers[i].is_finished() {
+                            let _ = workers.swap_remove(i).join();
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = Arc::clone(&coord);
+                            let stop = Arc::clone(&t_stop);
+                            workers.push(std::thread::spawn(move || {
+                                let _ = node_conn(stream, &coord, &stop);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for w in workers {
+                    let _ = w.join();
+                }
+            })
+            .context("spawn node acceptor")?;
+        Ok(EngineNode { addr, stop, accept_join: Some(accept_join) })
+    }
+}
+
+impl Drop for EngineNode {
+    fn drop(&mut self) {
+        self.stop.store(true, StdOrdering::SeqCst);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One node link: a reader that admits frames into the local
+/// coordinator, and a pump that streams completed replies back.  Both
+/// write through one mutex — the frame serializer for this link.
+fn node_conn(stream: TcpStream, coord: &Arc<Coordinator>, stop: &Arc<StdAtomicBool>) -> Result<()> {
+    stream.set_read_timeout(Some(coord.config.net_read_timeout))?;
+    stream.set_nodelay(true)?;
+    let max_frame = coord.config.max_frame_bytes;
+    let writer = Arc::new(StdMutex::new(stream.try_clone()?));
+    type PendingVec = Vec<(u64, Receiver<Response>)>;
+    let pending: Arc<StdMutex<PendingVec>> = Arc::new(StdMutex::new(Vec::new()));
+    let done_reading = Arc::new(StdAtomicBool::new(false));
+
+    let pump = {
+        let coord = Arc::clone(coord);
+        let writer = Arc::clone(&writer);
+        let pending = Arc::clone(&pending);
+        let done_reading = Arc::clone(&done_reading);
+        let stop = Arc::clone(stop);
+        std::thread::Builder::new()
+            .name("zqh-node-pump".into())
+            .spawn(move || node_pump(&coord, &writer, &pending, &done_reading, &stop))
+            .context("spawn node pump")?
+    };
+
+    let mut rstream = stream;
+    loop {
+        match read_ld_frame(&mut rstream, stop, max_frame) {
+            Ok(Some(body)) => {
+                if !node_frame(coord, &writer, &pending, &body) {
+                    break;
+                }
+            }
+            Ok(None) | Err(_) => break,
+        }
+    }
+    done_reading.store(true, StdOrdering::SeqCst);
+    let _ = pump.join();
+    Ok(())
+}
+
+/// Admit one inter-tier frame.  Returns `false` on a protocol violation
+/// (unparseable frame, missing id) — the peer is our own front end, so a
+/// malformed frame means the link is corrupt and the connection drops.
+fn node_frame(
+    coord: &Coordinator,
+    writer: &StdMutex<TcpStream>,
+    pending: &StdMutex<Vec<(u64, Receiver<Response>)>>,
+    body: &[u8],
+) -> bool {
+    let text = String::from_utf8_lossy(body);
+    let Ok(req) = json::parse(text.trim()) else { return false };
+    let Some(id) = req.get("id").and_then(Value::as_f64) else { return false };
+    let id = id as u64;
+    let reply = |v: Value| write_link_frame(writer, &with_id(v, id));
+    let spec = match parse_request(&req, coord.seq()) {
+        Ok((spec, _)) => spec,
+        Err(e) => {
+            return reply(json::obj(vec![
+                ("ok", Value::Bool(false)),
+                ("error", Value::String(format!("{e:#}"))),
+            ]))
+        }
+    };
+    match coord.submit(spec) {
+        Ok(rx) => {
+            // panic-ok: pending critical sections are vec ops that cannot
+            // panic while holding the lock
+            pending.lock().expect("node pending").push((id, rx));
+            true
+        }
+        // local admission shed: the same typed busy flag the public
+        // protocol uses, correlated so the front end sheds exactly this
+        // request
+        Err(e @ SubmitError::Busy { .. }) => reply(json::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("busy", Value::Bool(true)),
+            ("error", Value::String(e.to_string())),
+            ("v", json::num(2.0)),
+        ])),
+        // a stopping node is indistinguishable from a dying one to the
+        // front end: answer `failed` (retryable elsewhere), typed
+        Err(SubmitError::Stopped) => reply(json::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("failed", Value::Bool(true)),
+            ("error", Value::String("engine node stopping".into())),
+            ("v", json::num(2.0)),
+        ])),
+        Err(e) => reply(json::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", Value::String(e.to_string())),
+        ])),
+    }
+}
+
+/// Serialize one frame onto the link.  Returns `false` when the link is
+/// gone (the caller unwinds the connection).
+fn write_link_frame(writer: &StdMutex<TcpStream>, v: &Value) -> bool {
+    let body = json::to_string(v).into_bytes();
+    // panic-ok: writer critical sections are a single frame write that
+    // cannot panic while holding the lock
+    let mut w = writer.lock().expect("link writer");
+    // block-ok: the writer mutex *is* this link's frame serializer — a
+    // torn interleaved frame would poison the connection; the only peers
+    // are other single-frame writes on the same link
+    write_ld_frame(&mut w, &body).is_ok()
+}
+
+/// Stream completed replies back over the link, out of submission order
+/// — whichever batch the local coordinator finishes first answers first
+/// (the correlation id resolves them on the front end).  Exits when the
+/// reader is done and the backlog is drained, when the link dies, or on
+/// stop.
+fn node_pump(
+    coord: &Coordinator,
+    writer: &StdMutex<TcpStream>,
+    pending: &StdMutex<Vec<(u64, Receiver<Response>)>>,
+    done_reading: &StdAtomicBool,
+    stop: &StdAtomicBool,
+) {
+    loop {
+        let mut ready: Vec<(u64, Option<Response>)> = Vec::new();
+        let empty = {
+            // panic-ok: pending critical sections are vec ops that cannot
+            // panic while holding the lock
+            let mut p = pending.lock().expect("node pending");
+            let mut i = 0;
+            while i < p.len() {
+                match p[i].1.try_recv() {
+                    Ok(resp) => {
+                        let (id, _) = p.swap_remove(i);
+                        ready.push((id, Some(resp)));
+                    }
+                    Err(TryRecvError::Empty) => i += 1,
+                    Err(TryRecvError::Disconnected) => {
+                        let (id, _) = p.swap_remove(i);
+                        ready.push((id, None));
+                    }
+                }
+            }
+            p.is_empty()
+        };
+        for (id, resp) in ready {
+            let v = match resp {
+                Some(resp) => with_id(response_to_json(&resp, 2, coord.manifest()), id),
+                // the local coordinator dropped the reply channel
+                // mid-flight (teardown): typed `failed` so the front end
+                // retries on a live node
+                None => with_id(
+                    json::obj(vec![
+                        ("ok", Value::Bool(false)),
+                        ("failed", Value::Bool(true)),
+                        ("error", Value::String("engine node dropped the request".into())),
+                        ("v", json::num(2.0)),
+                    ]),
+                    id,
+                ),
+            };
+            if !write_link_frame(writer, &v) {
+                return;
+            }
+        }
+        if stop.load(StdOrdering::SeqCst) {
+            return;
+        }
+        if done_reading.load(StdOrdering::SeqCst) && empty {
+            return;
+        }
+        std::thread::sleep(Duration::from_micros(500));
+    }
+}
+
+// ------------------------------------------------------------ front end
+
+/// Admission-tier knobs — the subset of `ServerConfig` that lives on the
+/// front end, plus the link-layer reconnect schedule.
+#[derive(Debug, Clone)]
+pub struct FrontEndConfig {
+    /// Admitted-but-unanswered bound across every node (shed past it).
+    pub queue_cap: usize,
+    /// Deadline stamped onto requests that do not carry one; enforced by
+    /// the engine node that owns the queue the request waits in.
+    pub default_deadline: Option<Duration>,
+    /// Precision governor (depth + node-reported queue-time signals).
+    pub governor: Option<GovernorConfig>,
+    /// Socket read timeout for client connections *and* node links.
+    pub net_read_timeout: Duration,
+    /// Per-frame byte cap on both protocols.
+    pub max_frame_bytes: usize,
+    /// Link reconnect backoff (shared shape with `NetClient` retries).
+    pub reconnect: BackoffSchedule,
+    /// How long `FrontEnd::start` waits for the initial link set.
+    pub connect_timeout: Duration,
+}
+
+impl Default for FrontEndConfig {
+    fn default() -> Self {
+        FrontEndConfig {
+            queue_cap: 1024,
+            default_deadline: None,
+            governor: None,
+            net_read_timeout: Duration::from_millis(200),
+            max_frame_bytes: 1 << 20,
+            reconnect: BackoffSchedule::default(),
+            connect_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One persistent link to an engine node.  `pending` is the correlation
+/// table: removal *is* ownership of the terminal reply — the reader, the
+/// death sweep, and a failed send race on `remove`, and exactly one wins,
+/// so every admitted request is finished exactly once no matter how the
+/// link dies.
+struct NodeLink {
+    /// Re-addressable so a node that re-joins on a fresh port (new
+    /// process, new ephemeral listener) takes over the slot —
+    /// service-discovery-style relocation without SO_REUSEADDR.
+    addr: StdMutex<SocketAddr>,
+    /// `Some` while the link is connected; the mutex is the link's frame
+    /// serializer.  Cleared (under the lock) by whoever sees the link
+    /// die first.
+    writer: StdMutex<Option<TcpStream>>,
+    pending: StdMutex<HashMap<u64, NodePending>>,
+}
+
+/// A request forwarded to a node and awaiting its reply.
+struct NodePending {
+    key: NodeKey,
+    /// Node incarnation the current forward was assigned under; echoed
+    /// to `NodeDispatch::complete` so a reply that raced a death is a
+    /// stale no-op there.
+    generation: u64,
+    /// Policy the client asked for — the ledger key.
+    requested: PolicyId,
+    /// Policy actually routed (may be a governed downgrade).
+    effective: PolicyId,
+    enqueued: Instant,
+    /// The serialized wire frame, kept for re-sends after node death.
+    frame: Vec<u8>,
+    /// Forward attempts so far; capped at nodes+1 before the request is
+    /// answered `failed` (every node refused or died while it was in
+    /// hand).
+    attempts: usize,
+    reply: Sender<Response>,
+}
+
+/// Shared state behind the front end: links, dispatch, ledger, governor
+/// table.  Split from [`FrontEnd`] so link-supervisor threads can hold
+/// it without a reference cycle through their own join handles.
+struct Router {
+    man: Arc<Manifest>,
+    recorder: Recorder,
+    cfg: FrontEndConfig,
+    /// Admitted-but-unanswered requests (the `queue_cap` bound).
+    depth: StdAtomicUsize,
+    dispatch: NodeDispatch,
+    links: Vec<NodeLink>,
+    /// Governor's shared effective-policy table (admission reads it).
+    governor: Option<Arc<GovernorShared>>,
+    /// Policies the governor table was sized for at start; late-interned
+    /// inline policies past this are ungovernable (no chain) and route
+    /// as requested.
+    governor_policies: usize,
+    /// Max node-reported queue time since the governor's last tick
+    /// (consumed by swap, like the batcher's queue signal).
+    queue_sig: StdAtomicU64,
+    stop: StdAtomicBool,
+}
+
+impl Router {
+    /// Forward (or re-forward) one request.  Loops because a send can
+    /// discover a dead link: the entry comes back, the node is marked
+    /// dead, and dispatch picks another.  Bounded by `attempts` — once
+    /// every node has had its chance the request is answered `failed`.
+    fn route(&self, id: u64, mut p: NodePending) {
+        loop {
+            if p.attempts > self.links.len() {
+                self.finish_failed(id, p, "no live engine node to run the request");
+                return;
+            }
+            p.attempts += 1;
+            let (node, generation) = self.dispatch.assign(p.key);
+            p.generation = generation;
+            match self.try_send(node, id, p) {
+                None => return,
+                Some(back) => p = back,
+            }
+        }
+    }
+
+    /// Park the entry in `node`'s pending map, then push its frame onto
+    /// the link.  `None` = the entry is out of our hands (sent, or a
+    /// concurrent sweep now owns it); `Some(p)` = the link was down and
+    /// we still own the entry — the caller re-routes it.
+    ///
+    /// The park happens *before* the write: the reply can race back the
+    /// instant the frame hits the wire, and the link reader resolves ids
+    /// through this map.  No path holds the pending lock across the
+    /// write (or any two link locks at once).
+    fn try_send(&self, node: usize, id: u64, p: NodePending) -> Option<NodePending> {
+        let link = &self.links[node];
+        let frame = p.frame.clone();
+        let (key, generation) = (p.key, p.generation);
+        {
+            // panic-ok: pending critical sections are map ops that cannot
+            // panic while holding the lock
+            link.pending.lock().expect("link pending").insert(id, p);
+        }
+        let wrote = {
+            // panic-ok: writer critical sections are a single frame write
+            // that cannot panic while holding the lock
+            let mut w = link.writer.lock().expect("link writer");
+            match w.as_mut() {
+                None => false,
+                // block-ok: the writer mutex *is* this link's frame
+                // serializer — a torn interleaved frame would poison the
+                // connection; peers are other single-frame writes
+                Some(stream) => match write_ld_frame(stream, &frame) {
+                    Ok(()) => true,
+                    Err(_) => {
+                        // poison the writer under the lock so no later
+                        // sender writes into a half-dead socket
+                        *w = None;
+                        false
+                    }
+                },
+            }
+        };
+        if wrote {
+            return None;
+        }
+        // the frame never made it out; whoever still finds the entry in
+        // the map owns it (a concurrent sweep may have already re-routed)
+        // panic-ok: pending critical sections are panic-free (see above)
+        let back = link.pending.lock().expect("link pending").remove(&id);
+        match back {
+            None => None,
+            Some(p) => {
+                // undo the assignment accounting; if the node died in
+                // between, mark_dead already purged and this is a stale
+                // no-op by generation
+                self.dispatch.complete(key, node, generation);
+                self.link_down(node);
+                Some(p)
+            }
+        }
+    }
+
+    /// Transition a node to dead and sweep its in-flight entries — each
+    /// swept request re-routes to a live node (or finishes `failed` once
+    /// its attempts run out).  Exactly the dead-replica discipline, one
+    /// tier up: exclude, purge pins, retry.
+    fn link_down(&self, node: usize) {
+        {
+            // panic-ok: writer critical sections are panic-free
+            let mut w = self.links[node].writer.lock().expect("link writer");
+            *w = None;
+        }
+        if self.dispatch.alive(node) {
+            self.dispatch.mark_dead(node);
+        }
+        let swept: Vec<(u64, NodePending)> = {
+            // panic-ok: pending critical sections are panic-free
+            let mut pend = self.links[node].pending.lock().expect("link pending");
+            pend.drain().collect()
+        };
+        for (id, p) in swept {
+            self.route(id, p);
+        }
+    }
+
+    /// Resolve one wire reply against the pending map.  A miss means the
+    /// entry was already finished elsewhere (swept and retried, or a
+    /// duplicate from a dead incarnation) — dropped, so nothing is ever
+    /// finished twice.
+    fn finish_from_wire(&self, node: usize, id: u64, v: &Value) {
+        // panic-ok: pending critical sections are panic-free
+        let p = self.links[node].pending.lock().expect("link pending").remove(&id);
+        let Some(p) = p else { return };
+        self.dispatch.complete(p.key, node, p.generation);
+        let mut resp = response_from_wire(v, id, p.effective);
+        resp.timing.total_us = p.enqueued.elapsed().as_micros() as u64;
+        self.finish(p, resp);
+    }
+
+    /// Answer a request the node tier could not run: typed `failed`,
+    /// same class as a swept replica failure.
+    fn finish_failed(&self, id: u64, p: NodePending, msg: &str) {
+        let resp = Response {
+            id,
+            policy: p.effective,
+            logits: vec![],
+            timing: Timing {
+                total_us: p.enqueued.elapsed().as_micros() as u64,
+                ..Timing::default()
+            },
+            error: Some(msg.to_string()),
+            expired: false,
+            failed: true,
+            busy: false,
+        };
+        self.finish(p, resp);
+    }
+
+    /// The single terminal point: ledger the outcome class against the
+    /// *requested* policy, release the depth reservation, reply.  Every
+    /// admitted request passes through here exactly once, which is what
+    /// keeps `admitted = completed + shed + expired + failed`
+    /// reconciling on this tier.
+    fn finish(&self, p: NodePending, resp: Response) {
+        if resp.busy {
+            // node-side admission shed: same ledger class as a local shed
+            self.recorder.record_shed_at(0, p.requested);
+        } else if resp.expired {
+            self.recorder.record_expired_at(0, p.requested, resp.timing.queue_us);
+        } else if resp.failed {
+            self.recorder.record_failed_at(0, p.requested);
+        } else if resp.error.is_some() {
+            self.recorder.record_request_at(
+                0,
+                p.requested,
+                resp.timing.total_us,
+                resp.timing.queue_us,
+                true,
+            );
+        } else {
+            self.recorder.record_request_at(
+                0,
+                p.requested,
+                resp.timing.total_us,
+                resp.timing.queue_us,
+                false,
+            );
+            // feed the governor the node-observed queue pressure
+            self.queue_sig.fetch_max(resp.timing.queue_us, StdOrdering::SeqCst);
+        }
+        self.depth.fetch_sub(1, StdOrdering::SeqCst);
+        let _ = p.reply.send(resp);
+    }
+}
+
+/// Sleep in small slices so stop lands within ~5 ms, not a full backoff.
+fn sleep_interruptible(stop: &StdAtomicBool, d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d && !stop.load(StdOrdering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(5).min(d));
+    }
+}
+
+/// Own one node link for the life of the front end: connect (with the
+/// `BackoffSchedule`), install the writer, revive the node in dispatch,
+/// then run the reply reader inline until the link dies — at which point
+/// the node is marked dead, its in-flight entries sweep onto live nodes,
+/// and the loop reconnects.  Re-reads the slot's address every attempt,
+/// so `FrontEnd::relocate` redirects a dead slot to a re-joined node.
+fn link_supervisor(router: Arc<Router>, node: usize) {
+    let mut attempt: u32 = 0;
+    while !router.stop.load(StdOrdering::SeqCst) {
+        let addr = {
+            // panic-ok: addr critical section is a copy
+            *router.links[node].addr.lock().expect("link addr")
+        };
+        let stream = match TcpStream::connect(addr) {
+            Ok(s) => s,
+            Err(_) => {
+                // unreachable node: exclude it from routing while backing
+                // off (the sweep re-homes anything a racing send parked)
+                if router.dispatch.alive(node) {
+                    router.link_down(node);
+                }
+                sleep_interruptible(&router.stop, router.cfg.reconnect.delay(attempt));
+                attempt = attempt.saturating_add(1);
+                continue;
+            }
+        };
+        if stream.set_read_timeout(Some(router.cfg.net_read_timeout)).is_err()
+            || stream.set_nodelay(true).is_err()
+        {
+            sleep_interruptible(&router.stop, router.cfg.reconnect.delay(attempt));
+            attempt = attempt.saturating_add(1);
+            continue;
+        }
+        let Ok(wstream) = stream.try_clone() else {
+            sleep_interruptible(&router.stop, router.cfg.reconnect.delay(attempt));
+            attempt = attempt.saturating_add(1);
+            continue;
+        };
+        {
+            // panic-ok: writer critical sections are panic-free
+            let mut w = router.links[node].writer.lock().expect("link writer");
+            *w = Some(wstream);
+        }
+        router.dispatch.revive(node);
+        attempt = 0;
+        let mut rstream = stream;
+        loop {
+            match read_ld_frame(&mut rstream, &router.stop, router.cfg.max_frame_bytes) {
+                Ok(Some(body)) => {
+                    let text = String::from_utf8_lossy(&body);
+                    let Ok(v) = json::parse(text.trim()) else { break };
+                    let Some(id) = v.get("id").and_then(Value::as_f64) else { break };
+                    router.finish_from_wire(node, id as u64, &v);
+                }
+                Ok(None) | Err(_) => break,
+            }
+        }
+        if router.stop.load(StdOrdering::SeqCst) {
+            break;
+        }
+        router.link_down(node);
+    }
+}
+
+/// The front-end tier: depth-bounded typed admission, deadline stamping,
+/// and the precision governor — everything `Coordinator::submit` does
+/// except touch an engine — over [`NodeDispatch`]-routed links to engine
+/// nodes.  Serves the public protocol through `NetServer` via the
+/// [`Admission`](super::net::Admission) trait, so clients cannot tell a
+/// two-tier deployment from a single process.
+pub struct FrontEnd {
+    router: Arc<Router>,
+    next_id: StdAtomicU64,
+    supervisors: Vec<std::thread::JoinHandle<()>>,
+    governor_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FrontEnd {
+    /// Load the manifest from `artifacts` (route/policy tables only — no
+    /// checkpoints open on this tier), dial every node, and wait for the
+    /// initial link set to come up.
+    pub fn start(artifacts: &Path, nodes: &[SocketAddr], config: FrontEndConfig) -> Result<FrontEnd> {
+        anyhow::ensure!(!nodes.is_empty(), "front end needs at least one engine node");
+        let man = Arc::new(Manifest::load(artifacts)?);
+        let recorder = Recorder::new(man.policy_order.clone(), nodes.len());
+        let governor_policies = man.num_policies();
+        let governor_shared =
+            config.governor.as_ref().map(|_| Arc::new(GovernorShared::new(governor_policies)));
+        let links = nodes
+            .iter()
+            .map(|a| NodeLink {
+                addr: StdMutex::new(*a),
+                writer: StdMutex::new(None),
+                pending: StdMutex::new(HashMap::new()),
+            })
+            .collect();
+        let router = Arc::new(Router {
+            man: Arc::clone(&man),
+            recorder,
+            cfg: config.clone(),
+            depth: StdAtomicUsize::new(0),
+            dispatch: NodeDispatch::new(nodes.len()),
+            links,
+            governor: governor_shared.clone(),
+            governor_policies,
+            queue_sig: StdAtomicU64::new(0),
+            stop: StdAtomicBool::new(false),
+        });
+        let mut supervisors = Vec::with_capacity(nodes.len());
+        for node in 0..nodes.len() {
+            let r = Arc::clone(&router);
+            supervisors.push(
+                std::thread::Builder::new()
+                    .name(format!("zqh-link-{node}"))
+                    .spawn(move || link_supervisor(r, node))
+                    .context("spawn link supervisor")?,
+            );
+        }
+        // governor: pure machine on its own tick thread (the front end
+        // has no batcher thread to host it); admission reads the shared
+        // table exactly as in-process admission does
+        let governor_join = match (config.governor.clone(), governor_shared) {
+            (Some(cfg), Some(shared)) => {
+                let chains: Vec<Vec<PolicyId>> = (0..man.num_policies())
+                    .map(|i| man.downgrade_chain(PolicyId(i as u16)))
+                    .collect();
+                let mut machine = PrecisionGovernor::new(chains, cfg);
+                let r = Arc::clone(&router);
+                Some(
+                    std::thread::Builder::new()
+                        .name("zqh-fe-governor".into())
+                        .spawn(move || {
+                            while !r.stop.load(StdOrdering::SeqCst) {
+                                std::thread::sleep(machine.config().tick);
+                                let signals = Signals {
+                                    depth: r.depth.load(StdOrdering::SeqCst),
+                                    // consumed-on-read, like the batcher's
+                                    // queue sample
+                                    queue_us: r.queue_sig.swap(0, StdOrdering::SeqCst),
+                                };
+                                for ev in machine.observe(signals) {
+                                    shared.publish(ev.policy, ev.to);
+                                }
+                            }
+                        })
+                        .context("spawn front-end governor")?,
+                )
+            }
+            _ => None,
+        };
+        let fe = FrontEnd {
+            router,
+            next_id: StdAtomicU64::new(0),
+            supervisors,
+            governor_join,
+        };
+        let t0 = Instant::now();
+        while fe.live_nodes() < nodes.len() {
+            anyhow::ensure!(
+                t0.elapsed() < fe.router.cfg.connect_timeout,
+                "engine nodes not reachable within {:?} ({}/{} links up)",
+                fe.router.cfg.connect_timeout,
+                fe.live_nodes(),
+                nodes.len()
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(fe)
+    }
+
+    /// Admit a typed request and route it to an engine node.  Mirrors
+    /// `Coordinator::submit` — validation, policy interning, governor
+    /// steering, depth-bounded shed with the same typed `Busy` — minus
+    /// the residency checks: the node tier owns executables, and a node
+    /// that cannot serve a route answers with a typed error instead.
+    pub fn submit(
+        &self,
+        spec: RequestSpec,
+    ) -> std::result::Result<Receiver<Response>, SubmitError> {
+        let r = &*self.router;
+        let RequestSpec { task, policy, ids, type_ids, deadline } = spec;
+        let reject = |e: anyhow::Error| SubmitError::Rejected(e);
+        let seq = r.man.seq;
+        if ids.is_empty() || ids.len() > seq {
+            return Err(reject(anyhow!(
+                "request needs 1..={} token ids (got {})",
+                seq,
+                ids.len()
+            )));
+        }
+        let mut type_ids = type_ids.unwrap_or_default();
+        if type_ids.len() > seq {
+            return Err(reject(anyhow!(
+                "type_ids longer than seq {} (got {})",
+                seq,
+                type_ids.len()
+            )));
+        }
+        type_ids.resize(ids.len(), 0);
+        let seq_bucket = r.man.seq_bucket_for(ids.len());
+        let task_id = r
+            .man
+            .task_id(&task)
+            .map_err(|_| reject(anyhow!("unknown task {task:?}; not in this manifest")))?;
+        let requested = match &policy {
+            None => {
+                if r.man.mode_order.is_empty() {
+                    return Err(reject(anyhow!(
+                        "manifest declares no modes; a request without an explicit \
+                         policy has no default route"
+                    )));
+                }
+                PolicyId(0)
+            }
+            Some(PolicyRef::Named(n)) => r
+                .man
+                .policy_id(n)
+                .map_err(|_| reject(anyhow!("unknown policy {n:?}; not in this manifest")))?,
+            Some(PolicyRef::Inline(draft)) => {
+                r.man.intern_inline_policy(draft).map_err(reject)?
+            }
+        };
+        // governed steering: late-interned inline policies sit past the
+        // table the governor was sized for — ungovernable (no chain),
+        // route as requested
+        let effective = match &r.governor {
+            Some(g) if (requested.0 as usize) < r.governor_policies => g.effective(requested),
+            _ => requested,
+        };
+        let busy = || SubmitError::Busy { queue_cap: r.cfg.queue_cap };
+        if r.depth.fetch_add(1, StdOrdering::SeqCst) >= r.cfg.queue_cap {
+            r.depth.fetch_sub(1, StdOrdering::SeqCst);
+            r.recorder.record_shed_at(0, requested);
+            return Err(busy());
+        }
+        let id = self.next_id.fetch_add(1, StdOrdering::SeqCst);
+        let now = Instant::now();
+        // the node enforces the deadline — it owns the queue the request
+        // waits in — so the budget rides the wire instead of a local
+        // timer (clocks need not be synchronized: a duration crosses the
+        // link, not an instant)
+        let deadline = deadline.or(r.cfg.default_deadline);
+        let wire_policy = if effective != requested {
+            // governed downgrade: route the chain rung by name (chain
+            // targets are manifest-declared, so the node knows it)
+            Some(PolicyRef::Named(r.man.policy_name(effective).to_string()))
+        } else {
+            // pass inline drafts through verbatim — the node interns them
+            // against its own manifest
+            policy
+        };
+        let wire = RequestSpec { task, policy: wire_policy, ids, type_ids: Some(type_ids), deadline };
+        let frame = json::to_string(&with_id(request_to_json(&wire), id)).into_bytes();
+        if effective != requested {
+            r.recorder.record_governed_at(0, requested);
+        }
+        let (reply, rx) = channel();
+        let pending = NodePending {
+            key: (task_id, effective, seq_bucket),
+            generation: 0,
+            requested,
+            effective,
+            enqueued: now,
+            frame,
+            attempts: 0,
+            reply,
+        };
+        r.route(id, pending);
+        Ok(rx)
+    }
+
+    /// Point a (dead) node slot at a new address — a re-joined node on a
+    /// fresh ephemeral port takes over the slot on the supervisor's next
+    /// connect attempt.
+    pub fn relocate(&self, node: usize, addr: SocketAddr) {
+        // panic-ok: addr critical section is a store
+        *self.router.links[node].addr.lock().expect("link addr") = addr;
+    }
+
+    /// Links currently connected *and* admitted to dispatch.
+    pub fn live_nodes(&self) -> usize {
+        (0..self.router.links.len())
+            .filter(|n| {
+                self.router.dispatch.alive(*n)
+                    // panic-ok: writer critical section is a presence check
+                    && self.router.links[*n].writer.lock().expect("link writer").is_some()
+            })
+            .count()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.router.links.len()
+    }
+
+    /// Node-dispatch introspection (tests / stats).
+    pub fn dispatch(&self) -> &NodeDispatch {
+        &self.router.dispatch
+    }
+
+    /// This tier's ledger: per-policy `requests == completed + errors +
+    /// expired + failed` with `shed` counted apart, exactly like the
+    /// coordinator's recorder.
+    pub fn recorder(&self) -> &Recorder {
+        &self.router.recorder
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.router.man
+    }
+
+    /// Admitted-but-unanswered requests; 0 once every client has its
+    /// terminal reply (leak witness for the chaos tests).
+    pub fn queue_depth(&self) -> usize {
+        self.router.depth.load(StdOrdering::SeqCst)
+    }
+
+    pub fn num_labels(&self) -> usize {
+        self.router.man.model.num_labels
+    }
+
+    pub fn seq(&self) -> usize {
+        self.router.man.seq
+    }
+}
+
+impl super::net::Admission for FrontEnd {
+    fn submit_spec(
+        &self,
+        spec: RequestSpec,
+    ) -> std::result::Result<Receiver<Response>, SubmitError> {
+        self.submit(spec)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        FrontEnd::manifest(self)
+    }
+
+    fn seq(&self) -> usize {
+        FrontEnd::seq(self)
+    }
+
+    fn net_read_timeout(&self) -> Duration {
+        self.router.cfg.net_read_timeout
+    }
+
+    fn max_frame_bytes(&self) -> usize {
+        self.router.cfg.max_frame_bytes
+    }
+}
+
+impl Drop for FrontEnd {
+    fn drop(&mut self) {
+        self.router.stop.store(true, StdOrdering::SeqCst);
+        for j in self.supervisors.drain(..) {
+            let _ = j.join();
+        }
+        if let Some(j) = self.governor_join.take() {
+            let _ = j.join();
+        }
+        // no thread owns the pending maps any more: fail whatever is
+        // still parked so no client blocks on a reply that cannot come
+        for node in 0..self.router.links.len() {
+            let swept: Vec<(u64, NodePending)> = {
+                // panic-ok: pending critical sections are panic-free
+                let mut pend = self.router.links[node].pending.lock().expect("link pending");
+                pend.drain().collect()
+            };
+            for (id, p) in swept {
+                self.router.finish_failed(id, p, "front end shutting down");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, Rng};
+
+    fn key(t: u16, p: u16, s: usize) -> NodeKey {
+        (TaskId(t), PolicyId(p), s)
+    }
+
+    #[test]
+    fn node_dispatch_pins_migrates_and_stales_dead_incarnations() {
+        let d = NodeDispatch::new(2);
+        let g0 = key(0, 0, 0);
+        let g1 = key(0, 0, 1);
+        // seq classes of one route pin independently
+        let (n0, gen0) = d.assign(g0);
+        assert_eq!((n0, gen0), (0, 0));
+        assert_eq!(d.assign(g0).0, 0, "pinned while in flight");
+        let (n1, _) = d.assign(g1);
+        assert_eq!(n1, 1, "fresh class takes the least-loaded node");
+        assert_eq!(d.pinned_groups(), 2);
+        // node 0 dies: pins purge, counter zeroes, traffic migrates
+        d.mark_dead(0);
+        assert!(!d.alive(0));
+        assert_eq!(d.generation(0), 1);
+        assert_eq!(d.inflight(0), 0);
+        assert_eq!(d.assign(g0).0, 1, "dead node attracts nothing");
+        // completions from the dead incarnation are strict no-ops
+        d.complete(g0, 0, gen0);
+        assert_eq!(d.inflight(0), 0);
+        assert_eq!(d.inflight(1), 3);
+        // revive re-admits at the bumped generation
+        d.revive(0);
+        let g2 = key(1, 0, 0);
+        let (n2, gen2) = d.assign(g2);
+        assert_eq!((n2, gen2), (0, 1), "revived node is least-loaded again");
+        d.complete(g2, 0, gen0); // stale generation: no-op
+        assert_eq!(d.inflight(0), 1);
+        d.complete(g2, 0, gen2);
+        d.complete(g0, 1, 0);
+        d.complete(g0, 1, 0);
+        d.complete(g1, 1, 0);
+        assert_eq!(d.pinned_groups(), 0);
+        assert_eq!(d.inflight(0) + d.inflight(1), 0);
+    }
+
+    #[test]
+    fn prop_node_per_group_fifo_pinning_and_count_consistency() {
+        forall("node-dispatch-pinning", 60, |r: &mut Rng| {
+            let nnodes = 1 + r.below(4);
+            let d = NodeDispatch::new(nnodes);
+            // in-flight requests as (group, node, generation)
+            let mut open: Vec<(NodeKey, usize, u64)> = Vec::new();
+            let mut pinned: HashMap<NodeKey, usize> = HashMap::new();
+            for _ in 0..200 {
+                if open.is_empty() || r.bool() {
+                    let k = key(r.below(2) as u16, r.below(3) as u16, r.below(2));
+                    let loads: Vec<usize> = (0..nnodes).map(|i| d.inflight(i)).collect();
+                    let (node, gen) = d.assign(k);
+                    assert!(node < nnodes);
+                    assert_eq!(gen, 0, "no deaths in this test");
+                    match pinned.get(&k) {
+                        // the FIFO guarantee: while a group has requests
+                        // in flight, every new one lands on the same node
+                        Some(p) => assert_eq!(*p, node, "group reassigned while in flight"),
+                        // a fresh (or migrated) group takes a
+                        // least-loaded node, measured before this
+                        // assignment
+                        None => {
+                            let min = loads.iter().copied().min().unwrap();
+                            assert_eq!(loads[node], min, "not least-loaded: {loads:?} -> {node}");
+                            pinned.insert(k, node);
+                        }
+                    }
+                    open.push((k, node, gen));
+                } else {
+                    let i = r.below(open.len());
+                    let (k, node, gen) = open.swap_remove(i);
+                    d.complete(k, node, gen);
+                    if !open.iter().any(|(ok, _, _)| *ok == k) {
+                        pinned.remove(&k);
+                    }
+                }
+                // accounting consistency: per-node in-flight counters
+                // always equal the number of open requests per node
+                for node in 0..nnodes {
+                    assert_eq!(
+                        d.inflight(node),
+                        open.iter().filter(|(_, p, _)| *p == node).count(),
+                        "node {node} count drifted"
+                    );
+                }
+                assert_eq!(d.pinned_groups(), pinned.len());
+            }
+            for (k, node, gen) in open.drain(..) {
+                d.complete(k, node, gen);
+            }
+            assert_eq!(d.pinned_groups(), 0);
+            for node in 0..nnodes {
+                assert_eq!(d.inflight(node), 0);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_node_dispatch_generations_neutralize_stale_completions() {
+        forall("node-dispatch-supervision", 60, |r: &mut Rng| {
+            let nnodes = 1 + r.below(4);
+            let d = NodeDispatch::new(nnodes);
+            // live requests vs completions orphaned by a death (stale)
+            let mut open: Vec<(NodeKey, usize, u64)> = Vec::new();
+            let mut stale: Vec<(NodeKey, usize, u64)> = Vec::new();
+            let mut pinned: HashMap<NodeKey, usize> = HashMap::new();
+            let mut alive = vec![true; nnodes];
+            for _ in 0..300 {
+                match r.below(10) {
+                    // kill a node: its open requests become stale (the
+                    // router's sweep re-routes them as *new* assignments)
+                    0 => {
+                        let node = r.below(nnodes);
+                        if alive[node] {
+                            d.mark_dead(node);
+                            alive[node] = false;
+                            let mut kept = Vec::new();
+                            for e in open.drain(..) {
+                                if e.1 == node {
+                                    stale.push(e);
+                                } else {
+                                    kept.push(e);
+                                }
+                            }
+                            open = kept;
+                            pinned.retain(|_, p| *p != node);
+                        }
+                    }
+                    // reconnect re-admits the slot
+                    1 => {
+                        let node = r.below(nnodes);
+                        if !alive[node] {
+                            d.revive(node);
+                            alive[node] = true;
+                        }
+                    }
+                    // replay a stale completion at a random point: the
+                    // generation tag must make it a strict no-op
+                    2 | 3 if !stale.is_empty() => {
+                        let i = r.below(stale.len());
+                        let (k, node, gen) = stale.swap_remove(i);
+                        d.complete(k, node, gen);
+                    }
+                    _ if open.is_empty() || r.bool() => {
+                        let k = key(r.below(2) as u16, r.below(3) as u16, r.below(2));
+                        let (node, gen) = d.assign(k);
+                        assert!(node < nnodes);
+                        assert_eq!(gen, d.generation(node));
+                        match pinned.get(&k) {
+                            Some(p) => assert_eq!(*p, node, "group reassigned while in flight"),
+                            None => {
+                                if alive.iter().any(|a| *a) {
+                                    assert!(
+                                        alive[node],
+                                        "assigned to a dead node while a live one exists"
+                                    );
+                                }
+                                pinned.insert(k, node);
+                            }
+                        }
+                        open.push((k, node, gen));
+                    }
+                    _ => {
+                        let i = r.below(open.len());
+                        let (k, node, gen) = open.swap_remove(i);
+                        d.complete(k, node, gen);
+                        if !open.iter().any(|(ok, _, _)| *ok == k) {
+                            pinned.remove(&k);
+                        }
+                    }
+                }
+                // the live accounting never drifts, no matter how death,
+                // reconnection, and stale replays interleave
+                for node in 0..nnodes {
+                    assert_eq!(
+                        d.inflight(node),
+                        open.iter().filter(|(_, p, _)| *p == node).count(),
+                        "node {node} count drifted"
+                    );
+                }
+                assert_eq!(d.pinned_groups(), pinned.len());
+            }
+            for (k, node, gen) in open.drain(..) {
+                d.complete(k, node, gen);
+            }
+            // any leftover stale completions drain as no-ops
+            for (k, node, gen) in stale.drain(..) {
+                d.complete(k, node, gen);
+            }
+            assert_eq!(d.pinned_groups(), 0);
+            for node in 0..nnodes {
+                assert_eq!(d.inflight(node), 0, "stale completion corrupted node {node}");
+            }
+        });
+    }
+
+    #[test]
+    fn ld_frames_survive_read_timeouts_and_pipelining() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let body = br#"{"id":1,"task":"t"}"#;
+            // length prefix, then a pause past the read timeout, then the
+            // body plus a second whole frame back-to-back (pipelining)
+            s.write_all(&(body.len() as u32).to_be_bytes()).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(120));
+            s.write_all(body).unwrap();
+            write_ld_frame(&mut s, br#"{"id":2}"#).unwrap();
+            s.flush().unwrap();
+            s
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(40))).unwrap();
+        let stop = StdAtomicBool::new(false);
+        let mut r = stream;
+        let f1 = read_ld_frame(&mut r, &stop, 1 << 20).unwrap().unwrap();
+        assert_eq!(&f1, br#"{"id":1,"task":"t"}"#);
+        let f2 = read_ld_frame(&mut r, &stop, 1 << 20).unwrap().unwrap();
+        assert_eq!(&f2, br#"{"id":2}"#);
+        // peer closes at a frame boundary: clean shutdown, not an error
+        drop(writer.join().unwrap());
+        assert!(read_ld_frame(&mut r, &stop, 1 << 20).unwrap().is_none());
+    }
+
+    #[test]
+    fn ld_frame_rejects_oversize_and_torn_frames() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // a frame claiming 2 MiB against a 1 MiB cap
+            s.write_all(&(2u32 << 20).to_be_bytes()).unwrap();
+            let _ = s.flush();
+            s
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(40))).unwrap();
+        let stop = StdAtomicBool::new(false);
+        let mut r = stream;
+        assert!(read_ld_frame(&mut r, &stop, 1 << 20).is_err(), "oversize must be link poison");
+        drop(writer.join().unwrap());
+
+        // a peer that closes mid-frame tore it: error, not a clean None
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&(10u32).to_be_bytes()).unwrap();
+            s.write_all(b"abc").unwrap(); // 3 of 10 promised bytes
+            let _ = s.flush();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(40))).unwrap();
+        let mut r = stream;
+        writer.join().unwrap();
+        assert!(read_ld_frame(&mut r, &stop, 1 << 20).is_err(), "torn frame must be link poison");
+    }
+
+    #[test]
+    fn correlation_id_rides_the_v2_grammar_unchanged() {
+        // the inter-tier frame is request_to_json + id: parse_request
+        // must accept it verbatim (unknown keys ignored) and the id must
+        // survive the round trip
+        let spec = RequestSpec::task("sst2").mode("m3").ids(vec![1, 2, 3]).deadline_ms(250);
+        let framed = with_id(request_to_json(&spec), 7);
+        assert_eq!(framed.get("id").and_then(Value::as_f64), Some(7.0));
+        let (parsed, version) = parse_request(&framed, 8).unwrap();
+        assert_eq!(version, 2);
+        assert_eq!(parsed.task, spec.task);
+        assert_eq!(parsed.policy, spec.policy);
+        assert_eq!(parsed.ids, spec.ids);
+        assert_eq!(parsed.deadline, spec.deadline);
+    }
+
+    fn man_for_wire_tests() -> Manifest {
+        // the smallest manifest the name mapping in response_to_json
+        // needs: one mode, one task
+        Manifest::from_json_str(
+            r#"{
+              "model": {"vocab_size": 8, "hidden": 4, "layers": 1, "heads": 2,
+                        "ffn": 8, "max_seq": 4, "type_vocab": 2, "num_labels": 2,
+                        "ln_eps": 0.00001},
+              "seq": 4,
+              "buckets": [1, 2],
+              "modes": {
+                "fp": {
+                  "switches": {"embedding": false, "qkv": false, "attn": false,
+                               "attn_output": false, "fc1": false, "fc2": false},
+                  "artifacts": {},
+                  "params": []
+                }
+              },
+              "calib": {"artifact": "calib.bin", "batch": 1, "params": [], "stats": []},
+              "tasks": {"t": {"splits": {}, "metrics": [], "classes": 2,
+                               "checkpoint": "ckpt-{mode}.bin"}}
+            }"#,
+            Path::new("."),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn typed_outcome_classes_round_trip_the_wire_both_directions() {
+        let man = man_for_wire_tests();
+        let base = Response {
+            id: 0,
+            policy: PolicyId(0),
+            logits: vec![],
+            timing: Timing::default(),
+            error: None,
+            expired: false,
+            failed: false,
+            busy: false,
+        };
+
+        // success: logits and timings survive, no outcome flags
+        let ok = Response {
+            logits: vec![0.5, -1.5],
+            timing: Timing {
+                queue_us: 120,
+                exec_us: 340,
+                bucket: 2,
+                seq_bucket: 4,
+                batch_real: 2,
+                ..Timing::default()
+            },
+            ..base.clone()
+        };
+        let wire = response_to_json(&ok, 2, &man);
+        assert_eq!(wire.get("ok").and_then(Value::as_bool), Some(true));
+        let back = response_from_wire(&wire, 9, PolicyId(0));
+        assert_eq!(back.id, 9);
+        assert_eq!(back.logits, ok.logits);
+        assert_eq!(back.timing.queue_us, 120);
+        assert_eq!(back.timing.exec_us, 340);
+        assert_eq!(back.timing.batch_real, 2);
+        assert!(back.error.is_none() && !back.busy && !back.expired && !back.failed);
+
+        // each failure class crosses as its own typed flag and comes
+        // back as the same class — never re-derived from the message
+        let cases = [
+            (Response { busy: true, error: Some("queue full".into()), ..base.clone() }, "busy"),
+            (
+                Response {
+                    expired: true,
+                    error: Some("deadline exceeded after 900us in queue".into()),
+                    ..base.clone()
+                },
+                "expired",
+            ),
+            (
+                Response {
+                    failed: true,
+                    error: Some("engine replica failed before the batch completed".into()),
+                    ..base.clone()
+                },
+                "failed",
+            ),
+        ];
+        for (resp, flag) in cases {
+            let wire = response_to_json(&resp, 2, &man);
+            assert_eq!(wire.get("ok").and_then(Value::as_bool), Some(false));
+            assert_eq!(wire.get(flag).and_then(Value::as_bool), Some(true), "{flag}");
+            let back = response_from_wire(&wire, 3, PolicyId(0));
+            assert_eq!(back.busy, resp.busy, "{flag}");
+            assert_eq!(back.expired, resp.expired, "{flag}");
+            assert_eq!(back.failed, resp.failed, "{flag}");
+            assert_eq!(back.error, resp.error, "{flag}");
+        }
+
+        // a plain terminal error carries no class flag in either
+        // direction
+        let err = Response { error: Some("unknown task".into()), ..base };
+        let wire = response_to_json(&err, 2, &man);
+        for flag in ["busy", "expired", "failed"] {
+            assert!(wire.get(flag).is_none(), "{flag} must be absent");
+        }
+        let back = response_from_wire(&wire, 1, PolicyId(0));
+        assert_eq!(back.error.as_deref(), Some("unknown task"));
+        assert!(!back.busy && !back.expired && !back.failed);
+    }
+}

@@ -177,6 +177,14 @@ pub struct Response {
     /// recovered pool is expected to succeed.  Mutually exclusive with
     /// `expired`; always accompanied by `error`.
     pub failed: bool,
+    /// Admission shed on a *remote* tier (DESIGN.md §5.14): an engine
+    /// node answered `Busy` after the front end had already handed the
+    /// client a receiver, so the backpressure arrives as a terminal
+    /// response instead of a `SubmitError`.  Same outcome class as a
+    /// local `SubmitError::Busy` — retry later, nothing is wrong with
+    /// the request.  Always `false` for responses a single-process
+    /// coordinator produces.
+    pub busy: bool,
 }
 
 #[derive(Debug, Clone, Default)]

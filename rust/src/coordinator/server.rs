@@ -914,6 +914,7 @@ fn dispatch(
                         error: None,
                         expired: false,
                         failed: false,
+                        busy: false,
                     });
                 }
             }
@@ -965,6 +966,7 @@ fn send_error(r: &Request, policy: PolicyId, recorder: &Recorder, msg: &str) {
         error: Some(msg.to_string()),
         expired: false,
         failed: false,
+        busy: false,
     });
 }
 
@@ -982,6 +984,7 @@ fn send_failed(r: &Request, policy: PolicyId, recorder: &Recorder) {
         error: Some("engine replica failed before the batch completed".to_string()),
         expired: false,
         failed: true,
+        busy: false,
     });
 }
 
@@ -999,5 +1002,6 @@ fn send_expired(r: &Request, recorder: &Recorder, now: Instant) {
         error: Some(format!("deadline exceeded after {queue_us}us in queue")),
         expired: true,
         failed: false,
+        busy: false,
     });
 }

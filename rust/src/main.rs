@@ -104,6 +104,27 @@ fn cli() -> Cli {
                     OptSpec { name: "max-resident-cells", takes_value: true, default: Some("0"), help: "LRU budget for resident executable cells per replica (0 = unbounded)" },
                     OptSpec { name: "pin-full-grid", takes_value: false, default: None, help: "pin every (mode, seq, batch) executable cell at startup (pre-residency eager preload)" },
                     OptSpec { name: "reload", takes_value: false, default: None, help: "hot-reload the manifest when artifacts/manifest.json changes on disk (SIGHUP also triggers a reload)" },
+                    OptSpec { name: "nodes", takes_value: true, default: None, help: "comma-separated engine-node addresses (host:port): serve as a front-end tier routing over the v2 link protocol instead of running an in-process engine" },
+                ],
+            },
+            SubSpec {
+                name: "engine-node",
+                help: "engine-node tier: the coordinator (engine pool + residency manager) behind a length-delimited v2 link listener for a front end (DESIGN.md 5.14)",
+                opts: vec![
+                    artifacts_opt(),
+                    OptSpec { name: "host", takes_value: true, default: Some("127.0.0.1"), help: "bind host" },
+                    OptSpec { name: "port", takes_value: true, default: Some("7434"), help: "bind port (0 = ephemeral)" },
+                    OptSpec { name: "tasks", takes_value: true, default: Some("sst2,mrpc,cola"), help: "tasks to load" },
+                    OptSpec { name: "modes", takes_value: true, default: Some("fp,m1,m2,m3"), help: "precision modes to load" },
+                    OptSpec { name: "policies", takes_value: true, default: None, help: "extra manifest policies to load (comma-separated)" },
+                    OptSpec { name: "max-batch", takes_value: true, default: Some("16"), help: "batcher max batch" },
+                    OptSpec { name: "max-wait-ms", takes_value: true, default: Some("4"), help: "batcher max wait" },
+                    OptSpec { name: "replicas", takes_value: true, default: Some("1"), help: "engine replicas behind the load-aware dispatcher" },
+                    OptSpec { name: "queue-cap", takes_value: true, default: Some("1024"), help: "node-local admission bound (sheds with a typed busy frame beyond it)" },
+                    OptSpec { name: "watchdog-ms", takes_value: true, default: Some("0"), help: "replica heartbeat stall budget before supervised restart (0 = off)" },
+                    OptSpec { name: "restart-budget", takes_value: true, default: Some("5"), help: "replica restarts tolerated per window before circuit-breaker exclusion" },
+                    OptSpec { name: "max-resident-cells", takes_value: true, default: Some("0"), help: "LRU budget for resident executable cells per replica (0 = unbounded)" },
+                    OptSpec { name: "fake-engine-ms", takes_value: true, default: Some("0"), help: "serve a fake engine with this per-batch latency instead of real executables (testing; 0 = real engine)" },
                 ],
             },
             SubSpec {
@@ -129,6 +150,7 @@ fn cli() -> Cli {
                     OptSpec { name: "chaos", takes_value: false, default: None, help: "supervision smoke: kill one replica mid-run, assert goodput recovers, write BENCH_chaos_smoke.json" },
                     OptSpec { name: "residency", takes_value: false, default: None, help: "residency smoke: pin-set startup vs eager full-grid preload, write BENCH_residency.json" },
                     OptSpec { name: "max-resident-cells", takes_value: true, default: Some("0"), help: "LRU budget for resident executable cells per replica (0 = unbounded)" },
+                    OptSpec { name: "nodes", takes_value: true, default: Some("0"), help: "multi-host sweep: open-loop goodput through a front end over 1..N fake-engine nodes, write BENCH_multihost.json (0 = off; self-contained, no artifacts needed)" },
                 ],
             },
             SubSpec {
@@ -160,6 +182,7 @@ fn main() {
         "trace" => cmd_trace(&args),
         "perfmodel" => cmd_perfmodel(&args),
         "serve" => cmd_serve(&args),
+        "engine-node" => cmd_engine_node(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "lint" => cmd_lint(&args),
         _ => unreachable!(),
@@ -486,6 +509,9 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let host = args.get_or("host", "127.0.0.1").to_string();
     let port = args.get_usize("port")?.unwrap_or(7433) as u16;
+    if let Some(list) = args.get("nodes") {
+        return cmd_serve_front(&dir, &host, port, list, args);
+    }
     let tasks: Vec<String> =
         args.get_or("tasks", "sst2").split(',').map(str::to_string).collect();
     let routes = route_names(&Manifest::load(&dir)?, args, "fp,m3")?;
@@ -564,7 +590,138 @@ fn cmd_serve(args: &zqhero::cli::Args) -> Result<()> {
     }
 }
 
+/// `repro serve --nodes a:p,b:p` — the front-end tier (DESIGN.md §5.14):
+/// net admission, depth bounding, deadlines, and the precision governor
+/// on this process; batching and engines on the named engine-node
+/// processes, reached over persistent pipelined v2 links.  The public
+/// protocol is byte-identical to single-process `serve` — clients cannot
+/// tell the tiers apart.
+fn cmd_serve_front(
+    dir: &std::path::Path,
+    host: &str,
+    port: u16,
+    list: &str,
+    args: &zqhero::cli::Args,
+) -> Result<()> {
+    use std::net::ToSocketAddrs;
+    use zqhero::coordinator::{FrontEnd, FrontEndConfig};
+    let (queue_cap, default_deadline, governor) = overload_config(args)?;
+    let mut addrs = Vec::new();
+    for s in list.split(',') {
+        let s = s.trim();
+        let a = s
+            .to_socket_addrs()
+            .with_context(|| format!("resolve engine node {s:?}"))?
+            .next()
+            .with_context(|| format!("engine node {s:?} resolved to no address"))?;
+        addrs.push(a);
+    }
+    let cfg = FrontEndConfig {
+        queue_cap,
+        default_deadline,
+        governor: governor.then(|| zqhero::coordinator::GovernorConfig::for_queue(queue_cap)),
+        ..FrontEndConfig::default()
+    };
+    println!("front end: dialing {} engine node(s)...", addrs.len());
+    let fe = std::sync::Arc::new(FrontEnd::start(dir, &addrs, cfg)?);
+    let server = zqhero::coordinator::NetServer::start(std::sync::Arc::clone(&fe), host, port)?;
+    println!(
+        "front end serving on {} — newline-delimited JSON (v1/v2), {} engine node(s){}",
+        server.addr,
+        fe.nodes(),
+        if governor { ", governor on" } else { "" }
+    );
+    println!("Ctrl-C to stop; stats every 30s");
+    let mut ticks = 0u32;
+    loop {
+        std::thread::sleep(Duration::from_secs(1));
+        ticks += 1;
+        if ticks % 30 == 0 {
+            println!(
+                "\n== {} connections, {} requests, {}/{} engine nodes live ==",
+                server.connections.load(std::sync::atomic::Ordering::SeqCst),
+                server.served.load(std::sync::atomic::Ordering::SeqCst),
+                fe.live_nodes(),
+                fe.nodes()
+            );
+            print!("{}", fe.recorder().render());
+        }
+    }
+}
+
+/// `repro engine-node` — the engine tier (DESIGN.md §5.14): the existing
+/// coordinator (engine pool, residency manager, node-local admission
+/// bound) behind a length-delimited v2 link listener.  Its peers are
+/// front ends, not clients: frames are pipelined and correlated by id,
+/// and node-local `Busy` / expiry / replica failure cross the link as
+/// the same typed wire fields the public protocol defines.
+fn cmd_engine_node(args: &zqhero::cli::Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let host = args.get_or("host", "127.0.0.1").to_string();
+    let port = args.get_usize("port")?.unwrap_or(7434) as u16;
+    let tasks: Vec<String> =
+        args.get_or("tasks", "sst2").split(',').map(str::to_string).collect();
+    let routes = route_names(&Manifest::load(&dir)?, args, "fp,m3")?;
+    let replicas = args.get_usize("replicas")?.unwrap_or(1).max(1);
+    let queue_cap = args.get_usize("queue-cap")?.unwrap_or(1024).max(1);
+    let (watchdog, restart) = supervision_config(args)?;
+    let fake = match args.get_usize("fake-engine-ms")?.unwrap_or(0) {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    let config = ServerConfig {
+        max_batch: args.get_usize("max-batch")?.unwrap_or(16),
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms")?.unwrap_or(4) as u64),
+        replicas,
+        queue_cap,
+        watchdog,
+        restart,
+        max_resident_cells: residency_budget(args)?,
+        fake_engine: fake,
+        ..ServerConfig::default()
+    };
+    if fake.is_none() {
+        ensure_route_checkpoints(&dir, &tasks, &routes, false)?;
+    }
+    let pairs: Vec<(String, String)> = tasks
+        .iter()
+        .flat_map(|t| routes.iter().map(move |m| (t.clone(), m.clone())))
+        .collect();
+    let coord = std::sync::Arc::new(Coordinator::start(dir, &pairs, config)?);
+    let node = zqhero::coordinator::EngineNode::start(std::sync::Arc::clone(&coord), &host, port)?;
+    println!(
+        "engine node serving on {} — length-delimited v2 link frames, {replicas} engine \
+         replica(s){}",
+        node.addr,
+        if fake.is_some() { ", fake engine" } else { "" }
+    );
+    println!("Ctrl-C to stop; stats every 30s");
+    let mut ticks = 0u32;
+    loop {
+        std::thread::sleep(Duration::from_secs(1));
+        ticks += 1;
+        if ticks % 30 == 0 {
+            println!("\n== engine node (manifest v{}) ==", coord.current_version());
+            print!("{}", coord.recorder.render());
+        }
+    }
+}
+
 fn cmd_serve_bench(args: &zqhero::cli::Args) -> Result<()> {
+    let multihost_nodes = args.get_usize("nodes")?.unwrap_or(0);
+    if multihost_nodes > 0 {
+        // self-contained fake-engine sweep: refuse the other modes rather
+        // than silently dropping their flags
+        anyhow::ensure!(
+            args.get_f64("overload")?.unwrap_or(0.0) == 0.0
+                && !args.get_bool("chaos")
+                && !args.get_bool("mixed-length")
+                && !args.get_bool("residency"),
+            "--nodes, --overload, --chaos, --mixed-length and --residency are separate \
+             benchmarks; run one at a time"
+        );
+        return serve_bench_multihost(multihost_nodes, args);
+    }
     let dir = artifacts_dir(args);
     let tasks: Vec<String> =
         args.get_or("tasks", "sst2").split(',').map(str::to_string).collect();
@@ -1417,6 +1574,241 @@ fn chaos_loop(
     Ok((completed, failed, t0.elapsed().as_secs_f64()))
 }
 
+
+/// Fake-engine manifest for the multihost sweep: two tasks x two modes
+/// = four (task, policy) groups, so `NodeDispatch` has concurrent groups
+/// to spread (one group pins to one node while it has requests in
+/// flight — a single group can never exercise more than one node).
+/// Checkpoints are declared but never opened under `fake_engine`.
+const MULTIHOST_MANIFEST: &str = r#"{
+  "model": {"vocab_size": 64, "hidden": 8, "layers": 1, "heads": 2, "ffn": 16,
+            "max_seq": 8, "type_vocab": 2, "num_labels": 3, "ln_eps": 0.00001},
+  "seq": 8,
+  "buckets": [1, 2, 4],
+  "modes": {
+    "fp": {
+      "switches": {"embedding": false, "qkv": false, "attn": false,
+                   "attn_output": false, "fc1": false, "fc2": false},
+      "artifacts": {},
+      "params": []
+    },
+    "m3": {
+      "switches": {"embedding": true, "qkv": true, "attn": true,
+                   "attn_output": true, "fc1": true, "fc2": true},
+      "artifacts": {},
+      "params": []
+    }
+  },
+  "calib": {"artifact": "calib.bin", "batch": 1, "params": [], "stats": []},
+  "tasks": {
+    "mh-a": {"splits": {}, "metrics": [], "classes": 3, "checkpoint": "ckpt-{mode}.bin"},
+    "mh-b": {"splits": {}, "metrics": [], "classes": 3, "checkpoint": "ckpt-{mode}.bin"}
+  }
+}"#;
+
+/// Multi-host scale-out sweep (`serve-bench --nodes N`, DESIGN.md
+/// §5.14): for each tier size 1..=N, start that many fake-engine node
+/// processes-worth of coordinators behind `EngineNode` listeners and one
+/// `FrontEnd` over real TCP links, drive an open-loop burst at 2x the
+/// measured single-node capacity *per node*, and report goodput/p99 per
+/// tier size.  Self-contained (fake engine, temp-dir manifest) so CI
+/// runs it unconditionally.  Gates: every ledger reconciles exactly on
+/// both tiers, and 2 nodes must reach >= 1.7x the 1-node goodput.
+fn serve_bench_multihost(max_nodes: usize, args: &zqhero::cli::Args) -> Result<()> {
+    use std::sync::Arc;
+    use zqhero::coordinator::{EngineNode, FrontEnd, FrontEndConfig};
+    use zqhero::json::{self, Value};
+
+    let requests = args.get_usize("requests")?.unwrap_or(256);
+    let concurrency = args.get_usize("concurrency")?.unwrap_or(32);
+
+    let dir = std::env::temp_dir().join(format!("zqhero-multihost-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("manifest.json"), MULTIHOST_MANIFEST)?;
+
+    let tasks = ["mh-a", "mh-b"];
+    let routes = ["fp", "m3"];
+    let groups: Vec<(String, String)> = tasks
+        .iter()
+        .flat_map(|t| routes.iter().map(move |r| (t.to_string(), r.to_string())))
+        .collect();
+    let pairs = groups.clone();
+    // payload lengths sweep the seq range so both seq classes appear
+    let rows: Vec<(Vec<i32>, Vec<i32>)> = (0..16)
+        .map(|i| {
+            let len = 1 + i % 8;
+            ((0..len as i32).collect(), vec![0; len])
+        })
+        .collect();
+    let fake_latency = Duration::from_millis(3);
+    let node_config = ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 256,
+        fake_engine: Some(fake_latency),
+        ..ServerConfig::default()
+    };
+    let fe_config = FrontEndConfig { queue_cap: 512, ..FrontEndConfig::default() };
+
+    let start_tier = |n: usize| -> Result<(Vec<(Arc<Coordinator>, EngineNode)>, FrontEnd)> {
+        let mut nodes = Vec::with_capacity(n);
+        let mut addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let coord = Arc::new(Coordinator::start(dir.clone(), &pairs, node_config.clone())?);
+            let node = EngineNode::start(Arc::clone(&coord), "127.0.0.1", 0)?;
+            addrs.push(node.addr);
+            nodes.push((coord, node));
+        }
+        let fe = FrontEnd::start(&dir, &addrs, fe_config.clone())?;
+        Ok((nodes, fe))
+    };
+
+    // capacity of one node measured through the two-tier path itself
+    // (closed loop, all groups concurrent) — the burst rates scale off it
+    println!("multihost sweep: measuring 1-node capacity through the front end...");
+    let per_group = (requests / groups.len()).max(16);
+    let capacity_rps = {
+        let (nodes, fe) = start_tier(1)?;
+        let t0 = Instant::now();
+        let fe_ref = &fe;
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for (t, r) in &groups {
+                let rows = &rows;
+                handles.push(s.spawn(move || {
+                    let policy = zqhero::coordinator::PolicyRef::Named(r.clone());
+                    zqhero::bench::closed_loop(
+                        fe_ref,
+                        t,
+                        &policy,
+                        rows,
+                        per_group,
+                        (concurrency / 4).max(4),
+                    )
+                    .map(|_| ())
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow::anyhow!("load thread panicked"))??;
+            }
+            Ok(())
+        })?;
+        let cap = (per_group * groups.len()) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        drop(fe);
+        drop(nodes);
+        cap
+    };
+    println!("1-node capacity ~{capacity_rps:.1} req/s through the tier");
+
+    let deadline = Duration::from_millis(250);
+    let mut cells: Vec<Value> = Vec::new();
+    let mut goodput_by_n: Vec<f64> = Vec::new();
+    for n in 1..=max_nodes {
+        let (nodes, fe) = start_tier(n)?;
+        let rate = 2.0 * capacity_rps * n as f64;
+        let arrivals = (rate * 2.0) as usize; // ~2 s of offered overload
+        let r = zqhero::bench::open_loop_burst_groups(&fe, &groups, &rows, arrivals, rate, deadline)?;
+        anyhow::ensure!(r.reconciles(), "client ledger must reconcile at {n} node(s): {r:?}");
+        anyhow::ensure!(
+            r.failed == 0,
+            "fault-free sweep saw {} typed failures at {n} node(s)",
+            r.failed
+        );
+
+        // front-tier ledger: per-policy identity, and exact agreement
+        // with the client-side ledger
+        let (mut fc, mut fsh, mut fex) = (0u64, 0u64, 0u64);
+        for s in fe.recorder().snapshot().values() {
+            anyhow::ensure!(
+                s.requests == s.completed + s.errors + s.expired + s.failed,
+                "front-tier ledger identity broken at {n} node(s)"
+            );
+            fc += s.completed;
+            fsh += s.shed;
+            fex += s.expired;
+        }
+        anyhow::ensure!(
+            (fc as usize, fsh as usize, fex as usize) == (r.completed, r.shed, r.expired),
+            "front recorder disagrees with the client ledger at {n} node(s): \
+             ({fc}, {fsh}, {fex}) vs ({}, {}, {})",
+            r.completed,
+            r.shed,
+            r.expired
+        );
+
+        // node-tier ledgers: each node's identity holds, the aggregate
+        // agrees exactly with the front tier (fault-free run: no retries,
+        // so cross-tier counts are equal, not merely >=)
+        let (mut nc, mut nex) = (0u64, 0u64);
+        for (coord, _) in &nodes {
+            for s in coord.recorder.snapshot().values() {
+                anyhow::ensure!(
+                    s.requests == s.completed + s.errors + s.expired + s.failed,
+                    "node-tier ledger identity broken at {n} node(s)"
+                );
+                nc += s.completed;
+                nex += s.expired;
+            }
+            anyhow::ensure!(coord.queue_depth() == 0, "node backlog slots leaked");
+        }
+        anyhow::ensure!(
+            (nc as usize, nex as usize) == (r.completed, r.expired),
+            "tier ledgers disagree at {n} node(s): nodes ({nc} completed, {nex} expired) vs \
+             front ({}, {})",
+            r.completed,
+            r.expired
+        );
+        anyhow::ensure!(fe.queue_depth() == 0, "front-end backlog slots leaked");
+
+        let goodput = r.goodput_rps();
+        println!(
+            "{n} node(s): admitted {} = completed {} + shed {} + expired {} + failed {}; \
+             goodput {goodput:.1} req/s, p50 {:.1}ms, p99 {:.1}ms",
+            r.admitted, r.completed, r.shed, r.expired, r.failed, r.p50_ms, r.p99_ms
+        );
+        let speedup = goodput / goodput_by_n.first().copied().unwrap_or(goodput).max(1e-9);
+        goodput_by_n.push(goodput);
+        cells.push(json::obj(vec![
+            ("nodes", json::num(n as f64)),
+            ("rate_rps", json::num(rate)),
+            ("admitted", json::num(r.admitted as f64)),
+            ("completed", json::num(r.completed as f64)),
+            ("shed", json::num(r.shed as f64)),
+            ("expired", json::num(r.expired as f64)),
+            ("failed", json::num(r.failed as f64)),
+            ("goodput_rps", json::num(goodput)),
+            ("p50_ms", json::num(r.p50_ms)),
+            ("p99_ms", json::num(r.p99_ms)),
+            ("speedup_vs_1", json::num(speedup)),
+        ]));
+        drop(fe);
+        drop(nodes);
+    }
+
+    if max_nodes >= 2 {
+        let speedup = goodput_by_n[1] / goodput_by_n[0].max(1e-9);
+        println!("\n2-node speedup: {speedup:.2}x");
+        anyhow::ensure!(
+            speedup >= 1.7,
+            "multi-host scale-out must reach >=1.7x goodput at 2 engine nodes \
+             (got {speedup:.2}x; see BENCH_multihost.json)"
+        );
+    }
+
+    let report = json::obj(vec![
+        ("bench", json::s("multihost")),
+        ("groups", json::num(groups.len() as f64)),
+        ("fake_engine_ms", json::num(fake_latency.as_millis() as f64)),
+        ("capacity_1node_rps", json::num(capacity_rps)),
+        ("deadline_ms", json::num(deadline.as_millis() as f64)),
+        ("cells", Value::Array(cells)),
+    ]);
+    match std::fs::write("BENCH_multihost.json", json::to_string_pretty(&report)) {
+        Ok(()) => println!("\nwrote BENCH_multihost.json"),
+        Err(e) => eprintln!("could not write BENCH_multihost.json: {e}"),
+    }
+    Ok(())
+}
 
 /// `repro lint` — run the herolint static analyses (DESIGN.md §5.11)
 /// over the source tree and fail on any unsuppressed finding.  The CI

@@ -92,6 +92,65 @@ fn dispatch_stale_completion_is_a_no_op() {
     });
 }
 
+/// Same incarnation protocol one tier up (DESIGN.md §5.14): the
+/// front-end's `NodeDispatch` routes (task, policy, seq-class) groups to
+/// engine *nodes*, and a node death sweeps its pending frames for
+/// re-routing while replies from the old incarnation may still arrive on
+/// a half-dead link.  One node, one pinned group; the same three racing
+/// threads as the replica model:
+///
+///   killer       mark_dead(0); revive(0)         (link supervisor reconnect)
+///   re-assigner  assign(key) -> g2               (route after re-join)
+///   staler       complete(key, 0, g0)            (stale frame from the old
+///                                                 incarnation, already swept)
+///
+/// Whenever the re-assign observed the new incarnation, the stale
+/// completion must have been neutralized by the generation guard: the
+/// revived node's inflight count and the group pin survive.  Drop the
+/// generation check in `NodeDispatch::complete` and heromck finds the
+/// schedule that double-retires the request.
+#[test]
+fn node_dispatch_stale_completion_is_a_no_op() {
+    mck::check("node-dispatch-stale-generation", cfg(), || {
+        let nd = Arc::new(zqhero::coordinator::NodeDispatch::new(1));
+        let key = (TaskId(0), PolicyId(0), 0usize);
+        let (n0, g0) = nd.assign(key);
+        assert_eq!(n0, 0);
+
+        let killer = {
+            let nd = Arc::clone(&nd);
+            thread::spawn(move || {
+                nd.mark_dead(0);
+                nd.revive(0);
+            })
+        };
+        let reassign = {
+            let nd = Arc::clone(&nd);
+            thread::spawn(move || nd.assign(key))
+        };
+        let staler = {
+            let nd = Arc::clone(&nd);
+            thread::spawn(move || nd.complete(key, 0, g0))
+        };
+
+        killer.join().unwrap();
+        let (_, g2) = reassign.join().unwrap();
+        staler.join().unwrap();
+
+        if g2 == g0 + 1 {
+            // the re-assign landed on the revived incarnation; the stale
+            // complete (generation g0) must not have touched it
+            assert_eq!(
+                nd.inflight(0),
+                1,
+                "stale completion decremented the revived node's inflight"
+            );
+            assert_eq!(nd.pinned_groups(), 1, "stale completion unpinned the new group");
+        }
+        assert!(nd.alive(0));
+    });
+}
+
 // ---------------------------------------------------------------- recorder
 
 /// Ledger identity under interleaved terminal replies: however the

@@ -1,0 +1,305 @@
+//! Multi-host tier integration (DESIGN.md §5.14) on the fake engine: a
+//! `FrontEnd` routing over real TCP links to `EngineNode` processes-worth
+//! of coordinators, with node death, typed cross-tier outcomes, and
+//! exact per-tier ledger reconciliation.
+//!
+//! The invariants under test:
+//!   * no client ever hangs: every admitted request gets exactly one
+//!     terminal reply no matter when an engine node dies;
+//!   * `admitted = completed + shed + expired + failed` holds exactly on
+//!     the client ledger, the front tier's recorder, and every surviving
+//!     node's recorder;
+//!   * node-side outcomes cross the link typed (`busy` is a shed, not an
+//!     error string the front end re-parses);
+//!   * a killed node re-joins (fresh process, fresh ephemeral port, via
+//!     `FrontEnd::relocate`) and dispatch spreads work across the
+//!     restored fleet.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use zqhero::coordinator::{
+    Coordinator, EngineNode, FrontEnd, FrontEndConfig, RequestSpec, Response, ServerConfig,
+};
+use zqhero::sync::mpsc::Receiver;
+
+/// Two tasks x two modes = four (task, policy) groups, so dispatch has
+/// concurrent groups to spread across nodes (a single group pins to one
+/// node while it has requests in flight).  Checkpoints are declared but
+/// never opened under `fake_engine`.
+const MANIFEST: &str = r#"{
+  "model": {"vocab_size": 64, "hidden": 8, "layers": 1, "heads": 2, "ffn": 16,
+            "max_seq": 8, "type_vocab": 2, "num_labels": 3, "ln_eps": 0.00001},
+  "seq": 8,
+  "buckets": [1, 2, 4],
+  "modes": {
+    "fp": {
+      "switches": {"embedding": false, "qkv": false, "attn": false,
+                   "attn_output": false, "fc1": false, "fc2": false},
+      "artifacts": {},
+      "params": []
+    },
+    "m3": {
+      "switches": {"embedding": true, "qkv": true, "attn": true,
+                   "attn_output": true, "fc1": true, "fc2": true},
+      "artifacts": {},
+      "params": []
+    }
+  },
+  "calib": {"artifact": "calib.bin", "batch": 1, "params": [], "stats": []},
+  "tasks": {
+    "mh-a": {"splits": {}, "metrics": [], "classes": 3, "checkpoint": "ckpt-{mode}.bin"},
+    "mh-b": {"splits": {}, "metrics": [], "classes": 3, "checkpoint": "ckpt-{mode}.bin"}
+  }
+}"#;
+
+fn fake_artifacts(test: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("zqhero-multihost-{}-{test}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create fake artifacts dir");
+    std::fs::write(dir.join("manifest.json"), MANIFEST).expect("write fake manifest");
+    dir
+}
+
+fn groups() -> Vec<(String, String)> {
+    ["mh-a", "mh-b"]
+        .iter()
+        .flat_map(|t| ["fp", "m3"].iter().map(move |m| (t.to_string(), m.to_string())))
+        .collect()
+}
+
+fn node_config(latency_ms: u64, queue_cap: usize) -> ServerConfig {
+    ServerConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_cap,
+        fake_engine: Some(Duration::from_millis(latency_ms)),
+        ..ServerConfig::default()
+    }
+}
+
+fn start_node(
+    dir: &std::path::Path,
+    latency_ms: u64,
+    queue_cap: usize,
+) -> (Arc<Coordinator>, EngineNode) {
+    let coord = Arc::new(
+        Coordinator::start(dir.to_path_buf(), &groups(), node_config(latency_ms, queue_cap))
+            .expect("start node coordinator"),
+    );
+    let node = EngineNode::start(Arc::clone(&coord), "127.0.0.1", 0).expect("start engine node");
+    (coord, node)
+}
+
+/// The i-th burst request: round-robin over the four groups, payload
+/// length sweeping the seq range so both seq classes appear.
+fn spec(i: usize) -> RequestSpec {
+    let g = groups();
+    let (task, policy) = &g[i % g.len()];
+    let len = 1 + i % 8;
+    RequestSpec::task(task).policy(policy).ids((0..len as i32).collect())
+}
+
+/// Drain every receiver with a generous bound: a reply that never
+/// arrives is precisely the hung-client bug the sweep discipline exists
+/// to prevent.
+fn drain(rxs: Vec<(u64, Receiver<Response>)>) -> Vec<Response> {
+    rxs.into_iter()
+        .map(|(i, rx)| {
+            rx.recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|_| panic!("client hung: request {i} never got a terminal reply"))
+        })
+        .collect()
+}
+
+struct Outcomes {
+    completed: usize,
+    shed: usize,
+    expired: usize,
+    failed: usize,
+}
+
+fn classify(resps: &[Response], num_labels: usize) -> Outcomes {
+    let mut o = Outcomes { completed: 0, shed: 0, expired: 0, failed: 0 };
+    for r in resps {
+        if r.busy {
+            assert!(r.error.is_some(), "busy reply must say so");
+            o.shed += 1;
+        } else if r.expired {
+            o.expired += 1;
+        } else if r.failed {
+            assert!(r.error.is_some(), "typed failure must carry an error");
+            o.failed += 1;
+        } else {
+            assert!(r.error.is_none(), "unexpected error class: {:?}", r.error);
+            assert_eq!(r.logits.len(), num_labels, "completed reply must carry logits");
+            o.completed += 1;
+        }
+    }
+    o
+}
+
+fn wait_until(what: &str, mut f: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Sum the (completed, shed, expired, failed, requests, errors) ledger
+/// across a recorder snapshot, asserting the per-policy identity.
+fn ledger(rec: &zqhero::coordinator::Recorder, tier: &str) -> (u64, u64, u64, u64) {
+    let (mut c, mut sh, mut ex, mut fl) = (0u64, 0u64, 0u64, 0u64);
+    for (name, s) in rec.snapshot() {
+        assert_eq!(
+            s.requests,
+            s.completed + s.errors + s.expired + s.failed,
+            "{tier} ledger identity broken for policy {name}"
+        );
+        assert_eq!(s.errors, 0, "{tier} saw untyped errors for policy {name}");
+        c += s.completed;
+        sh += s.shed;
+        ex += s.expired;
+        fl += s.failed;
+    }
+    (c, sh, ex, fl)
+}
+
+#[test]
+fn two_tier_serves_end_to_end_with_exact_ledgers() {
+    let dir = fake_artifacts("baseline");
+    let (c0, n0) = start_node(&dir, 2, 256);
+    let (c1, n1) = start_node(&dir, 2, 256);
+    let fe = FrontEnd::start(&dir, &[n0.addr, n1.addr], FrontEndConfig::default())
+        .expect("start front end");
+    assert_eq!(fe.live_nodes(), 2);
+
+    let mut rxs = Vec::new();
+    for i in 0..64u64 {
+        rxs.push((i, fe.submit(spec(i as usize)).expect("admit")));
+    }
+    let out = classify(&drain(rxs), fe.num_labels());
+    assert_eq!(out.completed, 64);
+    assert_eq!((out.shed, out.expired, out.failed), (0, 0, 0));
+
+    // front tier ledger agrees exactly with the client's
+    let (fc, fsh, fex, ffl) = ledger(fe.recorder(), "front");
+    assert_eq!((fc, fsh, fex, ffl), (64, 0, 0, 0));
+    assert_eq!(fe.queue_depth(), 0, "front-end backlog slots leaked");
+
+    // node tier: each node's ledger holds, the aggregate equals the
+    // front's exactly (fault-free run — at-least-once never retried),
+    // and with four concurrent groups both nodes did real work
+    let (n0c, ..) = ledger(&c0.recorder, "node 0");
+    let (n1c, ..) = ledger(&c1.recorder, "node 1");
+    assert_eq!(n0c + n1c, 64, "tier ledgers disagree");
+    assert!(n0c > 0 && n1c > 0, "dispatch never spread the groups: {n0c} vs {n1c}");
+    assert_eq!(c0.queue_depth() + c1.queue_depth(), 0, "node backlog slots leaked");
+}
+
+#[test]
+fn node_side_busy_crosses_the_wire_typed_as_shed() {
+    let dir = fake_artifacts("busy");
+    // tiny node queue, slow batches: most of a flood must shed node-side
+    let (c0, n0) = start_node(&dir, 40, 2);
+    let fe = FrontEnd::start(&dir, &[n0.addr], FrontEndConfig::default())
+        .expect("start front end");
+
+    let mut rxs = Vec::new();
+    for i in 0..32u64 {
+        rxs.push((i, fe.submit(spec(i as usize)).expect("front admits (cap 1024)")));
+    }
+    let resps = drain(rxs);
+    let out = classify(&resps, fe.num_labels());
+    assert_eq!(out.completed + out.shed, 32, "only completed/busy outcomes expected");
+    assert!(out.shed > 0, "node admission bound never tripped — not a backpressure test");
+    assert_eq!((out.expired, out.failed), (0, 0));
+    // the busy replies came back typed, not as re-parsed error strings
+    assert!(resps.iter().filter(|r| r.busy).all(|r| !r.failed && !r.expired));
+
+    // remote shed lands in the front tier's shed column, same class as a
+    // local admission shed — and the node's own ledger agrees
+    let (fc, fsh, _, _) = ledger(fe.recorder(), "front");
+    assert_eq!((fc as usize, fsh as usize), (out.completed, out.shed));
+    let (nc, nsh, _, _) = ledger(&c0.recorder, "node 0");
+    assert_eq!((nc as usize, nsh as usize), (out.completed, out.shed));
+    assert_eq!(fe.queue_depth(), 0, "front-end backlog slots leaked");
+}
+
+#[test]
+fn node_death_mid_burst_no_hangs_exact_ledgers_and_rejoin_restores_goodput() {
+    let dir = fake_artifacts("chaos");
+    // slow batches so the kill lands with work genuinely in flight
+    let (c0, n0) = start_node(&dir, 20, 256);
+    let (c1, n1) = start_node(&dir, 20, 256);
+    let fe = FrontEnd::start(&dir, &[n0.addr, n1.addr], FrontEndConfig::default())
+        .expect("start front end");
+
+    // open-loop paced burst; kill node 0 (listener AND coordinator —
+    // the whole process, as far as the front end can tell) mid-stream
+    let mut n0 = Some(n0);
+    let mut c0 = Some(c0);
+    let mut rxs = Vec::new();
+    for i in 0..96u64 {
+        if i == 32 {
+            drop(n0.take());
+            drop(c0.take());
+        }
+        rxs.push((i, fe.submit(spec(i as usize)).expect("admit")));
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // no client hangs: every admitted request gets a terminal reply even
+    // though a node died holding some of them
+    let out = classify(&drain(rxs), fe.num_labels());
+    assert_eq!(
+        out.completed + out.shed + out.expired + out.failed,
+        96,
+        "client ledger does not reconcile"
+    );
+    // in-flight work swept off the dead node retried on the live one:
+    // with a healthy survivor, nothing should exhaust its attempts
+    assert_eq!(out.failed, 0, "retry-on-live-node failed despite a healthy survivor");
+    assert_eq!(out.expired, 0, "no deadlines in this burst");
+
+    // both tiers' ledgers reconcile exactly; the survivor's completed
+    // count can only exceed the front's by re-executions of swept
+    // requests whose first reply died with node 0 (at-least-once)
+    let (fc, fsh, fex, ffl) = ledger(fe.recorder(), "front");
+    assert_eq!(
+        (fc as usize, fsh as usize, fex as usize, ffl as usize),
+        (out.completed, out.shed, out.expired, out.failed),
+        "front recorder disagrees with the client ledger"
+    );
+    let (n1c, ..) = ledger(&c1.recorder, "node 1 (survivor)");
+    assert!(
+        n1c as usize <= out.completed && n1c > 0,
+        "survivor executed {n1c} vs {} client completions",
+        out.completed
+    );
+    assert_eq!(fe.queue_depth(), 0, "front-end backlog slots leaked");
+    assert_eq!(c1.queue_depth(), 0, "survivor backlog slots leaked");
+    assert!(!fe.dispatch().alive(0), "dead node still admitted to dispatch");
+
+    // supervised re-join: a fresh node process on a fresh ephemeral port
+    // takes over slot 0; the link supervisor must pick it up and revive
+    // the slot
+    let (c0b, n0b) = start_node(&dir, 20, 256);
+    fe.relocate(0, n0b.addr);
+    wait_until("node 0 re-join", || fe.live_nodes() == 2);
+
+    // goodput restored: a second burst completes in full and dispatch
+    // spreads the groups across the restored fleet again
+    let mut rxs = Vec::new();
+    for i in 0..64u64 {
+        rxs.push((i, fe.submit(spec(i as usize)).expect("admit after re-join")));
+    }
+    let out2 = classify(&drain(rxs), fe.num_labels());
+    assert_eq!(out2.completed, 64, "re-joined tier did not restore goodput");
+    let (rc, ..) = ledger(&c0b.recorder, "node 0 (re-joined)");
+    assert!(rc > 0, "re-joined node never received work");
+    assert_eq!(fe.queue_depth(), 0, "front-end backlog slots leaked after re-join");
+
+    drop(fe);
+    drop((c1, n1, c0b, n0b));
+}

@@ -50,6 +50,18 @@ cargo test -q
 echo "==> chaos suite (fake engine)"
 cargo test -q --test chaos_integration
 
+# Multi-host scale-out (DESIGN.md §5.14): front-end tier + networked
+# engine nodes over the v2 wire protocol, on the fake engine — no
+# artifacts needed, so node death / typed cross-tier outcomes / exact
+# per-tier ledger reconciliation gate every checkout.  The sweep then
+# drives a 1-node vs 2-node goodput/p99 comparison through the CLI and
+# asserts the >=1.7x 2-node speedup (emits BENCH_multihost.json — a
+# trajectory artifact, committed when it changes).
+echo "==> multihost suite (fake engine)"
+cargo test -q --test multihost_integration
+echo "==> multihost serve-bench sweep (1 vs 2 engine nodes)"
+cargo run --release -- serve-bench --nodes 2 --requests 128
+
 # herolint (DESIGN.md §5.11): the repo-native static analyses —
 # lock-order cycles, under-ordered atomics in cross-thread handshakes,
 # panic paths in serving modules, and the Recorder ledger identity —
